@@ -1,0 +1,137 @@
+//! Regenerates **Figure 5**: (a,b) F+Nomad LDA vs the parameter server
+//! (memory + disk flavors) on a simulated 20-core node — LL vs virtual
+//! time; (c) nomad convergence speed as cores scale.
+//!
+//! Virtual time: calibrated cost model + network model; Gibbs math is
+//! executed for real (DESIGN.md §Hardware-Adaptation).  Expected shape:
+//! nomad reaches a given LL several times faster than the PS; PS(disk)
+//! trails PS(memory); more cores converge faster.
+//!
+//! Writes results/fig5_multicore.csv.
+//!
+//!     cargo bench --bench fig5_multicore
+
+use fnomad_lda::corpus::preset;
+use fnomad_lda::lda::log_likelihood;
+use fnomad_lda::lda::state::Hyper;
+use fnomad_lda::simnet::nomad_sim::{NomadSim, NomadSimConfig};
+use fnomad_lda::simnet::ps_sim::{PsSim, PsSimConfig};
+use fnomad_lda::simnet::{ClusterSpec, CostModel};
+use fnomad_lda::util::bench::Table;
+use fnomad_lda::util::metrics::{write_csv, Series};
+
+fn main() {
+    let topics = 256;
+    let epochs = 5;
+    let cores = 20;
+    let mut all_series = Vec::new();
+
+    // calibrate once on a slice of the target workload
+    let calib = preset("tiny").unwrap();
+    let cost = CostModel::calibrate(&calib, Hyper::paper_default(topics), 1);
+    eprintln!("calibrated token_ns = {:.0}", cost.token_ns);
+
+    for preset_name in ["pubmed-sim", "amazon-sim"] {
+        let corpus = preset(preset_name).unwrap();
+        let hyper = Hyper::paper_default(topics);
+        eprintln!(
+            "{preset_name}: {} docs / {} tokens on {cores} simulated cores",
+            corpus.num_docs(),
+            corpus.num_tokens()
+        );
+
+        // F+Nomad
+        {
+            let mut cfg = NomadSimConfig::new(ClusterSpec::multicore(cores), topics);
+            cfg.cost = cost;
+            let mut sim = NomadSim::new(&corpus, hyper, cfg);
+            let mut s = Series::new(format!("fig5:{preset_name}:nomad"));
+            s.push(0.0, log_likelihood(&sim.gather_state(&corpus)));
+            for _ in 0..epochs {
+                sim.run_epoch();
+                s.push(sim.vtime_secs(), log_likelihood(&sim.gather_state(&corpus)));
+            }
+            eprintln!("  nomad: {:.2}s vtime, LL {:.4e}", sim.vtime_secs(), s.last_y().unwrap());
+            all_series.push(s);
+        }
+        // PS memory + disk
+        for disk in [false, true] {
+            let mut cfg = PsSimConfig::new(ClusterSpec::multicore(cores), topics);
+            cfg.cost = cost;
+            cfg.disk = disk;
+            let mut sim = PsSim::new(&corpus, hyper, cfg);
+            let label = if disk { "ps-disk" } else { "ps-mem" };
+            let mut s = Series::new(format!("fig5:{preset_name}:{label}"));
+            s.push(0.0, log_likelihood(&sim.gather_state(&corpus)));
+            for _ in 0..epochs {
+                sim.run_epoch();
+                s.push(sim.vtime_secs(), log_likelihood(&sim.gather_state(&corpus)));
+            }
+            eprintln!("  {label}: {:.2}s vtime, LL {:.4e}", sim.vtime_secs(), s.last_y().unwrap());
+            all_series.push(s);
+        }
+    }
+
+    // Fig 5c: nomad scaling on amazon-sim
+    let corpus = preset("amazon-sim").unwrap();
+    let hyper = Hyper::paper_default(topics);
+    let mut scaling = Table::new(
+        "Fig 5(c) — nomad scaling with cores (amazon-sim, 1 epoch)",
+        &["cores", "vtime(s)", "speedup", "efficiency"],
+    );
+    let mut base = None;
+    let mut scaling_series = Series::new("fig5c:amazon-sim:speedup".to_string());
+    for c in [1usize, 2, 4, 8, 16, 20] {
+        let mut cfg = NomadSimConfig::new(ClusterSpec::multicore(c), topics);
+        cfg.cost = cost;
+        let mut sim = NomadSim::new(&corpus, hyper, cfg);
+        sim.run_epoch();
+        let t = sim.vtime_secs();
+        let b = *base.get_or_insert(t);
+        scaling.row(vec![
+            c.to_string(),
+            format!("{t:.2}"),
+            format!("{:.2}x", b / t),
+            format!("{:.0}%", 100.0 * b / t / c as f64),
+        ]);
+        scaling_series.push(c as f64, b / t);
+        eprintln!("  {c} cores: {t:.2}s");
+    }
+    all_series.push(scaling_series);
+
+    // time-to-LL summary (the Fig-5a/b headline: "~4x faster")
+    let mut headline = Table::new(
+        "Fig 5(a,b) — virtual time to final-PS-quality LL",
+        &["corpus", "system", "time-to-target (s)", "vs nomad"],
+    );
+    for preset_name in ["pubmed-sim", "amazon-sim"] {
+        let target = all_series
+            .iter()
+            .find(|s| s.name == format!("fig5:{preset_name}:ps-mem"))
+            .and_then(|s| s.last_y())
+            .unwrap();
+        let nomad_t = all_series
+            .iter()
+            .find(|s| s.name == format!("fig5:{preset_name}:nomad"))
+            .and_then(|s| s.time_to_reach(target));
+        for sys in ["nomad", "ps-mem", "ps-disk"] {
+            let t = all_series
+                .iter()
+                .find(|s| s.name == format!("fig5:{preset_name}:{sys}"))
+                .and_then(|s| s.time_to_reach(target));
+            headline.row(vec![
+                preset_name.into(),
+                sys.into(),
+                t.map(|x| format!("{x:.2}")).unwrap_or("n/a".into()),
+                match (t, nomad_t) {
+                    (Some(a), Some(b)) if b > 0.0 => format!("{:.1}x", a / b),
+                    _ => "n/a".into(),
+                },
+            ]);
+        }
+    }
+    headline.print();
+    scaling.print();
+    write_csv(std::path::Path::new("results/fig5_multicore.csv"), &all_series).unwrap();
+    println!("\nwrote results/fig5_multicore.csv");
+}

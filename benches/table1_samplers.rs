@@ -1,0 +1,76 @@
+//! Regenerates **Table 1**: measured init / generation / update cost of
+//! the four multinomial samplers as T grows.
+//!
+//! Paper's asymptotics (what the shape must show):
+//!   LSearch  : init Θ(T)   gen Θ(T)      update Θ(1)
+//!   BSearch  : init Θ(T)   gen Θ(log T)  update Θ(T)
+//!   Alias    : init Θ(T)   gen Θ(1)      update Θ(T)
+//!   F+tree   : init Θ(T)   gen Θ(log T)  update Θ(log T)
+//!
+//!     cargo bench --bench table1_samplers
+
+use fnomad_lda::sampler::{Alias, BSearch, DiscreteSampler, FTree, LSearch};
+use fnomad_lda::util::bench::{fmt_ns, measure_ret, BenchOpts, Table};
+use fnomad_lda::util::rng::Pcg32;
+use std::hint::black_box;
+
+fn params(t: usize, rng: &mut Pcg32) -> Vec<f64> {
+    (0..t).map(|_| rng.next_f64() + 1e-3).collect()
+}
+
+fn bench_sampler<S: DiscreteSampler>(
+    name: &str,
+    t: usize,
+    opts: BenchOpts,
+    table: &mut Table,
+) {
+    let mut rng = Pcg32::seeded(t as u64);
+    let p = params(t, &mut rng);
+
+    let init = measure_ret(&format!("{name}/init"), opts, || S::build(&p));
+
+    let s = S::build(&p);
+    let mut gen_rng = Pcg32::seeded(1);
+    let gen = measure_ret(&format!("{name}/gen"), opts, || {
+        s.sample(gen_rng.uniform(s.total()))
+    });
+
+    let mut s = S::build(&p);
+    let mut up_rng = Pcg32::seeded(2);
+    let upd = measure_ret(&format!("{name}/update"), opts, || {
+        let idx = up_rng.below(t);
+        // alternate sign to keep parameters bounded
+        let delta = if up_rng.next_f64() < 0.5 { 1e-4 } else { -1e-4 };
+        s.update(idx, delta);
+        black_box(s.total());
+    });
+
+    table.row(vec![
+        name.to_string(),
+        t.to_string(),
+        fmt_ns(init.ns_per_op),
+        fmt_ns(gen.ns_per_op),
+        fmt_ns(upd.ns_per_op),
+    ]);
+}
+
+fn main() {
+    let opts = BenchOpts::default();
+    let mut table = Table::new(
+        "Table 1 — sampler cost vs T (measured)",
+        &["sampler", "T", "init", "generate", "update"],
+    );
+    for &t in &[64usize, 256, 1024, 4096, 16384] {
+        bench_sampler::<LSearch>("LSearch", t, opts, &mut table);
+        bench_sampler::<BSearch>("BSearch", t, opts, &mut table);
+        bench_sampler::<Alias>("Alias", t, opts, &mut table);
+        bench_sampler::<FTree>("F+tree", t, opts, &mut table);
+        eprintln!("  T={t} done");
+    }
+    table.print();
+    println!(
+        "\nShape check (paper Table 1): LSearch gen grows ~linearly in T while \
+         F+tree/BSearch gen grow ~log T;\nAlias gen is ~flat; F+tree is the only \
+         sampler whose UPDATE also stays ~log T (LSearch O(1), others O(T))."
+    );
+}

@@ -1,0 +1,95 @@
+//! Distributed shoot-out under virtual time — the Fig. 5/6 workload at
+//! example scale: F+Nomad LDA vs the parameter server (memory and disk
+//! flavors) on a simulated 20-core node, plus nomad core-scaling.
+//!
+//! Virtual time comes from a cost model calibrated against the real serial
+//! sampler; the Gibbs math is executed for real, so LL curves are genuine
+//! (see DESIGN.md §Hardware-Adaptation).
+//!
+//!     cargo run --release --example distributed_sim [epochs]
+
+use fnomad_lda::corpus::preset;
+use fnomad_lda::lda::log_likelihood;
+use fnomad_lda::lda::state::Hyper;
+use fnomad_lda::simnet::nomad_sim::{NomadSim, NomadSimConfig};
+use fnomad_lda::simnet::ps_sim::{PsSim, PsSimConfig};
+use fnomad_lda::simnet::{ClusterSpec, CostModel};
+use fnomad_lda::util::bench::Table;
+
+fn main() -> Result<(), String> {
+    let epochs: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse().unwrap())
+        .unwrap_or(4);
+    let topics = 64;
+    let corpus = preset("tiny")?;
+    let hyper = Hyper::paper_default(topics);
+    let cost = CostModel::calibrate(&corpus, hyper, 1);
+    println!(
+        "corpus: {} docs / {} tokens, T={topics}, calibrated token_ns={:.0}\n",
+        corpus.num_docs(),
+        corpus.num_tokens(),
+        cost.token_ns
+    );
+
+    // --- Fig. 5a/b shape: 20 cores, nomad vs PS(M) vs PS(D) ---
+    let cluster = ClusterSpec::multicore(20);
+    let mut table = Table::new(
+        "20-core node (virtual time)",
+        &["system", "epoch", "vtime(s)", "LL"],
+    );
+    {
+        let mut cfg = NomadSimConfig::new(cluster, topics);
+        cfg.cost = cost;
+        let mut sim = NomadSim::new(&corpus, hyper, cfg);
+        for e in 1..=epochs {
+            sim.run_epoch();
+            table.row(vec![
+                "F+Nomad".into(),
+                e.to_string(),
+                format!("{:.4}", sim.vtime_secs()),
+                format!("{:.4e}", log_likelihood(&sim.gather_state(&corpus))),
+            ]);
+        }
+    }
+    for disk in [false, true] {
+        let mut cfg = PsSimConfig::new(cluster, topics);
+        cfg.cost = cost;
+        cfg.disk = disk;
+        let mut sim = PsSim::new(&corpus, hyper, cfg);
+        let label = if disk { "Yahoo!LDA(D)" } else { "Yahoo!LDA(M)" };
+        for e in 1..=epochs {
+            sim.run_epoch();
+            table.row(vec![
+                label.into(),
+                e.to_string(),
+                format!("{:.4}", sim.vtime_secs()),
+                format!("{:.4e}", log_likelihood(&sim.gather_state(&corpus))),
+            ]);
+        }
+    }
+    table.print();
+
+    // --- Fig. 5c shape: nomad scaling with cores ---
+    let mut scaling = Table::new(
+        "nomad core scaling (one epoch)",
+        &["cores", "vtime(s)", "speedup"],
+    );
+    let mut base = None;
+    for cores in [1usize, 2, 4, 8, 16, 20] {
+        let mut cfg = NomadSimConfig::new(ClusterSpec::multicore(cores), topics);
+        cfg.cost = cost;
+        let mut sim = NomadSim::new(&corpus, hyper, cfg);
+        sim.run_epoch();
+        let t = sim.vtime_secs();
+        let b = *base.get_or_insert(t);
+        scaling.row(vec![
+            cores.to_string(),
+            format!("{t:.4}"),
+            format!("{:.2}x", b / t),
+        ]);
+    }
+    scaling.print();
+    println!("\nExpected shape: F+Nomad reaches a given LL in less virtual time than\nboth PS flavors; PS(D) trails PS(M); nomad speedup grows with cores.");
+    Ok(())
+}

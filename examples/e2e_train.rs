@@ -1,0 +1,69 @@
+//! END-TO-END driver (EXPERIMENTS.md §E2E): train a full topic model on
+//! the Enron-shaped corpus at the paper's T=1024 with the complete
+//! three-layer stack —
+//!
+//!   L3  Rust F+LDA(word) Gibbs sampling (F+tree, Θ(|T_d| + log T)/token)
+//!   L2  blocked log-likelihood evaluator AOT-compiled from JAX
+//!   L1  Pallas lgamma-reduction kernel inside that artifact, executed
+//!       through PJRT from Rust at every evaluation point
+//!
+//! and log the convergence curve to results/e2e_train.csv.
+//!
+//!     cargo run --release --example e2e_train [iters] [preset] [topics]
+//!
+//! Requires `make artifacts` (falls back to the Rust evaluator with a
+//! warning if they are missing, so the example always runs).
+
+use fnomad_lda::coordinator::{train, Evaluator, TrainOpts};
+use fnomad_lda::runtime::{artifacts_available, default_artifact_dir};
+
+fn main() -> Result<(), String> {
+    let args: Vec<String> = std::env::args().collect();
+    let iters: usize = args.get(1).map(|s| s.parse().unwrap()).unwrap_or(40);
+    let preset = args.get(2).cloned().unwrap_or_else(|| "enron-sim".into());
+    let topics: usize = args.get(3).map(|s| s.parse().unwrap()).unwrap_or(1024);
+
+    if !artifacts_available(&default_artifact_dir()) {
+        eprintln!("WARNING: artifacts/ missing — run `make artifacts` for the full\nthree-layer path; continuing with the Rust evaluator.");
+    }
+
+    let opts = TrainOpts {
+        preset,
+        topics,
+        sampler: "flda-word".into(),
+        runtime: "serial".into(),
+        iters,
+        seed: 2015, // WWW'15
+        eval: "auto".into(),
+        eval_every: 1,
+        out: Some("results/e2e_train.csv".into()),
+        ..Default::default()
+    };
+    // surface which evaluator resolved (xla = full stack)
+    let eval = Evaluator::resolve(&opts.eval, opts.topics)?;
+    eprintln!("[e2e] evaluator: {}", eval.name());
+    drop(eval);
+
+    let res = train(&opts)?;
+
+    println!("\n=== e2e summary ===");
+    println!("points on the loss curve : {}", res.ll_vs_iter.points.len());
+    println!(
+        "LL: initial {:.5e} -> final {:.5e}",
+        res.ll_vs_iter.points.first().unwrap().1,
+        res.ll_vs_iter.last_y().unwrap()
+    );
+    println!("sampler throughput        : {:.0} tokens/s", res.tokens_per_sec);
+    println!("curve written to          : results/e2e_train.csv");
+
+    // hard success criteria so CI/EXPERIMENTS can trust this run
+    let first = res.ll_vs_iter.points.first().unwrap().1;
+    let last = res.ll_vs_iter.last_y().unwrap();
+    if last <= first {
+        return Err("LL did not improve over training".into());
+    }
+    res.final_state
+        .check_consistency(&fnomad_lda::corpus::preset(&opts.preset)?)?;
+    println!("e2e_train OK");
+    Ok(())
+}

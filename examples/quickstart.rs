@@ -1,0 +1,45 @@
+//! Quickstart: train F+LDA (word-by-word, the paper's fastest serial
+//! sampler) on the bundled tiny corpus and inspect the topics.
+//!
+//!     cargo run --release --example quickstart
+
+use fnomad_lda::corpus::preset;
+use fnomad_lda::lda::state::{Hyper, LdaState};
+use fnomad_lda::lda::{log_likelihood, topics, FLdaWord, Sweep};
+use fnomad_lda::util::rng::Pcg32;
+
+fn main() -> Result<(), String> {
+    // 1. a corpus: synthetic preset here; swap for corpus::bow::load(...)
+    //    to read a real UCI docword file
+    let corpus = preset("tiny")?;
+    println!(
+        "corpus: {} docs, {} vocab, {} tokens",
+        corpus.num_docs(),
+        corpus.vocab,
+        corpus.num_tokens()
+    );
+
+    // 2. hyperparameters: the paper's α = 50/T, β = 0.01
+    let hyper = Hyper::paper_default(16);
+
+    // 3. random init + the F+tree-backed word-by-word Gibbs sampler
+    let mut rng = Pcg32::seeded(42);
+    let mut state = LdaState::init_random(&corpus, hyper, &mut rng);
+    let mut sampler = FLdaWord::new(&state, &corpus);
+
+    println!("initial LL = {:.4e}", log_likelihood(&state));
+    for iter in 1..=30 {
+        sampler.sweep(&mut state, &corpus, &mut rng);
+        if iter % 10 == 0 {
+            println!("iter {iter:3}: LL = {:.4e}", log_likelihood(&state));
+        }
+    }
+
+    // 4. inspect: top words per topic (ids only — synthetic corpus)
+    print!("{}", topics::render_topics(&state, &corpus.vocab_words, 6));
+
+    // 5. invariants held throughout
+    state.check_consistency(&corpus)?;
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,64 @@
+"""AOT-lower the L2 evaluator functions to HLO **text** artifacts.
+
+Interchange format is HLO text, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly.  (See /opt/xla-example.)
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one ``<name>.hlo.txt`` per entry of ``model.all_specs()`` plus a
+``manifest.txt`` (name, nargs, shapes, outputs) the Rust loader
+cross-checks at startup.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_str(s) -> str:
+    return f"{s.dtype}[{','.join(str(d) for d in s.shape)}]"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = []
+    for name, (fn, example_args) in sorted(model.all_specs().items()):
+        if only is not None and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        arg_sig = ";".join(_spec_str(s) for s in example_args)
+        manifest.append(f"{name}\t{len(example_args)}\t{arg_sig}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.txt')} ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

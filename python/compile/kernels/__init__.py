@@ -1,0 +1,10 @@
+"""L1: Pallas kernels for the LL / sampler-oracle hot spots.
+
+``lgamma``  — blocked sum(lgamma(x + c)) reduction (the LL hot spot).
+``densep``  — dense CGS conditional probabilities (sampler oracle).
+``ref``     — pure-jnp oracles for both, plus whole-model LL references.
+"""
+
+from . import ref  # noqa: F401
+from .densep import dense_prob  # noqa: F401
+from .lgamma import lgamma_block_sum, vmem_bytes  # noqa: F401

@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: dense CGS conditional probabilities for a token batch.
+
+Computes, for each token b in a batch with document row ``ntd[b]`` and word
+row ``ntw[b]``:
+
+    p[b, t] = (ntd[b, t] + alpha) * (ntw[b, t] + beta) / (nt[t] + betabar)
+    norm[b] = sum_t p[b, t]
+
+i.e. the unnormalised multinomial of eq. (2) in the paper.  The Rust test
+suite uses the AOT artifact of this kernel as an *independent oracle* for
+the sampler implementations: every CGS variant (plain, sparse, alias,
+F+LDA doc/word) must target exactly this distribution.
+
+TPU shaping: the batch is tiled (ROW_TILE, T) with the shared (1, T) ``nt``
+row and the (1, 2) scalar pair resident across the grid; the row-normaliser
+falls out of the same pass (fused), so the kernel is a single VMEM-bound
+sweep.  interpret=True on this CPU session.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_ROW_TILE = 16
+
+
+def _dense_prob_kernel(scal_ref, nt_ref, ntd_ref, ntw_ref, p_ref, norm_ref):
+    alpha = scal_ref[0, 0]
+    beta = scal_ref[0, 1]
+    betabar = scal_ref[0, 2]
+    denom = nt_ref[0, :] + betabar
+    p = (ntd_ref[...] + alpha) * (ntw_ref[...] + beta) / denom[None, :]
+    p_ref[...] = p
+    norm_ref[...] = jnp.sum(p, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile", "interpret"))
+def dense_prob(ntd, ntw, nt, alpha, beta, betabar, *, row_tile=DEFAULT_ROW_TILE, interpret=True):
+    """Batched dense CGS conditionals -> (p (B, T) f32, norm (B,) f32)."""
+    b, t = ntd.shape
+    if ntw.shape != (b, t) or nt.shape != (t,):
+        raise ValueError(f"shape mismatch: ntd {ntd.shape} ntw {ntw.shape} nt {nt.shape}")
+    if b % row_tile != 0:
+        raise ValueError(f"batch {b} not divisible by row_tile {row_tile}")
+    scal = jnp.stack([
+        jnp.asarray(alpha, jnp.float32),
+        jnp.asarray(beta, jnp.float32),
+        jnp.asarray(betabar, jnp.float32),
+    ]).reshape(1, 3)
+    p, norm = pl.pallas_call(
+        _dense_prob_kernel,
+        grid=(b // row_tile,),
+        in_specs=[
+            pl.BlockSpec((1, 3), lambda i: (0, 0)),      # alpha/beta/betabar
+            pl.BlockSpec((1, t), lambda i: (0, 0)),      # shared topic totals
+            pl.BlockSpec((row_tile, t), lambda i: (i, 0)),
+            pl.BlockSpec((row_tile, t), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((row_tile, t), lambda i: (i, 0)),
+            pl.BlockSpec((row_tile, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t), jnp.float32),
+            jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scal, nt.reshape(1, t).astype(jnp.float32), ntd.astype(jnp.float32), ntw.astype(jnp.float32))
+    return p, norm[:, 0]

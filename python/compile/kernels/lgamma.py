@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: blocked ``sum(lgamma(x + c))`` reduction.
+
+This is the compute hot-spot of the model-quality (log-likelihood) path:
+every convergence-curve point in the paper's figures requires summing
+``lgamma`` over the full doc-topic and topic-word count matrices — millions
+of transcendental evaluations per evaluation point.
+
+TPU shaping (see DESIGN.md §Hardware-Adaptation):
+  * the (B, T) input block is tiled into (ROW_TILE, T) VMEM-resident tiles
+    via ``BlockSpec`` — T is the lane dimension and is kept a multiple of
+    128 by the callers in model.py;
+  * the scalar accumulator output uses the revisit pattern (every grid step
+    maps to the same (1, 1) output block and accumulates) instead of
+    atomics — the sequential TPU grid makes this race-free;
+  * the smoother ``c`` rides in a (1, 1) block so the same compiled kernel
+    serves both the alpha (doc) and beta (word) sides.
+
+On this CPU-only session the kernel must run with ``interpret=True`` —
+real TPU lowering emits a Mosaic custom-call the CPU PJRT plugin cannot
+execute.  The structure above is what a TPU build would compile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_ROW_TILE = 64
+
+
+def _lgamma_sum_kernel(c_ref, x_ref, o_ref):
+    """One grid step: o += sum(lgamma(x_tile + c)); o is revisited."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[0, 0] = jnp.float32(0.0)
+
+    tile = x_ref[...].astype(jnp.float32) + c_ref[0, 0]
+    o_ref[0, 0] += jnp.sum(jax.lax.lgamma(tile))
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile", "interpret"))
+def lgamma_block_sum(block, c, *, row_tile=DEFAULT_ROW_TILE, interpret=True):
+    """sum(lgamma(block + c)) over a (B, T) block -> f32 scalar.
+
+    ``B`` must be divisible by ``row_tile``; callers pad with zeros and
+    correct by ``pad_rows * T * lgamma(c)`` on the Rust side.
+    """
+    b, t = block.shape
+    if b % row_tile != 0:
+        raise ValueError(f"block rows {b} not divisible by row_tile {row_tile}")
+    c_arr = jnp.asarray(c, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        _lgamma_sum_kernel,
+        grid=(b // row_tile,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),  # smoother, broadcast
+            pl.BlockSpec((row_tile, t), lambda i: (i, 0)),  # row tile
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),  # revisited scalar
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(c_arr, block)
+    return out[0, 0]
+
+
+def vmem_bytes(row_tile, t):
+    """Estimated VMEM working set of one grid step (for DESIGN.md §Perf).
+
+    One f32 input tile + the (1,1) smoother + the (1,1) accumulator; the
+    lgamma is elementwise so no extra materialisation beyond the tile.
+    """
+    return 4 * (row_tile * t + 2)

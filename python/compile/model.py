@@ -1,0 +1,93 @@
+"""L2: the blocked model-quality evaluator, built on the L1 kernels.
+
+The paper's entire evaluation is "training log-likelihood vs time/cores".
+The LL of the collapsed model is
+
+    log p(w, z) = log p(z)   = I*(lgG(T a) - T lgG(a))
+                               + sum_d [ sum_t lgG(n_td + a) - lgG(n_d + T a) ]
+                + log p(w|z) = T*(lgG(J b) - J lgG(b))
+                               + sum_t [ sum_w lgG(n_wt + b) - lgG(n_t + J b) ]
+
+Both double sums are evaluated **blockwise** with fixed AOT shapes: the Rust
+coordinator streams (BLOCK_ROWS, T) count blocks (zero-padded) through the
+``ll_block`` artifact and accumulates in f64, applying the closed-form
+padding correction ``pad_rows * T * lgamma(c)`` itself.  The 1-D terms
+(``lgG(n_d + T a)``, ``lgG(n_t + J b)``) go through the ``ll_vec`` artifact
+the same way.
+
+Every function here is shape-monomorphic per (BLOCK_ROWS, T) pair; aot.py
+lowers one artifact per configured pair.  Python never runs at training
+time — this module exists only for `make artifacts` and pytest.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dense_prob, lgamma_block_sum
+
+# Block geometry shared with the Rust runtime (rust/src/runtime/artifacts.rs
+# mirrors these constants; the artifact *names* carry them too, so a mismatch
+# fails loudly at load time rather than silently).
+BLOCK_ROWS = 256
+VEC_LEN = 1024
+PROB_BATCH = 64
+TOPIC_SIZES = (128, 1024)
+
+
+def ll_block(block, c):
+    """sum(lgamma(block + c)) for one zero-padded (BLOCK_ROWS, T) block.
+
+    Returned as a 1-tuple (AOT lowers with return_tuple=True).
+    """
+    return (lgamma_block_sum(block, c),)
+
+
+def ll_vec(v, c):
+    """sum(lgamma(v + c)) for one zero-padded (VEC_LEN,) vector.
+
+    Small and latency-bound, so plain jnp (XLA fuses it into two ops); the
+    blocked 2-D sums are where the Pallas kernel earns its keep.
+    """
+    return (jnp.sum(jax.lax.lgamma(v.astype(jnp.float32) + c)),)
+
+
+def prob_batch(ntd, ntw, nt, scal):
+    """Dense CGS conditionals for a (PROB_BATCH, T) token batch.
+
+    scal = [alpha, beta, betabar].  Returns (p, norm).
+    """
+    p, norm = dense_prob(ntd, ntw, nt, scal[0], scal[1], scal[2])
+    return (p, norm)
+
+
+def specs(t):
+    """Example-argument specs for each exported function at topic count t."""
+    f32 = jnp.float32
+    return {
+        f"ll_block_b{BLOCK_ROWS}_t{t}": (
+            ll_block,
+            (jax.ShapeDtypeStruct((BLOCK_ROWS, t), f32), jax.ShapeDtypeStruct((), f32)),
+        ),
+        f"prob_b{PROB_BATCH}_t{t}": (
+            prob_batch,
+            (
+                jax.ShapeDtypeStruct((PROB_BATCH, t), f32),
+                jax.ShapeDtypeStruct((PROB_BATCH, t), f32),
+                jax.ShapeDtypeStruct((t,), f32),
+                jax.ShapeDtypeStruct((3,), f32),
+            ),
+        ),
+    }
+
+
+def all_specs():
+    """name -> (fn, example_args) for every artifact we ship."""
+    out = {
+        f"ll_vec_n{VEC_LEN}": (
+            ll_vec,
+            (jax.ShapeDtypeStruct((VEC_LEN,), jnp.float32), jax.ShapeDtypeStruct((), jnp.float32)),
+        )
+    }
+    for t in TOPIC_SIZES:
+        out.update(specs(t))
+    return out

@@ -1,0 +1,119 @@
+"""Kernel-vs-oracle: the CORE L1 correctness signal.
+
+Hypothesis sweeps the Pallas kernels' shapes/dtypes/values and asserts
+allclose against the pure-jnp oracles in compile.kernels.ref.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import densep, lgamma, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def counts_array(rng, shape, dtype, max_count):
+    """Random nonnegative count-like array (LDA counts are integers >= 0)."""
+    a = rng.integers(0, max_count, size=shape).astype(dtype)
+    return jnp.asarray(a)
+
+
+# ----------------------------------------------------------------------- #
+# lgamma_block_sum                                                         #
+# ----------------------------------------------------------------------- #
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows_tiles=st.integers(1, 4),
+    row_tile=st.sampled_from([8, 16, 64]),
+    t=st.sampled_from([8, 128, 256]),
+    c=st.sampled_from([0.01, 0.048828125, 0.5, 50.0 / 1024.0]),
+    seed=st.integers(0, 2**31 - 1),
+    max_count=st.sampled_from([1, 5, 1000, 10_000_000]),
+)
+def test_lgamma_block_sum_matches_ref(rows_tiles, row_tile, t, c, seed, max_count):
+    rng = np.random.default_rng(seed)
+    b = rows_tiles * row_tile
+    block = counts_array(rng, (b, t), np.float32, max_count)
+    got = lgamma.lgamma_block_sum(block, c, row_tile=row_tile)
+    want = ref.lgamma_block_sum_ref(block, c)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.int32, np.int64])
+def test_lgamma_block_sum_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    block = counts_array(rng, (64, 128), dtype, 100).astype(jnp.float32)
+    got = lgamma.lgamma_block_sum(block, 0.01)
+    want = ref.lgamma_block_sum_ref(block, 0.01)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_lgamma_block_sum_zero_block_closed_form():
+    """All-zero (padding) block == B * T * lgamma(c): the Rust-side
+    padding-correction identity."""
+    b, t, c = 128, 128, 0.01
+    block = jnp.zeros((b, t), jnp.float32)
+    got = float(lgamma.lgamma_block_sum(block, c))
+    import math
+
+    want = b * t * math.lgamma(c)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_lgamma_block_sum_rejects_ragged():
+    with pytest.raises(ValueError):
+        lgamma.lgamma_block_sum(jnp.zeros((65, 128)), 0.1, row_tile=64)
+
+
+def test_vmem_budget():
+    """Default tiling keeps a grid step's VMEM under 16 MB at T=1024."""
+    assert lgamma.vmem_bytes(lgamma.DEFAULT_ROW_TILE, 1024) < 16 * 2**20
+
+
+# ----------------------------------------------------------------------- #
+# dense_prob                                                               #
+# ----------------------------------------------------------------------- #
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(1, 3),
+    t=st.sampled_from([8, 128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_prob_matches_ref(tiles, t, seed):
+    rng = np.random.default_rng(seed)
+    b = tiles * densep.DEFAULT_ROW_TILE
+    ntd = counts_array(rng, (b, t), np.float32, 50)
+    ntw = counts_array(rng, (b, t), np.float32, 5000)
+    nt = counts_array(rng, (t,), np.float32, 500_000)
+    alpha, beta = 50.0 / t, 0.01
+    betabar = beta * 7000
+    p, norm = densep.dense_prob(ntd, ntw, nt, alpha, beta, betabar)
+    p_ref, norm_ref = ref.dense_prob_ref(ntd, ntw, nt, alpha, beta, betabar)
+    np.testing.assert_allclose(p, p_ref, rtol=1e-5)
+    np.testing.assert_allclose(norm, norm_ref, rtol=1e-5)
+
+
+def test_dense_prob_is_valid_distribution():
+    rng = np.random.default_rng(1)
+    t = 128
+    ntd = counts_array(rng, (16, t), np.float32, 10)
+    ntw = counts_array(rng, (16, t), np.float32, 100)
+    nt = counts_array(rng, (t,), np.float32, 10_000) + 1
+    p, norm = densep.dense_prob(ntd, ntw, nt, 0.1, 0.01, 0.01 * 500)
+    assert bool(jnp.all(p >= 0))
+    np.testing.assert_allclose(jnp.sum(p, axis=1), norm, rtol=1e-6)
+    assert bool(jnp.all(norm > 0))
+
+
+def test_dense_prob_shape_mismatch():
+    with pytest.raises(ValueError):
+        densep.dense_prob(
+            jnp.zeros((16, 8)), jnp.zeros((16, 8)), jnp.zeros((9,)), 0.1, 0.01, 1.0
+        )

@@ -1,0 +1,227 @@
+//! AD-LDA (Newman, Asuncion, Smyth & Welling, JMLR'09) — the bulk-
+//! synchronous baseline of §4.2.
+//!
+//! Every "machine" sweeps its document partition against a *frozen
+//! snapshot* of the word-topic counts taken at the start of the iteration,
+//! then all local deltas are reduced into the global state at a barrier.
+//! Staleness is a whole iteration (vs. Yahoo!LDA's push period and Nomad's
+//! one-s-circulation), which slows per-iteration convergence as p grows —
+//! the effect AD-LDA's authors quantify and the nomad design removes.
+//!
+//! Execution here is sequential over workers (the semantics of the
+//! algorithm are unchanged — workers only interact at the barrier); the
+//! discrete-event simulator charges the parallel wall-clock including the
+//! last-reducer penalty.
+
+use crate::corpus::{Corpus, Partition};
+use crate::lda::state::{Hyper, LdaState, SparseCounts};
+use crate::sampler::bsearch::SparseCumSum;
+use crate::sampler::ftree::FTree;
+use crate::sampler::DiscreteSampler;
+use crate::util::rng::Pcg32;
+
+/// AD-LDA configuration.
+#[derive(Clone, Debug)]
+pub struct AdLdaConfig {
+    pub workers: usize,
+    pub seed: u64,
+}
+
+impl Default for AdLdaConfig {
+    fn default() -> Self {
+        AdLdaConfig { workers: 2, seed: 0 }
+    }
+}
+
+/// Bulk-synchronous LDA trainer.
+pub struct AdLda {
+    pub state: LdaState,
+    partition: Partition,
+    rngs: Vec<Pcg32>,
+    tree: FTree,
+    r: SparseCumSum,
+    /// per-iteration max worker token count (last-reducer telemetry)
+    pub max_worker_tokens: usize,
+}
+
+impl AdLda {
+    pub fn new(corpus: &Corpus, hyper: Hyper, cfg: AdLdaConfig) -> Self {
+        let mut rng = Pcg32::new(cfg.seed, 0xAD1DA);
+        let state = LdaState::init_random(corpus, hyper, &mut rng);
+        let partition = Partition::by_tokens(corpus, cfg.workers);
+        let rngs = (0..cfg.workers).map(|l| rng.split(l as u64 + 1)).collect();
+        let max_worker_tokens =
+            partition.loads(corpus).into_iter().max().unwrap_or(0);
+        let t = hyper.t;
+        AdLda {
+            state,
+            partition,
+            rngs,
+            tree: FTree::with_capacity(&vec![0.0; t], t),
+            r: SparseCumSum::with_capacity(64),
+            max_worker_tokens,
+        }
+    }
+
+    /// One bulk-synchronous iteration: all workers sweep against the same
+    /// frozen word/topic snapshot; deltas merge at the barrier.
+    pub fn iterate(&mut self, corpus: &Corpus) {
+        let h = self.state.hyper;
+        let bb = h.betabar(self.state.vocab);
+        // freeze the word-side state
+        let nwt_snap: Vec<SparseCounts> = self.state.nwt.clone();
+        let nt_snap: Vec<u32> = self.state.nt.clone();
+
+        // global deltas accumulated across workers
+        let mut nwt_delta: Vec<Vec<(u16, i32)>> = vec![Vec::new(); self.state.vocab];
+        let mut nt_delta = vec![0i64; h.t];
+
+        for l in 0..self.partition.num_workers() {
+            let (start, end) = self.partition.ranges[l];
+            // worker-local copies of the frozen snapshot
+            let mut nwt_local = nwt_snap.clone();
+            let mut nt_local: Vec<i64> = nt_snap.iter().map(|&v| v as i64).collect();
+            let mut rng = self.rngs[l].clone();
+
+            let base: Vec<f64> = nt_local
+                .iter()
+                .map(|&n| h.alpha / (n.max(0) as f64 + bb))
+                .collect();
+            self.tree.refill(&base);
+
+            for doc in start..end {
+                let support: Vec<u16> = self.state.ntd[doc].iter().map(|(t, _)| t).collect();
+                for &t in &support {
+                    let q = (self.state.ntd[doc].get(t) as f64 + h.alpha)
+                        / (nt_local[t as usize].max(0) as f64 + bb);
+                    self.tree.set(t as usize, q);
+                }
+                for pos in 0..corpus.docs[doc].len() {
+                    let word = corpus.docs[doc][pos] as usize;
+                    let old = self.state.z[doc][pos];
+                    self.state.ntd[doc].dec(old);
+                    if nwt_local[word].get(old) > 0 {
+                        nwt_local[word].dec(old);
+                    }
+                    nt_local[old as usize] -= 1;
+                    record(&mut nwt_delta[word], old, -1);
+                    nt_delta[old as usize] -= 1;
+                    let q = (self.state.ntd[doc].get(old) as f64 + h.alpha)
+                        / (nt_local[old as usize].max(0) as f64 + bb);
+                    self.tree.set(old as usize, q);
+
+                    self.r.clear();
+                    for (t, c) in nwt_local[word].iter() {
+                        self.r.push(t as u32, c as f64 * self.tree.leaf(t as usize));
+                    }
+                    let r_total = self.r.total();
+                    let u = rng.uniform(h.beta * self.tree.total() + r_total);
+                    let new = if u < r_total {
+                        self.r.sample(u) as u16
+                    } else {
+                        self.tree.sample((u - r_total) / h.beta) as u16
+                    };
+
+                    self.state.ntd[doc].inc(new);
+                    nwt_local[word].inc(new);
+                    nt_local[new as usize] += 1;
+                    record(&mut nwt_delta[word], new, 1);
+                    nt_delta[new as usize] += 1;
+                    let q = (self.state.ntd[doc].get(new) as f64 + h.alpha)
+                        / (nt_local[new as usize].max(0) as f64 + bb);
+                    self.tree.set(new as usize, q);
+                    self.state.z[doc][pos] = new;
+                }
+                let support: Vec<u16> = self.state.ntd[doc].iter().map(|(t, _)| t).collect();
+                for &t in &support {
+                    self.tree.set(
+                        t as usize,
+                        h.alpha / (nt_local[t as usize].max(0) as f64 + bb),
+                    );
+                }
+            }
+            self.rngs[l] = rng;
+        }
+
+        // barrier: reduce deltas into the authoritative state
+        for (word, deltas) in nwt_delta.into_iter().enumerate() {
+            for (t, d) in deltas {
+                match d.cmp(&0) {
+                    std::cmp::Ordering::Greater => {
+                        for _ in 0..d {
+                            self.state.nwt[word].inc(t);
+                        }
+                    }
+                    std::cmp::Ordering::Less => {
+                        for _ in 0..(-d) {
+                            self.state.nwt[word].dec(t);
+                        }
+                    }
+                    std::cmp::Ordering::Equal => {}
+                }
+            }
+        }
+        for (acc, d) in self.state.nt.iter_mut().zip(nt_delta) {
+            *acc = (*acc as i64 + d).max(0) as u32;
+        }
+    }
+}
+
+fn record(deltas: &mut Vec<(u16, i32)>, topic: u16, d: i32) {
+    match deltas.binary_search_by_key(&topic, |&(t, _)| t) {
+        Ok(i) => {
+            deltas[i].1 += d;
+            if deltas[i].1 == 0 {
+                deltas.remove(i);
+            }
+        }
+        Err(i) => deltas.insert(i, (topic, d)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::presets::preset;
+    use crate::lda::log_likelihood;
+
+    #[test]
+    fn adlda_converges_and_stays_consistent() {
+        let corpus = preset("tiny").unwrap();
+        let mut trainer = AdLda::new(&corpus, Hyper::paper_default(8), AdLdaConfig {
+            workers: 3,
+            seed: 1,
+        });
+        let ll0 = log_likelihood(&trainer.state);
+        for _ in 0..8 {
+            trainer.iterate(&corpus);
+        }
+        trainer.state.check_consistency(&corpus).unwrap();
+        assert!(log_likelihood(&trainer.state) > ll0);
+    }
+
+    #[test]
+    fn single_worker_adlda_is_plain_flda_doc_semantics() {
+        // with p = 1 there is no staleness: behaves like serial F+LDA(doc)
+        let corpus = preset("tiny").unwrap();
+        let mut trainer = AdLda::new(&corpus, Hyper::paper_default(8), AdLdaConfig {
+            workers: 1,
+            seed: 2,
+        });
+        for _ in 0..5 {
+            trainer.iterate(&corpus);
+        }
+        trainer.state.check_consistency(&corpus).unwrap();
+    }
+
+    #[test]
+    fn last_reducer_telemetry() {
+        let corpus = preset("tiny").unwrap();
+        let trainer = AdLda::new(&corpus, Hyper::paper_default(8), AdLdaConfig {
+            workers: 4,
+            seed: 3,
+        });
+        assert!(trainer.max_worker_tokens >= corpus.num_tokens() / 4);
+        assert!(trainer.max_worker_tokens <= corpus.num_tokens());
+    }
+}

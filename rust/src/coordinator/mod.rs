@@ -1,0 +1,434 @@
+//! The training coordinator: wires corpora, samplers, runtimes and the
+//! PJRT evaluator into runnable experiments, and records the convergence
+//! series every figure is built from.
+
+use std::path::PathBuf;
+
+use crate::adlda::{AdLda, AdLdaConfig};
+use crate::corpus::{preset, Corpus};
+use crate::lda::{self, Hyper, LdaState};
+use crate::nomad::{NomadConfig, NomadRuntime};
+use crate::ps::{PsConfig, PsRuntime};
+use crate::runtime::{artifacts_available, default_artifact_dir, LlEvaluator};
+use crate::simnet::nomad_sim::{NomadSim, NomadSimConfig};
+use crate::simnet::ps_sim::{PsSim, PsSimConfig};
+use crate::simnet::{ClusterSpec, CostModel};
+use crate::util::metrics::{write_csv, Series, Stopwatch};
+use crate::util::rng::Pcg32;
+
+/// Training/experiment options (CLI surface).
+#[derive(Clone, Debug)]
+pub struct TrainOpts {
+    pub preset: String,
+    pub topics: usize,
+    /// serial sampler variant (runtime == "serial")
+    pub sampler: String,
+    /// serial | nomad | nomad-sim | ps | ps-sim | adlda
+    pub runtime: String,
+    pub workers: usize,
+    /// simulated machines (sim runtimes; workers = machines × 20 when > 1)
+    pub machines: usize,
+    pub iters: usize,
+    pub seed: u64,
+    /// auto | xla | rust
+    pub eval: String,
+    pub eval_every: usize,
+    /// PS pull/push cadence (docs)
+    pub batch_docs: usize,
+    /// PS disk flavor (sim only)
+    pub disk: bool,
+    pub out: Option<PathBuf>,
+    pub quiet: bool,
+}
+
+impl Default for TrainOpts {
+    fn default() -> Self {
+        TrainOpts {
+            preset: "tiny".into(),
+            topics: 128,
+            sampler: "flda-word".into(),
+            runtime: "serial".into(),
+            workers: 2,
+            machines: 1,
+            iters: 10,
+            seed: 0,
+            eval: "auto".into(),
+            eval_every: 1,
+            batch_docs: 16,
+            disk: false,
+            out: None,
+            quiet: false,
+        }
+    }
+}
+
+/// Model-quality evaluator: PJRT artifact path or the Rust reference.
+pub enum Evaluator {
+    Xla(Box<LlEvaluator>),
+    Rust,
+}
+
+impl Evaluator {
+    /// Resolve by policy: `auto` prefers the XLA path when artifacts exist
+    /// *and* cover the topic count.
+    pub fn resolve(policy: &str, topics: usize) -> Result<Evaluator, String> {
+        let dir = default_artifact_dir();
+        match policy {
+            "rust" => Ok(Evaluator::Rust),
+            "xla" => Ok(Evaluator::Xla(Box::new(LlEvaluator::new(&dir, topics)?))),
+            "auto" => {
+                if artifacts_available(&dir) {
+                    match LlEvaluator::new(&dir, topics) {
+                        Ok(e) => Ok(Evaluator::Xla(Box::new(e))),
+                        Err(_) => Ok(Evaluator::Rust),
+                    }
+                } else {
+                    Ok(Evaluator::Rust)
+                }
+            }
+            other => Err(format!("unknown eval policy '{other}' (auto|xla|rust)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Evaluator::Xla(_) => "xla",
+            Evaluator::Rust => "rust",
+        }
+    }
+
+    pub fn log_likelihood(&mut self, state: &LdaState) -> Result<f64, String> {
+        match self {
+            Evaluator::Xla(e) => e.log_likelihood(state),
+            Evaluator::Rust => Ok(lda::log_likelihood(state)),
+        }
+    }
+}
+
+/// Result of one training run: the two series every figure needs.
+pub struct TrainResult {
+    /// (iteration, LL)
+    pub ll_vs_iter: Series,
+    /// (seconds — wall or virtual, LL)
+    pub ll_vs_time: Series,
+    /// tokens/sec aggregate (real or virtual)
+    pub tokens_per_sec: f64,
+    pub final_state: LdaState,
+}
+
+/// Run one experiment per `opts`.
+pub fn train(opts: &TrainOpts) -> Result<TrainResult, String> {
+    let corpus = preset(&opts.preset)?;
+    let hyper = Hyper::paper_default(opts.topics);
+    let mut eval = Evaluator::resolve(&opts.eval, opts.topics)?;
+    let label = run_label(opts);
+    if !opts.quiet {
+        eprintln!(
+            "[train] {} docs={} vocab={} tokens={} T={} eval={}",
+            label,
+            corpus.num_docs(),
+            corpus.vocab,
+            corpus.num_tokens(),
+            opts.topics,
+            eval.name()
+        );
+    }
+    match opts.runtime.as_str() {
+        "serial" => train_serial(opts, &corpus, hyper, &mut eval, &label),
+        "nomad" => train_nomad(opts, &corpus, hyper, &mut eval, &label),
+        "ps" => train_ps(opts, &corpus, hyper, &mut eval, &label),
+        "adlda" => train_adlda(opts, &corpus, hyper, &mut eval, &label),
+        "nomad-sim" => train_nomad_sim(opts, &corpus, hyper, &mut eval, &label),
+        "ps-sim" => train_ps_sim(opts, &corpus, hyper, &mut eval, &label),
+        other => Err(format!(
+            "unknown runtime '{other}' (serial|nomad|ps|adlda|nomad-sim|ps-sim)"
+        )),
+    }
+}
+
+pub fn run_label(opts: &TrainOpts) -> String {
+    match opts.runtime.as_str() {
+        "serial" => format!("{}-{}", opts.sampler, opts.preset),
+        "nomad-sim" | "ps-sim" if opts.machines > 1 => format!(
+            "{}-{}x20-{}{}",
+            opts.runtime,
+            opts.machines,
+            opts.preset,
+            if opts.disk { "-disk" } else { "" }
+        ),
+        rt => format!(
+            "{rt}-p{}-{}{}",
+            opts.workers,
+            opts.preset,
+            if opts.disk { "-disk" } else { "" }
+        ),
+    }
+}
+
+fn sim_cluster(opts: &TrainOpts) -> ClusterSpec {
+    if opts.machines > 1 {
+        ClusterSpec { machines: opts.machines, ..ClusterSpec::cluster(opts.machines) }
+    } else {
+        ClusterSpec::multicore(opts.workers)
+    }
+}
+
+macro_rules! eval_point {
+    ($eval:expr, $state:expr, $iters:expr, $x_time:expr, $res:expr, $opts:expr, $label:expr) => {{
+        let ll = $eval.log_likelihood(&$state)?;
+        $res.ll_vs_iter.push($iters as f64, ll);
+        $res.ll_vs_time.push($x_time, ll);
+        if !$opts.quiet {
+            eprintln!("[{}] iter {:4}  t={:9.3}s  LL={ll:.4e}", $label, $iters, $x_time);
+        }
+    }};
+}
+
+fn new_result(label: &str) -> TrainResult {
+    TrainResult {
+        ll_vs_iter: Series::new(format!("{label}:ll_vs_iter")),
+        ll_vs_time: Series::new(format!("{label}:ll_vs_time")),
+        tokens_per_sec: 0.0,
+        final_state: LdaState {
+            hyper: Hyper::paper_default(2),
+            vocab: 0,
+            z: vec![],
+            ntd: vec![],
+            nwt: vec![],
+            nt: vec![],
+        },
+    }
+}
+
+fn train_serial(
+    opts: &TrainOpts,
+    corpus: &Corpus,
+    hyper: Hyper,
+    eval: &mut Evaluator,
+    label: &str,
+) -> Result<TrainResult, String> {
+    let mut rng = Pcg32::seeded(opts.seed);
+    let mut state = LdaState::init_random(corpus, hyper, &mut rng);
+    let mut sampler = lda::by_name(&opts.sampler, &state, corpus)?;
+    let mut res = new_result(label);
+    let watch = Stopwatch::new();
+    let mut sample_secs = 0.0;
+    eval_point!(eval, state, 0, 0.0, res, opts, label);
+    for it in 1..=opts.iters {
+        let t0 = Stopwatch::new();
+        sampler.sweep(&mut state, corpus, &mut rng);
+        sample_secs += t0.secs();
+        if it % opts.eval_every == 0 || it == opts.iters {
+            eval_point!(eval, state, it, sample_secs, res, opts, label);
+        }
+    }
+    let _ = watch;
+    res.tokens_per_sec = (opts.iters * corpus.num_tokens()) as f64 / sample_secs;
+    res.final_state = state;
+    finish(opts, res)
+}
+
+fn train_nomad(
+    opts: &TrainOpts,
+    corpus: &Corpus,
+    hyper: Hyper,
+    eval: &mut Evaluator,
+    label: &str,
+) -> Result<TrainResult, String> {
+    let mut rt = NomadRuntime::new(corpus, hyper, NomadConfig {
+        workers: opts.workers,
+        seed: opts.seed,
+    });
+    let mut res = new_result(label);
+    let mut sample_secs = 0.0;
+    let mut processed = 0u64;
+    let state0 = rt.gather_state(corpus);
+    eval_point!(eval, state0, 0, 0.0, res, opts, label);
+    for it in 1..=opts.iters {
+        let stats = rt.run_epoch();
+        sample_secs += stats.wall_secs;
+        processed += stats.processed;
+        if it % opts.eval_every == 0 || it == opts.iters {
+            let state = rt.gather_state(corpus);
+            eval_point!(eval, state, it, sample_secs, res, opts, label);
+        }
+    }
+    res.tokens_per_sec = processed as f64 / sample_secs;
+    res.final_state = rt.gather_state(corpus);
+    rt.shutdown();
+    finish(opts, res)
+}
+
+fn train_ps(
+    opts: &TrainOpts,
+    corpus: &Corpus,
+    hyper: Hyper,
+    eval: &mut Evaluator,
+    label: &str,
+) -> Result<TrainResult, String> {
+    let mut rt = PsRuntime::new(corpus, hyper, PsConfig {
+        workers: opts.workers,
+        seed: opts.seed,
+        batch_docs: opts.batch_docs,
+    });
+    let mut res = new_result(label);
+    let mut sample_secs = 0.0;
+    let mut processed = 0u64;
+    let state0 = rt.gather_state(corpus);
+    eval_point!(eval, state0, 0, 0.0, res, opts, label);
+    for it in 1..=opts.iters {
+        let stats = rt.run_epoch();
+        sample_secs += stats.wall_secs;
+        processed += stats.processed;
+        if it % opts.eval_every == 0 || it == opts.iters {
+            let state = rt.gather_state(corpus);
+            eval_point!(eval, state, it, sample_secs, res, opts, label);
+        }
+    }
+    res.tokens_per_sec = processed as f64 / sample_secs;
+    res.final_state = rt.gather_state(corpus);
+    rt.shutdown();
+    finish(opts, res)
+}
+
+fn train_adlda(
+    opts: &TrainOpts,
+    corpus: &Corpus,
+    hyper: Hyper,
+    eval: &mut Evaluator,
+    label: &str,
+) -> Result<TrainResult, String> {
+    let mut trainer = AdLda::new(corpus, hyper, AdLdaConfig {
+        workers: opts.workers,
+        seed: opts.seed,
+    });
+    let mut res = new_result(label);
+    let mut sample_secs = 0.0;
+    eval_point!(eval, trainer.state, 0, 0.0, res, opts, label);
+    for it in 1..=opts.iters {
+        let t0 = Stopwatch::new();
+        trainer.iterate(corpus);
+        sample_secs += t0.secs();
+        if it % opts.eval_every == 0 || it == opts.iters {
+            eval_point!(eval, trainer.state, it, sample_secs, res, opts, label);
+        }
+    }
+    res.tokens_per_sec = (opts.iters * corpus.num_tokens()) as f64 / sample_secs;
+    res.final_state = trainer.state;
+    finish(opts, res)
+}
+
+fn train_nomad_sim(
+    opts: &TrainOpts,
+    corpus: &Corpus,
+    hyper: Hyper,
+    eval: &mut Evaluator,
+    label: &str,
+) -> Result<TrainResult, String> {
+    let cluster = sim_cluster(opts);
+    let mut cfg = NomadSimConfig::new(cluster, opts.topics);
+    cfg.seed = opts.seed;
+    cfg.cost = CostModel::default_for(opts.topics);
+    let mut sim = NomadSim::new(corpus, hyper, cfg);
+    let mut res = new_result(label);
+    let mut processed = 0u64;
+    let state0 = sim.gather_state(corpus);
+    eval_point!(eval, state0, 0, 0.0, res, opts, label);
+    for it in 1..=opts.iters {
+        let stats = sim.run_epoch();
+        processed += stats.processed;
+        if it % opts.eval_every == 0 || it == opts.iters {
+            let state = sim.gather_state(corpus);
+            eval_point!(eval, state, it, sim.vtime_secs(), res, opts, label);
+        }
+    }
+    res.tokens_per_sec = processed as f64 / sim.vtime_secs();
+    res.final_state = sim.gather_state(corpus);
+    finish(opts, res)
+}
+
+fn train_ps_sim(
+    opts: &TrainOpts,
+    corpus: &Corpus,
+    hyper: Hyper,
+    eval: &mut Evaluator,
+    label: &str,
+) -> Result<TrainResult, String> {
+    let cluster = sim_cluster(opts);
+    let mut cfg = PsSimConfig::new(cluster, opts.topics);
+    cfg.seed = opts.seed;
+    cfg.batch_docs = opts.batch_docs;
+    cfg.disk = opts.disk;
+    cfg.cost = CostModel::default_for(opts.topics);
+    let mut sim = PsSim::new(corpus, hyper, cfg);
+    let mut res = new_result(label);
+    let mut processed = 0u64;
+    let state0 = sim.gather_state(corpus);
+    eval_point!(eval, state0, 0, 0.0, res, opts, label);
+    for it in 1..=opts.iters {
+        let stats = sim.run_epoch();
+        processed += stats.processed;
+        if it % opts.eval_every == 0 || it == opts.iters {
+            let state = sim.gather_state(corpus);
+            eval_point!(eval, state, it, sim.vtime_secs(), res, opts, label);
+        }
+    }
+    res.tokens_per_sec = processed as f64 / sim.vtime_secs();
+    res.final_state = sim.gather_state(corpus);
+    finish(opts, res)
+}
+
+fn finish(opts: &TrainOpts, res: TrainResult) -> Result<TrainResult, String> {
+    if let Some(path) = &opts.out {
+        write_csv(path, &[res.ll_vs_iter.clone(), res.ll_vs_time.clone()])
+            .map_err(|e| e.to_string())?;
+        if !opts.quiet {
+            eprintln!("[train] wrote {}", path.display());
+        }
+    }
+    Ok(res)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet(runtime: &str) -> TrainOpts {
+        TrainOpts {
+            runtime: runtime.into(),
+            iters: 2,
+            eval: "rust".into(),
+            quiet: true,
+            topics: 8,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn every_runtime_trains_tiny() {
+        for rt in ["serial", "nomad", "ps", "adlda", "nomad-sim", "ps-sim"] {
+            let res = train(&quiet(rt)).unwrap_or_else(|e| panic!("{rt}: {e}"));
+            assert_eq!(res.ll_vs_iter.points.len(), 3, "{rt}"); // iter 0,1,2
+            assert!(res.tokens_per_sec > 0.0, "{rt}");
+            let lls: Vec<f64> = res.ll_vs_iter.points.iter().map(|&(_, y)| y).collect();
+            assert!(lls.last().unwrap() > lls.first().unwrap(), "{rt}: no improvement");
+        }
+    }
+
+    #[test]
+    fn unknown_runtime_and_eval_error() {
+        assert!(train(&TrainOpts { runtime: "bogus".into(), ..quiet("serial") }).is_err());
+        assert!(train(&TrainOpts { eval: "bogus".into(), ..quiet("serial") }).is_err());
+    }
+
+    #[test]
+    fn csv_output_written() {
+        let path = std::env::temp_dir().join("fnomad_train_test").join("out.csv");
+        let mut opts = quiet("serial");
+        opts.out = Some(path.clone());
+        train(&opts).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.contains("ll_vs_iter"));
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+}

@@ -1,0 +1,201 @@
+//! UCI "Bag of Words" file format (the Enron / NyTimes / PubMed format of
+//! the paper's Table 3 — https://archive.ics.uci.edu/ml/datasets/Bag+of+Words).
+//!
+//! `docword.*.txt`:
+//! ```text
+//! D            # number of documents
+//! W            # vocabulary size
+//! NNZ          # number of (doc, word) pairs
+//! docID wordID count     # 1-indexed, NNZ lines
+//! ```
+//! plus `vocab.*.txt` with one word per line.  Real UCI dumps drop into the
+//! presets unchanged; the synthetic generators also serialize to this
+//! format so every experiment input is inspectable on disk.
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::Corpus;
+
+/// Parse a docword stream.  `vocab_words` may be empty.
+pub fn read_docword<R: Read>(r: R, vocab_words: Vec<String>, name: &str) -> Result<Corpus, String> {
+    let mut lines = BufReader::new(r).lines();
+    let mut header = |what: &str| -> Result<usize, String> {
+        lines
+            .next()
+            .ok_or(format!("missing {what} header"))?
+            .map_err(|e| e.to_string())?
+            .trim()
+            .parse::<usize>()
+            .map_err(|e| format!("bad {what} header: {e}"))
+    };
+    let d = header("D")?;
+    let w = header("W")?;
+    let nnz = header("NNZ")?;
+
+    let mut docs: Vec<Vec<u32>> = vec![Vec::new(); d];
+    let mut seen = 0usize;
+    for line in lines {
+        let line = line.map_err(|e| e.to_string())?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split_ascii_whitespace();
+        let (di, wi, ci) = (
+            it.next().ok_or("missing docID")?,
+            it.next().ok_or("missing wordID")?,
+            it.next().ok_or("missing count")?,
+        );
+        let di: usize = di.parse().map_err(|e| format!("docID: {e}"))?;
+        let wi: usize = wi.parse().map_err(|e| format!("wordID: {e}"))?;
+        let ci: usize = ci.parse().map_err(|e| format!("count: {e}"))?;
+        if di == 0 || di > d {
+            return Err(format!("docID {di} out of range 1..={d}"));
+        }
+        if wi == 0 || wi > w {
+            return Err(format!("wordID {wi} out of range 1..={w}"));
+        }
+        for _ in 0..ci {
+            docs[di - 1].push((wi - 1) as u32);
+        }
+        seen += 1;
+    }
+    if seen != nnz {
+        return Err(format!("NNZ header says {nnz}, saw {seen} entries"));
+    }
+    // UCI dumps may contain empty docs after preprocessing; drop them, as
+    // the paper does for Amazon reviews left empty by stemming.
+    docs.retain(|doc| !doc.is_empty());
+    let corpus = Corpus { docs, vocab: w, vocab_words, name: name.to_string() };
+    corpus.validate()?;
+    Ok(corpus)
+}
+
+/// Load `docword` (+ optional `vocab`) files from disk.
+pub fn load(docword: &Path, vocab: Option<&Path>, name: &str) -> Result<Corpus, String> {
+    let vocab_words = match vocab {
+        None => Vec::new(),
+        Some(p) => BufReader::new(
+            std::fs::File::open(p).map_err(|e| format!("{}: {e}", p.display()))?,
+        )
+        .lines()
+        .collect::<Result<Vec<_>, _>>()
+        .map_err(|e| e.to_string())?,
+    };
+    let f = std::fs::File::open(docword).map_err(|e| format!("{}: {e}", docword.display()))?;
+    read_docword(f, vocab_words, name)
+}
+
+/// Serialize to the docword format (dense per-doc word counts).
+pub fn write_docword<W: Write>(corpus: &Corpus, w: W) -> std::io::Result<()> {
+    let mut out = BufWriter::new(w);
+    // count (doc, word) pairs
+    let mut per_doc: Vec<Vec<(u32, u32)>> = Vec::with_capacity(corpus.num_docs());
+    let mut nnz = 0usize;
+    for d in &corpus.docs {
+        let mut counts = std::collections::BTreeMap::new();
+        for &wid in d {
+            *counts.entry(wid).or_insert(0u32) += 1;
+        }
+        nnz += counts.len();
+        per_doc.push(counts.into_iter().collect());
+    }
+    writeln!(out, "{}", corpus.num_docs())?;
+    writeln!(out, "{}", corpus.vocab)?;
+    writeln!(out, "{nnz}")?;
+    for (i, counts) in per_doc.iter().enumerate() {
+        for &(wid, c) in counts {
+            writeln!(out, "{} {} {}", i + 1, wid + 1, c)?;
+        }
+    }
+    out.flush()
+}
+
+/// Save corpus (+vocab if present) under `dir/docword.<name>.txt`.
+pub fn save(corpus: &Corpus, dir: &Path) -> std::io::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let f = std::fs::File::create(dir.join(format!("docword.{}.txt", corpus.name)))?;
+    write_docword(corpus, f)?;
+    if !corpus.vocab_words.is_empty() {
+        let mut vf = BufWriter::new(std::fs::File::create(
+            dir.join(format!("vocab.{}.txt", corpus.name)),
+        )?);
+        for w in &corpus.vocab_words {
+            writeln!(vf, "{w}")?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::tests::tiny;
+
+    #[test]
+    fn roundtrip() {
+        let c = tiny();
+        let mut buf = Vec::new();
+        write_docword(&c, &mut buf).unwrap();
+        let back = read_docword(&buf[..], vec![], "tiny").unwrap();
+        assert_eq!(back.num_docs(), c.num_docs());
+        assert_eq!(back.num_tokens(), c.num_tokens());
+        assert_eq!(back.vocab, c.vocab);
+        // token multisets per doc match (order within doc may differ)
+        for (a, b) in c.docs.iter().zip(&back.docs) {
+            let mut a = a.clone();
+            let mut b = b.clone();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn parses_reference_format() {
+        let text = "2\n3\n3\n1 1 2\n1 3 1\n2 2 5\n";
+        let c = read_docword(text.as_bytes(), vec![], "t").unwrap();
+        assert_eq!(c.num_docs(), 2);
+        assert_eq!(c.docs[0], vec![0, 0, 2]);
+        assert_eq!(c.docs[1], vec![1; 5]);
+    }
+
+    #[test]
+    fn rejects_bad_nnz() {
+        let text = "1\n2\n5\n1 1 1\n";
+        assert!(read_docword(text.as_bytes(), vec![], "t").is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_ids() {
+        let text = "1\n2\n1\n1 3 1\n";
+        assert!(read_docword(text.as_bytes(), vec![], "t").is_err());
+        let text = "1\n2\n1\n2 1 1\n";
+        assert!(read_docword(text.as_bytes(), vec![], "t").is_err());
+    }
+
+    #[test]
+    fn drops_empty_docs() {
+        let text = "3\n2\n2\n1 1 1\n3 2 1\n";
+        let c = read_docword(text.as_bytes(), vec![], "t").unwrap();
+        assert_eq!(c.num_docs(), 2);
+    }
+
+    #[test]
+    fn disk_roundtrip() {
+        let dir = std::env::temp_dir().join("fnomad_bow_test");
+        let mut c = tiny();
+        c.vocab_words = vec!["a".into(), "b".into(), "c".into(), "d".into()];
+        save(&c, &dir).unwrap();
+        let back = load(
+            &dir.join("docword.tiny.txt"),
+            Some(&dir.join("vocab.tiny.txt")),
+            "tiny",
+        )
+        .unwrap();
+        assert_eq!(back.vocab_words, c.vocab_words);
+        assert_eq!(back.num_tokens(), c.num_tokens());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

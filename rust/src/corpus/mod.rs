@@ -1,0 +1,185 @@
+//! Corpus substrate: document storage, UCI bag-of-words IO, text
+//! preprocessing (tokenizer + stop words + Porter stemmer), synthetic
+//! corpus generation, dataset presets and worker partitioning.
+//!
+//! The canonical in-memory form is token-expanded ([`Corpus`]): `docs[i]`
+//! lists the word id of every occurrence, mirroring the latent-variable
+//! array `z` one-to-one.  Word-major access for word-by-word sampling
+//! (F+LDA(word), Nomad subtasks `t_j`) goes through [`WordIndex`].
+
+pub mod bow;
+pub mod partition;
+pub mod presets;
+pub mod stats;
+pub mod synthetic;
+pub mod text;
+
+pub use partition::Partition;
+pub use presets::preset;
+pub use stats::CorpusStats;
+
+/// A token-expanded bag-of-words corpus.
+#[derive(Clone, Debug, Default)]
+pub struct Corpus {
+    /// `docs[i][j]` = vocabulary id of the j-th occurrence in document i.
+    pub docs: Vec<Vec<u32>>,
+    /// vocabulary size J (ids are `0..vocab`)
+    pub vocab: usize,
+    /// optional vocabulary strings (empty when synthetic/anonymous)
+    pub vocab_words: Vec<String>,
+    /// dataset label for logging
+    pub name: String,
+}
+
+impl Corpus {
+    /// Number of documents I.
+    pub fn num_docs(&self) -> usize {
+        self.docs.len()
+    }
+
+    /// Total token count Σ_i n_i.
+    pub fn num_tokens(&self) -> usize {
+        self.docs.iter().map(|d| d.len()).sum()
+    }
+
+    /// Validate structural invariants (every id < vocab, no empty docs).
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, d) in self.docs.iter().enumerate() {
+            if d.is_empty() {
+                return Err(format!("document {i} is empty"));
+            }
+            for &w in d {
+                if w as usize >= self.vocab {
+                    return Err(format!("doc {i}: word id {w} >= vocab {}", self.vocab));
+                }
+            }
+        }
+        if !self.vocab_words.is_empty() && self.vocab_words.len() != self.vocab {
+            return Err(format!(
+                "vocab_words len {} != vocab {}",
+                self.vocab_words.len(),
+                self.vocab
+            ));
+        }
+        Ok(())
+    }
+
+    /// Build the word-major occurrence index.
+    pub fn word_index(&self) -> WordIndex {
+        WordIndex::build(self)
+    }
+}
+
+/// Word-major view: for each vocabulary id, the (doc, position) of every
+/// occurrence.  This is the unit-subtask structure of the Nomad framework —
+/// subtask `t_j` is exactly `occurrences(j)` restricted to a worker's
+/// document partition.
+#[derive(Clone, Debug, Default)]
+pub struct WordIndex {
+    /// CSR-style: occurrence array sorted by word id
+    pub doc_of: Vec<u32>,
+    pub pos_of: Vec<u32>,
+    /// offsets[j]..offsets[j+1] is word j's slice
+    pub offsets: Vec<usize>,
+}
+
+impl WordIndex {
+    pub fn build(corpus: &Corpus) -> Self {
+        let mut counts = vec![0usize; corpus.vocab + 1];
+        for d in &corpus.docs {
+            for &w in d {
+                counts[w as usize + 1] += 1;
+            }
+        }
+        for j in 1..counts.len() {
+            counts[j] += counts[j - 1];
+        }
+        let offsets = counts.clone();
+        let total = *offsets.last().unwrap();
+        let mut doc_of = vec![0u32; total];
+        let mut pos_of = vec![0u32; total];
+        let mut cursor = offsets.clone();
+        for (i, d) in corpus.docs.iter().enumerate() {
+            for (p, &w) in d.iter().enumerate() {
+                let at = cursor[w as usize];
+                doc_of[at] = i as u32;
+                pos_of[at] = p as u32;
+                cursor[w as usize] += 1;
+            }
+        }
+        WordIndex { doc_of, pos_of, offsets }
+    }
+
+    /// All occurrences of word j as parallel (doc, pos) slices.
+    #[inline]
+    pub fn occurrences(&self, j: usize) -> (&[u32], &[u32]) {
+        let lo = self.offsets[j];
+        let hi = self.offsets[j + 1];
+        (&self.doc_of[lo..hi], &self.pos_of[lo..hi])
+    }
+
+    /// Occurrence count of word j.
+    #[inline]
+    pub fn count(&self, j: usize) -> usize {
+        self.offsets[j + 1] - self.offsets[j]
+    }
+
+    pub fn num_words(&self) -> usize {
+        self.offsets.len() - 1
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    pub(crate) fn tiny() -> Corpus {
+        Corpus {
+            docs: vec![vec![0, 1, 1, 2], vec![2, 2, 3], vec![0, 3]],
+            vocab: 4,
+            vocab_words: vec![],
+            name: "tiny".into(),
+        }
+    }
+
+    #[test]
+    fn counts() {
+        let c = tiny();
+        assert_eq!(c.num_docs(), 3);
+        assert_eq!(c.num_tokens(), 9);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_catches_out_of_range() {
+        let mut c = tiny();
+        c.vocab = 3;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_empty_doc() {
+        let mut c = tiny();
+        c.docs.push(vec![]);
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn word_index_roundtrip() {
+        let c = tiny();
+        let idx = c.word_index();
+        assert_eq!(idx.num_words(), 4);
+        let mut seen = 0;
+        for j in 0..4 {
+            let (docs, poss) = idx.occurrences(j);
+            assert_eq!(docs.len(), idx.count(j));
+            for (&d, &p) in docs.iter().zip(poss) {
+                assert_eq!(c.docs[d as usize][p as usize], j as u32);
+                seen += 1;
+            }
+        }
+        assert_eq!(seen, c.num_tokens());
+        assert_eq!(idx.count(1), 2);
+        assert_eq!(idx.count(2), 3);
+    }
+}

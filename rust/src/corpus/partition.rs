@@ -1,0 +1,159 @@
+//! Document partitioning across workers (§4.1 "Data Partition and Subtask
+//! Split"): worker `l` owns document set `D_l`; partitions are balanced by
+//! *token count* (not doc count) since per-doc work is proportional to
+//! length — poor balance is exactly the "curse of the last reducer" the
+//! asynchronous design avoids amplifying.
+
+use super::Corpus;
+
+/// A contiguous document partition for one worker.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Partition {
+    /// half-open doc-id ranges [start, end) per worker
+    pub ranges: Vec<(usize, usize)>,
+}
+
+impl Partition {
+    /// Greedy contiguous split targeting equal token mass per worker.
+    pub fn by_tokens(corpus: &Corpus, workers: usize) -> Partition {
+        assert!(workers >= 1);
+        let total: usize = corpus.num_tokens();
+        let target = total as f64 / workers as f64;
+        let mut ranges = Vec::with_capacity(workers);
+        let mut start = 0usize;
+        let mut acc = 0usize;
+        let mut consumed = 0usize;
+        for (i, d) in corpus.docs.iter().enumerate() {
+            acc += d.len();
+            // close the range when we pass the proportional boundary,
+            // keeping enough docs for the remaining workers
+            let boundary = (ranges.len() + 1) as f64 * target;
+            let docs_left = corpus.num_docs() - (i + 1);
+            let workers_left = workers - ranges.len() - 1;
+            if ranges.len() < workers - 1
+                && (consumed + acc) as f64 >= boundary
+                && docs_left >= workers_left
+            {
+                ranges.push((start, i + 1));
+                start = i + 1;
+                consumed += acc;
+                acc = 0;
+            }
+        }
+        ranges.push((start, corpus.num_docs()));
+        while ranges.len() < workers {
+            // degenerate corpora (fewer docs than workers): empty ranges
+            let end = corpus.num_docs();
+            ranges.push((end, end));
+        }
+        Partition { ranges }
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Which worker owns doc `i`.
+    pub fn owner_of(&self, doc: usize) -> usize {
+        self.ranges
+            .iter()
+            .position(|&(s, e)| doc >= s && doc < e)
+            .expect("doc not covered by partition")
+    }
+
+    /// Token mass per worker.
+    pub fn loads(&self, corpus: &Corpus) -> Vec<usize> {
+        self.ranges
+            .iter()
+            .map(|&(s, e)| corpus.docs[s..e].iter().map(|d| d.len()).sum())
+            .collect()
+    }
+
+    /// Verify coverage: ranges are disjoint, ordered, and cover all docs.
+    pub fn validate(&self, corpus: &Corpus) -> Result<(), String> {
+        let mut expect = 0usize;
+        for &(s, e) in &self.ranges {
+            if s != expect {
+                return Err(format!("gap/overlap at doc {expect}: range starts {s}"));
+            }
+            if e < s {
+                return Err(format!("inverted range ({s}, {e})"));
+            }
+            expect = e;
+        }
+        if expect != corpus.num_docs() {
+            return Err(format!("covers {expect} of {} docs", corpus.num_docs()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::{generate, SyntheticSpec};
+    use crate::util::quickcheck::check;
+
+    fn corpus(n: usize, seed: u64) -> Corpus {
+        generate(&SyntheticSpec {
+            num_docs: n,
+            vocab: 100,
+            avg_doc_len: 25.0,
+            true_topics: 4,
+            seed,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn covers_and_balances() {
+        let c = corpus(500, 1);
+        for workers in [1, 2, 3, 8, 20] {
+            let p = Partition::by_tokens(&c, workers);
+            p.validate(&c).unwrap();
+            assert_eq!(p.num_workers(), workers);
+            let loads = p.loads(&c);
+            let total: usize = loads.iter().sum();
+            assert_eq!(total, c.num_tokens());
+            let target = total as f64 / workers as f64;
+            for &l in &loads {
+                assert!(
+                    (l as f64) < 1.5 * target + 60.0,
+                    "load {l} vs target {target} ({workers} workers)"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn owner_of_is_consistent() {
+        let c = corpus(100, 2);
+        let p = Partition::by_tokens(&c, 7);
+        for doc in 0..c.num_docs() {
+            let w = p.owner_of(doc);
+            let (s, e) = p.ranges[w];
+            assert!(doc >= s && doc < e);
+        }
+    }
+
+    #[test]
+    fn more_workers_than_docs() {
+        let c = corpus(3, 3);
+        let p = Partition::by_tokens(&c, 8);
+        p.validate(&c).unwrap();
+        assert_eq!(p.num_workers(), 8);
+        let covered: usize = p.ranges.iter().map(|&(s, e)| e - s).sum();
+        assert_eq!(covered, 3);
+    }
+
+    #[test]
+    fn partition_property_random_worker_counts() {
+        check("partition covers corpus for random worker counts", 24, |rng| {
+            let n = 1 + rng.below(300);
+            let workers = 1 + rng.below(24);
+            let c = corpus(n, rng.next_u64());
+            let p = Partition::by_tokens(&c, workers);
+            p.validate(&c).map_err(|e| format!("n={n} w={workers}: {e}"))
+        });
+    }
+}

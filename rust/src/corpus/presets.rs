@@ -1,0 +1,154 @@
+//! Dataset presets: scaled synthetic stand-ins for the paper's Table 3
+//! datasets, plus loading of real UCI dumps when present on disk.
+//!
+//! Scaling rule (DESIGN.md §Hardware-Adaptation): docs/vocab/tokens are
+//! shrunk ~100–1000× from Table 3 while preserving the *ratios* that drive
+//! the algorithms — tokens-per-doc (|T_d| pressure) and docs-per-word
+//! (|T_w| pressure) — so per-step cost comparisons and convergence shapes
+//! carry over.
+
+use super::synthetic::{generate, SyntheticSpec};
+use super::Corpus;
+
+/// Table 3 reference statistics (the real datasets).
+pub const PAPER_TABLE3: &[(&str, u64, u64, u64)] = &[
+    // (name, docs I, vocab J, tokens)
+    ("Enron", 37_861, 28_102, 6_238_796),
+    ("NyTimes", 298_000, 102_660, 98_793_316),
+    ("PubMed", 8_200_000, 141_043, 737_869_083),
+    ("Amazon", 29_907_995, 1_682_527, 1_499_602_431),
+    ("UMBC", 40_599_164, 2_881_476, 1_483_145_192),
+];
+
+/// Names of the five simulated presets.
+pub const PRESET_NAMES: &[&str] =
+    &["enron-sim", "nytimes-sim", "pubmed-sim", "amazon-sim", "umbc-sim", "tiny"];
+
+/// Resolve a preset name to a generation spec.
+///
+/// avg_doc_len is Table 3 tokens/docs; docs and vocab are scaled down,
+/// larger corpora more aggressively (they exist to stress doc *count*).
+pub fn spec(name: &str) -> Option<SyntheticSpec> {
+    let s = match name {
+        // Enron: 165 tok/doc, dense vocabulary reuse
+        "enron-sim" => SyntheticSpec {
+            name: name.into(),
+            num_docs: 3_800,
+            vocab: 5_600,
+            avg_doc_len: 165.0,
+            true_topics: 50,
+            seed: 101,
+            ..Default::default()
+        },
+        // NyTimes: 331 tok/doc, many more docs than Enron (drives the
+        // F+LDA(word) > F+LDA(doc) crossover of Fig. 4)
+        "nytimes-sim" => SyntheticSpec {
+            name: name.into(),
+            num_docs: 15_000,
+            vocab: 10_000,
+            avg_doc_len: 331.0,
+            true_topics: 100,
+            seed: 102,
+            ..Default::default()
+        },
+        // PubMed: short docs (90 tok/doc), huge doc count
+        "pubmed-sim" => SyntheticSpec {
+            name: name.into(),
+            num_docs: 60_000,
+            vocab: 14_000,
+            avg_doc_len: 90.0,
+            true_topics: 100,
+            seed: 103,
+            ..Default::default()
+        },
+        // Amazon: very short reviews (50 tok/doc), widest vocabulary
+        "amazon-sim" => SyntheticSpec {
+            name: name.into(),
+            num_docs: 120_000,
+            vocab: 40_000,
+            avg_doc_len: 50.0,
+            true_topics: 150,
+            seed: 104,
+            ..Default::default()
+        },
+        // UMBC: paragraph-sized (37 tok/doc), widest vocabulary of all
+        "umbc-sim" => SyntheticSpec {
+            name: name.into(),
+            num_docs: 160_000,
+            vocab: 56_000,
+            avg_doc_len: 37.0,
+            true_topics: 150,
+            seed: 105,
+            ..Default::default()
+        },
+        // CI-scale smoke corpus
+        "tiny" => SyntheticSpec {
+            name: name.into(),
+            num_docs: 120,
+            vocab: 300,
+            avg_doc_len: 30.0,
+            true_topics: 8,
+            seed: 7,
+            ..Default::default()
+        },
+        _ => return None,
+    };
+    Some(s)
+}
+
+/// Materialize a preset corpus.  If `data/docword.<name>.txt` exists (e.g.
+/// a real UCI dump saved under the preset name), it takes precedence over
+/// generation.
+pub fn preset(name: &str) -> Result<Corpus, String> {
+    let disk = std::path::Path::new("data").join(format!("docword.{name}.txt"));
+    if disk.exists() {
+        let vocab = std::path::Path::new("data").join(format!("vocab.{name}.txt"));
+        return super::bow::load(&disk, vocab.exists().then_some(vocab.as_path()), name);
+    }
+    let spec = spec(name).ok_or_else(|| {
+        format!("unknown preset '{name}' (known: {})", PRESET_NAMES.join(", "))
+    })?;
+    Ok(generate(&spec))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_have_specs() {
+        for name in PRESET_NAMES {
+            assert!(spec(name).is_some(), "missing spec for {name}");
+        }
+        assert!(spec("nope").is_none());
+    }
+
+    #[test]
+    fn tiny_preset_generates_and_validates() {
+        let c = preset("tiny").unwrap();
+        c.validate().unwrap();
+        assert_eq!(c.num_docs(), 120);
+    }
+
+    #[test]
+    fn unknown_preset_errors_with_catalog() {
+        let err = preset("bogus").unwrap_err();
+        assert!(err.contains("enron-sim"));
+    }
+
+    #[test]
+    fn scaled_ratios_track_table3() {
+        // tokens-per-doc of each sim preset within 15% of the real dataset
+        for (real, sim) in PAPER_TABLE3.iter().zip(
+            ["enron-sim", "nytimes-sim", "pubmed-sim", "amazon-sim", "umbc-sim"].iter(),
+        ) {
+            let s = spec(sim).unwrap();
+            let real_tpd = real.3 as f64 / real.1 as f64;
+            assert!(
+                (s.avg_doc_len - real_tpd).abs() / real_tpd < 0.15,
+                "{sim}: avg_doc_len {} vs paper {real_tpd}",
+                s.avg_doc_len
+            );
+        }
+    }
+}

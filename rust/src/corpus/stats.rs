@@ -1,0 +1,100 @@
+//! Corpus statistics — regenerates Table 3 for our presets (and for real
+//! UCI dumps dropped into `data/`).
+
+use super::Corpus;
+
+/// The Table 3 row for one corpus.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CorpusStats {
+    pub name: String,
+    pub num_docs: usize,
+    pub vocab: usize,
+    /// vocabulary entries that actually occur
+    pub vocab_used: usize,
+    pub num_tokens: usize,
+    pub avg_doc_len: f64,
+    pub max_doc_len: usize,
+    /// average distinct words per document (drives |T_d|)
+    pub avg_distinct_per_doc: f64,
+    /// average occurrences per used word (drives |T_w|)
+    pub avg_occ_per_word: f64,
+}
+
+impl CorpusStats {
+    pub fn compute(c: &Corpus) -> Self {
+        let mut word_seen = vec![false; c.vocab];
+        let mut distinct_total = 0usize;
+        let mut max_doc_len = 0usize;
+        let mut scratch: Vec<u32> = Vec::new();
+        for d in &c.docs {
+            max_doc_len = max_doc_len.max(d.len());
+            scratch.clear();
+            scratch.extend_from_slice(d);
+            scratch.sort_unstable();
+            scratch.dedup();
+            distinct_total += scratch.len();
+            for &w in &scratch {
+                word_seen[w as usize] = true;
+            }
+        }
+        let vocab_used = word_seen.iter().filter(|&&b| b).count();
+        let num_tokens = c.num_tokens();
+        let num_docs = c.num_docs();
+        CorpusStats {
+            name: c.name.clone(),
+            num_docs,
+            vocab: c.vocab,
+            vocab_used,
+            num_tokens,
+            avg_doc_len: num_tokens as f64 / num_docs.max(1) as f64,
+            max_doc_len,
+            avg_distinct_per_doc: distinct_total as f64 / num_docs.max(1) as f64,
+            avg_occ_per_word: num_tokens as f64 / vocab_used.max(1) as f64,
+        }
+    }
+
+    /// Render one aligned row (header via [`header`]).
+    pub fn row(&self) -> Vec<String> {
+        vec![
+            self.name.clone(),
+            self.num_docs.to_string(),
+            self.vocab.to_string(),
+            self.num_tokens.to_string(),
+            format!("{:.1}", self.avg_doc_len),
+            format!("{:.1}", self.avg_distinct_per_doc),
+            format!("{:.1}", self.avg_occ_per_word),
+        ]
+    }
+
+    pub fn header() -> Vec<&'static str> {
+        vec!["dataset", "docs(I)", "vocab(J)", "tokens", "tok/doc", "|T_d|~", "occ/word"]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::tests::tiny;
+
+    #[test]
+    fn stats_of_tiny() {
+        let s = CorpusStats::compute(&tiny());
+        assert_eq!(s.num_docs, 3);
+        assert_eq!(s.num_tokens, 9);
+        assert_eq!(s.vocab, 4);
+        assert_eq!(s.vocab_used, 4);
+        assert_eq!(s.max_doc_len, 4);
+        assert!((s.avg_doc_len - 3.0).abs() < 1e-12);
+        // distinct: doc0 {0,1,2}=3, doc1 {2,3}=2, doc2 {0,3}=2 → 7/3
+        assert!((s.avg_distinct_per_doc - 7.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unused_vocab_counted() {
+        let mut c = tiny();
+        c.vocab = 10;
+        let s = CorpusStats::compute(&c);
+        assert_eq!(s.vocab, 10);
+        assert_eq!(s.vocab_used, 4);
+    }
+}

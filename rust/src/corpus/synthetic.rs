@@ -1,0 +1,188 @@
+//! Synthetic corpus generation from the LDA generative process (§2 of the
+//! paper), used as scaled stand-ins for the paper's five datasets (see
+//! DESIGN.md §Hardware-Adaptation — the real billion-token crawls are a
+//! data gate we substitute).
+//!
+//! Word frequencies follow a Zipfian base measure so topic-word draws show
+//! realistic head/tail behavior, and document lengths are Poisson with a
+//! preset mean, matching the docs/vocab/token *ratios* of Table 3.
+
+use crate::util::rng::{Pcg32, Zipf};
+
+use super::Corpus;
+
+/// Generative-process parameters.
+#[derive(Clone, Debug)]
+pub struct SyntheticSpec {
+    pub name: String,
+    pub num_docs: usize,
+    pub vocab: usize,
+    /// mean document length (Poisson)
+    pub avg_doc_len: f64,
+    /// number of *true* generating topics (independent of the T used for
+    /// inference)
+    pub true_topics: usize,
+    /// Dirichlet document-topic concentration
+    pub alpha: f64,
+    /// Dirichlet topic-word concentration (per-coordinate, scaled by the
+    /// Zipf base measure)
+    pub beta: f64,
+    /// Zipf exponent for the vocabulary base measure
+    pub zipf_s: f64,
+    pub seed: u64,
+}
+
+impl Default for SyntheticSpec {
+    fn default() -> Self {
+        SyntheticSpec {
+            name: "synthetic".into(),
+            num_docs: 1000,
+            vocab: 2000,
+            avg_doc_len: 100.0,
+            true_topics: 20,
+            alpha: 0.1,
+            beta: 0.01,
+            zipf_s: 1.07,
+            seed: 0,
+        }
+    }
+}
+
+/// Draw a corpus from the LDA generative process.
+///
+/// Topics are sampled as sparse multinomials via a cumulative-search table
+/// per topic; documents mix `true_topics` topics with Dirichlet(alpha)
+/// weights.  Empty documents are re-drawn (the paper discards them; at
+/// Poisson means ≥ 20 re-draws are vanishingly rare).
+pub fn generate(spec: &SyntheticSpec) -> Corpus {
+    let mut rng = Pcg32::new(spec.seed, 0xC0FFEE);
+    let k = spec.true_topics;
+    let j = spec.vocab;
+
+    // Zipfian base measure over words (shuffled so id != rank)
+    let zipf = Zipf::new(j, spec.zipf_s);
+    let mut rank_of: Vec<usize> = (0..j).collect();
+    rng.shuffle(&mut rank_of);
+
+    // phi_k ~ Dirichlet(beta * base): approximate the sparse Dirichlet by
+    // gamma draws on the Zipf-weighted base measure, stored as cumsum for
+    // O(log J) inverse-CDF sampling.
+    let mut topic_cdfs: Vec<Vec<f64>> = Vec::with_capacity(k);
+    for _ in 0..k {
+        let mut cdf = Vec::with_capacity(j);
+        let mut acc = 0.0;
+        for w in 0..j {
+            // base measure proportional to Zipf pmf of the word's rank
+            let base = 1.0 / ((rank_of[w] + 1) as f64).powf(spec.zipf_s);
+            let g = rng.gamma(spec.beta + 50.0 * base);
+            acc += g;
+            cdf.push(acc);
+        }
+        topic_cdfs.push(cdf);
+    }
+    let _ = &zipf; // Zipf table used for rank weighting above
+
+    let mut theta = vec![0.0f64; k];
+    let alpha_vec = vec![spec.alpha; k];
+    let mut docs = Vec::with_capacity(spec.num_docs);
+    while docs.len() < spec.num_docs {
+        rng.dirichlet(&alpha_vec, &mut theta);
+        let len = rng.poisson(spec.avg_doc_len) as usize;
+        if len == 0 {
+            continue;
+        }
+        let mut doc = Vec::with_capacity(len);
+        // cumsum of theta for topic draws
+        let mut theta_cdf = theta.clone();
+        for i in 1..k {
+            theta_cdf[i] += theta_cdf[i - 1];
+        }
+        let theta_total = theta_cdf[k - 1];
+        for _ in 0..len {
+            let u = rng.uniform(theta_total);
+            let z = theta_cdf.partition_point(|&c| c <= u).min(k - 1);
+            let cdf = &topic_cdfs[z];
+            let total = *cdf.last().unwrap();
+            let uw = rng.uniform(total);
+            let w = cdf.partition_point(|&c| c <= uw).min(j - 1);
+            doc.push(w as u32);
+        }
+        docs.push(doc);
+    }
+
+    Corpus { docs, vocab: j, vocab_words: Vec::new(), name: spec.name.clone() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> SyntheticSpec {
+        SyntheticSpec {
+            name: "test".into(),
+            num_docs: 200,
+            vocab: 500,
+            avg_doc_len: 50.0,
+            true_topics: 8,
+            seed: 42,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn respects_spec_shape() {
+        let c = generate(&small_spec());
+        assert_eq!(c.num_docs(), 200);
+        assert_eq!(c.vocab, 500);
+        c.validate().unwrap();
+        let avg = c.num_tokens() as f64 / c.num_docs() as f64;
+        assert!((40.0..60.0).contains(&avg), "avg len {avg}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = generate(&small_spec());
+        let b = generate(&small_spec());
+        assert_eq!(a.docs, b.docs);
+        let mut spec = small_spec();
+        spec.seed = 43;
+        let c = generate(&spec);
+        assert_ne!(a.docs, c.docs);
+    }
+
+    #[test]
+    fn word_frequencies_are_skewed() {
+        // Zipf base measure => head words much more frequent than tail
+        let c = generate(&small_spec());
+        let mut freq = vec![0usize; c.vocab];
+        for d in &c.docs {
+            for &w in d {
+                freq[w as usize] += 1;
+            }
+        }
+        freq.sort_unstable_by(|a, b| b.cmp(a));
+        let head: usize = freq[..10].iter().sum();
+        let total: usize = freq.iter().sum();
+        assert!(
+            head as f64 > 0.05 * total as f64,
+            "top-10 words carry {head}/{total}"
+        );
+    }
+
+    #[test]
+    fn documents_have_topical_structure() {
+        // with low alpha, a doc's tokens should concentrate on few topics'
+        // vocabularies => mean per-doc distinct-word ratio noticeably below
+        // an iid-over-vocab draw
+        let c = generate(&small_spec());
+        let mut distinct_ratio = 0.0;
+        for d in &c.docs {
+            let mut s: Vec<u32> = d.clone();
+            s.sort_unstable();
+            s.dedup();
+            distinct_ratio += s.len() as f64 / d.len() as f64;
+        }
+        distinct_ratio /= c.num_docs() as f64;
+        assert!(distinct_ratio < 0.97, "distinct ratio {distinct_ratio}");
+    }
+}

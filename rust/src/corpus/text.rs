@@ -1,0 +1,477 @@
+//! Text preprocessing pipeline: tokenizer, stop-word filter, and the
+//! Porter stemmer [Porter 1980] — the same preprocessing the paper applies
+//! to the Amazon and UMBC corpora ("split the text into words, removed
+//! stop words, and using Porter stemming", §5), plus the rare-term
+//! thresholds ("discarded words that appear fewer than 5 times or in 5
+//! reviews").
+
+use std::collections::HashMap;
+
+use super::Corpus;
+
+/// Lowercasing alphabetic tokenizer: maximal runs of ASCII letters.
+pub fn tokenize(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    for ch in text.chars() {
+        if ch.is_ascii_alphabetic() {
+            cur.push(ch.to_ascii_lowercase());
+        } else if !cur.is_empty() {
+            out.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// SMART-style English stop list (the high-frequency core).
+pub const STOP_WORDS: &[&str] = &[
+    "a", "about", "above", "after", "again", "against", "all", "am", "an", "and", "any", "are",
+    "as", "at", "be", "because", "been", "before", "being", "below", "between", "both", "but",
+    "by", "can", "cannot", "could", "did", "do", "does", "doing", "down", "during", "each",
+    "few", "for", "from", "further", "had", "has", "have", "having", "he", "her", "here",
+    "hers", "herself", "him", "himself", "his", "how", "i", "if", "in", "into", "is", "it",
+    "its", "itself", "just", "me", "more", "most", "my", "myself", "no", "nor", "not", "now",
+    "of", "off", "on", "once", "only", "or", "other", "our", "ours", "ourselves", "out",
+    "over", "own", "same", "she", "should", "so", "some", "such", "than", "that", "the",
+    "their", "theirs", "them", "themselves", "then", "there", "these", "they", "this",
+    "those", "through", "to", "too", "under", "until", "up", "very", "was", "we", "were",
+    "what", "when", "where", "which", "while", "who", "whom", "why", "will", "with", "would",
+    "you", "your", "yours", "yourself", "yourselves",
+];
+
+pub fn is_stop_word(w: &str) -> bool {
+    STOP_WORDS.binary_search(&w).is_ok()
+}
+
+// ---------------------------------------------------------------------- //
+// Porter stemmer (Porter 1980, "An algorithm for suffix stripping")       //
+// ---------------------------------------------------------------------- //
+
+/// Stem a lowercase ASCII word with the classic Porter algorithm.
+pub fn porter_stem(word: &str) -> String {
+    let mut b: Vec<u8> = word.bytes().collect();
+    if b.len() <= 2 {
+        return word.to_string();
+    }
+    step1a(&mut b);
+    step1b(&mut b);
+    step1c(&mut b);
+    step2(&mut b);
+    step3(&mut b);
+    step4(&mut b);
+    step5a(&mut b);
+    step5b(&mut b);
+    String::from_utf8(b).unwrap()
+}
+
+/// Is b[i] a consonant under Porter's definition?
+fn is_cons(b: &[u8], i: usize) -> bool {
+    match b[i] {
+        b'a' | b'e' | b'i' | b'o' | b'u' => false,
+        b'y' => i == 0 || !is_cons(b, i - 1),
+        _ => true,
+    }
+}
+
+/// Porter's measure m of b[..len]: number of VC sequences.
+fn measure(b: &[u8], len: usize) -> usize {
+    let mut m = 0;
+    let mut i = 0;
+    // skip initial consonants
+    while i < len && is_cons(b, i) {
+        i += 1;
+    }
+    loop {
+        // skip vowels
+        let mut saw_v = false;
+        while i < len && !is_cons(b, i) {
+            i += 1;
+            saw_v = true;
+        }
+        if !saw_v || i >= len {
+            return m;
+        }
+        // skip consonants -> one VC
+        while i < len && is_cons(b, i) {
+            i += 1;
+        }
+        m += 1;
+    }
+}
+
+fn has_vowel(b: &[u8], len: usize) -> bool {
+    (0..len).any(|i| !is_cons(b, i))
+}
+
+/// stem ends with double consonant
+fn double_cons(b: &[u8]) -> bool {
+    let n = b.len();
+    n >= 2 && b[n - 1] == b[n - 2] && is_cons(b, n - 1)
+}
+
+/// consonant-vowel-consonant ending, final consonant not w, x, y
+fn cvc(b: &[u8], len: usize) -> bool {
+    if len < 3 {
+        return false;
+    }
+    let (i, j, k) = (len - 3, len - 2, len - 1);
+    is_cons(b, i)
+        && !is_cons(b, j)
+        && is_cons(b, k)
+        && !matches!(b[k], b'w' | b'x' | b'y')
+}
+
+fn ends_with(b: &[u8], suf: &str) -> bool {
+    b.len() >= suf.len() && &b[b.len() - suf.len()..] == suf.as_bytes()
+}
+
+/// If word ends with `suf` and measure(stem) > m_min, replace with `rep`.
+fn replace_if_m(b: &mut Vec<u8>, suf: &str, rep: &str, m_min: usize) -> bool {
+    if ends_with(b, suf) {
+        let stem_len = b.len() - suf.len();
+        if measure(b, stem_len) > m_min {
+            b.truncate(stem_len);
+            b.extend_from_slice(rep.as_bytes());
+            return true;
+        }
+    }
+    false
+}
+
+fn step1a(b: &mut Vec<u8>) {
+    if ends_with(b, "sses") || ends_with(b, "ies") {
+        b.truncate(b.len() - 2);
+    } else if ends_with(b, "ss") {
+        // keep
+    } else if ends_with(b, "s") {
+        b.truncate(b.len() - 1);
+    }
+}
+
+fn step1b(b: &mut Vec<u8>) {
+    let mut cleanup = false;
+    if ends_with(b, "eed") {
+        if measure(b, b.len() - 3) > 0 {
+            b.truncate(b.len() - 1);
+        }
+    } else if ends_with(b, "ed") && has_vowel(b, b.len() - 2) {
+        b.truncate(b.len() - 2);
+        cleanup = true;
+    } else if ends_with(b, "ing") && has_vowel(b, b.len() - 3) {
+        b.truncate(b.len() - 3);
+        cleanup = true;
+    }
+    if cleanup {
+        if ends_with(b, "at") || ends_with(b, "bl") || ends_with(b, "iz") {
+            b.push(b'e');
+        } else if double_cons(b) && !matches!(b[b.len() - 1], b'l' | b's' | b'z') {
+            b.truncate(b.len() - 1);
+        } else if measure(b, b.len()) == 1 && cvc(b, b.len()) {
+            b.push(b'e');
+        }
+    }
+}
+
+fn step1c(b: &mut Vec<u8>) {
+    if ends_with(b, "y") && has_vowel(b, b.len() - 1) {
+        let n = b.len();
+        b[n - 1] = b'i';
+    }
+}
+
+fn step2(b: &mut Vec<u8>) {
+    const RULES: &[(&str, &str)] = &[
+        ("ational", "ate"),
+        ("tional", "tion"),
+        ("enci", "ence"),
+        ("anci", "ance"),
+        ("izer", "ize"),
+        ("abli", "able"),
+        ("alli", "al"),
+        ("entli", "ent"),
+        ("eli", "e"),
+        ("ousli", "ous"),
+        ("ization", "ize"),
+        ("ation", "ate"),
+        ("ator", "ate"),
+        ("alism", "al"),
+        ("iveness", "ive"),
+        ("fulness", "ful"),
+        ("ousness", "ous"),
+        ("aliti", "al"),
+        ("iviti", "ive"),
+        ("biliti", "ble"),
+    ];
+    for (suf, rep) in RULES {
+        if ends_with(b, suf) {
+            replace_if_m(b, suf, rep, 0);
+            return;
+        }
+    }
+}
+
+fn step3(b: &mut Vec<u8>) {
+    const RULES: &[(&str, &str)] = &[
+        ("icate", "ic"),
+        ("ative", ""),
+        ("alize", "al"),
+        ("iciti", "ic"),
+        ("ical", "ic"),
+        ("ful", ""),
+        ("ness", ""),
+    ];
+    for (suf, rep) in RULES {
+        if ends_with(b, suf) {
+            replace_if_m(b, suf, rep, 0);
+            return;
+        }
+    }
+}
+
+fn step4(b: &mut Vec<u8>) {
+    const SUFFIXES: &[&str] = &[
+        "al", "ance", "ence", "er", "ic", "able", "ible", "ant", "ement", "ment", "ent",
+        "ou", "ism", "ate", "iti", "ous", "ive", "ize",
+    ];
+    // special-case "ion": requires stem ending s or t
+    if ends_with(b, "ion") {
+        let stem_len = b.len() - 3;
+        if stem_len > 0 && matches!(b[stem_len - 1], b's' | b't') && measure(b, stem_len) > 1 {
+            b.truncate(stem_len);
+        }
+        return;
+    }
+    for suf in SUFFIXES {
+        if ends_with(b, suf) {
+            replace_if_m(b, suf, "", 1);
+            return;
+        }
+    }
+}
+
+fn step5a(b: &mut Vec<u8>) {
+    if ends_with(b, "e") {
+        let stem_len = b.len() - 1;
+        let m = measure(b, stem_len);
+        if m > 1 || (m == 1 && !cvc(b, stem_len)) {
+            b.truncate(stem_len);
+        }
+    }
+}
+
+fn step5b(b: &mut Vec<u8>) {
+    if measure(b, b.len()) > 1 && double_cons(b) && b[b.len() - 1] == b'l' {
+        b.truncate(b.len() - 1);
+    }
+}
+
+// ---------------------------------------------------------------------- //
+// Whole-pipeline corpus builder                                           //
+// ---------------------------------------------------------------------- //
+
+/// Pipeline configuration mirroring the paper's Amazon preprocessing.
+#[derive(Clone, Debug)]
+pub struct PipelineOpts {
+    pub stem: bool,
+    pub remove_stop_words: bool,
+    /// drop words occurring fewer than this many times in total
+    pub min_count: usize,
+    /// drop words occurring in fewer than this many documents
+    pub min_docs: usize,
+}
+
+impl Default for PipelineOpts {
+    fn default() -> Self {
+        PipelineOpts { stem: true, remove_stop_words: true, min_count: 5, min_docs: 5 }
+    }
+}
+
+/// Build a [`Corpus`] from raw document texts.  Documents left empty after
+/// preprocessing are discarded (as the paper does).
+pub fn build_corpus(texts: &[String], opts: &PipelineOpts, name: &str) -> Corpus {
+    // pass 1: tokenize + normalize, count frequencies
+    let mut processed: Vec<Vec<String>> = Vec::with_capacity(texts.len());
+    let mut total_count: HashMap<String, usize> = HashMap::new();
+    let mut doc_count: HashMap<String, usize> = HashMap::new();
+    for text in texts {
+        let mut toks = Vec::new();
+        for tok in tokenize(text) {
+            if opts.remove_stop_words && is_stop_word(&tok) {
+                continue;
+            }
+            let tok = if opts.stem { porter_stem(&tok) } else { tok };
+            if tok.len() < 2 {
+                continue;
+            }
+            toks.push(tok);
+        }
+        let mut uniq: Vec<&String> = toks.iter().collect();
+        uniq.sort_unstable();
+        uniq.dedup();
+        for w in uniq {
+            *doc_count.entry(w.clone()).or_insert(0) += 1;
+        }
+        for w in &toks {
+            *total_count.entry(w.clone()).or_insert(0) += 1;
+        }
+        processed.push(toks);
+    }
+    // pass 2: build vocab over surviving words
+    let mut vocab_words: Vec<String> = total_count
+        .iter()
+        .filter(|(w, &c)| c >= opts.min_count && doc_count[*w] >= opts.min_docs)
+        .map(|(w, _)| w.clone())
+        .collect();
+    vocab_words.sort_unstable();
+    let index: HashMap<&String, u32> =
+        vocab_words.iter().enumerate().map(|(i, w)| (w, i as u32)).collect();
+    let mut docs = Vec::new();
+    for toks in &processed {
+        let ids: Vec<u32> = toks.iter().filter_map(|w| index.get(w).copied()).collect();
+        if !ids.is_empty() {
+            docs.push(ids);
+        }
+    }
+    Corpus { docs, vocab: vocab_words.len(), vocab_words, name: name.to_string() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokenizer_splits_and_lowercases() {
+        assert_eq!(tokenize("Hello, WORLD!  42 foo-bar"), vec!["hello", "world", "foo", "bar"]);
+        assert!(tokenize("123 !!").is_empty());
+    }
+
+    #[test]
+    fn stop_words_sorted_for_binary_search() {
+        let mut sorted = STOP_WORDS.to_vec();
+        sorted.sort_unstable();
+        assert_eq!(sorted, STOP_WORDS, "STOP_WORDS must stay sorted");
+        assert!(is_stop_word("the"));
+        assert!(!is_stop_word("topic"));
+    }
+
+    #[test]
+    fn porter_reference_pairs() {
+        // Canonical examples from Porter's paper + the standard test vocab.
+        for (w, want) in [
+            ("caresses", "caress"),
+            ("ponies", "poni"),
+            ("ties", "ti"),
+            ("caress", "caress"),
+            ("cats", "cat"),
+            ("feed", "feed"),
+            ("agreed", "agre"),
+            ("plastered", "plaster"),
+            ("bled", "bled"),
+            ("motoring", "motor"),
+            ("sing", "sing"),
+            ("conflated", "conflat"),
+            ("troubled", "troubl"),
+            ("sized", "size"),
+            ("hopping", "hop"),
+            ("tanned", "tan"),
+            ("falling", "fall"),
+            ("hissing", "hiss"),
+            ("fizzed", "fizz"),
+            ("failing", "fail"),
+            ("filing", "file"),
+            ("happy", "happi"),
+            ("sky", "sky"),
+            ("relational", "relat"),
+            ("conditional", "condit"),
+            ("rational", "ration"),
+            ("valenci", "valenc"),
+            ("digitizer", "digit"),
+            ("conformabli", "conform"),
+            ("radicalli", "radic"),
+            ("differentli", "differ"),
+            ("vileli", "vile"),
+            ("analogousli", "analog"),
+            ("vietnamization", "vietnam"),
+            ("predication", "predic"),
+            ("operator", "oper"),
+            ("feudalism", "feudal"),
+            ("decisiveness", "decis"),
+            ("hopefulness", "hope"),
+            ("callousness", "callous"),
+            ("formaliti", "formal"),
+            ("sensitiviti", "sensit"),
+            ("sensibiliti", "sensibl"),
+            ("triplicate", "triplic"),
+            ("formative", "form"),
+            ("formalize", "formal"),
+            ("electriciti", "electr"),
+            ("electrical", "electr"),
+            ("hopeful", "hope"),
+            ("goodness", "good"),
+            ("revival", "reviv"),
+            ("allowance", "allow"),
+            ("inference", "infer"),
+            ("airliner", "airlin"),
+            ("gyroscopic", "gyroscop"),
+            ("adjustable", "adjust"),
+            ("defensible", "defens"),
+            ("irritant", "irrit"),
+            ("replacement", "replac"),
+            ("adjustment", "adjust"),
+            ("dependent", "depend"),
+            ("adoption", "adopt"),
+            ("homologou", "homolog"),
+            ("communism", "commun"),
+            ("activate", "activ"),
+            ("angulariti", "angular"),
+            ("homologous", "homolog"),
+            ("effective", "effect"),
+            ("bowdlerize", "bowdler"),
+            ("probate", "probat"),
+            ("rate", "rate"),
+            ("cease", "ceas"),
+            ("controll", "control"),
+            ("roll", "roll"),
+        ] {
+            assert_eq!(porter_stem(w), want, "stem({w})");
+        }
+    }
+
+    #[test]
+    fn stemming_is_idempotent_on_stems() {
+        for w in ["topic", "model", "comput", "scalabl"] {
+            assert_eq!(porter_stem(&porter_stem(w)), porter_stem(w));
+        }
+    }
+
+    #[test]
+    fn pipeline_end_to_end() {
+        let texts = vec![
+            "The quick brown foxes are running and jumping over the lazy dogs".to_string(),
+            "Foxes run. Dogs jump. Foxes and dogs are animals.".to_string(),
+            "Running dogs chase jumping foxes in the park".to_string(),
+            "dogs dogs dogs foxes foxes running".to_string(),
+            "a fox and a dog run in the park".to_string(),
+        ];
+        let opts = PipelineOpts { min_count: 2, min_docs: 2, ..Default::default() };
+        let c = build_corpus(&texts, &opts, "pipe");
+        c.validate().unwrap();
+        assert!(c.vocab > 0);
+        // 'fox'/'dog' stems survive the frequency thresholds
+        assert!(c.vocab_words.iter().any(|w| w == "fox"));
+        assert!(c.vocab_words.iter().any(|w| w == "dog"));
+        // stop words are gone
+        assert!(!c.vocab_words.iter().any(|w| w == "the"));
+    }
+
+    #[test]
+    fn pipeline_drops_empty_docs() {
+        let texts = vec!["rare".to_string(), "common common common common common".to_string()];
+        let opts = PipelineOpts { min_count: 3, min_docs: 1, ..Default::default() };
+        let c = build_corpus(&texts, &opts, "drop");
+        assert_eq!(c.num_docs(), 1);
+    }
+}

@@ -1,0 +1,205 @@
+//! Checkpointing: save/restore a full Gibbs state to disk.
+//!
+//! Production trainers checkpoint; the format here is a versioned,
+//! self-describing binary layout (little-endian, no external crates):
+//!
+//! ```text
+//! magic "FNLDA001" | T u32 | vocab u32 | D u32 | alpha f64 | beta f64
+//! per doc: len u32, then len × u16 topic ids          (z; counts derived)
+//! ```
+//!
+//! Counts are *rederived* on load and cross-checked, so a corrupt file
+//! cannot produce an inconsistent state.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::corpus::Corpus;
+use crate::util::rng::Pcg32;
+
+use super::state::{Hyper, LdaState, SparseCounts};
+
+const MAGIC: &[u8; 8] = b"FNLDA001";
+
+/// Serialize the state (assignments + hyperparameters).
+pub fn save(state: &LdaState, path: &Path) -> Result<(), String> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+    }
+    let f = std::fs::File::create(path).map_err(|e| e.to_string())?;
+    let mut w = BufWriter::new(f);
+    let io = |e: std::io::Error| e.to_string();
+    w.write_all(MAGIC).map_err(io)?;
+    w.write_all(&(state.hyper.t as u32).to_le_bytes()).map_err(io)?;
+    w.write_all(&(state.vocab as u32).to_le_bytes()).map_err(io)?;
+    w.write_all(&(state.z.len() as u32).to_le_bytes()).map_err(io)?;
+    w.write_all(&state.hyper.alpha.to_le_bytes()).map_err(io)?;
+    w.write_all(&state.hyper.beta.to_le_bytes()).map_err(io)?;
+    for zs in &state.z {
+        w.write_all(&(zs.len() as u32).to_le_bytes()).map_err(io)?;
+        for &z in zs {
+            w.write_all(&z.to_le_bytes()).map_err(io)?;
+        }
+    }
+    w.flush().map_err(io)
+}
+
+/// Load a checkpoint and rebuild the counts against `corpus`.
+pub fn load(path: &Path, corpus: &Corpus) -> Result<LdaState, String> {
+    let f = std::fs::File::open(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let io = |e: std::io::Error| e.to_string();
+
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic).map_err(io)?;
+    if &magic != MAGIC {
+        return Err("bad magic: not an FNLDA001 checkpoint".into());
+    }
+    let mut b4 = [0u8; 4];
+    let mut b8 = [0u8; 8];
+    let mut read_u32 = |r: &mut BufReader<std::fs::File>| -> Result<u32, String> {
+        r.read_exact(&mut b4).map_err(io)?;
+        Ok(u32::from_le_bytes(b4))
+    };
+    let t = read_u32(&mut r)? as usize;
+    let vocab = read_u32(&mut r)? as usize;
+    let d = read_u32(&mut r)? as usize;
+    r.read_exact(&mut b8).map_err(io)?;
+    let alpha = f64::from_le_bytes(b8);
+    r.read_exact(&mut b8).map_err(io)?;
+    let beta = f64::from_le_bytes(b8);
+
+    if vocab != corpus.vocab {
+        return Err(format!("checkpoint vocab {vocab} != corpus vocab {}", corpus.vocab));
+    }
+    if d != corpus.num_docs() {
+        return Err(format!("checkpoint has {d} docs, corpus {}", corpus.num_docs()));
+    }
+
+    let hyper = Hyper { t, alpha, beta };
+    let mut z: Vec<Vec<u16>> = Vec::with_capacity(d);
+    let mut ntd = Vec::with_capacity(d);
+    let mut nwt = vec![SparseCounts::default(); vocab];
+    let mut nt = vec![0u32; t];
+    let mut b2 = [0u8; 2];
+    for doc in 0..d {
+        let len = {
+            let mut b4 = [0u8; 4];
+            r.read_exact(&mut b4).map_err(io)?;
+            u32::from_le_bytes(b4) as usize
+        };
+        if len != corpus.docs[doc].len() {
+            return Err(format!(
+                "doc {doc}: checkpoint has {len} tokens, corpus {}",
+                corpus.docs[doc].len()
+            ));
+        }
+        let mut zs = Vec::with_capacity(len);
+        let mut counts = SparseCounts::default();
+        for pos in 0..len {
+            r.read_exact(&mut b2).map_err(io)?;
+            let topic = u16::from_le_bytes(b2);
+            if topic as usize >= t {
+                return Err(format!("doc {doc} pos {pos}: topic {topic} >= T {t}"));
+            }
+            zs.push(topic);
+            counts.inc(topic);
+            nwt[corpus.docs[doc][pos] as usize].inc(topic);
+            nt[topic as usize] += 1;
+        }
+        z.push(zs);
+        ntd.push(counts);
+    }
+    let state = LdaState { hyper, vocab, z, ntd, nwt, nt };
+    state.check_consistency(corpus)?;
+    Ok(state)
+}
+
+/// Round-trip helper used by the CLI: save, reload, verify, return bytes.
+pub fn verify_roundtrip(state: &LdaState, corpus: &Corpus, path: &Path) -> Result<u64, String> {
+    save(state, path)?;
+    let back = load(path, corpus)?;
+    if back.z != state.z {
+        return Err("roundtrip mismatch in assignments".into());
+    }
+    Ok(std::fs::metadata(path).map_err(|e| e.to_string())?.len())
+}
+
+/// Deterministic fresh state helper mirroring init_random (exposed here so
+/// the CLI resume path shares one entry point).
+pub fn init_or_load(
+    path: Option<&Path>,
+    corpus: &Corpus,
+    hyper: Hyper,
+    seed: u64,
+) -> Result<LdaState, String> {
+    match path {
+        Some(p) if p.exists() => load(p, corpus),
+        _ => {
+            let mut rng = Pcg32::seeded(seed);
+            Ok(LdaState::init_random(corpus, hyper, &mut rng))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::presets::preset;
+    use crate::lda::{FLdaWord, Sweep};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join("fnomad_ckpt_tests").join(name)
+    }
+
+    #[test]
+    fn roundtrip_preserves_state() {
+        let corpus = preset("tiny").unwrap();
+        let mut rng = Pcg32::seeded(8);
+        let mut state = LdaState::init_random(&corpus, Hyper::paper_default(16), &mut rng);
+        let mut s = FLdaWord::new(&state, &corpus);
+        for _ in 0..3 {
+            s.sweep(&mut state, &corpus, &mut rng);
+        }
+        let path = tmp("rt.ckpt");
+        let bytes = verify_roundtrip(&state, &corpus, &path).unwrap();
+        assert!(bytes > 8);
+        let back = load(&path, &corpus).unwrap();
+        assert_eq!(back.z, state.z);
+        assert_eq!(back.nt, state.nt);
+        assert!((back.hyper.alpha - state.hyper.alpha).abs() < 1e-15);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn rejects_wrong_corpus() {
+        let corpus = preset("tiny").unwrap();
+        let mut rng = Pcg32::seeded(9);
+        let state = LdaState::init_random(&corpus, Hyper::paper_default(8), &mut rng);
+        let path = tmp("wrong.ckpt");
+        save(&state, &path).unwrap();
+        let mut other = corpus.clone();
+        other.docs.pop();
+        assert!(load(&path, &other).is_err());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = tmp("garbage.ckpt");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        let corpus = preset("tiny").unwrap();
+        let err = load(&path, &corpus).unwrap_err();
+        assert!(err.contains("magic"));
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn init_or_load_falls_back() {
+        let corpus = preset("tiny").unwrap();
+        let state =
+            init_or_load(None, &corpus, Hyper::paper_default(8), 1).unwrap();
+        state.check_consistency(&corpus).unwrap();
+    }
+}

@@ -1,0 +1,166 @@
+//! Rust-side model-quality evaluation: the collapsed joint log-likelihood
+//! log p(w, z) (Griffiths & Steyvers; the quantity of Yahoo! LDA's eq. (2)
+//! that every figure in the paper plots).
+//!
+//! This is the *reference* evaluator, exploiting count sparsity
+//! (`Σ_t lgamma(n+c)` = support terms + closed form for the zeros).  The
+//! production path streams dense blocks through the AOT-compiled JAX/Pallas
+//! artifact instead (`runtime::LlEvaluator`); integration tests assert the
+//! two agree to float32 tolerance.
+
+use crate::util::math::lgamma;
+
+use super::state::LdaState;
+
+/// Breakdown of the joint LL (useful for debugging convergence).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LlParts {
+    /// log p(z)
+    pub doc_side: f64,
+    /// log p(w|z)
+    pub word_side: f64,
+}
+
+impl LlParts {
+    pub fn total(&self) -> f64 {
+        self.doc_side + self.word_side
+    }
+}
+
+/// Compute both sides from sparse counts.
+///
+/// doc side  = I·lgΓ(Tα) + Σ_d [ Σ_{t∈T_d} (lgΓ(n_td+α) − lgΓ(α)) ]
+///             − Σ_d lgΓ(n_d + Tα)
+/// word side = T·lgΓ(Jβ) + Σ_w [ Σ_{t∈T_w} (lgΓ(n_wt+β) − lgΓ(β)) ]
+///             − Σ_t lgΓ(n_t + Jβ)
+///
+/// (the −T·lgΓ(α)·I and −J·lgΓ(β)·T constants fold into the support sums
+/// via the zero-count closed form).
+pub fn log_likelihood_parts(state: &LdaState) -> LlParts {
+    let t = state.num_topics() as f64;
+    let j = state.vocab as f64;
+    let alpha = state.hyper.alpha;
+    let beta = state.hyper.beta;
+    let lga = lgamma(alpha);
+    let lgb = lgamma(beta);
+
+    let mut doc_side = state.ntd.len() as f64 * lgamma(t * alpha);
+    for counts in &state.ntd {
+        let mut nd = 0u64;
+        for (_, c) in counts.iter() {
+            doc_side += lgamma(c as f64 + alpha) - lga;
+            nd += c as u64;
+        }
+        doc_side -= lgamma(nd as f64 + t * alpha);
+    }
+
+    let mut word_side = t * lgamma(j * beta);
+    for counts in &state.nwt {
+        for (_, c) in counts.iter() {
+            word_side += lgamma(c as f64 + beta) - lgb;
+        }
+    }
+    for &nt in &state.nt {
+        word_side -= lgamma(nt as f64 + j * beta);
+    }
+
+    LlParts { doc_side, word_side }
+}
+
+/// The scalar every convergence curve plots.
+pub fn log_likelihood(state: &LdaState) -> f64 {
+    log_likelihood_parts(state).total()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::presets::preset;
+    use crate::lda::state::Hyper;
+    use crate::util::rng::Pcg32;
+
+    /// Dense-formula oracle (direct transcription of the Griffiths &
+    /// Steyvers expression, no sparsity tricks).
+    fn dense_ll(state: &LdaState) -> f64 {
+        let t = state.num_topics();
+        let j = state.vocab;
+        let (alpha, beta) = (state.hyper.alpha, state.hyper.beta);
+        let mut ll = state.ntd.len() as f64
+            * (lgamma(t as f64 * alpha) - t as f64 * lgamma(alpha));
+        for counts in &state.ntd {
+            let mut nd = 0u64;
+            for k in 0..t {
+                let c = counts.get(k as u16);
+                ll += lgamma(c as f64 + alpha);
+                nd += c as u64;
+            }
+            ll -= lgamma(nd as f64 + t as f64 * alpha);
+        }
+        ll += t as f64 * (lgamma(j as f64 * beta) - j as f64 * lgamma(beta));
+        for k in 0..t {
+            for w in 0..j {
+                ll += lgamma(state.nwt[w].get(k as u16) as f64 + beta);
+            }
+            ll -= lgamma(state.nt[k] as f64 + j as f64 * beta);
+        }
+        // subtract the lgamma(beta) for every (w, t) cell added above that
+        // the sparse version folds in: dense adds J*T lgamma(beta) worth of
+        // zero cells; sparse formula is identical — both keep them, so no
+        // correction needed here (the constant term already removed J of
+        // them per topic).
+        ll
+    }
+
+    #[test]
+    fn sparse_ll_matches_dense_oracle() {
+        let corpus = preset("tiny").unwrap();
+        let mut rng = Pcg32::seeded(21);
+        let state = LdaState::init_random(&corpus, Hyper::paper_default(8), &mut rng);
+        let sparse = log_likelihood(&state);
+        let dense = dense_ll(&state);
+        assert!(
+            (sparse - dense).abs() < 1e-6 * dense.abs(),
+            "sparse {sparse} vs dense {dense}"
+        );
+    }
+
+    #[test]
+    fn ll_is_negative_and_finite() {
+        let corpus = preset("tiny").unwrap();
+        let mut rng = Pcg32::seeded(22);
+        let state = LdaState::init_random(&corpus, Hyper::paper_default(16), &mut rng);
+        let parts = log_likelihood_parts(&state);
+        assert!(parts.doc_side.is_finite());
+        assert!(parts.word_side.is_finite());
+        assert!(parts.total() < 0.0);
+    }
+
+    #[test]
+    fn concentrated_assignment_scores_higher() {
+        // all tokens of a doc on one topic beats uniform-random assignment
+        let corpus = preset("tiny").unwrap();
+        let hyper = Hyper::paper_default(8);
+        let mut rng = Pcg32::seeded(23);
+        let random = LdaState::init_random(&corpus, hyper, &mut rng);
+
+        let mut concentrated = random.clone();
+        // rebuild with doc-major single-topic assignment
+        let mut nwt = vec![super::super::SparseCounts::default(); corpus.vocab];
+        let mut nt = vec![0u32; hyper.t];
+        for (i, doc) in corpus.docs.iter().enumerate() {
+            let topic = (i % hyper.t) as u16;
+            let mut counts = super::super::SparseCounts::default();
+            for (pos, &w) in doc.iter().enumerate() {
+                concentrated.z[i][pos] = topic;
+                counts.inc(topic);
+                nwt[w as usize].inc(topic);
+                nt[topic as usize] += 1;
+            }
+            concentrated.ntd[i] = counts;
+        }
+        concentrated.nwt = nwt;
+        concentrated.nt = nt;
+        concentrated.check_consistency(&corpus).unwrap();
+        assert!(log_likelihood(&concentrated) > log_likelihood(&random));
+    }
+}

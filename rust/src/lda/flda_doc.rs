@@ -1,0 +1,152 @@
+//! F+LDA, document-by-document order (paper §3.2, decomposition (4)):
+//!
+//! ```text
+//! p_t = β·q_t + r_t,   q_t = (n_td + α)/(n_t + β̄),   r_t = n_tw · q_t
+//! ```
+//!
+//! `q` is dense but changes in O(1) coordinates per step → F+tree
+//! (Θ(log T) sample + update).  `r` is |T_w|-sparse and fully changes on
+//! every word switch → rebuilt per token as a sparse cumsum (Θ(|T_w|)
+//! init, Θ(log |T_w|) sample).  Total: Θ(|T_w| + log T) per token, exact.
+
+use crate::corpus::Corpus;
+use crate::sampler::bsearch::SparseCumSum;
+use crate::sampler::ftree::FTree;
+use crate::sampler::DiscreteSampler;
+use crate::util::rng::Pcg32;
+
+use super::state::LdaState;
+use super::{add_token, remove_token, Sweep};
+
+/// Doc-major F+LDA sweeper.
+pub struct FLdaDoc {
+    /// F+tree over q_t; outside the current document every leaf holds the
+    /// base value α/(n_t + β̄)
+    tree: FTree,
+    /// sparse cumsum scratch for the r term
+    r: SparseCumSum,
+}
+
+impl FLdaDoc {
+    pub fn new(state: &LdaState) -> Self {
+        let t = state.num_topics();
+        FLdaDoc {
+            tree: FTree::with_capacity(&vec![0.0; t], t),
+            r: SparseCumSum::with_capacity(64),
+        }
+    }
+
+    /// Rebuild every leaf to the document-independent base value.
+    fn rebuild_base(&mut self, state: &LdaState) {
+        let bb = state.hyper.betabar(state.vocab);
+        let alpha = state.hyper.alpha;
+        let base: Vec<f64> = state
+            .nt
+            .iter()
+            .map(|&n| alpha / (n as f64 + bb))
+            .collect();
+        self.tree.refill(&base);
+    }
+
+    #[inline]
+    fn q_value(state: &LdaState, doc: usize, t: u16) -> f64 {
+        let bb = state.hyper.betabar(state.vocab);
+        (state.ntd[doc].get(t) as f64 + state.hyper.alpha)
+            / (state.nt[t as usize] as f64 + bb)
+    }
+}
+
+impl Sweep for FLdaDoc {
+    fn sweep(&mut self, state: &mut LdaState, corpus: &Corpus, rng: &mut Pcg32) {
+        let beta = state.hyper.beta;
+        self.rebuild_base(state);
+        for doc in 0..corpus.num_docs() {
+            // enter document: raise leaves on T_d to (n_td + α)/(n_t + β̄)
+            // (two-pass over the sparse support; borrow discipline)
+            let support: Vec<u16> = state.ntd[doc].iter().map(|(t, _)| t).collect();
+            for &t in &support {
+                self.tree.set(t as usize, Self::q_value(state, doc, t));
+            }
+
+            for pos in 0..corpus.docs[doc].len() {
+                let word = corpus.docs[doc][pos] as usize;
+                let old = state.z[doc][pos];
+                remove_token(state, doc, word, old);
+                // n_td[old] and n_t[old] both changed → refresh that leaf
+                self.tree.set(old as usize, Self::q_value(state, doc, old));
+
+                // r term over the word's support, using fresh q leaves
+                self.r.clear();
+                for (t, c) in state.nwt[word].iter() {
+                    self.r.push(t as u32, c as f64 * self.tree.leaf(t as usize));
+                }
+                let r_total = self.r.total();
+
+                let u = rng.uniform(beta * self.tree.total() + r_total);
+                let new = if u < r_total {
+                    self.r.sample(u) as u16
+                } else {
+                    self.tree.sample((u - r_total) / beta) as u16
+                };
+
+                add_token(state, doc, word, new);
+                self.tree.set(new as usize, Self::q_value(state, doc, new));
+                state.z[doc][pos] = new;
+            }
+
+            // leave document: lower the final support back to base; any
+            // topic whose count hit zero mid-document already holds the
+            // base value (set() with n_td = 0 is the base formula).
+            let bb = state.hyper.betabar(state.vocab);
+            let alpha = state.hyper.alpha;
+            let support: Vec<u16> = state.ntd[doc].iter().map(|(t, _)| t).collect();
+            for &t in &support {
+                self.tree
+                    .set(t as usize, alpha / (state.nt[t as usize] as f64 + bb));
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "flda-doc"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::presets::preset;
+    use crate::lda::state::Hyper;
+
+    #[test]
+    fn sweep_is_consistent() {
+        let corpus = preset("tiny").unwrap();
+        let mut rng = Pcg32::seeded(31);
+        let mut state = LdaState::init_random(&corpus, Hyper::paper_default(16), &mut rng);
+        let mut s = FLdaDoc::new(&state);
+        for _ in 0..3 {
+            s.sweep(&mut state, &corpus, &mut rng);
+        }
+        state.check_consistency(&corpus).unwrap();
+    }
+
+    #[test]
+    fn tree_returns_to_base_after_each_doc() {
+        let corpus = preset("tiny").unwrap();
+        let mut rng = Pcg32::seeded(32);
+        let mut state = LdaState::init_random(&corpus, Hyper::paper_default(8), &mut rng);
+        let mut s = FLdaDoc::new(&state);
+        s.sweep(&mut state, &corpus, &mut rng);
+        // after the sweep every leaf must equal the base value under the
+        // *current* n_t
+        let bb = state.hyper.betabar(state.vocab);
+        for t in 0..8 {
+            let want = state.hyper.alpha / (state.nt[t] as f64 + bb);
+            let got = s.tree.leaf(t);
+            assert!(
+                (got - want).abs() < 1e-12 * want.abs().max(1e-300),
+                "leaf {t}: {got} vs base {want}"
+            );
+        }
+    }
+}

@@ -1,0 +1,220 @@
+//! F+LDA, word-by-word order (paper §3.2, decomposition (5), Algorithm 3):
+//!
+//! ```text
+//! p_t = α·q_t + r_t,   q_t = (n_tw + β)/(n_t + β̄),   r_t = n_td · q_t
+//! ```
+//!
+//! The F+tree tracks `q` for the *current word*; `r` is |T_d|-sparse and
+//! rebuilt per occurrence.  Per-token cost Θ(|T_d| + log T) — |T_d| is
+//! bounded by document length, so on large corpora this beats the
+//! |T_w|-bound doc-major order (the Fig. 4 crossover).  This is also the
+//! order the Nomad runtime uses: the unit subtask is "all occurrences of
+//! word w in my documents", exactly one tree-raise/lower per subtask.
+
+use crate::corpus::{Corpus, WordIndex};
+use crate::sampler::bsearch::SparseCumSum;
+use crate::sampler::ftree::FTree;
+use crate::sampler::DiscreteSampler;
+use crate::util::rng::Pcg32;
+
+use super::state::LdaState;
+use super::Sweep;
+
+/// Word-major F+LDA sweeper.
+pub struct FLdaWord {
+    /// F+tree over q_t; outside the current word every leaf holds the base
+    /// value β/(n_t + β̄)
+    tree: FTree,
+    r: SparseCumSum,
+    /// word-major occurrence index (built once per corpus)
+    index: WordIndex,
+    /// reusable support-topic scratch (avoids a per-word allocation)
+    support: Vec<u16>,
+    /// dense scratch of the current word's count row (perf: per-occurrence
+    /// O(1) access instead of sorted-vec binary search + memmove)
+    wrow: Vec<u32>,
+    /// topics whose wrow entry changed during the subtask (write-back set)
+    touched: Vec<u16>,
+    is_touched: Vec<bool>,
+}
+
+impl FLdaWord {
+    pub fn new(state: &LdaState, corpus: &Corpus) -> Self {
+        let t = state.num_topics();
+        FLdaWord {
+            tree: FTree::with_capacity(&vec![0.0; t], t),
+            r: SparseCumSum::with_capacity(64),
+            index: corpus.word_index(),
+            support: Vec::with_capacity(t),
+            wrow: vec![0; t],
+            touched: Vec::with_capacity(t),
+            is_touched: vec![false; t],
+        }
+    }
+
+    fn rebuild_base(&mut self, state: &LdaState) {
+        let bb = state.hyper.betabar(state.vocab);
+        let beta = state.hyper.beta;
+        let base: Vec<f64> = state.nt.iter().map(|&n| beta / (n as f64 + bb)).collect();
+        self.tree.refill(&base);
+    }
+
+    /// Process every occurrence of `word` (the Nomad unit subtask, shared
+    /// with the parallel runtimes via `pub(crate)`).
+    pub(crate) fn process_word(
+        &mut self,
+        state: &mut LdaState,
+        word: usize,
+        docs: &[u32],
+        poss: &[u32],
+        rng: &mut Pcg32,
+    ) {
+        let alpha = state.hyper.alpha;
+        let beta = state.hyper.beta;
+        let bb = state.hyper.betabar(state.vocab);
+
+        // raise: scatter the word row into the dense scratch and lift the
+        // tree leaves on T_w to the word-specific value
+        self.support.clear();
+        for (t, c) in state.nwt[word].iter() {
+            self.support.push(t);
+            self.wrow[t as usize] = c;
+        }
+        for i in 0..self.support.len() {
+            let t = self.support[i] as usize;
+            self.tree
+                .set(t, (self.wrow[t] as f64 + beta) / (state.nt[t] as f64 + bb));
+        }
+
+        for (&doc, &pos) in docs.iter().zip(poss) {
+            let (doc, pos) = (doc as usize, pos as usize);
+            let old = state.z[doc][pos];
+            let old_t = old as usize;
+            // remove: ntd (sparse), word row (dense scratch), totals
+            state.ntd[doc].dec(old);
+            self.wrow[old_t] -= 1;
+            state.nt[old_t] -= 1;
+            if !self.is_touched[old_t] {
+                self.is_touched[old_t] = true;
+                self.touched.push(old);
+            }
+            self.tree
+                .set(old_t, (self.wrow[old_t] as f64 + beta) / (state.nt[old_t] as f64 + bb));
+
+            // r over the document's support, fresh q from the tree leaves
+            self.r.clear();
+            for (t, c) in state.ntd[doc].iter() {
+                self.r.push(t as u32, c as f64 * self.tree.leaf(t as usize));
+            }
+            let r_total = self.r.total();
+
+            let u = rng.uniform(alpha * self.tree.total() + r_total);
+            let new = if u < r_total {
+                self.r.sample(u) as u16
+            } else {
+                self.tree.sample((u - r_total) / alpha) as u16
+            };
+            let new_t = new as usize;
+
+            state.ntd[doc].inc(new);
+            self.wrow[new_t] += 1;
+            state.nt[new_t] += 1;
+            if !self.is_touched[new_t] {
+                self.is_touched[new_t] = true;
+                self.touched.push(new);
+            }
+            self.tree
+                .set(new_t, (self.wrow[new_t] as f64 + beta) / (state.nt[new_t] as f64 + bb));
+            state.z[doc][pos] = new;
+        }
+
+        // lower: write the touched scratch entries back into the sparse
+        // row (one binary search per topic instead of per occurrence),
+        // reset every lifted leaf to the base value, clear the scratch.
+        for i in 0..self.touched.len() {
+            let t = self.touched[i];
+            state.nwt[word].set_count(t, self.wrow[t as usize]);
+            self.is_touched[t as usize] = false;
+        }
+        self.touched.clear();
+        self.support.clear();
+        self.support.extend(state.nwt[word].iter().map(|(t, _)| t));
+        for i in 0..self.support.len() {
+            let t = self.support[i] as usize;
+            self.tree.set(t, beta / (state.nt[t] as f64 + bb));
+            self.wrow[t] = 0;
+        }
+        debug_assert!(self.wrow.iter().all(|&c| c == 0));
+    }
+}
+
+impl Sweep for FLdaWord {
+    fn sweep(&mut self, state: &mut LdaState, corpus: &Corpus, rng: &mut Pcg32) {
+        self.rebuild_base(state);
+        // borrow-split: the index is immutable over the sweep, so move it
+        // out instead of copying every occurrence slice (perf: saves a
+        // full corpus copy per sweep)
+        let index = std::mem::take(&mut self.index);
+        for word in 0..corpus.vocab {
+            let (docs, poss) = index.occurrences(word);
+            if docs.is_empty() {
+                continue;
+            }
+            self.process_word(state, word, docs, poss, rng);
+        }
+        self.index = index;
+    }
+
+    fn name(&self) -> &'static str {
+        "flda-word"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::presets::preset;
+    use crate::lda::state::Hyper;
+
+    #[test]
+    fn sweep_is_consistent() {
+        let corpus = preset("tiny").unwrap();
+        let mut rng = Pcg32::seeded(41);
+        let mut state = LdaState::init_random(&corpus, Hyper::paper_default(16), &mut rng);
+        let mut s = FLdaWord::new(&state, &corpus);
+        for _ in 0..3 {
+            s.sweep(&mut state, &corpus, &mut rng);
+        }
+        state.check_consistency(&corpus).unwrap();
+    }
+
+    #[test]
+    fn tree_returns_to_base_after_sweep() {
+        let corpus = preset("tiny").unwrap();
+        let mut rng = Pcg32::seeded(42);
+        let mut state = LdaState::init_random(&corpus, Hyper::paper_default(8), &mut rng);
+        let mut s = FLdaWord::new(&state, &corpus);
+        s.sweep(&mut state, &corpus, &mut rng);
+        let bb = state.hyper.betabar(state.vocab);
+        for t in 0..8 {
+            let want = state.hyper.beta / (state.nt[t] as f64 + bb);
+            let got = s.tree.leaf(t);
+            assert!(
+                (got - want).abs() < 1e-12 * want.abs().max(1e-300),
+                "leaf {t}: {got} vs base {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn every_token_is_resampled_once_per_sweep() {
+        // token count conservation + consistency across several sweeps
+        let corpus = preset("tiny").unwrap();
+        let mut rng = Pcg32::seeded(43);
+        let mut state = LdaState::init_random(&corpus, Hyper::paper_default(8), &mut rng);
+        let before = state.total_tokens();
+        let mut s = FLdaWord::new(&state, &corpus);
+        s.sweep(&mut state, &corpus, &mut rng);
+        assert_eq!(state.total_tokens(), before);
+    }
+}

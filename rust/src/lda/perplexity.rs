@@ -1,0 +1,184 @@
+//! Held-out evaluation: per-word predictive perplexity on a test split.
+//!
+//! The paper evaluates training log-likelihood (its figures' y-axis); a
+//! production topic-modeling library also needs held-out perplexity.  We
+//! implement the standard *document-completion* estimator: for each test
+//! document, the first half of its tokens estimate θ̂_d against the
+//! trained φ̂ (point estimates from the count state), the second half is
+//! scored:
+//!
+//! ```text
+//! ppl = exp( − Σ_held log Σ_t θ̂_d(t)·φ̂_t(w) / N_held )
+//! ```
+
+use crate::corpus::Corpus;
+use crate::util::rng::Pcg32;
+
+use super::state::{Hyper, LdaState, SparseCounts};
+
+/// Deterministic train/test split by document id hash.
+pub fn split_corpus(corpus: &Corpus, test_fraction: f64, seed: u64) -> (Corpus, Corpus) {
+    assert!((0.0..1.0).contains(&test_fraction));
+    let mut rng = Pcg32::new(seed, 0x5117);
+    let mut train = Corpus { docs: vec![], ..corpus_meta(corpus, "train") };
+    let mut test = Corpus { docs: vec![], ..corpus_meta(corpus, "test") };
+    for doc in &corpus.docs {
+        if rng.next_f64() < test_fraction && doc.len() >= 4 {
+            test.docs.push(doc.clone());
+        } else {
+            train.docs.push(doc.clone());
+        }
+    }
+    (train, test)
+}
+
+fn corpus_meta(c: &Corpus, suffix: &str) -> Corpus {
+    Corpus {
+        docs: vec![],
+        vocab: c.vocab,
+        vocab_words: c.vocab_words.clone(),
+        name: format!("{}-{suffix}", c.name),
+    }
+}
+
+/// Document-completion perplexity of `state` (trained on the train split)
+/// on `test`.  `fold_in_sweeps` Gibbs passes estimate θ̂ on the first half
+/// of each test document with φ̂ frozen.
+pub fn perplexity(
+    state: &LdaState,
+    test: &Corpus,
+    fold_in_sweeps: usize,
+    rng: &mut Pcg32,
+) -> f64 {
+    let t = state.num_topics();
+    let h = state.hyper;
+    let bb = h.betabar(state.vocab);
+    // frozen topic-word point estimate φ̂_t(w) accessor
+    let phi = |topic: usize, w: usize| -> f64 {
+        (state.nwt[w].get(topic as u16) as f64 + h.beta)
+            / (state.nt[topic] as f64 + bb)
+    };
+
+    let mut log_sum = 0.0f64;
+    let mut held_tokens = 0usize;
+    let mut p = vec![0.0f64; t];
+    for doc in &test.docs {
+        let half = doc.len() / 2;
+        let (observed, held) = doc.split_at(half);
+        // fold-in: Gibbs on the observed half with φ̂ frozen
+        let mut counts = SparseCounts::default();
+        let mut z: Vec<u16> = observed
+            .iter()
+            .map(|_| {
+                let topic = rng.below(t) as u16;
+                counts.inc(topic);
+                topic
+            })
+            .collect();
+        for _ in 0..fold_in_sweeps {
+            for (j, &w) in observed.iter().enumerate() {
+                let old = z[j];
+                counts.dec(old);
+                let mut total = 0.0;
+                for (k, pk) in p.iter_mut().enumerate() {
+                    *pk = (counts.get(k as u16) as f64 + h.alpha) * phi(k, w as usize);
+                    total += *pk;
+                }
+                let mut u = rng.uniform(total);
+                let mut new = t - 1;
+                for (k, &pk) in p.iter().enumerate() {
+                    if u < pk {
+                        new = k;
+                        break;
+                    }
+                    u -= pk;
+                }
+                counts.inc(new as u16);
+                z[j] = new as u16;
+            }
+        }
+        // θ̂_d from the folded-in counts
+        let nd = half as f64;
+        let theta = |k: usize| (counts.get(k as u16) as f64 + h.alpha) / (nd + t as f64 * h.alpha);
+        for &w in held {
+            let mut pw = 0.0;
+            for k in 0..t {
+                pw += theta(k) * phi(k, w as usize);
+            }
+            log_sum += pw.max(1e-300).ln();
+            held_tokens += 1;
+        }
+    }
+    if held_tokens == 0 {
+        return f64::NAN;
+    }
+    (-log_sum / held_tokens as f64).exp()
+}
+
+/// Convenience: uniform-model perplexity (the "random" baseline = J).
+pub fn uniform_perplexity(vocab: usize) -> f64 {
+    vocab as f64
+}
+
+/// Hyper re-export used by doc examples.
+pub type _Hyper = Hyper;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::presets::preset;
+    use crate::lda::{FLdaWord, Sweep};
+
+    #[test]
+    fn split_partitions_docs() {
+        let corpus = preset("tiny").unwrap();
+        let (train, test) = split_corpus(&corpus, 0.3, 1);
+        assert_eq!(train.num_docs() + test.num_docs(), corpus.num_docs());
+        assert!(test.num_docs() > 0 && train.num_docs() > 0);
+        train.validate().unwrap();
+        test.validate().unwrap();
+        // deterministic
+        let (train2, _) = split_corpus(&corpus, 0.3, 1);
+        assert_eq!(train.docs, train2.docs);
+    }
+
+    #[test]
+    fn trained_model_beats_uniform_perplexity() {
+        let corpus = preset("tiny").unwrap();
+        let (train, test) = split_corpus(&corpus, 0.25, 2);
+        let hyper = Hyper::paper_default(8);
+        let mut rng = Pcg32::seeded(3);
+        let mut state = LdaState::init_random(&train, hyper, &mut rng);
+        let mut sampler = FLdaWord::new(&state, &train);
+        for _ in 0..25 {
+            sampler.sweep(&mut state, &train, &mut rng);
+        }
+        let ppl = perplexity(&state, &test, 10, &mut rng);
+        assert!(ppl.is_finite() && ppl > 1.0);
+        assert!(
+            ppl < uniform_perplexity(corpus.vocab),
+            "trained ppl {ppl} not better than uniform {}",
+            corpus.vocab
+        );
+    }
+
+    #[test]
+    fn more_training_does_not_hurt_much() {
+        // ppl after 20 sweeps ≤ 1.2 × ppl after 2 sweeps (sanity, generous)
+        let corpus = preset("tiny").unwrap();
+        let (train, test) = split_corpus(&corpus, 0.25, 4);
+        let hyper = Hyper::paper_default(8);
+        let run = |sweeps: usize| {
+            let mut rng = Pcg32::seeded(5);
+            let mut state = LdaState::init_random(&train, hyper, &mut rng);
+            let mut sampler = FLdaWord::new(&state, &train);
+            for _ in 0..sweeps {
+                sampler.sweep(&mut state, &train, &mut rng);
+            }
+            perplexity(&state, &test, 8, &mut rng)
+        };
+        let early = run(2);
+        let late = run(20);
+        assert!(late < early * 1.2, "early {early} late {late}");
+    }
+}

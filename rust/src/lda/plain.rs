@@ -1,0 +1,136 @@
+//! Plain O(T) collapsed Gibbs sampling — the "normal LDA implementation
+//! which takes O(T) time to generate one sample" that Fig. 4(c,d) uses as
+//! the speedup denominator.
+//!
+//! Per token: materialize the full dense conditional of eq. (2) and draw by
+//! linear search.  No amortization tricks; this is the reference both for
+//! correctness (it *is* eq. (2), verbatim) and for speedup measurement.
+
+use crate::corpus::Corpus;
+use crate::util::rng::Pcg32;
+
+use super::state::LdaState;
+use super::{add_token, remove_token, Sweep};
+
+/// Dense CGS sweeper.
+pub struct PlainLda {
+    /// dense n_td of the current document (scattered/cleared per doc)
+    doc_counts: Vec<u32>,
+    /// dense n_wt row of the current token's word
+    word_counts: Vec<u32>,
+    /// dense conditional scratch
+    p: Vec<f64>,
+}
+
+impl PlainLda {
+    pub fn new(state: &LdaState) -> Self {
+        let t = state.num_topics();
+        PlainLda { doc_counts: vec![0; t], word_counts: vec![0; t], p: vec![0.0; t] }
+    }
+}
+
+impl Sweep for PlainLda {
+    fn sweep(&mut self, state: &mut LdaState, corpus: &Corpus, rng: &mut Pcg32) {
+        let t = state.num_topics();
+        let alpha = state.hyper.alpha;
+        let beta = state.hyper.beta;
+        let bb = state.hyper.betabar(state.vocab);
+        for doc in 0..corpus.num_docs() {
+            // scatter the doc's sparse counts into dense scratch
+            for (topic, c) in state.ntd[doc].iter() {
+                self.doc_counts[topic as usize] = c;
+            }
+            for pos in 0..corpus.docs[doc].len() {
+                let word = corpus.docs[doc][pos] as usize;
+                let old = state.z[doc][pos];
+                remove_token(state, doc, word, old);
+                self.doc_counts[old as usize] -= 1;
+
+                // dense n_wt row for this word
+                for (topic, c) in state.nwt[word].iter() {
+                    self.word_counts[topic as usize] = c;
+                }
+                let mut total = 0.0;
+                for k in 0..t {
+                    let v = (self.doc_counts[k] as f64 + alpha)
+                        * (self.word_counts[k] as f64 + beta)
+                        / (state.nt[k] as f64 + bb);
+                    self.p[k] = v;
+                    total += v;
+                }
+                // clear word scratch (support only)
+                for (topic, _) in state.nwt[word].iter() {
+                    self.word_counts[topic as usize] = 0;
+                }
+
+                // linear search on the cdf
+                let mut u = rng.uniform(total);
+                let mut new = t - 1;
+                for (k, &v) in self.p.iter().enumerate() {
+                    if u < v {
+                        new = k;
+                        break;
+                    }
+                    u -= v;
+                }
+                let new = new as u16;
+
+                add_token(state, doc, word, new);
+                self.doc_counts[new as usize] += 1;
+                state.z[doc][pos] = new;
+            }
+            // clear doc scratch
+            for (topic, _) in state.ntd[doc].iter() {
+                self.doc_counts[topic as usize] = 0;
+            }
+            debug_assert!(self.doc_counts.iter().all(|&c| c == 0));
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "plain"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::presets::preset;
+    use crate::lda::state::Hyper;
+
+    #[test]
+    fn sweep_preserves_token_count_and_consistency() {
+        let corpus = preset("tiny").unwrap();
+        let mut rng = Pcg32::seeded(5);
+        let mut state = LdaState::init_random(&corpus, Hyper::paper_default(8), &mut rng);
+        let tokens = state.total_tokens();
+        let mut s = PlainLda::new(&state);
+        s.sweep(&mut state, &corpus, &mut rng);
+        assert_eq!(state.total_tokens(), tokens);
+        state.check_consistency(&corpus).unwrap();
+    }
+
+    #[test]
+    fn scratch_buffers_reset_between_docs() {
+        // two sweeps must give the same result as two sweeps on a fresh
+        // sampler (i.e. no scratch leakage across calls)
+        let corpus = preset("tiny").unwrap();
+        let mk = || {
+            let mut rng = Pcg32::seeded(9);
+            let state = LdaState::init_random(&corpus, Hyper::paper_default(8), &mut rng);
+            (state, rng)
+        };
+        let (mut s1, mut r1) = mk();
+        let mut a = PlainLda::new(&s1);
+        a.sweep(&mut s1, &corpus, &mut r1);
+        a.sweep(&mut s1, &corpus, &mut r1);
+
+        let (mut s2, mut r2) = mk();
+        let mut b1 = PlainLda::new(&s2);
+        b1.sweep(&mut s2, &corpus, &mut r2);
+        let mut b2 = PlainLda::new(&s2);
+        b2.sweep(&mut s2, &corpus, &mut r2);
+
+        assert_eq!(s1.z, s2.z);
+    }
+}

@@ -1,0 +1,318 @@
+//! The CGS count state (§2.1): topic assignments `z` plus the three count
+//! aggregates `n_td`, `n_wt`, `n_t`.
+//!
+//! Both the doc-topic and word-topic matrices are stored *sparse* (sorted
+//! `(topic, count)` pairs) — at T in the thousands they are overwhelmingly
+//! sparse (|T_d| is bounded by document length, |T_w| by the word's corpus
+//! frequency), and every sampler in this crate iterates nonzero support.
+//! Samplers that need dense rows scatter into reusable scratch buffers.
+
+use crate::corpus::Corpus;
+use crate::util::rng::Pcg32;
+
+/// LDA hyperparameters (symmetric Dirichlet, the paper's setting).
+#[derive(Clone, Copy, Debug)]
+pub struct Hyper {
+    /// number of topics T
+    pub t: usize,
+    /// document-topic smoother (paper default 50/T)
+    pub alpha: f64,
+    /// topic-word smoother (paper default 0.01)
+    pub beta: f64,
+}
+
+impl Hyper {
+    /// The paper's default setting: alpha = 50/T, beta = 0.01.
+    pub fn paper_default(t: usize) -> Hyper {
+        Hyper { t, alpha: 50.0 / t as f64, beta: 0.01 }
+    }
+
+    /// beta-bar = J * beta (the denominator smoother of eq. (2)).
+    pub fn betabar(&self, vocab: usize) -> f64 {
+        self.beta * vocab as f64
+    }
+}
+
+/// Sorted sparse (topic -> count) map.  |support| stays small (≤ doc length
+/// for `n_td`, ≤ word frequency for `n_wt`), so binary-search + memmove
+/// beats hashing at these sizes.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SparseCounts {
+    pairs: Vec<(u16, u32)>,
+}
+
+impl SparseCounts {
+    pub fn with_capacity(cap: usize) -> Self {
+        SparseCounts { pairs: Vec::with_capacity(cap) }
+    }
+
+    #[inline]
+    pub fn get(&self, topic: u16) -> u32 {
+        match self.pairs.binary_search_by_key(&topic, |&(t, _)| t) {
+            Ok(i) => self.pairs[i].1,
+            Err(_) => 0,
+        }
+    }
+
+    /// Increment, inserting the topic if absent.
+    #[inline]
+    pub fn inc(&mut self, topic: u16) {
+        match self.pairs.binary_search_by_key(&topic, |&(t, _)| t) {
+            Ok(i) => self.pairs[i].1 += 1,
+            Err(i) => self.pairs.insert(i, (topic, 1)),
+        }
+    }
+
+    /// Decrement, removing the topic when it reaches zero.
+    /// Panics in debug builds if the topic is absent (a state corruption).
+    #[inline]
+    pub fn dec(&mut self, topic: u16) {
+        match self.pairs.binary_search_by_key(&topic, |&(t, _)| t) {
+            Ok(i) => {
+                self.pairs[i].1 -= 1;
+                if self.pairs[i].1 == 0 {
+                    self.pairs.remove(i);
+                }
+            }
+            Err(_) => debug_assert!(false, "dec of absent topic {topic}"),
+        }
+    }
+
+    /// Set a topic's count to an absolute value (0 removes it).  Used by
+    /// the word-major hot path to write back a dense scratch row in one
+    /// binary search per touched topic.
+    #[inline]
+    pub fn set_count(&mut self, topic: u16, count: u32) {
+        match self.pairs.binary_search_by_key(&topic, |&(t, _)| t) {
+            Ok(i) => {
+                if count == 0 {
+                    self.pairs.remove(i);
+                } else {
+                    self.pairs[i].1 = count;
+                }
+            }
+            Err(i) => {
+                if count > 0 {
+                    self.pairs.insert(i, (topic, count));
+                }
+            }
+        }
+    }
+
+    /// Nonzero support size (|T_d| / |T_w|).
+    #[inline]
+    pub fn support(&self) -> usize {
+        self.pairs.len()
+    }
+
+    #[inline]
+    pub fn iter(&self) -> impl Iterator<Item = (u16, u32)> + '_ {
+        self.pairs.iter().copied()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+
+    pub fn total(&self) -> u64 {
+        self.pairs.iter().map(|&(_, c)| c as u64).sum()
+    }
+}
+
+/// Full Gibbs state for one corpus.
+#[derive(Clone, Debug)]
+pub struct LdaState {
+    pub hyper: Hyper,
+    pub vocab: usize,
+    /// z[i][j]: topic of the j-th occurrence in doc i
+    pub z: Vec<Vec<u16>>,
+    /// n_td per document
+    pub ntd: Vec<SparseCounts>,
+    /// n_wt per word
+    pub nwt: Vec<SparseCounts>,
+    /// n_t global topic totals
+    pub nt: Vec<u32>,
+}
+
+impl LdaState {
+    /// Random initialization: every occurrence assigned a uniform topic
+    /// (the standard CGS start).
+    pub fn init_random(corpus: &Corpus, hyper: Hyper, rng: &mut Pcg32) -> LdaState {
+        assert!(hyper.t >= 2 && hyper.t <= u16::MAX as usize + 1);
+        let mut z = Vec::with_capacity(corpus.num_docs());
+        let mut ntd = Vec::with_capacity(corpus.num_docs());
+        let mut nwt = vec![SparseCounts::default(); corpus.vocab];
+        let mut nt = vec![0u32; hyper.t];
+        for doc in &corpus.docs {
+            let mut zs = Vec::with_capacity(doc.len());
+            let mut counts = SparseCounts::with_capacity(doc.len().min(hyper.t));
+            for &w in doc {
+                let topic = rng.below(hyper.t) as u16;
+                zs.push(topic);
+                counts.inc(topic);
+                nwt[w as usize].inc(topic);
+                nt[topic as usize] += 1;
+            }
+            z.push(zs);
+            ntd.push(counts);
+        }
+        LdaState { hyper, vocab: corpus.vocab, z, ntd, nwt, nt }
+    }
+
+    pub fn num_topics(&self) -> usize {
+        self.hyper.t
+    }
+
+    pub fn total_tokens(&self) -> u64 {
+        self.nt.iter().map(|&c| c as u64).sum()
+    }
+
+    /// Recompute all counts from `z` and compare — the state-integrity
+    /// oracle used by tests and by the runtime's paranoid mode.
+    pub fn check_consistency(&self, corpus: &Corpus) -> Result<(), String> {
+        let mut ntd = vec![SparseCounts::default(); corpus.num_docs()];
+        let mut nwt = vec![SparseCounts::default(); corpus.vocab];
+        let mut nt = vec![0u32; self.hyper.t];
+        if self.z.len() != corpus.num_docs() {
+            return Err(format!("z has {} docs, corpus {}", self.z.len(), corpus.num_docs()));
+        }
+        for (i, (doc, zs)) in corpus.docs.iter().zip(&self.z).enumerate() {
+            if doc.len() != zs.len() {
+                return Err(format!("doc {i}: {} tokens vs {} assignments", doc.len(), zs.len()));
+            }
+            for (&w, &topic) in doc.iter().zip(zs) {
+                if topic as usize >= self.hyper.t {
+                    return Err(format!("doc {i}: topic {topic} out of range"));
+                }
+                ntd[i].inc(topic);
+                nwt[w as usize].inc(topic);
+                nt[topic as usize] += 1;
+            }
+        }
+        if ntd != self.ntd {
+            let bad = ntd.iter().zip(&self.ntd).position(|(a, b)| a != b).unwrap();
+            return Err(format!("ntd mismatch at doc {bad}"));
+        }
+        if nwt != self.nwt {
+            let bad = nwt.iter().zip(&self.nwt).position(|(a, b)| a != b).unwrap();
+            return Err(format!("nwt mismatch at word {bad}"));
+        }
+        if nt != self.nt {
+            return Err("nt mismatch".into());
+        }
+        Ok(())
+    }
+
+    /// The dense conditional of eq. (2) for one (doc, word) pair with the
+    /// token *removed* — the target distribution every sampler must match.
+    /// Test/oracle use only (Θ(T)).
+    pub fn dense_conditional(&self, doc: usize, word: usize) -> Vec<f64> {
+        let bb = self.hyper.betabar(self.vocab);
+        (0..self.hyper.t)
+            .map(|t| {
+                let ntd = self.ntd[doc].get(t as u16) as f64;
+                let nwt = self.nwt[word].get(t as u16) as f64;
+                (ntd + self.hyper.alpha) * (nwt + self.hyper.beta)
+                    / (self.nt[t] as f64 + bb)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::presets::preset;
+    use crate::util::quickcheck::check;
+
+    #[test]
+    fn sparse_counts_inc_dec() {
+        let mut c = SparseCounts::default();
+        assert_eq!(c.get(5), 0);
+        c.inc(5);
+        c.inc(5);
+        c.inc(2);
+        assert_eq!(c.get(5), 2);
+        assert_eq!(c.get(2), 1);
+        assert_eq!(c.support(), 2);
+        c.dec(5);
+        c.dec(5);
+        assert_eq!(c.get(5), 0);
+        assert_eq!(c.support(), 1);
+        assert_eq!(c.total(), 1);
+    }
+
+    #[test]
+    fn sparse_counts_iter_sorted() {
+        let mut c = SparseCounts::default();
+        for t in [9u16, 1, 5, 1, 9, 9] {
+            c.inc(t);
+        }
+        let pairs: Vec<_> = c.iter().collect();
+        assert_eq!(pairs, vec![(1, 2), (5, 1), (9, 3)]);
+    }
+
+    #[test]
+    fn sparse_counts_random_against_dense_model() {
+        check("SparseCounts == dense counter", 32, |rng| {
+            let mut sparse = SparseCounts::default();
+            let mut dense = vec![0i64; 16];
+            for _ in 0..500 {
+                let t = rng.below(16) as u16;
+                if dense[t as usize] > 0 && rng.next_f64() < 0.45 {
+                    sparse.dec(t);
+                    dense[t as usize] -= 1;
+                } else {
+                    sparse.inc(t);
+                    dense[t as usize] += 1;
+                }
+            }
+            for (t, &d) in dense.iter().enumerate() {
+                if sparse.get(t as u16) as i64 != d {
+                    return Err(format!("topic {t}: sparse {} dense {d}", sparse.get(t as u16)));
+                }
+            }
+            if sparse.support() != dense.iter().filter(|&&d| d > 0).count() {
+                return Err("support mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn init_random_is_consistent() {
+        let corpus = preset("tiny").unwrap();
+        let mut rng = Pcg32::seeded(1);
+        let state = LdaState::init_random(&corpus, Hyper::paper_default(16), &mut rng);
+        state.check_consistency(&corpus).unwrap();
+        assert_eq!(state.total_tokens() as usize, corpus.num_tokens());
+    }
+
+    #[test]
+    fn consistency_detects_corruption() {
+        let corpus = preset("tiny").unwrap();
+        let mut rng = Pcg32::seeded(2);
+        let mut state = LdaState::init_random(&corpus, Hyper::paper_default(16), &mut rng);
+        state.nt[0] += 1;
+        assert!(state.check_consistency(&corpus).is_err());
+    }
+
+    #[test]
+    fn dense_conditional_is_positive_and_finite() {
+        let corpus = preset("tiny").unwrap();
+        let mut rng = Pcg32::seeded(3);
+        let state = LdaState::init_random(&corpus, Hyper::paper_default(16), &mut rng);
+        let p = state.dense_conditional(0, corpus.docs[0][0] as usize);
+        assert_eq!(p.len(), 16);
+        assert!(p.iter().all(|&x| x > 0.0 && x.is_finite()));
+    }
+
+    #[test]
+    fn paper_default_hyper() {
+        let h = Hyper::paper_default(1024);
+        assert!((h.alpha - 50.0 / 1024.0).abs() < 1e-12);
+        assert!((h.beta - 0.01).abs() < 1e-12);
+        assert!((h.betabar(7000) - 70.0).abs() < 1e-9);
+    }
+}

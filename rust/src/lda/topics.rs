@@ -1,0 +1,101 @@
+//! Topic inspection: top-k words per topic and point estimates of the
+//! topic-word (φ) and doc-topic (θ) distributions from the count state.
+
+use super::state::LdaState;
+
+/// Top-k (word, count) per topic.
+pub fn top_words(state: &LdaState, k: usize) -> Vec<Vec<(u32, u32)>> {
+    let t = state.num_topics();
+    let mut per_topic: Vec<Vec<(u32, u32)>> = vec![Vec::new(); t];
+    for (w, counts) in state.nwt.iter().enumerate() {
+        for (topic, c) in counts.iter() {
+            per_topic[topic as usize].push((w as u32, c));
+        }
+    }
+    for list in &mut per_topic {
+        list.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        list.truncate(k);
+    }
+    per_topic
+}
+
+/// Render the topics with vocabulary strings when available.
+pub fn render_topics(state: &LdaState, vocab_words: &[String], k: usize) -> String {
+    let mut out = String::new();
+    for (topic, words) in top_words(state, k).iter().enumerate() {
+        out.push_str(&format!("topic {topic:4}  (n_t={:8}): ", state.nt[topic]));
+        for (w, c) in words {
+            if (*w as usize) < vocab_words.len() {
+                out.push_str(&format!("{}:{c} ", vocab_words[*w as usize]));
+            } else {
+                out.push_str(&format!("w{w}:{c} "));
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Point estimate φ_t(w) = (n_wt + β)/(n_t + Jβ) for one topic (dense row).
+pub fn phi_row(state: &LdaState, topic: u16) -> Vec<f64> {
+    let bb = state.hyper.betabar(state.vocab);
+    let denom = state.nt[topic as usize] as f64 + bb;
+    (0..state.vocab)
+        .map(|w| (state.nwt[w].get(topic) as f64 + state.hyper.beta) / denom)
+        .collect()
+}
+
+/// Point estimate θ_d(t) = (n_td + α)/(n_d + Tα) for one document.
+pub fn theta_row(state: &LdaState, doc: usize) -> Vec<f64> {
+    let t = state.num_topics();
+    let nd = state.ntd[doc].total() as f64;
+    let denom = nd + t as f64 * state.hyper.alpha;
+    (0..t)
+        .map(|k| (state.ntd[doc].get(k as u16) as f64 + state.hyper.alpha) / denom)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::presets::preset;
+    use crate::lda::state::Hyper;
+    use crate::util::rng::Pcg32;
+
+    fn state() -> (crate::corpus::Corpus, LdaState) {
+        let corpus = preset("tiny").unwrap();
+        let mut rng = Pcg32::seeded(71);
+        let s = LdaState::init_random(&corpus, Hyper::paper_default(8), &mut rng);
+        (corpus, s)
+    }
+
+    #[test]
+    fn top_words_sorted_and_bounded() {
+        let (_, s) = state();
+        let tops = top_words(&s, 5);
+        assert_eq!(tops.len(), 8);
+        for list in &tops {
+            assert!(list.len() <= 5);
+            for pair in list.windows(2) {
+                assert!(pair[0].1 >= pair[1].1);
+            }
+        }
+    }
+
+    #[test]
+    fn phi_theta_are_distributions() {
+        let (_, s) = state();
+        let phi: f64 = phi_row(&s, 0).iter().sum();
+        assert!((phi - 1.0).abs() < 1e-9, "phi sums to {phi}");
+        let theta: f64 = theta_row(&s, 0).iter().sum();
+        assert!((theta - 1.0).abs() < 1e-9, "theta sums to {theta}");
+    }
+
+    #[test]
+    fn render_includes_counts() {
+        let (_, s) = state();
+        let txt = render_topics(&s, &[], 3);
+        assert!(txt.contains("topic"));
+        assert!(txt.lines().count() == 8);
+    }
+}

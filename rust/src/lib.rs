@@ -1,0 +1,36 @@
+//! # F+Nomad LDA
+//!
+//! A reproduction of *"A Scalable Asynchronous Distributed Algorithm for
+//! Topic Modeling"* (Yu, Hsieh, Yun, Vishwanathan, Dhillon — WWW 2015) as a
+//! three-layer Rust + JAX/Pallas + PJRT system:
+//!
+//! * **F+tree sampling** ([`sampler::FTree`]): Θ(log T) multinomial
+//!   sampling *and* Θ(log T) parameter maintenance, the data structure that
+//!   makes per-token Gibbs updates cheap at thousands of topics.
+//! * **F+LDA** ([`lda`]): collapsed Gibbs sampling in document-by-document
+//!   and word-by-word order built on the q/r decompositions of §3.2, plus
+//!   the SparseLDA / AliasLDA / plain-O(T) baselines.
+//! * **Nomad runtime** ([`nomad`]): decentralized, asynchronous, lock-free
+//!   parallel LDA via nomadic word tokens and a circulating global-count
+//!   token (§4), with a parameter-server baseline ([`ps`]) and a bulk-sync
+//!   baseline ([`adlda`]).
+//! * **Cluster simulator** ([`simnet`]): virtual-time discrete-event
+//!   execution of the same runtime for the paper's 20-core / 32-node
+//!   experiments on this single-core session (see DESIGN.md).
+//! * **PJRT bridge** ([`runtime`]): the model-quality evaluator is a JAX +
+//!   Pallas program AOT-lowered to HLO text at build time and executed from
+//!   Rust through the XLA PJRT C API — Python never runs at training time.
+//!
+//! See `examples/quickstart.rs` for the five-minute tour and DESIGN.md for
+//! the full system inventory.
+
+pub mod adlda;
+pub mod coordinator;
+pub mod corpus;
+pub mod lda;
+pub mod nomad;
+pub mod ps;
+pub mod runtime;
+pub mod sampler;
+pub mod simnet;
+pub mod util;

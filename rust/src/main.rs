@@ -1,0 +1,177 @@
+//! `fnomad-lda` — the F+Nomad LDA launcher.
+//!
+//! Subcommands:
+//!   train           train a topic model (any runtime/sampler; see --help)
+//!   data-stats      print Table-3-style statistics for presets / UCI files
+//!   calibrate       measure the per-token cost model for the simulator
+//!   topics          train briefly and print the top words per topic
+//!   check-artifacts cross-check the PJRT evaluator vs the Rust reference
+//!   help            this text
+
+use std::path::PathBuf;
+
+use fnomad_lda::coordinator::{train, TrainOpts};
+use fnomad_lda::corpus::presets::{preset, PAPER_TABLE3, PRESET_NAMES};
+use fnomad_lda::corpus::CorpusStats;
+use fnomad_lda::lda::state::{Hyper, LdaState};
+use fnomad_lda::lda::{self, topics as topics_mod};
+use fnomad_lda::runtime::{artifacts_available, default_artifact_dir, LlEvaluator};
+use fnomad_lda::simnet::CostModel;
+use fnomad_lda::util::bench::Table;
+use fnomad_lda::util::cli::Args;
+use fnomad_lda::util::rng::Pcg32;
+
+const HELP: &str = "\
+fnomad-lda — F+Nomad LDA (WWW'15 reproduction)
+
+USAGE: fnomad-lda <subcommand> [--flags]
+
+  train            --preset tiny|enron-sim|nytimes-sim|pubmed-sim|amazon-sim|umbc-sim
+                   --topics N            (default 128; artifacts exist for 128 and 1024)
+                   --sampler plain|sparse|alias|flda-doc|flda-word   (serial runtime)
+                   --runtime serial|nomad|ps|adlda|nomad-sim|ps-sim
+                   --workers P --machines M (sim cluster: M machines x 20 cores)
+                   --iters N --seed S --eval auto|xla|rust --eval-every K
+                   --batch-docs B --disk (ps flavors) --out results.csv --quiet
+  data-stats       [--preset NAME|all] print Table 3 for our datasets
+  calibrate        [--preset NAME] [--topics N] measure ns/token -> cost model
+  topics           [--preset NAME] [--topics N] [--iters N] [--top K]
+  check-artifacts  [--topics N] PJRT evaluator vs Rust reference on random state
+";
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    let code = match sub.as_str() {
+        "train" => cmd_train(&args),
+        "data-stats" => cmd_data_stats(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "topics" => cmd_topics(&args),
+        "check-artifacts" => cmd_check_artifacts(&args),
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand '{other}'\n{HELP}")),
+    }
+    .map(|_| 0)
+    .unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        1
+    });
+    std::process::exit(code);
+}
+
+fn train_opts(args: &Args) -> Result<TrainOpts, String> {
+    let d = TrainOpts::default();
+    let opts = TrainOpts {
+        preset: args.str_or("preset", &d.preset),
+        topics: args.parse_or("topics", d.topics)?,
+        sampler: args.str_or("sampler", &d.sampler),
+        runtime: args.str_or("runtime", &d.runtime),
+        workers: args.parse_or("workers", d.workers)?,
+        machines: args.parse_or("machines", d.machines)?,
+        iters: args.parse_or("iters", d.iters)?,
+        seed: args.parse_or("seed", d.seed)?,
+        eval: args.str_or("eval", &d.eval),
+        eval_every: args.parse_or("eval-every", d.eval_every)?,
+        batch_docs: args.parse_or("batch-docs", d.batch_docs)?,
+        disk: args.flag("disk"),
+        out: args.str_opt("out").map(PathBuf::from),
+        quiet: args.flag("quiet"),
+    };
+    args.reject_unknown()?;
+    Ok(opts)
+}
+
+fn cmd_train(args: &Args) -> Result<(), String> {
+    let opts = train_opts(args)?;
+    let res = train(&opts)?;
+    println!(
+        "final LL = {:.6e}   throughput = {:.0} tokens/s ({} runtime)",
+        res.ll_vs_iter.last_y().unwrap_or(f64::NAN),
+        res.tokens_per_sec,
+        opts.runtime,
+    );
+    Ok(())
+}
+
+fn cmd_data_stats(args: &Args) -> Result<(), String> {
+    let which = args.str_or("preset", "all");
+    args.reject_unknown()?;
+    let names: Vec<String> = if which == "all" {
+        PRESET_NAMES.iter().map(|s| s.to_string()).collect()
+    } else {
+        vec![which]
+    };
+    let mut table = Table::new("Table 3 (scaled presets; see DESIGN.md)", &CorpusStats::header());
+    for name in &names {
+        let corpus = preset(name)?;
+        table.row(CorpusStats::compute(&corpus).row());
+    }
+    table.print();
+    println!("\npaper's Table 3 (for reference):");
+    let mut paper = Table::new("Table 3 (paper)", &["dataset", "docs(I)", "vocab(J)", "tokens"]);
+    for &(name, i, j, w) in PAPER_TABLE3 {
+        paper.row(vec![name.into(), i.to_string(), j.to_string(), w.to_string()]);
+    }
+    paper.print();
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<(), String> {
+    let name = args.str_or("preset", "tiny");
+    let topics: usize = args.parse_or("topics", 128)?;
+    let sweeps: usize = args.parse_or("sweeps", 2)?;
+    args.reject_unknown()?;
+    let corpus = preset(&name)?;
+    let model = CostModel::calibrate(&corpus, Hyper::paper_default(topics), sweeps);
+    println!("calibrated on {name} (T={topics}): token_ns = {:.1}", model.token_ns);
+    println!("{model:#?}");
+    Ok(())
+}
+
+fn cmd_topics(args: &Args) -> Result<(), String> {
+    let opts = TrainOpts {
+        preset: args.str_or("preset", "tiny"),
+        topics: args.parse_or("topics", 16)?,
+        iters: args.parse_or("iters", 20)?,
+        eval: "rust".into(),
+        quiet: true,
+        ..Default::default()
+    };
+    let top: usize = args.parse_or("top", 8)?;
+    args.reject_unknown()?;
+    let corpus = preset(&opts.preset)?;
+    let res = train(&opts)?;
+    print!("{}", topics_mod::render_topics(&res.final_state, &corpus.vocab_words, top));
+    Ok(())
+}
+
+fn cmd_check_artifacts(args: &Args) -> Result<(), String> {
+    let topics: usize = args.parse_or("topics", 128)?;
+    args.reject_unknown()?;
+    let dir = default_artifact_dir();
+    if !artifacts_available(&dir) {
+        return Err("artifacts missing — run `make artifacts` first".into());
+    }
+    let corpus = preset("tiny")?;
+    let mut rng = Pcg32::seeded(0xA7);
+    let state = LdaState::init_random(&corpus, Hyper::paper_default(topics), &mut rng);
+    let rust_ll = lda::log_likelihood(&state);
+    let mut evaluator = LlEvaluator::new(&dir, topics)?;
+    let xla_ll = evaluator.log_likelihood(&state)?;
+    let rel = ((xla_ll - rust_ll) / rust_ll).abs();
+    println!("rust LL = {rust_ll:.6e}\nxla  LL = {xla_ll:.6e}\nrel diff = {rel:.3e}");
+    if rel > 1e-4 {
+        return Err(format!("XLA and Rust evaluators disagree (rel {rel:.3e})"));
+    }
+    println!("check-artifacts OK");
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! The Nomad parallel framework for LDA (paper §4, Algorithm 4).
+//!
+//! Decentralized, asynchronous, lock-free CGS built on two kinds of
+//! *nomadic tokens*:
+//!
+//! * **word tokens** `τ_j = (j, w_j)` — carry the *actual* topic-count row
+//!   of word j.  Ownership transfer means the row is always up to date and
+//!   never shared: no locks, no stale word counts.
+//! * **the global token** `τ_s = (0, s)` — carries the topic totals.  Each
+//!   worker keeps a local working copy `s_l` and a snapshot `s̄` from the
+//!   token's last visit; on arrival it folds its accumulated effort
+//!   `s ← s + (s_l − s̄)` and refreshes both copies.  Only these T values
+//!   are ever stale, and the staleness is bounded by one circulation.
+//!
+//! Documents are partitioned per worker ([`crate::corpus::Partition`]), so
+//! `d_i` state never moves.  The unit subtask `t_j` is "all occurrences of
+//! word j in my documents" — word-by-word F+LDA (decomposition (5)) with
+//! the F+tree over `q_t = (n_tw+β)/(s_l+β̄)`.
+//!
+//! Two execution engines share [`worker::WorkerState`]:
+//! * [`runtime`] — real `std::thread` workers + channels (the deployable
+//!   artifact; exercised with small p on this 1-core session);
+//! * [`crate::simnet`] — virtual-time discrete-event execution with a
+//!   calibrated cost model (reproduces the paper's 20-core and 32-node
+//!   figures; see DESIGN.md §Hardware-Adaptation).
+
+pub mod runtime;
+pub mod token;
+pub mod worker;
+
+pub use runtime::{NomadConfig, NomadRuntime};
+pub use token::{GlobalToken, WordToken};
+
+#[cfg(test)]
+mod tests {
+    use crate::corpus::presets::preset;
+    use crate::lda::state::Hyper;
+    use crate::lda::{log_likelihood, LdaState};
+    use crate::util::rng::Pcg32;
+
+    use super::runtime::{NomadConfig, NomadRuntime};
+
+    /// End-to-end: the threaded nomad runtime improves LL and its final
+    /// gathered state is count-consistent with the corpus.
+    #[test]
+    fn threaded_nomad_trains_tiny_corpus() {
+        let corpus = preset("tiny").unwrap();
+        let hyper = Hyper::paper_default(16);
+        let cfg = NomadConfig { workers: 3, seed: 99, ..Default::default() };
+        let mut rt = NomadRuntime::new(&corpus, hyper, cfg);
+        let ll0 = {
+            let state = rt.gather_state(&corpus);
+            state.check_consistency(&corpus).unwrap();
+            log_likelihood(&state)
+        };
+        rt.run_epochs(&corpus, 5);
+        let state = rt.gather_state(&corpus);
+        state.check_consistency(&corpus).unwrap();
+        let ll5 = log_likelihood(&state);
+        assert!(ll5 > ll0, "nomad LL did not improve: {ll0} -> {ll5}");
+        rt.shutdown();
+    }
+
+    /// Different worker counts converge to comparable quality (the
+    /// correctness half of Fig. 5c; the *speed* half runs in simnet).
+    #[test]
+    fn worker_count_does_not_change_quality() {
+        let corpus = preset("tiny").unwrap();
+        let hyper = Hyper::paper_default(8);
+        let mut lls = Vec::new();
+        for workers in [1usize, 2, 4] {
+            let cfg = NomadConfig { workers, seed: 5, ..Default::default() };
+            let mut rt = NomadRuntime::new(&corpus, hyper, cfg);
+            rt.run_epochs(&corpus, 12);
+            let state = rt.gather_state(&corpus);
+            state.check_consistency(&corpus).unwrap();
+            lls.push(log_likelihood(&state));
+            rt.shutdown();
+        }
+        let serial_ref = {
+            let mut rng = Pcg32::seeded(5);
+            let mut state = LdaState::init_random(&corpus, hyper, &mut rng);
+            let mut s = crate::lda::FLdaWord::new(&state, &corpus);
+            for _ in 0..12 {
+                crate::lda::Sweep::sweep(&mut s, &mut state, &corpus, &mut rng);
+            }
+            log_likelihood(&state)
+        };
+        for (i, &ll) in lls.iter().enumerate() {
+            assert!(
+                (ll - serial_ref).abs() / serial_ref.abs() < 0.03,
+                "workers={} ll={ll} vs serial {serial_ref}",
+                [1, 2, 4][i]
+            );
+        }
+    }
+}

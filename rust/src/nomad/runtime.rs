@@ -1,0 +1,379 @@
+//! Threaded Nomad runtime: real `std::thread` workers, unbounded mpsc
+//! channels, ring routing (worker l forwards to l+1 mod p).
+//!
+//! Epoch protocol (measurement boundaries only — *within* an epoch the
+//! system is fully asynchronous and lock-free, exactly Algorithm 4):
+//!
+//! 1. coordinator injects all J word tokens (round-robin) plus the global
+//!    token `τ_s`;
+//! 2. tokens hop the ring; a word token that has visited all p workers
+//!    returns home ([`Reply::WordDone`]); `τ_s` circulates
+//!    `S_CIRCULATIONS`× then returns;
+//! 3. coordinator sends `SyncS`; workers answer with their unfolded effort
+//!    `s_l − s̄`; the exact totals are `token.s + Σ deltas` (the fold
+//!    identity of §4.1);
+//! 4. coordinator broadcasts `SetS(exact)` — workers refresh `s_l`, `s̄`
+//!    and rebuild their F+tree base.
+//!
+//! The epoch boundary gives the *exact* count state the convergence curves
+//! evaluate; the paper measures per-iteration likelihood the same way.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::corpus::{Corpus, Partition};
+use crate::lda::state::{Hyper, LdaState, SparseCounts};
+use crate::util::rng::Pcg32;
+
+use super::token::{GlobalToken, Msg, Reply, WordToken};
+use super::worker::WorkerState;
+
+/// How many full ring circulations `τ_s` makes per epoch.
+pub const S_CIRCULATIONS: u32 = 4;
+
+/// Runtime configuration.
+#[derive(Clone, Debug)]
+pub struct NomadConfig {
+    pub workers: usize,
+    pub seed: u64,
+}
+
+impl Default for NomadConfig {
+    fn default() -> Self {
+        NomadConfig { workers: 2, seed: 0 }
+    }
+}
+
+/// Per-epoch statistics.
+#[derive(Clone, Copy, Debug)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub wall_secs: f64,
+    /// tokens resampled this epoch, summed over workers
+    pub processed: u64,
+}
+
+/// Coordinator handle for the threaded runtime.
+pub struct NomadRuntime {
+    senders: Vec<Sender<Msg>>,
+    replies: Receiver<Reply>,
+    handles: Vec<JoinHandle<()>>,
+    /// word tokens parked at the coordinator between epochs
+    home: Vec<WordToken>,
+    /// exact global totals between epochs
+    s: Vec<i64>,
+    /// vocabulary size (token count per epoch)
+    num_words: usize,
+    hyper: Hyper,
+    cfg: NomadConfig,
+    partition: Partition,
+    pub epochs_run: usize,
+    prev_processed: u64,
+    total_processed: u64,
+}
+
+impl NomadRuntime {
+    /// Build workers, distribute documents, park all word tokens at home.
+    pub fn new(corpus: &Corpus, hyper: Hyper, cfg: NomadConfig) -> Self {
+        assert!(cfg.workers >= 1);
+        let partition = Partition::by_tokens(corpus, cfg.workers);
+        let mut seed_rng = Pcg32::new(cfg.seed, 0x10AD);
+
+        // random init (same scheme as LdaState::init_random)
+        let mut nwt = vec![SparseCounts::default(); corpus.vocab];
+        let mut s = vec![0i64; hyper.t];
+        let mut all_z: Vec<Vec<u16>> = Vec::with_capacity(corpus.num_docs());
+        for doc in &corpus.docs {
+            let zs: Vec<u16> = doc
+                .iter()
+                .map(|&w| {
+                    let topic = seed_rng.below(hyper.t) as u16;
+                    nwt[w as usize].inc(topic);
+                    s[topic as usize] += 1;
+                    topic
+                })
+                .collect();
+            all_z.push(zs);
+        }
+        let home: Vec<WordToken> = nwt
+            .into_iter()
+            .enumerate()
+            .map(|(w, counts)| WordToken::new(w as u32, counts))
+            .collect();
+
+        // spawn workers
+        let (reply_tx, replies) = channel::<Reply>();
+        let mut senders = Vec::with_capacity(cfg.workers);
+        let mut receivers = Vec::with_capacity(cfg.workers);
+        for _ in 0..cfg.workers {
+            let (tx, rx) = channel::<Msg>();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        let mut handles = Vec::with_capacity(cfg.workers);
+        for (l, rx) in receivers.into_iter().enumerate() {
+            let (start, end) = partition.ranges[l];
+            let z_slice: Vec<Vec<u16>> = all_z[start..end].to_vec();
+            let state = WorkerState::new(
+                l,
+                cfg.workers,
+                corpus,
+                hyper,
+                start,
+                end,
+                z_slice,
+                s.clone(),
+                seed_rng.split(l as u64 + 1),
+            );
+            let next = senders[(l + 1) % cfg.workers].clone();
+            let reply = reply_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                worker_loop(state, rx, next, reply);
+            }));
+        }
+
+        let num_words = home.len();
+        NomadRuntime {
+            senders,
+            replies,
+            handles,
+            home,
+            s,
+            num_words,
+            hyper,
+            cfg,
+            partition,
+            epochs_run: 0,
+            prev_processed: 0,
+            total_processed: 0,
+        }
+    }
+
+    /// Run one fully-asynchronous epoch; returns wall time + throughput.
+    pub fn run_epoch(&mut self) -> EpochStats {
+        let p = self.cfg.workers;
+        let t0 = std::time::Instant::now();
+
+        // inject word tokens round-robin and the global token
+        let tokens: Vec<WordToken> = std::mem::take(&mut self.home);
+        for (i, mut tok) in tokens.into_iter().enumerate() {
+            tok.hops = 0;
+            self.senders[i % p].send(Msg::Word(tok)).expect("worker hung up");
+        }
+        self.senders[0]
+            .send(Msg::Global(GlobalToken::new(self.s.clone())))
+            .expect("worker hung up");
+
+        // collect everything home (every vocab word has a token, including
+        // zero-occurrence ones)
+        let expected_words = self.num_words;
+        let mut got_words = 0usize;
+        let mut global: Option<GlobalToken> = None;
+        let mut home = Vec::with_capacity(expected_words);
+        while got_words < expected_words || global.is_none() {
+            match self.replies.recv().expect("reply channel closed") {
+                Reply::WordDone(tok) => {
+                    home.push(tok);
+                    got_words += 1;
+                }
+                Reply::GlobalDone(tok) => global = Some(tok),
+                other => panic!("unexpected mid-epoch reply: {other:?}"),
+            }
+        }
+        home.sort_by_key(|t| t.word);
+        self.home = home;
+
+        // exact fold: s = token.s + Σ_l (s_l − s̄_l)
+        let mut s = global.unwrap().s;
+        for tx in &self.senders {
+            tx.send(Msg::SyncS).expect("worker hung up");
+        }
+        let mut processed = 0u64;
+        for _ in 0..p {
+            match self.replies.recv().expect("reply channel closed") {
+                Reply::SDelta { delta, tokens_processed, .. } => {
+                    for (acc, d) in s.iter_mut().zip(delta) {
+                        *acc += d;
+                    }
+                    processed += tokens_processed;
+                }
+                other => panic!("expected SDelta, got {other:?}"),
+            }
+        }
+        for tx in &self.senders {
+            tx.send(Msg::SetS(s.clone())).expect("worker hung up");
+        }
+        self.s = s;
+        self.epochs_run += 1;
+        let delta_processed = processed - self.prev_processed;
+        self.prev_processed = processed;
+        self.total_processed = processed;
+        EpochStats {
+            epoch: self.epochs_run,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            processed: delta_processed,
+        }
+    }
+
+    /// Run several epochs back to back.
+    pub fn run_epochs(&mut self, _corpus: &Corpus, n: usize) -> Vec<EpochStats> {
+        (0..n).map(|_| self.run_epoch()).collect()
+    }
+
+    /// Assemble the exact global [`LdaState`] (epoch boundaries only).
+    pub fn gather_state(&mut self, corpus: &Corpus) -> LdaState {
+        // doc-side state from every worker
+        for tx in &self.senders {
+            tx.send(Msg::ReportDocs).expect("worker hung up");
+        }
+        let mut z: Vec<Vec<u16>> = vec![Vec::new(); corpus.num_docs()];
+        let mut ntd: Vec<SparseCounts> = vec![SparseCounts::default(); corpus.num_docs()];
+        for _ in 0..self.cfg.workers {
+            match self.replies.recv().expect("reply channel closed") {
+                Reply::Docs { start_doc, ntd: worker_ntd, z: worker_z, .. } => {
+                    for (off, (counts, zs)) in
+                        worker_ntd.into_iter().zip(worker_z).enumerate()
+                    {
+                        ntd[start_doc + off] = counts;
+                        z[start_doc + off] = zs;
+                    }
+                }
+                other => panic!("expected Docs, got {other:?}"),
+            }
+        }
+        // word-side from the home tokens, totals from the exact fold
+        let mut nwt = vec![SparseCounts::default(); corpus.vocab];
+        for tok in &self.home {
+            nwt[tok.word as usize] = tok.counts.clone();
+        }
+        let nt: Vec<u32> = self.s.iter().map(|&v| u32::try_from(v.max(0)).unwrap()).collect();
+        LdaState { hyper: self.hyper, vocab: corpus.vocab, z, ntd, nwt, nt }
+    }
+
+    /// Total tokens resampled since construction.
+    pub fn throughput_total(&self) -> u64 {
+        self.total_processed
+    }
+
+    /// Document partition in use (telemetry).
+    pub fn partition(&self) -> &Partition {
+        &self.partition
+    }
+
+    /// Stop all workers and join their threads.
+    pub fn shutdown(&mut self) {
+        for tx in &self.senders {
+            let _ = tx.send(Msg::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NomadRuntime {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Worker thread body.
+fn worker_loop(
+    mut state: WorkerState,
+    rx: Receiver<Msg>,
+    next: Sender<Msg>,
+    reply: Sender<Reply>,
+) {
+    let p = state.num_workers as u32;
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Word(mut tok) => {
+                state.process_word_token(&mut tok);
+                tok.hops += 1;
+                if tok.hops >= p {
+                    let _ = reply.send(Reply::WordDone(tok));
+                } else {
+                    let _ = next.send(Msg::Word(tok));
+                }
+            }
+            Msg::Global(mut tok) => {
+                state.process_global_token(&mut tok);
+                tok.hops += 1;
+                if tok.hops >= p * S_CIRCULATIONS {
+                    let _ = reply.send(Reply::GlobalDone(tok));
+                } else {
+                    let _ = next.send(Msg::Global(tok));
+                }
+            }
+            Msg::SyncS => {
+                let delta = state.take_s_delta();
+                let _ = reply.send(Reply::SDelta {
+                    worker: state.id,
+                    delta,
+                    tokens_processed: state.processed,
+                });
+            }
+            Msg::SetS(s) => state.set_s(&s),
+            Msg::ReportDocs => {
+                let _ = reply.send(Reply::Docs {
+                    worker: state.id,
+                    start_doc: state.start_doc,
+                    ntd: state.ntd.clone(),
+                    z: state.z.clone(),
+                });
+            }
+            Msg::Stop => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::presets::preset;
+
+    #[test]
+    fn epoch_returns_all_tokens_home() {
+        let corpus = preset("tiny").unwrap();
+        let mut rt = NomadRuntime::new(&corpus, Hyper::paper_default(8), NomadConfig {
+            workers: 2,
+            seed: 3,
+        });
+        assert_eq!(rt.home.len(), corpus.vocab);
+        let stats = rt.run_epoch();
+        assert_eq!(rt.home.len(), corpus.vocab);
+        // each occurrence lives in exactly one worker's partition → every
+        // token is resampled exactly once per epoch
+        assert_eq!(stats.processed as usize, corpus.num_tokens());
+        rt.shutdown();
+    }
+
+    #[test]
+    fn totals_remain_exact_across_epochs() {
+        let corpus = preset("tiny").unwrap();
+        let mut rt = NomadRuntime::new(&corpus, Hyper::paper_default(8), NomadConfig {
+            workers: 3,
+            seed: 4,
+        });
+        for _ in 0..3 {
+            rt.run_epoch();
+        }
+        let total: i64 = rt.s.iter().sum();
+        assert_eq!(total as usize, corpus.num_tokens());
+        let state = rt.gather_state(&corpus);
+        state.check_consistency(&corpus).unwrap();
+        rt.shutdown();
+    }
+
+    #[test]
+    fn single_worker_matches_corpus_mass() {
+        let corpus = preset("tiny").unwrap();
+        let mut rt = NomadRuntime::new(&corpus, Hyper::paper_default(8), NomadConfig {
+            workers: 1,
+            seed: 5,
+        });
+        let stats = rt.run_epoch();
+        assert_eq!(stats.processed as usize, corpus.num_tokens());
+        rt.shutdown();
+    }
+}

@@ -1,0 +1,62 @@
+//! Nomadic tokens (§4.1): the only objects that ever cross worker
+//! boundaries.  A word token owns its count row — there is no other copy
+//! anywhere in the system, which is what makes the scheme lock-free *and*
+//! fresh.
+
+use crate::lda::SparseCounts;
+
+/// `τ_j = (j, w_j)`: word id + the authoritative topic-count row.
+#[derive(Clone, Debug)]
+pub struct WordToken {
+    pub word: u32,
+    /// n_{·,*,w}: the word's topic counts (owned; always current)
+    pub counts: SparseCounts,
+    /// workers visited in the current epoch
+    pub hops: u32,
+}
+
+impl WordToken {
+    pub fn new(word: u32, counts: SparseCounts) -> Self {
+        WordToken { word, counts, hops: 0 }
+    }
+}
+
+/// `τ_s = (0, s)`: the circulating global topic totals.
+#[derive(Clone, Debug)]
+pub struct GlobalToken {
+    pub s: Vec<i64>,
+    pub hops: u32,
+}
+
+impl GlobalToken {
+    pub fn new(s: Vec<i64>) -> Self {
+        GlobalToken { s, hops: 0 }
+    }
+}
+
+/// Messages a worker can receive.
+#[derive(Debug)]
+pub enum Msg {
+    Word(WordToken),
+    Global(GlobalToken),
+    /// epoch-boundary: fold `s_l − s̄` and reply with the delta
+    SyncS,
+    /// epoch-boundary: adopt the reduced global totals
+    SetS(Vec<i64>),
+    /// request a snapshot of the worker's doc-side state
+    ReportDocs,
+    Stop,
+}
+
+/// Replies a worker sends to the coordinator.
+#[derive(Debug)]
+pub enum Reply {
+    /// a word token that completed its circulation this epoch
+    WordDone(WordToken),
+    /// the global token absorbed at epoch end
+    GlobalDone(GlobalToken),
+    /// SyncS answer: accumulated local effort since the last snapshot
+    SDelta { worker: usize, delta: Vec<i64>, tokens_processed: u64 },
+    /// ReportDocs answer: sparse doc-topic rows for the worker's range
+    Docs { worker: usize, start_doc: usize, ntd: Vec<SparseCounts>, z: Vec<Vec<u16>> },
+}

@@ -1,0 +1,373 @@
+//! Worker-local state and the token-processing kernel (Algorithm 4 body).
+//!
+//! A worker owns a contiguous document range: the assignments `z`, the
+//! doc-topic counts `n_td` for those docs, a local copy `s_l` of the topic
+//! totals, the snapshot `s̄` from the global token's last visit, and an
+//! F+tree over `q_t = (n_tw+β)/(s_l+β̄)` for the word currently being
+//! processed.  The same struct runs under real threads
+//! ([`super::runtime`]) and under virtual time ([`crate::simnet`]).
+
+use crate::corpus::Corpus;
+use crate::lda::state::{Hyper, SparseCounts};
+use crate::sampler::bsearch::SparseCumSum;
+use crate::sampler::ftree::FTree;
+use crate::sampler::DiscreteSampler;
+use crate::util::rng::Pcg32;
+
+use super::token::{GlobalToken, WordToken};
+
+/// Per-worker occurrence index: word -> (local doc, position) pairs.
+#[derive(Clone, Debug)]
+pub struct LocalWordIndex {
+    doc_of: Vec<u32>,
+    pos_of: Vec<u32>,
+    offsets: Vec<usize>,
+}
+
+impl LocalWordIndex {
+    /// Build over the worker's doc range [start, end).
+    pub fn build(corpus: &Corpus, start: usize, end: usize) -> Self {
+        let vocab = corpus.vocab;
+        let mut counts = vec![0usize; vocab + 1];
+        for doc in &corpus.docs[start..end] {
+            for &w in doc {
+                counts[w as usize + 1] += 1;
+            }
+        }
+        for j in 1..counts.len() {
+            counts[j] += counts[j - 1];
+        }
+        let offsets = counts.clone();
+        let total = *offsets.last().unwrap();
+        let mut doc_of = vec![0u32; total];
+        let mut pos_of = vec![0u32; total];
+        let mut cursor = offsets.clone();
+        for (local, doc) in corpus.docs[start..end].iter().enumerate() {
+            for (p, &w) in doc.iter().enumerate() {
+                let at = cursor[w as usize];
+                doc_of[at] = local as u32;
+                pos_of[at] = p as u32;
+                cursor[w as usize] += 1;
+            }
+        }
+        LocalWordIndex { doc_of, pos_of, offsets }
+    }
+
+    #[inline]
+    pub fn occurrences(&self, word: usize) -> (&[u32], &[u32]) {
+        let lo = self.offsets[word];
+        let hi = self.offsets[word + 1];
+        (&self.doc_of[lo..hi], &self.pos_of[lo..hi])
+    }
+
+    pub fn count(&self, word: usize) -> usize {
+        self.offsets[word + 1] - self.offsets[word]
+    }
+}
+
+/// All state owned by one nomad worker.
+pub struct WorkerState {
+    pub id: usize,
+    pub num_workers: usize,
+    pub hyper: Hyper,
+    pub vocab: usize,
+    /// global doc id of local doc 0
+    pub start_doc: usize,
+    /// z and n_td for the local docs
+    pub z: Vec<Vec<u16>>,
+    pub ntd: Vec<SparseCounts>,
+    /// local topic totals s_l (authoritative for this worker's sampling)
+    pub s_local: Vec<i64>,
+    /// snapshot s̄ from the global token's last visit
+    pub s_snap: Vec<i64>,
+    /// F+tree over the current word's q (base = β/(s_l+β̄) elsewhere)
+    tree: FTree,
+    r: SparseCumSum,
+    index: LocalWordIndex,
+    pub rng: Pcg32,
+    /// tokens resampled since start (throughput metric)
+    pub processed: u64,
+}
+
+impl WorkerState {
+    /// Initialize from a corpus slice with the given initial assignments
+    /// (z rows for [start, end)) and the *global* initial topic totals.
+    pub fn new(
+        id: usize,
+        num_workers: usize,
+        corpus: &Corpus,
+        hyper: Hyper,
+        start: usize,
+        end: usize,
+        z: Vec<Vec<u16>>,
+        s_init: Vec<i64>,
+        rng: Pcg32,
+    ) -> Self {
+        assert_eq!(z.len(), end - start);
+        let mut ntd = Vec::with_capacity(end - start);
+        for zs in &z {
+            let mut counts = SparseCounts::with_capacity(zs.len().min(hyper.t));
+            for &topic in zs {
+                counts.inc(topic);
+            }
+            ntd.push(counts);
+        }
+        let t = hyper.t;
+        let mut w = WorkerState {
+            id,
+            num_workers,
+            hyper,
+            vocab: corpus.vocab,
+            start_doc: start,
+            z,
+            ntd,
+            s_local: s_init.clone(),
+            s_snap: s_init,
+            tree: FTree::with_capacity(&vec![0.0; t], t),
+            r: SparseCumSum::with_capacity(64),
+            index: LocalWordIndex::build(corpus, start, end),
+            rng,
+            processed: 0,
+        };
+        w.rebuild_tree();
+        w
+    }
+
+    /// Rebuild the F+tree to the base value β/(s_l+β̄) for every topic.
+    pub fn rebuild_tree(&mut self) {
+        let bb = self.hyper.betabar(self.vocab);
+        let beta = self.hyper.beta;
+        let base: Vec<f64> = self
+            .s_local
+            .iter()
+            .map(|&n| beta / (n.max(0) as f64 + bb))
+            .collect();
+        self.tree.refill(&base);
+    }
+
+    #[inline]
+    fn q_value(&self, counts: &SparseCounts, t: u16) -> f64 {
+        let bb = self.hyper.betabar(self.vocab);
+        (counts.get(t) as f64 + self.hyper.beta)
+            / (self.s_local[t as usize].max(0) as f64 + bb)
+    }
+
+    /// Execute subtask `t_j` on this worker: resample every local
+    /// occurrence of the token's word.  The token's count row is the
+    /// authoritative n_wt and is updated in place.  Returns the number of
+    /// occurrences processed.
+    pub fn process_word_token(&mut self, tok: &mut WordToken) -> usize {
+        let word = tok.word as usize;
+        let alpha = self.hyper.alpha;
+        let (docs, poss) = {
+            let (d, p) = self.index.occurrences(word);
+            (d.to_vec(), p.to_vec())
+        };
+        if docs.is_empty() {
+            return 0;
+        }
+
+        // raise the tree on the word's support
+        let support: Vec<u16> = tok.counts.iter().map(|(t, _)| t).collect();
+        for &t in &support {
+            let v = self.q_value(&tok.counts, t);
+            self.tree.set(t as usize, v);
+        }
+
+        for (&doc, &pos) in docs.iter().zip(&poss) {
+            let (doc, pos) = (doc as usize, pos as usize);
+            let old = self.z[doc][pos];
+            // remove from the three aggregates (ntd local, row in token,
+            // totals in s_l)
+            self.ntd[doc].dec(old);
+            tok.counts.dec(old);
+            self.s_local[old as usize] -= 1;
+            let v = self.q_value(&tok.counts, old);
+            self.tree.set(old as usize, v);
+
+            // sparse r over the doc's support
+            self.r.clear();
+            for (t, c) in self.ntd[doc].iter() {
+                self.r.push(t as u32, c as f64 * self.tree.leaf(t as usize));
+            }
+            let r_total = self.r.total();
+
+            let u = self.rng.uniform(alpha * self.tree.total() + r_total);
+            let new = if u < r_total {
+                self.r.sample(u) as u16
+            } else {
+                self.tree.sample((u - r_total) / alpha) as u16
+            };
+
+            self.ntd[doc].inc(new);
+            tok.counts.inc(new);
+            self.s_local[new as usize] += 1;
+            let v = self.q_value(&tok.counts, new);
+            self.tree.set(new as usize, v);
+            self.z[doc][pos] = new;
+        }
+
+        // lower back to base on the final support
+        let bb = self.hyper.betabar(self.vocab);
+        let beta = self.hyper.beta;
+        let support: Vec<u16> = tok.counts.iter().map(|(t, _)| t).collect();
+        for &t in &support {
+            self.tree.set(
+                t as usize,
+                beta / (self.s_local[t as usize].max(0) as f64 + bb),
+            );
+        }
+        self.processed += docs.len() as u64;
+        docs.len()
+    }
+
+    /// τ_s arrival (Algorithm 4): fold local effort into the token,
+    /// refresh both local copies, rebuild the tree base.
+    pub fn process_global_token(&mut self, tok: &mut GlobalToken) {
+        for t in 0..self.hyper.t {
+            tok.s[t] += self.s_local[t] - self.s_snap[t];
+        }
+        self.s_local.copy_from_slice(&tok.s);
+        self.s_snap.copy_from_slice(&tok.s);
+        self.rebuild_tree();
+    }
+
+    /// Epoch-boundary fold: return `s_l − s̄` and advance the snapshot.
+    pub fn take_s_delta(&mut self) -> Vec<i64> {
+        let delta: Vec<i64> = self
+            .s_local
+            .iter()
+            .zip(&self.s_snap)
+            .map(|(&l, &s)| l - s)
+            .collect();
+        self.s_snap.copy_from_slice(&self.s_local);
+        delta
+    }
+
+    /// Epoch-boundary adopt: set both copies to the reduced totals.
+    pub fn set_s(&mut self, s: &[i64]) {
+        self.s_local.copy_from_slice(s);
+        self.s_snap.copy_from_slice(s);
+        self.rebuild_tree();
+    }
+
+    /// Number of local occurrences of `word` (DES cost model input).
+    pub fn occurrence_count(&self, word: usize) -> usize {
+        self.index.count(word)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::presets::preset;
+
+    fn setup() -> (Corpus, WorkerState, Vec<WordToken>) {
+        let corpus = preset("tiny").unwrap();
+        let hyper = Hyper::paper_default(8);
+        let mut rng = Pcg32::seeded(1);
+        // single worker owning everything
+        let mut z = Vec::new();
+        let mut nwt = vec![SparseCounts::default(); corpus.vocab];
+        let mut s = vec![0i64; hyper.t];
+        for doc in &corpus.docs {
+            let zs: Vec<u16> = doc
+                .iter()
+                .map(|&w| {
+                    let topic = rng.below(hyper.t) as u16;
+                    nwt[w as usize].inc(topic);
+                    s[topic as usize] += 1;
+                    topic
+                })
+                .collect();
+            z.push(zs);
+        }
+        let worker = WorkerState::new(
+            0,
+            1,
+            &corpus,
+            hyper,
+            0,
+            corpus.num_docs(),
+            z,
+            s,
+            Pcg32::seeded(2),
+        );
+        let tokens: Vec<WordToken> = nwt
+            .into_iter()
+            .enumerate()
+            .map(|(w, c)| WordToken::new(w as u32, c))
+            .collect();
+        (corpus, worker, tokens)
+    }
+
+    #[test]
+    fn word_token_processing_preserves_mass() {
+        let (_corpus, mut w, mut tokens) = setup();
+        let total_before: i64 = w.s_local.iter().sum();
+        let mut processed = 0;
+        for tok in &mut tokens {
+            processed += w.process_word_token(tok);
+        }
+        assert_eq!(processed as i64, total_before);
+        let total_after: i64 = w.s_local.iter().sum();
+        assert_eq!(total_before, total_after);
+        // token rows still sum to the totals
+        let mut from_tokens = vec![0i64; 8];
+        for tok in &tokens {
+            for (t, c) in tok.counts.iter() {
+                from_tokens[t as usize] += c as i64;
+            }
+        }
+        assert_eq!(from_tokens, w.s_local);
+    }
+
+    #[test]
+    fn global_token_folds_and_resets() {
+        let (_corpus, mut w, mut tokens) = setup();
+        let mut gt = GlobalToken::new(w.s_local.clone());
+        // do some work, then fold
+        for tok in tokens.iter_mut().take(10) {
+            w.process_word_token(tok);
+        }
+        let mass_before: i64 = gt.s.iter().sum();
+        w.process_global_token(&mut gt);
+        // totals mass unchanged (moves between topics only)
+        assert_eq!(gt.s.iter().sum::<i64>(), mass_before);
+        assert_eq!(w.s_local, gt.s);
+        assert_eq!(w.s_snap, gt.s);
+        // a second fold with no work in between is a no-op
+        let snapshot = gt.s.clone();
+        w.process_global_token(&mut gt);
+        assert_eq!(gt.s, snapshot);
+    }
+
+    #[test]
+    fn s_delta_epoch_fold() {
+        let (_corpus, mut w, mut tokens) = setup();
+        for tok in tokens.iter_mut() {
+            w.process_word_token(tok);
+        }
+        let delta = w.take_s_delta();
+        assert_eq!(delta.iter().sum::<i64>(), 0, "mass-conserving delta");
+        // snapshot advanced → immediate second delta is zero
+        assert!(w.take_s_delta().iter().all(|&d| d == 0));
+    }
+
+    #[test]
+    fn tree_base_tracks_s_local() {
+        let (_corpus, mut w, mut tokens) = setup();
+        for tok in tokens.iter_mut() {
+            w.process_word_token(tok);
+        }
+        let bb = w.hyper.betabar(w.vocab);
+        for t in 0..8 {
+            let want = w.hyper.beta / (w.s_local[t].max(0) as f64 + bb);
+            let got = w.tree.leaf(t);
+            assert!(
+                (got - want).abs() < 1e-12,
+                "leaf {t}: {got} vs {want}"
+            );
+        }
+    }
+}

@@ -1,0 +1,229 @@
+//! Parameter-server LDA — the Yahoo! LDA (Smola & Narayanamurthy, VLDB'10)
+//! baseline of §4.2 and Figs. 5–6.
+//!
+//! Architecture being modeled: a central server holds the authoritative
+//! `n_wt` and `n_t`; every worker keeps a *cached local copy* of the rows
+//! it needs, samples its documents against the (possibly stale) cache,
+//! and asynchronously pushes accumulated deltas / pulls fresh values.
+//! Both the word counts *and* the totals used by the sampler can be stale
+//! — the contrast the paper draws with Nomad, where `n_wt` is always
+//! exact and only `n_t` is bounded-stale.
+//!
+//! * threads mode (this module): workers are real threads; pull/push
+//!   granularity is [`PsConfig::batch_docs`] documents.  On this 1-core
+//!   session it validates semantics; contention/latency effects are
+//!   reproduced in [`crate::simnet`].
+//! * "disk" flavor (Fig. 5/6's Yahoo!LDA(D)) exists only in the simulator,
+//!   as a per-token streaming time surcharge.
+
+pub mod server;
+pub mod worker;
+
+pub use server::PsServer;
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::corpus::{Corpus, Partition};
+use crate::lda::state::{Hyper, LdaState, SparseCounts};
+use crate::util::rng::Pcg32;
+
+use worker::{PsWorkerMsg, PsWorkerReply, PsWorkerState};
+
+/// Parameter-server runtime configuration.
+#[derive(Clone, Debug)]
+pub struct PsConfig {
+    pub workers: usize,
+    pub seed: u64,
+    /// pull/push cadence in documents (1 = chatty, large = very stale)
+    pub batch_docs: usize,
+}
+
+impl Default for PsConfig {
+    fn default() -> Self {
+        PsConfig { workers: 2, seed: 0, batch_docs: 8 }
+    }
+}
+
+/// Per-epoch stats (mirrors the nomad runtime's).
+#[derive(Clone, Copy, Debug)]
+pub struct PsEpochStats {
+    pub epoch: usize,
+    pub wall_secs: f64,
+    pub processed: u64,
+    /// pushes+pulls this epoch (server traffic)
+    pub server_ops: u64,
+}
+
+/// Coordinator handle.
+pub struct PsRuntime {
+    server: Arc<PsServer>,
+    senders: Vec<Sender<PsWorkerMsg>>,
+    replies: Receiver<PsWorkerReply>,
+    handles: Vec<JoinHandle<()>>,
+    hyper: Hyper,
+    cfg: PsConfig,
+    pub epochs_run: usize,
+}
+
+impl PsRuntime {
+    pub fn new(corpus: &Corpus, hyper: Hyper, cfg: PsConfig) -> Self {
+        assert!(cfg.workers >= 1);
+        let partition = Partition::by_tokens(corpus, cfg.workers);
+        let mut seed_rng = Pcg32::new(cfg.seed, 0x9A9A);
+
+        // random init shared with the server
+        let mut nwt = vec![SparseCounts::default(); corpus.vocab];
+        let mut nt = vec![0i64; hyper.t];
+        let mut all_z: Vec<Vec<u16>> = Vec::with_capacity(corpus.num_docs());
+        for doc in &corpus.docs {
+            let zs: Vec<u16> = doc
+                .iter()
+                .map(|&w| {
+                    let topic = seed_rng.below(hyper.t) as u16;
+                    nwt[w as usize].inc(topic);
+                    nt[topic as usize] += 1;
+                    topic
+                })
+                .collect();
+            all_z.push(zs);
+        }
+        let server = Arc::new(PsServer::new(nwt, nt));
+
+        let (reply_tx, replies) = channel();
+        let mut senders = Vec::new();
+        let mut handles = Vec::new();
+        for l in 0..cfg.workers {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            let (start, end) = partition.ranges[l];
+            let state = PsWorkerState::new(
+                l,
+                corpus,
+                hyper,
+                start,
+                end,
+                all_z[start..end].to_vec(),
+                cfg.batch_docs,
+                seed_rng.split(l as u64 + 1),
+            );
+            let server = Arc::clone(&server);
+            let reply = reply_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                worker::worker_loop(state, server, rx, reply);
+            }));
+        }
+
+        PsRuntime { server, senders, replies, handles, hyper, cfg, epochs_run: 0 }
+    }
+
+    /// One pass of every worker over its documents (concurrent).
+    pub fn run_epoch(&mut self) -> PsEpochStats {
+        let t0 = std::time::Instant::now();
+        for tx in &self.senders {
+            tx.send(PsWorkerMsg::RunEpoch).expect("ps worker hung up");
+        }
+        let mut processed = 0;
+        let mut server_ops = 0;
+        for _ in 0..self.cfg.workers {
+            match self.replies.recv().expect("ps reply channel closed") {
+                PsWorkerReply::EpochDone { processed: p, server_ops: o, .. } => {
+                    processed += p;
+                    server_ops += o;
+                }
+                other => panic!("expected EpochDone, got {other:?}"),
+            }
+        }
+        self.epochs_run += 1;
+        PsEpochStats {
+            epoch: self.epochs_run,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            processed,
+            server_ops,
+        }
+    }
+
+    pub fn run_epochs(&mut self, n: usize) -> Vec<PsEpochStats> {
+        (0..n).map(|_| self.run_epoch()).collect()
+    }
+
+    /// Exact global state (between epochs the server is authoritative).
+    pub fn gather_state(&mut self, corpus: &Corpus) -> LdaState {
+        for tx in &self.senders {
+            tx.send(PsWorkerMsg::ReportDocs).expect("ps worker hung up");
+        }
+        let mut z: Vec<Vec<u16>> = vec![Vec::new(); corpus.num_docs()];
+        let mut ntd: Vec<SparseCounts> = vec![SparseCounts::default(); corpus.num_docs()];
+        for _ in 0..self.cfg.workers {
+            match self.replies.recv().expect("ps reply channel closed") {
+                PsWorkerReply::Docs { start_doc, ntd: wn, z: wz, .. } => {
+                    for (off, (counts, zs)) in wn.into_iter().zip(wz).enumerate() {
+                        ntd[start_doc + off] = counts;
+                        z[start_doc + off] = zs;
+                    }
+                }
+                other => panic!("expected Docs, got {other:?}"),
+            }
+        }
+        let (nwt, nt) = self.server.snapshot();
+        let nt: Vec<u32> = nt.iter().map(|&v| u32::try_from(v.max(0)).unwrap()).collect();
+        LdaState { hyper: self.hyper, vocab: corpus.vocab, z, ntd, nwt, nt }
+    }
+
+    pub fn shutdown(&mut self) {
+        for tx in &self.senders {
+            let _ = tx.send(PsWorkerMsg::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for PsRuntime {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::presets::preset;
+    use crate::lda::log_likelihood;
+
+    #[test]
+    fn ps_trains_and_stays_consistent() {
+        let corpus = preset("tiny").unwrap();
+        let mut rt = PsRuntime::new(&corpus, Hyper::paper_default(16), PsConfig {
+            workers: 3,
+            seed: 11,
+            batch_docs: 4,
+        });
+        let ll0 = log_likelihood(&rt.gather_state(&corpus));
+        let stats = rt.run_epochs(6);
+        assert!(stats.iter().all(|s| s.processed as usize == corpus.num_tokens()));
+        assert!(stats[0].server_ops > 0);
+        let state = rt.gather_state(&corpus);
+        state.check_consistency(&corpus).unwrap();
+        assert!(log_likelihood(&state) > ll0);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn staleness_grows_with_batch_size_but_still_converges() {
+        let corpus = preset("tiny").unwrap();
+        for batch in [1usize, 64] {
+            let mut rt = PsRuntime::new(&corpus, Hyper::paper_default(8), PsConfig {
+                workers: 2,
+                seed: 12,
+                batch_docs: batch,
+            });
+            rt.run_epochs(10);
+            let state = rt.gather_state(&corpus);
+            state.check_consistency(&corpus).unwrap();
+            rt.shutdown();
+        }
+    }
+}

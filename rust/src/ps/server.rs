@@ -1,0 +1,136 @@
+//! The central parameter server: authoritative `n_wt` rows + `n_t` totals
+//! behind striped locks (row stripes for the word matrix, one stripe for
+//! the totals) — the coarse architecture of Yahoo! LDA's ICE store.
+
+use std::sync::Mutex;
+
+use crate::lda::state::SparseCounts;
+
+/// Number of row stripes (locks) over the word-topic matrix.
+pub const STRIPES: usize = 64;
+
+/// Server-side count store.
+pub struct PsServer {
+    /// word-topic rows, striped by `word % STRIPES`
+    rows: Vec<Mutex<Vec<SparseCounts>>>,
+    /// stripe-to-word mapping: stripe s holds words {w : w % STRIPES == s},
+    /// in increasing order; index within stripe = w / STRIPES
+    vocab: usize,
+    nt: Mutex<Vec<i64>>,
+    /// push/pull counters (telemetry)
+    ops: Mutex<u64>,
+}
+
+impl PsServer {
+    pub fn new(nwt: Vec<SparseCounts>, nt: Vec<i64>) -> Self {
+        let vocab = nwt.len();
+        let mut stripes: Vec<Vec<SparseCounts>> = (0..STRIPES).map(|_| Vec::new()).collect();
+        for (w, counts) in nwt.into_iter().enumerate() {
+            stripes[w % STRIPES].push(counts);
+        }
+        PsServer {
+            rows: stripes.into_iter().map(Mutex::new).collect(),
+            vocab,
+            nt: Mutex::new(nt),
+            ops: Mutex::new(0),
+        }
+    }
+
+    /// Pull fresh copies of the given rows (sorted word ids) + totals.
+    pub fn pull(&self, words: &[u32]) -> (Vec<SparseCounts>, Vec<i64>) {
+        let mut out = Vec::with_capacity(words.len());
+        for &w in words {
+            let stripe = self.rows[w as usize % STRIPES].lock().unwrap();
+            out.push(stripe[w as usize / STRIPES].clone());
+        }
+        let nt = self.nt.lock().unwrap().clone();
+        *self.ops.lock().unwrap() += 1;
+        (out, nt)
+    }
+
+    /// Push per-word topic deltas and total deltas.
+    pub fn push(&self, word_deltas: &[(u32, Vec<(u16, i32)>)], nt_delta: &[i64]) {
+        for (w, deltas) in word_deltas {
+            let mut stripe = self.rows[*w as usize % STRIPES].lock().unwrap();
+            let row = &mut stripe[*w as usize / STRIPES];
+            for &(t, d) in deltas {
+                match d.cmp(&0) {
+                    std::cmp::Ordering::Greater => {
+                        for _ in 0..d {
+                            row.inc(t);
+                        }
+                    }
+                    std::cmp::Ordering::Less => {
+                        for _ in 0..(-d) {
+                            row.dec(t);
+                        }
+                    }
+                    std::cmp::Ordering::Equal => {}
+                }
+            }
+        }
+        let mut nt = self.nt.lock().unwrap();
+        for (acc, &d) in nt.iter_mut().zip(nt_delta) {
+            *acc += d;
+        }
+        *self.ops.lock().unwrap() += 1;
+    }
+
+    /// Full snapshot (coordinator, between epochs).
+    pub fn snapshot(&self) -> (Vec<SparseCounts>, Vec<i64>) {
+        let mut nwt = vec![SparseCounts::default(); self.vocab];
+        for (s, stripe) in self.rows.iter().enumerate() {
+            let stripe = stripe.lock().unwrap();
+            for (i, counts) in stripe.iter().enumerate() {
+                nwt[i * STRIPES + s] = counts.clone();
+            }
+        }
+        (nwt, self.nt.lock().unwrap().clone())
+    }
+
+    pub fn ops(&self) -> u64 {
+        *self.ops.lock().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn server(vocab: usize, t: usize) -> PsServer {
+        PsServer::new(vec![SparseCounts::default(); vocab], vec![0; t])
+    }
+
+    #[test]
+    fn push_pull_roundtrip() {
+        let s = server(100, 8);
+        s.push(&[(7, vec![(2, 3)]), (99, vec![(0, 1)])], &[1, 0, 3, 0, 0, 0, 0, 0]);
+        let (rows, nt) = s.pull(&[7, 99, 50]);
+        assert_eq!(rows[0].get(2), 3);
+        assert_eq!(rows[1].get(0), 1);
+        assert!(rows[2].is_empty());
+        assert_eq!(nt, vec![1, 0, 3, 0, 0, 0, 0, 0]);
+        assert_eq!(s.ops(), 2);
+    }
+
+    #[test]
+    fn negative_deltas_remove() {
+        let s = server(10, 4);
+        s.push(&[(3, vec![(1, 2)])], &[0, 2, 0, 0]);
+        s.push(&[(3, vec![(1, -1)])], &[0, -1, 0, 0]);
+        let (rows, nt) = s.pull(&[3]);
+        assert_eq!(rows[0].get(1), 1);
+        assert_eq!(nt[1], 1);
+    }
+
+    #[test]
+    fn snapshot_covers_all_words() {
+        let s = server(130, 4); // > STRIPES, uneven
+        s.push(&[(0, vec![(0, 1)]), (129, vec![(3, 2)])], &[1, 0, 0, 2]);
+        let (nwt, nt) = s.snapshot();
+        assert_eq!(nwt.len(), 130);
+        assert_eq!(nwt[0].get(0), 1);
+        assert_eq!(nwt[129].get(3), 2);
+        assert_eq!(nt[3], 2);
+    }
+}

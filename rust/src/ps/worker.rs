@@ -1,0 +1,322 @@
+//! Parameter-server worker: samples its document partition against cached
+//! (stale) server state, batching pulls and pushes.
+//!
+//! The sampler is doc-major F+LDA (decomposition (4)) over the cached
+//! counts — same per-token asymptotics as the nomad workers, so wall-clock
+//! and simulated comparisons isolate the *coordination* difference, not a
+//! sampler difference (the paper does the same by comparing against
+//! SparseLDA-based Yahoo! LDA at matched sampling cost).
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+use crate::corpus::Corpus;
+use crate::lda::state::{Hyper, SparseCounts};
+use crate::sampler::bsearch::SparseCumSum;
+use crate::sampler::ftree::FTree;
+use crate::sampler::DiscreteSampler;
+use crate::util::rng::Pcg32;
+
+use super::server::PsServer;
+
+/// Signed per-topic delta accumulator (sorted sparse).
+#[derive(Clone, Debug, Default)]
+pub struct SignedCounts {
+    pairs: Vec<(u16, i32)>,
+}
+
+impl SignedCounts {
+    #[inline]
+    pub fn add(&mut self, topic: u16, delta: i32) {
+        match self.pairs.binary_search_by_key(&topic, |&(t, _)| t) {
+            Ok(i) => {
+                self.pairs[i].1 += delta;
+                if self.pairs[i].1 == 0 {
+                    self.pairs.remove(i);
+                }
+            }
+            Err(i) => self.pairs.insert(i, (topic, delta)),
+        }
+    }
+
+    pub fn drain(&mut self) -> Vec<(u16, i32)> {
+        std::mem::take(&mut self.pairs)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+}
+
+#[derive(Debug)]
+pub enum PsWorkerMsg {
+    RunEpoch,
+    ReportDocs,
+    Stop,
+}
+
+#[derive(Debug)]
+pub enum PsWorkerReply {
+    EpochDone { worker: usize, processed: u64, server_ops: u64 },
+    Docs { worker: usize, start_doc: usize, ntd: Vec<SparseCounts>, z: Vec<Vec<u16>> },
+}
+
+/// Worker-local state.
+pub struct PsWorkerState {
+    pub id: usize,
+    hyper: Hyper,
+    vocab: usize,
+    start_doc: usize,
+    /// the worker's documents as word-id lists
+    docs: Vec<Vec<u32>>,
+    z: Vec<Vec<u16>>,
+    ntd: Vec<SparseCounts>,
+    batch_docs: usize,
+    rng: Pcg32,
+    tree: FTree,
+    r: SparseCumSum,
+}
+
+impl PsWorkerState {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        id: usize,
+        corpus: &Corpus,
+        hyper: Hyper,
+        start: usize,
+        end: usize,
+        z: Vec<Vec<u16>>,
+        batch_docs: usize,
+        rng: Pcg32,
+    ) -> Self {
+        let mut ntd = Vec::with_capacity(end - start);
+        for zs in &z {
+            let mut counts = SparseCounts::with_capacity(zs.len().min(hyper.t));
+            for &t in zs {
+                counts.inc(t);
+            }
+            ntd.push(counts);
+        }
+        let t = hyper.t;
+        PsWorkerState {
+            id,
+            hyper,
+            vocab: corpus.vocab,
+            start_doc: start,
+            docs: corpus.docs[start..end].to_vec(),
+            z,
+            ntd,
+            batch_docs: batch_docs.max(1),
+            rng,
+            tree: FTree::with_capacity(&vec![0.0; t], t),
+            r: SparseCumSum::with_capacity(64),
+        }
+    }
+
+    /// Doc-side state accessors (simulator gather path).
+    pub fn ntd_rows(&self) -> &[SparseCounts] {
+        &self.ntd
+    }
+
+    pub fn z_rows(&self) -> &[Vec<u16>] {
+        &self.z
+    }
+
+    pub fn start_doc(&self) -> usize {
+        self.start_doc
+    }
+
+    /// Number of pull/compute/push batches per epoch.
+    pub fn num_batches(&self) -> usize {
+        self.docs.len().div_ceil(self.batch_docs)
+    }
+
+    /// Doc range of batch `b`.
+    fn batch_range(&self, b: usize) -> (usize, usize) {
+        let start = b * self.batch_docs;
+        (start, (start + self.batch_docs).min(self.docs.len()))
+    }
+
+    /// The sorted-unique word set of batch `b` (the PULL request).
+    pub fn batch_words(&self, b: usize) -> Vec<u32> {
+        let (start, end) = self.batch_range(b);
+        let mut words: Vec<u32> = self.docs[start..end]
+            .iter()
+            .flat_map(|d| d.iter().copied())
+            .collect();
+        words.sort_unstable();
+        words.dedup();
+        words
+    }
+
+    /// Tokens in batch `b` (simulator cost-model input).
+    pub fn batch_tokens(&self, b: usize) -> usize {
+        let (start, end) = self.batch_range(b);
+        self.docs[start..end].iter().map(|d| d.len()).sum()
+    }
+
+    /// One pass over the partition; returns tokens processed.
+    pub fn run_epoch(&mut self, server: &PsServer) -> (u64, u64) {
+        let ops_before = server.ops();
+        let mut processed = 0u64;
+        for b in 0..self.num_batches() {
+            let words = self.batch_words(b);
+            let (rows, nt_cache) = server.pull(&words);
+            let out = self.process_batch(b, &words, rows, nt_cache);
+            server.push(&out.pushes, &out.nt_delta);
+            processed += out.processed;
+        }
+        (processed, server.ops() - ops_before)
+    }
+
+    /// Sample batch `b` against the supplied (stale) cache; returns the
+    /// deltas to push.  Shared by the thread loop and the simulator.
+    pub fn process_batch(
+        &mut self,
+        b: usize,
+        words: &[u32],
+        mut rows: Vec<SparseCounts>,
+        mut nt_cache: Vec<i64>,
+    ) -> BatchResult {
+        let h = self.hyper;
+        let bb = h.betabar(self.vocab);
+        let (batch_start, batch_end) = self.batch_range(b);
+        let mut processed = 0u64;
+        let word_pos = |w: u32| words.binary_search(&w).expect("word in batch set");
+
+        // deltas accumulated for the PUSH
+        let mut word_deltas: Vec<SignedCounts> = vec![SignedCounts::default(); words.len()];
+        let mut nt_delta = vec![0i64; h.t];
+
+        // F+tree base over cached totals: q_t = α/(nt+β̄)
+        let base: Vec<f64> = nt_cache
+            .iter()
+            .map(|&n| h.alpha / (n.max(0) as f64 + bb))
+            .collect();
+        self.tree.refill(&base);
+
+        for doc in batch_start..batch_end {
+                // enter doc
+                let support: Vec<u16> = self.ntd[doc].iter().map(|(t, _)| t).collect();
+                for &t in &support {
+                    let q = (self.ntd[doc].get(t) as f64 + h.alpha)
+                        / (nt_cache[t as usize].max(0) as f64 + bb);
+                    self.tree.set(t as usize, q);
+                }
+
+                for pos in 0..self.docs[doc].len() {
+                    let word = self.docs[doc][pos];
+                    let wp = word_pos(word);
+                    let old = self.z[doc][pos];
+
+                    // remove from cached view + record deltas
+                    self.ntd[doc].dec(old);
+                    if rows[wp].get(old) > 0 {
+                        rows[wp].dec(old);
+                    }
+                    nt_cache[old as usize] -= 1;
+                    word_deltas[wp].add(old, -1);
+                    nt_delta[old as usize] -= 1;
+                    let q = (self.ntd[doc].get(old) as f64 + h.alpha)
+                        / (nt_cache[old as usize].max(0) as f64 + bb);
+                    self.tree.set(old as usize, q);
+
+                    // r over the cached word row
+                    self.r.clear();
+                    for (t, c) in rows[wp].iter() {
+                        self.r.push(t as u32, c as f64 * self.tree.leaf(t as usize));
+                    }
+                    let r_total = self.r.total();
+                    let u = self.rng.uniform(h.beta * self.tree.total() + r_total);
+                    let new = if u < r_total {
+                        self.r.sample(u) as u16
+                    } else {
+                        self.tree.sample((u - r_total) / h.beta) as u16
+                    };
+
+                    self.ntd[doc].inc(new);
+                    rows[wp].inc(new);
+                    nt_cache[new as usize] += 1;
+                    word_deltas[wp].add(new, 1);
+                    nt_delta[new as usize] += 1;
+                    let q = (self.ntd[doc].get(new) as f64 + h.alpha)
+                        / (nt_cache[new as usize].max(0) as f64 + bb);
+                    self.tree.set(new as usize, q);
+                    self.z[doc][pos] = new;
+                    processed += 1;
+                }
+
+                // leave doc
+                let support: Vec<u16> = self.ntd[doc].iter().map(|(t, _)| t).collect();
+                for &t in &support {
+                    self.tree.set(
+                        t as usize,
+                        h.alpha / (nt_cache[t as usize].max(0) as f64 + bb),
+                    );
+                }
+            }
+
+        // deltas for the PUSH
+        let pushes: Vec<(u32, Vec<(u16, i32)>)> = words
+            .iter()
+            .zip(word_deltas.iter_mut())
+            .filter(|(_, d)| !d.is_empty())
+            .map(|(&w, d)| (w, d.drain()))
+            .collect();
+        BatchResult { pushes, nt_delta, processed }
+    }
+}
+
+/// Output of [`PsWorkerState::process_batch`].
+pub struct BatchResult {
+    pub pushes: Vec<(u32, Vec<(u16, i32)>)>,
+    pub nt_delta: Vec<i64>,
+    pub processed: u64,
+}
+
+/// Worker thread body.
+pub fn worker_loop(
+    mut state: PsWorkerState,
+    server: Arc<PsServer>,
+    rx: Receiver<PsWorkerMsg>,
+    reply: Sender<PsWorkerReply>,
+) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            PsWorkerMsg::RunEpoch => {
+                let (processed, server_ops) = state.run_epoch(&server);
+                let _ = reply.send(PsWorkerReply::EpochDone {
+                    worker: state.id,
+                    processed,
+                    server_ops,
+                });
+            }
+            PsWorkerMsg::ReportDocs => {
+                let _ = reply.send(PsWorkerReply::Docs {
+                    worker: state.id,
+                    start_doc: state.start_doc,
+                    ntd: state.ntd.clone(),
+                    z: state.z.clone(),
+                });
+            }
+            PsWorkerMsg::Stop => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signed_counts_cancel() {
+        let mut s = SignedCounts::default();
+        s.add(3, 1);
+        s.add(3, -1);
+        assert!(s.is_empty());
+        s.add(2, -1);
+        s.add(5, 2);
+        assert_eq!(s.drain(), vec![(2, -1), (5, 2)]);
+        assert!(s.is_empty());
+    }
+}

@@ -1,0 +1,111 @@
+//! Artifact loading: manifest validation + HLO-text compilation cache.
+//!
+//! `artifacts/manifest.txt` (written by python/compile/aot.py) lists every
+//! artifact with its argument signature; we cross-check the shapes we are
+//! about to feed so a Python/Rust geometry drift fails at load time with a
+//! readable message instead of a PJRT shape error mid-training.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+/// One compiled artifact set for a given topic count.
+pub struct ArtifactSet {
+    pub client: xla::PjRtClient,
+    pub ll_block: xla::PjRtLoadedExecutable,
+    pub ll_vec: xla::PjRtLoadedExecutable,
+    pub prob: Option<xla::PjRtLoadedExecutable>,
+    pub t: usize,
+}
+
+/// Parse manifest.txt into name -> arg-signature.
+pub fn read_manifest(dir: &Path) -> Result<HashMap<String, String>, String> {
+    let path = dir.join("manifest.txt");
+    let body = std::fs::read_to_string(&path)
+        .map_err(|e| format!("{}: {e} (run `make artifacts`)", path.display()))?;
+    let mut out = HashMap::new();
+    for line in body.lines() {
+        let mut cols = line.split('\t');
+        let name = cols.next().ok_or("empty manifest line")?;
+        let _nargs = cols.next().ok_or("manifest missing nargs")?;
+        let sig = cols.next().unwrap_or("");
+        out.insert(name.to_string(), sig.to_string());
+    }
+    Ok(out)
+}
+
+fn compile(
+    client: &xla::PjRtClient,
+    dir: &Path,
+    name: &str,
+) -> Result<xla::PjRtLoadedExecutable, String> {
+    let path = dir.join(format!("{name}.hlo.txt"));
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or("non-utf8 artifact path")?,
+    )
+    .map_err(|e| format!("{}: {e}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).map_err(|e| format!("compile {name}: {e}"))
+}
+
+impl ArtifactSet {
+    /// Load + compile the T-specific artifacts from `dir`.
+    pub fn load(dir: &Path, t: usize) -> Result<ArtifactSet, String> {
+        let manifest = read_manifest(dir)?;
+        let block_name = format!("ll_block_b{}_t{t}", super::BLOCK_ROWS);
+        let vec_name = format!("ll_vec_n{}", super::VEC_LEN);
+        let prob_name = format!("prob_b{}_t{t}", super::PROB_BATCH);
+
+        // shape cross-check against the manifest
+        let want_block = format!("float32[{},{t}];float32[]", super::BLOCK_ROWS);
+        match manifest.get(&block_name) {
+            None => {
+                return Err(format!(
+                    "artifact '{block_name}' not in manifest (have: {:?})",
+                    manifest.keys().collect::<Vec<_>>()
+                ))
+            }
+            Some(sig) if sig != &want_block => {
+                return Err(format!(
+                    "artifact '{block_name}' signature drift: manifest has {sig}, rust expects {want_block}"
+                ))
+            }
+            _ => {}
+        }
+
+        let client = xla::PjRtClient::cpu().map_err(|e| e.to_string())?;
+        let ll_block = compile(&client, dir, &block_name)?;
+        let ll_vec = compile(&client, dir, &vec_name)?;
+        let prob = if manifest.contains_key(&prob_name) {
+            Some(compile(&client, dir, &prob_name)?)
+        } else {
+            None
+        };
+        Ok(ArtifactSet { client, ll_block, ll_vec, prob, t })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parse() {
+        let dir = std::env::temp_dir().join("fnomad_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "a\t2\tfloat32[4];float32[]\nb\t1\tfloat32[2,2]\n",
+        )
+        .unwrap();
+        let m = read_manifest(&dir).unwrap();
+        assert_eq!(m["a"], "float32[4];float32[]");
+        assert_eq!(m["b"], "float32[2,2]");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make() {
+        let err = read_manifest(Path::new("/nonexistent-dir-xyz")).unwrap_err();
+        assert!(err.contains("make artifacts"));
+    }
+}

@@ -1,0 +1,191 @@
+//! Alias method (Walker 1977, Vose's linear-time construction).
+//!
+//! Θ(1) generation after a Θ(T) build, but any parameter change forces a
+//! full rebuild — the trade AliasLDA accepts by sampling from *stale*
+//! tables and correcting with Metropolis–Hastings (paper §3.3, Table 1).
+
+use super::DiscreteSampler;
+
+/// Vose alias table.
+#[derive(Clone, Debug)]
+pub struct Alias {
+    /// acceptance threshold per bucket, scaled so `prob[i] ∈ [0, 1]`
+    prob: Vec<f64>,
+    alias: Vec<u32>,
+    /// raw parameters retained for `update`-then-rebuild and `weight`
+    p: Vec<f64>,
+    total: f64,
+}
+
+impl Alias {
+    fn rebuild(&mut self) {
+        let n = self.p.len();
+        self.total = self.p.iter().sum();
+        self.prob.clear();
+        self.alias.clear();
+        self.prob.resize(n, 0.0);
+        self.alias.resize(n, 0);
+        if self.total <= 0.0 {
+            // degenerate: treat as uniform so sample() stays total (callers
+            // never draw from an all-zero distribution in LDA)
+            self.prob.iter_mut().for_each(|x| *x = 1.0);
+            for (i, a) in self.alias.iter_mut().enumerate() {
+                *a = i as u32;
+            }
+            return;
+        }
+        let scale = n as f64 / self.total;
+        // Vose's two worklists of scaled weights
+        let mut scaled: Vec<f64> = self.p.iter().map(|&w| w * scale).collect();
+        let mut small: Vec<u32> = Vec::with_capacity(n);
+        let mut large: Vec<u32> = Vec::with_capacity(n);
+        for (i, &s) in scaled.iter().enumerate() {
+            if s < 1.0 {
+                small.push(i as u32);
+            } else {
+                large.push(i as u32);
+            }
+        }
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            self.prob[s as usize] = scaled[s as usize];
+            self.alias[s as usize] = l;
+            scaled[l as usize] -= 1.0 - scaled[s as usize];
+            if scaled[l as usize] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        for &l in &large {
+            self.prob[l as usize] = 1.0;
+            self.alias[l as usize] = l;
+        }
+        for &s in &small {
+            // numerically stranded smalls: full bucket
+            self.prob[s as usize] = 1.0;
+            self.alias[s as usize] = s;
+        }
+    }
+}
+
+impl DiscreteSampler for Alias {
+    fn build(p: &[f64]) -> Self {
+        let mut a = Alias {
+            prob: Vec::new(),
+            alias: Vec::new(),
+            p: p.to_vec(),
+            total: 0.0,
+        };
+        a.rebuild();
+        a
+    }
+
+    #[inline]
+    fn total(&self) -> f64 {
+        self.total
+    }
+
+    /// Alias generation from a single uniform: the integer part selects the
+    /// bucket, the fractional part decides accept-vs-alias (paper §2.2).
+    #[inline]
+    fn sample(&self, u: f64) -> usize {
+        let n = self.prob.len();
+        // map u ∈ [0,total) onto [0,n)
+        let x = (u / self.total * n as f64).min(n as f64 - 1e-9).max(0.0);
+        let j = x as usize;
+        let frac = x - j as f64;
+        if frac < self.prob[j] {
+            j
+        } else {
+            self.alias[j] as usize
+        }
+    }
+
+    /// Θ(T): alias tables cannot be incrementally maintained.
+    fn update(&mut self, t: usize, delta: f64) {
+        self.p[t] += delta;
+        self.rebuild();
+    }
+
+    fn weight(&self, t: usize) -> f64 {
+        self.p[t]
+    }
+
+    fn len(&self) -> usize {
+        self.p.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn buckets_partition_unit_mass() {
+        let p = vec![0.3, 1.5, 0.4, 0.3];
+        let a = Alias::build(&p);
+        // total implied mass per outcome reconstructed from the table
+        let n = p.len();
+        let mut implied = vec![0.0; n];
+        for j in 0..n {
+            implied[j] += a.prob[j];
+            implied[a.alias[j] as usize] += 1.0 - a.prob[j];
+        }
+        let scale = a.total() / n as f64;
+        for (t, (&imp, &want)) in implied.iter().zip(&p).enumerate() {
+            assert!(
+                (imp * scale - want).abs() < 1e-9,
+                "bucket mass mismatch at {t}: {} vs {want}",
+                imp * scale
+            );
+        }
+    }
+
+    #[test]
+    fn statistical_agreement_large_t() {
+        let mut rng = Pcg32::seeded(11);
+        let t = 1024;
+        let p: Vec<f64> = (0..t).map(|_| rng.next_f64()).collect();
+        let a = Alias::build(&p);
+        let total: f64 = p.iter().sum();
+        let draws = 400_000;
+        let mut counts = vec![0usize; t];
+        for _ in 0..draws {
+            counts[a.sample(rng.uniform(a.total()))] += 1;
+        }
+        // chi-square-ish: aggregate relative error over all cells
+        let mut chi2 = 0.0;
+        for (c, &w) in counts.iter().zip(&p) {
+            let e = w / total * draws as f64;
+            if e > 5.0 {
+                chi2 += (*c as f64 - e).powi(2) / e;
+            }
+        }
+        // dof ≈ 1023; 5σ bound ≈ dof + 5*sqrt(2*dof) ≈ 1250
+        assert!(chi2 < 1350.0, "chi2 {chi2}");
+    }
+
+    #[test]
+    fn update_rebuilds() {
+        let mut a = Alias::build(&[1.0, 1.0]);
+        a.update(0, 3.0);
+        assert!((a.total() - 5.0).abs() < 1e-12);
+        assert!((a.weight(0) - 4.0).abs() < 1e-12);
+        // dimension 0 now has 80% of the mass
+        let mut rng = Pcg32::seeded(2);
+        let hits = (0..10_000)
+            .filter(|_| a.sample(rng.uniform(a.total())) == 0)
+            .count();
+        assert!((7_700..8_300).contains(&hits), "hits {hits}");
+    }
+
+    #[test]
+    fn handles_zero_entries() {
+        let a = Alias::build(&[0.0, 1.0, 0.0, 0.0]);
+        let mut rng = Pcg32::seeded(3);
+        for _ in 0..1000 {
+            assert_eq!(a.sample(rng.uniform(a.total())), 1);
+        }
+    }
+}

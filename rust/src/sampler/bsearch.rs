@@ -1,0 +1,178 @@
+//! BSearch (paper §2.2): binary search on the cumulative sums.
+//!
+//! Θ(log T) generation but Θ(T) rebuild on any parameter change.  F+LDA
+//! uses it for the *sparse* `r` term, where the vector is rebuilt from
+//! scratch for every token anyway — see [`SparseCumSum`], the |T_d|/|T_w|
+//! variant used inside the LDA kernels.
+
+use super::DiscreteSampler;
+
+/// Dense cumulative-sum sampler.
+#[derive(Clone, Debug)]
+pub struct BSearch {
+    /// cum[t] = Σ_{s ≤ t} p_s
+    cum: Vec<f64>,
+}
+
+impl DiscreteSampler for BSearch {
+    fn build(p: &[f64]) -> Self {
+        let mut cum = Vec::with_capacity(p.len());
+        let mut acc = 0.0;
+        for &w in p {
+            acc += w;
+            cum.push(acc);
+        }
+        BSearch { cum }
+    }
+
+    #[inline]
+    fn total(&self) -> f64 {
+        *self.cum.last().unwrap_or(&0.0)
+    }
+
+    #[inline]
+    fn sample(&self, u: f64) -> usize {
+        // min{t : cum[t] > u}; clamp for fp drift at the top end.
+        let idx = self.cum.partition_point(|&c| c <= u);
+        if idx < self.cum.len() {
+            idx
+        } else {
+            // u >= total due to rounding: last index with positive mass
+            self.last_positive()
+        }
+    }
+
+    /// Θ(T): suffix rebuild from the changed coordinate.
+    fn update(&mut self, t: usize, delta: f64) {
+        for c in &mut self.cum[t..] {
+            *c += delta;
+        }
+    }
+
+    fn weight(&self, t: usize) -> f64 {
+        if t == 0 {
+            self.cum[0]
+        } else {
+            self.cum[t] - self.cum[t - 1]
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.cum.len()
+    }
+}
+
+impl BSearch {
+    fn last_positive(&self) -> usize {
+        let total = self.total();
+        (0..self.cum.len())
+            .rev()
+            .find(|&t| self.weight(t) > 0.0 || total == 0.0)
+            .unwrap_or(0)
+    }
+}
+
+/// Sparse cumulative-sum scratch used by the LDA inner loops for the `r`
+/// term: holds (topic, cumsum) pairs over the nonzero support only and is
+/// re-filled in Θ(|support|) per token without reallocating.
+#[derive(Clone, Debug, Default)]
+pub struct SparseCumSum {
+    topics: Vec<u32>,
+    cum: Vec<f64>,
+}
+
+impl SparseCumSum {
+    pub fn with_capacity(cap: usize) -> Self {
+        SparseCumSum { topics: Vec::with_capacity(cap), cum: Vec::with_capacity(cap) }
+    }
+
+    #[inline]
+    pub fn clear(&mut self) {
+        self.topics.clear();
+        self.cum.clear();
+    }
+
+    /// Append the next nonzero (topic, weight) in increasing topic order.
+    #[inline]
+    pub fn push(&mut self, topic: u32, weight: f64) {
+        debug_assert!(weight >= 0.0);
+        let prev = *self.cum.last().unwrap_or(&0.0);
+        self.topics.push(topic);
+        self.cum.push(prev + weight);
+    }
+
+    #[inline]
+    pub fn total(&self) -> f64 {
+        *self.cum.last().unwrap_or(&0.0)
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.topics.is_empty()
+    }
+
+    /// Binary search for u ∈ [0, total); returns the stored topic id.
+    #[inline]
+    pub fn sample(&self, u: f64) -> u32 {
+        debug_assert!(!self.is_empty());
+        let idx = self.cum.partition_point(|&c| c <= u).min(self.cum.len() - 1);
+        self.topics[idx]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cdf_semantics_match_paper_example() {
+        let s = BSearch::build(&[0.3, 1.5, 0.4, 0.3]);
+        assert_eq!(s.sample(2.1), 2);
+        assert_eq!(s.sample(0.0), 0);
+        assert_eq!(s.sample(0.3), 1);
+        assert!((s.total() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn update_is_suffix_add() {
+        let mut s = BSearch::build(&[1.0, 1.0, 1.0]);
+        s.update(1, 2.0);
+        assert!((s.weight(0) - 1.0).abs() < 1e-12);
+        assert!((s.weight(1) - 3.0).abs() < 1e-12);
+        assert!((s.weight(2) - 1.0).abs() < 1e-12);
+        assert!((s.total() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn u_past_total_clamps() {
+        let s = BSearch::build(&[1.0, 2.0, 0.0]);
+        assert_eq!(s.sample(3.0 + 1e-15), 1);
+    }
+
+    #[test]
+    fn sparse_cumsum_matches_dense() {
+        let dense = [0.0, 2.0, 0.0, 0.0, 1.0, 0.5, 0.0];
+        let bs = BSearch::build(&dense);
+        let mut sc = SparseCumSum::with_capacity(4);
+        for (t, &w) in dense.iter().enumerate() {
+            if w > 0.0 {
+                sc.push(t as u32, w);
+            }
+        }
+        assert!((sc.total() - bs.total()).abs() < 1e-12);
+        for u in [0.0, 1.9, 2.0, 2.99, 3.2, 3.49] {
+            assert_eq!(sc.sample(u) as usize, bs.sample(u), "u={u}");
+        }
+    }
+
+    #[test]
+    fn sparse_cumsum_reuse_without_realloc() {
+        let mut sc = SparseCumSum::with_capacity(8);
+        sc.push(3, 1.0);
+        sc.clear();
+        assert!(sc.is_empty());
+        sc.push(5, 2.0);
+        assert_eq!(sc.sample(1.5), 5);
+        assert!((sc.total() - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,289 @@
+//! F+tree (paper §3.1, Algorithms 1–2): the contribution data structure.
+//!
+//! A complete binary tree stored flat in an array `F[1..2T)`, leaves in
+//! `F[T..2T)` (T padded to a power of two), every internal node the sum of
+//! its children.  `F[1]` is the normalizer `c_T`, sampling is a top-down
+//! descent (Algorithm 1), and a single-coordinate change is a bottom-up
+//! delta walk (Algorithm 2) — both Θ(log T), the balance no other Table 1
+//! sampler achieves.
+//!
+//! Floating-point hygiene: repeated ± deltas drift internal sums away from
+//! the exact leaf sums.  Drift is second-order (each update touches log T
+//! nodes with one rounding each) but unbounded over time, so the tree
+//! transparently rebuilds every [`REBUILD_EVERY`] updates — Θ(T) amortized
+//! over Θ(T) updates keeps the per-update cost Θ(log T).
+
+use super::DiscreteSampler;
+
+/// Rebuild cadence for drift control (amortized Θ(1) extra per update).
+pub const REBUILD_EVERY: u64 = 1 << 20;
+
+/// Flat-array F+tree.
+#[derive(Clone, Debug)]
+pub struct FTree {
+    /// `f[0]` unused; root at 1; leaves at `size..size + len` (padding
+    /// leaves hold 0 and are unreachable by sampling).
+    f: Vec<f64>,
+    /// number of real dimensions (≤ size)
+    len: usize,
+    /// padded power-of-two capacity
+    size: usize,
+    updates_since_rebuild: u64,
+}
+
+impl FTree {
+    /// Build with a given capacity (≥ p.len()), e.g. to reserve for growth.
+    pub fn with_capacity(p: &[f64], capacity: usize) -> Self {
+        let size = capacity.max(p.len()).max(1).next_power_of_two();
+        let mut t = FTree {
+            f: vec![0.0; 2 * size],
+            len: p.len(),
+            size,
+            updates_since_rebuild: 0,
+        };
+        t.refill(p);
+        t
+    }
+
+    /// Θ(T) exact (re)initialization from raw parameters (eq. (3)).
+    pub fn refill(&mut self, p: &[f64]) {
+        assert!(p.len() <= self.size);
+        self.len = p.len();
+        self.f[self.size..self.size + p.len()].copy_from_slice(p);
+        self.f[self.size + p.len()..].iter_mut().for_each(|x| *x = 0.0);
+        for i in (1..self.size).rev() {
+            self.f[i] = self.f[2 * i] + self.f[2 * i + 1];
+        }
+        self.updates_since_rebuild = 0;
+    }
+
+    /// Θ(T): recompute internal sums from the current leaves.
+    pub fn rebuild(&mut self) {
+        for i in (1..self.size).rev() {
+            self.f[i] = self.f[2 * i] + self.f[2 * i + 1];
+        }
+        self.updates_since_rebuild = 0;
+    }
+
+    /// Set leaf `t` to an absolute value (the `F.update(t, δ)` with
+    /// `δ = v − F[leaf(t)]` pattern of Algorithm 3, fused).
+    #[inline]
+    pub fn set(&mut self, t: usize, value: f64) {
+        let delta = value - self.f[self.size + t];
+        self.add(t, delta);
+    }
+
+    /// Algorithm 2: bottom-up delta propagation, Θ(log T).
+    #[inline]
+    pub fn add(&mut self, t: usize, delta: f64) {
+        debug_assert!(t < self.len);
+        let mut i = self.size + t;
+        while i >= 1 {
+            self.f[i] += delta;
+            if i == 1 {
+                break;
+            }
+            i >>= 1;
+        }
+        self.updates_since_rebuild += 1;
+        if self.updates_since_rebuild >= REBUILD_EVERY {
+            self.rebuild();
+        }
+    }
+
+    /// Leaf accessor (the `F[leaf(t)]` of Algorithm 3).
+    #[inline]
+    pub fn leaf(&self, t: usize) -> f64 {
+        self.f[self.size + t]
+    }
+
+    /// Algorithm 1: top-down descent for `u ∈ [0, F[1])`, Θ(log T).
+    #[inline]
+    pub fn descend(&self, mut u: f64) -> usize {
+        let mut i = 1usize;
+        while i < self.size {
+            let left = self.f[2 * i];
+            if u >= left {
+                u -= left;
+                i = 2 * i + 1;
+            } else {
+                i = 2 * i;
+            }
+        }
+        let mut t = i - self.size;
+        // fp edge: u may have landed on a zero-mass (or padding) leaf when
+        // it equals/exceeds the true total; walk back to real mass.
+        if t >= self.len || (self.f[self.size + t] <= 0.0 && self.f[1] > 0.0) {
+            t = self.last_positive_leaf();
+        }
+        t
+    }
+
+    fn last_positive_leaf(&self) -> usize {
+        (0..self.len)
+            .rev()
+            .find(|&t| self.f[self.size + t] > 0.0)
+            .unwrap_or(0)
+    }
+
+    /// Exact sum of leaves (test-time drift oracle; Θ(T)).
+    pub fn exact_total(&self) -> f64 {
+        self.f[self.size..self.size + self.len].iter().sum()
+    }
+
+    /// Padded capacity (for introspection / benches).
+    pub fn capacity(&self) -> usize {
+        self.size
+    }
+}
+
+impl DiscreteSampler for FTree {
+    fn build(p: &[f64]) -> Self {
+        FTree::with_capacity(p, p.len())
+    }
+
+    #[inline]
+    fn total(&self) -> f64 {
+        self.f[1]
+    }
+
+    #[inline]
+    fn sample(&self, u: f64) -> usize {
+        self.descend(u)
+    }
+
+    #[inline]
+    fn update(&mut self, t: usize, delta: f64) {
+        self.add(t, delta);
+    }
+
+    #[inline]
+    fn weight(&self, t: usize) -> f64 {
+        self.leaf(t)
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{check, close};
+
+    #[test]
+    fn paper_figure1_example() {
+        // p = [0.3, 1.5, 0.4, 0.3]; u = 2.1 must select t = 2 (0-based),
+        // i.e. the third leaf, as in Figure 1b.
+        let t = FTree::build(&[0.3, 1.5, 0.4, 0.3]);
+        assert!((t.total() - 2.5).abs() < 1e-12);
+        assert_eq!(t.sample(2.1), 2);
+        // and the internal nodes are the pairwise sums of Figure 1a
+        assert!((t.f[2] - 1.8).abs() < 1e-12);
+        assert!((t.f[3] - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_figure1c_update() {
+        // Figure 1c: update t=3 (1-based; here index 2) by δ=+1.0
+        let mut t = FTree::build(&[0.3, 1.5, 0.4, 0.3]);
+        t.add(2, 1.0);
+        assert!((t.leaf(2) - 1.4).abs() < 1e-12);
+        assert!((t.f[3] - 1.7).abs() < 1e-12); // right internal node
+        assert!((t.total() - 3.5).abs() < 1e-12); // root
+    }
+
+    #[test]
+    fn set_is_absolute() {
+        let mut t = FTree::build(&[1.0, 2.0, 3.0, 4.0]);
+        t.set(1, 0.25);
+        assert!((t.leaf(1) - 0.25).abs() < 1e-12);
+        assert!((t.total() - 8.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn internal_nodes_always_sum_children() {
+        check("ftree invariant: parent == left + right", 32, |rng| {
+            let n = 1 + rng.below(37);
+            let p: Vec<f64> = (0..n).map(|_| rng.next_f64() * 5.0).collect();
+            let mut t = FTree::build(&p);
+            for _ in 0..200 {
+                let idx = rng.below(n);
+                let delta = rng.next_f64() - 0.4;
+                if t.leaf(idx) + delta >= 0.0 {
+                    t.add(idx, delta);
+                }
+            }
+            for i in 1..t.size {
+                close(t.f[i], t.f[2 * i] + t.f[2 * i + 1], 1e-9, 1e-9)
+                    .map_err(|e| format!("node {i}: {e}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn drift_rebuild_restores_exactness() {
+        let n = 64;
+        let p: Vec<f64> = (0..n).map(|i| (i as f64).mul_add(0.1, 0.01)).collect();
+        let mut t = FTree::build(&p);
+        // hammer with tiny cancelling deltas to accumulate drift
+        for i in 0..500_000u64 {
+            let idx = (i % n as u64) as usize;
+            t.add(idx, 1e-9);
+            t.add(idx, -1e-9);
+        }
+        let drift = (t.total() - t.exact_total()).abs();
+        t.rebuild();
+        let after = (t.total() - t.exact_total()).abs();
+        assert!(after <= drift);
+        assert!(after < 1e-12, "post-rebuild drift {after}");
+    }
+
+    #[test]
+    fn automatic_rebuild_counter() {
+        let mut t = FTree::build(&[1.0; 8]);
+        for _ in 0..REBUILD_EVERY + 5 {
+            t.add(3, 0.0);
+        }
+        assert!(t.updates_since_rebuild < REBUILD_EVERY);
+    }
+
+    #[test]
+    fn capacity_reserved_growth() {
+        let mut t = FTree::with_capacity(&[1.0, 1.0], 16);
+        assert_eq!(t.capacity(), 16);
+        t.refill(&[1.0; 10]);
+        assert_eq!(t.len(), 10);
+        assert!((t.total() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_leaf() {
+        let t = FTree::build(&[7.0]);
+        assert_eq!(t.sample(6.999), 0);
+        assert_eq!(t.sample(0.0), 0);
+    }
+
+    #[test]
+    fn zero_mass_leaves_are_never_sampled() {
+        check("ftree never returns zero-mass leaf", 32, |rng| {
+            let n = 2 + rng.below(30);
+            let mut p = vec![0.0; n];
+            // one to three positive leaves
+            for _ in 0..1 + rng.below(3) {
+                p[rng.below(n)] = rng.next_f64() + 0.1;
+            }
+            let t = FTree::build(&p);
+            for _ in 0..100 {
+                let u = rng.uniform(t.total());
+                let z = t.sample(u);
+                if p[z] <= 0.0 {
+                    return Err(format!("sampled zero-mass leaf {z}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,106 @@
+//! LSearch (paper §2.2): linear scan over the raw parameters.
+//!
+//! Θ(T) generation, Θ(1) update — the structure SparseLDA leans on for its
+//! rarely-sampled dense/sparse bucket terms, and the "normal LDA" baseline
+//! of Fig. 4(c,d) when used on the full dense conditional.
+
+use super::DiscreteSampler;
+
+/// Raw parameters plus a maintained normalization constant.
+#[derive(Clone, Debug)]
+pub struct LSearch {
+    p: Vec<f64>,
+    total: f64,
+}
+
+impl DiscreteSampler for LSearch {
+    fn build(p: &[f64]) -> Self {
+        LSearch { p: p.to_vec(), total: p.iter().sum() }
+    }
+
+    #[inline]
+    fn total(&self) -> f64 {
+        self.total
+    }
+
+    #[inline]
+    fn sample(&self, mut u: f64) -> usize {
+        // z = min{t : cumsum(p)_t > u}; fall back to the last positive
+        // entry if floating-point drift pushes u past the true total.
+        let mut last_pos = 0;
+        for (t, &w) in self.p.iter().enumerate() {
+            if w > 0.0 {
+                if u < w {
+                    return t;
+                }
+                last_pos = t;
+            }
+            u -= w;
+        }
+        last_pos
+    }
+
+    #[inline]
+    fn update(&mut self, t: usize, delta: f64) {
+        self.p[t] += delta;
+        self.total += delta;
+    }
+
+    #[inline]
+    fn weight(&self, t: usize) -> f64 {
+        self.p[t]
+    }
+
+    fn len(&self) -> usize {
+        self.p.len()
+    }
+}
+
+impl LSearch {
+    /// Recompute the normalizer exactly (drift control after very long
+    /// update streams).
+    pub fn renormalize(&mut self) {
+        self.total = self.p.iter().sum();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_cdf_semantics() {
+        let s = LSearch::build(&[0.3, 1.5, 0.4, 0.3]); // paper Fig. 1 example
+        assert_eq!(s.sample(0.0), 0);
+        assert_eq!(s.sample(0.29), 0);
+        assert_eq!(s.sample(0.3), 1);
+        assert_eq!(s.sample(1.79), 1);
+        assert_eq!(s.sample(2.1), 2); // paper's Fig. 1b walk ends at t=3 (1-based)
+        assert_eq!(s.sample(2.49), 3);
+    }
+
+    #[test]
+    fn update_maintains_total_in_constant_time() {
+        let mut s = LSearch::build(&[1.0, 2.0, 3.0]);
+        s.update(1, -0.5);
+        assert!((s.total() - 5.5).abs() < 1e-12);
+        assert!((s.weight(1) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn u_at_total_falls_back_to_last_positive() {
+        let s = LSearch::build(&[1.0, 2.0, 0.0]);
+        assert_eq!(s.sample(3.0), 1);
+    }
+
+    #[test]
+    fn renormalize_fixes_drift() {
+        let mut s = LSearch::build(&[1.0; 100]);
+        for i in 0..100 {
+            s.update(i, 1e-13);
+        }
+        s.renormalize();
+        let exact: f64 = (0..100).map(|_| 1.0 + 1e-13).sum();
+        assert!((s.total() - exact).abs() < 1e-12);
+    }
+}

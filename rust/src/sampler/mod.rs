@@ -1,0 +1,225 @@
+//! Multinomial samplers over unnormalized parameters `p` (paper §2.2, §3,
+//! Table 1).
+//!
+//! All four samplers draw `z` with `Pr(z = t) ∝ p_t` given `u ~
+//! uniform[0, total)`:
+//!
+//! | sampler   | init  | generate   | single-param update |
+//! |-----------|-------|------------|---------------------|
+//! | [`LSearch`] | Θ(T) | Θ(T)       | Θ(1)                |
+//! | [`BSearch`] | Θ(T) | Θ(log T)   | Θ(T)                |
+//! | [`Alias`]   | Θ(T) | Θ(1)       | Θ(T)                |
+//! | [`FTree`]   | Θ(T) | Θ(log T)   | **Θ(log T)**        |
+//!
+//! The F+tree's balanced generate/update cost is contribution #1 of the
+//! paper; `benches/table1_samplers.rs` regenerates the measured version of
+//! this table.
+//!
+//! The `u`-outside interface (caller supplies the uniform draw) keeps the
+//! samplers RNG-agnostic and lets the two-level LDA decompositions reuse a
+//! single uniform across the q/r split exactly as eq. (6) prescribes.
+
+pub mod alias;
+pub mod bsearch;
+pub mod ftree;
+pub mod lsearch;
+
+pub use alias::Alias;
+pub use bsearch::BSearch;
+pub use ftree::FTree;
+pub use lsearch::LSearch;
+
+/// Common interface for the Table 1 samplers.
+pub trait DiscreteSampler {
+    /// Build from unnormalized nonnegative parameters.
+    fn build(p: &[f64]) -> Self;
+
+    /// The normalization constant `c_T = Σ_t p_t`.
+    fn total(&self) -> f64;
+
+    /// Draw `z = min{t : Σ_{s≤t} p_s > u}` for `u ∈ [0, total)`.
+    /// (The Alias sampler ignores the CDF semantics but matches the
+    /// distribution for uniform `u`.)
+    fn sample(&self, u: f64) -> usize;
+
+    /// Apply `p_t += delta` and restore the sampler's invariants.
+    fn update(&mut self, t: usize, delta: f64);
+
+    /// Current parameter value (for tests / debugging).
+    fn weight(&self, t: usize) -> f64;
+
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{check, close};
+    use crate::util::rng::Pcg32;
+
+    fn random_params(rng: &mut Pcg32, t: usize, sparse: bool) -> Vec<f64> {
+        (0..t)
+            .map(|_| {
+                if sparse && rng.next_f64() < 0.6 {
+                    0.0
+                } else {
+                    rng.next_f64() * 10.0
+                }
+            })
+            .collect()
+    }
+
+    /// Empirical distribution of `sample` matches p for every sampler.
+    fn frequencies<S: DiscreteSampler>(s: &S, rng: &mut Pcg32, draws: usize) -> Vec<f64> {
+        let mut counts = vec![0usize; s.len()];
+        for _ in 0..draws {
+            let u = rng.uniform(s.total());
+            counts[s.sample(u)] += 1;
+        }
+        counts.iter().map(|&c| c as f64 / draws as f64).collect()
+    }
+
+    fn assert_matches_distribution<S: DiscreteSampler>(name: &str) {
+        check(&format!("{name} matches target distribution"), 8, |rng| {
+            let t = 1 << (3 + rng.below(4)); // 8..64
+            let sparse = rng.next_f64() < 0.5;
+            let mut p = random_params(rng, t, sparse);
+            // ensure at least one positive entry
+            p[rng.below(t)] += 1.0;
+            let total: f64 = p.iter().sum();
+            let s = S::build(&p);
+            close(s.total(), total, 1e-9, 1e-12)?;
+            let draws = 60_000;
+            let freq = frequencies(&s, rng, draws);
+            for (t_i, (&f, &pi)) in freq.iter().zip(&p).enumerate() {
+                let want = pi / total;
+                let tol = 4.0 * (want.max(1e-4) / draws as f64).sqrt(); // ~4σ
+                if (f - want).abs() > tol {
+                    return Err(format!("dim {t_i}: freq {f} vs p {want} (tol {tol})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn lsearch_distribution() {
+        assert_matches_distribution::<LSearch>("LSearch");
+    }
+
+    #[test]
+    fn bsearch_distribution() {
+        assert_matches_distribution::<BSearch>("BSearch");
+    }
+
+    #[test]
+    fn alias_distribution() {
+        assert_matches_distribution::<Alias>("Alias");
+    }
+
+    #[test]
+    fn ftree_distribution() {
+        assert_matches_distribution::<FTree>("FTree");
+    }
+
+    /// The three CDF-semantics samplers agree *pointwise* on the same u
+    /// (the alias method has different u-semantics by design).
+    #[test]
+    fn cdf_samplers_agree_pointwise() {
+        check("LSearch/BSearch/FTree pointwise agreement", 32, |rng| {
+            let t = 1 << (2 + rng.below(6));
+            let mut p = random_params(rng, t, true);
+            p[rng.below(t)] += 0.5;
+            let ls = LSearch::build(&p);
+            let bs = BSearch::build(&p);
+            let ft = FTree::build(&p);
+            for _ in 0..200 {
+                let u = rng.uniform(ls.total());
+                let (a, b, c) = (ls.sample(u), bs.sample(u), ft.sample(u));
+                if a != b || b != c {
+                    return Err(format!("u={u}: lsearch {a}, bsearch {b}, ftree {c}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Updates keep all samplers equivalent to a fresh rebuild.
+    #[test]
+    fn updates_equal_rebuild() {
+        check("update == rebuild for all samplers", 16, |rng| {
+            let t = 1 << (2 + rng.below(5));
+            let mut p = random_params(rng, t, false);
+            let mut ls = LSearch::build(&p);
+            let mut bs = BSearch::build(&p);
+            let mut al = Alias::build(&p);
+            let mut ft = FTree::build(&p);
+            for _ in 0..50 {
+                let idx = rng.below(t);
+                // keep parameters nonnegative
+                let delta = if p[idx] > 0.5 { rng.next_f64() - 0.5 } else { rng.next_f64() };
+                p[idx] += delta;
+                ls.update(idx, delta);
+                bs.update(idx, delta);
+                al.update(idx, delta);
+                ft.update(idx, delta);
+            }
+            let want: f64 = p.iter().sum();
+            for (name, total) in [
+                ("lsearch", ls.total()),
+                ("bsearch", bs.total()),
+                ("alias", al.total()),
+                ("ftree", ft.total()),
+            ] {
+                close(total, want, 1e-7, 1e-9).map_err(|e| format!("{name}: {e}"))?;
+            }
+            // pointwise equivalence with a rebuilt BSearch on shared u
+            let fresh = BSearch::build(&p);
+            for _ in 0..100 {
+                let u = rng.uniform(want * 0.999999);
+                let w = fresh.sample(u);
+                if ls.sample(u) != w || bs.sample(u) != w || ft.sample(u) != w {
+                    return Err(format!("post-update divergence at u={u}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Degenerate shapes: single element, all-but-one zero, u at edges.
+    #[test]
+    fn edge_cases() {
+        let p = vec![2.0];
+        assert_eq!(LSearch::build(&p).sample(1.9), 0);
+        assert_eq!(BSearch::build(&p).sample(0.0), 0);
+        assert_eq!(FTree::build(&p).sample(1.9), 0);
+
+        let p = vec![0.0, 0.0, 3.0, 0.0];
+        for u in [0.0, 1.5, 2.999] {
+            assert_eq!(LSearch::build(&p).sample(u), 2);
+            assert_eq!(BSearch::build(&p).sample(u), 2);
+            assert_eq!(FTree::build(&p).sample(u), 2);
+            assert_eq!(Alias::build(&p).sample(u), 2);
+        }
+    }
+
+    /// Non-power-of-two lengths work (FTree pads internally).
+    #[test]
+    fn non_power_of_two_lengths() {
+        for t in [1usize, 3, 5, 7, 100, 1000, 1025] {
+            let p: Vec<f64> = (0..t).map(|i| (i % 7) as f64 + 0.25).collect();
+            let ft = FTree::build(&p);
+            let bs = BSearch::build(&p);
+            assert!((ft.total() - bs.total()).abs() < 1e-9);
+            let mut rng = Pcg32::seeded(t as u64);
+            for _ in 0..100 {
+                let u = rng.uniform(ft.total());
+                assert_eq!(ft.sample(u), bs.sample(u), "t={t} u={u}");
+            }
+        }
+    }
+}

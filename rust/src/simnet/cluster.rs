@@ -1,0 +1,91 @@
+//! Cluster topology model: machines × cores, link latencies, bandwidth.
+//!
+//! Numbers default to the paper's testbed class (TACC Maverick: 20-core
+//! Xeon E5-2680 nodes on FDR InfiniBand ≈ 54 Gb/s, ~1–2 µs MPI latency;
+//! we default to a slightly conservative 50 µs + 10 Gb/s to represent
+//! commodity clusters, configurable per experiment).
+
+/// Simulated cluster shape.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterSpec {
+    pub machines: usize,
+    pub cores_per_machine: usize,
+    /// same-machine worker-to-worker hop (queue handoff)
+    pub intra_latency_ns: u64,
+    /// cross-machine message latency
+    pub inter_latency_ns: u64,
+    /// cross-machine link bandwidth (bits/s); intra-machine transfers are
+    /// treated as free (shared memory)
+    pub inter_bandwidth_bps: f64,
+}
+
+impl ClusterSpec {
+    /// Single multi-core machine (Fig. 5).
+    pub fn multicore(cores: usize) -> ClusterSpec {
+        ClusterSpec {
+            machines: 1,
+            cores_per_machine: cores,
+            intra_latency_ns: 200,
+            inter_latency_ns: 0,
+            inter_bandwidth_bps: f64::INFINITY,
+        }
+    }
+
+    /// The paper's distributed setting: `machines` × 20 cores (Fig. 6).
+    pub fn cluster(machines: usize) -> ClusterSpec {
+        ClusterSpec {
+            machines,
+            cores_per_machine: 20,
+            intra_latency_ns: 200,
+            inter_latency_ns: 50_000,
+            inter_bandwidth_bps: 10e9,
+        }
+    }
+
+    pub fn total_workers(&self) -> usize {
+        self.machines * self.cores_per_machine
+    }
+
+    pub fn machine_of(&self, worker: usize) -> usize {
+        worker / self.cores_per_machine
+    }
+
+    /// Virtual ns to move `bytes` from worker `a` to worker `b`.
+    pub fn transfer_ns(&self, bytes: usize, a: usize, b: usize) -> u64 {
+        if self.machine_of(a) == self.machine_of(b) {
+            self.intra_latency_ns
+        } else {
+            let wire = if self.inter_bandwidth_bps.is_finite() {
+                (bytes as f64 * 8.0 / self.inter_bandwidth_bps * 1e9) as u64
+            } else {
+                0
+            };
+            self.inter_latency_ns + wire
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multicore_is_one_machine() {
+        let c = ClusterSpec::multicore(20);
+        assert_eq!(c.total_workers(), 20);
+        assert_eq!(c.machine_of(19), 0);
+        assert_eq!(c.transfer_ns(1 << 20, 3, 17), c.intra_latency_ns);
+    }
+
+    #[test]
+    fn cluster_charges_wire_time() {
+        let c = ClusterSpec::cluster(32);
+        assert_eq!(c.total_workers(), 640);
+        assert_eq!(c.machine_of(20), 1);
+        let same = c.transfer_ns(10_000, 0, 19);
+        let cross = c.transfer_ns(10_000, 0, 20);
+        assert!(cross > same);
+        // 10 KB at 10 Gb/s = 8 µs wire + 50 µs latency
+        assert_eq!(cross, 50_000 + 8_000);
+    }
+}

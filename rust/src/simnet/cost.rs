@@ -1,0 +1,124 @@
+//! The compute cost model: virtual ns charged for each unit of real work a
+//! simulated worker performs.
+//!
+//! Constants are *calibrated against this machine's real serial sampler*
+//! (`fnomad-lda calibrate` measures F+LDA(word) ns/token and prints a
+//! CostModel; the defaults below come from that measurement) so a 1-worker
+//! simulation reproduces real single-thread wall clock, and p-worker
+//! numbers are "p of these cores plus the network".
+
+use crate::corpus::Corpus;
+use crate::lda::state::{Hyper, LdaState};
+use crate::lda::{FLdaWord, Sweep};
+use crate::util::rng::Pcg32;
+
+/// Per-operation virtual-time charges (ns).
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// one token resample inside a word subtask (dec + r build + two-level
+    /// draw + inc + 2 tree updates); dominated by Θ(|T_d| + log T)
+    pub token_ns: f64,
+    /// raising/lowering one support topic on subtask entry/exit
+    pub support_ns: f64,
+    /// F+tree full rebuild, per topic (global-token arrival)
+    pub rebuild_ns_per_topic: f64,
+    /// parameter-server service time per row pulled/pushed
+    pub server_ns_per_word: f64,
+    /// extra per-token cost when streaming state from disk (Yahoo!LDA(D))
+    pub disk_ns_per_token: f64,
+}
+
+impl CostModel {
+    /// Defaults for a given topic count, from the calibration measurement
+    /// on this machine (token cost grows ~ a + b·log2 T).
+    pub fn default_for(t: usize) -> CostModel {
+        let log_t = (t.max(2) as f64).log2();
+        CostModel {
+            token_ns: 140.0 + 28.0 * log_t,
+            support_ns: 16.0,
+            rebuild_ns_per_topic: 4.0,
+            server_ns_per_word: 250.0,
+            disk_ns_per_token: 600.0,
+        }
+    }
+
+    /// Calibrate `token_ns` by timing the real serial word-major sampler
+    /// on (a slice of) the target corpus.
+    pub fn calibrate(corpus: &Corpus, hyper: Hyper, sweeps: usize) -> CostModel {
+        let mut rng = Pcg32::seeded(0xCA11B);
+        let mut state = LdaState::init_random(corpus, hyper, &mut rng);
+        let mut sampler = FLdaWord::new(&state, corpus);
+        // warm-up sweep (allocation, cache effects)
+        sampler.sweep(&mut state, corpus, &mut rng);
+        let t0 = std::time::Instant::now();
+        for _ in 0..sweeps.max(1) {
+            sampler.sweep(&mut state, corpus, &mut rng);
+        }
+        let ns = t0.elapsed().as_nanos() as f64
+            / (sweeps.max(1) * corpus.num_tokens()) as f64;
+        CostModel { token_ns: ns, ..CostModel::default_for(hyper.t) }
+    }
+
+    /// Virtual duration of one word subtask.  A token with no local
+    /// occurrences is checked and forwarded without touching the tree
+    /// (the worker code early-returns), so it costs only the check.
+    pub fn word_task_ns(&self, occurrences: usize, support: usize) -> u64 {
+        if occurrences == 0 {
+            return 60;
+        }
+        (self.token_ns * occurrences as f64 + self.support_ns * (2 * support) as f64)
+            .round() as u64
+    }
+
+    /// Virtual duration of a global-token fold (tree rebuild).
+    pub fn global_task_ns(&self, t: usize) -> u64 {
+        (self.rebuild_ns_per_topic * t as f64).round() as u64
+    }
+
+    /// Server service time for an op touching `words` rows.
+    pub fn server_service_ns(&self, words: usize) -> u64 {
+        (self.server_ns_per_word * words.max(1) as f64).round() as u64
+    }
+
+    /// Compute time for a PS batch of `tokens` (+ disk surcharge if the
+    /// disk flavor is simulated).
+    pub fn batch_compute_ns(&self, tokens: usize, disk: bool) -> u64 {
+        let per = self.token_ns + if disk { self.disk_ns_per_token } else { 0.0 };
+        (per * tokens as f64).round() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::presets::preset;
+
+    #[test]
+    fn defaults_scale_with_topics() {
+        let small = CostModel::default_for(128);
+        let large = CostModel::default_for(8192);
+        assert!(large.token_ns > small.token_ns);
+    }
+
+    #[test]
+    fn word_task_cost_is_linear_in_occurrences() {
+        let m = CostModel::default_for(1024);
+        let one = m.word_task_ns(1, 4);
+        let hundred = m.word_task_ns(100, 4);
+        assert!(hundred > 50 * one / 2);
+        assert_eq!(m.word_task_ns(0, 99), 60); // empty subtask = check + forward
+    }
+
+    #[test]
+    fn calibration_runs_and_is_positive() {
+        let corpus = preset("tiny").unwrap();
+        let m = CostModel::calibrate(&corpus, Hyper::paper_default(16), 1);
+        assert!(m.token_ns > 0.0 && m.token_ns < 1e6, "token_ns {}", m.token_ns);
+    }
+
+    #[test]
+    fn disk_flavor_costs_more() {
+        let m = CostModel::default_for(1024);
+        assert!(m.batch_compute_ns(1000, true) > m.batch_compute_ns(1000, false));
+    }
+}

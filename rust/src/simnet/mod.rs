@@ -1,0 +1,118 @@
+//! Virtual-time discrete-event execution of the parallel runtimes.
+//!
+//! **Why this exists** (DESIGN.md §Hardware-Adaptation): the paper's
+//! scaling figures need 20-core machines and a 32-node cluster; this
+//! session has one core.  The simulator runs the *actual* Gibbs updates —
+//! workers mutate real [`crate::nomad::worker::WorkerState`]s, so
+//! convergence quality is real, not modeled — while **time** is charged
+//! from a calibrated per-token cost model plus a cluster network model.
+//! Reported speedups and crossovers are therefore statements about the
+//! algorithmic coordination structure (token ring vs. central server),
+//! which is exactly what Figs. 5–6 compare; absolute seconds are virtual.
+//!
+//! * [`cost`] — [`cost::CostModel`]: per-token sampling cost (calibrated
+//!   against the real serial sampler by `fnomad-lda calibrate`), tree
+//!   maintenance, server service times, the disk-stream surcharge.
+//! * [`cluster`] — [`cluster::ClusterSpec`]: machines × cores, intra/inter
+//!   latency, link bandwidth.
+//! * [`nomad_sim`] — Nomad under virtual time (Figs. 5a-c, 6).
+//! * [`ps_sim`] — the parameter-server baseline, memory and disk flavors
+//!   (Yahoo!LDA(M)/(D) in Figs. 5–6).
+
+pub mod cluster;
+pub mod cost;
+pub mod nomad_sim;
+pub mod ps_sim;
+
+pub use cluster::ClusterSpec;
+pub use cost::CostModel;
+pub use nomad_sim::NomadSim;
+pub use ps_sim::PsSim;
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Discrete-event queue over (virtual ns, tiebreak seq, event).
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Reverse<(u64, u64, EventBox<E>)>>,
+    seq: u64,
+}
+
+/// Wrapper that ignores the event payload in Ord (heap needs total order).
+struct EventBox<E>(E);
+
+impl<E> PartialEq for EventBox<E> {
+    fn eq(&self, _: &Self) -> bool {
+        true
+    }
+}
+impl<E> Eq for EventBox<E> {}
+impl<E> PartialOrd for EventBox<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for EventBox<E> {
+    fn cmp(&self, _: &Self) -> std::cmp::Ordering {
+        std::cmp::Ordering::Equal
+    }
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    /// Schedule `event` at absolute virtual time `at_ns`.
+    pub fn schedule(&mut self, at_ns: u64, event: E) {
+        self.seq += 1;
+        self.heap.push(Reverse((at_ns, self.seq, EventBox(event))));
+    }
+
+    /// Pop the earliest event: (time, event).
+    pub fn pop(&mut self) -> Option<(u64, E)> {
+        self.heap.pop().map(|Reverse((t, _, e))| (t, e.0))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_pop_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(30, "c");
+        q.schedule(10, "a");
+        q.schedule(20, "b");
+        assert_eq!(q.pop(), Some((10, "a")));
+        assert_eq!(q.pop(), Some((20, "b")));
+        assert_eq!(q.pop(), Some((30, "c")));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        q.schedule(5, 1);
+        q.schedule(5, 2);
+        q.schedule(5, 3);
+        assert_eq!(q.pop().unwrap().1, 1);
+        assert_eq!(q.pop().unwrap().1, 2);
+        assert_eq!(q.pop().unwrap().1, 3);
+    }
+}

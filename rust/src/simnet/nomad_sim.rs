@@ -1,0 +1,346 @@
+//! Nomad LDA under virtual time.
+//!
+//! Same epoch protocol as [`crate::nomad::runtime`] (tokens hop the ring,
+//! `τ_s` circulates, exact fold at the boundary), same
+//! [`WorkerState`] math — but workers are simulated entities: each is busy
+//! for `CostModel::word_task_ns(...)` of virtual time per subtask, and
+//! token transfers cost `ClusterSpec::transfer_ns(...)`.  Ring routing is
+//! machine-aware: consecutive worker ids share a machine, so most hops are
+//! intra-node and only every 20th hop crosses the network (the same
+//! locality the real Nomad layout gives).
+
+use std::collections::VecDeque;
+
+use crate::corpus::{Corpus, Partition};
+use crate::lda::state::{Hyper, LdaState, SparseCounts};
+use crate::nomad::token::{GlobalToken, WordToken};
+use crate::nomad::worker::WorkerState;
+use crate::util::rng::Pcg32;
+
+use super::{ClusterSpec, CostModel, EventQueue};
+
+/// Simulated-run configuration.
+#[derive(Clone, Debug)]
+pub struct NomadSimConfig {
+    pub cluster: ClusterSpec,
+    pub cost: CostModel,
+    pub seed: u64,
+    /// τ_s circulations per epoch
+    pub s_circulations: u32,
+}
+
+impl NomadSimConfig {
+    pub fn new(cluster: ClusterSpec, t: usize) -> Self {
+        NomadSimConfig {
+            cluster,
+            cost: CostModel::default_for(t),
+            seed: 0,
+            s_circulations: 4,
+        }
+    }
+}
+
+/// Epoch result under virtual time.
+#[derive(Clone, Copy, Debug)]
+pub struct SimEpochStats {
+    pub epoch: usize,
+    /// virtual wall clock at epoch end (ns since simulation start)
+    pub vtime_ns: u64,
+    pub processed: u64,
+}
+
+enum Token {
+    Word(WordToken),
+    Global(GlobalToken),
+}
+
+enum Event {
+    /// token arrives at worker's inbox
+    Deliver(usize, Token),
+    /// worker finishes its current token
+    Complete(usize),
+}
+
+/// The simulated nomad cluster.
+pub struct NomadSim {
+    workers: Vec<WorkerState>,
+    inboxes: Vec<VecDeque<Token>>,
+    current: Vec<Option<Token>>,
+    cfg: NomadSimConfig,
+    hyper: Hyper,
+    /// virtual clock (ns)
+    now: u64,
+    home: Vec<WordToken>,
+    s: Vec<i64>,
+    num_words: usize,
+    pub epochs_run: usize,
+    processed_total: u64,
+}
+
+impl NomadSim {
+    pub fn new(corpus: &Corpus, hyper: Hyper, cfg: NomadSimConfig) -> Self {
+        let p = cfg.cluster.total_workers();
+        assert!(p >= 1);
+        let partition = Partition::by_tokens(corpus, p);
+        let mut seed_rng = Pcg32::new(cfg.seed, 0x51AD);
+
+        let mut nwt = vec![SparseCounts::default(); corpus.vocab];
+        let mut s = vec![0i64; hyper.t];
+        let mut all_z: Vec<Vec<u16>> = Vec::with_capacity(corpus.num_docs());
+        for doc in &corpus.docs {
+            let zs: Vec<u16> = doc
+                .iter()
+                .map(|&w| {
+                    let topic = seed_rng.below(hyper.t) as u16;
+                    nwt[w as usize].inc(topic);
+                    s[topic as usize] += 1;
+                    topic
+                })
+                .collect();
+            all_z.push(zs);
+        }
+        let home: Vec<WordToken> = nwt
+            .into_iter()
+            .enumerate()
+            .map(|(w, counts)| WordToken::new(w as u32, counts))
+            .collect();
+
+        let mut workers = Vec::with_capacity(p);
+        for l in 0..p {
+            let (start, end) = partition.ranges[l];
+            workers.push(WorkerState::new(
+                l,
+                p,
+                corpus,
+                hyper,
+                start,
+                end,
+                all_z[start..end].to_vec(),
+                s.clone(),
+                seed_rng.split(l as u64 + 1),
+            ));
+        }
+        let num_words = home.len();
+        NomadSim {
+            workers,
+            inboxes: (0..p).map(|_| VecDeque::new()).collect(),
+            current: (0..p).map(|_| None).collect(),
+            cfg,
+            hyper,
+            now: 0,
+            home,
+            s,
+            num_words,
+            epochs_run: 0,
+            processed_total: 0,
+        }
+    }
+
+    fn token_bytes(&self, tok: &Token) -> usize {
+        match tok {
+            // word id + hops + (topic, count) pairs
+            Token::Word(w) => 8 + 6 * w.counts.support(),
+            Token::Global(_) => 8 * self.hyper.t,
+        }
+    }
+
+    /// Virtual service time of a token on worker `l`.
+    fn service_ns(&self, l: usize, tok: &Token) -> u64 {
+        match tok {
+            Token::Word(w) => {
+                let occ = self.workers[l].occurrence_count(w.word as usize);
+                self.cfg.cost.word_task_ns(occ, w.counts.support())
+            }
+            Token::Global(_) => self.cfg.cost.global_task_ns(self.hyper.t),
+        }
+    }
+
+    /// Run one epoch of virtual time; returns stats at the boundary.
+    pub fn run_epoch(&mut self) -> SimEpochStats {
+        let p = self.workers.len();
+        let mut queue: EventQueue<Event> = EventQueue::new();
+
+        // inject word tokens round-robin + the global token at worker 0
+        let tokens: Vec<WordToken> = std::mem::take(&mut self.home);
+        for (i, mut tok) in tokens.into_iter().enumerate() {
+            tok.hops = 0;
+            // injection is free: tokens were already resident from the
+            // previous epoch; measurement starts at the boundary
+            queue.schedule(self.now, Event::Deliver(i % p, Token::Word(tok)));
+        }
+        queue.schedule(
+            self.now,
+            Event::Deliver(0, Token::Global(GlobalToken::new(self.s.clone()))),
+        );
+
+        let mut words_home: Vec<WordToken> = Vec::with_capacity(self.num_words);
+        let mut global_home: Option<GlobalToken> = None;
+
+        while words_home.len() < self.num_words || global_home.is_none() {
+            let (t, ev) = queue.pop().expect("simulation starved");
+            self.now = t;
+            match ev {
+                Event::Deliver(l, tok) => {
+                    self.inboxes[l].push_back(tok);
+                    if self.current[l].is_none() {
+                        self.start_next(l, &mut queue);
+                    }
+                }
+                Event::Complete(l) => {
+                    let tok = self.current[l].take().expect("complete without token");
+                    match tok {
+                        Token::Word(mut w) => {
+                            w.hops += 1;
+                            if w.hops as usize >= p {
+                                words_home.push(w);
+                            } else {
+                                let next = (l + 1) % p;
+                                let bytes = self.token_bytes(&Token::Word(w.clone()));
+                                let dt = self.cfg.cluster.transfer_ns(bytes, l, next);
+                                queue.schedule(
+                                    self.now + dt,
+                                    Event::Deliver(next, Token::Word(w)),
+                                );
+                            }
+                        }
+                        Token::Global(mut g) => {
+                            g.hops += 1;
+                            if g.hops >= p as u32 * self.cfg.s_circulations {
+                                global_home = Some(g);
+                            } else {
+                                let next = (l + 1) % p;
+                                let dt = self
+                                    .cfg
+                                    .cluster
+                                    .transfer_ns(8 * self.hyper.t, l, next);
+                                queue.schedule(
+                                    self.now + dt,
+                                    Event::Deliver(next, Token::Global(g)),
+                                );
+                            }
+                        }
+                    }
+                    if !self.inboxes[l].is_empty() {
+                        self.start_next(l, &mut queue);
+                    }
+                }
+            }
+        }
+
+        // exact epoch fold (direct access: the sim is single-threaded)
+        words_home.sort_by_key(|t| t.word);
+        self.home = words_home;
+        let mut s = global_home.unwrap().s;
+        let mut processed = 0u64;
+        for w in &mut self.workers {
+            for (acc, d) in s.iter_mut().zip(w.take_s_delta()) {
+                *acc += d;
+            }
+            processed += w.processed;
+        }
+        for w in &mut self.workers {
+            w.set_s(&s);
+        }
+        self.s = s;
+        self.epochs_run += 1;
+        let delta = processed - self.processed_total;
+        self.processed_total = processed;
+        SimEpochStats { epoch: self.epochs_run, vtime_ns: self.now, processed: delta }
+    }
+
+    /// Pop the worker's next token, perform the *real* state update, and
+    /// schedule its completion after the modeled service time.
+    fn start_next(&mut self, l: usize, queue: &mut EventQueue<Event>) {
+        let mut tok = self.inboxes[l].pop_front().expect("start with empty inbox");
+        let dur = self.service_ns(l, &tok);
+        match &mut tok {
+            Token::Word(w) => {
+                self.workers[l].process_word_token(w);
+            }
+            Token::Global(g) => {
+                self.workers[l].process_global_token(g);
+            }
+        }
+        self.current[l] = Some(tok);
+        queue.schedule(self.now + dur, Event::Complete(l));
+    }
+
+    /// Virtual seconds elapsed since simulation start.
+    pub fn vtime_secs(&self) -> f64 {
+        self.now as f64 / 1e9
+    }
+
+    /// Assemble the exact global state (epoch boundaries only).
+    pub fn gather_state(&self, corpus: &Corpus) -> LdaState {
+        let mut z: Vec<Vec<u16>> = vec![Vec::new(); corpus.num_docs()];
+        let mut ntd: Vec<SparseCounts> = vec![SparseCounts::default(); corpus.num_docs()];
+        for w in &self.workers {
+            for (off, (counts, zs)) in w.ntd.iter().zip(&w.z).enumerate() {
+                ntd[w.start_doc + off] = counts.clone();
+                z[w.start_doc + off] = zs.clone();
+            }
+        }
+        let mut nwt = vec![SparseCounts::default(); corpus.vocab];
+        for tok in &self.home {
+            nwt[tok.word as usize] = tok.counts.clone();
+        }
+        let nt: Vec<u32> = self.s.iter().map(|&v| u32::try_from(v.max(0)).unwrap()).collect();
+        LdaState { hyper: self.hyper, vocab: corpus.vocab, z, ntd, nwt, nt }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::presets::preset;
+    use crate::lda::log_likelihood;
+
+    fn sim(corpus: &Corpus, workers: usize, seed: u64) -> NomadSim {
+        let mut cfg =
+            NomadSimConfig::new(ClusterSpec::multicore(workers), 8);
+        cfg.seed = seed;
+        NomadSim::new(corpus, Hyper::paper_default(8), cfg)
+    }
+
+    #[test]
+    fn simulated_epoch_is_exact_and_improves_ll() {
+        let corpus = preset("tiny").unwrap();
+        let mut s = sim(&corpus, 4, 1);
+        let ll0 = log_likelihood(&s.gather_state(&corpus));
+        let stats = s.run_epoch();
+        assert_eq!(stats.processed as usize, corpus.num_tokens());
+        assert!(stats.vtime_ns > 0);
+        let state = s.gather_state(&corpus);
+        state.check_consistency(&corpus).unwrap();
+        for _ in 0..5 {
+            s.run_epoch();
+        }
+        assert!(log_likelihood(&s.gather_state(&corpus)) > ll0);
+    }
+
+    #[test]
+    fn more_workers_less_virtual_time() {
+        let corpus = preset("tiny").unwrap();
+        let t1 = {
+            let mut s = sim(&corpus, 1, 2);
+            s.run_epoch().vtime_ns
+        };
+        let t8 = {
+            let mut s = sim(&corpus, 8, 2);
+            s.run_epoch().vtime_ns
+        };
+        assert!(
+            t8 * 3 < t1,
+            "8 workers should be >3x faster in virtual time: t1={t1} t8={t8}"
+        );
+    }
+
+    #[test]
+    fn virtual_clock_is_monotone_across_epochs() {
+        let corpus = preset("tiny").unwrap();
+        let mut s = sim(&corpus, 4, 3);
+        let a = s.run_epoch().vtime_ns;
+        let b = s.run_epoch().vtime_ns;
+        assert!(b > a);
+    }
+}

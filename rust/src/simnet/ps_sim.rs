@@ -1,0 +1,417 @@
+//! The parameter-server baseline under virtual time — Yahoo!LDA(M) and
+//! Yahoo!LDA(D) of Figs. 5–6.
+//!
+//! Workers run the *real* cached-batch sampler
+//! ([`crate::ps::worker::PsWorkerState::process_batch`]); the simulator
+//! charges pull round-trips, sharded-server service time, push transfers
+//! and (for the disk flavor) the per-token streaming surcharge.  The
+//! server is sharded one shard per machine (Yahoo! LDA's distributed ICE
+//! store); each shard is a FIFO queue — the queueing delay under p
+//! clients is exactly the central-coordination bottleneck the paper's
+//! Nomad design removes.
+
+use crate::corpus::{Corpus, Partition};
+use crate::lda::state::{Hyper, LdaState, SparseCounts};
+use crate::ps::worker::PsWorkerState;
+use crate::util::rng::Pcg32;
+
+use super::{ClusterSpec, CostModel, EventQueue};
+
+/// Simulated-PS configuration.
+#[derive(Clone, Debug)]
+pub struct PsSimConfig {
+    pub cluster: ClusterSpec,
+    pub cost: CostModel,
+    pub seed: u64,
+    /// pull/push cadence in documents
+    pub batch_docs: usize,
+    /// Yahoo!LDA(D): charge the disk-streaming surcharge
+    pub disk: bool,
+}
+
+impl PsSimConfig {
+    pub fn new(cluster: ClusterSpec, t: usize) -> Self {
+        PsSimConfig {
+            cluster,
+            cost: CostModel::default_for(t),
+            seed: 0,
+            batch_docs: 16,
+            disk: false,
+        }
+    }
+}
+
+/// Epoch stats under virtual time.
+#[derive(Clone, Copy, Debug)]
+pub struct PsSimEpochStats {
+    pub epoch: usize,
+    pub vtime_ns: u64,
+    pub processed: u64,
+    /// mean shard queueing delay per op this epoch (ns)
+    pub mean_server_wait_ns: f64,
+}
+
+enum Event {
+    /// worker w's pull request reaches shard s
+    PullArrive { worker: usize, shard: usize },
+    /// shard finished serving w's pull; response heads back
+    PullServed { worker: usize, shard: usize },
+    /// pull response reaches the worker: compute the batch
+    PullResponse { worker: usize },
+    /// batch compute done: send push, then next pull (or finish)
+    ComputeDone { worker: usize },
+    /// push applied at the shard
+    PushArrive { shard: usize, pushes: Vec<(u32, Vec<(u16, i32)>)>, nt_delta: Vec<i64> },
+}
+
+/// The simulated PS cluster.
+pub struct PsSim {
+    workers: Vec<PsWorkerState>,
+    /// authoritative server state (sharding is a *timing* construct; the
+    /// data is one logical store)
+    nwt: Vec<SparseCounts>,
+    nt: Vec<i64>,
+    /// per-shard busy horizon
+    shard_busy: Vec<u64>,
+    cfg: PsSimConfig,
+    hyper: Hyper,
+    vocab: usize,
+    now: u64,
+    pub epochs_run: usize,
+    processed_total: u64,
+    // per-epoch scratch
+    batch_of: Vec<usize>,
+    wait_ns_sum: f64,
+    wait_ops: u64,
+}
+
+impl PsSim {
+    pub fn new(corpus: &Corpus, hyper: Hyper, cfg: PsSimConfig) -> Self {
+        let p = cfg.cluster.total_workers();
+        let partition = Partition::by_tokens(corpus, p);
+        let mut seed_rng = Pcg32::new(cfg.seed, 0x5EED);
+
+        let mut nwt = vec![SparseCounts::default(); corpus.vocab];
+        let mut nt = vec![0i64; hyper.t];
+        let mut all_z: Vec<Vec<u16>> = Vec::with_capacity(corpus.num_docs());
+        for doc in &corpus.docs {
+            let zs: Vec<u16> = doc
+                .iter()
+                .map(|&w| {
+                    let topic = seed_rng.below(hyper.t) as u16;
+                    nwt[w as usize].inc(topic);
+                    nt[topic as usize] += 1;
+                    topic
+                })
+                .collect();
+            all_z.push(zs);
+        }
+
+        let mut workers = Vec::with_capacity(p);
+        for l in 0..p {
+            let (start, end) = partition.ranges[l];
+            workers.push(PsWorkerState::new(
+                l,
+                corpus,
+                hyper,
+                start,
+                end,
+                all_z[start..end].to_vec(),
+                cfg.batch_docs,
+                seed_rng.split(l as u64 + 1),
+            ));
+        }
+
+        // Yahoo!LDA's ICE store is distributed across machines AND
+        // multi-threaded within one: model at least 4 service lanes so a
+        // single-node PS is not artificially serialized (otherwise shard
+        // saturation masks every other effect, e.g. the disk surcharge).
+        let shards = cfg.cluster.machines.max(4).min(cfg.cluster.total_workers().max(1));
+        PsSim {
+            workers,
+            nwt,
+            nt,
+            shard_busy: vec![0; shards],
+            cfg,
+            hyper,
+            vocab: corpus.vocab,
+            now: 0,
+            epochs_run: 0,
+            processed_total: 0,
+            batch_of: vec![0; p],
+            wait_ns_sum: 0.0,
+            wait_ops: 0,
+        }
+    }
+
+    fn shard_of(&self, worker: usize) -> usize {
+        // a worker talks to the shard co-resident with its machine's data
+        // range; hashing by worker spreads load like Yahoo!LDA's ICE
+        worker % self.shard_busy.len()
+    }
+
+    /// Serve an op at a shard: FIFO queue + service time; returns when the
+    /// op completes and accumulates queue-wait telemetry.
+    fn shard_serve(&mut self, shard: usize, arrival: u64, service: u64) -> u64 {
+        let start = arrival.max(self.shard_busy[shard]);
+        self.wait_ns_sum += (start - arrival) as f64;
+        self.wait_ops += 1;
+        self.shard_busy[shard] = start + service;
+        start + service
+    }
+
+    /// network time worker <-> its shard (server lives on machine 0 side
+    /// of each shard; cross-machine unless the worker is on the shard's
+    /// machine)
+    fn net_ns(&self, worker: usize, shard: usize, bytes: usize) -> u64 {
+        let wm = self.cfg.cluster.machine_of(worker);
+        if wm == shard % self.cfg.cluster.machines {
+            self.cfg.cluster.intra_latency_ns
+        } else {
+            self.cfg.cluster.transfer_ns(bytes, worker, shard * self.cfg.cluster.cores_per_machine % self.cfg.cluster.total_workers().max(1))
+        }
+    }
+
+    pub fn run_epoch(&mut self) -> PsSimEpochStats {
+        let p = self.workers.len();
+        let mut queue: EventQueue<Event> = EventQueue::new();
+        self.batch_of = vec![0; p];
+        self.wait_ns_sum = 0.0;
+        self.wait_ops = 0;
+        let mut done = 0usize;
+        let mut processed = 0u64;
+
+        // every worker issues its first pull
+        for w in 0..p {
+            let shard = self.shard_of(w);
+            let words = self.workers[w].batch_words(0);
+            let bytes = 4 * words.len();
+            let dt = self.net_ns(w, shard, bytes);
+            queue.schedule(self.now + dt, Event::PullArrive { worker: w, shard });
+        }
+
+        while done < p {
+            let (t, ev) = queue.pop().expect("ps sim starved");
+            self.now = t;
+            match ev {
+                Event::PullArrive { worker, shard } => {
+                    let b = self.batch_of[worker];
+                    let nwords = self.workers[worker].batch_words(b).len();
+                    let svc = self.cfg.cost.server_service_ns(nwords);
+                    let served_at = self.shard_serve(shard, t, svc);
+                    queue.schedule(served_at, Event::PullServed { worker, shard });
+                }
+                Event::PullServed { worker, shard } => {
+                    let b = self.batch_of[worker];
+                    // response payload ≈ rows' support
+                    let words = self.workers[worker].batch_words(b);
+                    let bytes: usize =
+                        words.iter().map(|&w| 6 * self.nwt[w as usize].support() + 8).sum();
+                    let dt = self.net_ns(worker, shard, bytes);
+                    queue.schedule(self.now + dt, Event::PullResponse { worker });
+                }
+                Event::PullResponse { worker } => {
+                    let b = self.batch_of[worker];
+                    let tokens = self.workers[worker].batch_tokens(b);
+                    let dur = self.cfg.cost.batch_compute_ns(tokens, self.cfg.disk);
+                    queue.schedule(self.now + dur, Event::ComputeDone { worker });
+                }
+                Event::ComputeDone { worker } => {
+                    // the *real* sampling happens here, against the server
+                    // state as of now (models the stale window: concurrent
+                    // pushes that landed during compute were not visible)
+                    let b = self.batch_of[worker];
+                    let words = self.workers[worker].batch_words(b);
+                    let rows: Vec<SparseCounts> =
+                        words.iter().map(|&w| self.nwt[w as usize].clone()).collect();
+                    let out = self.workers[worker].process_batch(
+                        b,
+                        &words,
+                        rows,
+                        self.nt.clone(),
+                    );
+                    processed += out.processed;
+                    let shard = self.shard_of(worker);
+                    let bytes: usize =
+                        out.pushes.iter().map(|(_, d)| 6 * d.len() + 8).sum();
+                    let dt = self.net_ns(worker, shard, bytes);
+                    queue.schedule(self.now + dt, Event::PushArrive {
+                        shard,
+                        pushes: out.pushes,
+                        nt_delta: out.nt_delta,
+                    });
+                    // fire-and-forget push: the worker proceeds immediately
+                    self.batch_of[worker] += 1;
+                    if self.batch_of[worker] >= self.workers[worker].num_batches() {
+                        done += 1;
+                    } else {
+                        let nb = self.batch_of[worker];
+                        let nwords = self.workers[worker].batch_words(nb).len();
+                        let dt = self.net_ns(worker, shard, 4 * nwords);
+                        queue.schedule(self.now + dt, Event::PullArrive { worker, shard });
+                    }
+                }
+                Event::PushArrive { shard, pushes, nt_delta } => {
+                    let svc = self.cfg.cost.server_service_ns(pushes.len());
+                    let _ = self.shard_serve(shard, t, svc);
+                    // apply at service time (single-threaded sim: now)
+                    for (w, deltas) in &pushes {
+                        let row = &mut self.nwt[*w as usize];
+                        for &(topic, d) in deltas {
+                            match d.cmp(&0) {
+                                std::cmp::Ordering::Greater => {
+                                    for _ in 0..d {
+                                        row.inc(topic);
+                                    }
+                                }
+                                std::cmp::Ordering::Less => {
+                                    for _ in 0..(-d) {
+                                        if row.get(topic) > 0 {
+                                            row.dec(topic);
+                                        }
+                                    }
+                                }
+                                std::cmp::Ordering::Equal => {}
+                            }
+                        }
+                    }
+                    for (acc, d) in self.nt.iter_mut().zip(nt_delta) {
+                        *acc += d;
+                    }
+                }
+            }
+        }
+
+        // drain in-flight pushes so the epoch boundary is exact
+        while let Some((t, ev)) = queue.pop() {
+            self.now = t;
+            if let Event::PushArrive { shard, pushes, nt_delta } = ev {
+                let svc = self.cfg.cost.server_service_ns(pushes.len());
+                let _ = self.shard_serve(shard, t, svc);
+                for (w, deltas) in &pushes {
+                    let row = &mut self.nwt[*w as usize];
+                    for &(topic, d) in deltas {
+                        match d.cmp(&0) {
+                            std::cmp::Ordering::Greater => {
+                                for _ in 0..d {
+                                    row.inc(topic);
+                                }
+                            }
+                            std::cmp::Ordering::Less => {
+                                for _ in 0..(-d) {
+                                    if row.get(topic) > 0 {
+                                        row.dec(topic);
+                                    }
+                                }
+                            }
+                            std::cmp::Ordering::Equal => {}
+                        }
+                    }
+                }
+                for (acc, d) in self.nt.iter_mut().zip(nt_delta) {
+                    *acc += d;
+                }
+            }
+        }
+
+        self.epochs_run += 1;
+        self.processed_total += processed;
+        PsSimEpochStats {
+            epoch: self.epochs_run,
+            vtime_ns: self.now,
+            processed,
+            mean_server_wait_ns: if self.wait_ops > 0 {
+                self.wait_ns_sum / self.wait_ops as f64
+            } else {
+                0.0
+            },
+        }
+    }
+
+    pub fn vtime_secs(&self) -> f64 {
+        self.now as f64 / 1e9
+    }
+
+    /// Exact global state at epoch boundaries.
+    pub fn gather_state(&self, corpus: &Corpus) -> LdaState {
+        let mut z: Vec<Vec<u16>> = vec![Vec::new(); corpus.num_docs()];
+        let mut ntd: Vec<SparseCounts> = vec![SparseCounts::default(); corpus.num_docs()];
+        for w in &self.workers {
+            for (off, (counts, zs)) in w.ntd_rows().iter().zip(w.z_rows()).enumerate() {
+                ntd[w.start_doc() + off] = counts.clone();
+                z[w.start_doc() + off] = zs.clone();
+            }
+        }
+        let nt: Vec<u32> = self.nt.iter().map(|&v| u32::try_from(v.max(0)).unwrap()).collect();
+        LdaState {
+            hyper: self.hyper,
+            vocab: self.vocab,
+            z,
+            ntd,
+            nwt: self.nwt.clone(),
+            nt,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::presets::preset;
+    use crate::lda::log_likelihood;
+
+    fn mk(corpus: &Corpus, workers: usize, disk: bool) -> PsSim {
+        let mut cfg = PsSimConfig::new(ClusterSpec::multicore(workers), 8);
+        cfg.batch_docs = 4;
+        cfg.disk = disk;
+        cfg.seed = 9;
+        PsSim::new(corpus, Hyper::paper_default(8), cfg)
+    }
+
+    #[test]
+    fn ps_sim_trains_consistently() {
+        let corpus = preset("tiny").unwrap();
+        let mut sim = mk(&corpus, 4, false);
+        let ll0 = log_likelihood(&sim.gather_state(&corpus));
+        let stats = sim.run_epoch();
+        assert_eq!(stats.processed as usize, corpus.num_tokens());
+        let state = sim.gather_state(&corpus);
+        state.check_consistency(&corpus).unwrap();
+        for _ in 0..5 {
+            sim.run_epoch();
+        }
+        assert!(log_likelihood(&sim.gather_state(&corpus)) > ll0);
+    }
+
+    #[test]
+    fn disk_flavor_is_slower() {
+        let corpus = preset("tiny").unwrap();
+        let m = mk(&corpus, 4, false).run_epoch().vtime_ns;
+        let d = mk(&corpus, 4, true).run_epoch().vtime_ns;
+        assert!(d > m, "disk {d} <= mem {m}");
+    }
+
+    #[test]
+    fn nomad_beats_ps_in_virtual_time() {
+        // the headline Fig. 5 shape at tiny scale: same cores, same cost
+        // model — nomad's decentralized routing beats the server queue
+        let corpus = preset("tiny").unwrap();
+        let ps = mk(&corpus, 8, false).run_epoch().vtime_ns;
+        let mut ncfg = super::super::nomad_sim::NomadSimConfig::new(
+            ClusterSpec::multicore(8),
+            8,
+        );
+        ncfg.seed = 9;
+        let nomad = super::super::nomad_sim::NomadSim::new(
+            &corpus,
+            Hyper::paper_default(8),
+            ncfg,
+        )
+        .run_epoch()
+        .vtime_ns;
+        assert!(
+            nomad < ps,
+            "nomad vtime {nomad} should beat ps {ps}"
+        );
+    }
+}

@@ -1,0 +1,190 @@
+//! Micro-benchmark harness (the vendored crate set has no `criterion`).
+//!
+//! Calibrates iteration counts to a target measuring window, reports
+//! median-of-samples ns/op, and renders aligned tables — each `benches/*.rs`
+//! is a plain `fn main` that uses this to regenerate one paper table/figure.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// One measured statistic.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// median nanoseconds per op
+    pub ns_per_op: f64,
+    /// median absolute deviation of the per-sample estimates
+    pub mad_ns: f64,
+    pub samples: usize,
+}
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    pub warmup: Duration,
+    pub sample_time: Duration,
+    pub samples: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            warmup: Duration::from_millis(100),
+            sample_time: Duration::from_millis(60),
+            samples: 9,
+        }
+    }
+}
+
+/// Quick preset for expensive end-to-end benches.
+pub fn fast_opts() -> BenchOpts {
+    BenchOpts { warmup: Duration::from_millis(10), sample_time: Duration::from_millis(30), samples: 5 }
+}
+
+/// Measure `f`, auto-calibrating the batch size.  `f` should perform ONE op.
+pub fn measure<F: FnMut()>(name: &str, opts: BenchOpts, mut f: F) -> Measurement {
+    // warmup + calibration
+    let start = Instant::now();
+    let mut calib_iters = 0u64;
+    while start.elapsed() < opts.warmup {
+        f();
+        calib_iters += 1;
+    }
+    let per = opts.warmup.as_nanos() as f64 / calib_iters.max(1) as f64;
+    let batch = ((opts.sample_time.as_nanos() as f64 / per.max(1.0)).ceil() as u64).max(1);
+
+    let mut estimates = Vec::with_capacity(opts.samples);
+    for _ in 0..opts.samples {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        estimates.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+    }
+    estimates.sort_by(|a, b| a.total_cmp(b));
+    let median = estimates[estimates.len() / 2];
+    let mut devs: Vec<f64> = estimates.iter().map(|e| (e - median).abs()).collect();
+    devs.sort_by(|a, b| a.total_cmp(b));
+    Measurement {
+        name: name.to_string(),
+        ns_per_op: median,
+        mad_ns: devs[devs.len() / 2],
+        samples: opts.samples,
+    }
+}
+
+/// Measure a closure that returns a value (kept alive via black_box).
+pub fn measure_ret<T, F: FnMut() -> T>(name: &str, opts: BenchOpts, mut f: F) -> Measurement {
+    measure(name, opts, || {
+        black_box(f());
+    })
+}
+
+/// Aligned-table renderer for bench output (rows: name + columns).
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = format!("== {} ==\n", self.title);
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Human formatting for ns quantities.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_orders_cheap_vs_expensive() {
+        let opts = BenchOpts {
+            warmup: Duration::from_millis(5),
+            sample_time: Duration::from_millis(5),
+            samples: 3,
+        };
+        let cheap = measure("cheap", opts, || {
+            black_box(1 + 1);
+        });
+        let costly = measure("costly", opts, || {
+            let mut s = 0u64;
+            for i in 0..2000 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert!(costly.ns_per_op > cheap.ns_per_op);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["name", "ns"]);
+        t.row(vec!["a".into(), "1.0".into()]);
+        t.row(vec!["long-name".into(), "123.4".into()]);
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.lines().count() >= 4);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(5.0).ends_with("ns"));
+        assert!(fmt_ns(5e4).ends_with("µs"));
+        assert!(fmt_ns(5e7).ends_with("ms"));
+        assert!(fmt_ns(5e10).ends_with("s"));
+    }
+}

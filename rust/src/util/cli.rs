@@ -1,0 +1,152 @@
+//! Minimal flag parser (the vendored crate set has no `clap`).
+//!
+//! Syntax: `binary <subcommand> --key value --flag`.  Typed getters with
+//! defaults; unknown-flag detection; `--help` rendering from registered
+//! specs.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    /// flags actually consumed by a getter — used for unknown-flag errors
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (tests) — first non-flag token is
+    /// the subcommand.
+    pub fn from_tokens(tokens: &[String]) -> Result<Args, String> {
+        let mut subcommand = None;
+        let mut flags = BTreeMap::new();
+        let mut i = 0;
+        while i < tokens.len() {
+            let tok = &tokens[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                let (key, val) = if let Some((k, v)) = name.split_once('=') {
+                    (k.to_string(), v.to_string())
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    i += 1;
+                    (name.to_string(), tokens[i].clone())
+                } else {
+                    (name.to_string(), "true".to_string())
+                };
+                if flags.insert(key.clone(), val).is_some() {
+                    return Err(format!("duplicate flag --{key}"));
+                }
+            } else if subcommand.is_none() {
+                subcommand = Some(tok.clone());
+            } else {
+                return Err(format!("unexpected positional argument '{tok}'"));
+            }
+            i += 1;
+        }
+        Ok(Args { subcommand, flags, seen: Default::default() })
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        Args::from_tokens(&tokens)
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().push(key.to_string());
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.flags.get(key).cloned()
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: cannot parse '{v}'")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// List of usize, e.g. `--cores 1,2,4,8`.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Result<Vec<usize>, String> {
+        match self.str_opt(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse().map_err(|_| format!("--{key}: bad element '{s}'")))
+                .collect(),
+        }
+    }
+
+    /// After all getters ran, reject flags nobody consumed.
+    pub fn reject_unknown(&self) -> Result<(), String> {
+        let seen = self.seen.borrow();
+        for key in self.flags.keys() {
+            if !seen.iter().any(|s| s == key) {
+                return Err(format!("unknown flag --{key}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = Args::from_tokens(&toks("train --topics 1024 --preset enron-sim --verbose")).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.parse_or("topics", 0usize).unwrap(), 1024);
+        assert_eq!(a.str_or("preset", ""), "enron-sim");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::from_tokens(&toks("x --k=v")).unwrap();
+        assert_eq!(a.str_or("k", ""), "v");
+    }
+
+    #[test]
+    fn duplicate_flag_errors() {
+        assert!(Args::from_tokens(&toks("x --a 1 --a 2")).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = Args::from_tokens(&toks("x --known 1 --mystery 2")).unwrap();
+        let _ = a.parse_or("known", 0u32).unwrap();
+        assert!(a.reject_unknown().is_err());
+        let _ = a.str_opt("mystery");
+        assert!(a.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = Args::from_tokens(&toks("x --cores 1,2,20")).unwrap();
+        assert_eq!(a.usize_list_or("cores", &[]).unwrap(), vec![1, 2, 20]);
+        assert_eq!(a.usize_list_or("absent", &[4]).unwrap(), vec![4]);
+    }
+
+    #[test]
+    fn defaults_when_missing() {
+        let a = Args::from_tokens(&toks("x")).unwrap();
+        assert_eq!(a.parse_or("n", 7i32).unwrap(), 7);
+        assert_eq!(a.str_or("s", "d"), "d");
+    }
+}

@@ -1,0 +1,149 @@
+//! Special functions (std has no `lgamma`; the `libm`/`libc` crates are not
+//! in the offline vendor set, so we carry a well-tested Lanczos
+//! implementation).  Used by the Rust-side reference LL evaluator
+//! (`lda::eval`) which cross-checks the XLA artifact at test time.
+
+/// Lanczos approximation coefficients (g = 7, n = 9) — the classic
+/// Godfrey/Pugh set; |rel err| < 1e-13 over the positive reals.
+const LANCZOS_G: f64 = 7.0;
+const LANCZOS: [f64; 9] = [
+    0.99999999999980993,
+    676.5203681218851,
+    -1259.1392167224028,
+    771.32342877765313,
+    -176.61502916214059,
+    12.507343278686905,
+    -0.13857109526572012,
+    9.9843695780195716e-6,
+    1.5056327351493116e-7,
+];
+
+const LN_SQRT_2PI: f64 = 0.9189385332046727417803297; // ln(sqrt(2*pi))
+
+/// Natural log of the Gamma function for x > 0.
+///
+/// Uses the reflection formula below 0.5 to keep the Lanczos series in its
+/// accurate range.
+pub fn lgamma(x: f64) -> f64 {
+    debug_assert!(x > 0.0, "lgamma domain: x > 0, got {x}");
+    if x < 0.5 {
+        // reflection: lgamma(x) = ln(pi / sin(pi x)) - lgamma(1 - x)
+        let s = (std::f64::consts::PI * x).sin();
+        return (std::f64::consts::PI / s).ln() - lgamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = LANCZOS[0];
+    let t = x + LANCZOS_G + 0.5;
+    for (i, &c) in LANCZOS.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    LN_SQRT_2PI + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// ln(Gamma(x + n) / Gamma(x)) as a sum of logs — cheaper and exacter than
+/// two lgamma calls when n is a small integer (used per-document).
+pub fn lgamma_ratio_int(x: f64, n: u32) -> f64 {
+    if n < 16 {
+        let mut acc = 0.0;
+        for k in 0..n {
+            acc += (x + k as f64).ln();
+        }
+        acc
+    } else {
+        lgamma(x + n as f64) - lgamma(x)
+    }
+}
+
+/// Digamma (psi) function for x > 0; asymptotic series with recurrence
+/// shift.  Used by the hyperparameter-estimation extension.
+pub fn digamma(x: f64) -> f64 {
+    debug_assert!(x > 0.0);
+    let mut x = x;
+    let mut result = 0.0;
+    while x < 10.0 {
+        result -= 1.0 / x;
+        x += 1.0;
+    }
+    let inv = 1.0 / x;
+    let inv2 = inv * inv;
+    result + x.ln() - 0.5 * inv
+        - inv2
+            * (1.0 / 12.0
+                - inv2 * (1.0 / 120.0 - inv2 * (1.0 / 252.0 - inv2 * (1.0 / 240.0))))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Reference values from scipy.special.gammaln / psi (float64).
+    const CASES: &[(f64, f64)] = &[
+        (0.01, 4.599479878042022),
+        (0.048828125, 2.9931801925203874), // alpha = 50/1024
+        (0.5, 0.5723649429247004),
+        (1.0, 0.0),
+        (2.0, 0.0),
+        (3.0, 0.693147180559945),
+        (10.0, 12.801827480081467),
+        (128.5, 493.9784867952413),
+        (1024.0, 6071.28041294445),
+        (5_000_000.0, 72124735.5584562),
+    ];
+
+    #[test]
+    fn lgamma_matches_scipy() {
+        for &(x, want) in CASES {
+            let got = lgamma(x);
+            let tol = 1e-12 * want.abs().max(1.0);
+            assert!(
+                (got - want).abs() < tol,
+                "lgamma({x}) = {got}, want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn lgamma_recurrence_property() {
+        // lgamma(x+1) = lgamma(x) + ln(x)
+        let mut x = 0.07;
+        while x < 2000.0 {
+            let lhs = lgamma(x + 1.0);
+            let rhs = lgamma(x) + x.ln();
+            assert!(
+                (lhs - rhs).abs() < 1e-10 * lhs.abs().max(1.0),
+                "recurrence fails at {x}: {lhs} vs {rhs}"
+            );
+            x *= 1.7;
+        }
+    }
+
+    #[test]
+    fn lgamma_ratio_matches_difference() {
+        for &(x, _) in CASES {
+            for n in [0u32, 1, 3, 15, 16, 100] {
+                let got = lgamma_ratio_int(x, n);
+                let want = lgamma(x + n as f64) - lgamma(x);
+                assert!(
+                    (got - want).abs() < 1e-9 * want.abs().max(1.0),
+                    "ratio({x}, {n}) = {got}, want {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn digamma_matches_scipy() {
+        for &(x, want) in &[
+            (0.5, -1.9635100260214235),
+            (1.0, -0.5772156649015329),
+            (10.0, 2.251752589066721),
+            (1000.0, 6.907255195648812),
+        ] {
+            let got = digamma(x);
+            assert!(
+                (got - want).abs() < 1e-10 * want.abs().max(1.0),
+                "digamma({x}) = {got}, want {want}"
+            );
+        }
+    }
+}

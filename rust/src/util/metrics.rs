@@ -1,0 +1,175 @@
+//! Experiment metrics: convergence-series recording and CSV output.
+//!
+//! Every figure in the paper is a set of (x, y) series (LL vs iteration,
+//! LL vs seconds, speedup vs cores).  [`Series`] collects points with
+//! labels; [`write_csv`] emits the long-format file the plotting harness /
+//! EXPERIMENTS.md tables are produced from.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+use std::time::Instant;
+
+/// One named curve: (x, y) points, e.g. ("nomad-8cores", iter, ll).
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Self {
+        Series { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    /// First x where y >= threshold (for "time to reach LL" comparisons;
+    /// LL is negative and increasing).
+    pub fn time_to_reach(&self, threshold: f64) -> Option<f64> {
+        self.points.iter().find(|(_, y)| *y >= threshold).map(|(x, _)| *x)
+    }
+
+    pub fn last_y(&self) -> Option<f64> {
+        self.points.last().map(|&(_, y)| y)
+    }
+}
+
+/// Long-format CSV: series,x,y
+pub fn to_csv(series: &[Series]) -> String {
+    let mut out = String::from("series,x,y\n");
+    for s in series {
+        for &(x, y) in &s.points {
+            let _ = writeln!(out, "{},{x},{y}", s.name);
+        }
+    }
+    out
+}
+
+pub fn write_csv(path: &Path, series: &[Series]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(to_csv(series).as_bytes())
+}
+
+/// Wall-clock stopwatch with named laps (coordinator progress logging).
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Simple fixed-bucket histogram for latency-style metrics.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    pub total: u64,
+    pub sum: f64,
+    pub max: f64,
+}
+
+impl Histogram {
+    /// Log-spaced buckets between lo and hi.
+    pub fn log_spaced(lo: f64, hi: f64, n: usize) -> Self {
+        assert!(lo > 0.0 && hi > lo && n >= 2);
+        let ratio = (hi / lo).powf(1.0 / (n as f64 - 1.0));
+        let bounds = (0..n).map(|i| lo * ratio.powi(i as i32)).collect();
+        Histogram { bounds, counts: vec![0; n + 1], total: 0, sum: 0.0, max: f64::MIN }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let idx = self.bounds.partition_point(|&b| b < v);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += v;
+        self.max = self.max.max(v);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Approximate quantile by bucket upper bound.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.bounds.get(i).copied().unwrap_or(self.max);
+            }
+        }
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_time_to_reach() {
+        let mut s = Series::new("t");
+        s.push(1.0, -100.0);
+        s.push(2.0, -50.0);
+        s.push(3.0, -40.0);
+        assert_eq!(s.time_to_reach(-60.0), Some(2.0));
+        assert_eq!(s.time_to_reach(-10.0), None);
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut s = Series::new("a");
+        s.push(0.0, 1.5);
+        let csv = to_csv(&[s]);
+        assert_eq!(csv, "series,x,y\na,0,1.5\n");
+    }
+
+    #[test]
+    fn csv_roundtrip_to_disk() {
+        let dir = std::env::temp_dir().join("fnomad_metrics_test");
+        let path = dir.join("out.csv");
+        let mut s = Series::new("x");
+        s.push(1.0, 2.0);
+        write_csv(&path, &[s]).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.contains("x,1,2"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let mut h = Histogram::log_spaced(1.0, 1000.0, 16);
+        for i in 1..=1000 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.total, 1000);
+        let p50 = h.quantile(0.5);
+        assert!((300.0..800.0).contains(&p50), "p50 {p50}");
+        assert!(h.quantile(1.0) >= 999.0);
+        assert!((h.mean() - 500.5).abs() < 1.0);
+    }
+}

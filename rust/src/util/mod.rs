@@ -1,0 +1,15 @@
+//! Small self-contained substrates (offline build: no external crates).
+//!
+//! * [`rng`] — deterministic PCG32 with distribution helpers (replaces `rand`).
+//! * [`math`] — Lanczos `lgamma` and friends (std has no lgamma).
+//! * [`quickcheck`] — mini property-testing harness (replaces `proptest`).
+//! * [`bench`] — wall-clock micro-bench harness (replaces `criterion`).
+//! * [`cli`] — flag parser (replaces `clap`).
+//! * [`metrics`] — timers + CSV series writers for the experiment curves.
+
+pub mod bench;
+pub mod cli;
+pub mod math;
+pub mod metrics;
+pub mod quickcheck;
+pub mod rng;

@@ -1,0 +1,71 @@
+//! Mini property-testing harness (the vendored crate set has no `proptest`).
+//!
+//! A property is a closure over a seeded [`Pcg32`]; the harness runs it for
+//! `cases` independent seeds and reports the failing seed so a shrunk repro
+//! is one `prop_case` call away.
+
+use super::rng::Pcg32;
+
+/// Run `prop` for `cases` seeds; panic with the failing seed + message.
+///
+/// ```no_run
+/// // (no_run: rustdoc test binaries miss the xla rpath in this offline env)
+/// use fnomad_lda::util::quickcheck::check;
+/// check("addition commutes", 64, |rng| {
+///     let (a, b) = (rng.next_u32() as u64, rng.next_u32() as u64);
+///     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+/// });
+/// ```
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    for seed in 0..cases {
+        let mut rng = Pcg32::new(0xF00D + seed, seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing case by seed (for debugging).
+pub fn prop_case<F>(seed: u64, mut prop: F) -> Result<(), String>
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    let mut rng = Pcg32::new(0xF00D + seed, seed);
+    prop(&mut rng)
+}
+
+/// Assert two floats are close (relative + absolute tolerance), Err-style
+/// for use inside properties.
+pub fn close(got: f64, want: f64, rtol: f64, atol: f64) -> Result<(), String> {
+    if (got - want).abs() <= atol + rtol * want.abs() {
+        Ok(())
+    } else {
+        Err(format!("got {got}, want {want} (rtol {rtol}, atol {atol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", 16, |_| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed at seed 0")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 4, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6, 0.0).is_ok());
+        assert!(close(1.0, 1.1, 1e-6, 0.0).is_err());
+        assert!(close(0.0, 1e-9, 0.0, 1e-6).is_ok());
+    }
+}

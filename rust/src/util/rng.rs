@@ -1,0 +1,351 @@
+//! Deterministic PCG32 RNG plus the distribution samplers the corpus
+//! generator and the LDA initializers need (uniform, normal, gamma,
+//! Dirichlet, Poisson, Zipf).
+//!
+//! PCG-XSH-RR 64/32 (O'Neill 2014). Deterministic across platforms, cheap
+//! (one 64-bit multiply per draw), and supports independent streams — each
+//! worker derives its own stream id so parallel runs are replayable.
+
+/// PCG-XSH-RR 64/32 generator.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg32 {
+    /// Create a generator from a seed and a stream id.  Different stream
+    /// ids yield independent sequences for the same seed.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Convenience constructor on stream 0.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Derive a child generator (used to give each worker its own stream).
+    pub fn split(&mut self, stream: u64) -> Pcg32 {
+        Pcg32::new(self.next_u64(), stream.wrapping_mul(0x9E3779B97F4A7C15) | 1)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform f64 in [0, 1) with 53 bits of entropy.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform f64 in [0, limit) — the `uniform(c_T)` of the paper.
+    #[inline]
+    pub fn uniform(&mut self, limit: f64) -> f64 {
+        self.next_f64() * limit
+    }
+
+    /// Uniform usize in [0, n) via Lemire's multiply-shift (unbiased enough
+    /// for n << 2^32; exact rejection loop for the tail).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0 && n <= u32::MAX as usize);
+        let n = n as u32;
+        let mut x = self.next_u32();
+        let mut m = (x as u64) * (n as u64);
+        let mut lo = m as u32;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                x = self.next_u32();
+                m = (x as u64) * (n as u64);
+                lo = m as u32;
+            }
+        }
+        (m >> 32) as usize
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, s: &mut [T]) {
+        for i in (1..s.len()).rev() {
+            let j = self.below(i + 1);
+            s.swap(i, j);
+        }
+    }
+
+    /// Standard normal via Marsaglia's polar method.
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u = 2.0 * self.next_f64() - 1.0;
+            let v = 2.0 * self.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang; boosted for shape < 1.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        debug_assert!(shape > 0.0);
+        if shape < 1.0 {
+            // Gamma(a) = Gamma(a + 1) * U^{1/a}
+            let g = self.gamma(shape + 1.0);
+            let u = loop {
+                let u = self.next_f64();
+                if u > 0.0 {
+                    break u;
+                }
+            };
+            return g * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v = v * v * v;
+            let u = self.next_f64();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v;
+            }
+            if u > 0.0 && u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Dirichlet draw with concentration `alpha[i]`, written into `out`
+    /// (normalized gamma draws).
+    pub fn dirichlet(&mut self, alpha: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(alpha.len(), out.len());
+        let mut sum = 0.0;
+        for (o, &a) in out.iter_mut().zip(alpha) {
+            let g = self.gamma(a);
+            *o = g;
+            sum += g;
+        }
+        if sum <= 0.0 {
+            // pathological underflow: fall back to uniform
+            let u = 1.0 / out.len() as f64;
+            out.iter_mut().for_each(|o| *o = u);
+            return;
+        }
+        out.iter_mut().for_each(|o| *o /= sum);
+    }
+
+    /// Symmetric Dirichlet draw.
+    pub fn dirichlet_sym(&mut self, alpha: f64, out: &mut [f64]) {
+        let mut sum = 0.0;
+        for o in out.iter_mut() {
+            let g = self.gamma(alpha);
+            *o = g;
+            sum += g;
+        }
+        if sum <= 0.0 {
+            let u = 1.0 / out.len() as f64;
+            out.iter_mut().for_each(|o| *o = u);
+            return;
+        }
+        out.iter_mut().for_each(|o| *o /= sum);
+    }
+
+    /// Poisson(lambda) — Knuth for small lambda, normal approx for large.
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        debug_assert!(lambda >= 0.0);
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.next_f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            let x = lambda + lambda.sqrt() * self.normal();
+            if x < 0.0 {
+                0
+            } else {
+                x.round() as u64
+            }
+        }
+    }
+}
+
+/// Precomputed Zipf(s) sampler over {0, .., n-1} by inverse-CDF binary
+/// search — used to give synthetic vocabularies realistic frequency decay.
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = *cdf.last().unwrap();
+        cdf.iter_mut().for_each(|c| *c /= total);
+        Zipf { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg32) -> usize {
+        let u = rng.next_f64();
+        self.cdf.partition_point(|&c| c <= u).min(self.cdf.len() - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg32::new(42, 7);
+        let mut b = Pcg32::new(42, 7);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg32::new(42, 1);
+        let mut b = Pcg32::new(42, 2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg32::seeded(1);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut r = Pcg32::seeded(3);
+        let n = 10;
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            counts[r.below(n)] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "bucket count {c}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg32::seeded(4);
+        let n = 200_000;
+        let (mut m, mut v) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            m += x;
+            v += x * x;
+        }
+        m /= n as f64;
+        v = v / n as f64 - m * m;
+        assert!(m.abs() < 0.02, "mean {m}");
+        assert!((v - 1.0).abs() < 0.03, "var {v}");
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut r = Pcg32::seeded(5);
+        for &shape in &[0.05, 0.5, 2.0, 17.3] {
+            let n = 100_000;
+            let mut m = 0.0;
+            for _ in 0..n {
+                m += r.gamma(shape);
+            }
+            m /= n as f64;
+            assert!(
+                (m - shape).abs() < 0.05 * shape.max(1.0),
+                "gamma({shape}) mean {m}"
+            );
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Pcg32::seeded(6);
+        let mut out = vec![0.0; 64];
+        r.dirichlet_sym(0.1, &mut out);
+        let s: f64 = out.iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+        assert!(out.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn poisson_mean() {
+        let mut r = Pcg32::seeded(7);
+        for &lam in &[3.0, 80.0] {
+            let n = 50_000;
+            let mut m = 0.0;
+            for _ in 0..n {
+                m += r.poisson(lam) as f64;
+            }
+            m /= n as f64;
+            assert!((m - lam).abs() < 0.05 * lam, "poisson({lam}) mean {m}");
+        }
+    }
+
+    #[test]
+    fn zipf_is_monotone_decreasing_in_rank() {
+        let mut r = Pcg32::seeded(8);
+        let z = Zipf::new(100, 1.07);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..200_000 {
+            counts[z.sample(&mut r)] += 1;
+        }
+        assert!(counts[0] > counts[10]);
+        assert!(counts[10] > counts[70]);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg32::seeded(9);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+}
