@@ -160,5 +160,11 @@ fn main() {
         ]);
     }
     a5.print();
-    println!("\nExpected: A1 quality flat across circulations (weak s-dependence, §4.1);\nA2 larger batches slightly staler but cheaper; A3 rebuilds bound drift;\nA4 token balancing flattens the last reducer; A5 moves (alpha, beta) off\nthe paper default (joint-LL values at different hyperparameters are not\ndirectly comparable — the evidence objective is what the update ascends).");
+    println!(
+        "\nExpected: A1 quality flat across circulations (weak s-dependence, §4.1);\n\
+         A2 larger batches slightly staler but cheaper; A3 rebuilds bound drift;\n\
+         A4 token balancing flattens the last reducer; A5 moves (alpha, beta) off\n\
+         the paper default (joint-LL values at different hyperparameters are not\n\
+         directly comparable — the evidence objective is what the update ascends)."
+    );
 }

@@ -13,8 +13,8 @@
 
 use fnomad_lda::corpus::preset;
 use fnomad_lda::coordinator::Evaluator;
+use fnomad_lda::lda;
 use fnomad_lda::lda::state::{Hyper, LdaState};
-use fnomad_lda::lda::{self};
 use fnomad_lda::util::bench::Table;
 use fnomad_lda::util::metrics::{write_csv, Series};
 use fnomad_lda::util::rng::Pcg32;

@@ -9,8 +9,8 @@
 //!     cargo bench --bench table2_lda_step
 
 use fnomad_lda::corpus::preset;
+use fnomad_lda::lda;
 use fnomad_lda::lda::state::{Hyper, LdaState};
-use fnomad_lda::lda::{self};
 use fnomad_lda::util::bench::{fmt_ns, Table};
 use fnomad_lda::util::rng::Pcg32;
 

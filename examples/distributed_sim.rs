@@ -90,6 +90,9 @@ fn main() -> Result<(), String> {
         ]);
     }
     scaling.print();
-    println!("\nExpected shape: F+Nomad reaches a given LL in less virtual time than\nboth PS flavors; PS(D) trails PS(M); nomad speedup grows with cores.");
+    println!(
+        "\nExpected shape: F+Nomad reaches a given LL in less virtual time than\n\
+         both PS flavors; PS(D) trails PS(M); nomad speedup grows with cores."
+    );
     Ok(())
 }

@@ -24,7 +24,10 @@ fn main() -> Result<(), String> {
     let topics: usize = args.get(3).map(|s| s.parse().unwrap()).unwrap_or(1024);
 
     if !artifacts_available(&default_artifact_dir()) {
-        eprintln!("WARNING: artifacts/ missing — run `make artifacts` for the full\nthree-layer path; continuing with the Rust evaluator.");
+        eprintln!(
+            "WARNING: artifacts/ missing — run `make artifacts` for the full\n\
+             three-layer path; continuing with the Rust evaluator."
+        );
     }
 
     let opts = TrainOpts {

@@ -1,16 +1,25 @@
-// standalone perf probe: 3 sweeps of flda-word on enron-sim at T=1024
+//! Standalone perf probe: timed sweeps of flda-word on enron-sim at T=1024.
+//!
+//!     cargo run --release --example perf_probe
+
 use fnomad_lda::corpus::preset;
 use fnomad_lda::lda::state::{Hyper, LdaState};
 use fnomad_lda::lda::{FLdaWord, Sweep};
 use fnomad_lda::util::rng::Pcg32;
+
 fn main() {
     let corpus = preset("enron-sim").unwrap();
     let mut rng = Pcg32::seeded(9);
     let mut state = LdaState::init_random(&corpus, Hyper::paper_default(1024), &mut rng);
     let mut s = FLdaWord::new(&state, &corpus);
-    for _ in 0..2 { s.sweep(&mut state, &corpus, &mut rng); } // burn-in
+    // burn-in
+    for _ in 0..2 {
+        s.sweep(&mut state, &corpus, &mut rng);
+    }
     let t0 = std::time::Instant::now();
-    for _ in 0..3 { s.sweep(&mut state, &corpus, &mut rng); }
+    for _ in 0..3 {
+        s.sweep(&mut state, &corpus, &mut rng);
+    }
     let ns = t0.elapsed().as_nanos() as f64 / (3 * corpus.num_tokens()) as f64;
     println!("flda-word: {ns:.1} ns/token");
 }

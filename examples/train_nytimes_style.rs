@@ -47,6 +47,9 @@ fn main() -> Result<(), String> {
         eprintln!("  {name} done");
     }
     table.print();
-    println!("\nExpected shape: flda-* fastest; flda-word >= flda-doc at this doc count;\nexact samplers (all but alias) at comparable LL after equal iterations.");
+    println!(
+        "\nExpected shape: flda-* fastest; flda-word >= flda-doc at this doc count;\n\
+         exact samplers (all but alias) at comparable LL after equal iterations."
+    );
     Ok(())
 }

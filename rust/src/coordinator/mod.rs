@@ -69,8 +69,13 @@ pub enum Evaluator {
 }
 
 impl Evaluator {
-    /// Resolve by policy: `auto` prefers the XLA path when artifacts exist
-    /// *and* cover the topic count.
+    /// Resolve by policy: `auto` prefers the blocked path when artifacts
+    /// exist *and* cover the topic count, and otherwise falls back to the
+    /// sparse Rust reference — which is exact and faster than the dense
+    /// blocked evaluator, so hermetic default builds (no `artifacts/`)
+    /// deliberately train with `Rust`.  The blocked backend (PJRT with
+    /// `--features pjrt`, pure Rust otherwise) stays reachable via the
+    /// explicit `xla` policy and `fnomad-lda check-artifacts`.
     pub fn resolve(policy: &str, topics: usize) -> Result<Evaluator, String> {
         let dir = default_artifact_dir();
         match policy {
@@ -92,7 +97,8 @@ impl Evaluator {
 
     pub fn name(&self) -> &'static str {
         match self {
-            Evaluator::Xla(_) => "xla",
+            // "xla" under --features pjrt, "blocked-rust" in default builds
+            Evaluator::Xla(_) => LlEvaluator::BACKEND,
             Evaluator::Rust => "rust",
         }
     }
@@ -211,7 +217,6 @@ fn train_serial(
     let mut state = LdaState::init_random(corpus, hyper, &mut rng);
     let mut sampler = lda::by_name(&opts.sampler, &state, corpus)?;
     let mut res = new_result(label);
-    let watch = Stopwatch::new();
     let mut sample_secs = 0.0;
     eval_point!(eval, state, 0, 0.0, res, opts, label);
     for it in 1..=opts.iters {
@@ -222,7 +227,6 @@ fn train_serial(
             eval_point!(eval, state, it, sample_secs, res, opts, label);
         }
     }
-    let _ = watch;
     res.tokens_per_sec = (opts.iters * corpus.num_tokens()) as f64 / sample_secs;
     res.final_state = state;
     finish(opts, res)

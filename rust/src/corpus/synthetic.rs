@@ -7,7 +7,7 @@
 //! realistic head/tail behavior, and document lengths are Poisson with a
 //! preset mean, matching the docs/vocab/token *ratios* of Table 3.
 
-use crate::util::rng::{Pcg32, Zipf};
+use crate::util::rng::Pcg32;
 
 use super::Corpus;
 
@@ -60,7 +60,6 @@ pub fn generate(spec: &SyntheticSpec) -> Corpus {
     let j = spec.vocab;
 
     // Zipfian base measure over words (shuffled so id != rank)
-    let zipf = Zipf::new(j, spec.zipf_s);
     let mut rank_of: Vec<usize> = (0..j).collect();
     rng.shuffle(&mut rank_of);
 
@@ -80,7 +79,6 @@ pub fn generate(spec: &SyntheticSpec) -> Corpus {
         }
         topic_cdfs.push(cdf);
     }
-    let _ = &zipf; // Zipf table used for rank weighting above
 
     let mut theta = vec![0.0f64; k];
     let alpha_vec = vec![spec.alpha; k];

@@ -4,9 +4,9 @@
 //!
 //! This is the *reference* evaluator, exploiting count sparsity
 //! (`Σ_t lgamma(n+c)` = support terms + closed form for the zeros).  The
-//! production path streams dense blocks through the AOT-compiled JAX/Pallas
-//! artifact instead (`runtime::LlEvaluator`); integration tests assert the
-//! two agree to float32 tolerance.
+//! production path streams dense blocks through `runtime::LlEvaluator`
+//! instead (AOT-compiled JAX/Pallas artifact with `--features pjrt`, the
+//! pure-Rust blocked port by default); tests assert the two agree.
 
 use crate::util::math::lgamma;
 

@@ -80,8 +80,8 @@ impl FLdaWord {
             self.support.push(t);
             self.wrow[t as usize] = c;
         }
-        for i in 0..self.support.len() {
-            let t = self.support[i] as usize;
+        for &topic in &self.support {
+            let t = topic as usize;
             self.tree
                 .set(t, (self.wrow[t] as f64 + beta) / (state.nt[t] as f64 + bb));
         }
@@ -131,16 +131,15 @@ impl FLdaWord {
         // lower: write the touched scratch entries back into the sparse
         // row (one binary search per topic instead of per occurrence),
         // reset every lifted leaf to the base value, clear the scratch.
-        for i in 0..self.touched.len() {
-            let t = self.touched[i];
-            state.nwt[word].set_count(t, self.wrow[t as usize]);
-            self.is_touched[t as usize] = false;
+        for &topic in &self.touched {
+            state.nwt[word].set_count(topic, self.wrow[topic as usize]);
+            self.is_touched[topic as usize] = false;
         }
         self.touched.clear();
         self.support.clear();
         self.support.extend(state.nwt[word].iter().map(|(t, _)| t));
-        for i in 0..self.support.len() {
-            let t = self.support[i] as usize;
+        for &topic in &self.support {
+            let t = topic as usize;
             self.tree.set(t, beta / (state.nt[t] as f64 + bb));
             self.wrow[t] = 0;
         }

@@ -17,9 +17,12 @@
 //! * **Cluster simulator** ([`simnet`]): virtual-time discrete-event
 //!   execution of the same runtime for the paper's 20-core / 32-node
 //!   experiments on this single-core session (see DESIGN.md).
-//! * **PJRT bridge** ([`runtime`]): the model-quality evaluator is a JAX +
-//!   Pallas program AOT-lowered to HLO text at build time and executed from
-//!   Rust through the XLA PJRT C API — Python never runs at training time.
+//! * **Evaluator backends** ([`runtime`]): the model-quality evaluator is
+//!   a blocked `Σ lgamma` reduction with two interchangeable backends —
+//!   with `--features pjrt`, a JAX + Pallas program AOT-lowered to HLO
+//!   text and executed from Rust through the XLA PJRT C API (Python never
+//!   runs at training time); by default, a pure-Rust port of the same
+//!   blocked computation, so the crate builds and tests hermetically.
 //!
 //! See `examples/quickstart.rs` for the five-minute tour and DESIGN.md for
 //! the full system inventory.

@@ -92,6 +92,7 @@ pub struct WorkerState {
 impl WorkerState {
     /// Initialize from a corpus slice with the given initial assignments
     /// (z rows for [start, end)) and the *global* initial topic totals.
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         id: usize,
         num_workers: usize,

@@ -196,65 +196,63 @@ impl PsWorkerState {
         self.tree.refill(&base);
 
         for doc in batch_start..batch_end {
-                // enter doc
-                let support: Vec<u16> = self.ntd[doc].iter().map(|(t, _)| t).collect();
-                for &t in &support {
-                    let q = (self.ntd[doc].get(t) as f64 + h.alpha)
-                        / (nt_cache[t as usize].max(0) as f64 + bb);
-                    self.tree.set(t as usize, q);
-                }
-
-                for pos in 0..self.docs[doc].len() {
-                    let word = self.docs[doc][pos];
-                    let wp = word_pos(word);
-                    let old = self.z[doc][pos];
-
-                    // remove from cached view + record deltas
-                    self.ntd[doc].dec(old);
-                    if rows[wp].get(old) > 0 {
-                        rows[wp].dec(old);
-                    }
-                    nt_cache[old as usize] -= 1;
-                    word_deltas[wp].add(old, -1);
-                    nt_delta[old as usize] -= 1;
-                    let q = (self.ntd[doc].get(old) as f64 + h.alpha)
-                        / (nt_cache[old as usize].max(0) as f64 + bb);
-                    self.tree.set(old as usize, q);
-
-                    // r over the cached word row
-                    self.r.clear();
-                    for (t, c) in rows[wp].iter() {
-                        self.r.push(t as u32, c as f64 * self.tree.leaf(t as usize));
-                    }
-                    let r_total = self.r.total();
-                    let u = self.rng.uniform(h.beta * self.tree.total() + r_total);
-                    let new = if u < r_total {
-                        self.r.sample(u) as u16
-                    } else {
-                        self.tree.sample((u - r_total) / h.beta) as u16
-                    };
-
-                    self.ntd[doc].inc(new);
-                    rows[wp].inc(new);
-                    nt_cache[new as usize] += 1;
-                    word_deltas[wp].add(new, 1);
-                    nt_delta[new as usize] += 1;
-                    let q = (self.ntd[doc].get(new) as f64 + h.alpha)
-                        / (nt_cache[new as usize].max(0) as f64 + bb);
-                    self.tree.set(new as usize, q);
-                    self.z[doc][pos] = new;
-                    processed += 1;
-                }
-
-                // leave doc
-                let support: Vec<u16> = self.ntd[doc].iter().map(|(t, _)| t).collect();
-                for &t in &support {
-                    self.tree.set(
-                        t as usize,
-                        h.alpha / (nt_cache[t as usize].max(0) as f64 + bb),
-                    );
-                }
+            // enter doc
+            let support: Vec<u16> = self.ntd[doc].iter().map(|(t, _)| t).collect();
+            for &t in &support {
+                let q = (self.ntd[doc].get(t) as f64 + h.alpha)
+                    / (nt_cache[t as usize].max(0) as f64 + bb);
+                self.tree.set(t as usize, q);
             }
+
+            for pos in 0..self.docs[doc].len() {
+                let word = self.docs[doc][pos];
+                let wp = word_pos(word);
+                let old = self.z[doc][pos];
+
+                // remove from cached view + record deltas
+                self.ntd[doc].dec(old);
+                if rows[wp].get(old) > 0 {
+                    rows[wp].dec(old);
+                }
+                nt_cache[old as usize] -= 1;
+                word_deltas[wp].add(old, -1);
+                nt_delta[old as usize] -= 1;
+                let q = (self.ntd[doc].get(old) as f64 + h.alpha)
+                    / (nt_cache[old as usize].max(0) as f64 + bb);
+                self.tree.set(old as usize, q);
+
+                // r over the cached word row
+                self.r.clear();
+                for (t, c) in rows[wp].iter() {
+                    self.r.push(t as u32, c as f64 * self.tree.leaf(t as usize));
+                }
+                let r_total = self.r.total();
+                let u = self.rng.uniform(h.beta * self.tree.total() + r_total);
+                let new = if u < r_total {
+                    self.r.sample(u) as u16
+                } else {
+                    self.tree.sample((u - r_total) / h.beta) as u16
+                };
+
+                self.ntd[doc].inc(new);
+                rows[wp].inc(new);
+                nt_cache[new as usize] += 1;
+                word_deltas[wp].add(new, 1);
+                nt_delta[new as usize] += 1;
+                let q = (self.ntd[doc].get(new) as f64 + h.alpha)
+                    / (nt_cache[new as usize].max(0) as f64 + bb);
+                self.tree.set(new as usize, q);
+                self.z[doc][pos] = new;
+                processed += 1;
+            }
+
+            // leave doc
+            let support: Vec<u16> = self.ntd[doc].iter().map(|(t, _)| t).collect();
+            for &t in &support {
+                self.tree
+                    .set(t as usize, h.alpha / (nt_cache[t as usize].max(0) as f64 + bb));
+            }
+        }
 
         // deltas for the PUSH
         let pushes: Vec<(u32, Vec<(u16, i32)>)> = words

@@ -4,18 +4,13 @@
 //! artifact with its argument signature; we cross-check the shapes we are
 //! about to feed so a Python/Rust geometry drift fails at load time with a
 //! readable message instead of a PJRT shape error mid-training.
+//!
+//! Manifest parsing is always compiled (it is pure std and the drift check
+//! is useful on its own); the PJRT compilation cache needs the vendored
+//! `xla` crate and lives behind the `pjrt` feature.
 
 use std::collections::HashMap;
 use std::path::Path;
-
-/// One compiled artifact set for a given topic count.
-pub struct ArtifactSet {
-    pub client: xla::PjRtClient,
-    pub ll_block: xla::PjRtLoadedExecutable,
-    pub ll_vec: xla::PjRtLoadedExecutable,
-    pub prob: Option<xla::PjRtLoadedExecutable>,
-    pub t: usize,
-}
 
 /// Parse manifest.txt into name -> arg-signature.
 pub fn read_manifest(dir: &Path) -> Result<HashMap<String, String>, String> {
@@ -33,20 +28,30 @@ pub fn read_manifest(dir: &Path) -> Result<HashMap<String, String>, String> {
     Ok(out)
 }
 
+/// One compiled artifact set for a given topic count.
+#[cfg(feature = "pjrt")]
+pub struct ArtifactSet {
+    pub client: xla::PjRtClient,
+    pub ll_block: xla::PjRtLoadedExecutable,
+    pub ll_vec: xla::PjRtLoadedExecutable,
+    pub prob: Option<xla::PjRtLoadedExecutable>,
+    pub t: usize,
+}
+
+#[cfg(feature = "pjrt")]
 fn compile(
     client: &xla::PjRtClient,
     dir: &Path,
     name: &str,
 ) -> Result<xla::PjRtLoadedExecutable, String> {
     let path = dir.join(format!("{name}.hlo.txt"));
-    let proto = xla::HloModuleProto::from_text_file(
-        path.to_str().ok_or("non-utf8 artifact path")?,
-    )
-    .map_err(|e| format!("{}: {e}", path.display()))?;
+    let proto = xla::HloModuleProto::from_text_file(path.to_str().ok_or("non-utf8 artifact path")?)
+        .map_err(|e| format!("{}: {e}", path.display()))?;
     let comp = xla::XlaComputation::from_proto(&proto);
     client.compile(&comp).map_err(|e| format!("compile {name}: {e}"))
 }
 
+#[cfg(feature = "pjrt")]
 impl ArtifactSet {
     /// Load + compile the T-specific artifacts from `dir`.
     pub fn load(dir: &Path, t: usize) -> Result<ArtifactSet, String> {
@@ -66,7 +71,8 @@ impl ArtifactSet {
             }
             Some(sig) if sig != &want_block => {
                 return Err(format!(
-                    "artifact '{block_name}' signature drift: manifest has {sig}, rust expects {want_block}"
+                    "artifact '{block_name}' signature drift: manifest has {sig}, \
+                     rust expects {want_block}"
                 ))
             }
             _ => {}

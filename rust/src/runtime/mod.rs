@@ -1,25 +1,37 @@
-//! PJRT runtime bridge: load the AOT-compiled JAX/Pallas artifacts
-//! (`artifacts/*.hlo.txt`, built once by `make artifacts`) and execute them
-//! from the Rust hot path.  Python never runs at training time.
+//! Model-quality evaluation backends.
 //!
-//! Pattern (see /opt/xla-example): HLO **text** → `HloModuleProto::
-//! from_text_file` → `XlaComputation::from_proto` → `PjRtClient::compile`
-//! → `execute`.  Text is the interchange format because jax ≥ 0.5 emits
-//! 64-bit instruction ids that the crate's xla_extension 0.5.1 rejects in
-//! proto form.
+//! Two implementations of the same blocked evaluator API ([`LlEvaluator`],
+//! [`ProbOracle`]) live behind the `pjrt` feature:
 //!
-//! * [`artifacts`] — manifest parsing + executable cache.
-//! * [`LlEvaluator`] — the model-quality evaluator: streams count blocks
-//!   through the `ll_block`/`ll_vec` kernels (Pallas lgamma reduction
-//!   inside) with closed-form padding corrections; every convergence curve
-//!   in the figures is produced by this path.
-//! * [`ProbOracle`] — the `prob` artifact: dense CGS conditionals for a
-//!   token batch; integration tests use it as an independent oracle for
-//!   the Rust samplers.
+//! * **`pjrt` on** (`pjrt.rs`): the AOT-compiled JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`, built once by `make artifacts`) are loaded and
+//!   executed through the XLA PJRT C API — Python never runs at training
+//!   time.  Pattern (see /opt/xla-example): HLO **text** →
+//!   `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//!   `PjRtClient::compile` → `execute`.  Requires the vendored `xla` crate.
+//! * **`pjrt` off** ([`native`], the default): a pure-Rust port of the same
+//!   blocked computation (identical f32 block geometry, identical padding
+//!   corrections), so the default build and test run hermetically with no
+//!   Python, JAX, or XLA artifacts installed.
+//!
+//! Both backends stream dense count blocks through `Σ lgamma(x + c)`
+//! reductions with closed-form corrections for block padding; every
+//! convergence curve in the figures is produced by this path.  The
+//! [`artifacts`] module (manifest parsing + executable cache) is shared;
+//! its PJRT compilation half is feature-gated.
 
 pub mod artifacts;
+#[cfg(not(feature = "pjrt"))]
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
+#[cfg(feature = "pjrt")]
 pub use artifacts::ArtifactSet;
+#[cfg(not(feature = "pjrt"))]
+pub use native::{LlEvaluator, ProbOracle};
+#[cfg(feature = "pjrt")]
+pub use pjrt::{LlEvaluator, ProbOracle};
 
 use crate::lda::state::LdaState;
 use crate::util::math::lgamma;
@@ -30,206 +42,115 @@ pub const VEC_LEN: usize = 1024;
 pub const PROB_BATCH: usize = 64;
 pub const TOPIC_SIZES: &[usize] = &[128, 1024];
 
-/// The blocked log-likelihood evaluator backed by PJRT executables.
-pub struct LlEvaluator {
-    arts: ArtifactSet,
+/// The two reductions a backend must provide.  `block` is a dense
+/// `BLOCK_ROWS × T` row-major buffer, `vec` a `VEC_LEN` buffer; both sums
+/// are `Σ lgamma(x + c)` over every element, padding included.
+pub(crate) trait LlKernels {
+    fn block_sum(&mut self, block: &[f32], c: f32) -> Result<f64, String>;
+    fn vec_sum(&mut self, vec: &[f32], c: f32) -> Result<f64, String>;
+}
+
+/// The collapsed joint log-likelihood of `state` (same quantity as
+/// [`crate::lda::eval::log_likelihood`]), computed blockwise through a
+/// backend's kernels.  Shared by both backends so their numerics can only
+/// differ inside the reductions themselves.
+pub(crate) fn blocked_log_likelihood<K: LlKernels>(
+    kern: &mut K,
+    state: &LdaState,
     t: usize,
-    /// reusable dense block buffer (BLOCK_ROWS × T)
-    block: Vec<f32>,
-    /// reusable vec buffer (VEC_LEN)
-    vec: Vec<f32>,
-}
-
-impl LlEvaluator {
-    /// Load the artifacts for topic count `t` from `dir`.
-    pub fn new(dir: &std::path::Path, t: usize) -> Result<Self, String> {
-        if !TOPIC_SIZES.contains(&t) {
-            return Err(format!(
-                "no artifacts for T={t} (built for {TOPIC_SIZES:?}); \
-                 add T to python/compile/model.py TOPIC_SIZES and re-run make artifacts"
-            ));
-        }
-        let arts = ArtifactSet::load(dir, t)?;
-        Ok(LlEvaluator { arts, t, block: vec![0.0; BLOCK_ROWS * t], vec: vec![0.0; VEC_LEN] })
+    block: &mut [f32],
+    vec: &mut [f32],
+) -> Result<f64, String> {
+    assert_eq!(block.len(), BLOCK_ROWS * t);
+    assert_eq!(vec.len(), VEC_LEN);
+    if state.num_topics() != t {
+        return Err(format!(
+            "state has T={} but evaluator was built for T={}",
+            state.num_topics(),
+            t
+        ));
     }
+    let alpha = state.hyper.alpha;
+    let beta = state.hyper.beta;
+    let d = state.ntd.len();
+    let j = state.vocab;
 
-    pub fn topics(&self) -> usize {
-        self.t
+    // ---- doc side: Σ lgamma(n_td + α) over D×T, blockwise ----
+    let mut total = 0.0f64;
+    let mut row_in_block = 0usize;
+    block.iter_mut().for_each(|x| *x = 0.0);
+    for counts in &state.ntd {
+        for (topic, c) in counts.iter() {
+            block[row_in_block * t + topic as usize] = c as f32;
+        }
+        row_in_block += 1;
+        if row_in_block == BLOCK_ROWS {
+            total += kern.block_sum(block, alpha as f32)?;
+            block.iter_mut().for_each(|x| *x = 0.0);
+            row_in_block = 0;
+        }
     }
-
-    /// sum(lgamma(block + c)) via the Pallas kernel executable.
-    fn block_sum(&mut self, c: f32) -> Result<f64, String> {
-        let lit = xla::Literal::vec1(&self.block)
-            .reshape(&[BLOCK_ROWS as i64, self.t as i64])
-            .map_err(|e| e.to_string())?;
-        let out = self
-            .arts
-            .ll_block
-            .execute::<xla::Literal>(&[lit, xla::Literal::from(c)])
-            .map_err(|e| e.to_string())?[0][0]
-            .to_literal_sync()
-            .map_err(|e| e.to_string())?
-            .to_tuple1()
-            .map_err(|e| e.to_string())?;
-        Ok(out.to_vec::<f32>().map_err(|e| e.to_string())?[0] as f64)
+    if row_in_block > 0 {
+        let pad = BLOCK_ROWS - row_in_block;
+        total += kern.block_sum(block, alpha as f32)? - pad as f64 * t as f64 * lgamma(alpha);
     }
-
-    /// sum(lgamma(vec + c)) via the ll_vec executable.
-    fn vec_sum(&mut self, c: f32) -> Result<f64, String> {
-        let lit = xla::Literal::vec1(&self.vec);
-        let out = self
-            .arts
-            .ll_vec
-            .execute::<xla::Literal>(&[lit, xla::Literal::from(c)])
-            .map_err(|e| e.to_string())?[0][0]
-            .to_literal_sync()
-            .map_err(|e| e.to_string())?
-            .to_tuple1()
-            .map_err(|e| e.to_string())?;
-        Ok(out.to_vec::<f32>().map_err(|e| e.to_string())?[0] as f64)
+    // − Σ lgamma(n_d + Tα), vec-chunked
+    let ta = (t as f64 * alpha) as f32;
+    let mut idx = 0usize;
+    vec.iter_mut().for_each(|x| *x = 0.0);
+    for counts in &state.ntd {
+        vec[idx] = counts.total() as f32;
+        idx += 1;
+        if idx == VEC_LEN {
+            total -= kern.vec_sum(vec, ta)?;
+            vec.iter_mut().for_each(|x| *x = 0.0);
+            idx = 0;
+        }
     }
-
-    /// The collapsed joint log-likelihood of `state` (same quantity as
-    /// [`crate::lda::eval::log_likelihood`], computed on the XLA path).
-    pub fn log_likelihood(&mut self, state: &LdaState) -> Result<f64, String> {
-        if state.num_topics() != self.t {
-            return Err(format!(
-                "state has T={} but evaluator was built for T={}",
-                state.num_topics(),
-                self.t
-            ));
-        }
-        let t = self.t;
-        let alpha = state.hyper.alpha;
-        let beta = state.hyper.beta;
-        let d = state.ntd.len();
-        let j = state.vocab;
-
-        // ---- doc side: Σ lgamma(n_td + α) over D×T, blockwise ----
-        let mut total = 0.0f64;
-        let mut row_in_block = 0usize;
-        self.block.iter_mut().for_each(|x| *x = 0.0);
-        for counts in &state.ntd {
-            for (topic, c) in counts.iter() {
-                self.block[row_in_block * t + topic as usize] = c as f32;
-            }
-            row_in_block += 1;
-            if row_in_block == BLOCK_ROWS {
-                total += self.block_sum(alpha as f32)?;
-                self.block.iter_mut().for_each(|x| *x = 0.0);
-                row_in_block = 0;
-            }
-        }
-        if row_in_block > 0 {
-            let pad = BLOCK_ROWS - row_in_block;
-            total += self.block_sum(alpha as f32)? - pad as f64 * t as f64 * lgamma(alpha);
-        }
-        // − Σ lgamma(n_d + Tα), vec-chunked
-        let ta = (t as f64 * alpha) as f32;
-        let mut idx = 0usize;
-        self.vec.iter_mut().for_each(|x| *x = 0.0);
-        for counts in &state.ntd {
-            self.vec[idx] = counts.total() as f32;
-            idx += 1;
-            if idx == VEC_LEN {
-                total -= self.vec_sum(ta)?;
-                self.vec.iter_mut().for_each(|x| *x = 0.0);
-                idx = 0;
-            }
-        }
-        if idx > 0 {
-            let pad = VEC_LEN - idx;
-            total -= self.vec_sum(ta)? - pad as f64 * lgamma(ta as f64);
-        }
-        total += d as f64 * (lgamma(t as f64 * alpha) - t as f64 * lgamma(alpha));
-
-        // ---- word side: Σ lgamma(n_wt + β) over J×T, blockwise ----
-        let mut row_in_block = 0usize;
-        self.block.iter_mut().for_each(|x| *x = 0.0);
-        for counts in &state.nwt {
-            for (topic, c) in counts.iter() {
-                self.block[row_in_block * t + topic as usize] = c as f32;
-            }
-            row_in_block += 1;
-            if row_in_block == BLOCK_ROWS {
-                total += self.block_sum(beta as f32)?;
-                self.block.iter_mut().for_each(|x| *x = 0.0);
-                row_in_block = 0;
-            }
-        }
-        if row_in_block > 0 {
-            let pad = BLOCK_ROWS - row_in_block;
-            total += self.block_sum(beta as f32)? - pad as f64 * t as f64 * lgamma(beta);
-        }
-        // − Σ lgamma(n_t + Jβ)
-        let jb = (j as f64 * beta) as f32;
-        let mut idx = 0usize;
-        self.vec.iter_mut().for_each(|x| *x = 0.0);
-        for &nt in &state.nt {
-            self.vec[idx] = nt as f32;
-            idx += 1;
-            if idx == VEC_LEN {
-                total -= self.vec_sum(jb)?;
-                self.vec.iter_mut().for_each(|x| *x = 0.0);
-                idx = 0;
-            }
-        }
-        if idx > 0 {
-            let pad = VEC_LEN - idx;
-            total -= self.vec_sum(jb)? - pad as f64 * lgamma(jb as f64);
-        }
-        total += t as f64 * (lgamma(j as f64 * beta) - j as f64 * lgamma(beta));
-
-        Ok(total)
+    if idx > 0 {
+        let pad = VEC_LEN - idx;
+        total -= kern.vec_sum(vec, ta)? - pad as f64 * lgamma(ta as f64);
     }
-}
+    total += d as f64 * (lgamma(t as f64 * alpha) - t as f64 * lgamma(alpha));
 
-/// The dense CGS conditional oracle (the `prob` artifact).
-pub struct ProbOracle {
-    arts: ArtifactSet,
-    t: usize,
-}
-
-impl ProbOracle {
-    pub fn new(dir: &std::path::Path, t: usize) -> Result<Self, String> {
-        Ok(ProbOracle { arts: ArtifactSet::load(dir, t)?, t })
+    // ---- word side: Σ lgamma(n_wt + β) over J×T, blockwise ----
+    let mut row_in_block = 0usize;
+    block.iter_mut().for_each(|x| *x = 0.0);
+    for counts in &state.nwt {
+        for (topic, c) in counts.iter() {
+            block[row_in_block * t + topic as usize] = c as f32;
+        }
+        row_in_block += 1;
+        if row_in_block == BLOCK_ROWS {
+            total += kern.block_sum(block, beta as f32)?;
+            block.iter_mut().for_each(|x| *x = 0.0);
+            row_in_block = 0;
+        }
     }
-
-    /// p[b,t] and norms for a batch of PROB_BATCH tokens described by
-    /// their dense (ntd, ntw) rows plus the totals.
-    pub fn dense_prob(
-        &self,
-        ntd: &[f32],
-        ntw: &[f32],
-        nt: &[f32],
-        alpha: f32,
-        beta: f32,
-        betabar: f32,
-    ) -> Result<(Vec<f32>, Vec<f32>), String> {
-        let b = PROB_BATCH;
-        assert_eq!(ntd.len(), b * self.t);
-        assert_eq!(ntw.len(), b * self.t);
-        assert_eq!(nt.len(), self.t);
-        let prob = self.arts.prob.as_ref().ok_or("prob artifact not loaded")?;
-        let mk = |v: &[f32], dims: &[i64]| -> Result<xla::Literal, String> {
-            xla::Literal::vec1(v).reshape(dims).map_err(|e| e.to_string())
-        };
-        let out = prob
-            .execute::<xla::Literal>(&[
-                mk(ntd, &[b as i64, self.t as i64])?,
-                mk(ntw, &[b as i64, self.t as i64])?,
-                xla::Literal::vec1(nt),
-                xla::Literal::vec1(&[alpha, beta, betabar]),
-            ])
-            .map_err(|e| e.to_string())?[0][0]
-            .to_literal_sync()
-            .map_err(|e| e.to_string())?;
-        let (p, norm) = out.to_tuple2().map_err(|e| e.to_string())?;
-        Ok((
-            p.to_vec::<f32>().map_err(|e| e.to_string())?,
-            norm.to_vec::<f32>().map_err(|e| e.to_string())?,
-        ))
+    if row_in_block > 0 {
+        let pad = BLOCK_ROWS - row_in_block;
+        total += kern.block_sum(block, beta as f32)? - pad as f64 * t as f64 * lgamma(beta);
     }
+    // − Σ lgamma(n_t + Jβ)
+    let jb = (j as f64 * beta) as f32;
+    let mut idx = 0usize;
+    vec.iter_mut().for_each(|x| *x = 0.0);
+    for &nt in &state.nt {
+        vec[idx] = nt as f32;
+        idx += 1;
+        if idx == VEC_LEN {
+            total -= kern.vec_sum(vec, jb)?;
+            vec.iter_mut().for_each(|x| *x = 0.0);
+            idx = 0;
+        }
+    }
+    if idx > 0 {
+        let pad = VEC_LEN - idx;
+        total -= kern.vec_sum(vec, jb)? - pad as f64 * lgamma(jb as f64);
+    }
+    total += t as f64 * (lgamma(j as f64 * beta) - j as f64 * lgamma(beta));
+
+    Ok(total)
 }
 
 /// Default artifact directory (relative to the repo root).

@@ -1,0 +1,201 @@
+//! Pure-Rust evaluator backend (the default, `pjrt` feature off).
+//!
+//! Implements the same blocked API as the PJRT backend — identical f32
+//! block geometry, identical padding corrections — with the reductions
+//! computed by the in-crate Lanczos [`lgamma`] instead of an XLA
+//! executable.  Counts are integers well below 2^24, so the f32 staging
+//! loses nothing and the result agrees with the sparse reference evaluator
+//! ([`crate::lda::eval`]) to f64 rounding.
+
+use super::{blocked_log_likelihood, LlKernels, BLOCK_ROWS, PROB_BATCH, VEC_LEN};
+use crate::lda::state::LdaState;
+use crate::util::math::lgamma;
+
+struct NativeKernels;
+
+impl LlKernels for NativeKernels {
+    fn block_sum(&mut self, block: &[f32], c: f32) -> Result<f64, String> {
+        Ok(block.iter().map(|&x| lgamma((x + c) as f64)).sum())
+    }
+
+    fn vec_sum(&mut self, vec: &[f32], c: f32) -> Result<f64, String> {
+        Ok(vec.iter().map(|&x| lgamma((x + c) as f64)).sum())
+    }
+}
+
+/// The blocked log-likelihood evaluator, pure-Rust flavor.  `_dir` is
+/// accepted (and ignored) so both backends expose one constructor shape.
+pub struct LlEvaluator {
+    t: usize,
+    block: Vec<f32>,
+    vec: Vec<f32>,
+}
+
+impl LlEvaluator {
+    /// Which backend this build's `LlEvaluator` is ("blocked-rust" here).
+    pub const BACKEND: &str = "blocked-rust";
+
+    pub fn new(_dir: &std::path::Path, t: usize) -> Result<Self, String> {
+        if t < 2 {
+            return Err(format!("evaluator needs T >= 2, got {t}"));
+        }
+        Ok(LlEvaluator { t, block: vec![0.0; BLOCK_ROWS * t], vec: vec![0.0; VEC_LEN] })
+    }
+
+    pub fn topics(&self) -> usize {
+        self.t
+    }
+
+    /// The collapsed joint log-likelihood of `state` (same quantity as
+    /// [`crate::lda::eval::log_likelihood`], via the blocked path).
+    pub fn log_likelihood(&mut self, state: &LdaState) -> Result<f64, String> {
+        blocked_log_likelihood(&mut NativeKernels, state, self.t, &mut self.block, &mut self.vec)
+    }
+}
+
+/// Dense CGS conditional oracle, pure-Rust flavor: evaluates eq. (2)
+/// directly on the supplied dense rows.
+pub struct ProbOracle {
+    t: usize,
+}
+
+impl ProbOracle {
+    pub fn new(_dir: &std::path::Path, t: usize) -> Result<Self, String> {
+        if t < 2 {
+            return Err(format!("oracle needs T >= 2, got {t}"));
+        }
+        Ok(ProbOracle { t })
+    }
+
+    /// p[b,t] and norms for a batch of PROB_BATCH tokens described by
+    /// their dense (ntd, ntw) rows plus the totals.
+    pub fn dense_prob(
+        &self,
+        ntd: &[f32],
+        ntw: &[f32],
+        nt: &[f32],
+        alpha: f32,
+        beta: f32,
+        betabar: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>), String> {
+        let (b, t) = (PROB_BATCH, self.t);
+        assert_eq!(ntd.len(), b * t);
+        assert_eq!(ntw.len(), b * t);
+        assert_eq!(nt.len(), t);
+        let mut p = vec![0.0f32; b * t];
+        let mut norm = vec![0.0f32; b];
+        for i in 0..b {
+            let mut acc = 0.0f32;
+            for k in 0..t {
+                let v = (ntd[i * t + k] + alpha) * (ntw[i * t + k] + beta) / (nt[k] + betabar);
+                p[i * t + k] = v;
+                acc += v;
+            }
+            norm[i] = acc;
+        }
+        Ok((p, norm))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::presets::preset;
+    use crate::lda;
+    use crate::lda::state::{Hyper, LdaState};
+    use crate::util::rng::Pcg32;
+
+    fn dir() -> std::path::PathBuf {
+        super::super::default_artifact_dir()
+    }
+
+    /// Blocked path == sparse reference, including both padding branches
+    /// (tiny: D=120 < BLOCK_ROWS, vocab=300 > BLOCK_ROWS).
+    #[test]
+    fn blocked_ll_matches_sparse_reference() {
+        let corpus = preset("tiny").unwrap();
+        for t in [8usize, 128] {
+            let mut rng = Pcg32::seeded(t as u64);
+            let state = LdaState::init_random(&corpus, Hyper::paper_default(t), &mut rng);
+            let reference = lda::log_likelihood(&state);
+            let mut ev = LlEvaluator::new(&dir(), t).unwrap();
+            let blocked = ev.log_likelihood(&state).unwrap();
+            // β is staged through f32 (mirroring the kernel geometry), and
+            // ψ(0.01) ≈ -100 amplifies that rounding across the zero cells,
+            // so agreement is ~1e-8 relative, not f64-exact
+            let rel = ((blocked - reference) / reference).abs();
+            assert!(rel < 1e-6, "T={t}: blocked {blocked:.8e} vs reference {reference:.8e}");
+        }
+    }
+
+    /// Exactly full blocks (row_in_block == 0 at the end) take the no-pad
+    /// branch; build a corpus with D == BLOCK_ROWS to hit it.
+    #[test]
+    fn blocked_ll_full_block_boundary() {
+        use crate::corpus::synthetic::{generate, SyntheticSpec};
+        let corpus = generate(&SyntheticSpec {
+            num_docs: super::BLOCK_ROWS,
+            vocab: super::VEC_LEN,
+            avg_doc_len: 20.0,
+            true_topics: 4,
+            seed: 3,
+            ..Default::default()
+        });
+        let mut rng = Pcg32::seeded(4);
+        let state = LdaState::init_random(&corpus, Hyper::paper_default(16), &mut rng);
+        let reference = lda::log_likelihood(&state);
+        let mut ev = LlEvaluator::new(&dir(), 16).unwrap();
+        let blocked = ev.log_likelihood(&state).unwrap();
+        let rel = ((blocked - reference) / reference).abs();
+        assert!(rel < 1e-6, "blocked {blocked:.8e} vs reference {reference:.8e}");
+    }
+
+    #[test]
+    fn evaluator_rejects_topic_mismatch() {
+        let corpus = preset("tiny").unwrap();
+        let mut rng = Pcg32::seeded(1);
+        let state = LdaState::init_random(&corpus, Hyper::paper_default(8), &mut rng);
+        let mut ev = LlEvaluator::new(&dir(), 16).unwrap();
+        assert!(ev.log_likelihood(&state).is_err());
+    }
+
+    #[test]
+    fn prob_oracle_matches_dense_conditional() {
+        let t = 16usize;
+        let corpus = preset("tiny").unwrap();
+        let mut rng = Pcg32::seeded(77);
+        let state = LdaState::init_random(&corpus, Hyper::paper_default(t), &mut rng);
+        let oracle = ProbOracle::new(&dir(), t).unwrap();
+
+        let mut ntd = vec![0f32; PROB_BATCH * t];
+        let mut ntw = vec![0f32; PROB_BATCH * t];
+        let mut sites = Vec::new();
+        'outer: for (doc, tokens) in corpus.docs.iter().enumerate() {
+            for &w in tokens {
+                let b = sites.len();
+                for k in 0..t {
+                    ntd[b * t + k] = state.ntd[doc].get(k as u16) as f32;
+                    ntw[b * t + k] = state.nwt[w as usize].get(k as u16) as f32;
+                }
+                sites.push((doc, w as usize));
+                if sites.len() == PROB_BATCH {
+                    break 'outer;
+                }
+            }
+        }
+        let nt: Vec<f32> = state.nt.iter().map(|&v| v as f32).collect();
+        let h = state.hyper;
+        let bb = h.betabar(state.vocab) as f32;
+        let (p, norm) =
+            oracle.dense_prob(&ntd, &ntw, &nt, h.alpha as f32, h.beta as f32, bb).unwrap();
+        for (b, &(doc, word)) in sites.iter().enumerate() {
+            let want = state.dense_conditional(doc, word);
+            let total: f64 = want.iter().sum();
+            assert!(((norm[b] as f64 - total) / total).abs() < 1e-4, "site {b} norm");
+            for k in 0..t {
+                let rel = ((p[b * t + k] as f64 - want[k]) / want[k]).abs();
+                assert!(rel < 1e-4, "site {b} topic {k}");
+            }
+        }
+    }
+}

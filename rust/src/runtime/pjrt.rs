@@ -1,0 +1,142 @@
+//! PJRT-backed evaluator (`--features pjrt`): execute the AOT-compiled
+//! JAX/Pallas artifacts from the Rust hot path through the XLA PJRT C API.
+//!
+//! Text is the interchange format because jax ≥ 0.5 emits 64-bit
+//! instruction ids that the crate's xla_extension 0.5.1 rejects in proto
+//! form.
+//!
+//! * [`LlEvaluator`] — the model-quality evaluator: streams count blocks
+//!   through the `ll_block`/`ll_vec` kernels (Pallas lgamma reduction
+//!   inside) with closed-form padding corrections.
+//! * [`ProbOracle`] — the `prob` artifact: dense CGS conditionals for a
+//!   token batch; integration tests use it as an independent oracle for
+//!   the Rust samplers.
+
+use super::artifacts::ArtifactSet;
+use super::{blocked_log_likelihood, LlKernels, BLOCK_ROWS, PROB_BATCH, TOPIC_SIZES, VEC_LEN};
+use crate::lda::state::LdaState;
+
+/// The blocked log-likelihood evaluator backed by PJRT executables.
+pub struct LlEvaluator {
+    arts: ArtifactSet,
+    t: usize,
+    /// reusable dense block buffer (BLOCK_ROWS × T)
+    block: Vec<f32>,
+    /// reusable vec buffer (VEC_LEN)
+    vec: Vec<f32>,
+}
+
+struct PjrtKernels<'a> {
+    arts: &'a mut ArtifactSet,
+    t: usize,
+}
+
+impl LlKernels for PjrtKernels<'_> {
+    /// sum(lgamma(block + c)) via the Pallas kernel executable.
+    fn block_sum(&mut self, block: &[f32], c: f32) -> Result<f64, String> {
+        let lit = xla::Literal::vec1(block)
+            .reshape(&[BLOCK_ROWS as i64, self.t as i64])
+            .map_err(|e| e.to_string())?;
+        let out = self
+            .arts
+            .ll_block
+            .execute::<xla::Literal>(&[lit, xla::Literal::from(c)])
+            .map_err(|e| e.to_string())?[0][0]
+            .to_literal_sync()
+            .map_err(|e| e.to_string())?
+            .to_tuple1()
+            .map_err(|e| e.to_string())?;
+        Ok(out.to_vec::<f32>().map_err(|e| e.to_string())?[0] as f64)
+    }
+
+    /// sum(lgamma(vec + c)) via the ll_vec executable.
+    fn vec_sum(&mut self, vec: &[f32], c: f32) -> Result<f64, String> {
+        let lit = xla::Literal::vec1(vec);
+        let out = self
+            .arts
+            .ll_vec
+            .execute::<xla::Literal>(&[lit, xla::Literal::from(c)])
+            .map_err(|e| e.to_string())?[0][0]
+            .to_literal_sync()
+            .map_err(|e| e.to_string())?
+            .to_tuple1()
+            .map_err(|e| e.to_string())?;
+        Ok(out.to_vec::<f32>().map_err(|e| e.to_string())?[0] as f64)
+    }
+}
+
+impl LlEvaluator {
+    /// Which backend this build's `LlEvaluator` is ("xla" here).
+    pub const BACKEND: &str = "xla";
+
+    /// Load the artifacts for topic count `t` from `dir`.
+    pub fn new(dir: &std::path::Path, t: usize) -> Result<Self, String> {
+        if !TOPIC_SIZES.contains(&t) {
+            return Err(format!(
+                "no artifacts for T={t} (built for {TOPIC_SIZES:?}); \
+                 add T to python/compile/model.py TOPIC_SIZES and re-run make artifacts"
+            ));
+        }
+        let arts = ArtifactSet::load(dir, t)?;
+        Ok(LlEvaluator { arts, t, block: vec![0.0; BLOCK_ROWS * t], vec: vec![0.0; VEC_LEN] })
+    }
+
+    pub fn topics(&self) -> usize {
+        self.t
+    }
+
+    /// The collapsed joint log-likelihood of `state` (same quantity as
+    /// [`crate::lda::eval::log_likelihood`], computed on the XLA path).
+    pub fn log_likelihood(&mut self, state: &LdaState) -> Result<f64, String> {
+        let mut kern = PjrtKernels { arts: &mut self.arts, t: self.t };
+        blocked_log_likelihood(&mut kern, state, self.t, &mut self.block, &mut self.vec)
+    }
+}
+
+/// The dense CGS conditional oracle (the `prob` artifact).
+pub struct ProbOracle {
+    arts: ArtifactSet,
+    t: usize,
+}
+
+impl ProbOracle {
+    pub fn new(dir: &std::path::Path, t: usize) -> Result<Self, String> {
+        Ok(ProbOracle { arts: ArtifactSet::load(dir, t)?, t })
+    }
+
+    /// p[b,t] and norms for a batch of PROB_BATCH tokens described by
+    /// their dense (ntd, ntw) rows plus the totals.
+    pub fn dense_prob(
+        &self,
+        ntd: &[f32],
+        ntw: &[f32],
+        nt: &[f32],
+        alpha: f32,
+        beta: f32,
+        betabar: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>), String> {
+        let b = PROB_BATCH;
+        assert_eq!(ntd.len(), b * self.t);
+        assert_eq!(ntw.len(), b * self.t);
+        assert_eq!(nt.len(), self.t);
+        let prob = self.arts.prob.as_ref().ok_or("prob artifact not loaded")?;
+        let mk = |v: &[f32], dims: &[i64]| -> Result<xla::Literal, String> {
+            xla::Literal::vec1(v).reshape(dims).map_err(|e| e.to_string())
+        };
+        let out = prob
+            .execute::<xla::Literal>(&[
+                mk(ntd, &[b as i64, self.t as i64])?,
+                mk(ntw, &[b as i64, self.t as i64])?,
+                xla::Literal::vec1(nt),
+                xla::Literal::vec1(&[alpha, beta, betabar]),
+            ])
+            .map_err(|e| e.to_string())?[0][0]
+            .to_literal_sync()
+            .map_err(|e| e.to_string())?;
+        let (p, norm) = out.to_tuple2().map_err(|e| e.to_string())?;
+        Ok((
+            p.to_vec::<f32>().map_err(|e| e.to_string())?,
+            norm.to_vec::<f32>().map_err(|e| e.to_string())?,
+        ))
+    }
+}

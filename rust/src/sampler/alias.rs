@@ -91,7 +91,7 @@ impl DiscreteSampler for Alias {
     fn sample(&self, u: f64) -> usize {
         let n = self.prob.len();
         // map u ∈ [0,total) onto [0,n)
-        let x = (u / self.total * n as f64).min(n as f64 - 1e-9).max(0.0);
+        let x = (u / self.total * n as f64).clamp(0.0, n as f64 - 1e-9);
         let j = x as usize;
         let frac = x - j as f64;
         if frac < self.prob[j] {

@@ -170,6 +170,7 @@ impl DiscreteSampler for FTree {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sampler::{BSearch, LSearch};
     use crate::util::quickcheck::{check, close};
 
     #[test]
@@ -264,6 +265,89 @@ mod tests {
         let t = FTree::build(&[7.0]);
         assert_eq!(t.sample(6.999), 0);
         assert_eq!(t.sample(0.0), 0);
+    }
+
+    /// Property: on random weight vectors (zeros included, random lengths,
+    /// mixed magnitudes), the F+tree descent inverts the same CDF as the
+    /// linear-scan and binary-search samplers for every shared `u` — both
+    /// freshly built and after a stream of random updates.
+    #[test]
+    fn property_matches_cdf_inversion_samplers() {
+        check("ftree == lsearch/bsearch CDF inversion", 48, |rng| {
+            let n = 1 + rng.below(300);
+            let mut p: Vec<f64> = (0..n)
+                .map(|_| {
+                    if rng.next_f64() < 0.4 {
+                        0.0
+                    } else {
+                        rng.next_f64() * 10f64.powi(rng.below(5) as i32 - 2)
+                    }
+                })
+                .collect();
+            p[rng.below(n)] += 0.5; // at least one positive entry
+            let mut ft = FTree::build(&p);
+            let mut ls = LSearch::build(&p);
+            let mut bs = BSearch::build(&p);
+            for step in 0..120 {
+                let u = rng.uniform(ft.total());
+                let (a, b, c) = (ls.sample(u), bs.sample(u), ft.sample(u));
+                if a != c || b != c {
+                    return Err(format!("step {step} u={u}: lsearch {a} bsearch {b} ftree {c}"));
+                }
+                // random nonneg-preserving update keeps the three in lockstep
+                let idx = rng.below(n);
+                let delta = if ft.weight(idx) > 0.2 {
+                    rng.next_f64() - 0.2
+                } else {
+                    rng.next_f64()
+                };
+                ft.update(idx, delta);
+                ls.update(idx, delta);
+                bs.update(idx, delta);
+            }
+            close(ft.total(), ls.total(), 1e-9, 1e-12)
+        });
+    }
+
+    /// Property: internal sums stay consistent with the leaf sums across
+    /// the automatic rebuild boundary — drive an update stream through
+    /// REBUILD_EVERY and verify parent == left + right plus root == exact
+    /// leaf total just before and just after the rebuild fires.
+    #[test]
+    fn property_internal_sums_consistent_around_rebuild_every() {
+        check("ftree sums consistent across REBUILD_EVERY", 4, |rng| {
+            let n = 2 + rng.below(64);
+            let p: Vec<f64> = (0..n).map(|_| rng.next_f64() * 3.0 + 0.01).collect();
+            let mut t = FTree::build(&p);
+            let verify = |t: &FTree, when: &str| -> Result<(), String> {
+                for i in 1..t.size {
+                    close(t.f[i], t.f[2 * i] + t.f[2 * i + 1], 1e-6, 1e-9)
+                        .map_err(|e| format!("{when}: node {i}: {e}"))?;
+                }
+                close(t.total(), t.exact_total(), 1e-6, 1e-9)
+                    .map_err(|e| format!("{when}: root vs exact: {e}"))
+            };
+            // walk right up to the rebuild threshold...
+            while t.updates_since_rebuild < REBUILD_EVERY - 1 {
+                let idx = rng.below(n);
+                let delta = 1e-4 * (rng.next_f64() - 0.5);
+                if t.leaf(idx) + delta >= 0.0 {
+                    t.add(idx, delta);
+                } else {
+                    t.add(idx, 0.0);
+                }
+            }
+            verify(&t, "before rebuild")?;
+            // ...then across it: the counter must reset and sums must be
+            // freshly exact
+            t.add(rng.below(n), 0.25);
+            if t.updates_since_rebuild >= REBUILD_EVERY {
+                return Err("automatic rebuild did not fire".into());
+            }
+            verify(&t, "after rebuild")?;
+            close(t.total(), t.exact_total(), 1e-12, 1e-12)
+                .map_err(|e| format!("post-rebuild exactness: {e}"))
+        });
     }
 
     #[test]

@@ -126,7 +126,7 @@ impl PsSim {
         // multi-threaded within one: model at least 4 service lanes so a
         // single-node PS is not artificially serialized (otherwise shard
         // saturation masks every other effect, e.g. the disk surcharge).
-        let shards = cfg.cluster.machines.max(4).min(cfg.cluster.total_workers().max(1));
+        let shards = cfg.cluster.machines.clamp(4, cfg.cluster.total_workers().max(4));
         PsSim {
             workers,
             nwt,
@@ -168,7 +168,9 @@ impl PsSim {
         if wm == shard % self.cfg.cluster.machines {
             self.cfg.cluster.intra_latency_ns
         } else {
-            self.cfg.cluster.transfer_ns(bytes, worker, shard * self.cfg.cluster.cores_per_machine % self.cfg.cluster.total_workers().max(1))
+            let workers = self.cfg.cluster.total_workers().max(1);
+            let shard_home = shard * self.cfg.cluster.cores_per_machine % workers;
+            self.cfg.cluster.transfer_ns(bytes, worker, shard_home)
         }
     }
 

@@ -38,7 +38,11 @@ impl Default for BenchOpts {
 
 /// Quick preset for expensive end-to-end benches.
 pub fn fast_opts() -> BenchOpts {
-    BenchOpts { warmup: Duration::from_millis(10), sample_time: Duration::from_millis(30), samples: 5 }
+    BenchOpts {
+        warmup: Duration::from_millis(10),
+        sample_time: Duration::from_millis(30),
+        samples: 5,
+    }
 }
 
 /// Measure `f`, auto-calibrating the batch size.  `f` should perform ONE op.

@@ -108,7 +108,8 @@ mod tests {
 
     #[test]
     fn parses_subcommand_and_flags() {
-        let a = Args::from_tokens(&toks("train --topics 1024 --preset enron-sim --verbose")).unwrap();
+        let a =
+            Args::from_tokens(&toks("train --topics 1024 --preset enron-sim --verbose")).unwrap();
         assert_eq!(a.subcommand.as_deref(), Some("train"));
         assert_eq!(a.parse_or("topics", 0usize).unwrap(), 1024);
         assert_eq!(a.str_or("preset", ""), "enron-sim");

@@ -8,8 +8,7 @@ use super::rng::Pcg32;
 
 /// Run `prop` for `cases` seeds; panic with the failing seed + message.
 ///
-/// ```no_run
-/// // (no_run: rustdoc test binaries miss the xla rpath in this offline env)
+/// ```
 /// use fnomad_lda::util::quickcheck::check;
 /// check("addition commutes", 64, |rng| {
 ///     let (a, b) = (rng.next_u32() as u64, rng.next_u32() as u64);

@@ -2,137 +2,156 @@
 //! text by `make artifacts`) loaded and executed from Rust, cross-checked
 //! against the in-crate reference implementations.
 //!
-//! These tests SKIP (with a loud message) when `artifacts/` is absent so
-//! `cargo test` works standalone; `make test` always builds artifacts
-//! first and therefore always exercises them.
+//! These tests only exist when the crate is built with `--features pjrt`;
+//! the default build compiles a single loud SKIP test instead, so
+//! `cargo test` stays hermetic (no Python, JAX, or XLA artifacts needed).
+//! With the feature on, they additionally SKIP (again loudly, never
+//! failing) when `artifacts/` is absent; `make test` always builds
+//! artifacts first and therefore always exercises them.
 
-use fnomad_lda::corpus::presets::preset;
-use fnomad_lda::corpus::synthetic::{generate, SyntheticSpec};
-use fnomad_lda::lda::state::{Hyper, LdaState};
-use fnomad_lda::lda::{self, Sweep};
-use fnomad_lda::runtime::{
-    artifacts_available, default_artifact_dir, LlEvaluator, ProbOracle, PROB_BATCH,
-};
-use fnomad_lda::util::rng::Pcg32;
-
-fn artifacts() -> Option<std::path::PathBuf> {
-    let dir = default_artifact_dir();
-    if artifacts_available(&dir) {
-        Some(dir)
-    } else {
-        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
-        None
-    }
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn skipped_without_pjrt_feature() {
+    eprintln!(
+        "SKIP: xla_runtime tests are feature-gated — rebuild with \
+         `cargo test --features pjrt` (needs the vendored xla crate and \
+         `make artifacts`); the default build uses the pure-Rust evaluator"
+    );
 }
 
-/// XLA LL == Rust LL across random states and both built topic counts.
-#[test]
-fn xla_ll_matches_rust_reference() {
-    let Some(dir) = artifacts() else { return };
-    let corpus = preset("tiny").unwrap();
-    for &t in &[128usize, 1024] {
-        let mut evaluator = LlEvaluator::new(&dir, t).unwrap();
-        for seed in 0..3 {
-            let mut rng = Pcg32::seeded(seed);
-            let state = LdaState::init_random(&corpus, Hyper::paper_default(t), &mut rng);
-            let rust = lda::log_likelihood(&state);
-            let xla = evaluator.log_likelihood(&state).unwrap();
-            let rel = ((xla - rust) / rust).abs();
-            assert!(rel < 2e-4, "T={t} seed={seed}: rust {rust:.6e} xla {xla:.6e} rel {rel:.2e}");
-        }
-    }
-}
-
-/// The agreement holds on a *trained* state too (counts far from uniform).
-#[test]
-fn xla_ll_matches_after_training() {
-    let Some(dir) = artifacts() else { return };
-    let corpus = generate(&SyntheticSpec {
-        num_docs: 300,
-        vocab: 700,
-        avg_doc_len: 50.0,
-        true_topics: 10,
-        seed: 5,
-        ..Default::default()
-    });
-    let t = 128;
-    let mut rng = Pcg32::seeded(1);
-    let mut state = LdaState::init_random(&corpus, Hyper::paper_default(t), &mut rng);
-    let mut sampler = lda::FLdaWord::new(&state, &corpus);
-    for _ in 0..10 {
-        sampler.sweep(&mut state, &corpus, &mut rng);
-    }
-    let rust = lda::log_likelihood(&state);
-    let mut evaluator = LlEvaluator::new(&dir, t).unwrap();
-    let xla = evaluator.log_likelihood(&state).unwrap();
-    let rel = ((xla - rust) / rust).abs();
-    assert!(rel < 2e-4, "rust {rust:.6e} xla {xla:.6e} rel {rel:.2e}");
-}
-
-/// The Pallas dense-probability artifact agrees with the Rust dense
-/// conditional — the independent oracle for every sampler's target.
-#[test]
-fn prob_artifact_matches_dense_conditional() {
-    let Some(dir) = artifacts() else { return };
-    let t = 128usize;
-    let corpus = preset("tiny").unwrap();
-    let mut rng = Pcg32::seeded(77);
-    let state = LdaState::init_random(&corpus, Hyper::paper_default(t), &mut rng);
-    let oracle = ProbOracle::new(&dir, t).unwrap();
-
-    // batch: the first PROB_BATCH tokens of the corpus
-    let mut ntd = vec![0f32; PROB_BATCH * t];
-    let mut ntw = vec![0f32; PROB_BATCH * t];
-    let mut sites = Vec::new();
-    'outer: for (doc, tokens) in corpus.docs.iter().enumerate() {
-        for &w in tokens {
-            let b = sites.len();
-            for k in 0..t {
-                ntd[b * t + k] = state.ntd[doc].get(k as u16) as f32;
-                ntw[b * t + k] = state.nwt[w as usize].get(k as u16) as f32;
-            }
-            sites.push((doc, w as usize));
-            if sites.len() == PROB_BATCH {
-                break 'outer;
-            }
-        }
-    }
-    assert_eq!(sites.len(), PROB_BATCH);
-    let nt: Vec<f32> = state.nt.iter().map(|&v| v as f32).collect();
-    let h = state.hyper;
-    let (p, norm) = oracle
-        .dense_prob(
-            &ntd,
-            &ntw,
-            &nt,
-            h.alpha as f32,
-            h.beta as f32,
-            h.betabar(state.vocab) as f32,
-        )
-        .unwrap();
-
-    for (b, &(doc, word)) in sites.iter().enumerate() {
-        let want = state.dense_conditional(doc, word);
-        let total: f64 = want.iter().sum();
-        let got_norm = norm[b] as f64;
-        assert!(
-            ((got_norm - total) / total).abs() < 1e-4,
-            "site {b}: norm {got_norm} vs {total}"
-        );
-        for k in 0..t {
-            let rel = ((p[b * t + k] as f64 - want[k]) / want[k]).abs();
-            assert!(rel < 1e-4, "site {b} topic {k}: {} vs {}", p[b * t + k], want[k]);
-        }
-    }
-}
-
-/// Loader rejects a topic count with no artifacts.
-#[test]
-fn loader_rejects_unbuilt_topic_count() {
-    let Some(dir) = artifacts() else { return };
-    let err = match LlEvaluator::new(&dir, 333) {
-        Err(e) => e,
-        Ok(_) => panic!("loader accepted T=333 with no artifact"),
+#[cfg(feature = "pjrt")]
+mod pjrt_tests {
+    use fnomad_lda::corpus::presets::preset;
+    use fnomad_lda::corpus::synthetic::{generate, SyntheticSpec};
+    use fnomad_lda::lda::state::{Hyper, LdaState};
+    use fnomad_lda::lda::{self, Sweep};
+    use fnomad_lda::runtime::{
+        artifacts_available, default_artifact_dir, LlEvaluator, ProbOracle, PROB_BATCH,
     };
-    assert!(err.contains("333"), "unhelpful error: {err}");
+    use fnomad_lda::util::rng::Pcg32;
+
+    fn artifacts() -> Option<std::path::PathBuf> {
+        let dir = default_artifact_dir();
+        if artifacts_available(&dir) {
+            Some(dir)
+        } else {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+            None
+        }
+    }
+
+    /// XLA LL == Rust LL across random states and both built topic counts.
+    #[test]
+    fn xla_ll_matches_rust_reference() {
+        let Some(dir) = artifacts() else { return };
+        let corpus = preset("tiny").unwrap();
+        for &t in &[128usize, 1024] {
+            let mut evaluator = LlEvaluator::new(&dir, t).unwrap();
+            for seed in 0..3 {
+                let mut rng = Pcg32::seeded(seed);
+                let state = LdaState::init_random(&corpus, Hyper::paper_default(t), &mut rng);
+                let rust = lda::log_likelihood(&state);
+                let xla = evaluator.log_likelihood(&state).unwrap();
+                let rel = ((xla - rust) / rust).abs();
+                assert!(
+                    rel < 2e-4,
+                    "T={t} seed={seed}: rust {rust:.6e} xla {xla:.6e} rel {rel:.2e}"
+                );
+            }
+        }
+    }
+
+    /// The agreement holds on a *trained* state too (counts far from uniform).
+    #[test]
+    fn xla_ll_matches_after_training() {
+        let Some(dir) = artifacts() else { return };
+        let corpus = generate(&SyntheticSpec {
+            num_docs: 300,
+            vocab: 700,
+            avg_doc_len: 50.0,
+            true_topics: 10,
+            seed: 5,
+            ..Default::default()
+        });
+        let t = 128;
+        let mut rng = Pcg32::seeded(1);
+        let mut state = LdaState::init_random(&corpus, Hyper::paper_default(t), &mut rng);
+        let mut sampler = lda::FLdaWord::new(&state, &corpus);
+        for _ in 0..10 {
+            sampler.sweep(&mut state, &corpus, &mut rng);
+        }
+        let rust = lda::log_likelihood(&state);
+        let mut evaluator = LlEvaluator::new(&dir, t).unwrap();
+        let xla = evaluator.log_likelihood(&state).unwrap();
+        let rel = ((xla - rust) / rust).abs();
+        assert!(rel < 2e-4, "rust {rust:.6e} xla {xla:.6e} rel {rel:.2e}");
+    }
+
+    /// The Pallas dense-probability artifact agrees with the Rust dense
+    /// conditional — the independent oracle for every sampler's target.
+    #[test]
+    fn prob_artifact_matches_dense_conditional() {
+        let Some(dir) = artifacts() else { return };
+        let t = 128usize;
+        let corpus = preset("tiny").unwrap();
+        let mut rng = Pcg32::seeded(77);
+        let state = LdaState::init_random(&corpus, Hyper::paper_default(t), &mut rng);
+        let oracle = ProbOracle::new(&dir, t).unwrap();
+
+        // batch: the first PROB_BATCH tokens of the corpus
+        let mut ntd = vec![0f32; PROB_BATCH * t];
+        let mut ntw = vec![0f32; PROB_BATCH * t];
+        let mut sites = Vec::new();
+        'outer: for (doc, tokens) in corpus.docs.iter().enumerate() {
+            for &w in tokens {
+                let b = sites.len();
+                for k in 0..t {
+                    ntd[b * t + k] = state.ntd[doc].get(k as u16) as f32;
+                    ntw[b * t + k] = state.nwt[w as usize].get(k as u16) as f32;
+                }
+                sites.push((doc, w as usize));
+                if sites.len() == PROB_BATCH {
+                    break 'outer;
+                }
+            }
+        }
+        assert_eq!(sites.len(), PROB_BATCH);
+        let nt: Vec<f32> = state.nt.iter().map(|&v| v as f32).collect();
+        let h = state.hyper;
+        let (p, norm) = oracle
+            .dense_prob(
+                &ntd,
+                &ntw,
+                &nt,
+                h.alpha as f32,
+                h.beta as f32,
+                h.betabar(state.vocab) as f32,
+            )
+            .unwrap();
+
+        for (b, &(doc, word)) in sites.iter().enumerate() {
+            let want = state.dense_conditional(doc, word);
+            let total: f64 = want.iter().sum();
+            let got_norm = norm[b] as f64;
+            assert!(
+                ((got_norm - total) / total).abs() < 1e-4,
+                "site {b}: norm {got_norm} vs {total}"
+            );
+            for k in 0..t {
+                let rel = ((p[b * t + k] as f64 - want[k]) / want[k]).abs();
+                assert!(rel < 1e-4, "site {b} topic {k}: {} vs {}", p[b * t + k], want[k]);
+            }
+        }
+    }
+
+    /// Loader rejects a topic count with no artifacts.
+    #[test]
+    fn loader_rejects_unbuilt_topic_count() {
+        let Some(dir) = artifacts() else { return };
+        let err = match LlEvaluator::new(&dir, 333) {
+            Err(e) => e,
+            Ok(_) => panic!("loader accepted T=333 with no artifact"),
+        };
+        assert!(err.contains("333"), "unhelpful error: {err}");
+    }
 }
