@@ -12,7 +12,7 @@
 //!     cargo bench --bench fig4_serial_convergence
 
 use fnomad_lda::corpus::preset;
-use fnomad_lda::coordinator::Evaluator;
+use fnomad_lda::coordinator::{EvalPolicy, Evaluator};
 use fnomad_lda::lda;
 use fnomad_lda::lda::state::{Hyper, LdaState};
 use fnomad_lda::util::bench::Table;
@@ -30,7 +30,7 @@ fn main() {
 
     for (preset_name, iters) in runs {
         let corpus = preset(preset_name).unwrap();
-        let mut eval = Evaluator::resolve("auto", topics).unwrap();
+        let mut eval = Evaluator::resolve(EvalPolicy::Auto, topics).unwrap();
         eprintln!(
             "{preset_name}: {} docs / {} tokens, T={topics}, eval={}",
             corpus.num_docs(),

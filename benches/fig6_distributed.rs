@@ -66,8 +66,7 @@ fn main() {
             let mut s = Series::new(format!("fig6:{preset_name}:{label}"));
             s.push(0.0, log_likelihood(&sim.gather_state(&corpus)));
             for _ in 0..epochs {
-                let st = sim.run_epoch();
-                let _ = st.mean_server_wait_ns;
+                sim.run_epoch();
                 s.push(sim.vtime_secs(), log_likelihood(&sim.gather_state(&corpus)));
             }
             eprintln!("  {label}: {:.3}s vtime, LL {:.4e}", sim.vtime_secs(), s.last_y().unwrap());

@@ -14,7 +14,7 @@
 //! Requires `make artifacts` (falls back to the Rust evaluator with a
 //! warning if they are missing, so the example always runs).
 
-use fnomad_lda::coordinator::{train, Evaluator, TrainOpts};
+use fnomad_lda::coordinator::{train, EvalPolicy, Evaluator, SamplerKind, TrainConfig};
 use fnomad_lda::runtime::{artifacts_available, default_artifact_dir};
 
 fn main() -> Result<(), String> {
@@ -30,24 +30,20 @@ fn main() -> Result<(), String> {
         );
     }
 
-    let opts = TrainOpts {
-        preset,
-        topics,
-        sampler: "flda-word".into(),
-        runtime: "serial".into(),
-        iters,
-        seed: 2015, // WWW'15
-        eval: "auto".into(),
-        eval_every: 1,
-        out: Some("results/e2e_train.csv".into()),
-        ..Default::default()
-    };
+    let cfg = TrainConfig::preset(&preset)
+        .topics(topics)
+        .sampler(SamplerKind::FLdaWord)
+        .iters(iters)
+        .seed(2015) // WWW'15
+        .eval(EvalPolicy::Auto)
+        .eval_every(1)
+        .out("results/e2e_train.csv");
     // surface which evaluator resolved (xla = full stack)
-    let eval = Evaluator::resolve(&opts.eval, opts.topics)?;
+    let eval = Evaluator::resolve(cfg.eval, cfg.topics)?;
     eprintln!("[e2e] evaluator: {}", eval.name());
     drop(eval);
 
-    let res = train(&opts)?;
+    let res = train(&cfg)?;
 
     println!("\n=== e2e summary ===");
     println!("points on the loss curve : {}", res.ll_vs_iter.points.len());
@@ -66,7 +62,7 @@ fn main() -> Result<(), String> {
         return Err("LL did not improve over training".into());
     }
     res.final_state
-        .check_consistency(&fnomad_lda::corpus::preset(&opts.preset)?)?;
+        .check_consistency(&fnomad_lda::corpus::preset(&cfg.preset)?)?;
     println!("e2e_train OK");
     Ok(())
 }

@@ -3,6 +3,7 @@
 //!
 //!     cargo run --release --example quickstart
 
+use fnomad_lda::coordinator::{train, EvalPolicy, RuntimeKind, TrainConfig};
 use fnomad_lda::corpus::preset;
 use fnomad_lda::lda::state::{Hyper, LdaState};
 use fnomad_lda::lda::{log_likelihood, topics, FLdaWord, Sweep};
@@ -40,6 +41,21 @@ fn main() -> Result<(), String> {
 
     // 5. invariants held throughout
     state.check_consistency(&corpus)?;
+
+    // 6. the same experiment through the coordinator: pick a runtime with
+    //    the typed builder and let the driver loop handle eval + series
+    let cfg = TrainConfig::preset("tiny")
+        .runtime(RuntimeKind::NomadSim)
+        .topics(16)
+        .iters(5)
+        .eval(EvalPolicy::Rust)
+        .quiet(true);
+    let res = train(&cfg)?;
+    println!(
+        "nomad-sim (simulated cluster): final LL = {:.4e}, {:.0} virtual tokens/s",
+        res.ll_vs_iter.last_y().unwrap(),
+        res.tokens_per_sec
+    );
     println!("quickstart OK");
     Ok(())
 }

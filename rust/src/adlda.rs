@@ -48,6 +48,16 @@ impl AdLda {
     pub fn new(corpus: &Corpus, hyper: Hyper, cfg: AdLdaConfig) -> Self {
         let mut rng = Pcg32::new(cfg.seed, 0xAD1DA);
         let state = LdaState::init_random(corpus, hyper, &mut rng);
+        Self::from_state(corpus, state, cfg)
+    }
+
+    /// Build from explicit initial assignments (the resume path).
+    pub fn from_state(corpus: &Corpus, state: LdaState, cfg: AdLdaConfig) -> Self {
+        assert_eq!(state.z.len(), corpus.num_docs(), "init state / corpus mismatch");
+        let hyper = state.hyper;
+        // worker streams derive from a different stream id than the init
+        // draws (0xAD1DA in `new`), so sampling never replays them
+        let mut rng = Pcg32::new(cfg.seed, 0xAD1DB);
         let partition = Partition::by_tokens(corpus, cfg.workers);
         let rngs = (0..cfg.workers).map(|l| rng.split(l as u64 + 1)).collect();
         let max_worker_tokens =

@@ -1,0 +1,423 @@
+//! Typed training configuration: the [`TrainConfig`] builder plus the
+//! [`RuntimeKind`] / [`SamplerKind`] / [`EvalPolicy`] enums that replace
+//! the old stringly-typed option bag.
+//!
+//! CLI strings survive only at the parse boundary: `main.rs` calls
+//! `FromStr` on each flag and everything past that point is typed.
+//!
+//! ```
+//! use fnomad_lda::coordinator::{RuntimeKind, TrainConfig};
+//!
+//! let cfg = TrainConfig::preset("tiny")
+//!     .runtime(RuntimeKind::NomadSim)
+//!     .topics(16)
+//!     .iters(3)
+//!     .quiet(true);
+//! assert_eq!(cfg.runtime.to_string(), "nomad-sim");
+//! ```
+
+use std::fmt;
+use std::path::PathBuf;
+use std::str::FromStr;
+
+/// Which training runtime executes the epochs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RuntimeKind {
+    /// single-threaded Gibbs sweeps (any [`SamplerKind`])
+    Serial,
+    /// threaded Nomad: real workers, nomadic word tokens (§4)
+    Nomad,
+    /// threaded parameter-server baseline (Yahoo! LDA architecture)
+    Ps,
+    /// bulk-synchronous AD-LDA baseline
+    AdLda,
+    /// Nomad under virtual time (discrete-event simulator)
+    NomadSim,
+    /// parameter server under virtual time
+    PsSim,
+}
+
+impl RuntimeKind {
+    /// Every variant, in CLI order (drives `every_runtime_trains_tiny`).
+    pub const ALL: [RuntimeKind; 6] = [
+        RuntimeKind::Serial,
+        RuntimeKind::Nomad,
+        RuntimeKind::Ps,
+        RuntimeKind::AdLda,
+        RuntimeKind::NomadSim,
+        RuntimeKind::PsSim,
+    ];
+
+    /// CLI name (also the `Display` form).
+    pub fn name(&self) -> &'static str {
+        match self {
+            RuntimeKind::Serial => "serial",
+            RuntimeKind::Nomad => "nomad",
+            RuntimeKind::Ps => "ps",
+            RuntimeKind::AdLda => "adlda",
+            RuntimeKind::NomadSim => "nomad-sim",
+            RuntimeKind::PsSim => "ps-sim",
+        }
+    }
+
+    /// True for the virtual-time runtimes (their clock is not wall time).
+    pub fn is_simulated(&self) -> bool {
+        matches!(self, RuntimeKind::NomadSim | RuntimeKind::PsSim)
+    }
+
+    fn valid_names() -> String {
+        RuntimeKind::ALL.map(|r| r.name()).join("|")
+    }
+}
+
+impl fmt::Display for RuntimeKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for RuntimeKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        RuntimeKind::ALL
+            .into_iter()
+            .find(|r| r.name() == s)
+            .ok_or_else(|| format!("unknown runtime '{s}' ({})", RuntimeKind::valid_names()))
+    }
+}
+
+/// Which serial Gibbs sweep variant the [`RuntimeKind::Serial`] runtime uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SamplerKind {
+    /// dense O(T) collapsed Gibbs
+    Plain,
+    /// SparseLDA s/r/q decomposition
+    Sparse,
+    /// AliasLDA (Metropolis-Hastings over a stale alias table)
+    Alias,
+    /// F+LDA, doc-by-doc order
+    FLdaDoc,
+    /// F+LDA, word-by-word order (the paper's fastest serial sampler)
+    FLdaWord,
+}
+
+impl SamplerKind {
+    /// Every variant, in CLI order.
+    pub const ALL: [SamplerKind; 5] = [
+        SamplerKind::Plain,
+        SamplerKind::Sparse,
+        SamplerKind::Alias,
+        SamplerKind::FLdaDoc,
+        SamplerKind::FLdaWord,
+    ];
+
+    /// CLI name; also the key accepted by [`crate::lda::by_name`].
+    pub fn name(&self) -> &'static str {
+        match self {
+            SamplerKind::Plain => "plain",
+            SamplerKind::Sparse => "sparse",
+            SamplerKind::Alias => "alias",
+            SamplerKind::FLdaDoc => "flda-doc",
+            SamplerKind::FLdaWord => "flda-word",
+        }
+    }
+
+    fn valid_names() -> String {
+        SamplerKind::ALL.map(|s| s.name()).join("|")
+    }
+}
+
+impl fmt::Display for SamplerKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for SamplerKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        SamplerKind::ALL
+            .into_iter()
+            .find(|k| k.name() == s)
+            .ok_or_else(|| format!("unknown sampler '{s}' ({})", SamplerKind::valid_names()))
+    }
+}
+
+/// How the model-quality evaluator backend is chosen.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum EvalPolicy {
+    /// blocked backend when artifacts cover the topic count, Rust otherwise
+    #[default]
+    Auto,
+    /// force the blocked backend (PJRT with `--features pjrt`)
+    Xla,
+    /// force the exact sparse Rust reference
+    Rust,
+}
+
+impl EvalPolicy {
+    /// Every variant, in CLI order.
+    pub const ALL: [EvalPolicy; 3] = [EvalPolicy::Auto, EvalPolicy::Xla, EvalPolicy::Rust];
+
+    /// CLI name (also the `Display` form).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EvalPolicy::Auto => "auto",
+            EvalPolicy::Xla => "xla",
+            EvalPolicy::Rust => "rust",
+        }
+    }
+
+    fn valid_names() -> String {
+        EvalPolicy::ALL.map(|p| p.name()).join("|")
+    }
+}
+
+impl fmt::Display for EvalPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for EvalPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        EvalPolicy::ALL
+            .into_iter()
+            .find(|p| p.name() == s)
+            .ok_or_else(|| format!("unknown eval policy '{s}' ({})", EvalPolicy::valid_names()))
+    }
+}
+
+/// Typed training/experiment configuration.
+///
+/// Construct with [`TrainConfig::preset`] and chain the builder methods;
+/// every field is also public for struct-literal construction at the CLI
+/// parse layer.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// corpus preset name (see [`crate::corpus::presets`])
+    pub preset: String,
+    pub topics: usize,
+    /// serial sweep variant (only [`RuntimeKind::Serial`] reads this)
+    pub sampler: SamplerKind,
+    pub runtime: RuntimeKind,
+    pub workers: usize,
+    /// simulated machines (sim runtimes; workers = machines × 20 when > 1)
+    pub machines: usize,
+    pub iters: usize,
+    pub seed: u64,
+    pub eval: EvalPolicy,
+    pub eval_every: usize,
+    /// PS pull/push cadence (docs)
+    pub batch_docs: usize,
+    /// PS disk flavor (sim only)
+    pub disk: bool,
+    /// CSV output path for the convergence series
+    pub out: Option<PathBuf>,
+    pub quiet: bool,
+    /// checkpoint file; written at finish (and every `save_every` epochs)
+    pub checkpoint: Option<PathBuf>,
+    /// checkpoint cadence in epochs (0 = only at finish); snapshots are
+    /// taken at evaluation points, so cadences finer than `eval_every`
+    /// round up to the next evaluation
+    pub save_every: usize,
+    /// start from `checkpoint` if it exists instead of random init
+    pub resume: bool,
+    /// Minka fixed-point steps applied to the final state (0 = off)
+    pub hyper_opt_steps: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            preset: "tiny".into(),
+            topics: 128,
+            sampler: SamplerKind::FLdaWord,
+            runtime: RuntimeKind::Serial,
+            workers: 2,
+            machines: 1,
+            iters: 10,
+            seed: 0,
+            eval: EvalPolicy::Auto,
+            eval_every: 1,
+            batch_docs: 16,
+            disk: false,
+            out: None,
+            quiet: false,
+            checkpoint: None,
+            save_every: 0,
+            resume: false,
+            hyper_opt_steps: 0,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Start a config for the given corpus preset (builder entry point).
+    pub fn preset(name: &str) -> Self {
+        TrainConfig { preset: name.into(), ..Default::default() }
+    }
+
+    pub fn topics(mut self, t: usize) -> Self {
+        self.topics = t;
+        self
+    }
+
+    pub fn sampler(mut self, s: SamplerKind) -> Self {
+        self.sampler = s;
+        self
+    }
+
+    pub fn runtime(mut self, r: RuntimeKind) -> Self {
+        self.runtime = r;
+        self
+    }
+
+    pub fn workers(mut self, p: usize) -> Self {
+        self.workers = p;
+        self
+    }
+
+    pub fn machines(mut self, m: usize) -> Self {
+        self.machines = m;
+        self
+    }
+
+    pub fn iters(mut self, n: usize) -> Self {
+        self.iters = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    pub fn eval(mut self, e: EvalPolicy) -> Self {
+        self.eval = e;
+        self
+    }
+
+    pub fn eval_every(mut self, k: usize) -> Self {
+        self.eval_every = k;
+        self
+    }
+
+    pub fn batch_docs(mut self, b: usize) -> Self {
+        self.batch_docs = b;
+        self
+    }
+
+    pub fn disk(mut self, d: bool) -> Self {
+        self.disk = d;
+        self
+    }
+
+    pub fn out(mut self, path: impl Into<PathBuf>) -> Self {
+        self.out = Some(path.into());
+        self
+    }
+
+    pub fn quiet(mut self, q: bool) -> Self {
+        self.quiet = q;
+        self
+    }
+
+    pub fn checkpoint(mut self, path: impl Into<PathBuf>) -> Self {
+        self.checkpoint = Some(path.into());
+        self
+    }
+
+    pub fn save_every(mut self, n: usize) -> Self {
+        self.save_every = n;
+        self
+    }
+
+    pub fn resume(mut self, r: bool) -> Self {
+        self.resume = r;
+        self
+    }
+
+    pub fn hyper_opt_steps(mut self, n: usize) -> Self {
+        self.hyper_opt_steps = n;
+        self
+    }
+
+    /// Figure/progress label, e.g. `flda-word-tiny` or `nomad-p4-enron-sim`.
+    pub fn label(&self) -> String {
+        match self.runtime {
+            RuntimeKind::Serial => format!("{}-{}", self.sampler, self.preset),
+            RuntimeKind::NomadSim | RuntimeKind::PsSim if self.machines > 1 => format!(
+                "{}-{}x20-{}{}",
+                self.runtime,
+                self.machines,
+                self.preset,
+                if self.disk { "-disk" } else { "" }
+            ),
+            rt => format!(
+                "{rt}-p{}-{}{}",
+                self.workers,
+                self.preset,
+                if self.disk { "-disk" } else { "" }
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runtime_kind_roundtrip_and_error() {
+        for kind in RuntimeKind::ALL {
+            assert_eq!(kind.to_string().parse::<RuntimeKind>().unwrap(), kind);
+        }
+        let err = "bogus".parse::<RuntimeKind>().unwrap_err();
+        for kind in RuntimeKind::ALL {
+            assert!(err.contains(kind.name()), "error must list '{kind}': {err}");
+        }
+    }
+
+    #[test]
+    fn sampler_kind_roundtrip_and_error() {
+        for kind in SamplerKind::ALL {
+            assert_eq!(kind.to_string().parse::<SamplerKind>().unwrap(), kind);
+        }
+        let err = "bogus".parse::<SamplerKind>().unwrap_err();
+        for kind in SamplerKind::ALL {
+            assert!(err.contains(kind.name()), "error must list '{kind}': {err}");
+        }
+    }
+
+    #[test]
+    fn eval_policy_roundtrip_and_error() {
+        for p in EvalPolicy::ALL {
+            assert_eq!(p.to_string().parse::<EvalPolicy>().unwrap(), p);
+        }
+        let err = "bogus".parse::<EvalPolicy>().unwrap_err();
+        for p in EvalPolicy::ALL {
+            assert!(err.contains(p.name()), "error must list '{p}': {err}");
+        }
+    }
+
+    #[test]
+    fn builder_chains_and_labels() {
+        let cfg = TrainConfig::preset("enron-sim")
+            .runtime(RuntimeKind::Nomad)
+            .workers(4)
+            .topics(64);
+        assert_eq!(cfg.label(), "nomad-p4-enron-sim");
+        let serial = TrainConfig::preset("tiny").sampler(SamplerKind::Plain);
+        assert_eq!(serial.label(), "plain-tiny");
+        let sim = TrainConfig::preset("tiny")
+            .runtime(RuntimeKind::PsSim)
+            .machines(4)
+            .disk(true);
+        assert_eq!(sim.label(), "ps-sim-4x20-tiny-disk");
+    }
+}

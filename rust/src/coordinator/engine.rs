@@ -1,0 +1,255 @@
+//! The typed engine API every training runtime plugs into.
+//!
+//! [`TrainEngine`] is the contract between the single driver loop in
+//! [`super::train_with`] and the six execution backends (serial sweeps,
+//! threaded Nomad, threaded parameter server, bulk-synchronous AD-LDA, and
+//! the two virtual-time simulators).  A future runtime — e.g. multi-machine
+//! nomad over real sockets — implements this trait and the whole
+//! coordinator surface (observers, checkpoints, CSV series, CLI) comes for
+//! free.
+//!
+//! All engines are built from an explicit initial [`LdaState`]
+//! ([`make_engine`]), which is how `--resume` works uniformly: the driver
+//! loads a checkpoint (or random-inits) once and every runtime starts from
+//! those assignments.
+
+use crate::adlda::{AdLda, AdLdaConfig};
+use crate::corpus::Corpus;
+use crate::lda::{AliasLda, FLdaDoc, FLdaWord, LdaState, PlainLda, SparseLda, Sweep};
+use crate::nomad::{NomadConfig, NomadRuntime};
+use crate::ps::{PsConfig, PsRuntime};
+use crate::simnet::nomad_sim::{NomadSim, NomadSimConfig};
+use crate::simnet::ps_sim::{PsSim, PsSimConfig};
+use crate::simnet::{ClusterSpec, CostModel};
+use crate::util::metrics::Stopwatch;
+use crate::util::rng::Pcg32;
+
+use super::{RuntimeKind, SamplerKind, TrainConfig};
+
+/// How an engine measures time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Clock {
+    /// real elapsed seconds; the driver accumulates per-epoch `secs`
+    Wall,
+    /// discrete-event virtual time; carries the current clock reading in
+    /// seconds since construction
+    Virtual(f64),
+}
+
+/// Per-epoch statistics, uniform across every runtime (the union of the
+/// four structs it replaced).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EpochReport {
+    /// tokens resampled this epoch
+    pub processed: u64,
+    /// epoch duration in this engine's clock (wall or virtual seconds)
+    pub secs: f64,
+    /// reads served from possibly-stale state: PS cache pulls, AD-LDA
+    /// tokens sampled against the frozen snapshot; zero for nomad and
+    /// serial, whose word counts are always exact
+    pub stale_reads: u64,
+    /// coordination messages: token transfers (nomad) or server ops
+    /// (parameter server); zero for the uncoordinated runtimes
+    pub msgs: u64,
+}
+
+/// A training runtime the generic driver loop can drive.
+pub trait TrainEngine {
+    /// Run one epoch (one pass over every token) and report it.
+    fn run_epoch(&mut self) -> EpochReport;
+
+    /// Assemble the exact global count state (valid at epoch boundaries).
+    fn state_snapshot(&mut self, corpus: &Corpus) -> LdaState;
+
+    /// Which clock `EpochReport::secs` (and the LL-vs-time x axis) uses.
+    fn clock(&self) -> Clock {
+        Clock::Wall
+    }
+
+    /// Stop workers / release resources.  Idempotent; engines with `Drop`
+    /// shutdown also call it there.
+    fn shutdown(&mut self) {}
+}
+
+/// Serial Gibbs sweeps behind the engine API.
+pub struct SerialEngine<'c> {
+    corpus: &'c Corpus,
+    state: LdaState,
+    sampler: Box<dyn Sweep>,
+    rng: Pcg32,
+}
+
+impl<'c> SerialEngine<'c> {
+    pub fn from_state(
+        corpus: &'c Corpus,
+        state: LdaState,
+        sampler: SamplerKind,
+        seed: u64,
+    ) -> Self {
+        // typed construction: the enum already guarantees a valid variant,
+        // so no stringly `lda::by_name` round-trip and no error path
+        let sampler: Box<dyn Sweep> = match sampler {
+            SamplerKind::Plain => Box::new(PlainLda::new(&state)),
+            SamplerKind::Sparse => Box::new(SparseLda::new(&state)),
+            SamplerKind::Alias => Box::new(AliasLda::new(&state)),
+            SamplerKind::FLdaDoc => Box::new(FLdaDoc::new(&state)),
+            SamplerKind::FLdaWord => Box::new(FLdaWord::new(&state, corpus)),
+        };
+        // sampling draws come from their own stream so they never replay
+        // the stream-0 draws that produced the random init
+        SerialEngine { corpus, state, sampler, rng: Pcg32::new(seed, 0xD1CE) }
+    }
+}
+
+impl TrainEngine for SerialEngine<'_> {
+    fn run_epoch(&mut self) -> EpochReport {
+        let t0 = Stopwatch::new();
+        self.sampler.sweep(&mut self.state, self.corpus, &mut self.rng);
+        EpochReport {
+            processed: self.corpus.num_tokens() as u64,
+            secs: t0.secs(),
+            ..Default::default()
+        }
+    }
+
+    fn state_snapshot(&mut self, _corpus: &Corpus) -> LdaState {
+        self.state.clone()
+    }
+}
+
+/// Bulk-synchronous AD-LDA behind the engine API.
+pub struct AdLdaEngine<'c> {
+    corpus: &'c Corpus,
+    inner: AdLda,
+}
+
+impl TrainEngine for AdLdaEngine<'_> {
+    fn run_epoch(&mut self) -> EpochReport {
+        let t0 = Stopwatch::new();
+        self.inner.iterate(self.corpus);
+        let processed = self.corpus.num_tokens() as u64;
+        EpochReport {
+            processed,
+            secs: t0.secs(),
+            // every token is sampled against the iteration-start snapshot
+            stale_reads: processed,
+            msgs: 0,
+        }
+    }
+
+    fn state_snapshot(&mut self, _corpus: &Corpus) -> LdaState {
+        self.inner.state.clone()
+    }
+}
+
+impl TrainEngine for NomadRuntime {
+    fn run_epoch(&mut self) -> EpochReport {
+        NomadRuntime::run_epoch(self)
+    }
+
+    fn state_snapshot(&mut self, corpus: &Corpus) -> LdaState {
+        self.gather_state(corpus)
+    }
+
+    fn shutdown(&mut self) {
+        NomadRuntime::shutdown(self);
+    }
+}
+
+impl TrainEngine for PsRuntime {
+    fn run_epoch(&mut self) -> EpochReport {
+        PsRuntime::run_epoch(self)
+    }
+
+    fn state_snapshot(&mut self, corpus: &Corpus) -> LdaState {
+        self.gather_state(corpus)
+    }
+
+    fn shutdown(&mut self) {
+        PsRuntime::shutdown(self);
+    }
+}
+
+impl TrainEngine for NomadSim {
+    fn run_epoch(&mut self) -> EpochReport {
+        NomadSim::run_epoch(self)
+    }
+
+    fn state_snapshot(&mut self, corpus: &Corpus) -> LdaState {
+        self.gather_state(corpus)
+    }
+
+    fn clock(&self) -> Clock {
+        Clock::Virtual(self.vtime_secs())
+    }
+}
+
+impl TrainEngine for PsSim {
+    fn run_epoch(&mut self) -> EpochReport {
+        PsSim::run_epoch(self)
+    }
+
+    fn state_snapshot(&mut self, corpus: &Corpus) -> LdaState {
+        self.gather_state(corpus)
+    }
+
+    fn clock(&self) -> Clock {
+        Clock::Virtual(self.vtime_secs())
+    }
+}
+
+/// Simulated cluster shape for the sim runtimes.
+fn sim_cluster(cfg: &TrainConfig) -> ClusterSpec {
+    if cfg.machines > 1 {
+        ClusterSpec { machines: cfg.machines, ..ClusterSpec::cluster(cfg.machines) }
+    } else {
+        ClusterSpec::multicore(cfg.workers)
+    }
+}
+
+/// Build the engine `cfg` asks for, starting from `init` (loaded from a
+/// checkpoint or random-initialized — the engine does not care which).
+/// The topic count and hyperparameters come from `init.hyper`.
+pub fn make_engine<'c>(
+    corpus: &'c Corpus,
+    init: LdaState,
+    cfg: &TrainConfig,
+) -> Result<Box<dyn TrainEngine + 'c>, String> {
+    let hyper = init.hyper;
+    Ok(match cfg.runtime {
+        RuntimeKind::Serial => {
+            Box::new(SerialEngine::from_state(corpus, init, cfg.sampler, cfg.seed))
+        }
+        RuntimeKind::Nomad => {
+            let rt_cfg = NomadConfig { workers: cfg.workers, seed: cfg.seed };
+            Box::new(NomadRuntime::from_state(corpus, &init, rt_cfg))
+        }
+        RuntimeKind::Ps => {
+            let rt_cfg = PsConfig {
+                workers: cfg.workers,
+                seed: cfg.seed,
+                batch_docs: cfg.batch_docs,
+            };
+            Box::new(PsRuntime::from_state(corpus, &init, rt_cfg))
+        }
+        RuntimeKind::AdLda => {
+            let rt_cfg = AdLdaConfig { workers: cfg.workers, seed: cfg.seed };
+            let inner = AdLda::from_state(corpus, init, rt_cfg);
+            Box::new(AdLdaEngine { corpus, inner })
+        }
+        RuntimeKind::NomadSim => {
+            let mut sim_cfg = NomadSimConfig::new(sim_cluster(cfg), hyper.t);
+            sim_cfg.seed = cfg.seed;
+            sim_cfg.cost = CostModel::default_for(hyper.t);
+            Box::new(NomadSim::from_state(corpus, &init, sim_cfg))
+        }
+        RuntimeKind::PsSim => {
+            let mut sim_cfg = PsSimConfig::new(sim_cluster(cfg), hyper.t);
+            sim_cfg.seed = cfg.seed;
+            sim_cfg.batch_docs = cfg.batch_docs;
+            sim_cfg.disk = cfg.disk;
+            sim_cfg.cost = CostModel::default_for(hyper.t);
+            Box::new(PsSim::from_state(corpus, &init, sim_cfg))
+        }
+    })
+}

@@ -1,66 +1,29 @@
 //! The training coordinator: wires corpora, samplers, runtimes and the
 //! PJRT evaluator into runnable experiments, and records the convergence
 //! series every figure is built from.
+//!
+//! Architecture (one PR's worth of API): a typed [`TrainConfig`] selects a
+//! [`RuntimeKind`]; [`engine::make_engine`] builds the matching
+//! [`TrainEngine`]; **one** generic driver loop ([`train_with`]) runs
+//! epochs, evaluates at the configured cadence, and fans events out to
+//! [`TrainObserver`]s (progress logging, CSV output, checkpointing,
+//! hyperparameter estimation — all observers, no special cases).
 
-use std::path::PathBuf;
+pub mod config;
+pub mod engine;
+pub mod observer;
 
-use crate::adlda::{AdLda, AdLdaConfig};
+pub use config::{EvalPolicy, RuntimeKind, SamplerKind, TrainConfig};
+pub use engine::{make_engine, Clock, EpochReport, TrainEngine};
+pub use observer::{
+    Checkpointer, CsvWriter, EvalPoint, HyperOptimizer, LlRecorder, ProgressLogger,
+    TrainObserver,
+};
+
 use crate::corpus::{preset, Corpus};
-use crate::lda::{self, Hyper, LdaState};
-use crate::nomad::{NomadConfig, NomadRuntime};
-use crate::ps::{PsConfig, PsRuntime};
+use crate::lda::{self, checkpoint, Hyper, LdaState};
 use crate::runtime::{artifacts_available, default_artifact_dir, LlEvaluator};
-use crate::simnet::nomad_sim::{NomadSim, NomadSimConfig};
-use crate::simnet::ps_sim::{PsSim, PsSimConfig};
-use crate::simnet::{ClusterSpec, CostModel};
-use crate::util::metrics::{write_csv, Series, Stopwatch};
-use crate::util::rng::Pcg32;
-
-/// Training/experiment options (CLI surface).
-#[derive(Clone, Debug)]
-pub struct TrainOpts {
-    pub preset: String,
-    pub topics: usize,
-    /// serial sampler variant (runtime == "serial")
-    pub sampler: String,
-    /// serial | nomad | nomad-sim | ps | ps-sim | adlda
-    pub runtime: String,
-    pub workers: usize,
-    /// simulated machines (sim runtimes; workers = machines × 20 when > 1)
-    pub machines: usize,
-    pub iters: usize,
-    pub seed: u64,
-    /// auto | xla | rust
-    pub eval: String,
-    pub eval_every: usize,
-    /// PS pull/push cadence (docs)
-    pub batch_docs: usize,
-    /// PS disk flavor (sim only)
-    pub disk: bool,
-    pub out: Option<PathBuf>,
-    pub quiet: bool,
-}
-
-impl Default for TrainOpts {
-    fn default() -> Self {
-        TrainOpts {
-            preset: "tiny".into(),
-            topics: 128,
-            sampler: "flda-word".into(),
-            runtime: "serial".into(),
-            workers: 2,
-            machines: 1,
-            iters: 10,
-            seed: 0,
-            eval: "auto".into(),
-            eval_every: 1,
-            batch_docs: 16,
-            disk: false,
-            out: None,
-            quiet: false,
-        }
-    }
-}
+use crate::util::metrics::Series;
 
 /// Model-quality evaluator: PJRT artifact path or the Rust reference.
 pub enum Evaluator {
@@ -69,19 +32,20 @@ pub enum Evaluator {
 }
 
 impl Evaluator {
-    /// Resolve by policy: `auto` prefers the blocked path when artifacts
-    /// exist *and* cover the topic count, and otherwise falls back to the
-    /// sparse Rust reference — which is exact and faster than the dense
-    /// blocked evaluator, so hermetic default builds (no `artifacts/`)
-    /// deliberately train with `Rust`.  The blocked backend (PJRT with
-    /// `--features pjrt`, pure Rust otherwise) stays reachable via the
-    /// explicit `xla` policy and `fnomad-lda check-artifacts`.
-    pub fn resolve(policy: &str, topics: usize) -> Result<Evaluator, String> {
+    /// Resolve by policy: [`EvalPolicy::Auto`] prefers the blocked path
+    /// when artifacts exist *and* cover the topic count, and otherwise
+    /// falls back to the sparse Rust reference — which is exact and faster
+    /// than the dense blocked evaluator, so hermetic default builds (no
+    /// `artifacts/`) deliberately train with `Rust`.  The blocked backend
+    /// (PJRT with `--features pjrt`, pure Rust otherwise) stays reachable
+    /// via the explicit [`EvalPolicy::Xla`] policy and
+    /// `fnomad-lda check-artifacts`.
+    pub fn resolve(policy: EvalPolicy, topics: usize) -> Result<Evaluator, String> {
         let dir = default_artifact_dir();
         match policy {
-            "rust" => Ok(Evaluator::Rust),
-            "xla" => Ok(Evaluator::Xla(Box::new(LlEvaluator::new(&dir, topics)?))),
-            "auto" => {
+            EvalPolicy::Rust => Ok(Evaluator::Rust),
+            EvalPolicy::Xla => Ok(Evaluator::Xla(Box::new(LlEvaluator::new(&dir, topics)?))),
+            EvalPolicy::Auto => {
                 if artifacts_available(&dir) {
                     match LlEvaluator::new(&dir, topics) {
                         Ok(e) => Ok(Evaluator::Xla(Box::new(e))),
@@ -91,7 +55,6 @@ impl Evaluator {
                     Ok(Evaluator::Rust)
                 }
             }
-            other => Err(format!("unknown eval policy '{other}' (auto|xla|rust)")),
         }
     }
 
@@ -122,317 +85,205 @@ pub struct TrainResult {
     pub final_state: LdaState,
 }
 
-/// Run one experiment per `opts`.
-pub fn train(opts: &TrainOpts) -> Result<TrainResult, String> {
-    let corpus = preset(&opts.preset)?;
-    let hyper = Hyper::paper_default(opts.topics);
-    let mut eval = Evaluator::resolve(&opts.eval, opts.topics)?;
-    let label = run_label(opts);
-    if !opts.quiet {
+/// Run one experiment per `cfg` with no extra observers.
+pub fn train(cfg: &TrainConfig) -> Result<TrainResult, String> {
+    train_with(cfg, &mut [])
+}
+
+/// The single driver loop behind every runtime.
+///
+/// Builds the engine from a checkpoint-or-random initial state, runs
+/// `cfg.iters` epochs, evaluates at epoch 0, every `cfg.eval_every`
+/// epochs, and the final epoch, and fans events out to the stock
+/// observers the config selects plus any in `extra`.
+pub fn train_with(
+    cfg: &TrainConfig,
+    extra: &mut [&mut dyn TrainObserver],
+) -> Result<TrainResult, String> {
+    if (cfg.resume || cfg.save_every > 0) && cfg.checkpoint.is_none() {
+        return Err("--resume/--save-every require --checkpoint PATH".into());
+    }
+    let corpus = preset(&cfg.preset)?;
+    let hyper = Hyper::paper_default(cfg.topics);
+    let resume_from = if cfg.resume { cfg.checkpoint.as_deref() } else { None };
+    let resumed = resume_from.is_some_and(|p| p.exists());
+    let init = checkpoint::init_or_load(resume_from, &corpus, hyper, cfg.seed)?;
+    if resumed && init.hyper.t != cfg.topics && !cfg.quiet {
         eprintln!(
-            "[train] {} docs={} vocab={} tokens={} T={} eval={}",
+            "[train] warning: checkpoint has T={}, overriding --topics {}",
+            init.hyper.t, cfg.topics
+        );
+    }
+    let mut eval = Evaluator::resolve(cfg.eval, init.hyper.t)?;
+    let label = cfg.label();
+    if !cfg.quiet {
+        eprintln!(
+            "[train] {} docs={} vocab={} tokens={} T={} eval={}{}",
             label,
             corpus.num_docs(),
             corpus.vocab,
             corpus.num_tokens(),
-            opts.topics,
-            eval.name()
+            init.hyper.t,
+            eval.name(),
+            if resumed { " (resumed from checkpoint)" } else { "" }
         );
     }
-    match opts.runtime.as_str() {
-        "serial" => train_serial(opts, &corpus, hyper, &mut eval, &label),
-        "nomad" => train_nomad(opts, &corpus, hyper, &mut eval, &label),
-        "ps" => train_ps(opts, &corpus, hyper, &mut eval, &label),
-        "adlda" => train_adlda(opts, &corpus, hyper, &mut eval, &label),
-        "nomad-sim" => train_nomad_sim(opts, &corpus, hyper, &mut eval, &label),
-        "ps-sim" => train_ps_sim(opts, &corpus, hyper, &mut eval, &label),
-        other => Err(format!(
-            "unknown runtime '{other}' (serial|nomad|ps|adlda|nomad-sim|ps-sim)"
-        )),
+
+    let mut engine = make_engine(&corpus, init, cfg)?;
+    let mut recorder = LlRecorder::new(&label);
+    let mut stock: Vec<Box<dyn TrainObserver>> = Vec::new();
+    if !cfg.quiet {
+        stock.push(Box::new(ProgressLogger::new(&label)));
     }
-}
-
-pub fn run_label(opts: &TrainOpts) -> String {
-    match opts.runtime.as_str() {
-        "serial" => format!("{}-{}", opts.sampler, opts.preset),
-        "nomad-sim" | "ps-sim" if opts.machines > 1 => format!(
-            "{}-{}x20-{}{}",
-            opts.runtime,
-            opts.machines,
-            opts.preset,
-            if opts.disk { "-disk" } else { "" }
-        ),
-        rt => format!(
-            "{rt}-p{}-{}{}",
-            opts.workers,
-            opts.preset,
-            if opts.disk { "-disk" } else { "" }
-        ),
+    if let Some(path) = &cfg.out {
+        stock.push(Box::new(CsvWriter::new(path, cfg.quiet)));
     }
-}
-
-fn sim_cluster(opts: &TrainOpts) -> ClusterSpec {
-    if opts.machines > 1 {
-        ClusterSpec { machines: opts.machines, ..ClusterSpec::cluster(opts.machines) }
-    } else {
-        ClusterSpec::multicore(opts.workers)
+    // hyper-opt before the checkpointer: on_finish runs in push order, so
+    // the final checkpoint carries the optimized hyperparameters
+    if cfg.hyper_opt_steps > 0 {
+        stock.push(Box::new(HyperOptimizer::new(cfg.hyper_opt_steps, cfg.quiet)));
     }
-}
-
-macro_rules! eval_point {
-    ($eval:expr, $state:expr, $iters:expr, $x_time:expr, $res:expr, $opts:expr, $label:expr) => {{
-        let ll = $eval.log_likelihood(&$state)?;
-        $res.ll_vs_iter.push($iters as f64, ll);
-        $res.ll_vs_time.push($x_time, ll);
-        if !$opts.quiet {
-            eprintln!("[{}] iter {:4}  t={:9.3}s  LL={ll:.4e}", $label, $iters, $x_time);
-        }
-    }};
-}
-
-fn new_result(label: &str) -> TrainResult {
-    TrainResult {
-        ll_vs_iter: Series::new(format!("{label}:ll_vs_iter")),
-        ll_vs_time: Series::new(format!("{label}:ll_vs_time")),
-        tokens_per_sec: 0.0,
-        final_state: LdaState {
-            hyper: Hyper::paper_default(2),
-            vocab: 0,
-            z: vec![],
-            ntd: vec![],
-            nwt: vec![],
-            nt: vec![],
-        },
+    if let Some(path) = &cfg.checkpoint {
+        stock.push(Box::new(Checkpointer::new(path, cfg.save_every, cfg.quiet)));
     }
-}
 
-fn train_serial(
-    opts: &TrainOpts,
-    corpus: &Corpus,
-    hyper: Hyper,
-    eval: &mut Evaluator,
-    label: &str,
-) -> Result<TrainResult, String> {
-    let mut rng = Pcg32::seeded(opts.seed);
-    let mut state = LdaState::init_random(corpus, hyper, &mut rng);
-    let mut sampler = lda::by_name(&opts.sampler, &state, corpus)?;
-    let mut res = new_result(label);
-    let mut sample_secs = 0.0;
-    eval_point!(eval, state, 0, 0.0, res, opts, label);
-    for it in 1..=opts.iters {
-        let t0 = Stopwatch::new();
-        sampler.sweep(&mut state, corpus, &mut rng);
-        sample_secs += t0.secs();
-        if it % opts.eval_every == 0 || it == opts.iters {
-            eval_point!(eval, state, it, sample_secs, res, opts, label);
-        }
-    }
-    res.tokens_per_sec = (opts.iters * corpus.num_tokens()) as f64 / sample_secs;
-    res.final_state = state;
-    finish(opts, res)
-}
-
-fn train_nomad(
-    opts: &TrainOpts,
-    corpus: &Corpus,
-    hyper: Hyper,
-    eval: &mut Evaluator,
-    label: &str,
-) -> Result<TrainResult, String> {
-    let mut rt = NomadRuntime::new(corpus, hyper, NomadConfig {
-        workers: opts.workers,
-        seed: opts.seed,
-    });
-    let mut res = new_result(label);
-    let mut sample_secs = 0.0;
+    let eval_every = cfg.eval_every.max(1);
+    let mut wall_secs = 0.0f64;
     let mut processed = 0u64;
-    let state0 = rt.gather_state(corpus);
-    eval_point!(eval, state0, 0, 0.0, res, opts, label);
-    for it in 1..=opts.iters {
-        let stats = rt.run_epoch();
-        sample_secs += stats.wall_secs;
-        processed += stats.processed;
-        if it % opts.eval_every == 0 || it == opts.iters {
-            let state = rt.gather_state(corpus);
-            eval_point!(eval, state, it, sample_secs, res, opts, label);
+    let mut last_state = eval_point(
+        &mut *engine,
+        &mut eval,
+        &corpus,
+        0,
+        0.0,
+        &mut recorder,
+        &mut stock,
+        extra,
+    )?;
+    for it in 1..=cfg.iters {
+        let report = engine.run_epoch();
+        wall_secs += report.secs;
+        processed += report.processed;
+        for o in stock.iter_mut() {
+            o.on_epoch(it, &report)?;
+        }
+        for o in extra.iter_mut() {
+            o.on_epoch(it, &report)?;
+        }
+        if it % eval_every == 0 || it == cfg.iters {
+            last_state = eval_point(
+                &mut *engine,
+                &mut eval,
+                &corpus,
+                it,
+                wall_secs,
+                &mut recorder,
+                &mut stock,
+                extra,
+            )?;
         }
     }
-    res.tokens_per_sec = processed as f64 / sample_secs;
-    res.final_state = rt.gather_state(corpus);
-    rt.shutdown();
-    finish(opts, res)
+    let elapsed = match engine.clock() {
+        Clock::Wall => wall_secs,
+        Clock::Virtual(v) => v,
+    };
+    engine.shutdown();
+
+    let (ll_vs_iter, ll_vs_time) = recorder.into_series();
+    let mut result = TrainResult {
+        ll_vs_iter,
+        ll_vs_time,
+        tokens_per_sec: if elapsed > 0.0 { processed as f64 / elapsed } else { 0.0 },
+        final_state: last_state,
+    };
+    for o in stock.iter_mut() {
+        o.on_finish(&mut result)?;
+    }
+    for o in extra.iter_mut() {
+        o.on_finish(&mut result)?;
+    }
+    Ok(result)
 }
 
-fn train_ps(
-    opts: &TrainOpts,
-    corpus: &Corpus,
-    hyper: Hyper,
+/// One evaluation: snapshot the exact state, score it, notify observers.
+#[allow(clippy::too_many_arguments)]
+fn eval_point(
+    engine: &mut dyn TrainEngine,
     eval: &mut Evaluator,
-    label: &str,
-) -> Result<TrainResult, String> {
-    let mut rt = PsRuntime::new(corpus, hyper, PsConfig {
-        workers: opts.workers,
-        seed: opts.seed,
-        batch_docs: opts.batch_docs,
-    });
-    let mut res = new_result(label);
-    let mut sample_secs = 0.0;
-    let mut processed = 0u64;
-    let state0 = rt.gather_state(corpus);
-    eval_point!(eval, state0, 0, 0.0, res, opts, label);
-    for it in 1..=opts.iters {
-        let stats = rt.run_epoch();
-        sample_secs += stats.wall_secs;
-        processed += stats.processed;
-        if it % opts.eval_every == 0 || it == opts.iters {
-            let state = rt.gather_state(corpus);
-            eval_point!(eval, state, it, sample_secs, res, opts, label);
-        }
-    }
-    res.tokens_per_sec = processed as f64 / sample_secs;
-    res.final_state = rt.gather_state(corpus);
-    rt.shutdown();
-    finish(opts, res)
-}
-
-fn train_adlda(
-    opts: &TrainOpts,
     corpus: &Corpus,
-    hyper: Hyper,
-    eval: &mut Evaluator,
-    label: &str,
-) -> Result<TrainResult, String> {
-    let mut trainer = AdLda::new(corpus, hyper, AdLdaConfig {
-        workers: opts.workers,
-        seed: opts.seed,
-    });
-    let mut res = new_result(label);
-    let mut sample_secs = 0.0;
-    eval_point!(eval, trainer.state, 0, 0.0, res, opts, label);
-    for it in 1..=opts.iters {
-        let t0 = Stopwatch::new();
-        trainer.iterate(corpus);
-        sample_secs += t0.secs();
-        if it % opts.eval_every == 0 || it == opts.iters {
-            eval_point!(eval, trainer.state, it, sample_secs, res, opts, label);
-        }
+    epoch: usize,
+    wall_secs: f64,
+    recorder: &mut LlRecorder,
+    stock: &mut [Box<dyn TrainObserver>],
+    extra: &mut [&mut dyn TrainObserver],
+) -> Result<LdaState, String> {
+    let state = engine.state_snapshot(corpus);
+    let ll = eval.log_likelihood(&state)?;
+    let secs = match engine.clock() {
+        Clock::Wall => wall_secs,
+        Clock::Virtual(v) => v,
+    };
+    let point = EvalPoint { epoch, secs, ll, state: &state };
+    recorder.on_eval(&point)?;
+    for o in stock.iter_mut() {
+        o.on_eval(&point)?;
     }
-    res.tokens_per_sec = (opts.iters * corpus.num_tokens()) as f64 / sample_secs;
-    res.final_state = trainer.state;
-    finish(opts, res)
-}
-
-fn train_nomad_sim(
-    opts: &TrainOpts,
-    corpus: &Corpus,
-    hyper: Hyper,
-    eval: &mut Evaluator,
-    label: &str,
-) -> Result<TrainResult, String> {
-    let cluster = sim_cluster(opts);
-    let mut cfg = NomadSimConfig::new(cluster, opts.topics);
-    cfg.seed = opts.seed;
-    cfg.cost = CostModel::default_for(opts.topics);
-    let mut sim = NomadSim::new(corpus, hyper, cfg);
-    let mut res = new_result(label);
-    let mut processed = 0u64;
-    let state0 = sim.gather_state(corpus);
-    eval_point!(eval, state0, 0, 0.0, res, opts, label);
-    for it in 1..=opts.iters {
-        let stats = sim.run_epoch();
-        processed += stats.processed;
-        if it % opts.eval_every == 0 || it == opts.iters {
-            let state = sim.gather_state(corpus);
-            eval_point!(eval, state, it, sim.vtime_secs(), res, opts, label);
-        }
+    for o in extra.iter_mut() {
+        o.on_eval(&point)?;
     }
-    res.tokens_per_sec = processed as f64 / sim.vtime_secs();
-    res.final_state = sim.gather_state(corpus);
-    finish(opts, res)
-}
-
-fn train_ps_sim(
-    opts: &TrainOpts,
-    corpus: &Corpus,
-    hyper: Hyper,
-    eval: &mut Evaluator,
-    label: &str,
-) -> Result<TrainResult, String> {
-    let cluster = sim_cluster(opts);
-    let mut cfg = PsSimConfig::new(cluster, opts.topics);
-    cfg.seed = opts.seed;
-    cfg.batch_docs = opts.batch_docs;
-    cfg.disk = opts.disk;
-    cfg.cost = CostModel::default_for(opts.topics);
-    let mut sim = PsSim::new(corpus, hyper, cfg);
-    let mut res = new_result(label);
-    let mut processed = 0u64;
-    let state0 = sim.gather_state(corpus);
-    eval_point!(eval, state0, 0, 0.0, res, opts, label);
-    for it in 1..=opts.iters {
-        let stats = sim.run_epoch();
-        processed += stats.processed;
-        if it % opts.eval_every == 0 || it == opts.iters {
-            let state = sim.gather_state(corpus);
-            eval_point!(eval, state, it, sim.vtime_secs(), res, opts, label);
-        }
-    }
-    res.tokens_per_sec = processed as f64 / sim.vtime_secs();
-    res.final_state = sim.gather_state(corpus);
-    finish(opts, res)
-}
-
-fn finish(opts: &TrainOpts, res: TrainResult) -> Result<TrainResult, String> {
-    if let Some(path) = &opts.out {
-        write_csv(path, &[res.ll_vs_iter.clone(), res.ll_vs_time.clone()])
-            .map_err(|e| e.to_string())?;
-        if !opts.quiet {
-            eprintln!("[train] wrote {}", path.display());
-        }
-    }
-    Ok(res)
+    Ok(state)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn quiet(runtime: &str) -> TrainOpts {
-        TrainOpts {
-            runtime: runtime.into(),
-            iters: 2,
-            eval: "rust".into(),
-            quiet: true,
-            topics: 8,
-            ..Default::default()
-        }
+    fn quiet(runtime: RuntimeKind) -> TrainConfig {
+        TrainConfig::preset("tiny")
+            .runtime(runtime)
+            .iters(2)
+            .eval(EvalPolicy::Rust)
+            .quiet(true)
+            .topics(8)
     }
 
     #[test]
     fn every_runtime_trains_tiny() {
-        for rt in ["serial", "nomad", "ps", "adlda", "nomad-sim", "ps-sim"] {
+        for rt in RuntimeKind::ALL {
             let res = train(&quiet(rt)).unwrap_or_else(|e| panic!("{rt}: {e}"));
             assert_eq!(res.ll_vs_iter.points.len(), 3, "{rt}"); // iter 0,1,2
             assert!(res.tokens_per_sec > 0.0, "{rt}");
             let lls: Vec<f64> = res.ll_vs_iter.points.iter().map(|&(_, y)| y).collect();
             assert!(lls.last().unwrap() > lls.first().unwrap(), "{rt}: no improvement");
+            res.final_state
+                .check_consistency(&preset("tiny").unwrap())
+                .unwrap_or_else(|e| panic!("{rt}: {e}"));
         }
     }
 
     #[test]
-    fn unknown_runtime_and_eval_error() {
-        assert!(train(&TrainOpts { runtime: "bogus".into(), ..quiet("serial") }).is_err());
-        assert!(train(&TrainOpts { eval: "bogus".into(), ..quiet("serial") }).is_err());
+    fn unknown_names_error_at_the_parse_layer() {
+        assert!("bogus".parse::<RuntimeKind>().is_err());
+        assert!("bogus".parse::<SamplerKind>().is_err());
+        assert!("bogus".parse::<EvalPolicy>().is_err());
+        assert!(train(&TrainConfig::preset("no-such-preset").quiet(true)).is_err());
     }
 
     #[test]
     fn csv_output_written() {
         let path = std::env::temp_dir().join("fnomad_train_test").join("out.csv");
-        let mut opts = quiet("serial");
-        opts.out = Some(path.clone());
-        train(&opts).unwrap();
+        let cfg = quiet(RuntimeKind::Serial).out(path.clone());
+        train(&cfg).unwrap();
         let body = std::fs::read_to_string(&path).unwrap();
         assert!(body.contains("ll_vs_iter"));
         let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn virtual_time_axis_for_sim_runtimes() {
+        let res = train(&quiet(RuntimeKind::NomadSim)).unwrap();
+        // virtual seconds are strictly increasing across evaluations
+        let xs: Vec<f64> = res.ll_vs_time.points.iter().map(|&(x, _)| x).collect();
+        assert!(xs.windows(2).all(|w| w[0] < w[1]), "vtime not monotone: {xs:?}");
     }
 }

@@ -1,0 +1,204 @@
+//! Training observers: the hook surface of the single driver loop.
+//!
+//! Everything that used to be an ad-hoc branch in six copy-pasted
+//! `train_*` functions — progress logging, CSV output, series recording,
+//! checkpointing, hyperparameter estimation — is an implementation of
+//! [`TrainObserver`].  The driver installs the stock observers that the
+//! [`super::TrainConfig`] asks for and threads any caller-supplied ones
+//! through [`super::train_with`].
+
+use std::path::PathBuf;
+
+use crate::lda::{self, LdaState};
+use crate::util::metrics::{write_csv, Series};
+
+use super::engine::EpochReport;
+use super::TrainResult;
+
+/// One evaluation of model quality at an epoch boundary.
+#[derive(Debug)]
+pub struct EvalPoint<'a> {
+    /// epoch index (0 = before any training)
+    pub epoch: usize,
+    /// x coordinate on the time axis: wall or virtual seconds, per the
+    /// engine's [`super::Clock`]
+    pub secs: f64,
+    /// joint log-likelihood under the configured evaluator
+    pub ll: f64,
+    /// the exact global state the likelihood was computed from
+    pub state: &'a LdaState,
+}
+
+/// Hooks called by the driver loop; all default to no-ops.
+///
+/// Errors propagate out of [`super::train_with`] and abort the run.
+pub trait TrainObserver {
+    /// After every epoch, with that epoch's [`EpochReport`].
+    fn on_epoch(&mut self, _epoch: usize, _report: &EpochReport) -> Result<(), String> {
+        Ok(())
+    }
+
+    /// At every evaluation point (epoch 0, every `eval_every` epochs, and
+    /// the final epoch).
+    fn on_eval(&mut self, _point: &EvalPoint<'_>) -> Result<(), String> {
+        Ok(())
+    }
+
+    /// Once, after the last epoch, with the assembled result (mutable so
+    /// finishers like the hyperparameter optimizer can refine it).
+    fn on_finish(&mut self, _result: &mut TrainResult) -> Result<(), String> {
+        Ok(())
+    }
+}
+
+/// Records the two convergence series every figure is built from.  The
+/// driver always installs one; it is public so custom harnesses can reuse
+/// it.
+#[derive(Debug, Default)]
+pub struct LlRecorder {
+    pub ll_vs_iter: Series,
+    pub ll_vs_time: Series,
+}
+
+impl LlRecorder {
+    pub fn new(label: &str) -> Self {
+        LlRecorder {
+            ll_vs_iter: Series::new(format!("{label}:ll_vs_iter")),
+            ll_vs_time: Series::new(format!("{label}:ll_vs_time")),
+        }
+    }
+
+    /// Take the recorded series out (driver, at finish).
+    pub fn into_series(self) -> (Series, Series) {
+        (self.ll_vs_iter, self.ll_vs_time)
+    }
+}
+
+impl TrainObserver for LlRecorder {
+    fn on_eval(&mut self, point: &EvalPoint<'_>) -> Result<(), String> {
+        self.ll_vs_iter.push(point.epoch as f64, point.ll);
+        self.ll_vs_time.push(point.secs, point.ll);
+        Ok(())
+    }
+}
+
+/// Prints one progress line per evaluation point (the old `eval_point!`
+/// logging); installed unless the config is quiet.
+pub struct ProgressLogger {
+    label: String,
+}
+
+impl ProgressLogger {
+    pub fn new(label: &str) -> Self {
+        ProgressLogger { label: label.into() }
+    }
+}
+
+impl TrainObserver for ProgressLogger {
+    fn on_eval(&mut self, point: &EvalPoint<'_>) -> Result<(), String> {
+        eprintln!(
+            "[{}] iter {:4}  t={:9.3}s  LL={:.4e}",
+            self.label, point.epoch, point.secs, point.ll
+        );
+        Ok(())
+    }
+}
+
+/// Writes the recorded series as long-format CSV at finish; installed when
+/// the config has an output path.
+pub struct CsvWriter {
+    path: PathBuf,
+    quiet: bool,
+}
+
+impl CsvWriter {
+    pub fn new(path: impl Into<PathBuf>, quiet: bool) -> Self {
+        CsvWriter { path: path.into(), quiet }
+    }
+}
+
+impl TrainObserver for CsvWriter {
+    fn on_finish(&mut self, result: &mut TrainResult) -> Result<(), String> {
+        write_csv(&self.path, &[result.ll_vs_iter.clone(), result.ll_vs_time.clone()])
+            .map_err(|e| e.to_string())?;
+        if !self.quiet {
+            eprintln!("[train] wrote {}", self.path.display());
+        }
+        Ok(())
+    }
+}
+
+/// Saves [`crate::lda::checkpoint`] files: every `save_every` epochs (at
+/// evaluation points, where the exact state is materialized) and always at
+/// finish.  `save_every == 0` means finish-only.
+pub struct Checkpointer {
+    path: PathBuf,
+    save_every: usize,
+    /// epoch of the most recent save (None = nothing written yet)
+    last_saved: Option<usize>,
+    /// last evaluation epoch seen — the final state's epoch at finish
+    last_eval: usize,
+    quiet: bool,
+}
+
+impl Checkpointer {
+    pub fn new(path: impl Into<PathBuf>, save_every: usize, quiet: bool) -> Self {
+        Checkpointer { path: path.into(), save_every, last_saved: None, last_eval: 0, quiet }
+    }
+
+    fn save(&self, state: &LdaState, what: &str) -> Result<(), String> {
+        lda::checkpoint::save(state, &self.path)?;
+        if !self.quiet {
+            eprintln!("[ckpt] saved {} ({what})", self.path.display());
+        }
+        Ok(())
+    }
+}
+
+impl TrainObserver for Checkpointer {
+    fn on_eval(&mut self, point: &EvalPoint<'_>) -> Result<(), String> {
+        self.last_eval = point.epoch;
+        let due = self.save_every > 0
+            && point.epoch >= self.last_saved.unwrap_or(0) + self.save_every;
+        if due {
+            self.save(point.state, &format!("epoch {}", point.epoch))?;
+            self.last_saved = Some(point.epoch);
+        }
+        Ok(())
+    }
+
+    fn on_finish(&mut self, result: &mut TrainResult) -> Result<(), String> {
+        // the final eval may have just written this exact state
+        if self.last_saved == Some(self.last_eval) {
+            return Ok(());
+        }
+        self.save(&result.final_state, "final")
+    }
+}
+
+/// Runs Minka's fixed-point hyperparameter estimation
+/// ([`crate::lda::hyper_opt`]) on the final state, so the returned
+/// `final_state.hyper` carries the (α, β) maximum-likelihood estimates.
+pub struct HyperOptimizer {
+    steps: usize,
+    quiet: bool,
+    /// the (α, β) estimate after finish (None until then)
+    pub estimate: Option<(f64, f64)>,
+}
+
+impl HyperOptimizer {
+    pub fn new(steps: usize, quiet: bool) -> Self {
+        HyperOptimizer { steps, quiet, estimate: None }
+    }
+}
+
+impl TrainObserver for HyperOptimizer {
+    fn on_finish(&mut self, result: &mut TrainResult) -> Result<(), String> {
+        let (alpha, beta) = lda::hyper_opt::optimize(&mut result.final_state, self.steps);
+        self.estimate = Some((alpha, beta));
+        if !self.quiet {
+            eprintln!("[hyper-opt] {} steps: alpha={alpha:.4} beta={beta:.4}", self.steps);
+        }
+        Ok(())
+    }
+}

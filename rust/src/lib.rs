@@ -24,6 +24,35 @@
 //!   runs at training time); by default, a pure-Rust port of the same
 //!   blocked computation, so the crate builds and tests hermetically.
 //!
+//! ## Running an experiment
+//!
+//! Every runtime sits behind one typed API ([`coordinator`]): a
+//! [`coordinator::TrainConfig`] built with the fluent builder selects the
+//! corpus, sampler, and [`coordinator::RuntimeKind`]; the single driver
+//! loop builds the matching [`coordinator::TrainEngine`] and streams
+//! progress to [`coordinator::TrainObserver`]s:
+//!
+//! ```no_run
+//! use fnomad_lda::coordinator::{train, EvalPolicy, RuntimeKind, TrainConfig};
+//!
+//! # fn main() -> Result<(), String> {
+//! let cfg = TrainConfig::preset("tiny")
+//!     .runtime(RuntimeKind::NomadSim)   // simulated 20-core nomad
+//!     .topics(64)
+//!     .iters(20)
+//!     .eval(EvalPolicy::Rust)
+//!     .checkpoint("results/tiny.ckpt")  // resumable via .resume(true)
+//!     .out("results/tiny.csv");
+//! let result = train(&cfg)?;
+//! println!("final LL = {:?}", result.ll_vs_iter.last_y());
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Custom instrumentation plugs in through
+//! [`coordinator::train_with`] and the observer trait; new runtimes plug
+//! in by implementing [`coordinator::TrainEngine`].
+//!
 //! See `examples/quickstart.rs` for the five-minute tour and DESIGN.md for
 //! the full system inventory.
 

@@ -1,65 +1,156 @@
 //! `fnomad-lda` — the F+Nomad LDA launcher.
 //!
-//! Subcommands:
-//!   train           train a topic model (any runtime/sampler; see --help)
+//! Subcommands (each supports `--help` for its full flag list):
+//!   train           train a topic model (any runtime/sampler)
 //!   data-stats      print Table-3-style statistics for presets / UCI files
 //!   calibrate       measure the per-token cost model for the simulator
 //!   topics          train briefly and print the top words per topic
 //!   check-artifacts cross-check the PJRT evaluator vs the Rust reference
-//!   help            this text
+//!   help            the top-level index
+//!
+//! Flag strings are parsed into the typed [`TrainConfig`] here and nowhere
+//! else; the coordinator never sees a string it has to re-interpret.
 
 use std::path::PathBuf;
 
-use fnomad_lda::coordinator::{train, TrainOpts};
+use fnomad_lda::coordinator::{train, TrainConfig};
 use fnomad_lda::corpus::presets::{preset, PAPER_TABLE3, PRESET_NAMES};
 use fnomad_lda::corpus::CorpusStats;
 use fnomad_lda::lda::state::{Hyper, LdaState};
 use fnomad_lda::lda::{self, topics as topics_mod};
 use fnomad_lda::runtime::{artifacts_available, default_artifact_dir, LlEvaluator};
 use fnomad_lda::simnet::CostModel;
-use fnomad_lda::util::bench::Table;
-use fnomad_lda::util::cli::Args;
+use fnomad_lda::util::cli::{Args, CommandSpec, FlagSpec};
 use fnomad_lda::util::rng::Pcg32;
 
-const HELP: &str = "\
-fnomad-lda — F+Nomad LDA (WWW'15 reproduction)
+const BINARY: &str = "fnomad-lda";
 
-USAGE: fnomad-lda <subcommand> [--flags]
+const TRAIN_SPEC: CommandSpec = CommandSpec {
+    name: "train",
+    about: "train a topic model (any runtime/sampler)",
+    flags: &[
+        FlagSpec {
+            flag: "preset",
+            value: "NAME",
+            help: "corpus: tiny|enron-sim|nytimes-sim|pubmed-sim|amazon-sim|umbc-sim",
+        },
+        FlagSpec {
+            flag: "topics",
+            value: "N",
+            help: "topic count T (default 128; artifacts exist for 128 and 1024)",
+        },
+        FlagSpec {
+            flag: "runtime",
+            value: "KIND",
+            help: "serial|nomad|ps|adlda|nomad-sim|ps-sim",
+        },
+        FlagSpec {
+            flag: "sampler",
+            value: "KIND",
+            help: "plain|sparse|alias|flda-doc|flda-word (serial runtime)",
+        },
+        FlagSpec { flag: "workers", value: "P", help: "worker threads / simulated cores" },
+        FlagSpec {
+            flag: "machines",
+            value: "M",
+            help: "simulated machines (sim runtimes; M machines x 20 cores)",
+        },
+        FlagSpec { flag: "iters", value: "N", help: "training epochs" },
+        FlagSpec { flag: "seed", value: "S", help: "RNG seed" },
+        FlagSpec { flag: "eval", value: "POLICY", help: "auto|xla|rust evaluator backend" },
+        FlagSpec { flag: "eval-every", value: "K", help: "evaluate every K epochs" },
+        FlagSpec { flag: "batch-docs", value: "B", help: "PS pull/push cadence in documents" },
+        FlagSpec { flag: "disk", value: "", help: "PS disk flavor (sim only)" },
+        FlagSpec { flag: "out", value: "PATH", help: "write the convergence series as CSV" },
+        FlagSpec { flag: "checkpoint", value: "PATH", help: "checkpoint file (written at finish)" },
+        FlagSpec {
+            flag: "save-every",
+            value: "N",
+            help: "also checkpoint every N epochs (at evaluation points)",
+        },
+        FlagSpec { flag: "resume", value: "", help: "start from --checkpoint if it exists" },
+        FlagSpec {
+            flag: "hyper-opt",
+            value: "N",
+            help: "N Minka fixed-point steps on the final state (0 = off)",
+        },
+        FlagSpec { flag: "quiet", value: "", help: "suppress progress logging" },
+    ],
+};
 
-  train            --preset tiny|enron-sim|nytimes-sim|pubmed-sim|amazon-sim|umbc-sim
-                   --topics N            (default 128; artifacts exist for 128 and 1024)
-                   --sampler plain|sparse|alias|flda-doc|flda-word   (serial runtime)
-                   --runtime serial|nomad|ps|adlda|nomad-sim|ps-sim
-                   --workers P --machines M (sim cluster: M machines x 20 cores)
-                   --iters N --seed S --eval auto|xla|rust --eval-every K
-                   --batch-docs B --disk (ps flavors) --out results.csv --quiet
-  data-stats       [--preset NAME|all] print Table 3 for our datasets
-  calibrate        [--preset NAME] [--topics N] measure ns/token -> cost model
-  topics           [--preset NAME] [--topics N] [--iters N] [--top K]
-  check-artifacts  [--topics N] blocked evaluator (PJRT with --features pjrt,
-                   pure Rust otherwise) vs Rust reference on random state
-";
+const DATA_STATS_SPEC: CommandSpec = CommandSpec {
+    name: "data-stats",
+    about: "print Table 3 for our datasets",
+    flags: &[FlagSpec { flag: "preset", value: "NAME|all", help: "which preset (default all)" }],
+};
+
+const CALIBRATE_SPEC: CommandSpec = CommandSpec {
+    name: "calibrate",
+    about: "measure ns/token -> simulator cost model",
+    flags: &[
+        FlagSpec { flag: "preset", value: "NAME", help: "corpus preset (default tiny)" },
+        FlagSpec { flag: "topics", value: "N", help: "topic count (default 128)" },
+        FlagSpec { flag: "sweeps", value: "N", help: "measurement sweeps (default 2)" },
+    ],
+};
+
+const TOPICS_SPEC: CommandSpec = CommandSpec {
+    name: "topics",
+    about: "train briefly and print the top words per topic",
+    flags: &[
+        FlagSpec { flag: "preset", value: "NAME", help: "corpus preset (default tiny)" },
+        FlagSpec { flag: "topics", value: "N", help: "topic count (default 16)" },
+        FlagSpec { flag: "iters", value: "N", help: "training epochs (default 20)" },
+        FlagSpec { flag: "top", value: "K", help: "words per topic (default 8)" },
+    ],
+};
+
+const CHECK_ARTIFACTS_SPEC: CommandSpec = CommandSpec {
+    name: "check-artifacts",
+    about: "blocked evaluator (PJRT with --features pjrt, pure Rust otherwise) vs Rust reference",
+    flags: &[FlagSpec { flag: "topics", value: "N", help: "topic count (default 128)" }],
+};
+
+const SPECS: &[&CommandSpec] = &[
+    &TRAIN_SPEC,
+    &DATA_STATS_SPEC,
+    &CALIBRATE_SPEC,
+    &TOPICS_SPEC,
+    &CHECK_ARTIFACTS_SPEC,
+];
+
+fn top_level_help() -> String {
+    let mut out = format!(
+        "{BINARY} — F+Nomad LDA (WWW'15 reproduction)\n\nUSAGE: {BINARY} <subcommand> [--flags]\n\n"
+    );
+    for spec in SPECS {
+        out.push_str(&spec.summary_line());
+        out.push('\n');
+    }
+    out.push_str(&format!("\nRun `{BINARY} <subcommand> --help` for the full flag list.\n"));
+    out
+}
 
 fn main() {
     let args = match Args::from_env() {
         Ok(a) => a,
         Err(e) => {
-            eprintln!("error: {e}\n{HELP}");
+            eprintln!("error: {e}\n{}", top_level_help());
             std::process::exit(2);
         }
     };
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
     let code = match sub.as_str() {
-        "train" => cmd_train(&args),
-        "data-stats" => cmd_data_stats(&args),
-        "calibrate" => cmd_calibrate(&args),
-        "topics" => cmd_topics(&args),
-        "check-artifacts" => cmd_check_artifacts(&args),
+        "train" => with_help(&args, &TRAIN_SPEC, cmd_train),
+        "data-stats" => with_help(&args, &DATA_STATS_SPEC, cmd_data_stats),
+        "calibrate" => with_help(&args, &CALIBRATE_SPEC, cmd_calibrate),
+        "topics" => with_help(&args, &TOPICS_SPEC, cmd_topics),
+        "check-artifacts" => with_help(&args, &CHECK_ARTIFACTS_SPEC, cmd_check_artifacts),
         "help" | "--help" | "-h" => {
-            println!("{HELP}");
+            println!("{}", top_level_help());
             Ok(())
         }
-        other => Err(format!("unknown subcommand '{other}'\n{HELP}")),
+        other => Err(format!("unknown subcommand '{other}'\n{}", top_level_help())),
     }
     .map(|_| 0)
     .unwrap_or_else(|e| {
@@ -69,36 +160,56 @@ fn main() {
     std::process::exit(code);
 }
 
-fn train_opts(args: &Args) -> Result<TrainOpts, String> {
-    let d = TrainOpts::default();
-    let opts = TrainOpts {
+/// Render the subcommand's `--help` if asked, otherwise run it.
+fn with_help(
+    args: &Args,
+    spec: &CommandSpec,
+    cmd: fn(&Args) -> Result<(), String>,
+) -> Result<(), String> {
+    if args.help_requested() {
+        println!("{}", spec.render(BINARY));
+        Ok(())
+    } else {
+        cmd(args)
+    }
+}
+
+/// The thin CLI → [`TrainConfig`] parse layer: every enum-valued flag goes
+/// through `FromStr` exactly once, right here.
+fn train_config(args: &Args) -> Result<TrainConfig, String> {
+    let d = TrainConfig::default();
+    let cfg = TrainConfig {
         preset: args.str_or("preset", &d.preset),
         topics: args.parse_or("topics", d.topics)?,
-        sampler: args.str_or("sampler", &d.sampler),
-        runtime: args.str_or("runtime", &d.runtime),
+        sampler: args.str_or("sampler", &d.sampler.to_string()).parse()?,
+        runtime: args.str_or("runtime", &d.runtime.to_string()).parse()?,
         workers: args.parse_or("workers", d.workers)?,
         machines: args.parse_or("machines", d.machines)?,
         iters: args.parse_or("iters", d.iters)?,
         seed: args.parse_or("seed", d.seed)?,
-        eval: args.str_or("eval", &d.eval),
+        eval: args.str_or("eval", &d.eval.to_string()).parse()?,
         eval_every: args.parse_or("eval-every", d.eval_every)?,
         batch_docs: args.parse_or("batch-docs", d.batch_docs)?,
         disk: args.flag("disk"),
         out: args.str_opt("out").map(PathBuf::from),
         quiet: args.flag("quiet"),
+        checkpoint: args.str_opt("checkpoint").map(PathBuf::from),
+        save_every: args.parse_or("save-every", d.save_every)?,
+        resume: args.flag("resume"),
+        hyper_opt_steps: args.parse_or("hyper-opt", d.hyper_opt_steps)?,
     };
     args.reject_unknown()?;
-    Ok(opts)
+    Ok(cfg)
 }
 
 fn cmd_train(args: &Args) -> Result<(), String> {
-    let opts = train_opts(args)?;
-    let res = train(&opts)?;
+    let cfg = train_config(args)?;
+    let res = train(&cfg)?;
     println!(
         "final LL = {:.6e}   throughput = {:.0} tokens/s ({} runtime)",
         res.ll_vs_iter.last_y().unwrap_or(f64::NAN),
         res.tokens_per_sec,
-        opts.runtime,
+        cfg.runtime,
     );
     Ok(())
 }
@@ -111,14 +222,20 @@ fn cmd_data_stats(args: &Args) -> Result<(), String> {
     } else {
         vec![which]
     };
-    let mut table = Table::new("Table 3 (scaled presets; see DESIGN.md)", &CorpusStats::header());
+    let mut table = fnomad_lda::util::bench::Table::new(
+        "Table 3 (scaled presets; see DESIGN.md)",
+        &CorpusStats::header(),
+    );
     for name in &names {
         let corpus = preset(name)?;
         table.row(CorpusStats::compute(&corpus).row());
     }
     table.print();
     println!("\npaper's Table 3 (for reference):");
-    let mut paper = Table::new("Table 3 (paper)", &["dataset", "docs(I)", "vocab(J)", "tokens"]);
+    let mut paper = fnomad_lda::util::bench::Table::new(
+        "Table 3 (paper)",
+        &["dataset", "docs(I)", "vocab(J)", "tokens"],
+    );
     for &(name, i, j, w) in PAPER_TABLE3 {
         paper.row(vec![name.into(), i.to_string(), j.to_string(), w.to_string()]);
     }
@@ -139,18 +256,15 @@ fn cmd_calibrate(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_topics(args: &Args) -> Result<(), String> {
-    let opts = TrainOpts {
-        preset: args.str_or("preset", "tiny"),
-        topics: args.parse_or("topics", 16)?,
-        iters: args.parse_or("iters", 20)?,
-        eval: "rust".into(),
-        quiet: true,
-        ..Default::default()
-    };
+    let cfg = TrainConfig::preset(&args.str_or("preset", "tiny"))
+        .topics(args.parse_or("topics", 16)?)
+        .iters(args.parse_or("iters", 20)?)
+        .eval(fnomad_lda::coordinator::EvalPolicy::Rust)
+        .quiet(true);
     let top: usize = args.parse_or("top", 8)?;
     args.reject_unknown()?;
-    let corpus = preset(&opts.preset)?;
-    let res = train(&opts)?;
+    let corpus = preset(&cfg.preset)?;
+    let res = train(&cfg)?;
     print!("{}", topics_mod::render_topics(&res.final_state, &corpus.vocab_words, top));
     Ok(())
 }

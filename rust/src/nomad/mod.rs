@@ -53,7 +53,7 @@ mod tests {
             state.check_consistency(&corpus).unwrap();
             log_likelihood(&state)
         };
-        rt.run_epochs(&corpus, 5);
+        rt.run_epochs(5);
         let state = rt.gather_state(&corpus);
         state.check_consistency(&corpus).unwrap();
         let ll5 = log_likelihood(&state);
@@ -71,7 +71,7 @@ mod tests {
         for workers in [1usize, 2, 4] {
             let cfg = NomadConfig { workers, seed: 5, ..Default::default() };
             let mut rt = NomadRuntime::new(&corpus, hyper, cfg);
-            rt.run_epochs(&corpus, 12);
+            rt.run_epochs(12);
             let state = rt.gather_state(&corpus);
             state.check_consistency(&corpus).unwrap();
             lls.push(log_likelihood(&state));

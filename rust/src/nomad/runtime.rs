@@ -21,6 +21,7 @@
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 
+use crate::coordinator::EpochReport;
 use crate::corpus::{Corpus, Partition};
 use crate::lda::state::{Hyper, LdaState, SparseCounts};
 use crate::util::rng::Pcg32;
@@ -44,15 +45,6 @@ impl Default for NomadConfig {
     }
 }
 
-/// Per-epoch statistics.
-#[derive(Clone, Copy, Debug)]
-pub struct EpochStats {
-    pub epoch: usize,
-    pub wall_secs: f64,
-    /// tokens resampled this epoch, summed over workers
-    pub processed: u64,
-}
-
 /// Coordinator handle for the threaded runtime.
 pub struct NomadRuntime {
     senders: Vec<Sender<Msg>>,
@@ -73,30 +65,30 @@ pub struct NomadRuntime {
 }
 
 impl NomadRuntime {
-    /// Build workers, distribute documents, park all word tokens at home.
+    /// Build workers from a random initial state (see [`Self::from_state`]).
     pub fn new(corpus: &Corpus, hyper: Hyper, cfg: NomadConfig) -> Self {
-        assert!(cfg.workers >= 1);
-        let partition = Partition::by_tokens(corpus, cfg.workers);
-        let mut seed_rng = Pcg32::new(cfg.seed, 0x10AD);
+        let mut rng = Pcg32::new(cfg.seed, 0x10AD);
+        let state = LdaState::init_random(corpus, hyper, &mut rng);
+        Self::from_state(corpus, &state, cfg)
+    }
 
-        // random init (same scheme as LdaState::init_random)
-        let mut nwt = vec![SparseCounts::default(); corpus.vocab];
-        let mut s = vec![0i64; hyper.t];
-        let mut all_z: Vec<Vec<u16>> = Vec::with_capacity(corpus.num_docs());
-        for doc in &corpus.docs {
-            let zs: Vec<u16> = doc
-                .iter()
-                .map(|&w| {
-                    let topic = seed_rng.below(hyper.t) as u16;
-                    nwt[w as usize].inc(topic);
-                    s[topic as usize] += 1;
-                    topic
-                })
-                .collect();
-            all_z.push(zs);
-        }
-        let home: Vec<WordToken> = nwt
-            .into_iter()
+    /// Build workers from explicit initial assignments (the resume path),
+    /// distribute documents, park all word tokens at home.
+    pub fn from_state(corpus: &Corpus, init: &LdaState, cfg: NomadConfig) -> Self {
+        assert!(cfg.workers >= 1);
+        assert_eq!(init.z.len(), corpus.num_docs(), "init state / corpus mismatch");
+        let hyper = init.hyper;
+        let partition = Partition::by_tokens(corpus, cfg.workers);
+        // worker streams derive from a different stream id than the init
+        // draws (0x10AD in `new`), so sampling never replays them
+        let mut seed_rng = Pcg32::new(cfg.seed, 0xAD10);
+
+        let s: Vec<i64> = init.nt.iter().map(|&v| v as i64).collect();
+        let all_z = &init.z;
+        let home: Vec<WordToken> = init
+            .nwt
+            .iter()
+            .cloned()
             .enumerate()
             .map(|(w, counts)| WordToken::new(w as u32, counts))
             .collect();
@@ -150,7 +142,7 @@ impl NomadRuntime {
     }
 
     /// Run one fully-asynchronous epoch; returns wall time + throughput.
-    pub fn run_epoch(&mut self) -> EpochStats {
+    pub fn run_epoch(&mut self) -> EpochReport {
         let p = self.cfg.workers;
         let t0 = std::time::Instant::now();
 
@@ -208,15 +200,18 @@ impl NomadRuntime {
         let delta_processed = processed - self.prev_processed;
         self.prev_processed = processed;
         self.total_processed = processed;
-        EpochStats {
-            epoch: self.epochs_run,
-            wall_secs: t0.elapsed().as_secs_f64(),
+        EpochReport {
             processed: delta_processed,
+            secs: t0.elapsed().as_secs_f64(),
+            // word counts travel with their token — never stale (§4)
+            stale_reads: 0,
+            // ring transfers: every word token hops p times, τ_s circulates
+            msgs: (self.num_words * p) as u64 + (p as u32 * S_CIRCULATIONS) as u64,
         }
     }
 
     /// Run several epochs back to back.
-    pub fn run_epochs(&mut self, _corpus: &Corpus, n: usize) -> Vec<EpochStats> {
+    pub fn run_epochs(&mut self, n: usize) -> Vec<EpochReport> {
         (0..n).map(|_| self.run_epoch()).collect()
     }
 

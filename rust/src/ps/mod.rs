@@ -25,6 +25,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
+use crate::coordinator::EpochReport;
 use crate::corpus::{Corpus, Partition};
 use crate::lda::state::{Hyper, LdaState, SparseCounts};
 use crate::util::rng::Pcg32;
@@ -46,16 +47,6 @@ impl Default for PsConfig {
     }
 }
 
-/// Per-epoch stats (mirrors the nomad runtime's).
-#[derive(Clone, Copy, Debug)]
-pub struct PsEpochStats {
-    pub epoch: usize,
-    pub wall_secs: f64,
-    pub processed: u64,
-    /// pushes+pulls this epoch (server traffic)
-    pub server_ops: u64,
-}
-
 /// Coordinator handle.
 pub struct PsRuntime {
     server: Arc<PsServer>,
@@ -68,28 +59,27 @@ pub struct PsRuntime {
 }
 
 impl PsRuntime {
+    /// Build workers from a random initial state (see [`Self::from_state`]).
     pub fn new(corpus: &Corpus, hyper: Hyper, cfg: PsConfig) -> Self {
-        assert!(cfg.workers >= 1);
-        let partition = Partition::by_tokens(corpus, cfg.workers);
-        let mut seed_rng = Pcg32::new(cfg.seed, 0x9A9A);
+        let mut rng = Pcg32::new(cfg.seed, 0x9A9A);
+        let state = LdaState::init_random(corpus, hyper, &mut rng);
+        Self::from_state(corpus, &state, cfg)
+    }
 
-        // random init shared with the server
-        let mut nwt = vec![SparseCounts::default(); corpus.vocab];
-        let mut nt = vec![0i64; hyper.t];
-        let mut all_z: Vec<Vec<u16>> = Vec::with_capacity(corpus.num_docs());
-        for doc in &corpus.docs {
-            let zs: Vec<u16> = doc
-                .iter()
-                .map(|&w| {
-                    let topic = seed_rng.below(hyper.t) as u16;
-                    nwt[w as usize].inc(topic);
-                    nt[topic as usize] += 1;
-                    topic
-                })
-                .collect();
-            all_z.push(zs);
-        }
-        let server = Arc::new(PsServer::new(nwt, nt));
+    /// Build workers from explicit initial assignments (the resume path);
+    /// the server becomes authoritative for the given counts.
+    pub fn from_state(corpus: &Corpus, init: &LdaState, cfg: PsConfig) -> Self {
+        assert!(cfg.workers >= 1);
+        assert_eq!(init.z.len(), corpus.num_docs(), "init state / corpus mismatch");
+        let hyper = init.hyper;
+        let partition = Partition::by_tokens(corpus, cfg.workers);
+        // worker streams derive from a different stream id than the init
+        // draws (0x9A9A in `new`), so sampling never replays them
+        let mut seed_rng = Pcg32::new(cfg.seed, 0xA9A9);
+
+        let nt: Vec<i64> = init.nt.iter().map(|&v| v as i64).collect();
+        let all_z = &init.z;
+        let server = Arc::new(PsServer::new(init.nwt.clone(), nt));
 
         let (reply_tx, replies) = channel();
         let mut senders = Vec::new();
@@ -119,32 +109,36 @@ impl PsRuntime {
     }
 
     /// One pass of every worker over its documents (concurrent).
-    pub fn run_epoch(&mut self) -> PsEpochStats {
+    pub fn run_epoch(&mut self) -> EpochReport {
         let t0 = std::time::Instant::now();
         for tx in &self.senders {
             tx.send(PsWorkerMsg::RunEpoch).expect("ps worker hung up");
         }
         let mut processed = 0;
         let mut server_ops = 0;
+        let mut pulls = 0;
         for _ in 0..self.cfg.workers {
             match self.replies.recv().expect("ps reply channel closed") {
-                PsWorkerReply::EpochDone { processed: p, server_ops: o, .. } => {
+                PsWorkerReply::EpochDone { processed: p, server_ops: o, pulls: pl, .. } => {
                     processed += p;
                     server_ops += o;
+                    pulls += pl;
                 }
                 other => panic!("expected EpochDone, got {other:?}"),
             }
         }
         self.epochs_run += 1;
-        PsEpochStats {
-            epoch: self.epochs_run,
-            wall_secs: t0.elapsed().as_secs_f64(),
+        EpochReport {
             processed,
-            server_ops,
+            secs: t0.elapsed().as_secs_f64(),
+            // every pull refreshes a cache that concurrent pushes have
+            // already made stale — the contrast with nomad's exact rows
+            stale_reads: pulls,
+            msgs: server_ops,
         }
     }
 
-    pub fn run_epochs(&mut self, n: usize) -> Vec<PsEpochStats> {
+    pub fn run_epochs(&mut self, n: usize) -> Vec<EpochReport> {
         (0..n).map(|_| self.run_epoch()).collect()
     }
 
@@ -204,7 +198,8 @@ mod tests {
         let ll0 = log_likelihood(&rt.gather_state(&corpus));
         let stats = rt.run_epochs(6);
         assert!(stats.iter().all(|s| s.processed as usize == corpus.num_tokens()));
-        assert!(stats[0].server_ops > 0);
+        assert!(stats[0].msgs > 0);
+        assert!(stats[0].stale_reads > 0);
         let state = rt.gather_state(&corpus);
         state.check_consistency(&corpus).unwrap();
         assert!(log_likelihood(&state) > ll0);

@@ -57,7 +57,7 @@ pub enum PsWorkerMsg {
 
 #[derive(Debug)]
 pub enum PsWorkerReply {
-    EpochDone { worker: usize, processed: u64, server_ops: u64 },
+    EpochDone { worker: usize, processed: u64, server_ops: u64, pulls: u64 },
     Docs { worker: usize, start_doc: usize, ntd: Vec<SparseCounts>, z: Vec<Vec<u16>> },
 }
 
@@ -287,6 +287,7 @@ pub fn worker_loop(
                     worker: state.id,
                     processed,
                     server_ops,
+                    pulls: state.num_batches() as u64,
                 });
             }
             PsWorkerMsg::ReportDocs => {

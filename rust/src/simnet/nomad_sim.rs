@@ -11,6 +11,7 @@
 
 use std::collections::VecDeque;
 
+use crate::coordinator::EpochReport;
 use crate::corpus::{Corpus, Partition};
 use crate::lda::state::{Hyper, LdaState, SparseCounts};
 use crate::nomad::token::{GlobalToken, WordToken};
@@ -38,15 +39,6 @@ impl NomadSimConfig {
             s_circulations: 4,
         }
     }
-}
-
-/// Epoch result under virtual time.
-#[derive(Clone, Copy, Debug)]
-pub struct SimEpochStats {
-    pub epoch: usize,
-    /// virtual wall clock at epoch end (ns since simulation start)
-    pub vtime_ns: u64,
-    pub processed: u64,
 }
 
 enum Token {
@@ -78,29 +70,30 @@ pub struct NomadSim {
 }
 
 impl NomadSim {
+    /// Build from a random initial state (see [`Self::from_state`]).
     pub fn new(corpus: &Corpus, hyper: Hyper, cfg: NomadSimConfig) -> Self {
+        let mut rng = Pcg32::new(cfg.seed, 0x51AD);
+        let state = LdaState::init_random(corpus, hyper, &mut rng);
+        Self::from_state(corpus, &state, cfg)
+    }
+
+    /// Build from explicit initial assignments (the resume path).
+    pub fn from_state(corpus: &Corpus, init: &LdaState, cfg: NomadSimConfig) -> Self {
         let p = cfg.cluster.total_workers();
         assert!(p >= 1);
+        assert_eq!(init.z.len(), corpus.num_docs(), "init state / corpus mismatch");
+        let hyper = init.hyper;
         let partition = Partition::by_tokens(corpus, p);
-        let mut seed_rng = Pcg32::new(cfg.seed, 0x51AD);
+        // worker streams derive from a different stream id than the init
+        // draws (0x51AD in `new`), so sampling never replays them
+        let mut seed_rng = Pcg32::new(cfg.seed, 0xAD51);
 
-        let mut nwt = vec![SparseCounts::default(); corpus.vocab];
-        let mut s = vec![0i64; hyper.t];
-        let mut all_z: Vec<Vec<u16>> = Vec::with_capacity(corpus.num_docs());
-        for doc in &corpus.docs {
-            let zs: Vec<u16> = doc
-                .iter()
-                .map(|&w| {
-                    let topic = seed_rng.below(hyper.t) as u16;
-                    nwt[w as usize].inc(topic);
-                    s[topic as usize] += 1;
-                    topic
-                })
-                .collect();
-            all_z.push(zs);
-        }
-        let home: Vec<WordToken> = nwt
-            .into_iter()
+        let s: Vec<i64> = init.nt.iter().map(|&v| v as i64).collect();
+        let all_z = &init.z;
+        let home: Vec<WordToken> = init
+            .nwt
+            .iter()
+            .cloned()
             .enumerate()
             .map(|(w, counts)| WordToken::new(w as u32, counts))
             .collect();
@@ -156,8 +149,10 @@ impl NomadSim {
     }
 
     /// Run one epoch of virtual time; returns stats at the boundary.
-    pub fn run_epoch(&mut self) -> SimEpochStats {
+    pub fn run_epoch(&mut self) -> EpochReport {
         let p = self.workers.len();
+        let epoch_start = self.now;
+        let mut msgs = 0u64;
         let mut queue: EventQueue<Event> = EventQueue::new();
 
         // inject word tokens round-robin + the global token at worker 0
@@ -197,6 +192,7 @@ impl NomadSim {
                                 let next = (l + 1) % p;
                                 let bytes = self.token_bytes(&Token::Word(w.clone()));
                                 let dt = self.cfg.cluster.transfer_ns(bytes, l, next);
+                                msgs += 1;
                                 queue.schedule(
                                     self.now + dt,
                                     Event::Deliver(next, Token::Word(w)),
@@ -213,6 +209,7 @@ impl NomadSim {
                                     .cfg
                                     .cluster
                                     .transfer_ns(8 * self.hyper.t, l, next);
+                                msgs += 1;
                                 queue.schedule(
                                     self.now + dt,
                                     Event::Deliver(next, Token::Global(g)),
@@ -245,7 +242,12 @@ impl NomadSim {
         self.epochs_run += 1;
         let delta = processed - self.processed_total;
         self.processed_total = processed;
-        SimEpochStats { epoch: self.epochs_run, vtime_ns: self.now, processed: delta }
+        EpochReport {
+            processed: delta,
+            secs: (self.now - epoch_start) as f64 / 1e9,
+            stale_reads: 0,
+            msgs,
+        }
     }
 
     /// Pop the worker's next token, perform the *real* state update, and
@@ -271,7 +273,7 @@ impl NomadSim {
     }
 
     /// Assemble the exact global state (epoch boundaries only).
-    pub fn gather_state(&self, corpus: &Corpus) -> LdaState {
+    pub fn gather_state(&mut self, corpus: &Corpus) -> LdaState {
         let mut z: Vec<Vec<u16>> = vec![Vec::new(); corpus.num_docs()];
         let mut ntd: Vec<SparseCounts> = vec![SparseCounts::default(); corpus.num_docs()];
         for w in &self.workers {
@@ -309,7 +311,8 @@ mod tests {
         let ll0 = log_likelihood(&s.gather_state(&corpus));
         let stats = s.run_epoch();
         assert_eq!(stats.processed as usize, corpus.num_tokens());
-        assert!(stats.vtime_ns > 0);
+        assert!(stats.secs > 0.0);
+        assert!(stats.msgs > 0);
         let state = s.gather_state(&corpus);
         state.check_consistency(&corpus).unwrap();
         for _ in 0..5 {
@@ -323,14 +326,14 @@ mod tests {
         let corpus = preset("tiny").unwrap();
         let t1 = {
             let mut s = sim(&corpus, 1, 2);
-            s.run_epoch().vtime_ns
+            s.run_epoch().secs
         };
         let t8 = {
             let mut s = sim(&corpus, 8, 2);
-            s.run_epoch().vtime_ns
+            s.run_epoch().secs
         };
         assert!(
-            t8 * 3 < t1,
+            t8 * 3.0 < t1,
             "8 workers should be >3x faster in virtual time: t1={t1} t8={t8}"
         );
     }
@@ -339,8 +342,10 @@ mod tests {
     fn virtual_clock_is_monotone_across_epochs() {
         let corpus = preset("tiny").unwrap();
         let mut s = sim(&corpus, 4, 3);
-        let a = s.run_epoch().vtime_ns;
-        let b = s.run_epoch().vtime_ns;
+        s.run_epoch();
+        let a = s.vtime_secs();
+        s.run_epoch();
+        let b = s.vtime_secs();
         assert!(b > a);
     }
 }

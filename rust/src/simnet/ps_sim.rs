@@ -10,6 +10,7 @@
 //! clients is exactly the central-coordination bottleneck the paper's
 //! Nomad design removes.
 
+use crate::coordinator::EpochReport;
 use crate::corpus::{Corpus, Partition};
 use crate::lda::state::{Hyper, LdaState, SparseCounts};
 use crate::ps::worker::PsWorkerState;
@@ -39,16 +40,6 @@ impl PsSimConfig {
             disk: false,
         }
     }
-}
-
-/// Epoch stats under virtual time.
-#[derive(Clone, Copy, Debug)]
-pub struct PsSimEpochStats {
-    pub epoch: usize,
-    pub vtime_ns: u64,
-    pub processed: u64,
-    /// mean shard queueing delay per op this epoch (ns)
-    pub mean_server_wait_ns: f64,
 }
 
 enum Event {
@@ -86,26 +77,26 @@ pub struct PsSim {
 }
 
 impl PsSim {
+    /// Build from a random initial state (see [`Self::from_state`]).
     pub fn new(corpus: &Corpus, hyper: Hyper, cfg: PsSimConfig) -> Self {
-        let p = cfg.cluster.total_workers();
-        let partition = Partition::by_tokens(corpus, p);
-        let mut seed_rng = Pcg32::new(cfg.seed, 0x5EED);
+        let mut rng = Pcg32::new(cfg.seed, 0x5EED);
+        let state = LdaState::init_random(corpus, hyper, &mut rng);
+        Self::from_state(corpus, &state, cfg)
+    }
 
-        let mut nwt = vec![SparseCounts::default(); corpus.vocab];
-        let mut nt = vec![0i64; hyper.t];
-        let mut all_z: Vec<Vec<u16>> = Vec::with_capacity(corpus.num_docs());
-        for doc in &corpus.docs {
-            let zs: Vec<u16> = doc
-                .iter()
-                .map(|&w| {
-                    let topic = seed_rng.below(hyper.t) as u16;
-                    nwt[w as usize].inc(topic);
-                    nt[topic as usize] += 1;
-                    topic
-                })
-                .collect();
-            all_z.push(zs);
-        }
+    /// Build from explicit initial assignments (the resume path).
+    pub fn from_state(corpus: &Corpus, init: &LdaState, cfg: PsSimConfig) -> Self {
+        let p = cfg.cluster.total_workers();
+        assert_eq!(init.z.len(), corpus.num_docs(), "init state / corpus mismatch");
+        let hyper = init.hyper;
+        let partition = Partition::by_tokens(corpus, p);
+        // worker streams derive from a different stream id than the init
+        // draws (0x5EED in `new`), so sampling never replays them
+        let mut seed_rng = Pcg32::new(cfg.seed, 0xDEE5);
+
+        let nwt = init.nwt.clone();
+        let nt: Vec<i64> = init.nt.iter().map(|&v| v as i64).collect();
+        let all_z = &init.z;
 
         let mut workers = Vec::with_capacity(p);
         for l in 0..p {
@@ -174,14 +165,16 @@ impl PsSim {
         }
     }
 
-    pub fn run_epoch(&mut self) -> PsSimEpochStats {
+    pub fn run_epoch(&mut self) -> EpochReport {
         let p = self.workers.len();
+        let epoch_start = self.now;
         let mut queue: EventQueue<Event> = EventQueue::new();
         self.batch_of = vec![0; p];
         self.wait_ns_sum = 0.0;
         self.wait_ops = 0;
         let mut done = 0usize;
         let mut processed = 0u64;
+        let mut pulls = 0u64;
 
         // every worker issues its first pull
         for w in 0..p {
@@ -197,6 +190,7 @@ impl PsSim {
             self.now = t;
             match ev {
                 Event::PullArrive { worker, shard } => {
+                    pulls += 1;
                     let b = self.batch_of[worker];
                     let nwords = self.workers[worker].batch_words(b).len();
                     let svc = self.cfg.cost.server_service_ns(nwords);
@@ -318,15 +312,13 @@ impl PsSim {
 
         self.epochs_run += 1;
         self.processed_total += processed;
-        PsSimEpochStats {
-            epoch: self.epochs_run,
-            vtime_ns: self.now,
+        EpochReport {
             processed,
-            mean_server_wait_ns: if self.wait_ops > 0 {
-                self.wait_ns_sum / self.wait_ops as f64
-            } else {
-                0.0
-            },
+            secs: (self.now - epoch_start) as f64 / 1e9,
+            // every pull refreshes a cache against a server that concurrent
+            // pushes have already moved on from
+            stale_reads: pulls,
+            msgs: self.wait_ops,
         }
     }
 
@@ -334,8 +326,18 @@ impl PsSim {
         self.now as f64 / 1e9
     }
 
+    /// Mean shard queueing delay per op in the last epoch (ns) — the
+    /// central-coordination bottleneck telemetry of Figs. 5–6.
+    pub fn mean_server_wait_ns(&self) -> f64 {
+        if self.wait_ops > 0 {
+            self.wait_ns_sum / self.wait_ops as f64
+        } else {
+            0.0
+        }
+    }
+
     /// Exact global state at epoch boundaries.
-    pub fn gather_state(&self, corpus: &Corpus) -> LdaState {
+    pub fn gather_state(&mut self, corpus: &Corpus) -> LdaState {
         let mut z: Vec<Vec<u16>> = vec![Vec::new(); corpus.num_docs()];
         let mut ntd: Vec<SparseCounts> = vec![SparseCounts::default(); corpus.num_docs()];
         for w in &self.workers {
@@ -377,6 +379,8 @@ mod tests {
         let ll0 = log_likelihood(&sim.gather_state(&corpus));
         let stats = sim.run_epoch();
         assert_eq!(stats.processed as usize, corpus.num_tokens());
+        assert!(stats.stale_reads > 0);
+        assert!(stats.msgs >= stats.stale_reads);
         let state = sim.gather_state(&corpus);
         state.check_consistency(&corpus).unwrap();
         for _ in 0..5 {
@@ -388,8 +392,8 @@ mod tests {
     #[test]
     fn disk_flavor_is_slower() {
         let corpus = preset("tiny").unwrap();
-        let m = mk(&corpus, 4, false).run_epoch().vtime_ns;
-        let d = mk(&corpus, 4, true).run_epoch().vtime_ns;
+        let m = mk(&corpus, 4, false).run_epoch().secs;
+        let d = mk(&corpus, 4, true).run_epoch().secs;
         assert!(d > m, "disk {d} <= mem {m}");
     }
 
@@ -398,7 +402,7 @@ mod tests {
         // the headline Fig. 5 shape at tiny scale: same cores, same cost
         // model — nomad's decentralized routing beats the server queue
         let corpus = preset("tiny").unwrap();
-        let ps = mk(&corpus, 8, false).run_epoch().vtime_ns;
+        let ps = mk(&corpus, 8, false).run_epoch().secs;
         let mut ncfg = super::super::nomad_sim::NomadSimConfig::new(
             ClusterSpec::multicore(8),
             8,
@@ -410,7 +414,7 @@ mod tests {
             ncfg,
         )
         .run_epoch()
-        .vtime_ns;
+        .secs;
         assert!(
             nomad < ps,
             "nomad vtime {nomad} should beat ps {ps}"

@@ -1,10 +1,62 @@
 //! Minimal flag parser (the vendored crate set has no `clap`).
 //!
 //! Syntax: `binary <subcommand> --key value --flag`.  Typed getters with
-//! defaults; unknown-flag detection; `--help` rendering from registered
-//! specs.
+//! defaults; unknown-flag detection; per-subcommand `--help` rendering
+//! from registered [`CommandSpec`]s (see `main.rs` for the registry).
 
 use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One `--flag` of a subcommand, for help rendering.
+pub struct FlagSpec {
+    /// flag name without the leading `--`
+    pub flag: &'static str,
+    /// value placeholder (`"N"`, `"NAME"`, …); empty for boolean flags
+    pub value: &'static str,
+    pub help: &'static str,
+}
+
+/// A subcommand's registered help: one-line summary plus its flags.
+/// `binary <subcommand> --help` renders this.
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub flags: &'static [FlagSpec],
+}
+
+impl CommandSpec {
+    /// Render the full `--help` text for this subcommand.
+    pub fn render(&self, binary: &str) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{binary} {} — {}", self.name, self.about);
+        let _ = writeln!(out, "\nUSAGE: {binary} {} [flags]", self.name);
+        if self.flags.is_empty() {
+            return out;
+        }
+        let _ = writeln!(out, "\nFLAGS:");
+        let left: Vec<String> = self
+            .flags
+            .iter()
+            .map(|f| {
+                if f.value.is_empty() {
+                    format!("--{}", f.flag)
+                } else {
+                    format!("--{} {}", f.flag, f.value)
+                }
+            })
+            .collect();
+        let width = left.iter().map(|s| s.len()).max().unwrap_or(0);
+        for (l, f) in left.iter().zip(self.flags) {
+            let _ = writeln!(out, "  {l:width$}  {}", f.help);
+        }
+        out
+    }
+
+    /// One-line summary for the top-level help index.
+    pub fn summary_line(&self) -> String {
+        format!("  {:16} {}", self.name, self.about)
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct Args {
@@ -34,6 +86,11 @@ impl Args {
                 };
                 if flags.insert(key.clone(), val).is_some() {
                     return Err(format!("duplicate flag --{key}"));
+                }
+            } else if tok == "-h" {
+                // short help alias: `binary <subcommand> -h`
+                if flags.insert("help".into(), "true".into()).is_some() {
+                    return Err("duplicate flag --help".into());
                 }
             } else if subcommand.is_none() {
                 subcommand = Some(tok.clone());
@@ -73,6 +130,12 @@ impl Args {
     pub fn flag(&self, key: &str) -> bool {
         self.mark(key);
         matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// True when the user asked for this subcommand's help (`--help` and
+    /// `-h` both reach us as the flag `help`; also honor `--h`).
+    pub fn help_requested(&self) -> bool {
+        self.flag("help") || self.flag("h")
     }
 
     /// List of usize, e.g. `--cores 1,2,4,8`.
@@ -149,5 +212,36 @@ mod tests {
         let a = Args::from_tokens(&toks("x")).unwrap();
         assert_eq!(a.parse_or("n", 7i32).unwrap(), 7);
         assert_eq!(a.str_or("s", "d"), "d");
+    }
+
+    #[test]
+    fn help_flag_detection() {
+        let a = Args::from_tokens(&toks("train --help")).unwrap();
+        assert!(a.help_requested());
+        assert!(a.reject_unknown().is_ok());
+        let b = Args::from_tokens(&toks("train --iters 3")).unwrap();
+        assert!(!b.help_requested());
+        let c = Args::from_tokens(&toks("train -h")).unwrap();
+        assert_eq!(c.subcommand.as_deref(), Some("train"));
+        assert!(c.help_requested());
+    }
+
+    #[test]
+    fn command_spec_renders_name_flags_and_help() {
+        const SPEC: CommandSpec = CommandSpec {
+            name: "train",
+            about: "train a topic model",
+            flags: &[
+                FlagSpec { flag: "preset", value: "NAME", help: "corpus preset" },
+                FlagSpec { flag: "quiet", value: "", help: "suppress progress logs" },
+            ],
+        };
+        let text = SPEC.render("fnomad-lda");
+        assert!(text.contains("fnomad-lda train — train a topic model"));
+        assert!(text.contains("USAGE: fnomad-lda train [flags]"));
+        assert!(text.contains("--preset NAME"));
+        assert!(text.contains("corpus preset"));
+        assert!(text.contains("--quiet"));
+        assert!(SPEC.summary_line().contains("train"));
     }
 }
