@@ -14,7 +14,7 @@
 //! last-reducer penalty.
 
 use crate::corpus::{Corpus, Partition};
-use crate::lda::state::{Hyper, LdaState, SparseCounts};
+use crate::lda::state::{checked_totals, Hyper, LdaState, SparseCounts};
 use crate::sampler::bsearch::SparseCumSum;
 use crate::sampler::ftree::FTree;
 use crate::sampler::DiscreteSampler;
@@ -53,7 +53,9 @@ impl AdLda {
 
     /// Build from explicit initial assignments (the resume path).
     pub fn from_state(corpus: &Corpus, state: LdaState, cfg: AdLdaConfig) -> Self {
-        assert_eq!(state.z.len(), corpus.num_docs(), "init state / corpus mismatch");
+        // offsets equality (not just doc count): under the flat layout a
+        // doc-length mismatch would misindex z silently
+        assert_eq!(state.doc_offsets, corpus.doc_offsets, "init state / corpus mismatch");
         let hyper = state.hyper;
         // worker streams derive from a different stream id than the init
         // draws (0xAD1DA in `new`), so sampling never replays them
@@ -106,9 +108,10 @@ impl AdLda {
                         / (nt_local[t as usize].max(0) as f64 + bb);
                     self.tree.set(t as usize, q);
                 }
-                for pos in 0..corpus.docs[doc].len() {
-                    let word = corpus.docs[doc][pos] as usize;
-                    let old = self.state.z[doc][pos];
+                let row = corpus.doc_offsets[doc];
+                for pos in 0..corpus.doc_len(doc) {
+                    let word = corpus.tokens[row + pos] as usize;
+                    let old = self.state.z[row + pos];
                     self.state.ntd[doc].dec(old);
                     if nwt_local[word].get(old) > 0 {
                         nwt_local[word].dec(old);
@@ -140,7 +143,7 @@ impl AdLda {
                     let q = (self.state.ntd[doc].get(new) as f64 + h.alpha)
                         / (nt_local[new as usize].max(0) as f64 + bb);
                     self.tree.set(new as usize, q);
-                    self.state.z[doc][pos] = new;
+                    self.state.z[row + pos] = new;
                 }
                 let support: Vec<u16> = self.state.ntd[doc].iter().map(|(t, _)| t).collect();
                 for &t in &support {
@@ -171,9 +174,17 @@ impl AdLda {
                 }
             }
         }
-        for (acc, d) in self.state.nt.iter_mut().zip(nt_delta) {
-            *acc = (*acc as i64 + d).max(0) as u32;
-        }
+        // a negative (or overflowed) total after the barrier reduce is
+        // lost-delta corruption; checked_totals surfaces it instead of
+        // clamping it away
+        let reduced: Vec<i64> = self
+            .state
+            .nt
+            .iter()
+            .zip(nt_delta)
+            .map(|(&acc, d)| acc as i64 + d)
+            .collect();
+        self.state.nt = checked_totals(&reduced);
     }
 }
 

@@ -107,13 +107,9 @@ pub fn train_with(
     let hyper = Hyper::paper_default(cfg.topics);
     let resume_from = if cfg.resume { cfg.checkpoint.as_deref() } else { None };
     let resumed = resume_from.is_some_and(|p| p.exists());
-    let init = checkpoint::init_or_load(resume_from, &corpus, hyper, cfg.seed)?;
-    if resumed && init.hyper.t != cfg.topics && !cfg.quiet {
-        eprintln!(
-            "[train] warning: checkpoint has T={}, overriding --topics {}",
-            init.hyper.t, cfg.topics
-        );
-    }
+    // init_or_load validates the requested hyperparameters against the
+    // checkpoint: a T mismatch is an error (no silent override)
+    let init = checkpoint::init_or_load(resume_from, &corpus, hyper, cfg.seed, cfg.quiet)?;
     let mut eval = Evaluator::resolve(cfg.eval, init.hyper.t)?;
     let label = cfg.label();
     if !cfg.quiet {

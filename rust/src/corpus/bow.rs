@@ -67,7 +67,7 @@ pub fn read_docword<R: Read>(r: R, vocab_words: Vec<String>, name: &str) -> Resu
     // UCI dumps may contain empty docs after preprocessing; drop them, as
     // the paper does for Amazon reviews left empty by stemming.
     docs.retain(|doc| !doc.is_empty());
-    let corpus = Corpus { docs, vocab: w, vocab_words, name: name.to_string() };
+    let corpus = Corpus::from_docs(docs, w, vocab_words, name.to_string());
     corpus.validate()?;
     Ok(corpus)
 }
@@ -93,7 +93,7 @@ pub fn write_docword<W: Write>(corpus: &Corpus, w: W) -> std::io::Result<()> {
     // count (doc, word) pairs
     let mut per_doc: Vec<Vec<(u32, u32)>> = Vec::with_capacity(corpus.num_docs());
     let mut nnz = 0usize;
-    for d in &corpus.docs {
+    for d in corpus.docs() {
         let mut counts = std::collections::BTreeMap::new();
         for &wid in d {
             *counts.entry(wid).or_insert(0u32) += 1;
@@ -143,9 +143,9 @@ mod tests {
         assert_eq!(back.num_tokens(), c.num_tokens());
         assert_eq!(back.vocab, c.vocab);
         // token multisets per doc match (order within doc may differ)
-        for (a, b) in c.docs.iter().zip(&back.docs) {
-            let mut a = a.clone();
-            let mut b = b.clone();
+        for (a, b) in c.docs().zip(back.docs()) {
+            let mut a = a.to_vec();
+            let mut b = b.to_vec();
             a.sort_unstable();
             b.sort_unstable();
             assert_eq!(a, b);
@@ -157,8 +157,8 @@ mod tests {
         let text = "2\n3\n3\n1 1 2\n1 3 1\n2 2 5\n";
         let c = read_docword(text.as_bytes(), vec![], "t").unwrap();
         assert_eq!(c.num_docs(), 2);
-        assert_eq!(c.docs[0], vec![0, 0, 2]);
-        assert_eq!(c.docs[1], vec![1; 5]);
+        assert_eq!(c.doc(0), &[0, 0, 2]);
+        assert_eq!(c.doc(1), &[1; 5][..]);
     }
 
     #[test]

@@ -2,10 +2,32 @@
 //! preprocessing (tokenizer + stop words + Porter stemmer), synthetic
 //! corpus generation, dataset presets and worker partitioning.
 //!
-//! The canonical in-memory form is token-expanded ([`Corpus`]): `docs[i]`
-//! lists the word id of every occurrence, mirroring the latent-variable
-//! array `z` one-to-one.  Word-major access for word-by-word sampling
-//! (F+LDA(word), Nomad subtasks `t_j`) goes through [`WordIndex`].
+//! # Memory layout (CSR)
+//!
+//! The canonical in-memory form is a token-expanded **flat CSR** layout:
+//! one contiguous `tokens` array holding the word id of every occurrence,
+//! documents back to back, plus a `doc_offsets` prefix-sum array so that
+//! document `i` is the slice `tokens[doc_offsets[i]..doc_offsets[i + 1]]`.
+//! The latent-variable array `z` ([`crate::lda::LdaState`]) is a flat
+//! `Vec<u16>` sharing the *same* offsets, so `(doc, pos)` maps to the one
+//! flat index `doc_offsets[doc] + pos` on both sides.
+//!
+//! Invariants (checked by [`Corpus::validate`]):
+//!
+//! * `doc_offsets.len() == num_docs() + 1`, `doc_offsets[0] == 0`,
+//!   `doc_offsets` is strictly increasing (no empty documents), and
+//!   `*doc_offsets.last() == tokens.len()`;
+//! * every entry of `tokens` is `< vocab`.
+//!
+//! Why flat: at the paper's scale (millions of documents, billions of
+//! tokens) a `Vec<Vec<u32>>` costs one heap allocation plus 24 bytes of
+//! `Vec` header per document and pointer-chases on every sweep; the CSR
+//! form is two allocations total, iterates at memcpy speed, and lets
+//! workers copy their document range with a single `extend_from_slice`.
+//!
+//! Word-major access for word-by-word sampling (F+LDA(word), Nomad
+//! subtasks `t_j`) goes through [`WordIndex`], which is CSR over the same
+//! `tokens` payload sorted by word id.
 
 pub mod bow;
 pub mod partition;
@@ -18,11 +40,14 @@ pub use partition::Partition;
 pub use presets::preset;
 pub use stats::CorpusStats;
 
-/// A token-expanded bag-of-words corpus.
-#[derive(Clone, Debug, Default)]
+/// A token-expanded bag-of-words corpus in flat CSR form (see the module
+/// docs for the layout and its invariants).
+#[derive(Clone, Debug)]
 pub struct Corpus {
-    /// `docs[i][j]` = vocabulary id of the j-th occurrence in document i.
-    pub docs: Vec<Vec<u32>>,
+    /// vocabulary id of every occurrence, documents back to back
+    pub tokens: Vec<u32>,
+    /// `doc_offsets[i]..doc_offsets[i+1]` is document i's slice
+    pub doc_offsets: Vec<usize>,
     /// vocabulary size J (ids are `0..vocab`)
     pub vocab: usize,
     /// optional vocabulary strings (empty when synthetic/anonymous)
@@ -31,27 +56,99 @@ pub struct Corpus {
     pub name: String,
 }
 
+impl Default for Corpus {
+    fn default() -> Self {
+        Corpus {
+            tokens: Vec::new(),
+            doc_offsets: vec![0],
+            vocab: 0,
+            vocab_words: Vec::new(),
+            name: String::new(),
+        }
+    }
+}
+
 impl Corpus {
+    /// Empty corpus with metadata only (documents appended via
+    /// [`Self::push_doc`]).
+    pub fn with_meta(vocab: usize, vocab_words: Vec<String>, name: String) -> Self {
+        Corpus { tokens: Vec::new(), doc_offsets: vec![0], vocab, vocab_words, name }
+    }
+
+    /// Flatten nested per-document token lists into the CSR layout.
+    pub fn from_docs(
+        docs: Vec<Vec<u32>>,
+        vocab: usize,
+        vocab_words: Vec<String>,
+        name: String,
+    ) -> Self {
+        let mut c = Corpus::with_meta(vocab, vocab_words, name);
+        c.tokens.reserve(docs.iter().map(|d| d.len()).sum());
+        c.doc_offsets.reserve(docs.len());
+        for d in &docs {
+            c.push_doc(d);
+        }
+        c
+    }
+
+    /// Append one document (its word ids, in occurrence order).
+    pub fn push_doc(&mut self, toks: &[u32]) {
+        self.tokens.extend_from_slice(toks);
+        self.doc_offsets.push(self.tokens.len());
+    }
+
     /// Number of documents I.
+    #[inline]
     pub fn num_docs(&self) -> usize {
-        self.docs.len()
+        self.doc_offsets.len() - 1
     }
 
-    /// Total token count Σ_i n_i.
+    /// Total token count Σ_i n_i (O(1) under CSR).
+    #[inline]
     pub fn num_tokens(&self) -> usize {
-        self.docs.iter().map(|d| d.len()).sum()
+        self.tokens.len()
     }
 
-    /// Validate structural invariants (every id < vocab, no empty docs).
+    /// Document i as a token slice.
+    #[inline]
+    pub fn doc(&self, i: usize) -> &[u32] {
+        &self.tokens[self.doc_offsets[i]..self.doc_offsets[i + 1]]
+    }
+
+    /// Length of document i (O(1)).
+    #[inline]
+    pub fn doc_len(&self, i: usize) -> usize {
+        self.doc_offsets[i + 1] - self.doc_offsets[i]
+    }
+
+    /// Iterate documents in order as token slices.
+    #[inline]
+    pub fn docs(&self) -> impl Iterator<Item = &[u32]> + '_ {
+        self.doc_offsets.windows(2).map(move |w| &self.tokens[w[0]..w[1]])
+    }
+
+    /// Validate structural invariants (CSR shape, every id < vocab, no
+    /// empty docs).
     pub fn validate(&self) -> Result<(), String> {
-        for (i, d) in self.docs.iter().enumerate() {
-            if d.is_empty() {
+        if self.doc_offsets.first() != Some(&0) {
+            return Err("doc_offsets must start at 0".into());
+        }
+        if *self.doc_offsets.last().unwrap() != self.tokens.len() {
+            return Err(format!(
+                "doc_offsets ends at {}, tokens.len() is {}",
+                self.doc_offsets.last().unwrap(),
+                self.tokens.len()
+            ));
+        }
+        for (i, w) in self.doc_offsets.windows(2).enumerate() {
+            if w[1] <= w[0] {
                 return Err(format!("document {i} is empty"));
             }
-            for &w in d {
-                if w as usize >= self.vocab {
-                    return Err(format!("doc {i}: word id {w} >= vocab {}", self.vocab));
-                }
+        }
+        for (at, &w) in self.tokens.iter().enumerate() {
+            if w as usize >= self.vocab {
+                let i = self.doc_of_token(at);
+                return Err(format!("doc {i}: word id {w} >= vocab {}", self.vocab));
             }
         }
         if !self.vocab_words.is_empty() && self.vocab_words.len() != self.vocab {
@@ -62,6 +159,11 @@ impl Corpus {
             ));
         }
         Ok(())
+    }
+
+    /// Which document the flat token index `at` belongs to (diagnostics).
+    fn doc_of_token(&self, at: usize) -> usize {
+        self.doc_offsets.partition_point(|&o| o <= at) - 1
     }
 
     /// Build the word-major occurrence index.
@@ -86,10 +188,8 @@ pub struct WordIndex {
 impl WordIndex {
     pub fn build(corpus: &Corpus) -> Self {
         let mut counts = vec![0usize; corpus.vocab + 1];
-        for d in &corpus.docs {
-            for &w in d {
-                counts[w as usize + 1] += 1;
-            }
+        for &w in &corpus.tokens {
+            counts[w as usize + 1] += 1;
         }
         for j in 1..counts.len() {
             counts[j] += counts[j - 1];
@@ -99,7 +199,7 @@ impl WordIndex {
         let mut doc_of = vec![0u32; total];
         let mut pos_of = vec![0u32; total];
         let mut cursor = offsets.clone();
-        for (i, d) in corpus.docs.iter().enumerate() {
+        for (i, d) in corpus.docs().enumerate() {
             for (p, &w) in d.iter().enumerate() {
                 let at = cursor[w as usize];
                 doc_of[at] = i as u32;
@@ -134,12 +234,12 @@ pub(crate) mod tests {
     use super::*;
 
     pub(crate) fn tiny() -> Corpus {
-        Corpus {
-            docs: vec![vec![0, 1, 1, 2], vec![2, 2, 3], vec![0, 3]],
-            vocab: 4,
-            vocab_words: vec![],
-            name: "tiny".into(),
-        }
+        Corpus::from_docs(
+            vec![vec![0, 1, 1, 2], vec![2, 2, 3], vec![0, 3]],
+            4,
+            vec![],
+            "tiny".into(),
+        )
     }
 
     #[test]
@@ -148,6 +248,20 @@ pub(crate) mod tests {
         assert_eq!(c.num_docs(), 3);
         assert_eq!(c.num_tokens(), 9);
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn csr_layout_shape() {
+        let c = tiny();
+        assert_eq!(c.doc_offsets, vec![0, 4, 7, 9]);
+        assert_eq!(c.tokens, vec![0, 1, 1, 2, 2, 2, 3, 0, 3]);
+        assert_eq!(c.doc(0), &[0, 1, 1, 2]);
+        assert_eq!(c.doc(1), &[2, 2, 3]);
+        assert_eq!(c.doc(2), &[0, 3]);
+        assert_eq!(c.doc_len(1), 3);
+        let collected: Vec<&[u32]> = c.docs().collect();
+        assert_eq!(collected.len(), 3);
+        assert_eq!(collected[2], &[0, 3]);
     }
 
     #[test]
@@ -160,7 +274,14 @@ pub(crate) mod tests {
     #[test]
     fn validate_catches_empty_doc() {
         let mut c = tiny();
-        c.docs.push(vec![]);
+        c.push_doc(&[]);
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_broken_offsets() {
+        let mut c = tiny();
+        c.doc_offsets.pop();
         assert!(c.validate().is_err());
     }
 
@@ -174,7 +295,7 @@ pub(crate) mod tests {
             let (docs, poss) = idx.occurrences(j);
             assert_eq!(docs.len(), idx.count(j));
             for (&d, &p) in docs.iter().zip(poss) {
-                assert_eq!(c.docs[d as usize][p as usize], j as u32);
+                assert_eq!(c.doc(d as usize)[p as usize], j as u32);
                 seen += 1;
             }
         }

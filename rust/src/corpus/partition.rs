@@ -23,7 +23,7 @@ impl Partition {
         let mut start = 0usize;
         let mut acc = 0usize;
         let mut consumed = 0usize;
-        for (i, d) in corpus.docs.iter().enumerate() {
+        for (i, d) in corpus.docs().enumerate() {
             acc += d.len();
             // close the range when we pass the proportional boundary,
             // keeping enough docs for the remaining workers
@@ -61,11 +61,11 @@ impl Partition {
             .expect("doc not covered by partition")
     }
 
-    /// Token mass per worker.
+    /// Token mass per worker (O(1) per range under CSR).
     pub fn loads(&self, corpus: &Corpus) -> Vec<usize> {
         self.ranges
             .iter()
-            .map(|&(s, e)| corpus.docs[s..e].iter().map(|d| d.len()).sum())
+            .map(|&(s, e)| corpus.doc_offsets[e] - corpus.doc_offsets[s])
             .collect()
     }
 

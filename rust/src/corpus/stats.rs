@@ -26,7 +26,7 @@ impl CorpusStats {
         let mut distinct_total = 0usize;
         let mut max_doc_len = 0usize;
         let mut scratch: Vec<u32> = Vec::new();
-        for d in &c.docs {
+        for d in c.docs() {
             max_doc_len = max_doc_len.max(d.len());
             scratch.clear();
             scratch.extend_from_slice(d);

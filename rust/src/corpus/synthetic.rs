@@ -82,14 +82,16 @@ pub fn generate(spec: &SyntheticSpec) -> Corpus {
 
     let mut theta = vec![0.0f64; k];
     let alpha_vec = vec![spec.alpha; k];
-    let mut docs = Vec::with_capacity(spec.num_docs);
-    while docs.len() < spec.num_docs {
+    let mut corpus = Corpus::with_meta(j, Vec::new(), spec.name.clone());
+    corpus.tokens.reserve((spec.num_docs as f64 * spec.avg_doc_len) as usize);
+    let mut doc = Vec::new();
+    while corpus.num_docs() < spec.num_docs {
         rng.dirichlet(&alpha_vec, &mut theta);
         let len = rng.poisson(spec.avg_doc_len) as usize;
         if len == 0 {
             continue;
         }
-        let mut doc = Vec::with_capacity(len);
+        doc.clear();
         // cumsum of theta for topic draws
         let mut theta_cdf = theta.clone();
         for i in 1..k {
@@ -105,10 +107,10 @@ pub fn generate(spec: &SyntheticSpec) -> Corpus {
             let w = cdf.partition_point(|&c| c <= uw).min(j - 1);
             doc.push(w as u32);
         }
-        docs.push(doc);
+        corpus.push_doc(&doc);
     }
 
-    Corpus { docs, vocab: j, vocab_words: Vec::new(), name: spec.name.clone() }
+    corpus
 }
 
 #[cfg(test)]
@@ -141,11 +143,12 @@ mod tests {
     fn deterministic_given_seed() {
         let a = generate(&small_spec());
         let b = generate(&small_spec());
-        assert_eq!(a.docs, b.docs);
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.doc_offsets, b.doc_offsets);
         let mut spec = small_spec();
         spec.seed = 43;
         let c = generate(&spec);
-        assert_ne!(a.docs, c.docs);
+        assert_ne!(a.tokens, c.tokens);
     }
 
     #[test]
@@ -153,10 +156,8 @@ mod tests {
         // Zipf base measure => head words much more frequent than tail
         let c = generate(&small_spec());
         let mut freq = vec![0usize; c.vocab];
-        for d in &c.docs {
-            for &w in d {
-                freq[w as usize] += 1;
-            }
+        for &w in &c.tokens {
+            freq[w as usize] += 1;
         }
         freq.sort_unstable_by(|a, b| b.cmp(a));
         let head: usize = freq[..10].iter().sum();
@@ -174,8 +175,8 @@ mod tests {
         // an iid-over-vocab draw
         let c = generate(&small_spec());
         let mut distinct_ratio = 0.0;
-        for d in &c.docs {
-            let mut s: Vec<u32> = d.clone();
+        for d in c.docs() {
+            let mut s: Vec<u32> = d.to_vec();
             s.sort_unstable();
             s.dedup();
             distinct_ratio += s.len() as f64 / d.len() as f64;

@@ -328,14 +328,16 @@ pub fn build_corpus(texts: &[String], opts: &PipelineOpts, name: &str) -> Corpus
     vocab_words.sort_unstable();
     let index: HashMap<&String, u32> =
         vocab_words.iter().enumerate().map(|(i, w)| (w, i as u32)).collect();
-    let mut docs = Vec::new();
+    let mut corpus =
+        Corpus::with_meta(vocab_words.len(), Vec::new(), name.to_string());
     for toks in &processed {
         let ids: Vec<u32> = toks.iter().filter_map(|w| index.get(w).copied()).collect();
         if !ids.is_empty() {
-            docs.push(ids);
+            corpus.push_doc(&ids);
         }
     }
-    Corpus { docs, vocab: vocab_words.len(), vocab_words, name: name.to_string() }
+    corpus.vocab_words = vocab_words;
+    corpus
 }
 
 #[cfg(test)]

@@ -140,9 +140,10 @@ impl Sweep for AliasLda {
         self.snapshot(state);
 
         for doc in 0..corpus.num_docs() {
-            for pos in 0..corpus.docs[doc].len() {
-                let word = corpus.docs[doc][pos] as usize;
-                let old = state.z[doc][pos];
+            let base = corpus.doc_offsets[doc];
+            for pos in 0..corpus.doc_len(doc) {
+                let word = corpus.tokens[base + pos] as usize;
+                let old = state.z[base + pos];
                 remove_token(state, doc, word, old);
 
                 // fresh sparse term r_t = n_td·(n_tw+β)/(n_t+β̄) over T_d
@@ -206,7 +207,7 @@ impl Sweep for AliasLda {
                 }
 
                 add_token(state, doc, word, cur);
-                state.z[doc][pos] = cur;
+                state.z[base + pos] = cur;
             }
         }
     }
@@ -240,7 +241,7 @@ mod tests {
         let mut rng = Pcg32::seeded(62);
         let mut state = LdaState::init_random(&corpus, Hyper::paper_default(8), &mut rng);
         let mut s = AliasLda::new(&state);
-        let word = corpus.docs[0][0] as usize;
+        let word = corpus.doc(0)[0] as usize;
         let _ = s.word_table(&state, word);
         // sum over all topics of the stale density == s_sum + word sum
         let total: f64 = (0..8).map(|t| s.stale_density(&state, word, t as u16)).sum();
@@ -259,7 +260,7 @@ mod tests {
         let mut rng = Pcg32::seeded(63);
         let state = LdaState::init_random(&corpus, Hyper::paper_default(8), &mut rng);
         let mut s = AliasLda::new(&state);
-        let word = corpus.docs[0][0] as usize;
+        let word = corpus.doc(0)[0] as usize;
         let draws0 = {
             let wt = s.word_table(&state, word);
             wt.draws_left

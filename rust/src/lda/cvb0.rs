@@ -49,7 +49,7 @@ impl Cvb0 {
         let mut e_ntd = Vec::with_capacity(corpus.num_docs());
         let mut e_nwt = vec![0.0; corpus.vocab * t];
         let mut e_nt = vec![0.0; t];
-        for (d, doc) in corpus.docs.iter().enumerate() {
+        for (d, doc) in corpus.docs().enumerate() {
             let mut g = vec![0.0f32; doc.len() * t];
             let mut nd = vec![0.0f64; t];
             for (j, &w) in doc.iter().enumerate() {
@@ -81,7 +81,7 @@ impl Cvb0 {
         let beta = self.hyper.beta;
         let bb = self.hyper.betabar(self.vocab);
         let mut fresh = vec![0.0f64; t];
-        for (d, doc) in corpus.docs.iter().enumerate() {
+        for (d, doc) in corpus.docs().enumerate() {
             for (j, &w) in doc.iter().enumerate() {
                 let w = w as usize;
                 let g = &mut self.gamma[d][j * t..(j + 1) * t];

@@ -147,11 +147,12 @@ mod tests {
         // rebuild with doc-major single-topic assignment
         let mut nwt = vec![super::super::SparseCounts::default(); corpus.vocab];
         let mut nt = vec![0u32; hyper.t];
-        for (i, doc) in corpus.docs.iter().enumerate() {
+        for (i, doc) in corpus.docs().enumerate() {
             let topic = (i % hyper.t) as u16;
             let mut counts = super::super::SparseCounts::default();
+            let base = corpus.doc_offsets[i];
             for (pos, &w) in doc.iter().enumerate() {
-                concentrated.z[i][pos] = topic;
+                concentrated.z[base + pos] = topic;
                 counts.inc(topic);
                 nwt[w as usize].inc(topic);
                 nt[topic as usize] += 1;

@@ -68,9 +68,10 @@ impl Sweep for FLdaDoc {
                 self.tree.set(t as usize, Self::q_value(state, doc, t));
             }
 
-            for pos in 0..corpus.docs[doc].len() {
-                let word = corpus.docs[doc][pos] as usize;
-                let old = state.z[doc][pos];
+            let base = corpus.doc_offsets[doc];
+            for pos in 0..corpus.doc_len(doc) {
+                let word = corpus.tokens[base + pos] as usize;
+                let old = state.z[base + pos];
                 remove_token(state, doc, word, old);
                 // n_td[old] and n_t[old] both changed → refresh that leaf
                 self.tree.set(old as usize, Self::q_value(state, doc, old));
@@ -91,7 +92,7 @@ impl Sweep for FLdaDoc {
 
                 add_token(state, doc, word, new);
                 self.tree.set(new as usize, Self::q_value(state, doc, new));
-                state.z[doc][pos] = new;
+                state.z[base + pos] = new;
             }
 
             // leave document: lower the final support back to base; any

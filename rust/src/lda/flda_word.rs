@@ -88,7 +88,8 @@ impl FLdaWord {
 
         for (&doc, &pos) in docs.iter().zip(poss) {
             let (doc, pos) = (doc as usize, pos as usize);
-            let old = state.z[doc][pos];
+            let zi = state.doc_offsets[doc] + pos;
+            let old = state.z[zi];
             let old_t = old as usize;
             // remove: ntd (sparse), word row (dense scratch), totals
             state.ntd[doc].dec(old);
@@ -125,7 +126,7 @@ impl FLdaWord {
             }
             self.tree
                 .set(new_t, (self.wrow[new_t] as f64 + beta) / (state.nt[new_t] as f64 + bb));
-            state.z[doc][pos] = new;
+            state.z[zi] = new;
         }
 
         // lower: write the touched scratch entries back into the sparse

@@ -16,29 +16,49 @@ use crate::util::rng::Pcg32;
 
 use super::state::{Hyper, LdaState, SparseCounts};
 
-/// Deterministic train/test split by document id hash.
+/// Minimum document length eligible for the test split: the
+/// document-completion estimator needs both a non-trivial observed half
+/// and at least one held-out token.
+pub const MIN_TEST_DOC_LEN: usize = 4;
+
+/// Deterministic train/test split by document id hash: doc `i` goes to
+/// test iff `hash(seed, i)` falls below `test_fraction` — stable per
+/// document, independent of iteration order.
+///
+/// Documents shorter than [`MIN_TEST_DOC_LEN`] always stay in train and
+/// are excluded from the draw entirely, so the realized test fraction
+/// among *eligible* documents is unbiased.  (The previous implementation
+/// drew from a sequential RNG and silently dropped selected-but-short
+/// docs back into train, biasing the realized fraction low on short-doc
+/// corpora.)
 pub fn split_corpus(corpus: &Corpus, test_fraction: f64, seed: u64) -> (Corpus, Corpus) {
     assert!((0.0..1.0).contains(&test_fraction));
-    let mut rng = Pcg32::new(seed, 0x5117);
-    let mut train = Corpus { docs: vec![], ..corpus_meta(corpus, "train") };
-    let mut test = Corpus { docs: vec![], ..corpus_meta(corpus, "test") };
-    for doc in &corpus.docs {
-        if rng.next_f64() < test_fraction && doc.len() >= 4 {
-            test.docs.push(doc.clone());
+    let mut train = corpus_meta(corpus, "train");
+    let mut test = corpus_meta(corpus, "test");
+    for (i, doc) in corpus.docs().enumerate() {
+        if doc.len() >= MIN_TEST_DOC_LEN && doc_hash01(seed, i as u64) < test_fraction {
+            test.push_doc(doc);
         } else {
-            train.docs.push(doc.clone());
+            train.push_doc(doc);
         }
     }
     (train, test)
 }
 
+/// SplitMix64 finalizer over (seed, doc id), mapped to a uniform f64 in
+/// [0, 1) with 53 bits of entropy.
+fn doc_hash01(seed: u64, doc: u64) -> f64 {
+    let mut x = seed.wrapping_add(doc.wrapping_mul(0x9E3779B97F4A7C15));
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58476D1CE4E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D049BB133111EB);
+    x ^= x >> 31;
+    (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
 fn corpus_meta(c: &Corpus, suffix: &str) -> Corpus {
-    Corpus {
-        docs: vec![],
-        vocab: c.vocab,
-        vocab_words: c.vocab_words.clone(),
-        name: format!("{}-{suffix}", c.name),
-    }
+    Corpus::with_meta(c.vocab, c.vocab_words.clone(), format!("{}-{suffix}", c.name))
 }
 
 /// Document-completion perplexity of `state` (trained on the train split)
@@ -62,7 +82,7 @@ pub fn perplexity(
     let mut log_sum = 0.0f64;
     let mut held_tokens = 0usize;
     let mut p = vec![0.0f64; t];
-    for doc in &test.docs {
+    for doc in test.docs() {
         let half = doc.len() / 2;
         let (observed, held) = doc.split_at(half);
         // fold-in: Gibbs on the observed half with φ̂ frozen
@@ -134,12 +154,74 @@ mod tests {
         let corpus = preset("tiny").unwrap();
         let (train, test) = split_corpus(&corpus, 0.3, 1);
         assert_eq!(train.num_docs() + test.num_docs(), corpus.num_docs());
+        assert_eq!(train.num_tokens() + test.num_tokens(), corpus.num_tokens());
         assert!(test.num_docs() > 0 && train.num_docs() > 0);
         train.validate().unwrap();
         test.validate().unwrap();
         // deterministic
         let (train2, _) = split_corpus(&corpus, 0.3, 1);
-        assert_eq!(train.docs, train2.docs);
+        assert_eq!(train.tokens, train2.tokens);
+        assert_eq!(train.doc_offsets, train2.doc_offsets);
+    }
+
+    #[test]
+    fn short_doc_split_is_unbiased_among_eligible_docs() {
+        use crate::corpus::synthetic::{generate, SyntheticSpec};
+        // Poisson mean 3 → roughly half the docs are shorter than
+        // MIN_TEST_DOC_LEN; under the old sequential-RNG draw those docs
+        // consumed test picks and fell back to train, biasing the
+        // realized fraction low.
+        let corpus = generate(&SyntheticSpec {
+            name: "shorty".into(),
+            num_docs: 4000,
+            vocab: 60,
+            avg_doc_len: 3.0,
+            true_topics: 4,
+            seed: 11,
+            ..Default::default()
+        });
+        let eligible =
+            corpus.docs().filter(|d| d.len() >= MIN_TEST_DOC_LEN).count();
+        let short = corpus.num_docs() - eligible;
+        assert!(
+            eligible > 800 && short > 800,
+            "corpus not mixed enough to exercise the bias ({eligible} eligible, {short} short)"
+        );
+        let frac = 0.25;
+        let (train, test) = split_corpus(&corpus, frac, 9);
+        assert_eq!(train.num_docs() + test.num_docs(), corpus.num_docs());
+        // short docs are never selected for test
+        assert!(test.docs().all(|d| d.len() >= MIN_TEST_DOC_LEN));
+        // realized fraction among eligible docs is unbiased: within 5
+        // binomial standard deviations of the request
+        let realized = test.num_docs() as f64 / eligible as f64;
+        let sigma = (frac * (1.0 - frac) / eligible as f64).sqrt();
+        assert!(
+            (realized - frac).abs() < 5.0 * sigma,
+            "realized test fraction {realized:.4} vs requested {frac} (sigma {sigma:.4})"
+        );
+    }
+
+    #[test]
+    fn split_is_per_doc_stable() {
+        // the hash draw depends only on (seed, doc id): splitting a prefix
+        // of the corpus assigns the shared docs identically
+        let corpus = preset("tiny").unwrap();
+        let (_, test_full) = split_corpus(&corpus, 0.4, 3);
+        let mut prefix = crate::corpus::Corpus::with_meta(
+            corpus.vocab,
+            vec![],
+            "prefix".into(),
+        );
+        for doc in corpus.docs().take(corpus.num_docs() / 2) {
+            prefix.push_doc(doc);
+        }
+        let (_, test_prefix) = split_corpus(&prefix, 0.4, 3);
+        // every prefix test doc appears in the full test split too
+        let full_docs: Vec<&[u32]> = test_full.docs().collect();
+        for d in test_prefix.docs() {
+            assert!(full_docs.contains(&d), "prefix split disagrees with full split");
+        }
     }
 
     #[test]

@@ -40,9 +40,10 @@ impl Sweep for PlainLda {
             for (topic, c) in state.ntd[doc].iter() {
                 self.doc_counts[topic as usize] = c;
             }
-            for pos in 0..corpus.docs[doc].len() {
-                let word = corpus.docs[doc][pos] as usize;
-                let old = state.z[doc][pos];
+            let base = corpus.doc_offsets[doc];
+            for pos in 0..corpus.doc_len(doc) {
+                let word = corpus.tokens[base + pos] as usize;
+                let old = state.z[base + pos];
                 remove_token(state, doc, word, old);
                 self.doc_counts[old as usize] -= 1;
 
@@ -77,7 +78,7 @@ impl Sweep for PlainLda {
 
                 add_token(state, doc, word, new);
                 self.doc_counts[new as usize] += 1;
-                state.z[doc][pos] = new;
+                state.z[base + pos] = new;
             }
             // clear doc scratch
             for (topic, _) in state.ntd[doc].iter() {

@@ -96,9 +96,10 @@ impl Sweep for SparseLda {
             }
             self.rebuild_r(state, doc);
 
-            for pos in 0..corpus.docs[doc].len() {
-                let word = corpus.docs[doc][pos] as usize;
-                let old = state.z[doc][pos];
+            let base = corpus.doc_offsets[doc];
+            for pos in 0..corpus.doc_len(doc) {
+                let word = corpus.tokens[base + pos] as usize;
+                let old = state.z[base + pos];
                 let (old_nt, old_ntd) = (state.nt[old as usize], state.ntd[doc].get(old));
                 remove_token(state, doc, word, old);
                 self.refresh_topic(state, doc, old, old_nt, old_ntd);
@@ -160,7 +161,7 @@ impl Sweep for SparseLda {
                 let (new_nt, new_ntd) = (state.nt[new as usize], state.ntd[doc].get(new));
                 add_token(state, doc, word, new);
                 self.refresh_topic(state, doc, new, new_nt, new_ntd);
-                state.z[doc][pos] = new;
+                state.z[base + pos] = new;
             }
 
             // leave doc: lower coeff back to base on the final support

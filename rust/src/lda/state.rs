@@ -1,11 +1,15 @@
 //! The CGS count state (§2.1): topic assignments `z` plus the three count
 //! aggregates `n_td`, `n_wt`, `n_t`.
 //!
-//! Both the doc-topic and word-topic matrices are stored *sparse* (sorted
-//! `(topic, count)` pairs) — at T in the thousands they are overwhelmingly
-//! sparse (|T_d| is bounded by document length, |T_w| by the word's corpus
-//! frequency), and every sampler in this crate iterates nonzero support.
-//! Samplers that need dense rows scatter into reusable scratch buffers.
+//! `z` is stored **flat** in the corpus's CSR layout (see
+//! [`crate::corpus`]): one `Vec<u16>` with document i's assignments at
+//! `doc_offsets[i]..doc_offsets[i + 1]`, mirroring `Corpus::tokens`
+//! one-to-one.  Both the doc-topic and word-topic matrices are stored
+//! *sparse* (sorted `(topic, count)` pairs) — at T in the thousands they
+//! are overwhelmingly sparse (|T_d| is bounded by document length, |T_w|
+//! by the word's corpus frequency), and every sampler in this crate
+//! iterates nonzero support.  Samplers that need dense rows scatter into
+//! reusable scratch buffers.
 
 use crate::corpus::Corpus;
 use crate::util::rng::Pcg32;
@@ -120,13 +124,92 @@ impl SparseCounts {
     }
 }
 
+/// Convert signed global topic totals to the `u32` count vector, surfacing
+/// a negative entry as a *loud* panic naming the offending topic.  A
+/// negative total can only arise from count-state corruption (a lost or
+/// double-applied delta); clamping it to zero would silently re-mask
+/// exactly the class of bug the exact-fold protocol exists to rule out.
+pub fn checked_totals(s: &[i64]) -> Vec<u32> {
+    s.iter()
+        .enumerate()
+        .map(|(t, &v)| {
+            u32::try_from(v).unwrap_or_else(|_| {
+                panic!("global topic total s[{t}] = {v} out of u32 range: state corruption")
+            })
+        })
+        .collect()
+}
+
+/// Rebase the corpus CSR offsets of docs [start, end) to a worker-local
+/// zero base and rebuild the per-doc topic counts from the flat `z` rows —
+/// the shared spawn-time setup of every partitioned worker.
+pub fn local_rows(
+    corpus: &Corpus,
+    start: usize,
+    end: usize,
+    z: &[u16],
+    t: usize,
+) -> (Vec<usize>, Vec<SparseCounts>) {
+    let base = corpus.doc_offsets[start];
+    let offsets: Vec<usize> =
+        corpus.doc_offsets[start..=end].iter().map(|&o| o - base).collect();
+    assert_eq!(z.len(), *offsets.last().unwrap(), "z / doc range mismatch");
+    let mut ntd = Vec::with_capacity(end - start);
+    for w in offsets.windows(2) {
+        let zs = &z[w[0]..w[1]];
+        let mut counts = SparseCounts::with_capacity(zs.len().min(t));
+        for &topic in zs {
+            counts.inc(topic);
+        }
+        ntd.push(counts);
+    }
+    (offsets, ntd)
+}
+
+/// Assemble a full state from per-worker doc-range parts — the shared
+/// epoch-boundary gather of every partitioned runtime.  Each part is
+/// `(start_doc, ntd rows, flat z payload)` for one worker's contiguous
+/// document range, borrowed so live workers (the simulators) contribute
+/// without a transient copy of the multi-GB assignment array; the
+/// word-side counts and globals come from wherever the runtime keeps
+/// them authoritative (home tokens, server snapshot, exact fold).
+pub fn assemble_state<'a>(
+    corpus: &Corpus,
+    hyper: Hyper,
+    parts: impl IntoIterator<Item = (usize, &'a [SparseCounts], &'a [u16])>,
+    nwt: Vec<SparseCounts>,
+    nt: Vec<u32>,
+) -> LdaState {
+    let mut z = vec![0u16; corpus.num_tokens()];
+    let mut ntd = vec![SparseCounts::default(); corpus.num_docs()];
+    for (start_doc, worker_ntd, worker_z) in parts {
+        let lo = corpus.doc_offsets[start_doc];
+        z[lo..lo + worker_z.len()].copy_from_slice(worker_z);
+        for (off, counts) in worker_ntd.iter().enumerate() {
+            ntd[start_doc + off] = counts.clone();
+        }
+    }
+    LdaState {
+        hyper,
+        vocab: corpus.vocab,
+        z,
+        doc_offsets: corpus.doc_offsets.clone(),
+        ntd,
+        nwt,
+        nt,
+    }
+}
+
 /// Full Gibbs state for one corpus.
 #[derive(Clone, Debug)]
 pub struct LdaState {
     pub hyper: Hyper,
     pub vocab: usize,
-    /// z[i][j]: topic of the j-th occurrence in doc i
-    pub z: Vec<Vec<u16>>,
+    /// flat CSR assignments: doc i's topics at
+    /// `doc_offsets[i]..doc_offsets[i+1]`, mirroring `Corpus::tokens`
+    pub z: Vec<u16>,
+    /// CSR row offsets, copied from the corpus at construction
+    pub doc_offsets: Vec<usize>,
     /// n_td per document
     pub ntd: Vec<SparseCounts>,
     /// n_wt per word
@@ -140,28 +223,59 @@ impl LdaState {
     /// (the standard CGS start).
     pub fn init_random(corpus: &Corpus, hyper: Hyper, rng: &mut Pcg32) -> LdaState {
         assert!(hyper.t >= 2 && hyper.t <= u16::MAX as usize + 1);
-        let mut z = Vec::with_capacity(corpus.num_docs());
+        let mut z = Vec::with_capacity(corpus.num_tokens());
         let mut ntd = Vec::with_capacity(corpus.num_docs());
         let mut nwt = vec![SparseCounts::default(); corpus.vocab];
         let mut nt = vec![0u32; hyper.t];
-        for doc in &corpus.docs {
-            let mut zs = Vec::with_capacity(doc.len());
+        for doc in corpus.docs() {
             let mut counts = SparseCounts::with_capacity(doc.len().min(hyper.t));
             for &w in doc {
                 let topic = rng.below(hyper.t) as u16;
-                zs.push(topic);
+                z.push(topic);
                 counts.inc(topic);
                 nwt[w as usize].inc(topic);
                 nt[topic as usize] += 1;
             }
-            z.push(zs);
             ntd.push(counts);
         }
-        LdaState { hyper, vocab: corpus.vocab, z, ntd, nwt, nt }
+        LdaState {
+            hyper,
+            vocab: corpus.vocab,
+            z,
+            doc_offsets: corpus.doc_offsets.clone(),
+            ntd,
+            nwt,
+            nt,
+        }
     }
 
     pub fn num_topics(&self) -> usize {
         self.hyper.t
+    }
+
+    /// Number of documents (CSR rows).
+    #[inline]
+    pub fn num_docs(&self) -> usize {
+        self.doc_offsets.len() - 1
+    }
+
+    /// Document i's assignments as a slice.
+    #[inline]
+    pub fn z_doc(&self, i: usize) -> &[u16] {
+        &self.z[self.doc_offsets[i]..self.doc_offsets[i + 1]]
+    }
+
+    /// Document i's assignments, mutable.
+    #[inline]
+    pub fn z_doc_mut(&mut self, i: usize) -> &mut [u16] {
+        &mut self.z[self.doc_offsets[i]..self.doc_offsets[i + 1]]
+    }
+
+    /// The flat z payload of the contiguous doc range [start, end) — what
+    /// a worker owning that range copies at spawn.
+    #[inline]
+    pub fn z_range(&self, start: usize, end: usize) -> &[u16] {
+        &self.z[self.doc_offsets[start]..self.doc_offsets[end]]
     }
 
     pub fn total_tokens(&self) -> u64 {
@@ -174,13 +288,25 @@ impl LdaState {
         let mut ntd = vec![SparseCounts::default(); corpus.num_docs()];
         let mut nwt = vec![SparseCounts::default(); corpus.vocab];
         let mut nt = vec![0u32; self.hyper.t];
-        if self.z.len() != corpus.num_docs() {
-            return Err(format!("z has {} docs, corpus {}", self.z.len(), corpus.num_docs()));
+        if self.num_docs() != corpus.num_docs() {
+            return Err(format!(
+                "z has {} docs, corpus {}",
+                self.num_docs(),
+                corpus.num_docs()
+            ));
         }
-        for (i, (doc, zs)) in corpus.docs.iter().zip(&self.z).enumerate() {
-            if doc.len() != zs.len() {
-                return Err(format!("doc {i}: {} tokens vs {} assignments", doc.len(), zs.len()));
-            }
+        if self.doc_offsets != corpus.doc_offsets {
+            return Err("state doc_offsets diverge from corpus doc_offsets".into());
+        }
+        if self.z.len() != corpus.num_tokens() {
+            return Err(format!(
+                "z has {} assignments, corpus {} tokens",
+                self.z.len(),
+                corpus.num_tokens()
+            ));
+        }
+        for (i, doc) in corpus.docs().enumerate() {
+            let zs = self.z_doc(i);
             for (&w, &topic) in doc.iter().zip(zs) {
                 if topic as usize >= self.hyper.t {
                     return Err(format!("doc {i}: topic {topic} out of range"));
@@ -287,6 +413,18 @@ mod tests {
         let state = LdaState::init_random(&corpus, Hyper::paper_default(16), &mut rng);
         state.check_consistency(&corpus).unwrap();
         assert_eq!(state.total_tokens() as usize, corpus.num_tokens());
+        assert_eq!(state.z.len(), corpus.num_tokens());
+        assert_eq!(state.doc_offsets, corpus.doc_offsets);
+    }
+
+    #[test]
+    fn z_doc_rows_mirror_corpus_rows() {
+        let corpus = preset("tiny").unwrap();
+        let mut rng = Pcg32::seeded(4);
+        let state = LdaState::init_random(&corpus, Hyper::paper_default(8), &mut rng);
+        for i in 0..corpus.num_docs() {
+            assert_eq!(state.z_doc(i).len(), corpus.doc_len(i));
+        }
     }
 
     #[test]
@@ -303,9 +441,20 @@ mod tests {
         let corpus = preset("tiny").unwrap();
         let mut rng = Pcg32::seeded(3);
         let state = LdaState::init_random(&corpus, Hyper::paper_default(16), &mut rng);
-        let p = state.dense_conditional(0, corpus.docs[0][0] as usize);
+        let p = state.dense_conditional(0, corpus.doc(0)[0] as usize);
         assert_eq!(p.len(), 16);
         assert!(p.iter().all(|&x| x > 0.0 && x.is_finite()));
+    }
+
+    #[test]
+    fn checked_totals_roundtrips_nonnegative() {
+        assert_eq!(checked_totals(&[0, 3, 7]), vec![0u32, 3, 7]);
+    }
+
+    #[test]
+    #[should_panic(expected = "state corruption")]
+    fn checked_totals_panics_on_negative() {
+        let _ = checked_totals(&[4, -1, 2]);
     }
 
     #[test]

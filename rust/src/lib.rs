@@ -4,6 +4,11 @@
 //! Topic Modeling"* (Yu, Hsieh, Yun, Vishwanathan, Dhillon — WWW 2015) as a
 //! three-layer Rust + JAX/Pallas + PJRT system:
 //!
+//! * **Corpus substrate** ([`corpus`]): flat CSR token storage — one
+//!   `tokens` array plus `doc_offsets`, shared by the assignment array
+//!   `z`, so millions of documents cost two allocations instead of one
+//!   heap `Vec` per document (see the [`corpus`] module docs for the
+//!   layout invariants).
 //! * **F+tree sampling** ([`sampler::FTree`]): Θ(log T) multinomial
 //!   sampling *and* Θ(log T) parameter maintenance, the data structure that
 //!   makes per-token Gibbs updates cheap at thousands of topics.

@@ -23,7 +23,7 @@ use std::thread::JoinHandle;
 
 use crate::coordinator::EpochReport;
 use crate::corpus::{Corpus, Partition};
-use crate::lda::state::{Hyper, LdaState, SparseCounts};
+use crate::lda::state::{assemble_state, checked_totals, Hyper, LdaState, SparseCounts};
 use crate::util::rng::Pcg32;
 
 use super::token::{GlobalToken, Msg, Reply, WordToken};
@@ -76,7 +76,10 @@ impl NomadRuntime {
     /// distribute documents, park all word tokens at home.
     pub fn from_state(corpus: &Corpus, init: &LdaState, cfg: NomadConfig) -> Self {
         assert!(cfg.workers >= 1);
-        assert_eq!(init.z.len(), corpus.num_docs(), "init state / corpus mismatch");
+        // offsets equality (not just doc count): under the flat layout a
+        // doc-length mismatch would misindex z silently instead of
+        // panicking like the old per-doc rows did
+        assert_eq!(init.doc_offsets, corpus.doc_offsets, "init state / corpus mismatch");
         let hyper = init.hyper;
         let partition = Partition::by_tokens(corpus, cfg.workers);
         // worker streams derive from a different stream id than the init
@@ -84,7 +87,6 @@ impl NomadRuntime {
         let mut seed_rng = Pcg32::new(cfg.seed, 0xAD10);
 
         let s: Vec<i64> = init.nt.iter().map(|&v| v as i64).collect();
-        let all_z = &init.z;
         let home: Vec<WordToken> = init
             .nwt
             .iter()
@@ -105,7 +107,9 @@ impl NomadRuntime {
         let mut handles = Vec::with_capacity(cfg.workers);
         for (l, rx) in receivers.into_iter().enumerate() {
             let (start, end) = partition.ranges[l];
-            let z_slice: Vec<Vec<u16>> = all_z[start..end].to_vec();
+            // one bulk copy of the worker's contiguous CSR rows
+            let z_slice: Vec<u16> =
+                init.z_range(start, end).to_vec();
             let state = WorkerState::new(
                 l,
                 cfg.workers,
@@ -216,23 +220,18 @@ impl NomadRuntime {
     }
 
     /// Assemble the exact global [`LdaState`] (epoch boundaries only).
+    ///
+    /// Panics if the folded global totals contain a negative entry — that
+    /// is count-state corruption, not a value to clamp away.
     pub fn gather_state(&mut self, corpus: &Corpus) -> LdaState {
         // doc-side state from every worker
         for tx in &self.senders {
             tx.send(Msg::ReportDocs).expect("worker hung up");
         }
-        let mut z: Vec<Vec<u16>> = vec![Vec::new(); corpus.num_docs()];
-        let mut ntd: Vec<SparseCounts> = vec![SparseCounts::default(); corpus.num_docs()];
+        let mut parts = Vec::with_capacity(self.cfg.workers);
         for _ in 0..self.cfg.workers {
             match self.replies.recv().expect("reply channel closed") {
-                Reply::Docs { start_doc, ntd: worker_ntd, z: worker_z, .. } => {
-                    for (off, (counts, zs)) in
-                        worker_ntd.into_iter().zip(worker_z).enumerate()
-                    {
-                        ntd[start_doc + off] = counts;
-                        z[start_doc + off] = zs;
-                    }
-                }
+                Reply::Docs { start_doc, ntd, z, .. } => parts.push((start_doc, ntd, z)),
                 other => panic!("expected Docs, got {other:?}"),
             }
         }
@@ -241,8 +240,13 @@ impl NomadRuntime {
         for tok in &self.home {
             nwt[tok.word as usize] = tok.counts.clone();
         }
-        let nt: Vec<u32> = self.s.iter().map(|&v| u32::try_from(v.max(0)).unwrap()).collect();
-        LdaState { hyper: self.hyper, vocab: corpus.vocab, z, ntd, nwt, nt }
+        assemble_state(
+            corpus,
+            self.hyper,
+            parts.iter().map(|(s, n, z)| (*s, n.as_slice(), z.as_slice())),
+            nwt,
+            checked_totals(&self.s),
+        )
     }
 
     /// Total tokens resampled since construction.
@@ -310,6 +314,7 @@ fn worker_loop(
             }
             Msg::SetS(s) => state.set_s(&s),
             Msg::ReportDocs => {
+                // z is already flat — one bulk clone, no per-doc Vecs
                 let _ = reply.send(Reply::Docs {
                     worker: state.id,
                     start_doc: state.start_doc,
@@ -358,6 +363,21 @@ mod tests {
         let state = rt.gather_state(&corpus);
         state.check_consistency(&corpus).unwrap();
         rt.shutdown();
+    }
+
+    #[test]
+    #[should_panic(expected = "state corruption")]
+    fn gather_state_panics_on_negative_total() {
+        let corpus = preset("tiny").unwrap();
+        let mut rt = NomadRuntime::new(&corpus, Hyper::paper_default(8), NomadConfig {
+            workers: 2,
+            seed: 6,
+        });
+        rt.run_epoch();
+        // inject corruption: a negative global total must surface loudly,
+        // not be clamped to zero
+        rt.s[0] = -1;
+        let _ = rt.gather_state(&corpus);
     }
 
     #[test]

@@ -57,6 +57,7 @@ pub enum Reply {
     GlobalDone(GlobalToken),
     /// SyncS answer: accumulated local effort since the last snapshot
     SDelta { worker: usize, delta: Vec<i64>, tokens_processed: u64 },
-    /// ReportDocs answer: sparse doc-topic rows for the worker's range
-    Docs { worker: usize, start_doc: usize, ntd: Vec<SparseCounts>, z: Vec<Vec<u16>> },
+    /// ReportDocs answer: sparse doc-topic rows plus the flat CSR
+    /// assignment payload for the worker's contiguous doc range
+    Docs { worker: usize, start_doc: usize, ntd: Vec<SparseCounts>, z: Vec<u16> },
 }

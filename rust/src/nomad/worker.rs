@@ -1,14 +1,23 @@
 //! Worker-local state and the token-processing kernel (Algorithm 4 body).
 //!
-//! A worker owns a contiguous document range: the assignments `z`, the
-//! doc-topic counts `n_td` for those docs, a local copy `s_l` of the topic
-//! totals, the snapshot `s̄` from the global token's last visit, and an
-//! F+tree over `q_t = (n_tw+β)/(s_l+β̄)` for the word currently being
-//! processed.  The same struct runs under real threads
+//! A worker owns a contiguous document range: the assignments `z` (one
+//! flat per-worker buffer in the corpus's CSR layout, rebased to local
+//! offsets), the doc-topic counts `n_td` for those docs, a local copy
+//! `s_l` of the topic totals, the snapshot `s̄` from the global token's
+//! last visit, and an F+tree over `q_t = (n_tw+β)/(s_l+β̄)` for the word
+//! currently being processed.  The same struct runs under real threads
 //! ([`super::runtime`]) and under virtual time ([`crate::simnet`]).
+//!
+//! [`WorkerState::process_word_token`] — the Algorithm-4 inner loop — is
+//! **allocation-free**: the occurrence slices, the F+tree, the sparse
+//! cumsum `r` and the count rows are all preallocated or owned by the
+//! token, so at steady state (after the first pass has settled the
+//! `SparseCounts`/`SparseCumSum` capacities) no heap allocation happens
+//! per word token (`rust/tests/alloc_free.rs` asserts this with a
+//! counting allocator).
 
 use crate::corpus::Corpus;
-use crate::lda::state::{Hyper, SparseCounts};
+use crate::lda::state::{local_rows, Hyper, SparseCounts};
 use crate::sampler::bsearch::SparseCumSum;
 use crate::sampler::ftree::FTree;
 use crate::sampler::DiscreteSampler;
@@ -28,11 +37,11 @@ impl LocalWordIndex {
     /// Build over the worker's doc range [start, end).
     pub fn build(corpus: &Corpus, start: usize, end: usize) -> Self {
         let vocab = corpus.vocab;
+        let lo = corpus.doc_offsets[start];
+        let hi = corpus.doc_offsets[end];
         let mut counts = vec![0usize; vocab + 1];
-        for doc in &corpus.docs[start..end] {
-            for &w in doc {
-                counts[w as usize + 1] += 1;
-            }
+        for &w in &corpus.tokens[lo..hi] {
+            counts[w as usize + 1] += 1;
         }
         for j in 1..counts.len() {
             counts[j] += counts[j - 1];
@@ -42,7 +51,8 @@ impl LocalWordIndex {
         let mut doc_of = vec![0u32; total];
         let mut pos_of = vec![0u32; total];
         let mut cursor = offsets.clone();
-        for (local, doc) in corpus.docs[start..end].iter().enumerate() {
+        for local in 0..end - start {
+            let doc = corpus.doc(start + local);
             for (p, &w) in doc.iter().enumerate() {
                 let at = cursor[w as usize];
                 doc_of[at] = local as u32;
@@ -73,8 +83,11 @@ pub struct WorkerState {
     pub vocab: usize,
     /// global doc id of local doc 0
     pub start_doc: usize,
-    /// z and n_td for the local docs
-    pub z: Vec<Vec<u16>>,
+    /// flat assignments for the local docs (CSR payload)
+    pub z: Vec<u16>,
+    /// local CSR offsets: local doc d is `z[z_offsets[d]..z_offsets[d+1]]`
+    pub z_offsets: Vec<usize>,
+    /// n_td for the local docs
     pub ntd: Vec<SparseCounts>,
     /// local topic totals s_l (authoritative for this worker's sampling)
     pub s_local: Vec<i64>,
@@ -91,7 +104,8 @@ pub struct WorkerState {
 
 impl WorkerState {
     /// Initialize from a corpus slice with the given initial assignments
-    /// (z rows for [start, end)) and the *global* initial topic totals.
+    /// (the flat z rows for docs [start, end), in CSR order) and the
+    /// *global* initial topic totals.
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         id: usize,
@@ -100,19 +114,11 @@ impl WorkerState {
         hyper: Hyper,
         start: usize,
         end: usize,
-        z: Vec<Vec<u16>>,
+        z: Vec<u16>,
         s_init: Vec<i64>,
         rng: Pcg32,
     ) -> Self {
-        assert_eq!(z.len(), end - start);
-        let mut ntd = Vec::with_capacity(end - start);
-        for zs in &z {
-            let mut counts = SparseCounts::with_capacity(zs.len().min(hyper.t));
-            for &topic in zs {
-                counts.inc(topic);
-            }
-            ntd.push(counts);
-        }
+        let (z_offsets, ntd) = local_rows(corpus, start, end, &z, hyper.t);
         let t = hyper.t;
         let mut w = WorkerState {
             id,
@@ -121,6 +127,7 @@ impl WorkerState {
             vocab: corpus.vocab,
             start_doc: start,
             z,
+            z_offsets,
             ntd,
             s_local: s_init.clone(),
             s_snap: s_init,
@@ -146,80 +153,78 @@ impl WorkerState {
         self.tree.refill(&base);
     }
 
-    #[inline]
-    fn q_value(&self, counts: &SparseCounts, t: u16) -> f64 {
-        let bb = self.hyper.betabar(self.vocab);
-        (counts.get(t) as f64 + self.hyper.beta)
-            / (self.s_local[t as usize].max(0) as f64 + bb)
-    }
-
     /// Execute subtask `t_j` on this worker: resample every local
     /// occurrence of the token's word.  The token's count row is the
     /// authoritative n_wt and is updated in place.  Returns the number of
     /// occurrences processed.
+    ///
+    /// Zero-allocation: the borrow is split across `WorkerState` fields so
+    /// the occurrence slices are read straight out of the index while the
+    /// tree / counts / z are mutated — no `to_vec` copies, no collected
+    /// support vectors.
     pub fn process_word_token(&mut self, tok: &mut WordToken) -> usize {
         let word = tok.word as usize;
         let alpha = self.hyper.alpha;
-        let (docs, poss) = {
-            let (d, p) = self.index.occurrences(word);
-            (d.to_vec(), p.to_vec())
-        };
+        let beta = self.hyper.beta;
+        let bb = self.hyper.betabar(self.vocab);
+        let WorkerState { z, z_offsets, ntd, s_local, tree, r, index, rng, .. } = self;
+        let (docs, poss) = index.occurrences(word);
         if docs.is_empty() {
             return 0;
         }
 
         // raise the tree on the word's support
-        let support: Vec<u16> = tok.counts.iter().map(|(t, _)| t).collect();
-        for &t in &support {
-            let v = self.q_value(&tok.counts, t);
-            self.tree.set(t as usize, v);
+        for (t, c) in tok.counts.iter() {
+            let v = (c as f64 + beta) / (s_local[t as usize].max(0) as f64 + bb);
+            tree.set(t as usize, v);
         }
 
-        for (&doc, &pos) in docs.iter().zip(&poss) {
+        for (&doc, &pos) in docs.iter().zip(poss) {
             let (doc, pos) = (doc as usize, pos as usize);
-            let old = self.z[doc][pos];
+            let zi = z_offsets[doc] + pos;
+            let old = z[zi];
             // remove from the three aggregates (ntd local, row in token,
             // totals in s_l)
-            self.ntd[doc].dec(old);
+            ntd[doc].dec(old);
             tok.counts.dec(old);
-            self.s_local[old as usize] -= 1;
-            let v = self.q_value(&tok.counts, old);
-            self.tree.set(old as usize, v);
+            s_local[old as usize] -= 1;
+            let v = (tok.counts.get(old) as f64 + beta)
+                / (s_local[old as usize].max(0) as f64 + bb);
+            tree.set(old as usize, v);
 
             // sparse r over the doc's support
-            self.r.clear();
-            for (t, c) in self.ntd[doc].iter() {
-                self.r.push(t as u32, c as f64 * self.tree.leaf(t as usize));
+            r.clear();
+            for (t, c) in ntd[doc].iter() {
+                r.push(t as u32, c as f64 * tree.leaf(t as usize));
             }
-            let r_total = self.r.total();
+            let r_total = r.total();
 
-            let u = self.rng.uniform(alpha * self.tree.total() + r_total);
+            let u = rng.uniform(alpha * tree.total() + r_total);
             let new = if u < r_total {
-                self.r.sample(u) as u16
+                r.sample(u) as u16
             } else {
-                self.tree.sample((u - r_total) / alpha) as u16
+                tree.sample((u - r_total) / alpha) as u16
             };
 
-            self.ntd[doc].inc(new);
+            ntd[doc].inc(new);
             tok.counts.inc(new);
-            self.s_local[new as usize] += 1;
-            let v = self.q_value(&tok.counts, new);
-            self.tree.set(new as usize, v);
-            self.z[doc][pos] = new;
+            s_local[new as usize] += 1;
+            let v = (tok.counts.get(new) as f64 + beta)
+                / (s_local[new as usize].max(0) as f64 + bb);
+            tree.set(new as usize, v);
+            z[zi] = new;
         }
 
         // lower back to base on the final support
-        let bb = self.hyper.betabar(self.vocab);
-        let beta = self.hyper.beta;
-        let support: Vec<u16> = tok.counts.iter().map(|(t, _)| t).collect();
-        for &t in &support {
-            self.tree.set(
+        for (t, _) in tok.counts.iter() {
+            tree.set(
                 t as usize,
-                beta / (self.s_local[t as usize].max(0) as f64 + bb),
+                beta / (s_local[t as usize].max(0) as f64 + bb),
             );
         }
-        self.processed += docs.len() as u64;
-        docs.len()
+        let n = docs.len();
+        self.processed += n as u64;
+        n
     }
 
     /// τ_s arrival (Algorithm 4): fold local effort into the token,
@@ -268,20 +273,14 @@ mod tests {
         let hyper = Hyper::paper_default(8);
         let mut rng = Pcg32::seeded(1);
         // single worker owning everything
-        let mut z = Vec::new();
+        let mut z = Vec::with_capacity(corpus.num_tokens());
         let mut nwt = vec![SparseCounts::default(); corpus.vocab];
         let mut s = vec![0i64; hyper.t];
-        for doc in &corpus.docs {
-            let zs: Vec<u16> = doc
-                .iter()
-                .map(|&w| {
-                    let topic = rng.below(hyper.t) as u16;
-                    nwt[w as usize].inc(topic);
-                    s[topic as usize] += 1;
-                    topic
-                })
-                .collect();
-            z.push(zs);
+        for &w in &corpus.tokens {
+            let topic = rng.below(hyper.t) as u16;
+            nwt[w as usize].inc(topic);
+            s[topic as usize] += 1;
+            z.push(topic);
         }
         let worker = WorkerState::new(
             0,
@@ -321,6 +320,22 @@ mod tests {
             }
         }
         assert_eq!(from_tokens, w.s_local);
+    }
+
+    #[test]
+    fn local_offsets_mirror_corpus_rows() {
+        let (corpus, w, _tokens) = setup();
+        assert_eq!(w.z_offsets, corpus.doc_offsets);
+        assert_eq!(w.z.len(), corpus.num_tokens());
+        // ntd rows rebuilt from z rows agree
+        for d in 0..corpus.num_docs() {
+            let row = &w.z[w.z_offsets[d]..w.z_offsets[d + 1]];
+            let mut counts = SparseCounts::default();
+            for &t in row {
+                counts.inc(t);
+            }
+            assert_eq!(&counts, &w.ntd[d], "doc {d}");
+        }
     }
 
     #[test]

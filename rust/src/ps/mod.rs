@@ -27,7 +27,7 @@ use std::thread::JoinHandle;
 
 use crate::coordinator::EpochReport;
 use crate::corpus::{Corpus, Partition};
-use crate::lda::state::{Hyper, LdaState, SparseCounts};
+use crate::lda::state::{assemble_state, checked_totals, Hyper, LdaState};
 use crate::util::rng::Pcg32;
 
 use worker::{PsWorkerMsg, PsWorkerReply, PsWorkerState};
@@ -70,7 +70,8 @@ impl PsRuntime {
     /// the server becomes authoritative for the given counts.
     pub fn from_state(corpus: &Corpus, init: &LdaState, cfg: PsConfig) -> Self {
         assert!(cfg.workers >= 1);
-        assert_eq!(init.z.len(), corpus.num_docs(), "init state / corpus mismatch");
+        // offsets equality (not just doc count) — see NomadRuntime::from_state
+        assert_eq!(init.doc_offsets, corpus.doc_offsets, "init state / corpus mismatch");
         let hyper = init.hyper;
         let partition = Partition::by_tokens(corpus, cfg.workers);
         // worker streams derive from a different stream id than the init
@@ -78,7 +79,6 @@ impl PsRuntime {
         let mut seed_rng = Pcg32::new(cfg.seed, 0xA9A9);
 
         let nt: Vec<i64> = init.nt.iter().map(|&v| v as i64).collect();
-        let all_z = &init.z;
         let server = Arc::new(PsServer::new(init.nwt.clone(), nt));
 
         let (reply_tx, replies) = channel();
@@ -94,7 +94,7 @@ impl PsRuntime {
                 hyper,
                 start,
                 end,
-                all_z[start..end].to_vec(),
+                init.z_range(start, end).to_vec(),
                 cfg.batch_docs,
                 seed_rng.split(l as u64 + 1),
             );
@@ -143,26 +143,30 @@ impl PsRuntime {
     }
 
     /// Exact global state (between epochs the server is authoritative).
+    ///
+    /// Panics if the server totals contain a negative entry — that is
+    /// count-state corruption, not a value to clamp away.
     pub fn gather_state(&mut self, corpus: &Corpus) -> LdaState {
         for tx in &self.senders {
             tx.send(PsWorkerMsg::ReportDocs).expect("ps worker hung up");
         }
-        let mut z: Vec<Vec<u16>> = vec![Vec::new(); corpus.num_docs()];
-        let mut ntd: Vec<SparseCounts> = vec![SparseCounts::default(); corpus.num_docs()];
+        let mut parts = Vec::with_capacity(self.cfg.workers);
         for _ in 0..self.cfg.workers {
             match self.replies.recv().expect("ps reply channel closed") {
-                PsWorkerReply::Docs { start_doc, ntd: wn, z: wz, .. } => {
-                    for (off, (counts, zs)) in wn.into_iter().zip(wz).enumerate() {
-                        ntd[start_doc + off] = counts;
-                        z[start_doc + off] = zs;
-                    }
+                PsWorkerReply::Docs { start_doc, ntd, z, .. } => {
+                    parts.push((start_doc, ntd, z));
                 }
                 other => panic!("expected Docs, got {other:?}"),
             }
         }
         let (nwt, nt) = self.server.snapshot();
-        let nt: Vec<u32> = nt.iter().map(|&v| u32::try_from(v.max(0)).unwrap()).collect();
-        LdaState { hyper: self.hyper, vocab: corpus.vocab, z, ntd, nwt, nt }
+        assemble_state(
+            corpus,
+            self.hyper,
+            parts.iter().map(|(s, n, z)| (*s, n.as_slice(), z.as_slice())),
+            nwt,
+            checked_totals(&nt),
+        )
     }
 
     pub fn shutdown(&mut self) {

@@ -11,7 +11,7 @@ use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
 use crate::corpus::Corpus;
-use crate::lda::state::{Hyper, SparseCounts};
+use crate::lda::state::{local_rows, Hyper, SparseCounts};
 use crate::sampler::bsearch::SparseCumSum;
 use crate::sampler::ftree::FTree;
 use crate::sampler::DiscreteSampler;
@@ -58,18 +58,22 @@ pub enum PsWorkerMsg {
 #[derive(Debug)]
 pub enum PsWorkerReply {
     EpochDone { worker: usize, processed: u64, server_ops: u64, pulls: u64 },
-    Docs { worker: usize, start_doc: usize, ntd: Vec<SparseCounts>, z: Vec<Vec<u16>> },
+    /// flat CSR assignment payload for the worker's contiguous doc range
+    Docs { worker: usize, start_doc: usize, ntd: Vec<SparseCounts>, z: Vec<u16> },
 }
 
-/// Worker-local state.
+/// Worker-local state.  Documents and assignments are stored flat in the
+/// corpus's CSR layout, rebased to local offsets (see [`crate::corpus`]).
 pub struct PsWorkerState {
     pub id: usize,
     hyper: Hyper,
     vocab: usize,
     start_doc: usize,
-    /// the worker's documents as word-id lists
-    docs: Vec<Vec<u32>>,
-    z: Vec<Vec<u16>>,
+    /// the worker's tokens, documents back to back (CSR payload)
+    tokens: Vec<u32>,
+    /// local doc d is `tokens[offsets[d]..offsets[d+1]]` (and same for z)
+    offsets: Vec<usize>,
+    z: Vec<u16>,
     ntd: Vec<SparseCounts>,
     batch_docs: usize,
     rng: Pcg32,
@@ -85,25 +89,20 @@ impl PsWorkerState {
         hyper: Hyper,
         start: usize,
         end: usize,
-        z: Vec<Vec<u16>>,
+        z: Vec<u16>,
         batch_docs: usize,
         rng: Pcg32,
     ) -> Self {
-        let mut ntd = Vec::with_capacity(end - start);
-        for zs in &z {
-            let mut counts = SparseCounts::with_capacity(zs.len().min(hyper.t));
-            for &t in zs {
-                counts.inc(t);
-            }
-            ntd.push(counts);
-        }
+        let (offsets, ntd) = local_rows(corpus, start, end, &z, hyper.t);
+        let base = corpus.doc_offsets[start];
         let t = hyper.t;
         PsWorkerState {
             id,
             hyper,
             vocab: corpus.vocab,
             start_doc: start,
-            docs: corpus.docs[start..end].to_vec(),
+            tokens: corpus.tokens[base..corpus.doc_offsets[end]].to_vec(),
+            offsets,
             z,
             ntd,
             batch_docs: batch_docs.max(1),
@@ -118,7 +117,8 @@ impl PsWorkerState {
         &self.ntd
     }
 
-    pub fn z_rows(&self) -> &[Vec<u16>] {
+    /// Flat assignment payload for the worker's contiguous doc range.
+    pub fn z_flat(&self) -> &[u16] {
         &self.z
     }
 
@@ -126,33 +126,36 @@ impl PsWorkerState {
         self.start_doc
     }
 
+    fn num_docs(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
     /// Number of pull/compute/push batches per epoch.
     pub fn num_batches(&self) -> usize {
-        self.docs.len().div_ceil(self.batch_docs)
+        self.num_docs().div_ceil(self.batch_docs)
     }
 
     /// Doc range of batch `b`.
     fn batch_range(&self, b: usize) -> (usize, usize) {
         let start = b * self.batch_docs;
-        (start, (start + self.batch_docs).min(self.docs.len()))
+        (start, (start + self.batch_docs).min(self.num_docs()))
     }
 
     /// The sorted-unique word set of batch `b` (the PULL request).
     pub fn batch_words(&self, b: usize) -> Vec<u32> {
         let (start, end) = self.batch_range(b);
-        let mut words: Vec<u32> = self.docs[start..end]
-            .iter()
-            .flat_map(|d| d.iter().copied())
-            .collect();
+        // contiguous docs → one contiguous token slice
+        let mut words: Vec<u32> =
+            self.tokens[self.offsets[start]..self.offsets[end]].to_vec();
         words.sort_unstable();
         words.dedup();
         words
     }
 
-    /// Tokens in batch `b` (simulator cost-model input).
+    /// Tokens in batch `b` (simulator cost-model input; O(1) under CSR).
     pub fn batch_tokens(&self, b: usize) -> usize {
         let (start, end) = self.batch_range(b);
-        self.docs[start..end].iter().map(|d| d.len()).sum()
+        self.offsets[end] - self.offsets[start]
     }
 
     /// One pass over the partition; returns tokens processed.
@@ -204,10 +207,11 @@ impl PsWorkerState {
                 self.tree.set(t as usize, q);
             }
 
-            for pos in 0..self.docs[doc].len() {
-                let word = self.docs[doc][pos];
+            let row = self.offsets[doc];
+            for pos in 0..self.offsets[doc + 1] - row {
+                let word = self.tokens[row + pos];
                 let wp = word_pos(word);
-                let old = self.z[doc][pos];
+                let old = self.z[row + pos];
 
                 // remove from cached view + record deltas
                 self.ntd[doc].dec(old);
@@ -242,7 +246,7 @@ impl PsWorkerState {
                 let q = (self.ntd[doc].get(new) as f64 + h.alpha)
                     / (nt_cache[new as usize].max(0) as f64 + bb);
                 self.tree.set(new as usize, q);
-                self.z[doc][pos] = new;
+                self.z[row + pos] = new;
                 processed += 1;
             }
 

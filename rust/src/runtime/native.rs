@@ -170,7 +170,7 @@ mod tests {
         let mut ntd = vec![0f32; PROB_BATCH * t];
         let mut ntw = vec![0f32; PROB_BATCH * t];
         let mut sites = Vec::new();
-        'outer: for (doc, tokens) in corpus.docs.iter().enumerate() {
+        'outer: for (doc, tokens) in corpus.docs().enumerate() {
             for &w in tokens {
                 let b = sites.len();
                 for k in 0..t {

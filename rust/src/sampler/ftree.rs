@@ -74,9 +74,18 @@ impl FTree {
     }
 
     /// Algorithm 2: bottom-up delta propagation, Θ(log T).
+    ///
+    /// The bound check is a real `assert!`, not a `debug_assert!`: in a
+    /// release build an out-of-range `t` in `self.len..self.size` would
+    /// silently write mass into a padding leaf and corrupt the normalizer
+    /// `F[1]` — and the Θ(log T) walk dwarfs one predictable branch.
     #[inline]
     pub fn add(&mut self, t: usize, delta: f64) {
-        debug_assert!(t < self.len);
+        assert!(
+            t < self.len,
+            "FTree index {t} out of range (len {})",
+            self.len
+        );
         let mut i = self.size + t;
         while i >= 1 {
             self.f[i] += delta;
@@ -258,6 +267,22 @@ mod tests {
         t.refill(&[1.0; 10]);
         assert_eq!(t.len(), 10);
         assert!((t.total() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_update_panics_in_release_too() {
+        // len 3 pads to size 4: index 3 is a padding leaf — writing there
+        // would corrupt F[1] if the guard were debug-only
+        let mut t = FTree::build(&[1.0, 2.0, 3.0]);
+        t.set(3, 0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_add_panics() {
+        let mut t = FTree::build(&[1.0, 2.0, 3.0]);
+        t.add(7, 0.1);
     }
 
     #[test]

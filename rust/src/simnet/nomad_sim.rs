@@ -13,7 +13,7 @@ use std::collections::VecDeque;
 
 use crate::coordinator::EpochReport;
 use crate::corpus::{Corpus, Partition};
-use crate::lda::state::{Hyper, LdaState, SparseCounts};
+use crate::lda::state::{assemble_state, checked_totals, Hyper, LdaState, SparseCounts};
 use crate::nomad::token::{GlobalToken, WordToken};
 use crate::nomad::worker::WorkerState;
 use crate::util::rng::Pcg32;
@@ -81,7 +81,8 @@ impl NomadSim {
     pub fn from_state(corpus: &Corpus, init: &LdaState, cfg: NomadSimConfig) -> Self {
         let p = cfg.cluster.total_workers();
         assert!(p >= 1);
-        assert_eq!(init.z.len(), corpus.num_docs(), "init state / corpus mismatch");
+        // offsets equality (not just doc count) — see NomadRuntime::from_state
+        assert_eq!(init.doc_offsets, corpus.doc_offsets, "init state / corpus mismatch");
         let hyper = init.hyper;
         let partition = Partition::by_tokens(corpus, p);
         // worker streams derive from a different stream id than the init
@@ -89,7 +90,6 @@ impl NomadSim {
         let mut seed_rng = Pcg32::new(cfg.seed, 0xAD51);
 
         let s: Vec<i64> = init.nt.iter().map(|&v| v as i64).collect();
-        let all_z = &init.z;
         let home: Vec<WordToken> = init
             .nwt
             .iter()
@@ -108,7 +108,7 @@ impl NomadSim {
                 hyper,
                 start,
                 end,
-                all_z[start..end].to_vec(),
+                init.z_range(start, end).to_vec(),
                 s.clone(),
                 seed_rng.split(l as u64 + 1),
             ));
@@ -273,21 +273,19 @@ impl NomadSim {
     }
 
     /// Assemble the exact global state (epoch boundaries only).
+    ///
+    /// Panics if the folded global totals contain a negative entry — that
+    /// is count-state corruption, not a value to clamp away.
     pub fn gather_state(&mut self, corpus: &Corpus) -> LdaState {
-        let mut z: Vec<Vec<u16>> = vec![Vec::new(); corpus.num_docs()];
-        let mut ntd: Vec<SparseCounts> = vec![SparseCounts::default(); corpus.num_docs()];
-        for w in &self.workers {
-            for (off, (counts, zs)) in w.ntd.iter().zip(&w.z).enumerate() {
-                ntd[w.start_doc + off] = counts.clone();
-                z[w.start_doc + off] = zs.clone();
-            }
-        }
+        let parts = self
+            .workers
+            .iter()
+            .map(|w| (w.start_doc, w.ntd.as_slice(), w.z.as_slice()));
         let mut nwt = vec![SparseCounts::default(); corpus.vocab];
         for tok in &self.home {
             nwt[tok.word as usize] = tok.counts.clone();
         }
-        let nt: Vec<u32> = self.s.iter().map(|&v| u32::try_from(v.max(0)).unwrap()).collect();
-        LdaState { hyper: self.hyper, vocab: corpus.vocab, z, ntd, nwt, nt }
+        assemble_state(corpus, self.hyper, parts, nwt, checked_totals(&self.s))
     }
 }
 
@@ -336,6 +334,16 @@ mod tests {
             t8 * 3.0 < t1,
             "8 workers should be >3x faster in virtual time: t1={t1} t8={t8}"
         );
+    }
+
+    #[test]
+    #[should_panic(expected = "state corruption")]
+    fn gather_state_panics_on_negative_total() {
+        let corpus = preset("tiny").unwrap();
+        let mut s = sim(&corpus, 2, 5);
+        s.run_epoch();
+        s.s[3] = -2;
+        let _ = s.gather_state(&corpus);
     }
 
     #[test]

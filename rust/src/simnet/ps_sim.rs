@@ -12,7 +12,7 @@
 
 use crate::coordinator::EpochReport;
 use crate::corpus::{Corpus, Partition};
-use crate::lda::state::{Hyper, LdaState, SparseCounts};
+use crate::lda::state::{assemble_state, checked_totals, Hyper, LdaState, SparseCounts};
 use crate::ps::worker::PsWorkerState;
 use crate::util::rng::Pcg32;
 
@@ -66,7 +66,6 @@ pub struct PsSim {
     shard_busy: Vec<u64>,
     cfg: PsSimConfig,
     hyper: Hyper,
-    vocab: usize,
     now: u64,
     pub epochs_run: usize,
     processed_total: u64,
@@ -87,7 +86,8 @@ impl PsSim {
     /// Build from explicit initial assignments (the resume path).
     pub fn from_state(corpus: &Corpus, init: &LdaState, cfg: PsSimConfig) -> Self {
         let p = cfg.cluster.total_workers();
-        assert_eq!(init.z.len(), corpus.num_docs(), "init state / corpus mismatch");
+        // offsets equality (not just doc count) — see NomadRuntime::from_state
+        assert_eq!(init.doc_offsets, corpus.doc_offsets, "init state / corpus mismatch");
         let hyper = init.hyper;
         let partition = Partition::by_tokens(corpus, p);
         // worker streams derive from a different stream id than the init
@@ -96,7 +96,6 @@ impl PsSim {
 
         let nwt = init.nwt.clone();
         let nt: Vec<i64> = init.nt.iter().map(|&v| v as i64).collect();
-        let all_z = &init.z;
 
         let mut workers = Vec::with_capacity(p);
         for l in 0..p {
@@ -107,7 +106,7 @@ impl PsSim {
                 hyper,
                 start,
                 end,
-                all_z[start..end].to_vec(),
+                init.z_range(start, end).to_vec(),
                 cfg.batch_docs,
                 seed_rng.split(l as u64 + 1),
             ));
@@ -125,7 +124,6 @@ impl PsSim {
             shard_busy: vec![0; shards],
             cfg,
             hyper,
-            vocab: corpus.vocab,
             now: 0,
             epochs_run: 0,
             processed_total: 0,
@@ -337,24 +335,15 @@ impl PsSim {
     }
 
     /// Exact global state at epoch boundaries.
+    ///
+    /// Panics if the server totals contain a negative entry — that is
+    /// count-state corruption, not a value to clamp away.
     pub fn gather_state(&mut self, corpus: &Corpus) -> LdaState {
-        let mut z: Vec<Vec<u16>> = vec![Vec::new(); corpus.num_docs()];
-        let mut ntd: Vec<SparseCounts> = vec![SparseCounts::default(); corpus.num_docs()];
-        for w in &self.workers {
-            for (off, (counts, zs)) in w.ntd_rows().iter().zip(w.z_rows()).enumerate() {
-                ntd[w.start_doc() + off] = counts.clone();
-                z[w.start_doc() + off] = zs.clone();
-            }
-        }
-        let nt: Vec<u32> = self.nt.iter().map(|&v| u32::try_from(v.max(0)).unwrap()).collect();
-        LdaState {
-            hyper: self.hyper,
-            vocab: self.vocab,
-            z,
-            ntd,
-            nwt: self.nwt.clone(),
-            nt,
-        }
+        let parts = self
+            .workers
+            .iter()
+            .map(|w| (w.start_doc(), w.ntd_rows(), w.z_flat()));
+        assemble_state(corpus, self.hyper, parts, self.nwt.clone(), checked_totals(&self.nt))
     }
 }
 

@@ -1,0 +1,121 @@
+//! Allocation-freedom of the Nomad Algorithm-4 inner loop.
+//!
+//! A counting global allocator wraps the system allocator.  After a warmup
+//! epoch has settled every reusable capacity (the F+tree, the sparse
+//! cumsum scratch, the `SparseCounts` rows), re-processing the full word
+//! token set through [`WorkerState::process_word_token`] must perform
+//! **zero** heap allocations — the property that makes the hot path run
+//! at memory bandwidth instead of allocator throughput.
+//!
+//! This file intentionally holds a single test: the counter is
+//! thread-local (each libtest test runs on its own thread, so concurrent
+//! tests cannot pollute the measurement), and keeping the binary minimal
+//! keeps the measurement honest.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use fnomad_lda::corpus::presets::preset;
+use fnomad_lda::lda::state::{Hyper, SparseCounts};
+use fnomad_lda::nomad::token::WordToken;
+use fnomad_lda::nomad::worker::WorkerState;
+use fnomad_lda::util::rng::Pcg32;
+
+struct CountingAlloc;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn alloc_count() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+#[inline]
+fn bump() {
+    // try_with: never panic inside the allocator (TLS teardown)
+    let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+#[test]
+fn process_word_token_is_allocation_free_at_steady_state() {
+    let corpus = preset("tiny").unwrap();
+    let hyper = Hyper::paper_default(8);
+
+    // single worker owning the whole corpus; flat CSR z + word tokens
+    let mut rng = Pcg32::seeded(1);
+    let mut z: Vec<u16> = Vec::with_capacity(corpus.num_tokens());
+    let mut nwt: Vec<SparseCounts> =
+        (0..corpus.vocab).map(|_| SparseCounts::with_capacity(hyper.t)).collect();
+    let mut s = vec![0i64; hyper.t];
+    for &w in &corpus.tokens {
+        let topic = rng.below(hyper.t) as u16;
+        nwt[w as usize].inc(topic);
+        s[topic as usize] += 1;
+        z.push(topic);
+    }
+    let mut worker = WorkerState::new(
+        0,
+        1,
+        &corpus,
+        hyper,
+        0,
+        corpus.num_docs(),
+        z,
+        s,
+        Pcg32::seeded(2),
+    );
+    let mut tokens: Vec<WordToken> = nwt
+        .into_iter()
+        .enumerate()
+        .map(|(w, c)| WordToken::new(w as u32, c))
+        .collect();
+
+    // warmup: two full epochs settle every reusable capacity (ntd rows
+    // were created with doc-length capacity; token rows were preallocated
+    // at T; the cumsum scratch grows to the max doc support once)
+    for _ in 0..2 {
+        for tok in tokens.iter_mut() {
+            worker.process_word_token(tok);
+        }
+    }
+
+    // measured epoch: the Algorithm-4 inner loop must not allocate
+    let before = alloc_count();
+    let mut processed = 0usize;
+    for tok in tokens.iter_mut() {
+        processed += worker.process_word_token(tok);
+    }
+    let after = alloc_count();
+    assert_eq!(processed, corpus.num_tokens(), "epoch did not cover the corpus");
+    assert_eq!(
+        after - before,
+        0,
+        "process_word_token allocated {} times during a steady-state epoch",
+        after - before
+    );
+}

@@ -147,6 +147,65 @@ fn resume_continues_from_saved_checkpoint() {
 }
 
 #[test]
+fn resume_rejects_topic_mismatch() {
+    // `train --resume --topics 512` against a T=1024 checkpoint must be a
+    // loud error, not a silent override of the requested topic count
+    let dir = std::env::temp_dir().join("fnomad_engine_api_t_mismatch");
+    let ckpt = dir.join("model.ckpt");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    train(&tiny(RuntimeKind::Serial).iters(1).checkpoint(ckpt.clone())).unwrap();
+    let err = train(
+        &tiny(RuntimeKind::Serial).topics(16).iters(1).checkpoint(ckpt.clone()).resume(true),
+    )
+    .unwrap_err();
+    assert!(err.contains("T=8"), "error must name the checkpoint T: {err}");
+    assert!(err.contains("T=16"), "error must name the requested T: {err}");
+    // the matching topic count still resumes
+    train(&tiny(RuntimeKind::Serial).iters(1).checkpoint(ckpt.clone()).resume(true)).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Replay the resume scenario twice end to end and require *bit-identical*
+/// observations: LL trajectories, checkpoint bytes, and final
+/// assignments.  This is the observation-equivalence gate for the
+/// flat-CSR layout — any layout or IO change that perturbs RNG streams,
+/// sampling order, or the FNLDA001 byte format shows up here as a hard
+/// inequality.  The second leg resumes onto the virtual-time nomad
+/// runtime (deterministic by construction; the threaded runtime's token
+/// interleaving is scheduler-dependent, so it is covered by the LL-parity
+/// tests instead).
+#[test]
+fn replayed_resume_scenario_is_bit_identical() {
+    let run = |tag: &str| {
+        let dir = std::env::temp_dir().join(format!("fnomad_engine_api_replay_{tag}"));
+        let ckpt = dir.join("model.ckpt");
+        let _ = std::fs::remove_dir_all(&dir);
+        let first =
+            train(&tiny(RuntimeKind::Serial).iters(2).checkpoint(ckpt.clone())).unwrap();
+        let bytes = std::fs::read(&ckpt).unwrap();
+        let second = train(
+            &tiny(RuntimeKind::NomadSim).iters(2).checkpoint(ckpt.clone()).resume(true),
+        )
+        .unwrap();
+        let lls: Vec<f64> = first
+            .ll_vs_iter
+            .points
+            .iter()
+            .chain(second.ll_vs_iter.points.iter())
+            .map(|&(_, y)| y)
+            .collect();
+        let _ = std::fs::remove_dir_all(&dir);
+        (lls, bytes, second.final_state.z)
+    };
+    let (ll_a, bytes_a, z_a) = run("a");
+    let (ll_b, bytes_b, z_b) = run("b");
+    assert_eq!(ll_a, ll_b, "LL trajectory not replayable bit-for-bit");
+    assert_eq!(bytes_a, bytes_b, "checkpoint bytes not replayable");
+    assert_eq!(z_a, z_b, "final assignments not replayable");
+}
+
+#[test]
 fn resume_works_on_a_distributed_runtime() {
     // the from_state path: a checkpoint taken under one runtime seeds
     // another (serial -> threaded nomad), and the state stays consistent

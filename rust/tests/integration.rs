@@ -33,11 +33,12 @@ fn exact_samplers_match_dense_conditional_at_single_site() {
     let mut rng = Pcg32::seeded(0x5175);
     let state0 = LdaState::init_random(&corpus, hyper, &mut rng);
 
-    // target: conditional for token (doc 0, pos 0) with itself removed
+    // target: conditional for token (doc 0, pos 0) with itself removed;
+    // under the flat CSR layout that token is z[0]
     let doc = 0usize;
-    let word = corpus.docs[0][0] as usize;
+    let word = corpus.doc(0)[0] as usize;
     let mut removed = state0.clone();
-    let old = removed.z[0][0];
+    let old = removed.z[0];
     removed.ntd[doc].dec(old);
     removed.nwt[word].dec(old);
     removed.nt[old as usize] -= 1;
@@ -56,7 +57,7 @@ fn exact_samplers_match_dense_conditional_at_single_site() {
             let mut state = state0.clone();
             let mut sampler = lda::by_name(name, &state, &corpus).unwrap();
             sampler.sweep(&mut state, &corpus, &mut rng);
-            counts[state.z[0][0] as usize] += 1;
+            counts[state.z[0] as usize] += 1;
         }
         // doc-major samplers resample token (0,0) FIRST, so its
         // distribution is exactly the conditional above; flda-word visits
