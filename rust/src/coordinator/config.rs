@@ -206,6 +206,9 @@ pub struct TrainConfig {
     pub sampler: SamplerKind,
     pub runtime: RuntimeKind,
     pub workers: usize,
+    /// `host:port` of `serve-worker` processes to splice into the ring
+    /// after the local threads ([`RuntimeKind::Nomad`] only)
+    pub remote: Vec<String>,
     /// simulated machines (sim runtimes; workers = machines × 20 when > 1)
     pub machines: usize,
     pub iters: usize,
@@ -239,6 +242,7 @@ impl Default for TrainConfig {
             sampler: SamplerKind::FLdaWord,
             runtime: RuntimeKind::Serial,
             workers: 2,
+            remote: Vec::new(),
             machines: 1,
             iters: 10,
             seed: 0,
@@ -279,6 +283,11 @@ impl TrainConfig {
 
     pub fn workers(mut self, p: usize) -> Self {
         self.workers = p;
+        self
+    }
+
+    pub fn remote(mut self, addrs: Vec<String>) -> Self {
+        self.remote = addrs;
         self
     }
 
@@ -347,7 +356,29 @@ impl TrainConfig {
         self
     }
 
-    /// Figure/progress label, e.g. `flda-word-tiny` or `nomad-p4-enron-sim`.
+    /// Validate cross-field constraints the type system cannot express.
+    /// Called once by the driver, so CLI and library users both get a
+    /// proper error (never a worker-runtime assertion) for e.g.
+    /// `--workers 0`.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.remote.is_empty() && self.runtime != RuntimeKind::Nomad {
+            return Err(format!("--remote requires --runtime nomad (got '{}')", self.runtime));
+        }
+        // serial ignores workers entirely; every other runtime spawns them
+        let needs_workers = self.runtime != RuntimeKind::Serial;
+        let fully_remote = self.runtime == RuntimeKind::Nomad && !self.remote.is_empty();
+        if needs_workers && self.workers == 0 && !fully_remote {
+            return Err(format!(
+                "--workers must be at least 1 to run '{}' (only a nomad ring with \
+                 --remote workers can run with 0 local threads)",
+                self.runtime
+            ));
+        }
+        Ok(())
+    }
+
+    /// Figure/progress label, e.g. `flda-word-tiny`, `nomad-p4-enron-sim`,
+    /// or `nomad-p1+r2-tiny` for a mixed local/remote ring.
     pub fn label(&self) -> String {
         match self.runtime {
             RuntimeKind::Serial => format!("{}-{}", self.sampler, self.preset),
@@ -359,8 +390,13 @@ impl TrainConfig {
                 if self.disk { "-disk" } else { "" }
             ),
             rt => format!(
-                "{rt}-p{}-{}{}",
+                "{rt}-p{}{}-{}{}",
                 self.workers,
+                if self.remote.is_empty() {
+                    String::new()
+                } else {
+                    format!("+r{}", self.remote.len())
+                },
                 self.preset,
                 if self.disk { "-disk" } else { "" }
             ),
@@ -406,12 +442,42 @@ mod tests {
     }
 
     #[test]
+    fn validate_rejects_zero_workers_and_misplaced_remote() {
+        // serial never reads workers, so 0 stays legal there
+        TrainConfig::preset("tiny").workers(0).validate().unwrap();
+        let err = TrainConfig::preset("tiny")
+            .runtime(RuntimeKind::Nomad)
+            .workers(0)
+            .validate()
+            .unwrap_err();
+        assert!(err.contains("--workers"), "error must name the flag: {err}");
+        let err = TrainConfig::preset("tiny")
+            .remote(vec!["127.0.0.1:7777".into()])
+            .validate()
+            .unwrap_err();
+        assert!(err.contains("--remote"), "error must name the flag: {err}");
+        // a fully-remote nomad ring is the one legitimate workers == 0
+        TrainConfig::preset("tiny")
+            .runtime(RuntimeKind::Nomad)
+            .workers(0)
+            .remote(vec!["127.0.0.1:7777".into()])
+            .validate()
+            .unwrap();
+        TrainConfig::preset("tiny").validate().unwrap();
+    }
+
+    #[test]
     fn builder_chains_and_labels() {
         let cfg = TrainConfig::preset("enron-sim")
             .runtime(RuntimeKind::Nomad)
             .workers(4)
             .topics(64);
         assert_eq!(cfg.label(), "nomad-p4-enron-sim");
+        let mixed = TrainConfig::preset("tiny")
+            .runtime(RuntimeKind::Nomad)
+            .workers(1)
+            .remote(vec!["a:1".into(), "b:2".into()]);
+        assert_eq!(mixed.label(), "nomad-p1+r2-tiny");
         let serial = TrainConfig::preset("tiny").sampler(SamplerKind::Plain);
         assert_eq!(serial.label(), "plain-tiny");
         let sim = TrainConfig::preset("tiny")

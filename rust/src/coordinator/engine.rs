@@ -2,11 +2,11 @@
 //!
 //! [`TrainEngine`] is the contract between the single driver loop in
 //! [`super::train_with`] and the six execution backends (serial sweeps,
-//! threaded Nomad, threaded parameter server, bulk-synchronous AD-LDA, and
-//! the two virtual-time simulators).  A future runtime — e.g. multi-machine
-//! nomad over real sockets — implements this trait and the whole
-//! coordinator surface (observers, checkpoints, CSV series, CLI) comes for
-//! free.
+//! threaded Nomad — which also drives mixed local/remote rings over TCP
+//! via `TrainConfig::remote` — threaded parameter server, bulk-synchronous
+//! AD-LDA, and the two virtual-time simulators).  A new runtime implements
+//! this trait and the whole coordinator surface (observers, checkpoints,
+//! CSV series, CLI) comes for free.
 //!
 //! All engines are built from an explicit initial [`LdaState`]
 //! ([`make_engine`]), which is how `--resume` works uniformly: the driver
@@ -221,8 +221,13 @@ pub fn make_engine<'c>(
             Box::new(SerialEngine::from_state(corpus, init, cfg.sampler, cfg.seed))
         }
         RuntimeKind::Nomad => {
-            let rt_cfg = NomadConfig { workers: cfg.workers, seed: cfg.seed };
-            Box::new(NomadRuntime::from_state(corpus, &init, rt_cfg))
+            let rt_cfg = NomadConfig {
+                workers: cfg.workers,
+                seed: cfg.seed,
+                remote: cfg.remote.clone(),
+            };
+            // fallible: remote slots dial out over TCP at construction
+            Box::new(NomadRuntime::try_from_state(corpus, &init, rt_cfg)?)
         }
         RuntimeKind::Ps => {
             let rt_cfg = PsConfig {

@@ -100,6 +100,7 @@ pub fn train_with(
     cfg: &TrainConfig,
     extra: &mut [&mut dyn TrainObserver],
 ) -> Result<TrainResult, String> {
+    cfg.validate()?;
     if (cfg.resume || cfg.save_every > 0) && cfg.checkpoint.is_none() {
         return Err("--resume/--save-every require --checkpoint PATH".into());
     }

@@ -53,12 +53,22 @@ impl Partition {
         self.ranges.len()
     }
 
-    /// Which worker owns doc `i`.
+    /// Which worker owns doc `i` — O(log workers) binary search over the
+    /// sorted range starts.
+    ///
+    /// The ranges are contiguous and ordered, so the last range whose
+    /// start is `<= doc` is the only candidate that can contain it (empty
+    /// ranges share a start with their successor but contain nothing, and
+    /// a doc they "start at" is always owned by a later non-empty range).
     pub fn owner_of(&self, doc: usize) -> usize {
-        self.ranges
-            .iter()
-            .position(|&(s, e)| doc >= s && doc < e)
-            .expect("doc not covered by partition")
+        let idx = self
+            .ranges
+            .partition_point(|&(s, _)| s <= doc)
+            .checked_sub(1)
+            .expect("doc not covered by partition");
+        let (s, e) = self.ranges[idx];
+        assert!(doc >= s && doc < e, "doc not covered by partition");
+        idx
     }
 
     /// Token mass per worker (O(1) per range under CSR).
@@ -155,5 +165,42 @@ mod tests {
             let p = Partition::by_tokens(&c, workers);
             p.validate(&c).map_err(|e| format!("n={n} w={workers}: {e}"))
         });
+    }
+
+    #[test]
+    fn owner_of_matches_linear_scan() {
+        // the binary search must agree with the O(workers) scan it
+        // replaced for every doc, including partitions with empty
+        // trailing ranges (more workers than docs)
+        check("owner_of == linear scan", 24, |rng| {
+            let n = 1 + rng.below(200);
+            let workers = 1 + rng.below(24);
+            let c = corpus(n, rng.next_u64());
+            let p = Partition::by_tokens(&c, workers);
+            for doc in 0..c.num_docs() {
+                let linear = p
+                    .ranges
+                    .iter()
+                    .position(|&(s, e)| doc >= s && doc < e)
+                    .ok_or_else(|| format!("doc {doc} uncovered (n={n} w={workers})"))?;
+                let fast = p.owner_of(doc);
+                if fast != linear {
+                    return Err(format!(
+                        "doc {doc}: owner_of {fast} != linear {linear} \
+                         (n={n} w={workers} ranges={:?})",
+                        p.ranges
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "doc not covered by partition")]
+    fn owner_of_panics_past_the_last_doc() {
+        let c = corpus(10, 4);
+        let p = Partition::by_tokens(&c, 3);
+        let _ = p.owner_of(c.num_docs());
     }
 }

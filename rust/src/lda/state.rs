@@ -50,6 +50,25 @@ impl SparseCounts {
         SparseCounts { pairs: Vec::with_capacity(cap) }
     }
 
+    /// Build from already-sorted `(topic, count)` pairs — the wire-decode
+    /// path.  Topics must be strictly increasing and counts nonzero (the
+    /// invariants every other constructor maintains incrementally); a
+    /// violating input is a decode error, never a silently-broken row.
+    pub fn from_sorted_pairs(pairs: Vec<(u16, u32)>) -> Result<Self, String> {
+        for w in pairs.windows(2) {
+            if w[1].0 <= w[0].0 {
+                return Err(format!(
+                    "sparse row topics not strictly increasing: {} then {}",
+                    w[0].0, w[1].0
+                ));
+            }
+        }
+        if let Some(&(t, _)) = pairs.iter().find(|&&(_, c)| c == 0) {
+            return Err(format!("sparse row has a zero count at topic {t}"));
+        }
+        Ok(SparseCounts { pairs })
+    }
+
     #[inline]
     pub fn get(&self, topic: u16) -> u32 {
         match self.pairs.binary_search_by_key(&topic, |&(t, _)| t) {
@@ -367,6 +386,17 @@ mod tests {
         assert_eq!(c.get(5), 0);
         assert_eq!(c.support(), 1);
         assert_eq!(c.total(), 1);
+    }
+
+    #[test]
+    fn sparse_counts_from_sorted_pairs_validates() {
+        let ok = SparseCounts::from_sorted_pairs(vec![(1, 2), (5, 1), (9, 3)]).unwrap();
+        assert_eq!(ok.get(5), 1);
+        assert_eq!(ok.total(), 6);
+        assert!(SparseCounts::from_sorted_pairs(vec![]).unwrap().is_empty());
+        assert!(SparseCounts::from_sorted_pairs(vec![(5, 1), (1, 2)]).is_err());
+        assert!(SparseCounts::from_sorted_pairs(vec![(5, 1), (5, 2)]).is_err());
+        assert!(SparseCounts::from_sorted_pairs(vec![(1, 0)]).is_err());
     }
 
     #[test]

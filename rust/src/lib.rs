@@ -18,7 +18,10 @@
 //! * **Nomad runtime** ([`nomad`]): decentralized, asynchronous, lock-free
 //!   parallel LDA via nomadic word tokens and a circulating global-count
 //!   token (§4), with a parameter-server baseline ([`ps`]) and a bulk-sync
-//!   baseline ([`adlda`]).
+//!   baseline ([`adlda`]).  Ring communication sits behind a transport
+//!   abstraction with in-process channels and a length-prefixed TCP
+//!   backend ([`nomad::net`], `fnomad-lda serve-worker`), so rings can mix
+//!   local threads with workers in other processes or machines.
 //! * **Cluster simulator** ([`simnet`]): virtual-time discrete-event
 //!   execution of the same runtime for the paper's 20-core / 32-node
 //!   experiments on this single-core session (see DESIGN.md).

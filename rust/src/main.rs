@@ -6,6 +6,7 @@
 //!   calibrate       measure the per-token cost model for the simulator
 //!   topics          train briefly and print the top words per topic
 //!   check-artifacts cross-check the PJRT evaluator vs the Rust reference
+//!   serve-worker    host a nomad ring worker over TCP for `train --remote`
 //!   help            the top-level index
 //!
 //! Flag strings are parsed into the typed [`TrainConfig`] here and nowhere
@@ -18,6 +19,7 @@ use fnomad_lda::corpus::presets::{preset, PAPER_TABLE3, PRESET_NAMES};
 use fnomad_lda::corpus::CorpusStats;
 use fnomad_lda::lda::state::{Hyper, LdaState};
 use fnomad_lda::lda::{self, topics as topics_mod};
+use fnomad_lda::nomad::net::{serve, ServeOpts};
 use fnomad_lda::runtime::{artifacts_available, default_artifact_dir, LlEvaluator};
 use fnomad_lda::simnet::CostModel;
 use fnomad_lda::util::cli::{Args, CommandSpec, FlagSpec};
@@ -50,6 +52,11 @@ const TRAIN_SPEC: CommandSpec = CommandSpec {
             help: "plain|sparse|alias|flda-doc|flda-word (serial runtime)",
         },
         FlagSpec { flag: "workers", value: "P", help: "worker threads / simulated cores" },
+        FlagSpec {
+            flag: "remote",
+            value: "ADDRS",
+            help: "comma-separated serve-worker host:port list joining the nomad ring",
+        },
         FlagSpec {
             flag: "machines",
             value: "M",
@@ -111,12 +118,27 @@ const CHECK_ARTIFACTS_SPEC: CommandSpec = CommandSpec {
     flags: &[FlagSpec { flag: "topics", value: "N", help: "topic count (default 128)" }],
 };
 
+const SERVE_WORKER_SPEC: CommandSpec = CommandSpec {
+    name: "serve-worker",
+    about: "host a nomad ring worker over TCP (the remote end of train --remote)",
+    flags: &[
+        FlagSpec {
+            flag: "listen",
+            value: "ADDR",
+            help: "bind address (default 127.0.0.1:7777; port 0 picks a free port)",
+        },
+        FlagSpec { flag: "once", value: "", help: "serve one coordinator session, then exit" },
+        FlagSpec { flag: "quiet", value: "", help: "suppress per-connection logging" },
+    ],
+};
+
 const SPECS: &[&CommandSpec] = &[
     &TRAIN_SPEC,
     &DATA_STATS_SPEC,
     &CALIBRATE_SPEC,
     &TOPICS_SPEC,
     &CHECK_ARTIFACTS_SPEC,
+    &SERVE_WORKER_SPEC,
 ];
 
 fn top_level_help() -> String {
@@ -146,6 +168,7 @@ fn main() {
         "calibrate" => with_help(&args, &CALIBRATE_SPEC, cmd_calibrate),
         "topics" => with_help(&args, &TOPICS_SPEC, cmd_topics),
         "check-artifacts" => with_help(&args, &CHECK_ARTIFACTS_SPEC, cmd_check_artifacts),
+        "serve-worker" => with_help(&args, &SERVE_WORKER_SPEC, cmd_serve_worker),
         "help" | "--help" | "-h" => {
             println!("{}", top_level_help());
             Ok(())
@@ -184,6 +207,7 @@ fn train_config(args: &Args) -> Result<TrainConfig, String> {
         sampler: args.str_or("sampler", &d.sampler.to_string()).parse()?,
         runtime: args.str_or("runtime", &d.runtime.to_string()).parse()?,
         workers: args.parse_or("workers", d.workers)?,
+        remote: parse_remote(args)?,
         machines: args.parse_or("machines", d.machines)?,
         iters: args.parse_or("iters", d.iters)?,
         seed: args.parse_or("seed", d.seed)?,
@@ -200,6 +224,41 @@ fn train_config(args: &Args) -> Result<TrainConfig, String> {
     };
     args.reject_unknown()?;
     Ok(cfg)
+}
+
+/// `--remote host:port,host:port` → address list (empty when absent).
+/// A present-but-empty value is an error: silently degrading a
+/// distributed run to local-only would report success the user did not
+/// ask for.
+fn parse_remote(args: &Args) -> Result<Vec<String>, String> {
+    match args.str_opt("remote") {
+        None => Ok(Vec::new()),
+        Some(v) => {
+            let addrs: Vec<String> = v
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            if addrs.is_empty() {
+                return Err(format!("--remote '{v}' contains no worker addresses"));
+            }
+            Ok(addrs)
+        }
+    }
+}
+
+fn cmd_serve_worker(args: &Args) -> Result<(), String> {
+    use std::io::Write as _;
+
+    let addr = args.str_or("listen", "127.0.0.1:7777");
+    let opts = ServeOpts { once: args.flag("once"), quiet: args.flag("quiet") };
+    args.reject_unknown()?;
+    let listener = std::net::TcpListener::bind(&addr).map_err(|e| format!("bind {addr}: {e}"))?;
+    let local = listener.local_addr().map_err(|e| e.to_string())?;
+    // machine-readable line launch scripts / tests parse for the port
+    println!("listening on {local}");
+    std::io::stdout().flush().map_err(|e| e.to_string())?;
+    serve(listener, &opts)
 }
 
 fn cmd_train(args: &Args) -> Result<(), String> {

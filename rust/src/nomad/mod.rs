@@ -23,9 +23,26 @@
 //! * [`crate::simnet`] — virtual-time discrete-event execution with a
 //!   calibrated cost model (reproduces the paper's 20-core and 32-node
 //!   figures; see DESIGN.md §Hardware-Adaptation).
+//!
+//! # Crossing the process boundary
+//!
+//! The ring's communication is abstracted behind [`transport::Transport`]
+//! (receive / forward-to-successor / reply-to-coordinator), with two
+//! backends sharing one worker loop ([`transport::run_worker`]):
+//! in-process mpsc channels, and a length-prefixed TCP session ([`net`])
+//! speaking the compact binary format of [`wire`].  `fnomad-lda
+//! serve-worker --listen host:port` hosts a [`worker::WorkerState`] in
+//! another process (or machine), and `train --runtime nomad --remote
+//! host:port,...` splices those hosts into the ring after the local
+//! threads.  The epoch protocol, the exact-fold invariant, and every
+//! per-slot RNG stream are identical across backends — the multi-machine
+//! regime of §4 is the same algorithm over a different wire.
 
+pub mod net;
 pub mod runtime;
 pub mod token;
+pub mod transport;
+pub mod wire;
 pub mod worker;
 
 pub use runtime::{NomadConfig, NomadRuntime};

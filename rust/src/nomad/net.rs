@@ -1,0 +1,485 @@
+//! TCP backend for the nomad ring: length-prefixed [`super::wire`]
+//! frames over sockets, the `serve-worker` session host, and the
+//! coordinator-side remote slot.
+//!
+//! # Topology
+//!
+//! The coordinator owns one TCP connection per remote slot and relays
+//! through it, so remote workers are topology-blind:
+//!
+//! ```text
+//! coordinator ──(Init/Ring)──▶ serve-worker
+//! coordinator ◀─(Forward/Reply/Err)── serve-worker
+//! ```
+//!
+//! Locally, a remote slot is indistinguishable from a thread: it occupies
+//! a `Sender<Msg>` in the ring like every other worker.  A writer thread
+//! drains that channel onto the socket; a reader thread dispatches
+//! incoming `Forward` frames to the successor slot's sender and `Reply`
+//! frames to the coordinator's reply channel.  Either thread records a
+//! ring fault on socket failure, which the runtime's health check turns
+//! into a descriptive error instead of a deadlock.
+//!
+//! # Framing
+//!
+//! Every frame is `u32 LE body length | body` with the body produced by
+//! [`encode_frame`].  Bodies above [`MAX_FRAME`] are rejected before
+//! allocation, so a garbage length cannot OOM the process.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::corpus::Corpus;
+use crate::lda::state::Hyper;
+use crate::util::rng::Pcg32;
+
+use super::token::{Msg, Reply};
+use super::transport::{run_worker, Transport};
+use super::wire::{decode_frame, encode_frame, Frame, Init};
+use super::worker::WorkerState;
+
+/// Upper bound on one frame body (1 GiB) — far above any real token or
+/// state slice, far below an attacker-controlled length field.
+pub const MAX_FRAME: usize = 1 << 30;
+
+/// `try_clone` with a house-style error.
+fn clone_stream(stream: &TcpStream) -> Result<TcpStream, String> {
+    stream.try_clone().map_err(|e| format!("socket clone failed: {e}"))
+}
+
+/// How long the coordinator waits for the remote's `InitOk`.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Write one length-prefixed frame and flush it onto the wire.  Errors
+/// (instead of truncating the `u32` prefix) on bodies above
+/// [`MAX_FRAME`] — oversized payloads must fail loudly, not desync the
+/// stream.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<(), String> {
+    let body = encode_frame(frame);
+    if body.len() > MAX_FRAME {
+        return Err(format!(
+            "frame body of {} bytes exceeds the {MAX_FRAME}-byte cap (shard the ring wider)",
+            body.len()
+        ));
+    }
+    w.write_all(&(body.len() as u32).to_le_bytes())
+        .and_then(|_| w.write_all(&body))
+        .and_then(|_| w.flush())
+        .map_err(|e| format!("frame write failed: {e}"))
+}
+
+/// Read one length-prefixed frame.  Errors on EOF, short reads, a length
+/// above [`MAX_FRAME`], and every [`decode_frame`] failure.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, String> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4).map_err(|e| format!("frame read failed: {e}"))?;
+    let len = u32::from_le_bytes(len4) as usize;
+    if len > MAX_FRAME {
+        return Err(format!("frame length {len} exceeds the {MAX_FRAME}-byte cap"));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).map_err(|e| format!("frame body read failed: {e}"))?;
+    decode_frame(&body)
+}
+
+/// Worker-side [`Transport`] over one coordinator connection.
+pub struct TcpTransport {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl TcpTransport {
+    pub fn new(reader: BufReader<TcpStream>, writer: BufWriter<TcpStream>) -> Self {
+        TcpTransport { reader, writer }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn recv(&mut self) -> Result<Msg, String> {
+        match read_frame(&mut self.reader)? {
+            Frame::Ring(msg) => Ok(msg),
+            Frame::Err(e) => Err(format!("coordinator reported: {e}")),
+            other => Err(format!("expected a ring frame, got {other:?}")),
+        }
+    }
+
+    fn send_next(&mut self, msg: Msg) -> Result<(), String> {
+        write_frame(&mut self.writer, &Frame::Forward(msg))
+    }
+
+    fn reply(&mut self, reply: Reply) -> Result<(), String> {
+        write_frame(&mut self.writer, &Frame::Reply(reply))
+    }
+}
+
+// ----------------------------------------------------------- serve side
+
+/// `serve-worker` options.
+pub struct ServeOpts {
+    /// serve a single coordinator session, then return
+    pub once: bool,
+    /// suppress per-connection logging
+    pub quiet: bool,
+}
+
+/// Host ring workers on `listener`: accept a coordinator connection,
+/// run the [`Init`] handshake, then loop the worker until `Stop` or
+/// disconnect.  Without `once`, session errors are logged and the next
+/// coordinator is awaited — a crashed training run never wedges the
+/// worker host; with `once`, a failed session is this call's (and the
+/// CLI's) error, so exit codes reflect worker-side failures.
+pub fn serve(listener: TcpListener, opts: &ServeOpts) -> Result<(), String> {
+    loop {
+        let (stream, peer) = listener.accept().map_err(|e| format!("accept failed: {e}"))?;
+        if !opts.quiet {
+            eprintln!("[serve-worker] coordinator connected from {peer}");
+        }
+        match host_session(stream) {
+            Ok(slot) => {
+                if !opts.quiet {
+                    eprintln!("[serve-worker] session done (ring slot {slot})");
+                }
+            }
+            Err(e) => {
+                eprintln!("[serve-worker] session error: {e}");
+                if opts.once {
+                    return Err(e);
+                }
+            }
+        }
+        if opts.once {
+            return Ok(());
+        }
+    }
+}
+
+/// One coordinator session: handshake, build the worker, run the ring
+/// loop.  Returns the slot id served.
+fn host_session(stream: TcpStream) -> Result<usize, String> {
+    stream.set_nodelay(true).map_err(|e| e.to_string())?;
+    // Init must arrive within the handshake deadline: a peer that
+    // connects and goes silent may not park this single-session host
+    // forever (the "survives crashed coordinators" property)
+    stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT)).map_err(|e| e.to_string())?;
+    let mut reader = BufReader::new(clone_stream(&stream)?);
+    let mut writer = BufWriter::new(stream);
+    let init = match read_frame(&mut reader) {
+        Ok(Frame::Init(init)) => init,
+        Ok(other) => {
+            let e = format!("handshake must start with Init, got {other:?}");
+            let _ = write_frame(&mut writer, &Frame::Err(e.clone()));
+            return Err(e);
+        }
+        Err(e) => {
+            let _ = write_frame(&mut writer, &Frame::Err(e.clone()));
+            return Err(e);
+        }
+    };
+    // ring traffic has no deadline — an idle epoch boundary is normal
+    writer.get_ref().set_read_timeout(None).map_err(|e| e.to_string())?;
+    let slot = init.worker_id as usize;
+    match build_worker(*init) {
+        Ok(state) => {
+            write_frame(&mut writer, &Frame::InitOk)?;
+            run_worker(state, TcpTransport::new(reader, writer))?;
+            Ok(slot)
+        }
+        Err(e) => {
+            let e = format!("invalid Init for ring slot {slot}: {e}");
+            let _ = write_frame(&mut writer, &Frame::Err(e.clone()));
+            Err(e)
+        }
+    }
+}
+
+/// Validate an [`Init`] and build the [`WorkerState`] it describes.  The
+/// corpus slice is reconstructed locally (rebased CSR), so the worker
+/// indexes docs `0..n` internally while reporting `start_doc`-based ids.
+fn build_worker(init: Init) -> Result<WorkerState, String> {
+    // a 0-worker ring (or an out-of-ring slot id) would make every token
+    // reply after a single hop instead of circulating — reject loudly
+    if init.num_workers == 0 {
+        return Err("num_workers must be at least 1".into());
+    }
+    if init.worker_id >= init.num_workers {
+        return Err(format!(
+            "worker_id {} outside the {}-slot ring",
+            init.worker_id, init.num_workers
+        ));
+    }
+    let t = init.t as usize;
+    if !(2..=u16::MAX as usize + 1).contains(&t) {
+        return Err(format!("topic count {t} out of range"));
+    }
+    if init.s.len() != t {
+        return Err(format!("totals length {} != T {t}", init.s.len()));
+    }
+    let sub = Corpus {
+        doc_offsets: init.doc_offsets.iter().map(|&o| o as usize).collect(),
+        tokens: init.tokens,
+        vocab: init.vocab as usize,
+        vocab_words: Vec::new(),
+        name: format!("remote-slot-{}", init.worker_id),
+    };
+    if sub.doc_offsets.is_empty() {
+        return Err("doc_offsets must hold at least the leading 0".into());
+    }
+    sub.validate()?;
+    if init.z.len() != sub.num_tokens() {
+        return Err(format!(
+            "z has {} assignments, corpus slice {} tokens",
+            init.z.len(),
+            sub.num_tokens()
+        ));
+    }
+    if let Some(&bad) = init.z.iter().find(|&&z| z as usize >= t) {
+        return Err(format!("assignment topic {bad} >= T {t}"));
+    }
+    let hyper = Hyper { t, alpha: init.alpha, beta: init.beta };
+    let mut state = WorkerState::new(
+        init.worker_id as usize,
+        init.num_workers as usize,
+        &sub,
+        hyper,
+        0,
+        sub.num_docs(),
+        init.z,
+        init.s,
+        Pcg32::from_parts(init.rng_state, init.rng_inc),
+    );
+    // local doc 0 is global doc `start_doc`; Reply::Docs reports global ids
+    state.start_doc = init.start_doc as usize;
+    Ok(state)
+}
+
+// ----------------------------------------------------- coordinator side
+
+/// The ring-side channel ends a remote slot plugs into: its own inbox
+/// plus where its forwards and replies should land.
+pub struct RingPorts {
+    /// ring input for this slot (drained by the writer thread)
+    pub inbox: Receiver<Msg>,
+    /// successor slot's sender (fed by the reader thread)
+    pub next: Sender<Msg>,
+    /// the coordinator's reply channel
+    pub reply: Sender<Reply>,
+}
+
+/// A connected remote slot: its relay threads plus a stream handle the
+/// runtime can force-close if a shutdown stalls.
+pub struct RemoteHandle {
+    pub addr: String,
+    pub stream: TcpStream,
+    pub reader: Option<JoinHandle<()>>,
+    pub writer: Option<JoinHandle<()>>,
+}
+
+/// Connect ring slot `slot` to a `serve-worker` at `addr`: run the
+/// `Init` handshake, then spawn the writer/reader relay threads.  Socket
+/// failures after the handshake are pushed to `faults` (suppressed once
+/// `stopping` is set) — the runtime health check's view of this link.
+pub fn connect_worker(
+    addr: &str,
+    slot: usize,
+    init: Init,
+    ports: RingPorts,
+    faults: Arc<Mutex<Vec<String>>>,
+    stopping: Arc<AtomicBool>,
+) -> Result<RemoteHandle, String> {
+    // connect with a deadline: a black-holed address (dropped SYNs) must
+    // be a prompt descriptive error, not an OS-default multi-minute hang
+    let sock = addr
+        .to_socket_addrs()
+        .map_err(|e| format!("resolve {addr}: {e}"))?
+        .next()
+        .ok_or_else(|| format!("resolve {addr}: no addresses"))?;
+    let stream = TcpStream::connect_timeout(&sock, HANDSHAKE_TIMEOUT)
+        .map_err(|e| format!("connect {addr}: {e}"))?;
+    stream.set_nodelay(true).map_err(|e| e.to_string())?;
+    let mut reader = BufReader::new(clone_stream(&stream)?);
+    let mut writer = BufWriter::new(clone_stream(&stream)?);
+
+    // handshake with a deadline so a wedged host cannot hang construction
+    stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT)).map_err(|e| e.to_string())?;
+    write_frame(&mut writer, &Frame::Init(Box::new(init)))
+        .map_err(|e| format!("worker {addr}: {e}"))?;
+    match read_frame(&mut reader).map_err(|e| format!("worker {addr} handshake: {e}"))? {
+        Frame::InitOk => {}
+        Frame::Err(e) => return Err(format!("worker {addr} rejected init: {e}")),
+        other => return Err(format!("worker {addr} handshake: unexpected {other:?}")),
+    }
+    stream.set_read_timeout(None).map_err(|e| e.to_string())?;
+
+    let fault = {
+        let addr = addr.to_string();
+        move |what: String| {
+            if !stopping.load(Ordering::SeqCst) {
+                faults.lock().unwrap().push(format!("remote worker {slot} ({addr}): {what}"));
+            }
+        }
+    };
+
+    let writer_handle = {
+        let fault = fault.clone();
+        let inbox = ports.inbox;
+        std::thread::spawn(move || {
+            while let Ok(msg) = inbox.recv() {
+                if let Err(e) = write_frame(&mut writer, &Frame::Ring(msg)) {
+                    fault(format!("send failed: {e}"));
+                    return;
+                }
+            }
+            // inbox closed: the runtime dropped its senders (shutdown)
+        })
+    };
+    let reader_handle = {
+        let next = ports.next;
+        let reply = ports.reply;
+        std::thread::spawn(move || loop {
+            match read_frame(&mut reader) {
+                Ok(Frame::Forward(msg)) => {
+                    if next.send(msg).is_err() {
+                        // successor gone: the ring is tearing down
+                        return;
+                    }
+                }
+                Ok(Frame::Reply(r)) => {
+                    if reply.send(r).is_err() {
+                        return;
+                    }
+                }
+                Ok(Frame::Err(e)) => {
+                    fault(format!("reported an error: {e}"));
+                    return;
+                }
+                Ok(other) => {
+                    fault(format!("sent an unexpected frame: {other:?}"));
+                    return;
+                }
+                Err(e) => {
+                    fault(format!("disconnected: {e}"));
+                    return;
+                }
+            }
+        })
+    };
+    Ok(RemoteHandle {
+        addr: addr.to_string(),
+        stream,
+        reader: Some(reader_handle),
+        writer: Some(writer_handle),
+    })
+}
+
+impl RemoteHandle {
+    /// True while either relay thread is still running.
+    pub fn relays_alive(&self) -> bool {
+        let alive = |h: &Option<JoinHandle<()>>| h.as_ref().is_some_and(|h| !h.is_finished());
+        alive(&self.reader) || alive(&self.writer)
+    }
+
+    /// Force the socket closed (unblocks both relay threads).
+    pub fn force_close(&self) {
+        let _ = self.stream.shutdown(Shutdown::Both);
+    }
+
+    /// Join both relay threads (idempotent).
+    pub fn join_relays(&mut self) {
+        if let Some(h) = self.writer.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lda::SparseCounts;
+    use crate::nomad::token::WordToken;
+
+    #[test]
+    fn frames_roundtrip_through_the_length_prefix_layer() {
+        let row = SparseCounts::from_sorted_pairs(vec![(0, 4), (7, 1)]).unwrap();
+        let frames = [
+            Frame::InitOk,
+            Frame::Ring(Msg::SetS(vec![1, 2, 3])),
+            Frame::Reply(Reply::WordDone(WordToken::new(9, row))),
+            Frame::Err("boom".into()),
+        ];
+        let mut buf: Vec<u8> = Vec::new();
+        for f in &frames {
+            write_frame(&mut buf, f).unwrap();
+        }
+        let mut r = &buf[..];
+        for f in &frames {
+            assert_eq!(&read_frame(&mut r).unwrap(), f);
+        }
+        // stream fully consumed; the next read is a clean EOF error
+        assert!(read_frame(&mut r).unwrap_err().contains("frame read failed"));
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_before_allocation() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        buf.extend_from_slice(&[0; 16]);
+        let err = read_frame(&mut &buf[..]).unwrap_err();
+        assert!(err.contains("cap"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn build_worker_rejects_inconsistent_inits() {
+        let base = Init {
+            worker_id: 1,
+            num_workers: 2,
+            start_doc: 10,
+            t: 8,
+            alpha: 50.0 / 8.0,
+            beta: 0.01,
+            vocab: 5,
+            doc_offsets: vec![0, 2, 3],
+            tokens: vec![0, 4, 1],
+            z: vec![0, 7, 3],
+            s: vec![1; 8],
+            rng_state: 1,
+            rng_inc: 3,
+        };
+        // the base init is fine and reports global doc ids
+        let state = build_worker(base.clone()).unwrap();
+        assert_eq!(state.start_doc, 10);
+        assert_eq!(state.id, 1);
+
+        let mut bad_t = base.clone();
+        bad_t.t = 1;
+        assert!(build_worker(bad_t).unwrap_err().contains("topic count"));
+        let mut bad_ring = base.clone();
+        bad_ring.num_workers = 0;
+        assert!(build_worker(bad_ring).unwrap_err().contains("num_workers"));
+        let mut bad_slot = base.clone();
+        bad_slot.worker_id = 2;
+        assert!(build_worker(bad_slot).unwrap_err().contains("outside"));
+        let mut bad_s = base.clone();
+        bad_s.s = vec![1; 7];
+        assert!(build_worker(bad_s).unwrap_err().contains("totals length"));
+        let mut bad_z_len = base.clone();
+        bad_z_len.z = vec![0, 1];
+        assert!(build_worker(bad_z_len).unwrap_err().contains("assignments"));
+        let mut bad_z_topic = base.clone();
+        bad_z_topic.z = vec![0, 8, 3];
+        assert!(build_worker(bad_z_topic).unwrap_err().contains(">= T"));
+        let mut bad_word = base.clone();
+        bad_word.tokens = vec![0, 5, 1];
+        assert!(build_worker(bad_word).is_err());
+        let mut bad_offsets = base;
+        bad_offsets.doc_offsets = vec![0, 2];
+        assert!(build_worker(bad_offsets).is_err());
+    }
+}

@@ -1,5 +1,6 @@
-//! Threaded Nomad runtime: real `std::thread` workers, unbounded mpsc
-//! channels, ring routing (worker l forwards to l+1 mod p).
+//! Threaded + cross-process Nomad runtime: ring slots are either real
+//! `std::thread` workers over mpsc channels or remote `serve-worker`
+//! processes over TCP ([`super::net`]); worker l forwards to l+1 mod p.
 //!
 //! Epoch protocol (measurement boundaries only — *within* an epoch the
 //! system is fully asynchronous and lock-free, exactly Algorithm 4):
@@ -17,39 +18,84 @@
 //!
 //! The epoch boundary gives the *exact* count state the convergence curves
 //! evaluate; the paper measures per-iteration likelihood the same way.
+//! The protocol (and every per-slot RNG stream) is identical whether a
+//! slot is a thread or a TCP peer, so mixed rings satisfy the same
+//! exact-fold invariant.
+//!
+//! # Failure handling
+//!
+//! A ring is only as alive as its weakest slot: a panicked thread or a
+//! dropped TCP peer strands every in-flight token.  The coordinator
+//! therefore never blocks indefinitely — [`NomadRuntime::try_run_epoch`]
+//! polls ring health while waiting and turns a dead slot into a
+//! descriptive error (joining the dead thread to harvest its panic
+//! message; surfacing the socket fault for a remote).  The infallible
+//! [`NomadRuntime::run_epoch`] wraps that error in a panic for the
+//! `TrainEngine` surface, which is still a clean exit rather than the
+//! silent deadlock it replaces.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::EpochReport;
 use crate::corpus::{Corpus, Partition};
 use crate::lda::state::{assemble_state, checked_totals, Hyper, LdaState, SparseCounts};
 use crate::util::rng::Pcg32;
 
+use super::net::{self, RemoteHandle, RingPorts};
 use super::token::{GlobalToken, Msg, Reply, WordToken};
+use super::transport::{run_worker, ChannelTransport};
+use super::wire;
 use super::worker::WorkerState;
 
 /// How many full ring circulations `τ_s` makes per epoch.
 pub const S_CIRCULATIONS: u32 = 4;
 
+/// Reply-wait slice between ring health checks.
+const HEALTH_POLL: Duration = Duration::from_millis(50);
+
+/// How long shutdown waits for the remote teardown cascade before
+/// force-closing sockets.
+const SHUTDOWN_GRACE: Duration = Duration::from_secs(2);
+
 /// Runtime configuration.
 #[derive(Clone, Debug)]
 pub struct NomadConfig {
+    /// local worker threads (ring slots `0..workers`)
     pub workers: usize,
     pub seed: u64,
+    /// `host:port` of `serve-worker` processes joining the ring as slots
+    /// `workers..workers+remote.len()`
+    pub remote: Vec<String>,
 }
 
 impl Default for NomadConfig {
     fn default() -> Self {
-        NomadConfig { workers: 2, seed: 0 }
+        NomadConfig { workers: 2, seed: 0, remote: Vec::new() }
     }
 }
 
-/// Coordinator handle for the threaded runtime.
+/// One ring slot as the coordinator tracks it.
+enum Slot {
+    /// a local worker thread (`None` once joined)
+    Local(Option<JoinHandle<()>>),
+    /// a connected `serve-worker` and its relay threads
+    Remote(RemoteHandle),
+}
+
+/// Coordinator handle for the threaded / mixed-ring runtime.
 pub struct NomadRuntime {
+    /// ring input per slot; a remote slot's sender feeds its writer relay
     senders: Vec<Sender<Msg>>,
     replies: Receiver<Reply>,
-    handles: Vec<JoinHandle<()>>,
+    slots: Vec<Slot>,
+    /// socket faults recorded by remote relay threads
+    faults: Arc<Mutex<Vec<String>>>,
+    /// raised during shutdown so routine disconnects are not faults
+    stopping: Arc<AtomicBool>,
     /// word tokens parked at the coordinator between epochs
     home: Vec<WordToken>,
     /// exact global totals between epochs
@@ -57,7 +103,6 @@ pub struct NomadRuntime {
     /// vocabulary size (token count per epoch)
     num_words: usize,
     hyper: Hyper,
-    cfg: NomadConfig,
     partition: Partition,
     pub epochs_run: usize,
     prev_processed: u64,
@@ -72,16 +117,39 @@ impl NomadRuntime {
         Self::from_state(corpus, &state, cfg)
     }
 
-    /// Build workers from explicit initial assignments (the resume path),
-    /// distribute documents, park all word tokens at home.
+    /// Infallible [`Self::try_from_state`] for in-process rings (where
+    /// construction cannot fail); panics on an invalid config or a remote
+    /// connection error.
     pub fn from_state(corpus: &Corpus, init: &LdaState, cfg: NomadConfig) -> Self {
-        assert!(cfg.workers >= 1);
+        Self::try_from_state(corpus, init, cfg)
+            .unwrap_or_else(|e| panic!("nomad ring construction failed: {e}"))
+    }
+
+    /// Build the ring from explicit initial assignments (the resume
+    /// path): distribute documents over `workers + remote.len()` slots,
+    /// spawn local threads, connect remote `serve-worker`s, park all word
+    /// tokens at home.
+    ///
+    /// Slot RNG streams are derived in slot order regardless of where a
+    /// slot runs, so a mixed ring replays the same per-slot streams as an
+    /// all-threads ring of the same size and seed.
+    pub fn try_from_state(
+        corpus: &Corpus,
+        init: &LdaState,
+        cfg: NomadConfig,
+    ) -> Result<Self, String> {
+        let total = cfg.workers + cfg.remote.len();
+        if total == 0 {
+            return Err("the nomad ring needs at least one slot (workers or remote)".into());
+        }
         // offsets equality (not just doc count): under the flat layout a
         // doc-length mismatch would misindex z silently instead of
         // panicking like the old per-doc rows did
-        assert_eq!(init.doc_offsets, corpus.doc_offsets, "init state / corpus mismatch");
+        if init.doc_offsets != corpus.doc_offsets {
+            return Err("init state / corpus mismatch".into());
+        }
         let hyper = init.hyper;
-        let partition = Partition::by_tokens(corpus, cfg.workers);
+        let partition = Partition::by_tokens(corpus, total);
         // worker streams derive from a different stream id than the init
         // draws (0x10AD in `new`), so sampling never replays them
         let mut seed_rng = Pcg32::new(cfg.seed, 0xAD10);
@@ -95,70 +163,123 @@ impl NomadRuntime {
             .map(|(w, counts)| WordToken::new(w as u32, counts))
             .collect();
 
-        // spawn workers
         let (reply_tx, replies) = channel::<Reply>();
-        let mut senders = Vec::with_capacity(cfg.workers);
-        let mut receivers = Vec::with_capacity(cfg.workers);
-        for _ in 0..cfg.workers {
+        let mut senders = Vec::with_capacity(total);
+        let mut receivers = Vec::with_capacity(total);
+        for _ in 0..total {
             let (tx, rx) = channel::<Msg>();
             senders.push(tx);
             receivers.push(rx);
         }
-        let mut handles = Vec::with_capacity(cfg.workers);
+        let faults = Arc::new(Mutex::new(Vec::new()));
+        let stopping = Arc::new(AtomicBool::new(false));
+        let mut slots = Vec::with_capacity(total);
         for (l, rx) in receivers.into_iter().enumerate() {
+            // derived in slot order for every slot kind (see above)
+            let rng = seed_rng.split(l as u64 + 1);
             let (start, end) = partition.ranges[l];
-            // one bulk copy of the worker's contiguous CSR rows
-            let z_slice: Vec<u16> =
-                init.z_range(start, end).to_vec();
-            let state = WorkerState::new(
-                l,
-                cfg.workers,
-                corpus,
-                hyper,
-                start,
-                end,
-                z_slice,
-                s.clone(),
-                seed_rng.split(l as u64 + 1),
-            );
-            let next = senders[(l + 1) % cfg.workers].clone();
+            let next = senders[(l + 1) % total].clone();
             let reply = reply_tx.clone();
-            handles.push(std::thread::spawn(move || {
-                worker_loop(state, rx, next, reply);
-            }));
+            if l < cfg.workers {
+                // one bulk copy of the worker's contiguous CSR rows
+                let z_slice: Vec<u16> = init.z_range(start, end).to_vec();
+                let state = WorkerState::new(
+                    l,
+                    total,
+                    corpus,
+                    hyper,
+                    start,
+                    end,
+                    z_slice,
+                    s.clone(),
+                    rng,
+                );
+                let link = ChannelTransport { rx, next, reply };
+                // a transport Err is the ring breaking elsewhere; the
+                // clean exit is cascade and health checks attribute blame
+                // to the original failure (panic / socket fault)
+                let handle = std::thread::spawn(move || {
+                    let _ = run_worker(state, link);
+                });
+                slots.push(Slot::Local(Some(handle)));
+            } else {
+                let addr = &cfg.remote[l - cfg.workers];
+                let init_frame = remote_init(corpus, init, &partition, l, total, &s, &rng);
+                let ports = RingPorts { inbox: rx, next, reply };
+                let connected = net::connect_worker(
+                    addr,
+                    l,
+                    init_frame,
+                    ports,
+                    Arc::clone(&faults),
+                    Arc::clone(&stopping),
+                );
+                match connected {
+                    Ok(handle) => slots.push(Slot::Remote(handle)),
+                    Err(e) => {
+                        // tear down what already exists; threads unwind on
+                        // Stop / socket close without being joined
+                        stopping.store(true, Ordering::SeqCst);
+                        for tx in &senders {
+                            let _ = tx.send(Msg::Stop);
+                        }
+                        for slot in &slots {
+                            if let Slot::Remote(r) = slot {
+                                r.force_close();
+                            }
+                        }
+                        return Err(e);
+                    }
+                }
+            }
         }
 
         let num_words = home.len();
-        NomadRuntime {
+        Ok(NomadRuntime {
             senders,
             replies,
-            handles,
+            slots,
+            faults,
+            stopping,
             home,
             s,
             num_words,
             hyper,
-            cfg,
             partition,
             epochs_run: 0,
             prev_processed: 0,
             total_processed: 0,
-        }
+        })
+    }
+
+    /// Number of ring slots (local threads + remote workers).
+    pub fn ring_size(&self) -> usize {
+        self.slots.len()
     }
 
     /// Run one fully-asynchronous epoch; returns wall time + throughput.
+    ///
+    /// Panics with the underlying ring failure if a worker dies
+    /// mid-epoch — see [`Self::try_run_epoch`] for the recoverable form.
     pub fn run_epoch(&mut self) -> EpochReport {
-        let p = self.cfg.workers;
-        let t0 = std::time::Instant::now();
+        self.try_run_epoch().unwrap_or_else(|e| panic!("nomad ring failure: {e}"))
+    }
+
+    /// Run one epoch, surfacing ring failures (a panicked worker thread,
+    /// a dropped TCP peer) as a descriptive error instead of blocking on
+    /// replies that can never arrive.  After an `Err` the ring is broken
+    /// and the runtime is only good for [`Self::shutdown`].
+    pub fn try_run_epoch(&mut self) -> Result<EpochReport, String> {
+        let p = self.slots.len();
+        let t0 = Instant::now();
 
         // inject word tokens round-robin and the global token
         let tokens: Vec<WordToken> = std::mem::take(&mut self.home);
         for (i, mut tok) in tokens.into_iter().enumerate() {
             tok.hops = 0;
-            self.senders[i % p].send(Msg::Word(tok)).expect("worker hung up");
+            self.send_ring(i % p, Msg::Word(tok))?;
         }
-        self.senders[0]
-            .send(Msg::Global(GlobalToken::new(self.s.clone())))
-            .expect("worker hung up");
+        self.send_ring(0, Msg::Global(GlobalToken::new(self.s.clone())))?;
 
         // collect everything home (every vocab word has a token, including
         // zero-occurrence ones)
@@ -167,13 +288,13 @@ impl NomadRuntime {
         let mut global: Option<GlobalToken> = None;
         let mut home = Vec::with_capacity(expected_words);
         while got_words < expected_words || global.is_none() {
-            match self.replies.recv().expect("reply channel closed") {
+            match self.recv_reply()? {
                 Reply::WordDone(tok) => {
                     home.push(tok);
                     got_words += 1;
                 }
                 Reply::GlobalDone(tok) => global = Some(tok),
-                other => panic!("unexpected mid-epoch reply: {other:?}"),
+                other => return Err(format!("unexpected mid-epoch reply: {other:?}")),
             }
         }
         home.sort_by_key(|t| t.word);
@@ -181,37 +302,37 @@ impl NomadRuntime {
 
         // exact fold: s = token.s + Σ_l (s_l − s̄_l)
         let mut s = global.unwrap().s;
-        for tx in &self.senders {
-            tx.send(Msg::SyncS).expect("worker hung up");
+        for l in 0..p {
+            self.send_ring(l, Msg::SyncS)?;
         }
         let mut processed = 0u64;
         for _ in 0..p {
-            match self.replies.recv().expect("reply channel closed") {
+            match self.recv_reply()? {
                 Reply::SDelta { delta, tokens_processed, .. } => {
                     for (acc, d) in s.iter_mut().zip(delta) {
                         *acc += d;
                     }
                     processed += tokens_processed;
                 }
-                other => panic!("expected SDelta, got {other:?}"),
+                other => return Err(format!("expected SDelta, got {other:?}")),
             }
         }
-        for tx in &self.senders {
-            tx.send(Msg::SetS(s.clone())).expect("worker hung up");
+        for l in 0..p {
+            self.send_ring(l, Msg::SetS(s.clone()))?;
         }
         self.s = s;
         self.epochs_run += 1;
         let delta_processed = processed - self.prev_processed;
         self.prev_processed = processed;
         self.total_processed = processed;
-        EpochReport {
+        Ok(EpochReport {
             processed: delta_processed,
             secs: t0.elapsed().as_secs_f64(),
             // word counts travel with their token — never stale (§4)
             stale_reads: 0,
             // ring transfers: every word token hops p times, τ_s circulates
             msgs: (self.num_words * p) as u64 + (p as u32 * S_CIRCULATIONS) as u64,
-        }
+        })
     }
 
     /// Run several epochs back to back.
@@ -221,18 +342,25 @@ impl NomadRuntime {
 
     /// Assemble the exact global [`LdaState`] (epoch boundaries only).
     ///
-    /// Panics if the folded global totals contain a negative entry — that
-    /// is count-state corruption, not a value to clamp away.
+    /// Panics if the ring is broken or the folded global totals contain a
+    /// negative entry — that is count-state corruption, not a value to
+    /// clamp away.
     pub fn gather_state(&mut self, corpus: &Corpus) -> LdaState {
-        // doc-side state from every worker
-        for tx in &self.senders {
-            tx.send(Msg::ReportDocs).expect("worker hung up");
+        self.try_gather_state(corpus).unwrap_or_else(|e| panic!("nomad ring failure: {e}"))
+    }
+
+    /// [`Self::gather_state`] with ring failures surfaced as errors.
+    pub fn try_gather_state(&mut self, corpus: &Corpus) -> Result<LdaState, String> {
+        // doc-side state from every slot, thread or TCP alike
+        let p = self.slots.len();
+        for l in 0..p {
+            self.send_ring(l, Msg::ReportDocs)?;
         }
-        let mut parts = Vec::with_capacity(self.cfg.workers);
-        for _ in 0..self.cfg.workers {
-            match self.replies.recv().expect("reply channel closed") {
+        let mut parts = Vec::with_capacity(p);
+        for _ in 0..p {
+            match self.recv_reply()? {
                 Reply::Docs { start_doc, ntd, z, .. } => parts.push((start_doc, ntd, z)),
-                other => panic!("expected Docs, got {other:?}"),
+                other => return Err(format!("expected Docs, got {other:?}")),
             }
         }
         // word-side from the home tokens, totals from the exact fold
@@ -240,13 +368,13 @@ impl NomadRuntime {
         for tok in &self.home {
             nwt[tok.word as usize] = tok.counts.clone();
         }
-        assemble_state(
+        Ok(assemble_state(
             corpus,
             self.hyper,
             parts.iter().map(|(s, n, z)| (*s, n.as_slice(), z.as_slice())),
             nwt,
             checked_totals(&self.s),
-        )
+        ))
     }
 
     /// Total tokens resampled since construction.
@@ -259,14 +387,126 @@ impl NomadRuntime {
         &self.partition
     }
 
-    /// Stop all workers and join their threads.
+    /// Test hook: push a raw message into ring slot `slot`'s inbox,
+    /// bypassing the epoch protocol (simulates a worker dying mid-epoch).
+    #[doc(hidden)]
+    pub fn inject_raw(&self, slot: usize, msg: Msg) {
+        let _ = self.senders[slot].send(msg);
+    }
+
+    /// Send one ring input, converting a closed inbox into the story of
+    /// how that slot died.
+    fn send_ring(&mut self, slot: usize, msg: Msg) -> Result<(), String> {
+        if self.senders[slot].send(msg).is_ok() {
+            return Ok(());
+        }
+        // the slot's receiving end is gone: harvest why
+        if let Slot::Local(handle) = &mut self.slots[slot] {
+            if let Some(handle) = handle.take() {
+                // the thread dropped its receiver, so it is exiting; join
+                // completes promptly and yields any panic payload
+                let why = match handle.join() {
+                    Err(p) => format!("panicked mid-epoch: {}", panic_message(p.as_ref())),
+                    Ok(()) => "exited mid-epoch (ring transport closed)".into(),
+                };
+                return Err(format!("worker {slot} {why}"));
+            }
+        }
+        Err(self.ring_failure(format!("ring slot {slot} is unreachable")))
+    }
+
+    /// Wait for the next reply, polling ring health so a dead slot
+    /// surfaces as an error instead of an eternal block.
+    fn recv_reply(&mut self) -> Result<Reply, String> {
+        loop {
+            match self.replies.recv_timeout(HEALTH_POLL) {
+                Ok(reply) => return Ok(reply),
+                Err(RecvTimeoutError::Timeout) => self.check_ring_health()?,
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(self.ring_failure("every ring worker disconnected".into()));
+                }
+            }
+        }
+    }
+
+    /// `Err` with the most specific diagnosis available, falling back to
+    /// `fallback` if the failure has not become observable yet.
+    fn ring_failure(&mut self, fallback: String) -> String {
+        // give a just-dying thread a beat to become joinable / report
+        for _ in 0..20 {
+            if let Err(e) = self.check_ring_health() {
+                return e;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        fallback
+    }
+
+    /// Scan for dead slots: join finished local threads (harvesting panic
+    /// payloads) and collect socket faults from the remote relays.
+    /// Primary causes (panics, socket faults) are listed before the
+    /// cascade of clean worker exits they trigger.
+    fn check_ring_health(&mut self) -> Result<(), String> {
+        let mut panics = Vec::new();
+        let mut exits = Vec::new();
+        for (l, slot) in self.slots.iter_mut().enumerate() {
+            let Slot::Local(handle) = slot else { continue };
+            if !handle.as_ref().is_some_and(|h| h.is_finished()) {
+                continue;
+            }
+            match handle.take().unwrap().join() {
+                Err(p) => {
+                    let why = panic_message(p.as_ref());
+                    panics.push(format!("worker {l} panicked mid-epoch: {why}"));
+                }
+                Ok(()) => {
+                    exits.push(format!("worker {l} exited mid-epoch (ring transport closed)"));
+                }
+            }
+        }
+        let mut problems = panics;
+        problems.extend(self.faults.lock().unwrap().iter().cloned());
+        problems.extend(exits);
+        if problems.is_empty() {
+            Ok(())
+        } else {
+            Err(problems.join("; "))
+        }
+    }
+
+    /// Stop all workers: local threads are joined; remote teardown
+    /// cascades (writer flushes `Stop`, host closes, reader sees EOF)
+    /// with a grace window before sockets are force-closed, so a wedged
+    /// peer cannot hang shutdown.
     pub fn shutdown(&mut self) {
+        self.stopping.store(true, Ordering::SeqCst);
         for tx in &self.senders {
             let _ = tx.send(Msg::Stop);
         }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
+        // writer relays exit once every sender to their inbox is gone
+        self.senders.clear();
+        for slot in &mut self.slots {
+            if let Slot::Local(handle) = slot {
+                if let Some(handle) = handle.take() {
+                    let _ = handle.join();
+                }
+            }
         }
+        let deadline = Instant::now() + SHUTDOWN_GRACE;
+        while Instant::now() < deadline && self.any_remote_relay_alive() {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        for slot in &mut self.slots {
+            if let Slot::Remote(remote) = slot {
+                remote.force_close();
+                remote.join_relays();
+            }
+        }
+    }
+
+    /// True while any remote slot's relay threads are still running.
+    fn any_remote_relay_alive(&self) -> bool {
+        self.slots.iter().any(|s| matches!(s, Slot::Remote(r) if r.relays_alive()))
     }
 }
 
@@ -276,54 +516,49 @@ impl Drop for NomadRuntime {
     }
 }
 
-/// Worker thread body.
-fn worker_loop(
-    mut state: WorkerState,
-    rx: Receiver<Msg>,
-    next: Sender<Msg>,
-    reply: Sender<Reply>,
-) {
-    let p = state.num_workers as u32;
-    while let Ok(msg) = rx.recv() {
-        match msg {
-            Msg::Word(mut tok) => {
-                state.process_word_token(&mut tok);
-                tok.hops += 1;
-                if tok.hops >= p {
-                    let _ = reply.send(Reply::WordDone(tok));
-                } else {
-                    let _ = next.send(Msg::Word(tok));
-                }
-            }
-            Msg::Global(mut tok) => {
-                state.process_global_token(&mut tok);
-                tok.hops += 1;
-                if tok.hops >= p * S_CIRCULATIONS {
-                    let _ = reply.send(Reply::GlobalDone(tok));
-                } else {
-                    let _ = next.send(Msg::Global(tok));
-                }
-            }
-            Msg::SyncS => {
-                let delta = state.take_s_delta();
-                let _ = reply.send(Reply::SDelta {
-                    worker: state.id,
-                    delta,
-                    tokens_processed: state.processed,
-                });
-            }
-            Msg::SetS(s) => state.set_s(&s),
-            Msg::ReportDocs => {
-                // z is already flat — one bulk clone, no per-doc Vecs
-                let _ = reply.send(Reply::Docs {
-                    worker: state.id,
-                    start_doc: state.start_doc,
-                    ntd: state.ntd.clone(),
-                    z: state.z.clone(),
-                });
-            }
-            Msg::Stop => break,
-        }
+/// Render a boxed panic payload (the `&str` / `String` cases std panics
+/// produce) for the ring-failure diagnostics.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".into()
+    }
+}
+
+/// Build the [`wire::Init`] that turns a `serve-worker` into ring slot
+/// `l`: its rebased corpus slice, initial assignments, totals, and RNG
+/// stream.
+fn remote_init(
+    corpus: &Corpus,
+    init: &LdaState,
+    partition: &Partition,
+    l: usize,
+    total: usize,
+    s: &[i64],
+    rng: &Pcg32,
+) -> wire::Init {
+    let (start, end) = partition.ranges[l];
+    let base = corpus.doc_offsets[start];
+    let hi = corpus.doc_offsets[end];
+    let offsets = &corpus.doc_offsets[start..=end];
+    let (rng_state, rng_inc) = rng.to_parts();
+    wire::Init {
+        worker_id: l as u32,
+        num_workers: total as u32,
+        start_doc: start as u64,
+        t: init.hyper.t as u32,
+        alpha: init.hyper.alpha,
+        beta: init.hyper.beta,
+        vocab: corpus.vocab as u64,
+        doc_offsets: offsets.iter().map(|&o| (o - base) as u64).collect(),
+        tokens: corpus.tokens[base..hi].to_vec(),
+        z: init.z_range(start, end).to_vec(),
+        s: s.to_vec(),
+        rng_state,
+        rng_inc,
     }
 }
 
@@ -338,6 +573,7 @@ mod tests {
         let mut rt = NomadRuntime::new(&corpus, Hyper::paper_default(8), NomadConfig {
             workers: 2,
             seed: 3,
+            ..Default::default()
         });
         assert_eq!(rt.home.len(), corpus.vocab);
         let stats = rt.run_epoch();
@@ -354,6 +590,7 @@ mod tests {
         let mut rt = NomadRuntime::new(&corpus, Hyper::paper_default(8), NomadConfig {
             workers: 3,
             seed: 4,
+            ..Default::default()
         });
         for _ in 0..3 {
             rt.run_epoch();
@@ -372,6 +609,7 @@ mod tests {
         let mut rt = NomadRuntime::new(&corpus, Hyper::paper_default(8), NomadConfig {
             workers: 2,
             seed: 6,
+            ..Default::default()
         });
         rt.run_epoch();
         // inject corruption: a negative global total must surface loudly,
@@ -386,9 +624,41 @@ mod tests {
         let mut rt = NomadRuntime::new(&corpus, Hyper::paper_default(8), NomadConfig {
             workers: 1,
             seed: 5,
+            ..Default::default()
         });
         let stats = rt.run_epoch();
         assert_eq!(stats.processed as usize, corpus.num_tokens());
+        rt.shutdown();
+    }
+
+    #[test]
+    fn zero_slot_ring_is_a_config_error() {
+        let corpus = preset("tiny").unwrap();
+        let mut rng = Pcg32::seeded(1);
+        let init = LdaState::init_random(&corpus, Hyper::paper_default(8), &mut rng);
+        let cfg = NomadConfig { workers: 0, seed: 1, remote: Vec::new() };
+        let err = NomadRuntime::try_from_state(&corpus, &init, cfg).unwrap_err();
+        assert!(err.contains("at least one"), "unhelpful error: {err}");
+    }
+
+    /// A worker that panics mid-epoch must surface its panic message
+    /// through `try_run_epoch` instead of deadlocking the coordinator in
+    /// `replies.recv()` (the bug this PR fixes).
+    #[test]
+    fn killed_worker_thread_surfaces_error_instead_of_hanging() {
+        let corpus = preset("tiny").unwrap();
+        let mut rt = NomadRuntime::new(&corpus, Hyper::paper_default(8), NomadConfig {
+            workers: 2,
+            seed: 7,
+            ..Default::default()
+        });
+        rt.run_epoch(); // healthy baseline
+        // poison slot 1: SetS with the wrong arity makes set_s panic,
+        // which is exactly a worker dying mid-protocol
+        rt.inject_raw(1, Msg::SetS(Vec::new()));
+        let err = rt.try_run_epoch().unwrap_err();
+        assert!(err.contains("worker 1"), "error must name the dead slot: {err}");
+        assert!(err.contains("panicked"), "error must say it panicked: {err}");
         rt.shutdown();
     }
 }

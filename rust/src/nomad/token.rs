@@ -1,12 +1,13 @@
 //! Nomadic tokens (§4.1): the only objects that ever cross worker
 //! boundaries.  A word token owns its count row — there is no other copy
 //! anywhere in the system, which is what makes the scheme lock-free *and*
-//! fresh.
+//! fresh.  When a boundary is a process boundary, [`Msg`] and [`Reply`]
+//! travel as the compact binary frames of [`super::wire`].
 
 use crate::lda::SparseCounts;
 
 /// `τ_j = (j, w_j)`: word id + the authoritative topic-count row.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct WordToken {
     pub word: u32,
     /// n_{·,*,w}: the word's topic counts (owned; always current)
@@ -22,7 +23,7 @@ impl WordToken {
 }
 
 /// `τ_s = (0, s)`: the circulating global topic totals.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct GlobalToken {
     pub s: Vec<i64>,
     pub hops: u32,
@@ -35,7 +36,7 @@ impl GlobalToken {
 }
 
 /// Messages a worker can receive.
-#[derive(Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Msg {
     Word(WordToken),
     Global(GlobalToken),
@@ -49,7 +50,7 @@ pub enum Msg {
 }
 
 /// Replies a worker sends to the coordinator.
-#[derive(Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Reply {
     /// a word token that completed its circulation this epoch
     WordDone(WordToken),

@@ -1,0 +1,208 @@
+//! The worker side of the ring, abstracted over its communication
+//! substrate.
+//!
+//! A ring worker does exactly three things with the outside world:
+//! receive the next [`Msg`], forward a token to its successor slot, and
+//! reply to the coordinator.  [`Transport`] captures those three verbs;
+//! [`run_worker`] is the one ring loop shared by every backend:
+//!
+//! * [`ChannelTransport`] — in-process `std::sync::mpsc` (threaded mode);
+//! * [`super::net::TcpTransport`] — a length-prefixed TCP session hosted
+//!   by `fnomad-lda serve-worker` (cross-process mode).  Its "forward"
+//!   goes back over the coordinator connection tagged
+//!   [`super::wire::Frame::Forward`]; the coordinator relays it to the
+//!   successor, so remote workers never need to know the ring topology.
+//!
+//! Every verb is fallible: a closed channel or dropped socket returns
+//! `Err` and [`run_worker`] exits, which is what lets the coordinator's
+//! health check distinguish a broken ring from a quiet one instead of
+//! deadlocking (see `runtime`).
+
+use std::sync::mpsc::{Receiver, Sender};
+
+use super::token::{Msg, Reply};
+use super::worker::WorkerState;
+
+/// A worker's three-verb connection to the ring.
+pub trait Transport {
+    /// Block for the next ring input.  `Err` means the ring is gone.
+    fn recv(&mut self) -> Result<Msg, String>;
+
+    /// Pass a token to the successor slot.
+    fn send_next(&mut self, msg: Msg) -> Result<(), String>;
+
+    /// Answer the coordinator.
+    fn reply(&mut self, reply: Reply) -> Result<(), String>;
+}
+
+/// In-process backend: the ring is mpsc channels, the successor is a
+/// clone of its input sender.
+pub struct ChannelTransport {
+    pub rx: Receiver<Msg>,
+    pub next: Sender<Msg>,
+    pub reply: Sender<Reply>,
+}
+
+impl Transport for ChannelTransport {
+    fn recv(&mut self) -> Result<Msg, String> {
+        self.rx.recv().map_err(|_| "ring input channel closed".into())
+    }
+
+    fn send_next(&mut self, msg: Msg) -> Result<(), String> {
+        self.next.send(msg).map_err(|_| "successor channel closed".into())
+    }
+
+    fn reply(&mut self, reply: Reply) -> Result<(), String> {
+        self.reply.send(reply).map_err(|_| "coordinator reply channel closed".into())
+    }
+}
+
+/// The ring loop every worker runs, local thread or remote process
+/// (Algorithm 4 dispatch; the epoch protocol lives in `runtime`).
+///
+/// Returns `Ok(())` on a clean [`Msg::Stop`], `Err` when the transport
+/// breaks mid-session — callers decide whether that is a fault (the
+/// coordinator's health check) or routine teardown.
+pub fn run_worker<T: Transport>(mut state: WorkerState, mut link: T) -> Result<(), String> {
+    let p = state.num_workers as u32;
+    loop {
+        match link.recv()? {
+            Msg::Word(mut tok) => {
+                state.process_word_token(&mut tok);
+                tok.hops += 1;
+                if tok.hops >= p {
+                    link.reply(Reply::WordDone(tok))?;
+                } else {
+                    link.send_next(Msg::Word(tok))?;
+                }
+            }
+            Msg::Global(mut tok) => {
+                state.process_global_token(&mut tok);
+                tok.hops += 1;
+                if tok.hops >= p * super::runtime::S_CIRCULATIONS {
+                    link.reply(Reply::GlobalDone(tok))?;
+                } else {
+                    link.send_next(Msg::Global(tok))?;
+                }
+            }
+            Msg::SyncS => {
+                let delta = state.take_s_delta();
+                link.reply(Reply::SDelta {
+                    worker: state.id,
+                    delta,
+                    tokens_processed: state.processed,
+                })?;
+            }
+            Msg::SetS(s) => state.set_s(&s),
+            Msg::ReportDocs => {
+                // z is already flat — one bulk clone, no per-doc Vecs
+                link.reply(Reply::Docs {
+                    worker: state.id,
+                    start_doc: state.start_doc,
+                    ntd: state.ntd.clone(),
+                    z: state.z.clone(),
+                })?;
+            }
+            Msg::Stop => return Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::mpsc::channel;
+
+    use super::*;
+    use crate::corpus::presets::preset;
+    use crate::lda::state::{Hyper, LdaState, SparseCounts};
+    use crate::nomad::token::WordToken;
+    use crate::util::rng::Pcg32;
+
+    /// Drive a single-worker ring through one epoch by hand over the
+    /// channel transport: every token comes home with hops == 1, SyncS
+    /// folds, Stop exits cleanly.
+    #[test]
+    fn channel_transport_single_worker_epoch() {
+        let corpus = preset("tiny").unwrap();
+        let hyper = Hyper::paper_default(8);
+        let mut rng = Pcg32::seeded(3);
+        let init = LdaState::init_random(&corpus, hyper, &mut rng);
+        let s: Vec<i64> = init.nt.iter().map(|&v| v as i64).collect();
+        let state = WorkerState::new(
+            0,
+            1,
+            &corpus,
+            hyper,
+            0,
+            corpus.num_docs(),
+            init.z.clone(),
+            s,
+            Pcg32::seeded(4),
+        );
+        let (tx, rx) = channel();
+        let (reply_tx, replies) = channel();
+        let link = ChannelTransport { rx, next: tx.clone(), reply: reply_tx };
+        let handle = std::thread::spawn(move || run_worker(state, link));
+
+        for (w, counts) in init.nwt.iter().enumerate() {
+            tx.send(Msg::Word(WordToken::new(w as u32, counts.clone()))).unwrap();
+        }
+        tx.send(Msg::SyncS).unwrap();
+        let mut mass = 0u64;
+        for _ in 0..corpus.vocab {
+            match replies.recv().unwrap() {
+                Reply::WordDone(tok) => {
+                    assert_eq!(tok.hops, 1);
+                    mass += tok.counts.total();
+                }
+                other => panic!("expected WordDone, got {other:?}"),
+            }
+        }
+        assert_eq!(mass as usize, corpus.num_tokens());
+        match replies.recv().unwrap() {
+            Reply::SDelta { worker, delta, tokens_processed } => {
+                assert_eq!(worker, 0);
+                assert_eq!(delta.iter().sum::<i64>(), 0, "mass-conserving fold");
+                assert_eq!(tokens_processed as usize, corpus.num_tokens());
+            }
+            other => panic!("expected SDelta, got {other:?}"),
+        }
+        tx.send(Msg::Stop).unwrap();
+        handle.join().unwrap().unwrap();
+    }
+
+    /// Dropping the ring around a live worker makes `run_worker` return
+    /// an error (the signal the coordinator health check rides on), not
+    /// hang or panic.
+    #[test]
+    fn broken_ring_is_an_err_not_a_hang() {
+        let corpus = preset("tiny").unwrap();
+        let hyper = Hyper::paper_default(8);
+        // worker owns doc 0 with everything assigned topic 0
+        let state = WorkerState::new(
+            0,
+            // pretend a 2-slot ring so a fresh token gets forwarded
+            2,
+            &corpus,
+            hyper,
+            0,
+            1,
+            vec![0u16; corpus.doc_len(0)],
+            vec![corpus.doc_len(0) as i64; 8],
+            Pcg32::seeded(9),
+        );
+        let (tx, rx) = channel();
+        let (dead_tx, dead_rx) = channel::<Msg>();
+        drop(dead_rx); // successor is already gone
+        let (reply_tx, _replies) = channel();
+        let link = ChannelTransport { rx, next: dead_tx, reply: reply_tx };
+        let handle = std::thread::spawn(move || run_worker(state, link));
+        // token counts consistent with the worker's view of word 0
+        let occ = corpus.doc(0).iter().filter(|&&w| w == 0).count() as u32;
+        let mut counts = SparseCounts::default();
+        counts.set_count(0, occ);
+        tx.send(Msg::Word(WordToken::new(0, counts))).unwrap();
+        let err = handle.join().unwrap().unwrap_err();
+        assert!(err.contains("successor"), "unhelpful error: {err}");
+    }
+}

@@ -1,0 +1,687 @@
+//! Compact binary wire format for the cross-process nomad ring.
+//!
+//! Every object that crosses a transport boundary — [`Msg`], [`Reply`],
+//! the [`WordToken`]/[`GlobalToken`] payloads and their [`SparseCounts`]
+//! rows, and the session-opening [`Init`] — encodes to a self-describing
+//! tagged byte body ([`encode_frame`]) that [`decode_frame`] parses back.
+//! The framing layer (`net`) length-prefixes these bodies on the socket.
+//!
+//! Design rules:
+//!
+//! * **little-endian, fixed-width** integers, `f64` as IEEE bits — the
+//!   same conventions as the FNLDA001 checkpoint format;
+//! * **decode never panics**: every length is bounds-checked against the
+//!   remaining buffer *before* allocation, sparse rows are validated
+//!   (strictly increasing topics, nonzero counts) through
+//!   [`SparseCounts::from_sorted_pairs`], and trailing bytes are an
+//!   error.  A malformed frame is a `Err(String)`, not UB or an abort;
+//! * **exact roundtrip**: `decode(encode(x)) == x` for every frame,
+//!   including token `hops` and count totals (property-tested below).
+
+use crate::lda::SparseCounts;
+
+use super::token::{GlobalToken, Msg, Reply, WordToken};
+
+/// One unit of conversation between the coordinator and a remote worker.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// coordinator → worker: open a session (corpus slice + initial state)
+    Init(Box<Init>),
+    /// worker → coordinator: session accepted, ring input may flow
+    InitOk,
+    /// coordinator → worker: ring input (a token or an epoch-boundary op)
+    Ring(Msg),
+    /// worker → coordinator: pass this message to my successor slot
+    Forward(Msg),
+    /// worker → coordinator: a [`Reply`] for the epoch protocol
+    Reply(Reply),
+    /// either direction: the session is broken; human-readable reason
+    Err(String),
+}
+
+/// Everything a remote worker needs to become ring slot `worker_id`: its
+/// corpus slice (rebased CSR), initial assignments, global totals, and the
+/// exact RNG stream its in-process twin would have used.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Init {
+    pub worker_id: u32,
+    pub num_workers: u32,
+    /// global doc id of the slice's first document (for `Reply::Docs`)
+    pub start_doc: u64,
+    pub t: u32,
+    pub alpha: f64,
+    pub beta: f64,
+    pub vocab: u64,
+    /// rebased CSR offsets of the slice (first entry 0)
+    pub doc_offsets: Vec<u64>,
+    /// the slice's token payload
+    pub tokens: Vec<u32>,
+    /// initial assignments for the slice (mirrors `tokens`)
+    pub z: Vec<u16>,
+    /// initial global topic totals
+    pub s: Vec<i64>,
+    /// worker RNG stream, from [`crate::util::rng::Pcg32::to_parts`]
+    pub rng_state: u64,
+    pub rng_inc: u64,
+}
+
+/// Magic at the head of every `Init` body ("FNMD"): distinguishes a
+/// version-skewed or foreign peer from random line noise.
+const INIT_MAGIC: u32 = 0x464E_4D44;
+
+/// Wire protocol version, checked during the `Init` handshake.  Bump on
+/// ANY change to frame layouts or protocol semantics the two sides must
+/// agree on (e.g. [`super::runtime::S_CIRCULATIONS`]), so coordinator /
+/// `serve-worker` binary skew is a named error, not a confusing decode
+/// failure or a silent divergence.
+pub const WIRE_VERSION: u32 = 1;
+
+const TAG_INIT: u8 = 1;
+const TAG_INIT_OK: u8 = 2;
+const TAG_RING: u8 = 3;
+const TAG_FORWARD: u8 = 4;
+const TAG_REPLY: u8 = 5;
+const TAG_ERR: u8 = 6;
+
+const MSG_WORD: u8 = 1;
+const MSG_GLOBAL: u8 = 2;
+const MSG_SYNC_S: u8 = 3;
+const MSG_SET_S: u8 = 4;
+const MSG_REPORT_DOCS: u8 = 5;
+const MSG_STOP: u8 = 6;
+
+const REPLY_WORD_DONE: u8 = 1;
+const REPLY_GLOBAL_DONE: u8 = 2;
+const REPLY_S_DELTA: u8 = 3;
+const REPLY_DOCS: u8 = 4;
+
+// ---------------------------------------------------------------- encode
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_i64(out: &mut Vec<u8>, v: i64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_counts(out: &mut Vec<u8>, c: &SparseCounts) {
+    put_u32(out, c.support() as u32);
+    for (t, n) in c.iter() {
+        put_u16(out, t);
+        put_u32(out, n);
+    }
+}
+
+fn put_word_token(out: &mut Vec<u8>, tok: &WordToken) {
+    put_u32(out, tok.word);
+    put_u32(out, tok.hops);
+    put_counts(out, &tok.counts);
+}
+
+fn put_global_token(out: &mut Vec<u8>, tok: &GlobalToken) {
+    put_u32(out, tok.hops);
+    put_i64s(out, &tok.s);
+}
+
+fn put_i64s(out: &mut Vec<u8>, s: &[i64]) {
+    put_u32(out, s.len() as u32);
+    for &v in s {
+        put_i64(out, v);
+    }
+}
+
+fn put_msg(out: &mut Vec<u8>, msg: &Msg) {
+    match msg {
+        Msg::Word(tok) => {
+            out.push(MSG_WORD);
+            put_word_token(out, tok);
+        }
+        Msg::Global(tok) => {
+            out.push(MSG_GLOBAL);
+            put_global_token(out, tok);
+        }
+        Msg::SyncS => out.push(MSG_SYNC_S),
+        Msg::SetS(s) => {
+            out.push(MSG_SET_S);
+            put_i64s(out, s);
+        }
+        Msg::ReportDocs => out.push(MSG_REPORT_DOCS),
+        Msg::Stop => out.push(MSG_STOP),
+    }
+}
+
+fn put_reply(out: &mut Vec<u8>, reply: &Reply) {
+    match reply {
+        Reply::WordDone(tok) => {
+            out.push(REPLY_WORD_DONE);
+            put_word_token(out, tok);
+        }
+        Reply::GlobalDone(tok) => {
+            out.push(REPLY_GLOBAL_DONE);
+            put_global_token(out, tok);
+        }
+        Reply::SDelta { worker, delta, tokens_processed } => {
+            out.push(REPLY_S_DELTA);
+            put_u32(out, *worker as u32);
+            put_i64s(out, delta);
+            put_u64(out, *tokens_processed);
+        }
+        Reply::Docs { worker, start_doc, ntd, z } => {
+            out.push(REPLY_DOCS);
+            put_u32(out, *worker as u32);
+            put_u64(out, *start_doc as u64);
+            put_u32(out, ntd.len() as u32);
+            for row in ntd {
+                put_counts(out, row);
+            }
+            put_u32(out, z.len() as u32);
+            for &v in z {
+                put_u16(out, v);
+            }
+        }
+    }
+}
+
+fn put_init(out: &mut Vec<u8>, init: &Init) {
+    put_u32(out, INIT_MAGIC);
+    put_u32(out, WIRE_VERSION);
+    put_u32(out, init.worker_id);
+    put_u32(out, init.num_workers);
+    put_u64(out, init.start_doc);
+    put_u32(out, init.t);
+    put_f64(out, init.alpha);
+    put_f64(out, init.beta);
+    put_u64(out, init.vocab);
+    put_u32(out, init.doc_offsets.len() as u32);
+    for &o in &init.doc_offsets {
+        put_u64(out, o);
+    }
+    put_u32(out, init.tokens.len() as u32);
+    for &w in &init.tokens {
+        put_u32(out, w);
+    }
+    put_u32(out, init.z.len() as u32);
+    for &z in &init.z {
+        put_u16(out, z);
+    }
+    put_i64s(out, &init.s);
+    put_u64(out, init.rng_state);
+    put_u64(out, init.rng_inc);
+}
+
+/// Serialize a frame to its tagged byte body (no length prefix — that is
+/// the transport's job).
+pub fn encode_frame(frame: &Frame) -> Vec<u8> {
+    let mut out = Vec::new();
+    match frame {
+        Frame::Init(init) => {
+            out.push(TAG_INIT);
+            put_init(&mut out, init);
+        }
+        Frame::InitOk => out.push(TAG_INIT_OK),
+        Frame::Ring(msg) => {
+            out.push(TAG_RING);
+            put_msg(&mut out, msg);
+        }
+        Frame::Forward(msg) => {
+            out.push(TAG_FORWARD);
+            put_msg(&mut out, msg);
+        }
+        Frame::Reply(reply) => {
+            out.push(TAG_REPLY);
+            put_reply(&mut out, reply);
+        }
+        Frame::Err(msg) => {
+            out.push(TAG_ERR);
+            let bytes = msg.as_bytes();
+            put_u32(&mut out, bytes.len() as u32);
+            out.extend_from_slice(bytes);
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------- decode
+
+/// Bounds-checked reader over a frame body.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cur { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.remaining() < n {
+            return Err(format!(
+                "truncated frame: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            ));
+        }
+        let slice = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(slice)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, String> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i64(&mut self) -> Result<i64, String> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read a `u32` element count and pre-check it against the remaining
+    /// bytes so garbage lengths error instead of attempting a huge
+    /// allocation.
+    fn len(&mut self, elem_bytes: usize) -> Result<usize, String> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(elem_bytes) > self.remaining() {
+            return Err(format!(
+                "frame length {n} x {elem_bytes}B exceeds remaining {} bytes",
+                self.remaining()
+            ));
+        }
+        Ok(n)
+    }
+
+    fn counts(&mut self) -> Result<SparseCounts, String> {
+        let n = self.len(6)?;
+        let mut pairs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let t = self.u16()?;
+            let c = self.u32()?;
+            pairs.push((t, c));
+        }
+        SparseCounts::from_sorted_pairs(pairs)
+    }
+
+    fn word_token(&mut self) -> Result<WordToken, String> {
+        let word = self.u32()?;
+        let hops = self.u32()?;
+        let counts = self.counts()?;
+        Ok(WordToken { word, counts, hops })
+    }
+
+    fn global_token(&mut self) -> Result<GlobalToken, String> {
+        let hops = self.u32()?;
+        let s = self.i64s()?;
+        Ok(GlobalToken { s, hops })
+    }
+
+    fn i64s(&mut self) -> Result<Vec<i64>, String> {
+        let n = self.len(8)?;
+        (0..n).map(|_| self.i64()).collect()
+    }
+
+    fn u16s(&mut self) -> Result<Vec<u16>, String> {
+        let n = self.len(2)?;
+        (0..n).map(|_| self.u16()).collect()
+    }
+
+    fn msg(&mut self) -> Result<Msg, String> {
+        Ok(match self.u8()? {
+            MSG_WORD => Msg::Word(self.word_token()?),
+            MSG_GLOBAL => Msg::Global(self.global_token()?),
+            MSG_SYNC_S => Msg::SyncS,
+            MSG_SET_S => Msg::SetS(self.i64s()?),
+            MSG_REPORT_DOCS => Msg::ReportDocs,
+            MSG_STOP => Msg::Stop,
+            tag => return Err(format!("unknown msg tag {tag}")),
+        })
+    }
+
+    fn reply(&mut self) -> Result<Reply, String> {
+        Ok(match self.u8()? {
+            REPLY_WORD_DONE => Reply::WordDone(self.word_token()?),
+            REPLY_GLOBAL_DONE => Reply::GlobalDone(self.global_token()?),
+            REPLY_S_DELTA => Reply::SDelta {
+                worker: self.u32()? as usize,
+                delta: self.i64s()?,
+                tokens_processed: self.u64()?,
+            },
+            REPLY_DOCS => {
+                let worker = self.u32()? as usize;
+                let start_doc = self.u64()? as usize;
+                // ntd rows are variable-width, so the byte pre-check uses
+                // the 4-byte-per-row floor (an empty row's length field)
+                let rows = self.len(4)?;
+                let mut ntd = Vec::with_capacity(rows);
+                for _ in 0..rows {
+                    ntd.push(self.counts()?);
+                }
+                let z = self.u16s()?;
+                Reply::Docs { worker, start_doc, ntd, z }
+            }
+            tag => return Err(format!("unknown reply tag {tag}")),
+        })
+    }
+
+    fn init(&mut self) -> Result<Init, String> {
+        let magic = self.u32()?;
+        if magic != INIT_MAGIC {
+            return Err(format!("bad Init magic {magic:#010x}: not an fnomad wire peer"));
+        }
+        let version = self.u32()?;
+        if version != WIRE_VERSION {
+            return Err(format!(
+                "protocol version mismatch: peer speaks wire v{version}, this binary \
+                 speaks v{WIRE_VERSION} — rebuild both sides from the same commit"
+            ));
+        }
+        let worker_id = self.u32()?;
+        let num_workers = self.u32()?;
+        let start_doc = self.u64()?;
+        let t = self.u32()?;
+        let alpha = self.f64()?;
+        let beta = self.f64()?;
+        let vocab = self.u64()?;
+        let n_off = self.len(8)?;
+        let doc_offsets = (0..n_off).map(|_| self.u64()).collect::<Result<_, _>>()?;
+        let n_tok = self.len(4)?;
+        let tokens = (0..n_tok).map(|_| self.u32()).collect::<Result<_, _>>()?;
+        let z = self.u16s()?;
+        let s = self.i64s()?;
+        let rng_state = self.u64()?;
+        let rng_inc = self.u64()?;
+        Ok(Init {
+            worker_id,
+            num_workers,
+            start_doc,
+            t,
+            alpha,
+            beta,
+            vocab,
+            doc_offsets,
+            tokens,
+            z,
+            s,
+            rng_state,
+            rng_inc,
+        })
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        let n = self.len(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|e| format!("invalid utf8 in frame: {e}"))
+    }
+
+    fn finish(self) -> Result<(), String> {
+        if self.remaining() != 0 {
+            return Err(format!("{} trailing bytes after frame", self.remaining()));
+        }
+        Ok(())
+    }
+}
+
+/// Parse a frame body produced by [`encode_frame`].  Errors (never
+/// panics) on unknown tags, truncation, oversized lengths, invalid
+/// sparse rows, and trailing bytes.
+pub fn decode_frame(buf: &[u8]) -> Result<Frame, String> {
+    let mut cur = Cur::new(buf);
+    let frame = match cur.u8().map_err(|_| "empty frame".to_string())? {
+        TAG_INIT => Frame::Init(Box::new(cur.init()?)),
+        TAG_INIT_OK => Frame::InitOk,
+        TAG_RING => Frame::Ring(cur.msg()?),
+        TAG_FORWARD => Frame::Forward(cur.msg()?),
+        TAG_REPLY => Frame::Reply(cur.reply()?),
+        TAG_ERR => Frame::Err(cur.string()?),
+        tag => return Err(format!("unknown frame tag {tag}")),
+    };
+    cur.finish()?;
+    Ok(frame)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::check;
+    use crate::util::rng::Pcg32;
+
+    fn roundtrip(frame: &Frame) -> Frame {
+        decode_frame(&encode_frame(frame)).expect("roundtrip decode failed")
+    }
+
+    /// Random sparse row with the given support size over a 64-topic
+    /// space (sorted by construction via inc).
+    fn random_counts(rng: &mut Pcg32, support: usize) -> SparseCounts {
+        let mut c = SparseCounts::default();
+        let mut placed = 0;
+        while placed < support {
+            let t = rng.below(64) as u16;
+            if c.get(t) == 0 {
+                placed += 1;
+            }
+            c.inc(t);
+            // sometimes pile extra mass on an existing topic
+            if rng.next_f64() < 0.3 {
+                c.inc(t);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn sparse_rows_roundtrip_all_support_sizes() {
+        // empty and single-entry rows are the edge cases the epoch
+        // protocol actually produces (zero-occurrence words; fresh docs)
+        check("SparseCounts wire roundtrip", 48, |rng| {
+            let support = match rng.below(4) {
+                0 => 0,
+                1 => 1,
+                _ => 2 + rng.below(40),
+            };
+            let counts = random_counts(rng, support);
+            let total = counts.total();
+            let hops = rng.below(32) as u32;
+            let tok = WordToken { word: rng.below(10_000) as u32, counts, hops };
+            let back = roundtrip(&Frame::Ring(Msg::Word(tok.clone())));
+            match back {
+                Frame::Ring(Msg::Word(got)) => {
+                    if got != tok {
+                        return Err(format!("token changed: {got:?} vs {tok:?}"));
+                    }
+                    if got.counts.total() != total {
+                        return Err("count mass changed".into());
+                    }
+                    if got.hops != tok.hops {
+                        return Err("hops changed".into());
+                    }
+                    Ok(())
+                }
+                other => Err(format!("wrong frame back: {other:?}")),
+            }
+        });
+    }
+
+    #[test]
+    fn global_token_and_totals_roundtrip() {
+        check("global token wire roundtrip", 32, |rng| {
+            let t = 1 + rng.below(256);
+            let s: Vec<i64> = (0..t).map(|_| rng.below(1 << 20) as i64 - (1 << 10)).collect();
+            let tok = GlobalToken { s: s.clone(), hops: rng.below(128) as u32 };
+            match roundtrip(&Frame::Forward(Msg::Global(tok.clone()))) {
+                Frame::Forward(Msg::Global(got)) => {
+                    if got != tok {
+                        return Err(format!("global token changed: {got:?}"));
+                    }
+                    Ok(())
+                }
+                other => Err(format!("wrong frame back: {other:?}")),
+            }
+        });
+    }
+
+    #[test]
+    fn every_plain_variant_roundtrips() {
+        for frame in [
+            Frame::InitOk,
+            Frame::Ring(Msg::SyncS),
+            Frame::Ring(Msg::ReportDocs),
+            Frame::Ring(Msg::Stop),
+            Frame::Ring(Msg::SetS(vec![-3, 0, 7, i64::MAX, i64::MIN])),
+            Frame::Err("ring on fire".into()),
+        ] {
+            assert_eq!(roundtrip(&frame), frame);
+        }
+    }
+
+    #[test]
+    fn replies_roundtrip() {
+        let mut rng = Pcg32::seeded(5);
+        let sdelta = Frame::Reply(Reply::SDelta {
+            worker: 3,
+            delta: vec![5, -5, 0, 123456789],
+            tokens_processed: u64::MAX / 3,
+        });
+        assert_eq!(roundtrip(&sdelta), sdelta);
+        let docs = Frame::Reply(Reply::Docs {
+            worker: 7,
+            start_doc: 421,
+            ntd: (0..9).map(|i| random_counts(&mut rng, i % 4)).collect(),
+            z: (0..100).map(|_| rng.below(64) as u16).collect(),
+        });
+        assert_eq!(roundtrip(&docs), docs);
+        // empty doc range (degenerate partitions ship these)
+        let empty = Frame::Reply(Reply::Docs { worker: 0, start_doc: 0, ntd: vec![], z: vec![] });
+        assert_eq!(roundtrip(&empty), empty);
+    }
+
+    #[test]
+    fn init_roundtrips() {
+        let init = Init {
+            worker_id: 2,
+            num_workers: 5,
+            start_doc: 1000,
+            t: 128,
+            alpha: 50.0 / 128.0,
+            beta: 0.01,
+            vocab: 7000,
+            doc_offsets: vec![0, 3, 8, 9],
+            tokens: vec![5, 5, 9, 0, 1, 2, 3, 4, 6999],
+            z: vec![0, 1, 2, 3, 4, 5, 127, 9, 11],
+            s: vec![7; 128],
+            rng_state: 0xDEADBEEFCAFE,
+            rng_inc: 0x1234567 | 1,
+        };
+        let frame = Frame::Init(Box::new(init));
+        assert_eq!(roundtrip(&frame), frame);
+    }
+
+    #[test]
+    fn init_rejects_magic_and_version_skew() {
+        let init = Init {
+            worker_id: 0,
+            num_workers: 1,
+            start_doc: 0,
+            t: 8,
+            alpha: 1.0,
+            beta: 0.01,
+            vocab: 4,
+            doc_offsets: vec![0, 1],
+            tokens: vec![0],
+            z: vec![0],
+            s: vec![1; 8],
+            rng_state: 1,
+            rng_inc: 3,
+        };
+        let good = encode_frame(&Frame::Init(Box::new(init)));
+        // bytes 1..5 are the magic, 5..9 the version (after the frame tag)
+        let mut bad_magic = good.clone();
+        bad_magic[1..5].copy_from_slice(&0u32.to_le_bytes());
+        assert!(decode_frame(&bad_magic).unwrap_err().contains("magic"));
+        let mut bad_version = good.clone();
+        bad_version[5..9].copy_from_slice(&(WIRE_VERSION + 1).to_le_bytes());
+        let err = decode_frame(&bad_version).unwrap_err();
+        assert!(err.contains("version mismatch"), "unhelpful skew error: {err}");
+        // the untampered frame still decodes
+        decode_frame(&good).unwrap();
+    }
+
+    #[test]
+    fn malformed_frames_error_instead_of_panicking() {
+        // empty buffer
+        assert!(decode_frame(&[]).is_err());
+        // unknown frame tag
+        assert!(decode_frame(&[99]).unwrap_err().contains("unknown frame tag"));
+        // truncated word token
+        let row = SparseCounts::from_sorted_pairs(vec![(1, 2), (3, 4)]).unwrap();
+        let mut buf = encode_frame(&Frame::Ring(Msg::Word(WordToken::new(7, row))));
+        buf.truncate(buf.len() - 3);
+        assert!(decode_frame(&buf).is_err());
+        // trailing bytes
+        let mut buf = encode_frame(&Frame::InitOk);
+        buf.push(0);
+        assert!(decode_frame(&buf).unwrap_err().contains("trailing"));
+        // absurd length field: must error, not try to allocate 4 GiB
+        let mut buf = vec![TAG_RING, MSG_SET_S];
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_frame(&buf).unwrap_err().contains("exceeds"));
+        // sparse row violating sortedness / nonzero-count invariants
+        let mut buf = vec![TAG_RING, MSG_WORD];
+        buf.extend_from_slice(&7u32.to_le_bytes()); // word
+        buf.extend_from_slice(&0u32.to_le_bytes()); // hops
+        buf.extend_from_slice(&2u32.to_le_bytes()); // support
+        for (t, c) in [(5u16, 1u32), (2, 1)] {
+            buf.extend_from_slice(&t.to_le_bytes());
+            buf.extend_from_slice(&c.to_le_bytes());
+        }
+        assert!(decode_frame(&buf).unwrap_err().contains("increasing"));
+        let mut buf = vec![TAG_RING, MSG_WORD];
+        buf.extend_from_slice(&7u32.to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&3u16.to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes()); // zero count
+        assert!(decode_frame(&buf).unwrap_err().contains("zero count"));
+    }
+
+    #[test]
+    fn random_bytes_never_panic_the_decoder() {
+        check("decoder is total on garbage", 64, |rng| {
+            let n = rng.below(200);
+            let buf: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            // any outcome is fine — reaching here without a panic is the test
+            let _ = decode_frame(&buf);
+            Ok(())
+        });
+    }
+}

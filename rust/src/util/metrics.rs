@@ -56,7 +56,8 @@ pub fn write_csv(path: &Path, series: &[Series]) -> std::io::Result<()> {
     f.write_all(to_csv(series).as_bytes())
 }
 
-/// Wall-clock stopwatch with named laps (coordinator progress logging).
+/// Minimal wall-clock stopwatch: construction starts it, [`Self::secs`]
+/// reads the elapsed seconds (per-epoch timing in the engines).
 pub struct Stopwatch {
     start: Instant,
 }

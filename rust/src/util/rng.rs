@@ -36,6 +36,19 @@ impl Pcg32 {
         Pcg32::new(self.next_u64(), stream.wrapping_mul(0x9E3779B97F4A7C15) | 1)
     }
 
+    /// Raw `(state, inc)` pair — the full generator state.  Shipping these
+    /// two words to another process ([`Self::from_parts`]) continues the
+    /// *identical* sequence, which is how remote nomad workers keep the
+    /// same per-slot RNG streams as their in-process counterparts.
+    pub fn to_parts(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from [`Self::to_parts`] output.
+    pub fn from_parts(state: u64, inc: u64) -> Pcg32 {
+        Pcg32 { state, inc }
+    }
+
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
@@ -234,6 +247,19 @@ mod tests {
     fn deterministic_across_instances() {
         let mut a = Pcg32::new(42, 7);
         let mut b = Pcg32::new(42, 7);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn parts_roundtrip_continues_the_sequence() {
+        let mut a = Pcg32::new(7, 3);
+        for _ in 0..17 {
+            a.next_u32();
+        }
+        let (state, inc) = a.to_parts();
+        let mut b = Pcg32::from_parts(state, inc);
         for _ in 0..1000 {
             assert_eq!(a.next_u32(), b.next_u32());
         }

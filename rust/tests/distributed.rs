@@ -1,0 +1,197 @@
+//! Cross-process nomad over loopback TCP: a mixed local/remote ring must
+//! satisfy the same epoch protocol, exact-fold invariant, and gathered
+//! state consistency as the all-threads ring, and ring failures (a
+//! dropped peer, a rejected handshake) must be descriptive errors, not
+//! hangs.
+
+use std::io::{BufRead, BufReader};
+use std::net::{TcpListener, TcpStream};
+use std::process::{Command, Stdio};
+use std::thread;
+
+use fnomad_lda::corpus::preset;
+use fnomad_lda::lda::state::Hyper;
+use fnomad_lda::nomad::net::{read_frame, serve, write_frame, ServeOpts};
+use fnomad_lda::nomad::wire::{Frame, Init};
+use fnomad_lda::nomad::{NomadConfig, NomadRuntime};
+
+/// Bind a loopback `serve-worker` on a free port, serving one session on
+/// a background thread.
+fn spawn_loopback_worker() -> (String, thread::JoinHandle<Result<(), String>>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = thread::spawn(move || serve(listener, &ServeOpts { once: true, quiet: true }));
+    (addr, handle)
+}
+
+/// The acceptance scenario: 1 local thread + 1 remote loopback worker run
+/// ≥3 epochs on `tiny`; the gathered state passes the same consistency
+/// checks as the threaded run of identical seed and ring size, and both
+/// keep the exact totals `Σ s == num_tokens`.
+#[test]
+fn loopback_mixed_ring_matches_threaded_consistency() {
+    let corpus = preset("tiny").unwrap();
+    let hyper = Hyper::paper_default(8);
+
+    let (addr, server) = spawn_loopback_worker();
+    let cfg = NomadConfig { workers: 1, seed: 11, remote: vec![addr] };
+    let mut mixed = NomadRuntime::new(&corpus, hyper, cfg);
+    assert_eq!(mixed.ring_size(), 2);
+    for _ in 0..3 {
+        let report = mixed.run_epoch();
+        // every occurrence lives in exactly one slot's partition → the
+        // exact-fold invariant holds across the process boundary
+        assert_eq!(report.processed as usize, corpus.num_tokens());
+    }
+    let state = mixed.gather_state(&corpus);
+    state.check_consistency(&corpus).unwrap();
+    assert_eq!(state.total_tokens() as usize, corpus.num_tokens());
+    mixed.shutdown();
+    server.join().unwrap().unwrap();
+
+    // all-threads reference ring: same seed, same slot count
+    let cfg = NomadConfig { workers: 2, seed: 11, ..Default::default() };
+    let mut threaded = NomadRuntime::new(&corpus, hyper, cfg);
+    for _ in 0..3 {
+        threaded.run_epoch();
+    }
+    let reference = threaded.gather_state(&corpus);
+    reference.check_consistency(&corpus).unwrap();
+    assert_eq!(reference.total_tokens(), state.total_tokens());
+    threaded.shutdown();
+}
+
+/// A fully remote ring (0 local threads) works too: the coordinator only
+/// relays, every token is resampled out of process.
+#[test]
+fn fully_remote_ring_trains() {
+    let corpus = preset("tiny").unwrap();
+    let (addr, server) = spawn_loopback_worker();
+    let cfg = NomadConfig { workers: 0, seed: 3, remote: vec![addr] };
+    let mut rt = NomadRuntime::new(&corpus, Hyper::paper_default(8), cfg);
+    for _ in 0..2 {
+        let report = rt.run_epoch();
+        assert_eq!(report.processed as usize, corpus.num_tokens());
+    }
+    let state = rt.gather_state(&corpus);
+    state.check_consistency(&corpus).unwrap();
+    rt.shutdown();
+    server.join().unwrap().unwrap();
+}
+
+/// Two real processes through the actual CLI: `serve-worker` hosts the
+/// remote slot, `train --remote` drives the ring, and the run reports
+/// nonzero throughput.
+#[test]
+fn two_process_loopback_via_cli() {
+    let bin = env!("CARGO_BIN_EXE_fnomad-lda");
+    let mut worker = Command::new(bin)
+        .args(["serve-worker", "--listen", "127.0.0.1:0", "--once", "--quiet"])
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawn serve-worker");
+    let mut banner = String::new();
+    BufReader::new(worker.stdout.take().unwrap()).read_line(&mut banner).unwrap();
+    let addr = banner
+        .trim()
+        .strip_prefix("listening on ")
+        .unwrap_or_else(|| panic!("unexpected serve-worker banner: {banner:?}"));
+
+    let out = Command::new(bin)
+        .args(["train", "--preset", "tiny", "--topics", "8", "--iters", "3"])
+        .args(["--runtime", "nomad", "--workers", "1", "--remote", addr])
+        .args(["--eval", "rust", "--quiet"])
+        .output()
+        .expect("run train");
+    assert!(
+        out.status.success(),
+        "train failed: {}\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("throughput"), "no summary line: {stdout}");
+    assert!(!stdout.contains("throughput = 0 tokens/s"), "zero throughput: {stdout}");
+
+    let status = worker.wait().expect("serve-worker exit");
+    assert!(status.success(), "serve-worker failed: {status}");
+}
+
+/// A TCP peer that vanishes mid-epoch must surface as a descriptive
+/// error from `try_run_epoch`, not a coordinator deadlock.
+#[test]
+fn dropped_tcp_peer_is_an_error_not_a_hang() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let fake_peer = thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        match read_frame(&mut reader).unwrap() {
+            Frame::Init(_) => {}
+            other => panic!("expected Init, got {other:?}"),
+        }
+        write_frame(&mut writer, &Frame::InitOk).unwrap();
+        // accept one ring message, then vanish mid-epoch
+        let _ = read_frame(&mut reader);
+    });
+
+    let corpus = preset("tiny").unwrap();
+    let cfg = NomadConfig { workers: 1, seed: 2, remote: vec![addr.clone()] };
+    let mut rt = NomadRuntime::new(&corpus, Hyper::paper_default(8), cfg);
+    let err = rt.try_run_epoch().unwrap_err();
+    assert!(err.contains(&addr), "error must name the peer: {err}");
+    assert!(
+        err.contains("disconnected") || err.contains("send failed"),
+        "error must describe the drop: {err}"
+    );
+    fake_peer.join().unwrap();
+    rt.shutdown();
+}
+
+/// `serve-worker` answers a malformed handshake with a descriptive `Err`
+/// frame instead of dying silently.
+#[test]
+fn serve_worker_rejects_bad_handshakes() {
+    // a frame that is not Init
+    let (addr, server) = spawn_loopback_worker();
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    write_frame(&mut writer, &Frame::InitOk).unwrap();
+    match read_frame(&mut reader).unwrap() {
+        Frame::Err(e) => assert!(e.contains("Init"), "unhelpful rejection: {e}"),
+        other => panic!("expected Err frame, got {other:?}"),
+    }
+    // a failed --once session is the server's error too (exit code)
+    server.join().unwrap().unwrap_err();
+
+    // an Init whose payload is inconsistent (z shorter than the slice)
+    let (addr, server) = spawn_loopback_worker();
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let bad = Init {
+        worker_id: 1,
+        num_workers: 2,
+        start_doc: 0,
+        t: 8,
+        alpha: 50.0 / 8.0,
+        beta: 0.01,
+        vocab: 4,
+        doc_offsets: vec![0, 3],
+        tokens: vec![0, 1, 2],
+        z: vec![0],
+        s: vec![1; 8],
+        rng_state: 1,
+        rng_inc: 3,
+    };
+    write_frame(&mut writer, &Frame::Init(Box::new(bad))).unwrap();
+    match read_frame(&mut reader).unwrap() {
+        Frame::Err(e) => {
+            assert!(e.contains("invalid Init"), "unhelpful rejection: {e}");
+        }
+        other => panic!("expected Err frame, got {other:?}"),
+    }
+    server.join().unwrap().unwrap_err();
+}

@@ -60,6 +60,34 @@ fn resume_and_save_every_require_checkpoint() {
     assert!(train(&tiny(RuntimeKind::Serial).save_every(2)).is_err());
 }
 
+#[test]
+fn zero_workers_is_a_config_error_not_an_assertion() {
+    // `--workers 0` used to die on `assert!(cfg.workers >= 1)` inside
+    // NomadRuntime::from_state; it must be a proper driver error naming
+    // the flag, for every worker-driven runtime
+    for rt in [RuntimeKind::Nomad, RuntimeKind::Ps, RuntimeKind::AdLda, RuntimeKind::NomadSim] {
+        let err = train(&tiny(rt).workers(0)).unwrap_err();
+        assert!(err.contains("--workers"), "{rt}: error must name the flag: {err}");
+    }
+}
+
+#[test]
+fn remote_flag_requires_the_nomad_runtime() {
+    let cfg = tiny(RuntimeKind::Serial).remote(vec!["127.0.0.1:7777".into()]);
+    let err = train(&cfg).unwrap_err();
+    assert!(err.contains("--remote"), "error must name the flag: {err}");
+    assert!(err.contains("nomad"), "error must name the required runtime: {err}");
+}
+
+#[test]
+fn unreachable_remote_worker_is_a_construction_error() {
+    // 127.0.0.1:1 is essentially never listening; the engine build must
+    // fail with the address in the message instead of panicking
+    let cfg = tiny(RuntimeKind::Nomad).workers(1).remote(vec!["127.0.0.1:1".into()]);
+    let err = train(&cfg).unwrap_err();
+    assert!(err.contains("127.0.0.1:1"), "error must name the address: {err}");
+}
+
 /// Counts every callback the driver fires.
 #[derive(Default)]
 struct CountingObserver {

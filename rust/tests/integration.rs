@@ -98,7 +98,8 @@ fn runtimes_reach_comparable_quality_mid_scale() {
 
     // threaded nomad
     let nomad = {
-        let mut rt = NomadRuntime::new(&corpus, hyper, NomadConfig { workers: 4, seed: 1 });
+        let cfg = NomadConfig { workers: 4, seed: 1, ..Default::default() };
+        let mut rt = NomadRuntime::new(&corpus, hyper, cfg);
         for _ in 0..iters {
             rt.run_epoch();
         }
