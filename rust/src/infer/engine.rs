@@ -1,0 +1,488 @@
+//! Fold-in Gibbs inference for *unseen* documents against a frozen
+//! [`TopicModel`].
+//!
+//! With φ̂ frozen, resampling token j of a query document targets
+//!
+//! ```text
+//! p(z_j = t) ∝ (n_td + α) · φ̂_t(w_j)
+//!            = β·q_t + n̂_wt·q_t,   q_t = (n_td + α)/(n̂_t + β̄)
+//! ```
+//!
+//! — the doc-major q/r decomposition of paper §3.2 with the word side
+//! constant.  `q` changes in O(1) coordinates per token, so it lives in a
+//! per-thread [`FTree`] (Θ(log T) draw *and* Θ(log T) update); the `r`
+//! term is |T̂_w|-sparse and is rebuilt per token as a sparse cumsum.
+//! Per-token cost: Θ(|T̂_w| + log T).  The previous serving path (the
+//! loop formerly inlined in `lda::perplexity`) scanned all T topics per
+//! token; that loop now delegates here.
+//!
+//! Determinism: every document draws from its own PCG32 stream
+//! `(seed, doc index)`, so [`infer_batch`] returns bit-identical θ̂ for
+//! any thread count, and repeated calls replay exactly.
+
+use crate::corpus::Corpus;
+use crate::lda::state::SparseCounts;
+use crate::sampler::bsearch::SparseCumSum;
+use crate::sampler::ftree::FTree;
+use crate::sampler::DiscreteSampler;
+use crate::util::rng::Pcg32;
+
+use super::model::TopicModel;
+
+/// Inference knobs: fold-in Gibbs sweeps and the RNG seed.
+#[derive(Clone, Copy, Debug)]
+pub struct InferOpts {
+    /// Gibbs sweeps over the query document with φ̂ frozen
+    pub sweeps: usize,
+    /// base seed; each document uses the stream `(seed, doc index)`
+    pub seed: u64,
+}
+
+impl Default for InferOpts {
+    fn default() -> Self {
+        InferOpts { sweeps: 20, seed: 0 }
+    }
+}
+
+/// One inferred document: the smoothed topic mixture θ̂ plus the raw
+/// folded-in counts it came from.
+#[derive(Clone, Debug)]
+pub struct Inference {
+    /// dense θ̂_d (length T, sums to 1)
+    pub theta: Vec<f64>,
+    /// folded-in `n_td`
+    pub counts: SparseCounts,
+    /// query document length
+    pub tokens: usize,
+}
+
+impl Inference {
+    fn from_counts(model: &TopicModel, counts: SparseCounts, tokens: usize) -> Inference {
+        let h = model.hyper();
+        let denom = tokens as f64 + h.t as f64 * h.alpha;
+        let theta = (0..h.t)
+            .map(|t| (counts.get(t as u16) as f64 + h.alpha) / denom)
+            .collect();
+        Inference { theta, counts, tokens }
+    }
+
+    /// The k largest θ̂ entries as `(topic, θ̂)`, mass descending with
+    /// topic-id ascending as the deterministic tie-break.  (The order
+    /// vector is usize: at the maximum legal T = 65536, a u16 range
+    /// would wrap to empty.)
+    pub fn top_topics(&self, k: usize) -> Vec<(u16, f64)> {
+        let mut order: Vec<usize> = (0..self.theta.len()).collect();
+        order.sort_unstable_by(|&a, &b| {
+            self.theta[b].total_cmp(&self.theta[a]).then(a.cmp(&b))
+        });
+        order.truncate(k);
+        order.into_iter().map(|t| (t as u16, self.theta[t])).collect()
+    }
+}
+
+/// Held-out score of one document (the second half, given the first).
+#[derive(Clone, Copy, Debug)]
+pub struct HeldOutScore {
+    /// Σ log p(w | θ̂, φ̂) over the held-out tokens
+    pub log_likelihood: f64,
+    pub held_tokens: usize,
+}
+
+/// Per-thread fold-in sampler over one frozen model: the `q` F+tree, the
+/// sparse `r` scratch, and the assignment scratch, all reused across
+/// documents without reallocating.
+pub struct Inferencer<'m> {
+    model: &'m TopicModel,
+    /// `n̂_t + β̄` per topic (frozen denominators)
+    denom: Vec<f64>,
+    /// `α/(n̂_t + β̄)` — the outside-document leaf value of the q tree
+    base: Vec<f64>,
+    tree: FTree,
+    r: SparseCumSum,
+    /// assignment scratch for the current document
+    z: Vec<u16>,
+}
+
+impl<'m> Inferencer<'m> {
+    pub fn new(model: &'m TopicModel) -> Inferencer<'m> {
+        let h = model.hyper();
+        let bb = model.betabar();
+        let denom: Vec<f64> =
+            (0..h.t).map(|t| model.topic_total(t) as f64 + bb).collect();
+        let base: Vec<f64> = denom.iter().map(|&d| h.alpha / d).collect();
+        let tree = FTree::with_capacity(&base, h.t);
+        Inferencer {
+            model,
+            denom,
+            base,
+            tree,
+            r: SparseCumSum::with_capacity(64),
+            z: Vec::new(),
+        }
+    }
+
+    pub fn model(&self) -> &'m TopicModel {
+        self.model
+    }
+
+    /// The core fold-in loop: Gibbs over `tokens` with φ̂ frozen, starting
+    /// from a uniform-random assignment drawn from `rng`.  Returns the
+    /// final `n_td`.  Errors (without sampling) on token ids outside the
+    /// model vocabulary.
+    pub fn fold_in(
+        &mut self,
+        tokens: &[u32],
+        sweeps: usize,
+        rng: &mut Pcg32,
+    ) -> Result<SparseCounts, String> {
+        let model = self.model;
+        let t = model.num_topics();
+        let vocab = model.vocab();
+        if let Some(&w) = tokens.iter().find(|&&w| w as usize >= vocab) {
+            return Err(format!("token id {w} >= model vocabulary {vocab}"));
+        }
+        let h = model.hyper();
+        let mut counts = SparseCounts::with_capacity(tokens.len().min(t));
+        self.z.clear();
+        for _ in tokens {
+            let topic = rng.below(t) as u16;
+            self.z.push(topic);
+            counts.inc(topic);
+        }
+        // enter the document: raise the support leaves from base to q_t
+        for (topic, c) in counts.iter() {
+            let q = (c as f64 + h.alpha) / self.denom[topic as usize];
+            self.tree.set(topic as usize, q);
+        }
+        for _ in 0..sweeps {
+            for (j, &w) in tokens.iter().enumerate() {
+                let old = self.z[j];
+                counts.dec(old);
+                let q_old = (counts.get(old) as f64 + h.alpha) / self.denom[old as usize];
+                self.tree.set(old as usize, q_old);
+
+                // r term over the frozen word support, using fresh q leaves
+                self.r.clear();
+                for (topic, c) in model.word_row(w as usize).iter() {
+                    self.r.push(topic as u32, c as f64 * self.tree.leaf(topic as usize));
+                }
+                let r_total = self.r.total();
+
+                let u = rng.uniform(h.beta * self.tree.total() + r_total);
+                let new = if u < r_total {
+                    self.r.sample(u) as u16
+                } else {
+                    self.tree.descend((u - r_total) / h.beta) as u16
+                };
+
+                counts.inc(new);
+                self.z[j] = new;
+                let q_new = (counts.get(new) as f64 + h.alpha) / self.denom[new as usize];
+                self.tree.set(new as usize, q_new);
+            }
+        }
+        // leave the document: lower the final support back to base (any
+        // topic whose count hit zero mid-document already holds base —
+        // q with n_td = 0 *is* the base formula)
+        for (topic, _) in counts.iter() {
+            let b = self.base[topic as usize];
+            self.tree.set(topic as usize, b);
+        }
+        Ok(counts)
+    }
+
+    /// Infer θ̂ for one unseen document with the per-document RNG stream
+    /// `(opts.seed, index)` — the determinism contract of [`infer_batch`].
+    pub fn infer_doc_indexed(
+        &mut self,
+        tokens: &[u32],
+        index: u64,
+        opts: &InferOpts,
+    ) -> Result<Inference, String> {
+        let mut rng = Pcg32::new(opts.seed, index);
+        let counts = self.fold_in(tokens, opts.sweeps, &mut rng)?;
+        Ok(Inference::from_counts(self.model, counts, tokens.len()))
+    }
+
+    /// Infer θ̂ for one unseen document (document index 0's stream).
+    pub fn infer_doc(&mut self, tokens: &[u32], opts: &InferOpts) -> Result<Inference, String> {
+        self.infer_doc_indexed(tokens, 0, opts)
+    }
+
+    /// Document-completion held-out score: fold in the first half of
+    /// `tokens` using `rng`, then score the second half under the
+    /// resulting θ̂ (see [`TopicModel::predictive_prob`]).
+    pub fn score_doc_with(
+        &mut self,
+        tokens: &[u32],
+        sweeps: usize,
+        rng: &mut Pcg32,
+    ) -> Result<HeldOutScore, String> {
+        let half = tokens.len() / 2;
+        let (observed, held) = tokens.split_at(half);
+        if let Some(&w) = held.iter().find(|&&w| (w as usize) >= self.model.vocab()) {
+            return Err(format!("token id {w} >= model vocabulary {}", self.model.vocab()));
+        }
+        let counts = self.fold_in(observed, sweeps, rng)?;
+        let mut log_likelihood = 0.0f64;
+        for &w in held {
+            let pw = self.model.predictive_prob(&counts, half, w);
+            log_likelihood += pw.max(1e-300).ln();
+        }
+        Ok(HeldOutScore { log_likelihood, held_tokens: held.len() })
+    }
+
+    /// [`Self::score_doc_with`] on the document's own seeded stream.
+    pub fn score_doc(&mut self, tokens: &[u32], opts: &InferOpts) -> Result<HeldOutScore, String> {
+        let mut rng = Pcg32::new(opts.seed, 0);
+        self.score_doc_with(tokens, opts.sweeps, &mut rng)
+    }
+}
+
+/// Infer every document of `corpus` against `model` on `threads` OS
+/// threads.  Document i always uses the RNG stream `(opts.seed, i)`, so
+/// the result is bit-identical across thread counts and runs.
+pub fn infer_batch(
+    model: &TopicModel,
+    corpus: &Corpus,
+    opts: &InferOpts,
+    threads: usize,
+) -> Result<Vec<Inference>, String> {
+    if threads == 0 {
+        return Err("infer_batch needs at least one thread".into());
+    }
+    if corpus.vocab > model.vocab() {
+        return Err(format!(
+            "corpus vocabulary {} exceeds the model's {}",
+            corpus.vocab,
+            model.vocab()
+        ));
+    }
+    let n = corpus.num_docs();
+    let mut out: Vec<Option<Inference>> = (0..n).map(|_| None).collect();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let chunk = n.div_ceil(threads);
+    let result: Result<(), String> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (c, slots) in out.chunks_mut(chunk).enumerate() {
+            handles.push(s.spawn(move || -> Result<(), String> {
+                let mut inf = Inferencer::new(model);
+                for (j, slot) in slots.iter_mut().enumerate() {
+                    let doc = c * chunk + j;
+                    *slot = Some(inf.infer_doc_indexed(corpus.doc(doc), doc as u64, opts)?);
+                }
+                Ok(())
+            }));
+        }
+        for h in handles {
+            h.join().map_err(|_| "inference thread panicked".to_string())??;
+        }
+        Ok(())
+    });
+    result?;
+    Ok(out.into_iter().map(|o| o.expect("every doc inferred")).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::presets::preset;
+    use crate::lda::state::{Hyper, LdaState};
+    use crate::lda::{FLdaWord, Sweep};
+    use crate::util::quickcheck::check;
+
+    fn trained() -> (Corpus, TopicModel) {
+        let corpus = preset("tiny").unwrap();
+        let mut rng = Pcg32::seeded(21);
+        let mut state = LdaState::init_random(&corpus, Hyper::paper_default(8), &mut rng);
+        let mut sweeper = FLdaWord::new(&state, &corpus);
+        for _ in 0..10 {
+            sweeper.sweep(&mut state, &corpus, &mut rng);
+        }
+        let model = TopicModel::from_state(&state, Vec::new());
+        (corpus, model)
+    }
+
+    #[test]
+    fn theta_is_a_distribution() {
+        let (corpus, model) = trained();
+        let mut inf = Inferencer::new(&model);
+        let res = inf.infer_doc(corpus.doc(0), &InferOpts::default()).unwrap();
+        assert_eq!(res.theta.len(), model.num_topics());
+        let sum: f64 = res.theta.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "theta sums to {sum}");
+        assert_eq!(res.counts.total() as usize, corpus.doc(0).len());
+        assert_eq!(res.tokens, corpus.doc(0).len());
+        // top topics are sorted by mass and bounded
+        let top = res.top_topics(3);
+        assert_eq!(top.len(), 3);
+        assert!(top[0].1 >= top[1].1 && top[1].1 >= top[2].1);
+    }
+
+    #[test]
+    fn empty_doc_and_zero_sweeps_are_fine() {
+        let (corpus, model) = trained();
+        let mut inf = Inferencer::new(&model);
+        let res = inf.infer_doc(&[], &InferOpts::default()).unwrap();
+        // no evidence → the uniform prior mixture
+        for &th in &res.theta {
+            assert!((th - 1.0 / model.num_topics() as f64).abs() < 1e-12);
+        }
+        let res = inf
+            .infer_doc(corpus.doc(1), &InferOpts { sweeps: 0, seed: 5 })
+            .unwrap();
+        assert_eq!(res.counts.total() as usize, corpus.doc(1).len());
+    }
+
+    #[test]
+    fn out_of_vocabulary_tokens_are_a_named_error() {
+        let (_, model) = trained();
+        let mut inf = Inferencer::new(&model);
+        let bad = model.vocab() as u32;
+        let err = inf.infer_doc(&[0, bad], &InferOpts::default()).unwrap_err();
+        assert!(err.contains(&bad.to_string()), "error must name the token: {err}");
+        let err = inf
+            .score_doc(&[0, 1, bad, bad], &InferOpts::default())
+            .unwrap_err();
+        assert!(err.contains("vocabulary"), "unhelpful error: {err}");
+    }
+
+    /// Fixed seed ⇒ identical θ̂ across repeated calls and across fresh
+    /// engines (the artifact determinism promise).
+    #[test]
+    fn fixed_seed_is_deterministic_across_runs() {
+        let (corpus, model) = trained();
+        let opts = InferOpts { sweeps: 7, seed: 99 };
+        let mut a = Inferencer::new(&model);
+        let mut b = Inferencer::new(&model);
+        // warm engine `a` on other docs first: scratch reuse must not leak
+        let _ = a.infer_doc(corpus.doc(5), &opts).unwrap();
+        let ra = a.infer_doc(corpus.doc(0), &opts).unwrap();
+        let rb = b.infer_doc(corpus.doc(0), &opts).unwrap();
+        assert_eq!(ra.theta, rb.theta);
+        assert_eq!(ra.counts, rb.counts);
+    }
+
+    /// Thread counts must not change results: doc i's stream is
+    /// `(seed, i)` regardless of which thread runs it.
+    #[test]
+    fn infer_batch_is_identical_across_thread_counts() {
+        let (corpus, model) = trained();
+        let opts = InferOpts { sweeps: 5, seed: 3 };
+        let one = infer_batch(&model, &corpus, &opts, 1).unwrap();
+        for threads in [2usize, 4, 7] {
+            let many = infer_batch(&model, &corpus, &opts, threads).unwrap();
+            assert_eq!(one.len(), many.len());
+            for (i, (a, b)) in one.iter().zip(&many).enumerate() {
+                assert_eq!(a.theta, b.theta, "doc {i} diverged at {threads} threads");
+            }
+        }
+        // and doc 0 of the batch matches the single-doc entry point
+        let mut inf = Inferencer::new(&model);
+        let single = inf.infer_doc(corpus.doc(0), &opts).unwrap();
+        assert_eq!(single.theta, one[0].theta);
+    }
+
+    /// After every document the q tree must be back at the base leaves —
+    /// the enter/leave discipline that keeps per-doc cost at
+    /// O(|T_d| log T) instead of a Θ(T) refill.
+    #[test]
+    fn tree_returns_to_base_after_each_doc() {
+        let (corpus, model) = trained();
+        let mut inf = Inferencer::new(&model);
+        for d in 0..10 {
+            let _ = inf.infer_doc(corpus.doc(d), &InferOpts::default()).unwrap();
+            for t in 0..model.num_topics() {
+                let got = inf.tree.leaf(t);
+                let want = inf.base[t];
+                assert!(
+                    (got - want).abs() < 1e-12 * want.max(1e-300),
+                    "doc {d} leaf {t}: {got} vs base {want}"
+                );
+            }
+        }
+    }
+
+    /// Single-site correctness: for a one-token document with one sweep,
+    /// the resampled topic's distribution is exactly φ̂ normalized (the
+    /// conditional with the token removed is (0 + α)·φ̂_t(w)).  This pins
+    /// the q/r decomposition against the dense model estimate.
+    #[test]
+    fn single_token_fold_in_matches_dense_conditional() {
+        let (_, model) = trained();
+        check("fold-in single-site distribution == φ̂", 4, |rng| {
+            let w = rng.below(model.vocab()) as u32;
+            let t = model.num_topics();
+            let p: Vec<f64> = (0..t).map(|k| model.phi(k as u16, w as usize)).collect();
+            let total: f64 = p.iter().sum();
+            let mut inf = Inferencer::new(&model);
+            let draws = 30_000;
+            let mut freq = vec![0usize; t];
+            let mut doc_rng = Pcg32::new(rng.next_u64(), 17);
+            for _ in 0..draws {
+                let counts = inf.fold_in(&[w], 1, &mut doc_rng).unwrap();
+                let (topic, c) = counts.iter().next().unwrap();
+                assert_eq!(c, 1);
+                freq[topic as usize] += 1;
+            }
+            for (k, (&f, &pk)) in freq.iter().zip(&p).enumerate() {
+                let want = pk / total;
+                let got = f as f64 / draws as f64;
+                let tol = 4.5 * (want.max(1e-4) / draws as f64).sqrt();
+                if (got - want).abs() > tol {
+                    return Err(format!(
+                        "word {w} topic {k}: freq {got} vs φ̂ {want} (tol {tol})"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// T = 65536 is legal (u16::MAX + 1 topics): top_topics must not
+    /// wrap its index range to empty.
+    #[test]
+    fn top_topics_survive_the_maximum_topic_count() {
+        let t = u16::MAX as usize + 1;
+        let mut theta = vec![1.0 / t as f64; t];
+        theta[65_535] = 0.5;
+        theta[7] = 0.25;
+        let inf = Inference { theta, counts: SparseCounts::default(), tokens: 0 };
+        let top = inf.top_topics(2);
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[0].0, u16::MAX);
+        assert_eq!(top[1].0, 7);
+    }
+
+    #[test]
+    fn score_doc_is_finite_and_negative() {
+        let (corpus, model) = trained();
+        let mut inf = Inferencer::new(&model);
+        let score = inf.score_doc(corpus.doc(2), &InferOpts::default()).unwrap();
+        assert_eq!(score.held_tokens, corpus.doc(2).len() - corpus.doc(2).len() / 2);
+        assert!(score.log_likelihood.is_finite());
+        assert!(score.log_likelihood < 0.0);
+        // better than the uniform-over-vocab baseline on in-domain text
+        let uniform = -(model.vocab() as f64).ln() * score.held_tokens as f64;
+        assert!(
+            score.log_likelihood > uniform,
+            "trained score {} not better than uniform {uniform}",
+            score.log_likelihood
+        );
+    }
+
+    #[test]
+    fn infer_batch_rejects_mismatched_vocab_and_zero_threads() {
+        let (corpus, model) = trained();
+        assert!(infer_batch(&model, &corpus, &InferOpts::default(), 0)
+            .unwrap_err()
+            .contains("thread"));
+        let mut wide = corpus.clone();
+        wide.vocab = model.vocab() + 1;
+        assert!(infer_batch(&model, &wide, &InferOpts::default(), 2)
+            .unwrap_err()
+            .contains("vocabulary"));
+    }
+}

@@ -1,0 +1,34 @@
+//! Model serving: the missing half of the system next to training.
+//!
+//! Training produces a mutable, corpus-bound [`crate::lda::LdaState`];
+//! serving heavy query traffic wants a frozen, self-contained artifact
+//! and an inference path whose per-token cost does not scale linearly in
+//! the topic count.  Three layers, mirroring LightLDA-style
+//! train/serve separation:
+//!
+//! * [`model`] — the immutable [`TopicModel`] (sparse topic–word counts,
+//!   topic totals, hyperparameters, optional vocabulary strings) with its
+//!   versioned `FNTM0001` binary format and a total, bounds-checked
+//!   decoder.  `fnomad-lda export-model` freezes a training checkpoint
+//!   into one.
+//! * [`engine`] — fold-in Gibbs inference for unseen documents with φ̂
+//!   frozen: a per-thread F+tree over the q term of
+//!   `(n_td + α)·φ̂_t(w)` gives Θ(|T̂_w| + log T) per token (no O(T)
+//!   scan), per-document RNG streams give bit-identical results across
+//!   runs and thread counts, and `lda::perplexity` delegates its fold-in
+//!   here.
+//! * [`server`] + [`wire`] — a length-prefixed TCP query protocol
+//!   (`fnomad-lda serve-model` / `fnomad-lda infer --remote`): the model
+//!   loads once and N handler threads answer `InferDoc` / `TopWords` /
+//!   `ModelInfo` queries, tokenizing raw-text requests with the training
+//!   text pipeline.
+
+pub mod engine;
+pub mod model;
+pub mod server;
+pub mod wire;
+
+pub use engine::{infer_batch, HeldOutScore, InferOpts, Inference, Inferencer};
+pub use model::TopicModel;
+pub use server::{query_one, serve_model, Client, ModelHost, ServeModelOpts};
+pub use wire::{Request, Response};

@@ -1,0 +1,483 @@
+//! The frozen serving artifact: an immutable [`TopicModel`] holding the
+//! trained topic–word counts, and its versioned `FNTM0001` binary format.
+//!
+//! Training state ([`LdaState`]) is mutable and corpus-bound: resuming it
+//! needs the full corpus to rederive counts, and every count can still
+//! change.  Serving wants the opposite — a self-contained, *immutable*
+//! point estimate φ̂ that loads without the corpus and is safe to share
+//! across query threads.  `export-model` performs the freeze; this module
+//! owns the artifact.
+//!
+//! # `FNTM0001` layout (little-endian, self-describing, no external crates)
+//!
+//! ```text
+//! magic "FNTM0001"
+//! T u32 | vocab u64 | alpha f64 | beta f64
+//! nt: T × u32                                  (topic totals)
+//! per word (vocab rows): SparseCounts row      (u32 support, (u16,u32)×)
+//! has_vocab u8                                 (0 | 1)
+//! if 1, per word: u32 len | utf8 bytes         (vocabulary strings)
+//! ```
+//!
+//! The decoder is **total** in the style of `nomad/wire.rs`: every length
+//! is bounds-checked against the remaining bytes before allocation,
+//! sparse rows go through [`SparseCounts::from_sorted_pairs`], trailing
+//! bytes are an error, and the decoded counts are cross-checked (`nt`
+//! must equal the per-word column sums) so a corrupt or tampered file can
+//! never produce an inconsistent model.  Version bumps change the magic
+//! suffix (`FNTM0002`, …), so skew is a named error.
+
+use std::path::Path;
+
+use crate::lda::state::{Hyper, LdaState, SparseCounts};
+use crate::lda::topics::top_words_rows;
+use crate::util::codec::{put_bytes, put_f64, put_u32, put_u64, put_u8, Cur};
+
+/// Magic + version at the head of every model artifact.
+pub const MODEL_MAGIC: &[u8; 8] = b"FNTM0001";
+
+/// A frozen, immutable topic model: the point estimate
+/// `φ̂_t(w) = (n̂_wt + β) / (n̂_t + β̄)` plus the hyperparameters and the
+/// optional vocabulary strings raw-text queries are resolved against.
+///
+/// Fields are private so every instance — constructed from a trained
+/// state or decoded from disk — has passed the same consistency
+/// validation and carries a correct cached `Σ_t 1/(n̂_t + β̄)`.
+#[derive(Clone, Debug)]
+pub struct TopicModel {
+    hyper: Hyper,
+    vocab: usize,
+    /// frozen word-topic counts, one sparse row per word (`n̂_wt`)
+    nwt: Vec<SparseCounts>,
+    /// frozen topic totals (`n̂_t`)
+    nt: Vec<u32>,
+    /// vocabulary strings; empty when the corpus was synthetic/anonymous
+    vocab_words: Vec<String>,
+    /// cached `Σ_t 1/(n̂_t + β̄)` — the O(T) part of `Σ_t φ̂_t(w)`, paid
+    /// once here so held-out scoring is O(|T̂_w|) per token
+    inv_denom_sum: f64,
+}
+
+impl TopicModel {
+    /// Build a validated model.  Errors name the first violated
+    /// invariant: shape mismatches, out-of-range topics, non-finite
+    /// hyperparameters, or topic totals that disagree with the per-word
+    /// column sums.
+    pub fn new(
+        hyper: Hyper,
+        vocab: usize,
+        nwt: Vec<SparseCounts>,
+        nt: Vec<u32>,
+        vocab_words: Vec<String>,
+    ) -> Result<TopicModel, String> {
+        let t = hyper.t;
+        if !(2..=u16::MAX as usize + 1).contains(&t) {
+            return Err(format!("topic count {t} out of range"));
+        }
+        if !(hyper.alpha.is_finite() && hyper.alpha > 0.0) {
+            return Err(format!("alpha {} must be finite and positive", hyper.alpha));
+        }
+        if !(hyper.beta.is_finite() && hyper.beta > 0.0) {
+            return Err(format!("beta {} must be finite and positive", hyper.beta));
+        }
+        if nt.len() != t {
+            return Err(format!("topic totals length {} != T {t}", nt.len()));
+        }
+        if nwt.len() != vocab {
+            return Err(format!("word rows {} != vocab {vocab}", nwt.len()));
+        }
+        if !vocab_words.is_empty() && vocab_words.len() != vocab {
+            return Err(format!("vocab strings {} != vocab {vocab}", vocab_words.len()));
+        }
+        // cross-check: nt must be exactly the column sums of nwt — a
+        // corrupt artifact cannot smuggle in inconsistent normalizers
+        let mut col = vec![0u64; t];
+        for (w, row) in nwt.iter().enumerate() {
+            for (topic, c) in row.iter() {
+                if topic as usize >= t {
+                    return Err(format!("word {w}: topic {topic} >= T {t}"));
+                }
+                col[topic as usize] += c as u64;
+            }
+        }
+        for (topic, (&have, &want)) in nt.iter().zip(&col).enumerate() {
+            if have as u64 != want {
+                return Err(format!(
+                    "topic total nt[{topic}] = {have} but word rows sum to {want}: \
+                     inconsistent model"
+                ));
+            }
+        }
+        let bb = hyper.betabar(vocab);
+        let inv_denom_sum = nt.iter().map(|&n| 1.0 / (n as f64 + bb)).sum();
+        Ok(TopicModel { hyper, vocab, nwt, nt, vocab_words, inv_denom_sum })
+    }
+
+    /// Freeze a trained state into a serving model.  `vocab_words` comes
+    /// from the corpus (pass an empty vec for synthetic vocabularies);
+    /// panics only if the state violates its own invariants.
+    pub fn from_state(state: &LdaState, vocab_words: Vec<String>) -> TopicModel {
+        TopicModel::new(state.hyper, state.vocab, state.nwt.clone(), state.nt.clone(), vocab_words)
+            .expect("trained state is internally consistent")
+    }
+
+    pub fn num_topics(&self) -> usize {
+        self.hyper.t
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    pub fn hyper(&self) -> Hyper {
+        self.hyper
+    }
+
+    pub fn betabar(&self) -> f64 {
+        self.hyper.betabar(self.vocab)
+    }
+
+    /// Vocabulary strings (empty when the training corpus had none).
+    pub fn vocab_words(&self) -> &[String] {
+        &self.vocab_words
+    }
+
+    /// Frozen sparse row `n̂_w·` for one word.
+    #[inline]
+    pub fn word_row(&self, word: usize) -> &SparseCounts {
+        &self.nwt[word]
+    }
+
+    /// Frozen topic total `n̂_t`.
+    #[inline]
+    pub fn topic_total(&self, topic: usize) -> u32 {
+        self.nt[topic]
+    }
+
+    /// Total training tokens Σ_t n̂_t.
+    pub fn total_tokens(&self) -> u64 {
+        self.nt.iter().map(|&c| c as u64).sum()
+    }
+
+    /// Point estimate `φ̂_t(w) = (n̂_wt + β) / (n̂_t + β̄)`.
+    #[inline]
+    pub fn phi(&self, topic: u16, word: usize) -> f64 {
+        (self.nwt[word].get(topic) as f64 + self.hyper.beta)
+            / (self.nt[topic as usize] as f64 + self.betabar())
+    }
+
+    /// `Σ_t φ̂_t(w)` in O(|T̂_w|) via the cached `Σ_t 1/(n̂_t + β̄)`.
+    #[inline]
+    pub fn phi_sum(&self, word: usize) -> f64 {
+        let bb = self.betabar();
+        let sparse: f64 = self.nwt[word]
+            .iter()
+            .map(|(t, c)| c as f64 / (self.nt[t as usize] as f64 + bb))
+            .sum();
+        sparse + self.hyper.beta * self.inv_denom_sum
+    }
+
+    /// Top-k `(word, count)` per topic (shared partial-selection kernel
+    /// with the training-state inspector).
+    pub fn top_words(&self, k: usize) -> Vec<Vec<(u32, u32)>> {
+        top_words_rows(&self.nwt, self.hyper.t, k)
+    }
+
+    /// Predictive probability of one held-out word under a folded-in
+    /// document: `p(w | d) = Σ_t θ̂_d(t) · φ̂_t(w)` with
+    /// `θ̂_d(t) = (n_td + α) / (n_obs + Tα)`.
+    ///
+    /// Computed over the document support plus the word support —
+    /// O(|T_d| + |T̂_w|) via [`Self::phi_sum`], never an O(T) scan:
+    /// `Σ_t (n_td + α)·φ̂ = Σ_{t ∈ T_d} n_td·φ̂ + α·Σ_t φ̂`.
+    pub fn predictive_prob(&self, counts: &SparseCounts, observed: usize, word: u32) -> f64 {
+        let w = word as usize;
+        let sparse: f64 = counts.iter().map(|(t, c)| c as f64 * self.phi(t, w)).sum();
+        (sparse + self.hyper.alpha * self.phi_sum(w))
+            / (observed as f64 + self.hyper.t as f64 * self.hyper.alpha)
+    }
+
+    // ----------------------------------------------------------- codec
+
+    /// Serialize to the `FNTM0001` byte layout.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MODEL_MAGIC);
+        put_u32(&mut out, self.hyper.t as u32);
+        put_u64(&mut out, self.vocab as u64);
+        put_f64(&mut out, self.hyper.alpha);
+        put_f64(&mut out, self.hyper.beta);
+        for &n in &self.nt {
+            put_u32(&mut out, n);
+        }
+        for row in &self.nwt {
+            row.encode(&mut out);
+        }
+        put_u8(&mut out, if self.vocab_words.is_empty() { 0 } else { 1 });
+        for w in &self.vocab_words {
+            put_bytes(&mut out, w.as_bytes());
+        }
+        out
+    }
+
+    /// Parse an `FNTM0001` buffer.  Total: every malformation — wrong
+    /// magic, truncation, absurd lengths, invalid rows, trailing bytes,
+    /// inconsistent totals — is a named `Err`, never a panic.
+    pub fn decode(buf: &[u8]) -> Result<TopicModel, String> {
+        let mut cur = Cur::new(buf);
+        let magic = cur.take(8).map_err(|_| "not an FNTM model: shorter than the magic")?;
+        if magic != MODEL_MAGIC {
+            return Err(format!(
+                "bad magic {:?}: not an FNTM0001 model artifact",
+                String::from_utf8_lossy(magic)
+            ));
+        }
+        let t = cur.u32()? as usize;
+        if !(2..=u16::MAX as usize + 1).contains(&t) {
+            return Err(format!("topic count {t} out of range"));
+        }
+        let vocab = cur.u64()? as usize;
+        let alpha = cur.f64()?;
+        let beta = cur.f64()?;
+        if t.saturating_mul(4) > cur.remaining() {
+            return Err(format!("topic totals ({t} x 4B) exceed the artifact size"));
+        }
+        let nt = (0..t).map(|_| cur.u32()).collect::<Result<Vec<_>, _>>()?;
+        // each word row costs at least its 4-byte support field
+        if vocab.saturating_mul(4) > cur.remaining() {
+            return Err(format!("vocab {vocab} rows exceed the artifact size"));
+        }
+        let mut nwt = Vec::with_capacity(vocab);
+        for w in 0..vocab {
+            nwt.push(SparseCounts::decode(&mut cur).map_err(|e| format!("word {w}: {e}"))?);
+        }
+        let vocab_words = match cur.u8()? {
+            0 => Vec::new(),
+            1 => {
+                if vocab.saturating_mul(4) > cur.remaining() {
+                    return Err(format!("vocab {vocab} strings exceed the artifact size"));
+                }
+                (0..vocab).map(|_| cur.string()).collect::<Result<Vec<_>, _>>()?
+            }
+            v => return Err(format!("bad vocab-strings flag {v}")),
+        };
+        cur.finish()?;
+        TopicModel::new(Hyper { t, alpha, beta }, vocab, nwt, nt, vocab_words)
+    }
+
+    /// Write the artifact; returns the byte size on disk.
+    pub fn save(&self, path: &Path) -> Result<u64, String> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        }
+        let bytes = self.encode();
+        std::fs::write(path, &bytes).map_err(|e| format!("{}: {e}", path.display()))?;
+        Ok(bytes.len() as u64)
+    }
+
+    /// Load and fully validate an artifact.
+    pub fn load(path: &Path) -> Result<TopicModel, String> {
+        let bytes =
+            std::fs::read(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        TopicModel::decode(&bytes).map_err(|e| format!("{}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::presets::preset;
+    use crate::util::rng::Pcg32;
+
+    fn trained_model(vocab_words: bool) -> TopicModel {
+        let corpus = preset("tiny").unwrap();
+        let mut rng = Pcg32::seeded(41);
+        let state = LdaState::init_random(&corpus, Hyper::paper_default(8), &mut rng);
+        let words = if vocab_words {
+            (0..corpus.vocab).map(|w| format!("word{w}")).collect()
+        } else {
+            Vec::new()
+        };
+        TopicModel::from_state(&state, words)
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join("fnomad_model_tests").join(name)
+    }
+
+    #[test]
+    fn phi_rows_are_distributions() {
+        let m = trained_model(false);
+        for t in 0..m.num_topics() {
+            let sum: f64 = (0..m.vocab()).map(|w| m.phi(t as u16, w)).sum();
+            assert!((sum - 1.0).abs() < 1e-9, "topic {t}: phi sums to {sum}");
+        }
+    }
+
+    #[test]
+    fn phi_sum_matches_dense_scan() {
+        let m = trained_model(false);
+        for w in [0usize, 7, 123, 299] {
+            let dense: f64 = (0..m.num_topics()).map(|t| m.phi(t as u16, w)).sum();
+            let sparse = m.phi_sum(w);
+            assert!(
+                (dense - sparse).abs() < 1e-9 * dense.max(1.0),
+                "word {w}: dense {dense} vs cached {sparse}"
+            );
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        for with_words in [false, true] {
+            let m = trained_model(with_words);
+            let back = TopicModel::decode(&m.encode()).unwrap();
+            assert_eq!(back.num_topics(), m.num_topics());
+            assert_eq!(back.vocab(), m.vocab());
+            assert_eq!(back.vocab_words(), m.vocab_words());
+            assert_eq!(back.total_tokens(), m.total_tokens());
+            for w in 0..m.vocab() {
+                assert_eq!(back.word_row(w), m.word_row(w), "word {w}");
+            }
+            // and the cached sum was rebuilt identically
+            assert!((back.phi_sum(0) - m.phi_sum(0)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_on_disk() {
+        let m = trained_model(true);
+        let path = tmp("rt.fnmodel");
+        let bytes = m.save(&path).unwrap();
+        assert_eq!(bytes, m.encode().len() as u64);
+        let back = TopicModel::load(&path).unwrap();
+        assert_eq!(back.encode(), m.encode());
+        let _ = std::fs::remove_file(path);
+    }
+
+    /// Golden oracle: the FNTM0001 byte stream is pinned field by field,
+    /// so an accidental layout change fails loudly instead of silently
+    /// orphaning every exported model.
+    #[test]
+    fn golden_bytes_match_the_documented_layout() {
+        let corpus = preset("tiny").unwrap();
+        let mut rng = Pcg32::seeded(41);
+        let state = LdaState::init_random(&corpus, Hyper::paper_default(8), &mut rng);
+        let m = TopicModel::from_state(&state, Vec::new());
+        let mut want: Vec<u8> = Vec::new();
+        want.extend_from_slice(b"FNTM0001");
+        want.extend_from_slice(&(state.hyper.t as u32).to_le_bytes());
+        want.extend_from_slice(&(state.vocab as u64).to_le_bytes());
+        want.extend_from_slice(&state.hyper.alpha.to_le_bytes());
+        want.extend_from_slice(&state.hyper.beta.to_le_bytes());
+        for &n in &state.nt {
+            want.extend_from_slice(&n.to_le_bytes());
+        }
+        for row in &state.nwt {
+            want.extend_from_slice(&(row.support() as u32).to_le_bytes());
+            for (t, c) in row.iter() {
+                want.extend_from_slice(&t.to_le_bytes());
+                want.extend_from_slice(&c.to_le_bytes());
+            }
+        }
+        want.push(0);
+        assert_eq!(m.encode(), want, "FNTM0001 byte format changed");
+    }
+
+    #[test]
+    fn malformed_artifacts_error_instead_of_panicking() {
+        let good = trained_model(true).encode();
+        // empty / short
+        assert!(TopicModel::decode(&[]).unwrap_err().contains("magic"));
+        assert!(TopicModel::decode(&good[..4]).unwrap_err().contains("magic"));
+        // wrong magic
+        let mut bad = good.clone();
+        bad[..8].copy_from_slice(b"FNLDA001");
+        assert!(TopicModel::decode(&bad).unwrap_err().contains("magic"));
+        // truncated body
+        assert!(TopicModel::decode(&good[..good.len() - 3]).is_err());
+        // trailing bytes
+        let mut bad = good.clone();
+        bad.push(0);
+        assert!(TopicModel::decode(&bad).unwrap_err().contains("trailing"));
+        // absurd topic count
+        let mut bad = good.clone();
+        bad[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(TopicModel::decode(&bad).unwrap_err().contains("out of range"));
+        // absurd vocab: must error before attempting a giant allocation
+        let mut bad = good.clone();
+        bad[12..20].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(TopicModel::decode(&bad).unwrap_err().contains("exceed"));
+    }
+
+    #[test]
+    fn tampered_counts_fail_the_consistency_check() {
+        let m = trained_model(false);
+        let bytes = m.encode();
+        // nt starts at offset 8 (magic) + 4 (T) + 8 (vocab) + 16 (α, β)
+        let nt0_at = 8 + 4 + 8 + 16;
+        let mut bad = bytes.clone();
+        let nt0 = u32::from_le_bytes(bad[nt0_at..nt0_at + 4].try_into().unwrap());
+        bad[nt0_at..nt0_at + 4].copy_from_slice(&(nt0 + 1).to_le_bytes());
+        let err = TopicModel::decode(&bad).unwrap_err();
+        assert!(err.contains("inconsistent"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn constructor_rejects_bad_shapes() {
+        let m = trained_model(false);
+        let hyper = m.hyper();
+        let nwt = m.nwt.clone();
+        let nt = m.nt.clone();
+        // wrong nt length
+        let err =
+            TopicModel::new(hyper, m.vocab(), nwt.clone(), nt[1..].to_vec(), Vec::new())
+                .unwrap_err();
+        assert!(err.contains("totals length"));
+        // wrong vocab_words length
+        let err =
+            TopicModel::new(hyper, m.vocab(), nwt.clone(), nt.clone(), vec!["x".into()])
+                .unwrap_err();
+        assert!(err.contains("vocab strings"));
+        // topic out of range in a row
+        let mut bad_rows = nwt.clone();
+        bad_rows[0] = SparseCounts::from_sorted_pairs(vec![(hyper.t as u16, 3)]).unwrap();
+        let err = TopicModel::new(hyper, m.vocab(), bad_rows, nt, Vec::new()).unwrap_err();
+        assert!(err.contains(">= T"));
+    }
+
+    /// `predictive_prob` (sparse, via the cached `phi_sum`) must equal
+    /// the textbook dense `Σ_t θ̂(t)·φ̂_t(w)` scan.
+    #[test]
+    fn predictive_prob_matches_dense_reference() {
+        let m = trained_model(false);
+        let t = m.num_topics();
+        let mut counts = SparseCounts::default();
+        for topic in [0u16, 0, 3, 5, 5, 5] {
+            counts.inc(topic);
+        }
+        let n_obs = counts.total() as usize;
+        let h = m.hyper();
+        for w in [0u32, 17, 299] {
+            let theta = |k: usize| {
+                (counts.get(k as u16) as f64 + h.alpha)
+                    / (n_obs as f64 + t as f64 * h.alpha)
+            };
+            let dense: f64 = (0..t).map(|k| theta(k) * m.phi(k as u16, w as usize)).sum();
+            let got = m.predictive_prob(&counts, n_obs, w);
+            assert!(
+                (dense - got).abs() < 1e-12 * dense.max(1e-12),
+                "word {w}: dense {dense} vs sparse {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn top_words_match_state_inspector() {
+        let corpus = preset("tiny").unwrap();
+        let mut rng = Pcg32::seeded(41);
+        let state = LdaState::init_random(&corpus, Hyper::paper_default(8), &mut rng);
+        let m = TopicModel::from_state(&state, Vec::new());
+        assert_eq!(m.top_words(5), crate::lda::topics::top_words(&state, 5));
+    }
+}

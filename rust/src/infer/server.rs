@@ -1,0 +1,503 @@
+//! The model query server (`serve-model`) and its client
+//! (`infer --remote`): length-prefixed [`super::wire`] frames over TCP,
+//! answered by a shared, immutable [`ModelHost`].
+//!
+//! # Topology
+//!
+//! The model is loaded **once** and shared read-only across N handler
+//! threads; each accepted connection is served by one thread with its own
+//! per-thread [`Inferencer`] (the F+tree and scratch buffers are reused
+//! across that connection's requests).  A connection carries any number
+//! of request/response pairs until the client closes it.
+//!
+//! # Failure discipline
+//!
+//! A malformed request *body* (bad magic, version skew, unknown tag,
+//! truncation) gets a named [`Response::Err`] and the session continues —
+//! the length-prefix framing is still intact.  A broken *frame* layer
+//! (oversized length, mid-frame truncation, reset, idle timeout) gets a
+//! best-effort `Err` response and the connection is dropped, because the
+//! stream can no longer be resynchronized.  A client that connects and
+//! goes silent is cut off by a per-connection idle read deadline rather
+//! than pinning a handler thread; oversized sweep/token requests are
+//! named errors, never silent clamps.  The server never panics on client
+//! input: both decoders are total.
+
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::corpus::text::{porter_stem, tokenize};
+use crate::util::codec::{read_len_prefixed, read_len_prefixed_eof, write_len_prefixed};
+
+use super::engine::{InferOpts, Inferencer};
+use super::model::TopicModel;
+use super::wire::{
+    decode_request, decode_response, encode_request, encode_response, Request, Response,
+    TopWord, MAX_QUERY_FRAME,
+};
+
+/// Cap on the fold-in sweeps one query may request (a hostile
+/// `sweeps = u32::MAX` must not pin a handler thread).  Exceeding it is a
+/// named error, never a silent clamp.
+pub const MAX_QUERY_SWEEPS: u32 = 1_000;
+
+/// Cap on tokens per query document.
+pub const MAX_QUERY_TOKENS: usize = 1 << 20;
+
+/// Cap on the `k` of one top-words query: `k = u32::MAX` against a wide
+/// vocabulary would clone vocabulary-sized string lists per topic and
+/// overflow the frame cap — reject it by name instead.
+pub const MAX_QUERY_TOP_WORDS: u32 = 1_000;
+
+/// Budget on total `T × k` entries of one top-words answer: keeps the
+/// response comfortably under [`MAX_QUERY_FRAME`] even for models at the
+/// maximum topic count, where a legal per-topic `k` alone would not.
+pub const MAX_TOP_WORDS_ENTRIES: u64 = 1 << 19;
+
+/// How long the client waits for a connection.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// How long the client waits for an answer: sized for the slowest
+/// *legal* request (a MAX_QUERY_TOKENS document at MAX_QUERY_SWEEPS), so
+/// no within-cap query is un-servable through the bundled client.
+const ANSWER_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// Server-side idle deadline per connection: a client that connects and
+/// goes silent may not pin a handler thread forever.
+const IDLE_TIMEOUT: Duration = Duration::from_secs(300);
+
+/// A loaded model plus the word → id index raw-text queries resolve
+/// against.  Immutable after construction — safe to share via `Arc`.
+pub struct ModelHost {
+    model: TopicModel,
+    word_ids: HashMap<String, u32>,
+}
+
+impl ModelHost {
+    pub fn new(model: TopicModel) -> ModelHost {
+        let word_ids = model
+            .vocab_words()
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as u32))
+            .collect();
+        ModelHost { model, word_ids }
+    }
+
+    pub fn model(&self) -> &TopicModel {
+        &self.model
+    }
+
+    /// Tokenize raw text (lowercased alphabetic runs, as in training
+    /// preprocessing) and resolve each token against the model
+    /// vocabulary: the Porter stem first (the default `build_corpus`
+    /// pipeline), then the raw token (corpora built with `stem: false`).
+    /// Membership in the vocabulary is the only filter — stop words and
+    /// out-of-vocabulary terms miss it and drop naturally, whatever
+    /// `PipelineOpts` the corpus was built with.  Errors when the
+    /// artifact was exported without vocabulary strings.
+    pub fn tokenize_text(&self, text: &str) -> Result<Vec<u32>, String> {
+        if self.word_ids.is_empty() {
+            return Err(
+                "model carries no vocabulary strings; send token ids instead".into()
+            );
+        }
+        let mut ids = Vec::new();
+        for tok in tokenize(text) {
+            let id = self
+                .word_ids
+                .get(&porter_stem(&tok))
+                .or_else(|| self.word_ids.get(&tok));
+            if let Some(&id) = id {
+                ids.push(id);
+            }
+        }
+        Ok(ids)
+    }
+
+    /// Answer one request with a caller-owned per-thread engine.  Pure
+    /// compute — no IO, no panics on any input.
+    pub fn answer_with(&self, inf: &mut Inferencer<'_>, req: Request) -> Response {
+        match req {
+            Request::ModelInfo => Response::ModelInfo {
+                topics: self.model.num_topics() as u32,
+                vocab: self.model.vocab() as u64,
+                alpha: self.model.hyper().alpha,
+                beta: self.model.hyper().beta,
+                total_tokens: self.model.total_tokens(),
+                has_vocab: !self.word_ids.is_empty(),
+            },
+            Request::TopWords { k } => {
+                if k > MAX_QUERY_TOP_WORDS {
+                    return Response::Err(format!(
+                        "top-words k {k} exceeds the {MAX_QUERY_TOP_WORDS}-word cap"
+                    ));
+                }
+                let entries = k as u64 * self.model.num_topics() as u64;
+                if entries > MAX_TOP_WORDS_ENTRIES {
+                    return Response::Err(format!(
+                        "top-words k {k} x T {} exceeds the {MAX_TOP_WORDS_ENTRIES}-entry \
+                         answer budget",
+                        self.model.num_topics()
+                    ));
+                }
+                let k = (k as usize).min(self.model.vocab());
+                let topics = self
+                    .model
+                    .top_words(k)
+                    .into_iter()
+                    .map(|row| {
+                        row.into_iter()
+                            .map(|(word, count)| TopWord {
+                                word,
+                                count,
+                                text: self
+                                    .model
+                                    .vocab_words()
+                                    .get(word as usize)
+                                    .cloned()
+                                    .unwrap_or_default(),
+                            })
+                            .collect()
+                    })
+                    .collect();
+                Response::TopWords { topics }
+            }
+            Request::InferTokens { tokens, sweeps, seed } => {
+                self.infer(inf, &tokens, sweeps, seed)
+            }
+            Request::InferText { text, sweeps, seed } => match self.tokenize_text(&text) {
+                Ok(tokens) => self.infer(inf, &tokens, sweeps, seed),
+                Err(e) => Response::Err(e),
+            },
+        }
+    }
+
+    /// Convenience single-shot answer (builds a throwaway engine).
+    pub fn answer(&self, req: Request) -> Response {
+        let mut inf = Inferencer::new(&self.model);
+        self.answer_with(&mut inf, req)
+    }
+
+    fn infer(&self, inf: &mut Inferencer<'_>, tokens: &[u32], sweeps: u32, seed: u64) -> Response {
+        if tokens.len() > MAX_QUERY_TOKENS {
+            return Response::Err(format!(
+                "query document of {} tokens exceeds the {MAX_QUERY_TOKENS}-token cap",
+                tokens.len()
+            ));
+        }
+        if sweeps > MAX_QUERY_SWEEPS {
+            return Response::Err(format!(
+                "{sweeps} sweeps exceeds the {MAX_QUERY_SWEEPS}-sweep cap per query"
+            ));
+        }
+        let opts = InferOpts { sweeps: sweeps as usize, seed };
+        match inf.infer_doc(tokens, &opts) {
+            Ok(res) => Response::Theta { theta: res.theta, used_tokens: tokens.len() as u32 },
+            Err(e) => Response::Err(e),
+        }
+    }
+}
+
+/// `serve-model` options.
+pub struct ServeModelOpts {
+    /// handler threads (each owns a clone of the listener)
+    pub threads: usize,
+    /// serve a single connection on the calling thread, then return
+    pub once: bool,
+    /// suppress per-connection logging
+    pub quiet: bool,
+}
+
+impl Default for ServeModelOpts {
+    fn default() -> Self {
+        ServeModelOpts { threads: 4, once: false, quiet: false }
+    }
+}
+
+/// Consecutive `accept` failures after which a handler thread gives up
+/// (a persistently broken listener, not load-induced churn).
+const MAX_ACCEPT_FAILURES: u32 = 100;
+
+/// Serve query traffic on `listener`.  With `once`, exactly one
+/// connection is handled on the calling thread and its session error (if
+/// any) becomes this call's error — the CLI/CI exit-code mode.  Otherwise
+/// `threads` handler threads accept and serve connections until the
+/// process exits; session errors are logged, never fatal, and transient
+/// `accept` failures (ECONNABORTED, fd exhaustion under load) are backed
+/// off and retried rather than draining handler capacity.  Only a
+/// persistently failing listener ends the call — as an `Err`, so
+/// supervisors see a non-zero exit.
+pub fn serve_model(
+    listener: TcpListener,
+    host: Arc<ModelHost>,
+    opts: &ServeModelOpts,
+) -> Result<(), String> {
+    if opts.once {
+        let (stream, peer) = listener.accept().map_err(|e| format!("accept failed: {e}"))?;
+        if !opts.quiet {
+            eprintln!("[serve-model] client connected from {peer}");
+        }
+        return handle_conn(stream, &host);
+    }
+    let mut handles = Vec::new();
+    for _ in 0..opts.threads.max(1) {
+        let listener = listener.try_clone().map_err(|e| format!("listener clone failed: {e}"))?;
+        let host = Arc::clone(&host);
+        let quiet = opts.quiet;
+        handles.push(std::thread::spawn(move || -> Result<(), String> {
+            let mut failures = 0u32;
+            loop {
+                match listener.accept() {
+                    Ok((stream, peer)) => {
+                        failures = 0;
+                        if !quiet {
+                            eprintln!("[serve-model] client connected from {peer}");
+                        }
+                        if let Err(e) = handle_conn(stream, &host) {
+                            eprintln!("[serve-model] session error: {e}");
+                        }
+                    }
+                    Err(e) => {
+                        failures += 1;
+                        eprintln!("[serve-model] accept failed ({failures}): {e}");
+                        if failures >= MAX_ACCEPT_FAILURES {
+                            return Err(format!("accept failing persistently: {e}"));
+                        }
+                        std::thread::sleep(Duration::from_millis(50));
+                    }
+                }
+            }
+        }));
+    }
+    let mut first_err = None;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => first_err = first_err.or(Some(e)),
+            Err(_) => first_err = first_err.or(Some("handler thread panicked".to_string())),
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// Serve one connection until the client closes it.  Exposed so tests
+/// can host a session on their own listener.
+pub fn handle_conn(stream: TcpStream, host: &ModelHost) -> Result<(), String> {
+    stream.set_nodelay(true).map_err(|e| e.to_string())?;
+    // idle deadline: a silent client must not pin this handler thread
+    stream.set_read_timeout(Some(IDLE_TIMEOUT)).map_err(|e| e.to_string())?;
+    let mut reader =
+        BufReader::new(stream.try_clone().map_err(|e| format!("socket clone failed: {e}"))?);
+    let mut writer = BufWriter::new(stream);
+    let mut inf = Inferencer::new(host.model());
+    loop {
+        let body = match read_len_prefixed_eof(&mut reader, MAX_QUERY_FRAME) {
+            // orderly close between requests: the normal end of session
+            Ok(None) => return Ok(()),
+            Ok(Some(body)) => body,
+            Err(e) => {
+                // frame layer broken (oversized length, mid-frame
+                // truncation, reset, idle timeout): the stream cannot be
+                // resynced — name the fault and drop the connection
+                let _ = send_response(&mut writer, &Response::Err(e.clone()));
+                return Err(e);
+            }
+        };
+        let resp = match decode_request(&body) {
+            Ok(req) => host.answer_with(&mut inf, req),
+            // body-level malformation: framing is intact, so report the
+            // named error and keep the session alive
+            Err(e) => Response::Err(format!("bad request: {e}")),
+        };
+        send_response(&mut writer, &resp)?;
+    }
+}
+
+fn send_response<W: Write>(w: &mut W, resp: &Response) -> Result<(), String> {
+    write_len_prefixed(w, &encode_response(resp), MAX_QUERY_FRAME)
+}
+
+// ----------------------------------------------------------------- client
+
+/// One client connection to a `serve-model` host; reusable for any number
+/// of queries.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    /// Connect with a deadline (a black-holed address must be a prompt
+    /// error, not an OS-default multi-minute hang).  The answer deadline
+    /// is separate and much larger — a maximal legal query takes minutes.
+    pub fn connect(addr: &str) -> Result<Client, String> {
+        let sock = addr
+            .to_socket_addrs()
+            .map_err(|e| format!("resolve {addr}: {e}"))?
+            .next()
+            .ok_or_else(|| format!("resolve {addr}: no addresses"))?;
+        let stream = TcpStream::connect_timeout(&sock, CONNECT_TIMEOUT)
+            .map_err(|e| format!("connect {addr}: {e}"))?;
+        stream.set_nodelay(true).map_err(|e| e.to_string())?;
+        stream.set_read_timeout(Some(ANSWER_TIMEOUT)).map_err(|e| e.to_string())?;
+        let reader =
+            BufReader::new(stream.try_clone().map_err(|e| format!("socket clone failed: {e}"))?);
+        Ok(Client { reader, writer: BufWriter::new(stream) })
+    }
+
+    /// Send one request and read its answer.
+    pub fn query(&mut self, req: &Request) -> Result<Response, String> {
+        write_len_prefixed(&mut self.writer, &encode_request(req), MAX_QUERY_FRAME)?;
+        decode_response(&read_len_prefixed(&mut self.reader, MAX_QUERY_FRAME)?)
+    }
+}
+
+/// One-shot convenience: connect, query, disconnect.
+pub fn query_one(addr: &str, req: &Request) -> Result<Response, String> {
+    Client::connect(addr)?.query(req)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::text::{build_corpus, PipelineOpts};
+    use crate::lda::state::{Hyper, LdaState};
+    use crate::lda::{FLdaWord, Sweep};
+    use crate::util::rng::Pcg32;
+
+    /// A tiny *textual* corpus so the vocab-strings path is real.
+    fn text_model() -> TopicModel {
+        let texts: Vec<String> = [
+            "the cat sat on the mat and the cat purred",
+            "dogs chase cats and cats chase mice in the yard",
+            "stock markets rallied as traders bought shares",
+            "the market fell while investors sold stock shares",
+            "cats and dogs are pets while mice hide",
+            "shares of the company rallied on strong markets",
+            "a cat and a dog fought over the mat",
+            "traders watch the stock market every day",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let corpus = build_corpus(
+            &texts,
+            &PipelineOpts { min_count: 2, min_docs: 2, ..Default::default() },
+            "text-tiny",
+        );
+        let mut rng = Pcg32::seeded(5);
+        let mut state = LdaState::init_random(&corpus, Hyper::paper_default(4), &mut rng);
+        let mut sweeper = FLdaWord::new(&state, &corpus);
+        for _ in 0..15 {
+            sweeper.sweep(&mut state, &corpus, &mut rng);
+        }
+        TopicModel::from_state(&state, corpus.vocab_words.clone())
+    }
+
+    #[test]
+    fn host_answers_every_request_kind() {
+        let host = ModelHost::new(text_model());
+        let t = host.model().num_topics();
+        match host.answer(Request::ModelInfo) {
+            Response::ModelInfo { topics, vocab, has_vocab, total_tokens, .. } => {
+                assert_eq!(topics as usize, t);
+                assert_eq!(vocab as usize, host.model().vocab());
+                assert!(has_vocab);
+                assert!(total_tokens > 0);
+            }
+            other => panic!("wrong answer: {other:?}"),
+        }
+        match host.answer(Request::TopWords { k: 3 }) {
+            Response::TopWords { topics } => {
+                assert_eq!(topics.len(), t);
+                for row in &topics {
+                    assert!(row.len() <= 3);
+                    for w in row {
+                        assert!(!w.text.is_empty(), "vocab model must resolve strings");
+                    }
+                }
+            }
+            other => panic!("wrong answer: {other:?}"),
+        }
+        match host.answer(Request::InferText {
+            text: "the cat sat with the dog".into(),
+            sweeps: 10,
+            seed: 1,
+        }) {
+            Response::Theta { theta, used_tokens } => {
+                assert_eq!(theta.len(), t);
+                assert!(used_tokens > 0, "every query word was dropped");
+                let sum: f64 = theta.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-9);
+            }
+            other => panic!("wrong answer: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oov_and_bad_queries_are_named_errors() {
+        let host = ModelHost::new(text_model());
+        let vocab = host.model().vocab() as u32;
+        match host.answer(Request::InferTokens { tokens: vec![0, vocab], sweeps: 5, seed: 0 }) {
+            Response::Err(e) => assert!(e.contains("vocabulary"), "unhelpful: {e}"),
+            other => panic!("expected Err, got {other:?}"),
+        }
+        // a model without vocab strings rejects text queries by name
+        let corpus = crate::corpus::presets::preset("tiny").unwrap();
+        let mut rng = Pcg32::seeded(2);
+        let state = LdaState::init_random(&corpus, Hyper::paper_default(8), &mut rng);
+        let anon = ModelHost::new(TopicModel::from_state(&state, Vec::new()));
+        match anon.answer(Request::InferText { text: "hello".into(), sweeps: 1, seed: 0 }) {
+            Response::Err(e) => assert!(e.contains("vocabulary strings"), "unhelpful: {e}"),
+            other => panic!("expected Err, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tokenizer_matches_training_pipeline() {
+        let host = ModelHost::new(text_model());
+        // "cats" stems to "cat" — must resolve to the same id
+        let a = host.tokenize_text("cats").unwrap();
+        let b = host.tokenize_text("cat").unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 1);
+        // stop words and OOV terms drop silently
+        let ids = host.tokenize_text("the and zzzunknownzzz").unwrap();
+        assert!(ids.is_empty());
+    }
+
+    #[test]
+    fn hostile_top_words_requests_are_a_named_error() {
+        let host = ModelHost::new(text_model());
+        match host.answer(Request::TopWords { k: u32::MAX }) {
+            Response::Err(e) => assert!(e.contains("cap"), "unhelpful: {e}"),
+            other => panic!("expected Err, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hostile_sweep_counts_are_a_named_error_not_a_stall() {
+        let host = ModelHost::new(text_model());
+        // must return promptly — and honestly — despite the absurd request
+        match host.answer(Request::InferTokens { tokens: vec![0], sweeps: u32::MAX, seed: 0 }) {
+            Response::Err(e) => assert!(e.contains("sweep cap"), "unhelpful: {e}"),
+            other => panic!("expected Err, got {other:?}"),
+        }
+        // the cap itself is inclusive
+        match host.answer(Request::InferTokens {
+            tokens: vec![0],
+            sweeps: MAX_QUERY_SWEEPS,
+            seed: 0,
+        }) {
+            Response::Theta { .. } => {}
+            other => panic!("expected Theta at the cap, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,370 @@
+//! Compact binary wire format for the model query protocol
+//! (`serve-model` / `infer --remote`).
+//!
+//! Same design rules as the nomad ring format (`nomad/wire.rs`), built on
+//! the shared `util::codec` substrate: little-endian fixed-width fields,
+//! a **total** decoder (bounds-checked lengths before allocation,
+//! trailing bytes are errors, malformed input is an `Err(String)` — never
+//! a panic), and exact `decode(encode(x)) == x` roundtrips
+//! (property-tested below).  The transport layer length-prefixes these
+//! bodies with a [`MAX_QUERY_FRAME`] cap on both sides.
+//!
+//! Every *request* leads with a magic + version pair so a foreign or
+//! version-skewed client is a named error instead of a confusing decode
+//! failure; responses are only ever parsed by a client that already
+//! passed that check.
+
+use crate::util::codec::{put_bytes, put_f64, put_u32, put_u64, put_u8, Cur};
+
+/// Magic at the head of every request body ("FNQY").
+pub const QUERY_MAGIC: u32 = 0x464E_5159;
+
+/// Query protocol version; bump on ANY layout or semantics change.
+pub const QUERY_VERSION: u32 = 1;
+
+/// Upper bound on one query frame body (64 MiB) — far above any real
+/// query or answer, far below an attacker-controlled length field.
+pub const MAX_QUERY_FRAME: usize = 64 << 20;
+
+const REQ_MODEL_INFO: u8 = 1;
+const REQ_TOP_WORDS: u8 = 2;
+const REQ_INFER_TOKENS: u8 = 3;
+const REQ_INFER_TEXT: u8 = 4;
+
+const RESP_MODEL_INFO: u8 = 1;
+const RESP_TOP_WORDS: u8 = 2;
+const RESP_THETA: u8 = 3;
+const RESP_ERR: u8 = 4;
+
+/// One client → server query.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// model shape + hyperparameters
+    ModelInfo,
+    /// top-k words per topic
+    TopWords { k: u32 },
+    /// fold-in inference over explicit token ids
+    InferTokens { tokens: Vec<u32>, sweeps: u32, seed: u64 },
+    /// fold-in inference over raw text, tokenized server-side against the
+    /// model vocabulary (needs an artifact exported with vocab strings)
+    InferText { text: String, sweeps: u32, seed: u64 },
+}
+
+/// One `(word, count)` entry of a topic's top-word list; `text` is empty
+/// when the model carries no vocabulary strings.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TopWord {
+    pub word: u32,
+    pub count: u32,
+    pub text: String,
+}
+
+/// One server → client answer.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    ModelInfo {
+        topics: u32,
+        vocab: u64,
+        alpha: f64,
+        beta: f64,
+        total_tokens: u64,
+        has_vocab: bool,
+    },
+    TopWords {
+        topics: Vec<Vec<TopWord>>,
+    },
+    Theta {
+        /// dense θ̂ (length T, sums to 1)
+        theta: Vec<f64>,
+        /// tokens actually used (raw-text queries drop OOV terms)
+        used_tokens: u32,
+    },
+    Err(String),
+}
+
+// ---------------------------------------------------------------- encode
+
+/// Serialize a request to its magic-led tagged body.
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_u32(&mut out, QUERY_MAGIC);
+    put_u32(&mut out, QUERY_VERSION);
+    match req {
+        Request::ModelInfo => put_u8(&mut out, REQ_MODEL_INFO),
+        Request::TopWords { k } => {
+            put_u8(&mut out, REQ_TOP_WORDS);
+            put_u32(&mut out, *k);
+        }
+        Request::InferTokens { tokens, sweeps, seed } => {
+            put_u8(&mut out, REQ_INFER_TOKENS);
+            put_u32(&mut out, *sweeps);
+            put_u64(&mut out, *seed);
+            put_u32(&mut out, tokens.len() as u32);
+            for &w in tokens {
+                put_u32(&mut out, w);
+            }
+        }
+        Request::InferText { text, sweeps, seed } => {
+            put_u8(&mut out, REQ_INFER_TEXT);
+            put_u32(&mut out, *sweeps);
+            put_u64(&mut out, *seed);
+            put_bytes(&mut out, text.as_bytes());
+        }
+    }
+    out
+}
+
+/// Serialize a response to its tagged body.
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    let mut out = Vec::new();
+    match resp {
+        Response::ModelInfo { topics, vocab, alpha, beta, total_tokens, has_vocab } => {
+            put_u8(&mut out, RESP_MODEL_INFO);
+            put_u32(&mut out, *topics);
+            put_u64(&mut out, *vocab);
+            put_f64(&mut out, *alpha);
+            put_f64(&mut out, *beta);
+            put_u64(&mut out, *total_tokens);
+            put_u8(&mut out, *has_vocab as u8);
+        }
+        Response::TopWords { topics } => {
+            put_u8(&mut out, RESP_TOP_WORDS);
+            put_u32(&mut out, topics.len() as u32);
+            for row in topics {
+                put_u32(&mut out, row.len() as u32);
+                for w in row {
+                    put_u32(&mut out, w.word);
+                    put_u32(&mut out, w.count);
+                    put_bytes(&mut out, w.text.as_bytes());
+                }
+            }
+        }
+        Response::Theta { theta, used_tokens } => {
+            put_u8(&mut out, RESP_THETA);
+            put_u32(&mut out, *used_tokens);
+            put_u32(&mut out, theta.len() as u32);
+            for &x in theta {
+                put_f64(&mut out, x);
+            }
+        }
+        Response::Err(msg) => {
+            put_u8(&mut out, RESP_ERR);
+            put_bytes(&mut out, msg.as_bytes());
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------- decode
+
+/// Parse a request body.  Total; the magic/version check runs first so
+/// foreign peers and binary skew are named errors.
+pub fn decode_request(buf: &[u8]) -> Result<Request, String> {
+    let mut cur = Cur::new(buf);
+    let magic = cur.u32().map_err(|_| "empty request frame".to_string())?;
+    if magic != QUERY_MAGIC {
+        return Err(format!("bad query magic {magic:#010x}: not an fnomad query peer"));
+    }
+    let version = cur.u32()?;
+    if version != QUERY_VERSION {
+        return Err(format!(
+            "query protocol version mismatch: peer speaks v{version}, this binary \
+             speaks v{QUERY_VERSION} — rebuild both sides from the same commit"
+        ));
+    }
+    let req = match cur.u8()? {
+        REQ_MODEL_INFO => Request::ModelInfo,
+        REQ_TOP_WORDS => Request::TopWords { k: cur.u32()? },
+        REQ_INFER_TOKENS => {
+            let sweeps = cur.u32()?;
+            let seed = cur.u64()?;
+            let n = cur.len(4)?;
+            let tokens = (0..n).map(|_| cur.u32()).collect::<Result<_, _>>()?;
+            Request::InferTokens { tokens, sweeps, seed }
+        }
+        REQ_INFER_TEXT => {
+            let sweeps = cur.u32()?;
+            let seed = cur.u64()?;
+            let text = cur.string()?;
+            Request::InferText { text, sweeps, seed }
+        }
+        tag => return Err(format!("unknown request tag {tag}")),
+    };
+    cur.finish()?;
+    Ok(req)
+}
+
+/// Parse a response body.  Total.
+pub fn decode_response(buf: &[u8]) -> Result<Response, String> {
+    let mut cur = Cur::new(buf);
+    let resp = match cur.u8().map_err(|_| "empty response frame".to_string())? {
+        RESP_MODEL_INFO => Response::ModelInfo {
+            topics: cur.u32()?,
+            vocab: cur.u64()?,
+            alpha: cur.f64()?,
+            beta: cur.f64()?,
+            total_tokens: cur.u64()?,
+            has_vocab: cur.u8()? != 0,
+        },
+        RESP_TOP_WORDS => {
+            // rows are variable-width; pre-check the 4-byte length floor
+            let rows = cur.len(4)?;
+            let mut topics = Vec::with_capacity(rows);
+            for _ in 0..rows {
+                let n = cur.len(12)?;
+                let mut row = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let word = cur.u32()?;
+                    let count = cur.u32()?;
+                    let text = cur.string()?;
+                    row.push(TopWord { word, count, text });
+                }
+                topics.push(row);
+            }
+            Response::TopWords { topics }
+        }
+        RESP_THETA => {
+            let used_tokens = cur.u32()?;
+            let n = cur.len(8)?;
+            let theta = (0..n).map(|_| cur.f64()).collect::<Result<_, _>>()?;
+            Response::Theta { theta, used_tokens }
+        }
+        RESP_ERR => Response::Err(cur.string()?),
+        tag => return Err(format!("unknown response tag {tag}")),
+    };
+    cur.finish()?;
+    Ok(resp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::check;
+
+    fn req_roundtrip(req: &Request) -> Request {
+        decode_request(&encode_request(req)).expect("request roundtrip failed")
+    }
+
+    fn resp_roundtrip(resp: &Response) -> Response {
+        decode_response(&encode_response(resp)).expect("response roundtrip failed")
+    }
+
+    #[test]
+    fn every_request_variant_roundtrips() {
+        for req in [
+            Request::ModelInfo,
+            Request::TopWords { k: 0 },
+            Request::TopWords { k: 1000 },
+            Request::InferTokens { tokens: vec![], sweeps: 0, seed: u64::MAX },
+            Request::InferTokens { tokens: vec![0, 7, 299, u32::MAX], sweeps: 50, seed: 9 },
+            Request::InferText { text: String::new(), sweeps: 1, seed: 0 },
+            Request::InferText { text: "naïve quick fox — €".into(), sweeps: 3, seed: 4 },
+        ] {
+            assert_eq!(req_roundtrip(&req), req);
+        }
+    }
+
+    #[test]
+    fn every_response_variant_roundtrips() {
+        let top = TopWord { word: 3, count: 99, text: "topic".into() };
+        let anon = TopWord { word: 4, count: 1, text: String::new() };
+        for resp in [
+            Response::ModelInfo {
+                topics: 128,
+                vocab: 7000,
+                alpha: 50.0 / 128.0,
+                beta: 0.01,
+                total_tokens: u64::MAX / 7,
+                has_vocab: true,
+            },
+            Response::TopWords { topics: vec![] },
+            Response::TopWords { topics: vec![vec![top, anon], vec![]] },
+            Response::Theta { theta: vec![], used_tokens: 0 },
+            Response::Theta { theta: vec![0.25, 0.75, f64::MIN_POSITIVE], used_tokens: 31 },
+            Response::Err("model on fire".into()),
+        ] {
+            assert_eq!(resp_roundtrip(&resp), resp);
+        }
+    }
+
+    #[test]
+    fn random_token_queries_roundtrip() {
+        check("InferTokens wire roundtrip", 32, |rng| {
+            let n = rng.below(400);
+            let tokens: Vec<u32> = (0..n).map(|_| rng.below(1 << 20) as u32).collect();
+            let req = Request::InferTokens {
+                tokens,
+                sweeps: rng.below(100) as u32,
+                seed: rng.next_u64(),
+            };
+            if req_roundtrip(&req) != req {
+                return Err("request changed across the wire".into());
+            }
+            let t = 1 + rng.below(256);
+            let theta: Vec<f64> = (0..t).map(|_| rng.next_f64()).collect();
+            let resp = Response::Theta { theta, used_tokens: n as u32 };
+            if resp_roundtrip(&resp) != resp {
+                return Err("response changed across the wire".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn magic_and_version_skew_are_named_errors() {
+        let good = encode_request(&Request::ModelInfo);
+        let mut bad_magic = good.clone();
+        bad_magic[..4].copy_from_slice(&0u32.to_le_bytes());
+        assert!(decode_request(&bad_magic).unwrap_err().contains("magic"));
+        let mut bad_version = good.clone();
+        bad_version[4..8].copy_from_slice(&(QUERY_VERSION + 1).to_le_bytes());
+        let err = decode_request(&bad_version).unwrap_err();
+        assert!(err.contains("version mismatch"), "unhelpful skew error: {err}");
+        decode_request(&good).unwrap();
+    }
+
+    #[test]
+    fn malformed_bodies_error_instead_of_panicking() {
+        assert!(decode_request(&[]).unwrap_err().contains("empty"));
+        assert!(decode_response(&[]).unwrap_err().contains("empty"));
+        // unknown tags
+        let mut buf = Vec::new();
+        put_u32(&mut buf, QUERY_MAGIC);
+        put_u32(&mut buf, QUERY_VERSION);
+        put_u8(&mut buf, 99);
+        assert!(decode_request(&buf).unwrap_err().contains("unknown request tag"));
+        assert!(decode_response(&[99]).unwrap_err().contains("unknown response tag"));
+        // truncated token list
+        let mut buf = encode_request(&Request::InferTokens {
+            tokens: vec![1, 2, 3],
+            sweeps: 5,
+            seed: 0,
+        });
+        buf.truncate(buf.len() - 2);
+        assert!(decode_request(&buf).is_err());
+        // trailing bytes
+        let mut buf = encode_request(&Request::ModelInfo);
+        buf.push(0);
+        assert!(decode_request(&buf).unwrap_err().contains("trailing"));
+        // absurd length field: error, not a 4 GiB allocation attempt
+        let mut buf = Vec::new();
+        put_u32(&mut buf, QUERY_MAGIC);
+        put_u32(&mut buf, QUERY_VERSION);
+        put_u8(&mut buf, 3); // REQ_INFER_TOKENS
+        put_u32(&mut buf, 5);
+        put_u64(&mut buf, 0);
+        put_u32(&mut buf, u32::MAX);
+        assert!(decode_request(&buf).unwrap_err().contains("exceeds"));
+    }
+
+    #[test]
+    fn random_bytes_never_panic_the_decoders() {
+        check("query decoders are total on garbage", 64, |rng| {
+            let n = rng.below(200);
+            let buf: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            let _ = decode_request(&buf);
+            let _ = decode_response(&buf);
+            Ok(())
+        });
+    }
+}

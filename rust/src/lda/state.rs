@@ -12,6 +12,7 @@
 //! reusable scratch buffers.
 
 use crate::corpus::Corpus;
+use crate::util::codec::{put_u16, put_u32, Cur};
 use crate::util::rng::Pcg32;
 
 /// LDA hyperparameters (symmetric Dirichlet, the paper's setting).
@@ -140,6 +141,32 @@ impl SparseCounts {
 
     pub fn total(&self) -> u64 {
         self.pairs.iter().map(|&(_, c)| c as u64).sum()
+    }
+
+    /// Append the shared wire/artifact encoding of a sparse row: a `u32`
+    /// support size followed by `(u16 topic, u32 count)` pairs in topic
+    /// order — the layout both the nomad ring frames and the `.fnmodel`
+    /// serving artifact use.
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        put_u32(out, self.support() as u32);
+        for &(t, n) in &self.pairs {
+            put_u16(out, t);
+            put_u32(out, n);
+        }
+    }
+
+    /// Decode one [`Self::encode`]d row from a bounds-checked reader.
+    /// Total: truncation, oversized lengths, unsorted topics and zero
+    /// counts are all `Err`, never a panic.
+    pub fn decode(cur: &mut Cur) -> Result<SparseCounts, String> {
+        let n = cur.len(6)?;
+        let mut pairs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let t = cur.u16()?;
+            let c = cur.u32()?;
+            pairs.push((t, c));
+        }
+        SparseCounts::from_sorted_pairs(pairs)
     }
 }
 

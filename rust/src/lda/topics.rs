@@ -1,22 +1,51 @@
 //! Topic inspection: top-k words per topic and point estimates of the
 //! topic-word (φ) and doc-topic (θ) distributions from the count state.
 
-use super::state::LdaState;
+use std::cmp::Ordering;
 
-/// Top-k (word, count) per topic.
-pub fn top_words(state: &LdaState, k: usize) -> Vec<Vec<(u32, u32)>> {
-    let t = state.num_topics();
+use super::state::{LdaState, SparseCounts};
+
+/// Deterministic top-word ordering: count descending, word id ascending
+/// as the tie-break.
+fn by_count_desc(a: &(u32, u32), b: &(u32, u32)) -> Ordering {
+    b.1.cmp(&a.1).then(a.0.cmp(&b.0))
+}
+
+/// Top-k (word, count) per topic from a word-major count matrix — shared
+/// by the live training state ([`top_words`]) and the frozen serving
+/// artifact ([`crate::infer::TopicModel::top_words`]).
+///
+/// Uses `select_nth_unstable_by` to partition each topic's support around
+/// the k-th order statistic in O(support) before sorting only the k
+/// survivors, instead of fully sorting the (potentially vocabulary-sized)
+/// list and truncating.
+pub fn top_words_rows(nwt: &[SparseCounts], t: usize, k: usize) -> Vec<Vec<(u32, u32)>> {
     let mut per_topic: Vec<Vec<(u32, u32)>> = vec![Vec::new(); t];
-    for (w, counts) in state.nwt.iter().enumerate() {
+    for (w, counts) in nwt.iter().enumerate() {
         for (topic, c) in counts.iter() {
             per_topic[topic as usize].push((w as u32, c));
         }
     }
     for list in &mut per_topic {
-        list.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
-        list.truncate(k);
+        if k == 0 {
+            list.clear();
+            continue;
+        }
+        if list.len() > k {
+            // everything at index > k-1 compares ≥ the pivot under the
+            // total order above, so dropping it preserves the exact top-k
+            // set *and* the deterministic tie-break
+            list.select_nth_unstable_by(k - 1, by_count_desc);
+            list.truncate(k);
+        }
+        list.sort_unstable_by(by_count_desc);
     }
     per_topic
+}
+
+/// Top-k (word, count) per topic.
+pub fn top_words(state: &LdaState, k: usize) -> Vec<Vec<(u32, u32)>> {
+    top_words_rows(&state.nwt, state.num_topics(), k)
 }
 
 /// Render the topics with vocabulary strings when available.
@@ -79,6 +108,31 @@ mod tests {
             for pair in list.windows(2) {
                 assert!(pair[0].1 >= pair[1].1);
             }
+        }
+    }
+
+    /// Oracle: partial selection returns exactly what a full sort +
+    /// truncate returns, ties included (count desc, word asc).  The tiny
+    /// preset's random init is saturated with count ties, which is
+    /// precisely where a sloppy partition would reorder results.
+    #[test]
+    fn partial_selection_matches_full_sort_reference() {
+        let (_, s) = state();
+        for k in [0usize, 1, 3, 5, 64, 10_000] {
+            let got = top_words(&s, k);
+            // reference: the pre-optimization implementation
+            let t = s.num_topics();
+            let mut want: Vec<Vec<(u32, u32)>> = vec![Vec::new(); t];
+            for (w, counts) in s.nwt.iter().enumerate() {
+                for (topic, c) in counts.iter() {
+                    want[topic as usize].push((w as u32, c));
+                }
+            }
+            for list in &mut want {
+                list.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+                list.truncate(k);
+            }
+            assert_eq!(got, want, "k={k}");
         }
     }
 

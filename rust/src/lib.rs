@@ -25,6 +25,12 @@
 //! * **Cluster simulator** ([`simnet`]): virtual-time discrete-event
 //!   execution of the same runtime for the paper's 20-core / 32-node
 //!   experiments on this single-core session (see DESIGN.md).
+//! * **Model serving** ([`infer`]): the frozen [`infer::TopicModel`]
+//!   artifact (`export-model` → `.fnmodel`, total bounds-checked
+//!   decoder), an F+tree fold-in inference engine for unseen documents
+//!   (Θ(|T̂_w| + log T) per token, deterministic across thread counts),
+//!   and a TCP query server (`serve-model` / `infer --remote`) answering
+//!   θ̂ / top-words / model-info queries from N handler threads.
 //! * **Evaluator backends** ([`runtime`]): the model-quality evaluator is
 //!   a blocked `Σ lgamma` reduction with two interchangeable backends —
 //!   with `--features pjrt`, a JAX + Pallas program AOT-lowered to HLO
@@ -67,6 +73,7 @@
 pub mod adlda;
 pub mod coordinator;
 pub mod corpus;
+pub mod infer;
 pub mod lda;
 pub mod nomad;
 pub mod ps;

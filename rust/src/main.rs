@@ -7,21 +7,32 @@
 //!   topics          train briefly and print the top words per topic
 //!   check-artifacts cross-check the PJRT evaluator vs the Rust reference
 //!   serve-worker    host a nomad ring worker over TCP for `train --remote`
+//!   export-model    freeze a checkpoint into a `.fnmodel` serving artifact
+//!   serve-model     host a model query server over TCP
+//!   infer           fold-in inference for one document (local or remote)
+//!   bench           train/infer micro-benchmarks → BENCH_*.json
 //!   help            the top-level index
 //!
 //! Flag strings are parsed into the typed [`TrainConfig`] here and nowhere
 //! else; the coordinator never sees a string it has to re-interpret.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
 
 use fnomad_lda::coordinator::{train, TrainConfig};
 use fnomad_lda::corpus::presets::{preset, PAPER_TABLE3, PRESET_NAMES};
 use fnomad_lda::corpus::CorpusStats;
+use fnomad_lda::infer::{
+    infer_batch, query_one, serve_model, InferOpts, Inferencer, ModelHost, Request, Response,
+    ServeModelOpts, TopicModel,
+};
 use fnomad_lda::lda::state::{Hyper, LdaState};
 use fnomad_lda::lda::{self, topics as topics_mod};
 use fnomad_lda::nomad::net::{serve, ServeOpts};
 use fnomad_lda::runtime::{artifacts_available, default_artifact_dir, LlEvaluator};
 use fnomad_lda::simnet::CostModel;
+use fnomad_lda::util::bench::{percentile, write_json, JsonVal};
 use fnomad_lda::util::cli::{Args, CommandSpec, FlagSpec};
 use fnomad_lda::util::rng::Pcg32;
 
@@ -132,6 +143,74 @@ const SERVE_WORKER_SPEC: CommandSpec = CommandSpec {
     ],
 };
 
+const EXPORT_MODEL_SPEC: CommandSpec = CommandSpec {
+    name: "export-model",
+    about: "freeze a training checkpoint into a .fnmodel serving artifact",
+    flags: &[
+        FlagSpec {
+            flag: "checkpoint",
+            value: "PATH",
+            help: "FNLDA001 checkpoint to freeze (required)",
+        },
+        FlagSpec {
+            flag: "preset",
+            value: "NAME",
+            help: "corpus the checkpoint was trained on (default tiny)",
+        },
+        FlagSpec { flag: "out", value: "PATH", help: "output .fnmodel path (required)" },
+        FlagSpec {
+            flag: "no-vocab",
+            value: "",
+            help: "strip vocabulary strings (disables raw-text queries)",
+        },
+    ],
+};
+
+const SERVE_MODEL_SPEC: CommandSpec = CommandSpec {
+    name: "serve-model",
+    about: "host a model query server over TCP (the remote end of infer --remote)",
+    flags: &[
+        FlagSpec { flag: "model", value: "PATH", help: ".fnmodel artifact to serve (required)" },
+        FlagSpec {
+            flag: "listen",
+            value: "ADDR",
+            help: "bind address (default 127.0.0.1:7878; port 0 picks a free port)",
+        },
+        FlagSpec { flag: "threads", value: "N", help: "handler threads (default 4)" },
+        FlagSpec { flag: "once", value: "", help: "serve one client connection, then exit" },
+        FlagSpec { flag: "quiet", value: "", help: "suppress per-connection logging" },
+    ],
+};
+
+const INFER_SPEC: CommandSpec = CommandSpec {
+    name: "infer",
+    about: "fold-in inference for one document, locally or against serve-model",
+    flags: &[
+        FlagSpec { flag: "remote", value: "ADDR", help: "query a serve-model host" },
+        FlagSpec { flag: "model", value: "PATH", help: "infer locally from a .fnmodel" },
+        FlagSpec { flag: "text", value: "STR", help: "raw text query (needs vocab strings)" },
+        FlagSpec { flag: "tokens", value: "LIST", help: "comma-separated token ids, e.g. 3,17,42" },
+        FlagSpec { flag: "sweeps", value: "N", help: "fold-in sweeps (default 20, max 1000)" },
+        FlagSpec { flag: "seed", value: "S", help: "RNG seed (default 0)" },
+        FlagSpec { flag: "top", value: "K", help: "topics on the theta_top line (default 10)" },
+        FlagSpec { flag: "info", value: "", help: "print model shape + hyperparameters instead" },
+        FlagSpec { flag: "top-words", value: "K", help: "print top-K words per topic instead" },
+    ],
+};
+
+const BENCH_SPEC: CommandSpec = CommandSpec {
+    name: "bench",
+    about: "train + infer micro-benchmarks, emitting machine-readable BENCH_*.json",
+    flags: &[
+        FlagSpec { flag: "preset", value: "NAME", help: "corpus preset (default tiny)" },
+        FlagSpec { flag: "topics", value: "N", help: "topic count (default 16)" },
+        FlagSpec { flag: "iters", value: "N", help: "training epochs (default 3)" },
+        FlagSpec { flag: "sweeps", value: "N", help: "fold-in sweeps per doc (default 10)" },
+        FlagSpec { flag: "threads", value: "P", help: "inference threads (default 2)" },
+        FlagSpec { flag: "out-dir", value: "PATH", help: "where BENCH_*.json land (default .)" },
+    ],
+};
+
 const SPECS: &[&CommandSpec] = &[
     &TRAIN_SPEC,
     &DATA_STATS_SPEC,
@@ -139,6 +218,10 @@ const SPECS: &[&CommandSpec] = &[
     &TOPICS_SPEC,
     &CHECK_ARTIFACTS_SPEC,
     &SERVE_WORKER_SPEC,
+    &EXPORT_MODEL_SPEC,
+    &SERVE_MODEL_SPEC,
+    &INFER_SPEC,
+    &BENCH_SPEC,
 ];
 
 fn top_level_help() -> String {
@@ -169,6 +252,10 @@ fn main() {
         "topics" => with_help(&args, &TOPICS_SPEC, cmd_topics),
         "check-artifacts" => with_help(&args, &CHECK_ARTIFACTS_SPEC, cmd_check_artifacts),
         "serve-worker" => with_help(&args, &SERVE_WORKER_SPEC, cmd_serve_worker),
+        "export-model" => with_help(&args, &EXPORT_MODEL_SPEC, cmd_export_model),
+        "serve-model" => with_help(&args, &SERVE_MODEL_SPEC, cmd_serve_model),
+        "infer" => with_help(&args, &INFER_SPEC, cmd_infer),
+        "bench" => with_help(&args, &BENCH_SPEC, cmd_bench),
         "help" | "--help" | "-h" => {
             println!("{}", top_level_help());
             Ok(())
@@ -259,6 +346,211 @@ fn cmd_serve_worker(args: &Args) -> Result<(), String> {
     println!("listening on {local}");
     std::io::stdout().flush().map_err(|e| e.to_string())?;
     serve(listener, &opts)
+}
+
+fn cmd_export_model(args: &Args) -> Result<(), String> {
+    let ckpt = args
+        .str_opt("checkpoint")
+        .ok_or_else(|| "--checkpoint PATH is required".to_string())?;
+    let preset_name = args.str_or("preset", "tiny");
+    let out = args.str_opt("out").ok_or_else(|| "--out PATH is required".to_string())?;
+    let no_vocab = args.flag("no-vocab");
+    args.reject_unknown()?;
+    let corpus = preset(&preset_name)?;
+    let state = lda::checkpoint::load(Path::new(&ckpt), &corpus)?;
+    let words = if no_vocab { Vec::new() } else { corpus.vocab_words.clone() };
+    let model = TopicModel::from_state(&state, words);
+    let bytes = model.save(Path::new(&out))?;
+    println!(
+        "exported {out} (T={}, vocab={}, tokens={}, vocab_strings={}, {bytes} bytes)",
+        model.num_topics(),
+        model.vocab(),
+        model.total_tokens(),
+        !model.vocab_words().is_empty(),
+    );
+    Ok(())
+}
+
+fn cmd_serve_model(args: &Args) -> Result<(), String> {
+    use std::io::Write as _;
+
+    let model_path =
+        args.str_opt("model").ok_or_else(|| "--model PATH is required".to_string())?;
+    let addr = args.str_or("listen", "127.0.0.1:7878");
+    let opts = ServeModelOpts {
+        threads: args.parse_or("threads", 4)?,
+        once: args.flag("once"),
+        quiet: args.flag("quiet"),
+    };
+    args.reject_unknown()?;
+    let model = TopicModel::load(Path::new(&model_path))?;
+    if !opts.quiet {
+        eprintln!(
+            "[serve-model] loaded {model_path}: T={} vocab={} tokens={}",
+            model.num_topics(),
+            model.vocab(),
+            model.total_tokens(),
+        );
+    }
+    let listener = std::net::TcpListener::bind(&addr).map_err(|e| format!("bind {addr}: {e}"))?;
+    let local = listener.local_addr().map_err(|e| e.to_string())?;
+    // machine-readable line launch scripts / tests parse for the port
+    println!("listening on {local}");
+    std::io::stdout().flush().map_err(|e| e.to_string())?;
+    serve_model(listener, Arc::new(ModelHost::new(model)), &opts)
+}
+
+fn cmd_infer(args: &Args) -> Result<(), String> {
+    let remote = args.str_opt("remote");
+    let model_path = args.str_opt("model");
+    let text = args.str_opt("text");
+    let tokens_arg = args.str_opt("tokens");
+    let sweeps: u32 = args.parse_or("sweeps", 20)?;
+    let seed: u64 = args.parse_or("seed", 0)?;
+    let top: usize = args.parse_or("top", 10)?;
+    let info = args.flag("info");
+    let top_words: u32 = args.parse_or("top-words", 0)?;
+    args.reject_unknown()?;
+
+    let req = if info {
+        Request::ModelInfo
+    } else if top_words > 0 {
+        Request::TopWords { k: top_words }
+    } else if let Some(text) = text {
+        Request::InferText { text, sweeps, seed }
+    } else if let Some(list) = tokens_arg {
+        let tokens = list
+            .split(',')
+            .map(|s| {
+                s.trim().parse::<u32>().map_err(|_| format!("--tokens: bad token id '{s}'"))
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        Request::InferTokens { tokens, sweeps, seed }
+    } else {
+        return Err("one of --text, --tokens, --info, or --top-words is required".into());
+    };
+
+    let resp = match (remote, model_path) {
+        (Some(addr), None) => query_one(&addr, &req)?,
+        (None, Some(path)) => ModelHost::new(TopicModel::load(Path::new(&path))?).answer(req),
+        _ => return Err("exactly one of --remote ADDR or --model PATH is required".into()),
+    };
+    render_infer_response(resp, top)
+}
+
+/// Render a query answer; the `theta_top:` line is the machine-greppable
+/// contract CI and scripts rely on (`topic:mass` pairs, mass descending).
+fn render_infer_response(resp: Response, top: usize) -> Result<(), String> {
+    match resp {
+        Response::Theta { theta, used_tokens } => {
+            let mut order: Vec<usize> = (0..theta.len()).collect();
+            order.sort_unstable_by(|&a, &b| theta[b].total_cmp(&theta[a]).then(a.cmp(&b)));
+            println!("used_tokens = {used_tokens}   T = {}", theta.len());
+            let mut line = String::from("theta_top:");
+            for &t in order.iter().take(top.max(1)) {
+                line.push_str(&format!(" {t}:{:.4}", theta[t]));
+            }
+            println!("{line}");
+            Ok(())
+        }
+        Response::ModelInfo { topics, vocab, alpha, beta, total_tokens, has_vocab } => {
+            println!(
+                "model: T={topics} vocab={vocab} alpha={alpha:.6} beta={beta:.6} \
+                 tokens={total_tokens} vocab_strings={has_vocab}"
+            );
+            Ok(())
+        }
+        Response::TopWords { topics } => {
+            for (t, row) in topics.iter().enumerate() {
+                let mut line = format!("topic {t:4}: ");
+                for w in row {
+                    if w.text.is_empty() {
+                        line.push_str(&format!("w{}:{} ", w.word, w.count));
+                    } else {
+                        line.push_str(&format!("{}:{} ", w.text, w.count));
+                    }
+                }
+                println!("{}", line.trim_end());
+            }
+            Ok(())
+        }
+        Response::Err(e) => Err(format!("server error: {e}")),
+    }
+}
+
+fn cmd_bench(args: &Args) -> Result<(), String> {
+    let preset_name = args.str_or("preset", "tiny");
+    let topics: usize = args.parse_or("topics", 16)?;
+    let iters: usize = args.parse_or("iters", 3)?;
+    let sweeps: usize = args.parse_or("sweeps", 10)?;
+    let threads: usize = args.parse_or("threads", 2)?;
+    let out_dir = PathBuf::from(args.str_or("out-dir", "."));
+    args.reject_unknown()?;
+
+    let corpus = preset(&preset_name)?;
+    let cfg = TrainConfig::preset(&preset_name)
+        .topics(topics)
+        .iters(iters)
+        .eval(fnomad_lda::coordinator::EvalPolicy::Rust)
+        .quiet(true);
+    let res = train(&cfg)?;
+    let train_path = out_dir.join("BENCH_train.json");
+    write_json(
+        &train_path,
+        &[
+            ("bench", JsonVal::Str("train".into())),
+            ("label", JsonVal::Str(cfg.label())),
+            ("preset", JsonVal::Str(preset_name.clone())),
+            ("topics", JsonVal::Int(topics as u64)),
+            ("iters", JsonVal::Int(iters as u64)),
+            ("tokens", JsonVal::Int(corpus.num_tokens() as u64)),
+            ("tokens_per_sec", JsonVal::Num(res.tokens_per_sec)),
+            ("final_ll", JsonVal::Num(res.ll_vs_iter.last_y().unwrap_or(f64::NAN))),
+        ],
+    )?;
+
+    let model = TopicModel::from_state(&res.final_state, Vec::new());
+    let opts = InferOpts { sweeps, seed: 0 };
+    // throughput: the multi-threaded batch path
+    let t0 = Instant::now();
+    infer_batch(&model, &corpus, &opts, threads.max(1))?;
+    let batch_secs = t0.elapsed().as_secs_f64();
+    // latency: single-threaded per-document timing for honest p50/p95
+    let mut inf = Inferencer::new(&model);
+    let mut lat_us: Vec<f64> = Vec::with_capacity(corpus.num_docs());
+    for d in 0..corpus.num_docs() {
+        let s = Instant::now();
+        inf.infer_doc_indexed(corpus.doc(d), d as u64, &opts)?;
+        lat_us.push(s.elapsed().as_nanos() as f64 / 1e3);
+    }
+    lat_us.sort_by(|a, b| a.total_cmp(b));
+    let p50 = percentile(&lat_us, 50.0);
+    let p95 = percentile(&lat_us, 95.0);
+    let infer_tps =
+        if batch_secs > 0.0 { corpus.num_tokens() as f64 / batch_secs } else { 0.0 };
+    let infer_path = out_dir.join("BENCH_infer.json");
+    write_json(
+        &infer_path,
+        &[
+            ("bench", JsonVal::Str("infer".into())),
+            ("preset", JsonVal::Str(preset_name.clone())),
+            ("topics", JsonVal::Int(topics as u64)),
+            ("sweeps", JsonVal::Int(sweeps as u64)),
+            ("threads", JsonVal::Int(threads as u64)),
+            ("docs", JsonVal::Int(corpus.num_docs() as u64)),
+            ("tokens", JsonVal::Int(corpus.num_tokens() as u64)),
+            ("tokens_per_sec", JsonVal::Num(infer_tps)),
+            ("p50_us", JsonVal::Num(p50)),
+            ("p95_us", JsonVal::Num(p95)),
+        ],
+    )?;
+    println!(
+        "train: {:.0} tokens/s   infer: {:.0} tokens/s   p50 {p50:.1} µs/doc   \
+         p95 {p95:.1} µs/doc",
+        res.tokens_per_sec, infer_tps,
+    );
+    println!("wrote {} and {}", train_path.display(), infer_path.display());
+    Ok(())
 }
 
 fn cmd_train(args: &Args) -> Result<(), String> {

@@ -36,6 +36,7 @@ use std::time::Duration;
 
 use crate::corpus::Corpus;
 use crate::lda::state::Hyper;
+use crate::util::codec::{read_len_prefixed, write_len_prefixed};
 use crate::util::rng::Pcg32;
 
 use super::token::{Msg, Reply};
@@ -60,31 +61,13 @@ const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
 /// [`MAX_FRAME`] — oversized payloads must fail loudly, not desync the
 /// stream.
 pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<(), String> {
-    let body = encode_frame(frame);
-    if body.len() > MAX_FRAME {
-        return Err(format!(
-            "frame body of {} bytes exceeds the {MAX_FRAME}-byte cap (shard the ring wider)",
-            body.len()
-        ));
-    }
-    w.write_all(&(body.len() as u32).to_le_bytes())
-        .and_then(|_| w.write_all(&body))
-        .and_then(|_| w.flush())
-        .map_err(|e| format!("frame write failed: {e}"))
+    write_len_prefixed(w, &encode_frame(frame), MAX_FRAME)
 }
 
 /// Read one length-prefixed frame.  Errors on EOF, short reads, a length
 /// above [`MAX_FRAME`], and every [`decode_frame`] failure.
 pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, String> {
-    let mut len4 = [0u8; 4];
-    r.read_exact(&mut len4).map_err(|e| format!("frame read failed: {e}"))?;
-    let len = u32::from_le_bytes(len4) as usize;
-    if len > MAX_FRAME {
-        return Err(format!("frame length {len} exceeds the {MAX_FRAME}-byte cap"));
-    }
-    let mut body = vec![0u8; len];
-    r.read_exact(&mut body).map_err(|e| format!("frame body read failed: {e}"))?;
-    decode_frame(&body)
+    decode_frame(&read_len_prefixed(r, MAX_FRAME)?)
 }
 
 /// Worker-side [`Transport`] over one coordinator connection.

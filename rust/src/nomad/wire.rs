@@ -19,6 +19,7 @@
 //!   including token `hops` and count totals (property-tested below).
 
 use crate::lda::SparseCounts;
+use crate::util::codec::{put_bytes, put_f64, put_i64, put_u16, put_u32, put_u64, Cur};
 
 use super::token::{GlobalToken, Msg, Reply, WordToken};
 
@@ -96,39 +97,13 @@ const REPLY_S_DELTA: u8 = 3;
 const REPLY_DOCS: u8 = 4;
 
 // ---------------------------------------------------------------- encode
-
-fn put_u16(out: &mut Vec<u8>, v: u16) {
-    out.extend_from_slice(&v.to_le_bytes());
-}
-
-fn put_u32(out: &mut Vec<u8>, v: u32) {
-    out.extend_from_slice(&v.to_le_bytes());
-}
-
-fn put_u64(out: &mut Vec<u8>, v: u64) {
-    out.extend_from_slice(&v.to_le_bytes());
-}
-
-fn put_i64(out: &mut Vec<u8>, v: i64) {
-    out.extend_from_slice(&v.to_le_bytes());
-}
-
-fn put_f64(out: &mut Vec<u8>, v: f64) {
-    out.extend_from_slice(&v.to_le_bytes());
-}
-
-fn put_counts(out: &mut Vec<u8>, c: &SparseCounts) {
-    put_u32(out, c.support() as u32);
-    for (t, n) in c.iter() {
-        put_u16(out, t);
-        put_u32(out, n);
-    }
-}
+// (generic put_* writers live in util::codec; only the domain layouts
+// are defined here)
 
 fn put_word_token(out: &mut Vec<u8>, tok: &WordToken) {
     put_u32(out, tok.word);
     put_u32(out, tok.hops);
-    put_counts(out, &tok.counts);
+    tok.counts.encode(out);
 }
 
 fn put_global_token(out: &mut Vec<u8>, tok: &GlobalToken) {
@@ -185,7 +160,7 @@ fn put_reply(out: &mut Vec<u8>, reply: &Reply) {
             put_u64(out, *start_doc as u64);
             put_u32(out, ntd.len() as u32);
             for row in ntd {
-                put_counts(out, row);
+                row.encode(out);
             }
             put_u32(out, z.len() as u32);
             for &v in z {
@@ -246,210 +221,119 @@ pub fn encode_frame(frame: &Frame) -> Vec<u8> {
         }
         Frame::Err(msg) => {
             out.push(TAG_ERR);
-            let bytes = msg.as_bytes();
-            put_u32(&mut out, bytes.len() as u32);
-            out.extend_from_slice(bytes);
+            put_bytes(&mut out, msg.as_bytes());
         }
     }
     out
 }
 
 // ---------------------------------------------------------------- decode
+// (the bounds-checked reader lives in util::codec; the functions below
+// parse the domain layouts out of it)
 
-/// Bounds-checked reader over a frame body.
-struct Cur<'a> {
-    buf: &'a [u8],
-    pos: usize,
+fn get_word_token(cur: &mut Cur) -> Result<WordToken, String> {
+    let word = cur.u32()?;
+    let hops = cur.u32()?;
+    let counts = SparseCounts::decode(cur)?;
+    Ok(WordToken { word, counts, hops })
 }
 
-impl<'a> Cur<'a> {
-    fn new(buf: &'a [u8]) -> Self {
-        Cur { buf, pos: 0 }
-    }
+fn get_global_token(cur: &mut Cur) -> Result<GlobalToken, String> {
+    let hops = cur.u32()?;
+    let s = get_i64s(cur)?;
+    Ok(GlobalToken { s, hops })
+}
 
-    fn remaining(&self) -> usize {
-        self.buf.len() - self.pos
-    }
+fn get_i64s(cur: &mut Cur) -> Result<Vec<i64>, String> {
+    let n = cur.len(8)?;
+    (0..n).map(|_| cur.i64()).collect()
+}
 
-    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
-        if self.remaining() < n {
-            return Err(format!(
-                "truncated frame: need {n} bytes at offset {}, have {}",
-                self.pos,
-                self.remaining()
-            ));
-        }
-        let slice = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
-        Ok(slice)
-    }
+fn get_u16s(cur: &mut Cur) -> Result<Vec<u16>, String> {
+    let n = cur.len(2)?;
+    (0..n).map(|_| cur.u16()).collect()
+}
 
-    fn u8(&mut self) -> Result<u8, String> {
-        Ok(self.take(1)?[0])
-    }
+fn get_msg(cur: &mut Cur) -> Result<Msg, String> {
+    Ok(match cur.u8()? {
+        MSG_WORD => Msg::Word(get_word_token(cur)?),
+        MSG_GLOBAL => Msg::Global(get_global_token(cur)?),
+        MSG_SYNC_S => Msg::SyncS,
+        MSG_SET_S => Msg::SetS(get_i64s(cur)?),
+        MSG_REPORT_DOCS => Msg::ReportDocs,
+        MSG_STOP => Msg::Stop,
+        tag => return Err(format!("unknown msg tag {tag}")),
+    })
+}
 
-    fn u16(&mut self) -> Result<u16, String> {
-        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
-    }
-
-    fn u32(&mut self) -> Result<u32, String> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
-    }
-
-    fn u64(&mut self) -> Result<u64, String> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
-    }
-
-    fn i64(&mut self) -> Result<i64, String> {
-        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
-    }
-
-    fn f64(&mut self) -> Result<f64, String> {
-        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
-    }
-
-    /// Read a `u32` element count and pre-check it against the remaining
-    /// bytes so garbage lengths error instead of attempting a huge
-    /// allocation.
-    fn len(&mut self, elem_bytes: usize) -> Result<usize, String> {
-        let n = self.u32()? as usize;
-        if n.saturating_mul(elem_bytes) > self.remaining() {
-            return Err(format!(
-                "frame length {n} x {elem_bytes}B exceeds remaining {} bytes",
-                self.remaining()
-            ));
-        }
-        Ok(n)
-    }
-
-    fn counts(&mut self) -> Result<SparseCounts, String> {
-        let n = self.len(6)?;
-        let mut pairs = Vec::with_capacity(n);
-        for _ in 0..n {
-            let t = self.u16()?;
-            let c = self.u32()?;
-            pairs.push((t, c));
-        }
-        SparseCounts::from_sorted_pairs(pairs)
-    }
-
-    fn word_token(&mut self) -> Result<WordToken, String> {
-        let word = self.u32()?;
-        let hops = self.u32()?;
-        let counts = self.counts()?;
-        Ok(WordToken { word, counts, hops })
-    }
-
-    fn global_token(&mut self) -> Result<GlobalToken, String> {
-        let hops = self.u32()?;
-        let s = self.i64s()?;
-        Ok(GlobalToken { s, hops })
-    }
-
-    fn i64s(&mut self) -> Result<Vec<i64>, String> {
-        let n = self.len(8)?;
-        (0..n).map(|_| self.i64()).collect()
-    }
-
-    fn u16s(&mut self) -> Result<Vec<u16>, String> {
-        let n = self.len(2)?;
-        (0..n).map(|_| self.u16()).collect()
-    }
-
-    fn msg(&mut self) -> Result<Msg, String> {
-        Ok(match self.u8()? {
-            MSG_WORD => Msg::Word(self.word_token()?),
-            MSG_GLOBAL => Msg::Global(self.global_token()?),
-            MSG_SYNC_S => Msg::SyncS,
-            MSG_SET_S => Msg::SetS(self.i64s()?),
-            MSG_REPORT_DOCS => Msg::ReportDocs,
-            MSG_STOP => Msg::Stop,
-            tag => return Err(format!("unknown msg tag {tag}")),
-        })
-    }
-
-    fn reply(&mut self) -> Result<Reply, String> {
-        Ok(match self.u8()? {
-            REPLY_WORD_DONE => Reply::WordDone(self.word_token()?),
-            REPLY_GLOBAL_DONE => Reply::GlobalDone(self.global_token()?),
-            REPLY_S_DELTA => Reply::SDelta {
-                worker: self.u32()? as usize,
-                delta: self.i64s()?,
-                tokens_processed: self.u64()?,
-            },
-            REPLY_DOCS => {
-                let worker = self.u32()? as usize;
-                let start_doc = self.u64()? as usize;
-                // ntd rows are variable-width, so the byte pre-check uses
-                // the 4-byte-per-row floor (an empty row's length field)
-                let rows = self.len(4)?;
-                let mut ntd = Vec::with_capacity(rows);
-                for _ in 0..rows {
-                    ntd.push(self.counts()?);
-                }
-                let z = self.u16s()?;
-                Reply::Docs { worker, start_doc, ntd, z }
+fn get_reply(cur: &mut Cur) -> Result<Reply, String> {
+    Ok(match cur.u8()? {
+        REPLY_WORD_DONE => Reply::WordDone(get_word_token(cur)?),
+        REPLY_GLOBAL_DONE => Reply::GlobalDone(get_global_token(cur)?),
+        REPLY_S_DELTA => Reply::SDelta {
+            worker: cur.u32()? as usize,
+            delta: get_i64s(cur)?,
+            tokens_processed: cur.u64()?,
+        },
+        REPLY_DOCS => {
+            let worker = cur.u32()? as usize;
+            let start_doc = cur.u64()? as usize;
+            // ntd rows are variable-width, so the byte pre-check uses
+            // the 4-byte-per-row floor (an empty row's length field)
+            let rows = cur.len(4)?;
+            let mut ntd = Vec::with_capacity(rows);
+            for _ in 0..rows {
+                ntd.push(SparseCounts::decode(cur)?);
             }
-            tag => return Err(format!("unknown reply tag {tag}")),
-        })
-    }
-
-    fn init(&mut self) -> Result<Init, String> {
-        let magic = self.u32()?;
-        if magic != INIT_MAGIC {
-            return Err(format!("bad Init magic {magic:#010x}: not an fnomad wire peer"));
+            let z = get_u16s(cur)?;
+            Reply::Docs { worker, start_doc, ntd, z }
         }
-        let version = self.u32()?;
-        if version != WIRE_VERSION {
-            return Err(format!(
-                "protocol version mismatch: peer speaks wire v{version}, this binary \
-                 speaks v{WIRE_VERSION} — rebuild both sides from the same commit"
-            ));
-        }
-        let worker_id = self.u32()?;
-        let num_workers = self.u32()?;
-        let start_doc = self.u64()?;
-        let t = self.u32()?;
-        let alpha = self.f64()?;
-        let beta = self.f64()?;
-        let vocab = self.u64()?;
-        let n_off = self.len(8)?;
-        let doc_offsets = (0..n_off).map(|_| self.u64()).collect::<Result<_, _>>()?;
-        let n_tok = self.len(4)?;
-        let tokens = (0..n_tok).map(|_| self.u32()).collect::<Result<_, _>>()?;
-        let z = self.u16s()?;
-        let s = self.i64s()?;
-        let rng_state = self.u64()?;
-        let rng_inc = self.u64()?;
-        Ok(Init {
-            worker_id,
-            num_workers,
-            start_doc,
-            t,
-            alpha,
-            beta,
-            vocab,
-            doc_offsets,
-            tokens,
-            z,
-            s,
-            rng_state,
-            rng_inc,
-        })
-    }
+        tag => return Err(format!("unknown reply tag {tag}")),
+    })
+}
 
-    fn string(&mut self) -> Result<String, String> {
-        let n = self.len(1)?;
-        let bytes = self.take(n)?;
-        String::from_utf8(bytes.to_vec()).map_err(|e| format!("invalid utf8 in frame: {e}"))
+fn get_init(cur: &mut Cur) -> Result<Init, String> {
+    let magic = cur.u32()?;
+    if magic != INIT_MAGIC {
+        return Err(format!("bad Init magic {magic:#010x}: not an fnomad wire peer"));
     }
-
-    fn finish(self) -> Result<(), String> {
-        if self.remaining() != 0 {
-            return Err(format!("{} trailing bytes after frame", self.remaining()));
-        }
-        Ok(())
+    let version = cur.u32()?;
+    if version != WIRE_VERSION {
+        return Err(format!(
+            "protocol version mismatch: peer speaks wire v{version}, this binary \
+             speaks v{WIRE_VERSION} — rebuild both sides from the same commit"
+        ));
     }
+    let worker_id = cur.u32()?;
+    let num_workers = cur.u32()?;
+    let start_doc = cur.u64()?;
+    let t = cur.u32()?;
+    let alpha = cur.f64()?;
+    let beta = cur.f64()?;
+    let vocab = cur.u64()?;
+    let n_off = cur.len(8)?;
+    let doc_offsets = (0..n_off).map(|_| cur.u64()).collect::<Result<_, _>>()?;
+    let n_tok = cur.len(4)?;
+    let tokens = (0..n_tok).map(|_| cur.u32()).collect::<Result<_, _>>()?;
+    let z = get_u16s(cur)?;
+    let s = get_i64s(cur)?;
+    let rng_state = cur.u64()?;
+    let rng_inc = cur.u64()?;
+    Ok(Init {
+        worker_id,
+        num_workers,
+        start_doc,
+        t,
+        alpha,
+        beta,
+        vocab,
+        doc_offsets,
+        tokens,
+        z,
+        s,
+        rng_state,
+        rng_inc,
+    })
 }
 
 /// Parse a frame body produced by [`encode_frame`].  Errors (never
@@ -458,11 +342,11 @@ impl<'a> Cur<'a> {
 pub fn decode_frame(buf: &[u8]) -> Result<Frame, String> {
     let mut cur = Cur::new(buf);
     let frame = match cur.u8().map_err(|_| "empty frame".to_string())? {
-        TAG_INIT => Frame::Init(Box::new(cur.init()?)),
+        TAG_INIT => Frame::Init(Box::new(get_init(&mut cur)?)),
         TAG_INIT_OK => Frame::InitOk,
-        TAG_RING => Frame::Ring(cur.msg()?),
-        TAG_FORWARD => Frame::Forward(cur.msg()?),
-        TAG_REPLY => Frame::Reply(cur.reply()?),
+        TAG_RING => Frame::Ring(get_msg(&mut cur)?),
+        TAG_FORWARD => Frame::Forward(get_msg(&mut cur)?),
+        TAG_REPLY => Frame::Reply(get_reply(&mut cur)?),
         TAG_ERR => Frame::Err(cur.string()?),
         tag => return Err(format!("unknown frame tag {tag}")),
     };

@@ -4,6 +4,7 @@
 //! median-of-samples ns/op, and renders aligned tables — each `benches/*.rs`
 //! is a plain `fn main` that uses this to regenerate one paper table/figure.
 
+use std::fmt::Write as _;
 use std::hint::black_box;
 use std::time::{Duration, Instant};
 
@@ -137,6 +138,81 @@ impl Table {
     }
 }
 
+/// Nearest-rank percentile of an **ascending-sorted** slice
+/// (`p ∈ [0, 100]`).  NaN on empty input.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    debug_assert!((0.0..=100.0).contains(&p));
+    debug_assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "input must be sorted");
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.saturating_sub(1).min(sorted.len() - 1)]
+}
+
+/// One value of a machine-readable bench record.
+#[derive(Clone, Debug)]
+pub enum JsonVal {
+    Num(f64),
+    Int(u64),
+    Str(String),
+}
+
+/// Render a flat JSON object from `(key, value)` pairs — the
+/// `BENCH_*.json` emitter (no serde in the vendored crate set).  Strings
+/// are escaped per RFC 8259; non-finite numbers become `null` (JSON has
+/// no NaN/Inf).
+pub fn json_object(fields: &[(&str, JsonVal)]) -> String {
+    let mut out = String::from("{");
+    for (i, (k, v)) in fields.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&json_string(k));
+        out.push(':');
+        match v {
+            JsonVal::Num(x) if x.is_finite() => {
+                let _ = write!(out, "{x}");
+            }
+            JsonVal::Num(_) => out.push_str("null"),
+            JsonVal::Int(n) => {
+                let _ = write!(out, "{n}");
+            }
+            JsonVal::Str(s) => out.push_str(&json_string(s)),
+        }
+    }
+    out.push_str("}\n");
+    out
+}
+
+fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Write a `BENCH_*.json` record, creating parent directories.
+pub fn write_json(path: &std::path::Path, fields: &[(&str, JsonVal)]) -> Result<(), String> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+    }
+    std::fs::write(path, json_object(fields)).map_err(|e| format!("{}: {e}", path.display()))
+}
+
 /// Human formatting for ns quantities.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -182,6 +258,43 @@ mod tests {
         let s = t.render();
         assert!(s.contains("demo"));
         assert!(s.lines().count() >= 4);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 95.0), 95.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&[7.0], 50.0), 7.0);
+        assert!(percentile(&[], 50.0).is_nan());
+        // nearest-rank on a short list: p95 of 3 samples is the max
+        assert_eq!(percentile(&[1.0, 2.0, 3.0], 95.0), 3.0);
+    }
+
+    #[test]
+    fn json_object_escapes_and_formats() {
+        let s = json_object(&[
+            ("name", JsonVal::Str("he said \"hi\"\n\\".into())),
+            ("tokens_per_sec", JsonVal::Num(1234.5)),
+            ("docs", JsonVal::Int(42)),
+            ("bad", JsonVal::Num(f64::NAN)),
+        ]);
+        assert_eq!(
+            s,
+            "{\"name\":\"he said \\\"hi\\\"\\n\\\\\",\"tokens_per_sec\":1234.5,\
+             \"docs\":42,\"bad\":null}\n"
+        );
+    }
+
+    #[test]
+    fn write_json_creates_dirs() {
+        let path = std::env::temp_dir().join("fnomad_bench_tests").join("b.json");
+        write_json(&path, &[("x", JsonVal::Int(1))]).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(body, "{\"x\":1}\n");
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
     }
 
     #[test]

@@ -1,0 +1,285 @@
+//! Shared binary-codec substrate for the crate's wire and artifact
+//! formats (`nomad/wire.rs`, `infer/wire.rs`, the `.fnmodel` artifact).
+//!
+//! Three layers, all little-endian / fixed-width (the FNLDA001 checkpoint
+//! conventions):
+//!
+//! * `put_*` — appending writers over a `Vec<u8>` body;
+//! * [`Cur`] — a bounds-checked reader that makes decoders *total*: every
+//!   read is checked against the remaining buffer, element counts are
+//!   pre-checked against the remaining bytes before any allocation
+//!   ([`Cur::len`]), and [`Cur::finish`] turns trailing bytes into an
+//!   error.  A malformed buffer is always an `Err(String)`, never a panic
+//!   or an attempted multi-GB allocation;
+//! * [`write_len_prefixed`] / [`read_len_prefixed`] — `u32 LE length |
+//!   body` framing over any `Write`/`Read`, with a caller-supplied cap
+//!   enforced on both sides so a garbage length field cannot OOM the
+//!   process.
+
+use std::io::{Read, Write};
+
+// --------------------------------------------------------------- writers
+
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+pub fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_i64(out: &mut Vec<u8>, v: i64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// `u32` length + raw bytes (the string/blob convention).
+pub fn put_bytes(out: &mut Vec<u8>, bytes: &[u8]) {
+    put_u32(out, bytes.len() as u32);
+    out.extend_from_slice(bytes);
+}
+
+// ---------------------------------------------------------------- reader
+
+/// Bounds-checked reader over a byte buffer.
+pub struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Cur { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.remaining() < n {
+            return Err(format!(
+                "truncated frame: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            ));
+        }
+        let slice = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(slice)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16, String> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn i64(&mut self) -> Result<i64, String> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read a `u32` element count and pre-check it against the remaining
+    /// bytes so garbage lengths error instead of attempting a huge
+    /// allocation.  `elem_bytes` is the *minimum* encoded size of one
+    /// element (variable-width elements pass their floor).
+    pub fn len(&mut self, elem_bytes: usize) -> Result<usize, String> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(elem_bytes) > self.remaining() {
+            return Err(format!(
+                "frame length {n} x {elem_bytes}B exceeds remaining {} bytes",
+                self.remaining()
+            ));
+        }
+        Ok(n)
+    }
+
+    /// `u32` length + UTF-8 bytes (the [`put_bytes`] convention).
+    pub fn string(&mut self) -> Result<String, String> {
+        let n = self.len(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|e| format!("invalid utf8 in frame: {e}"))
+    }
+
+    pub fn finish(self) -> Result<(), String> {
+        if self.remaining() != 0 {
+            return Err(format!("{} trailing bytes after frame", self.remaining()));
+        }
+        Ok(())
+    }
+}
+
+// --------------------------------------------------------------- framing
+
+/// Write one `u32 LE length | body` frame and flush it.  Errors (instead
+/// of truncating the `u32` prefix) on bodies above `cap` — oversized
+/// payloads must fail loudly, not desync the stream.
+pub fn write_len_prefixed<W: Write>(w: &mut W, body: &[u8], cap: usize) -> Result<(), String> {
+    if body.len() > cap {
+        return Err(format!("frame body of {} bytes exceeds the {cap}-byte cap", body.len()));
+    }
+    w.write_all(&(body.len() as u32).to_le_bytes())
+        .and_then(|_| w.write_all(body))
+        .and_then(|_| w.flush())
+        .map_err(|e| format!("frame write failed: {e}"))
+}
+
+/// Read one `u32 LE length | body` frame.  Errors on EOF, short reads,
+/// and a length above `cap` (checked *before* the body allocation).
+pub fn read_len_prefixed<R: Read>(r: &mut R, cap: usize) -> Result<Vec<u8>, String> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4).map_err(|e| format!("frame read failed: {e}"))?;
+    read_frame_body(r, len4, cap)
+}
+
+/// Like [`read_len_prefixed`], but an orderly end-of-stream *between*
+/// frames (EOF before any prefix byte arrived) is `Ok(None)` instead of
+/// an error — session loops use this to tell a clean close apart from
+/// mid-frame truncation, a reset, or an idle timeout (all still `Err`).
+pub fn read_len_prefixed_eof<R: Read>(
+    r: &mut R,
+    cap: usize,
+) -> Result<Option<Vec<u8>>, String> {
+    let mut len4 = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut len4[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(format!("truncated frame length prefix ({got} of 4 bytes)"))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(format!("frame read failed: {e}")),
+        }
+    }
+    read_frame_body(r, len4, cap).map(Some)
+}
+
+fn read_frame_body<R: Read>(r: &mut R, len4: [u8; 4], cap: usize) -> Result<Vec<u8>, String> {
+    let len = u32::from_le_bytes(len4) as usize;
+    if len > cap {
+        return Err(format!("frame length {len} exceeds the {cap}-byte cap"));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).map_err(|e| format!("frame body read failed: {e}"))?;
+    Ok(body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_roundtrip() {
+        let mut out = Vec::new();
+        put_u8(&mut out, 7);
+        put_u16(&mut out, 0xBEEF);
+        put_u32(&mut out, 0xDEAD_BEEF);
+        put_u64(&mut out, u64::MAX - 3);
+        put_i64(&mut out, -42);
+        put_f64(&mut out, -0.125);
+        put_bytes(&mut out, b"topic");
+        let mut cur = Cur::new(&out);
+        assert_eq!(cur.u8().unwrap(), 7);
+        assert_eq!(cur.u16().unwrap(), 0xBEEF);
+        assert_eq!(cur.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(cur.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(cur.i64().unwrap(), -42);
+        assert_eq!(cur.f64().unwrap(), -0.125);
+        assert_eq!(cur.string().unwrap(), "topic");
+        cur.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_and_trailing_are_errors() {
+        let mut out = Vec::new();
+        put_u32(&mut out, 9);
+        let mut cur = Cur::new(&out[..2]);
+        assert!(cur.u32().unwrap_err().contains("truncated"));
+        let mut cur = Cur::new(&out);
+        let _ = cur.u16().unwrap();
+        assert!(cur.finish().unwrap_err().contains("trailing"));
+    }
+
+    #[test]
+    fn absurd_length_field_is_rejected_before_allocation() {
+        let mut out = Vec::new();
+        put_u32(&mut out, u32::MAX);
+        let mut cur = Cur::new(&out);
+        assert!(cur.len(8).unwrap_err().contains("exceeds"));
+    }
+
+    #[test]
+    fn invalid_utf8_is_an_error() {
+        let mut out = Vec::new();
+        put_bytes(&mut out, &[0xFF, 0xFE]);
+        let mut cur = Cur::new(&out);
+        assert!(cur.string().unwrap_err().contains("utf8"));
+    }
+
+    #[test]
+    fn len_prefixed_roundtrip_and_caps() {
+        let mut buf = Vec::new();
+        write_len_prefixed(&mut buf, b"hello", 64).unwrap();
+        write_len_prefixed(&mut buf, b"", 64).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_len_prefixed(&mut r, 64).unwrap(), b"hello");
+        assert_eq!(read_len_prefixed(&mut r, 64).unwrap(), b"");
+        assert!(read_len_prefixed(&mut r, 64).unwrap_err().contains("frame read failed"));
+        // write-side cap
+        let err = write_len_prefixed(&mut Vec::new(), &[0u8; 9], 8).unwrap_err();
+        assert!(err.contains("cap"), "unhelpful error: {err}");
+        // read-side cap, checked before allocation
+        let mut big = Vec::new();
+        big.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(read_len_prefixed(&mut &big[..], 1024).unwrap_err().contains("cap"));
+    }
+
+    #[test]
+    fn eof_aware_reader_distinguishes_close_from_truncation() {
+        // orderly close: EOF before any prefix byte
+        assert_eq!(read_len_prefixed_eof(&mut &[][..], 64).unwrap(), None);
+        // a full frame still arrives intact
+        let mut buf = Vec::new();
+        write_len_prefixed(&mut buf, b"hi", 64).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_len_prefixed_eof(&mut r, 64).unwrap().as_deref(), Some(&b"hi"[..]));
+        assert_eq!(read_len_prefixed_eof(&mut r, 64).unwrap(), None);
+        // mid-prefix truncation is an error, not a clean close
+        let err = read_len_prefixed_eof(&mut &buf[..2], 64).unwrap_err();
+        assert!(err.contains("truncated frame length prefix"), "unhelpful: {err}");
+        // mid-body truncation too
+        let err = read_len_prefixed_eof(&mut &buf[..5], 64).unwrap_err();
+        assert!(err.contains("body"), "unhelpful: {err}");
+        // and the cap still applies
+        let mut big = Vec::new();
+        big.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(read_len_prefixed_eof(&mut &big[..], 64).unwrap_err().contains("cap"));
+    }
+}

@@ -5,10 +5,13 @@
 //! * [`quickcheck`] — mini property-testing harness (replaces `proptest`).
 //! * [`bench`] — wall-clock micro-bench harness (replaces `criterion`).
 //! * [`cli`] — flag parser (replaces `clap`).
+//! * [`codec`] — little-endian writers, the bounds-checked total-decoder
+//!   reader, and length-prefixed frame IO shared by every wire format.
 //! * [`metrics`] — timers + CSV series writers for the experiment curves.
 
 pub mod bench;
 pub mod cli;
+pub mod codec;
 pub mod math;
 pub mod metrics;
 pub mod quickcheck;

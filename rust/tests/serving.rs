@@ -1,0 +1,274 @@
+//! Model serving over loopback TCP: the `export-model` → `serve-model` →
+//! `infer --remote` pipeline must round-trip over real sockets (both
+//! in-process and through the actual CLI binaries), malformed frames must
+//! be named errors rather than hangs or panics, and a fixed seed must
+//! return identical θ̂ across runs — the artifact determinism promise.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::process::{Command, Stdio};
+use std::sync::Arc;
+use std::thread;
+
+use fnomad_lda::corpus::preset;
+use fnomad_lda::infer::wire::MAX_QUERY_FRAME;
+use fnomad_lda::infer::{
+    serve_model, Client, ModelHost, Request, Response, ServeModelOpts, TopicModel,
+};
+use fnomad_lda::lda::state::{Hyper, LdaState};
+use fnomad_lda::lda::{FLdaWord, Sweep};
+use fnomad_lda::util::codec::write_len_prefixed;
+use fnomad_lda::util::rng::Pcg32;
+
+fn trained_model() -> TopicModel {
+    let corpus = preset("tiny").unwrap();
+    let mut rng = Pcg32::seeded(77);
+    let mut state = LdaState::init_random(&corpus, Hyper::paper_default(8), &mut rng);
+    let mut sweeper = FLdaWord::new(&state, &corpus);
+    for _ in 0..8 {
+        sweeper.sweep(&mut state, &corpus, &mut rng);
+    }
+    TopicModel::from_state(&state, Vec::new())
+}
+
+/// Bind a loopback `serve-model` on a free port, serving one connection
+/// on a background thread.
+fn spawn_loopback_server(
+    model: TopicModel,
+) -> (String, thread::JoinHandle<Result<(), String>>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let host = Arc::new(ModelHost::new(model));
+    let handle = thread::spawn(move || {
+        serve_model(listener, host, &ServeModelOpts { threads: 1, once: true, quiet: true })
+    });
+    (addr, handle)
+}
+
+/// The acceptance scenario, in-process: one connection carries a
+/// ModelInfo, an InferDoc and a TopWords query over real TCP, and every
+/// answer is well-formed.
+#[test]
+fn query_round_trip_over_real_tcp() {
+    let model = trained_model();
+    let t = model.num_topics();
+    let (addr, server) = spawn_loopback_server(model);
+    let mut client = Client::connect(&addr).unwrap();
+
+    match client.query(&Request::ModelInfo).unwrap() {
+        Response::ModelInfo { topics, vocab, total_tokens, has_vocab, .. } => {
+            assert_eq!(topics as usize, t);
+            assert_eq!(vocab, 300);
+            assert!(total_tokens > 0);
+            assert!(!has_vocab);
+        }
+        other => panic!("wrong ModelInfo answer: {other:?}"),
+    }
+
+    let req = Request::InferTokens { tokens: vec![0, 1, 2, 3, 4, 5, 6, 7], sweeps: 10, seed: 3 };
+    let theta_a = match client.query(&req).unwrap() {
+        Response::Theta { theta, used_tokens } => {
+            assert_eq!(used_tokens, 8);
+            assert_eq!(theta.len(), t);
+            let sum: f64 = theta.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9, "theta sums to {sum}");
+            theta
+        }
+        other => panic!("wrong InferTokens answer: {other:?}"),
+    };
+    // same seed, same answer: the server's inference is deterministic
+    match client.query(&req).unwrap() {
+        Response::Theta { theta, .. } => assert_eq!(theta, theta_a),
+        other => panic!("wrong repeat answer: {other:?}"),
+    }
+
+    match client.query(&Request::TopWords { k: 5 }).unwrap() {
+        Response::TopWords { topics } => {
+            assert_eq!(topics.len(), t);
+            for row in &topics {
+                assert!(row.len() <= 5);
+                for pair in row.windows(2) {
+                    assert!(pair[0].count >= pair[1].count);
+                }
+            }
+        }
+        other => panic!("wrong TopWords answer: {other:?}"),
+    }
+
+    drop(client);
+    server.join().unwrap().unwrap();
+}
+
+/// A malformed request *body* must come back as a named `Err` response —
+/// and the session must survive it (the framing layer is still intact).
+#[test]
+fn malformed_body_is_a_named_error_and_session_survives() {
+    let model = trained_model();
+    let t = model.num_topics();
+    let (addr, server) = spawn_loopback_server(model);
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+
+    // a well-framed but garbage body
+    write_len_prefixed(&mut writer, b"not a query", MAX_QUERY_FRAME).unwrap();
+    let body = fnomad_lda::util::codec::read_len_prefixed(&mut reader, MAX_QUERY_FRAME).unwrap();
+    match fnomad_lda::infer::wire::decode_response(&body).unwrap() {
+        Response::Err(e) => {
+            assert!(e.contains("bad request"), "unhelpful rejection: {e}");
+        }
+        other => panic!("expected Err response, got {other:?}"),
+    }
+
+    // the same connection still answers real queries
+    let good = fnomad_lda::infer::wire::encode_request(&Request::InferTokens {
+        tokens: vec![0, 1],
+        sweeps: 2,
+        seed: 0,
+    });
+    write_len_prefixed(&mut writer, &good, MAX_QUERY_FRAME).unwrap();
+    let body = fnomad_lda::util::codec::read_len_prefixed(&mut reader, MAX_QUERY_FRAME).unwrap();
+    match fnomad_lda::infer::wire::decode_response(&body).unwrap() {
+        Response::Theta { theta, .. } => assert_eq!(theta.len(), t),
+        other => panic!("session did not survive the bad frame: {other:?}"),
+    }
+
+    drop(writer);
+    drop(reader);
+    server.join().unwrap().unwrap();
+}
+
+/// A broken *frame* layer (absurd length prefix) is fatal for the
+/// session: the server names the fault and drops the connection instead
+/// of trying to resync a desynchronized stream.
+#[test]
+fn oversized_length_prefix_drops_the_session_with_a_named_error() {
+    let (addr, server) = spawn_loopback_server(trained_model());
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream.write_all(&u32::MAX.to_le_bytes()).unwrap();
+    stream.flush().unwrap();
+    // best-effort Err response before the drop
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let body = fnomad_lda::util::codec::read_len_prefixed(&mut reader, MAX_QUERY_FRAME).unwrap();
+    match fnomad_lda::infer::wire::decode_response(&body).unwrap() {
+        Response::Err(e) => assert!(e.contains("cap"), "unhelpful frame error: {e}"),
+        other => panic!("expected Err response, got {other:?}"),
+    }
+    // the connection is closed afterwards
+    let mut probe = [0u8; 1];
+    assert_eq!(reader.read(&mut probe).unwrap(), 0, "server kept a broken stream open");
+    // a --once session error is the server's error (exit-code parity)
+    let err = server.join().unwrap().unwrap_err();
+    assert!(err.contains("cap"), "server error must name the fault: {err}");
+}
+
+/// `.fnmodel` artifact determinism at the file level: export → load gives
+/// back a byte-identical artifact and identical inference.
+#[test]
+fn artifact_roundtrip_preserves_inference() {
+    let model = trained_model();
+    let path = std::env::temp_dir().join("fnomad_serving_tests").join("rt.fnmodel");
+    model.save(&path).unwrap();
+    let back = TopicModel::load(&path).unwrap();
+    assert_eq!(back.encode(), model.encode());
+    let host_a = ModelHost::new(model);
+    let host_b = ModelHost::new(back);
+    let req = Request::InferTokens { tokens: vec![5, 5, 9, 200], sweeps: 8, seed: 42 };
+    match (host_a.answer(req.clone()), host_b.answer(req)) {
+        (Response::Theta { theta: a, .. }, Response::Theta { theta: b, .. }) => {
+            assert_eq!(a, b)
+        }
+        other => panic!("expected two Theta answers, got {other:?}"),
+    }
+    let _ = std::fs::remove_file(path);
+}
+
+/// The full pipeline through the real CLI binaries: train 2 epochs with a
+/// checkpoint, `export-model`, host it with `serve-model`, query it with
+/// `infer --remote`, and grep a well-formed θ̂ response.
+#[test]
+fn two_process_serving_pipeline_via_cli() {
+    let bin = env!("CARGO_BIN_EXE_fnomad-lda");
+    let dir = std::env::temp_dir().join("fnomad_serving_cli");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("cli.ckpt");
+    let fnmodel = dir.join("cli.fnmodel");
+    let _ = std::fs::remove_file(&ckpt);
+
+    let run = |args: &[&str]| {
+        let out = Command::new(bin).args(args).output().expect("spawn fnomad-lda");
+        assert!(
+            out.status.success(),
+            "{args:?} failed:\n{}\n{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+
+    run(&[
+        "train", "--preset", "tiny", "--topics", "8", "--iters", "2", "--eval", "rust",
+        "--quiet", "--checkpoint", ckpt.to_str().unwrap(),
+    ]);
+    let exported = run(&[
+        "export-model", "--checkpoint", ckpt.to_str().unwrap(), "--preset", "tiny", "--out",
+        fnmodel.to_str().unwrap(),
+    ]);
+    assert!(exported.contains("exported"), "no export summary: {exported}");
+
+    let mut server = Command::new(bin)
+        .args(["serve-model", "--model", fnmodel.to_str().unwrap()])
+        .args(["--listen", "127.0.0.1:0", "--once", "--quiet"])
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawn serve-model");
+    let mut banner = String::new();
+    BufReader::new(server.stdout.take().unwrap()).read_line(&mut banner).unwrap();
+    let addr = banner
+        .trim()
+        .strip_prefix("listening on ")
+        .unwrap_or_else(|| panic!("unexpected serve-model banner: {banner:?}"));
+
+    // a held-out document the training corpus never saw in this order
+    let infer_out = run(&[
+        "infer", "--remote", addr, "--tokens", "0,1,2,3,4,5,6,7", "--sweeps", "10", "--top",
+        "3", "--seed", "5",
+    ]);
+    assert!(infer_out.contains("theta_top:"), "no theta line: {infer_out}");
+    let theta_line = infer_out.lines().find(|l| l.starts_with("theta_top:")).unwrap();
+    // well-formed: `topic:mass` pairs with masses in (0, 1)
+    let pairs: Vec<&str> = theta_line.trim_start_matches("theta_top:").split_whitespace().collect();
+    assert_eq!(pairs.len(), 3, "expected 3 top topics: {theta_line}");
+    for pair in &pairs {
+        let (topic, mass) = pair.split_once(':').expect("topic:mass pair");
+        let topic: usize = topic.parse().expect("topic id");
+        assert!(topic < 8);
+        let mass: f64 = mass.parse().expect("theta mass");
+        assert!(mass > 0.0 && mass < 1.0, "bad mass in {theta_line}");
+    }
+    let status = server.wait().expect("serve-model exit");
+    assert!(status.success(), "serve-model failed: {status}");
+
+    // local inference from the artifact is deterministic across process runs
+    let local = &[
+        "infer", "--model", fnmodel.to_str().unwrap(), "--tokens", "0,1,2,3,4,5,6,7",
+        "--sweeps", "10", "--top", "3", "--seed", "5",
+    ];
+    let a = run(local.as_slice());
+    let b = run(local.as_slice());
+    assert_eq!(a, b, "fixed-seed CLI inference diverged across runs");
+    // and the remote answer matches the local one: same artifact, same
+    // seed, same engine on both sides of the socket
+    assert_eq!(
+        a.lines().find(|l| l.starts_with("theta_top:")),
+        Some(theta_line),
+        "remote and local θ̂ diverged"
+    );
+
+    // model info renders from the artifact
+    let info = run(&["infer", "--model", fnmodel.to_str().unwrap(), "--info"]);
+    assert!(info.contains("T=8"), "bad info line: {info}");
+
+    let _ = std::fs::remove_file(&ckpt);
+    let _ = std::fs::remove_file(&fnmodel);
+}
