@@ -1,0 +1,249 @@
+//! The cross-connection batching queue between handler threads and
+//! inference workers.
+//!
+//! Handler threads decode inference requests and [`BatchQueue::push`] a
+//! [`Job`] each; worker threads [`BatchQueue::pop_batch`] *everything
+//! queued at once* (up to a cap, optionally lingering for a batching
+//! window) and run the whole batch through one warm engine — the F+tree
+//! base build and scratch buffers are paid per batch, not per query.
+//! `std::sync::mpsc` is single-consumer, so the queue is a hand-rolled
+//! bounded MPMC: a `Mutex<VecDeque>` with two condvars (`not_empty` for
+//! workers, `not_full` for backpressure on handlers).
+//!
+//! Backpressure is explicit: when the queue is full past a deadline the
+//! push fails with a named "server overloaded" error that travels back to
+//! the client as a `Response::Err` — bounded memory under overload, never
+//! an unbounded backlog.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::SyncSender;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::wire::Response;
+
+/// One queued inference request: the resolved token ids plus the reply
+/// channel of the handler thread that owns the connection.
+pub struct Job {
+    pub tokens: Vec<u32>,
+    pub sweeps: u32,
+    pub seed: u64,
+    /// rendezvous back to the handler; a handler that gave up waiting has
+    /// dropped the receiver, and the worker's send simply no-ops
+    pub reply: SyncSender<Response>,
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+/// Bounded multi-producer multi-consumer job queue.
+pub struct BatchQueue {
+    state: Mutex<QueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+impl BatchQueue {
+    pub fn new(cap: usize) -> BatchQueue {
+        assert!(cap >= 1, "queue depth must be >= 1");
+        BatchQueue {
+            state: Mutex::new(QueueState { jobs: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap,
+        }
+    }
+
+    /// Jobs currently queued (racy by nature; for stats reporting).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enqueue one job, blocking up to `deadline` for room.  Errors by
+    /// name when the queue stays full past the deadline (overload
+    /// backpressure) or the server is shutting down.
+    pub fn push(&self, job: Job, deadline: Duration) -> Result<(), String> {
+        let overloaded = || {
+            format!(
+                "server overloaded: inference queue held {} jobs for {deadline:?}",
+                self.cap
+            )
+        };
+        let t0 = Instant::now();
+        let mut st = self.state.lock().unwrap();
+        while st.jobs.len() >= self.cap && !st.closed {
+            let left = match deadline.checked_sub(t0.elapsed()) {
+                Some(left) if !left.is_zero() => left,
+                _ => return Err(overloaded()),
+            };
+            st = self.not_full.wait_timeout(st, left).unwrap().0;
+        }
+        if st.closed {
+            return Err("server shutting down: inference queue closed".into());
+        }
+        st.jobs.push_back(job);
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Take one batch: block up to `idle` for a first job, then drain
+    /// whatever is queued — lingering up to `window` (if nonzero) while
+    /// under `max` jobs, so concurrent connections pile into one batch.
+    ///
+    /// * `Some(jobs)` — a non-empty batch to run;
+    /// * `Some(vec![])` — the idle timeout fired with nothing queued
+    ///   (workers use this to re-check the model slot version);
+    /// * `None` — the queue is closed *and* drained: the worker exits.
+    pub fn pop_batch(&self, max: usize, window: Duration, idle: Duration) -> Option<Vec<Job>> {
+        let max = max.max(1);
+        let t0 = Instant::now();
+        let mut st = self.state.lock().unwrap();
+        while st.jobs.is_empty() {
+            if st.closed {
+                return None;
+            }
+            let left = match idle.checked_sub(t0.elapsed()) {
+                Some(left) if !left.is_zero() => left,
+                _ => return Some(Vec::new()),
+            };
+            st = self.not_empty.wait_timeout(st, left).unwrap().0;
+        }
+        let mut batch = Vec::with_capacity(st.jobs.len().min(max));
+        let w0 = Instant::now();
+        loop {
+            while batch.len() < max {
+                match st.jobs.pop_front() {
+                    Some(job) => batch.push(job),
+                    None => break,
+                }
+            }
+            if batch.len() >= max || st.closed {
+                break;
+            }
+            let left = match window.checked_sub(w0.elapsed()) {
+                Some(left) if !left.is_zero() => left,
+                _ => break,
+            };
+            st = self.not_empty.wait_timeout(st, left).unwrap().0;
+        }
+        drop(st);
+        // up to `max` slots just freed — wake every blocked producer
+        self.not_full.notify_all();
+        Some(batch)
+    }
+
+    /// Close the queue: producers fail fast, consumers drain what is
+    /// left and then get `None`.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+    use std::sync::Arc;
+
+    fn job(seed: u64) -> (Job, std::sync::mpsc::Receiver<Response>) {
+        let (reply, rx) = sync_channel(1);
+        (Job { tokens: vec![1, 2, 3], sweeps: 5, seed, reply }, rx)
+    }
+
+    #[test]
+    fn push_then_pop_batches_everything_queued() {
+        let q = BatchQueue::new(16);
+        for i in 0..5 {
+            let (j, _rx) = job(i);
+            q.push(j, Duration::from_secs(1)).unwrap();
+        }
+        assert_eq!(q.len(), 5);
+        let batch = q.pop_batch(3, Duration::ZERO, Duration::from_secs(1)).unwrap();
+        assert_eq!(batch.len(), 3, "batch respects the max");
+        assert_eq!(batch[0].seed, 0, "FIFO order");
+        let batch = q.pop_batch(16, Duration::ZERO, Duration::from_secs(1)).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn idle_timeout_returns_an_empty_batch_not_a_hang() {
+        let q = BatchQueue::new(4);
+        let t0 = Instant::now();
+        let batch = q.pop_batch(8, Duration::ZERO, Duration::from_millis(30)).unwrap();
+        assert!(batch.is_empty());
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn full_queue_backpressure_is_a_named_error() {
+        let q = BatchQueue::new(2);
+        let (j0, _r0) = job(0);
+        let (j1, _r1) = job(1);
+        let (j2, _r2) = job(2);
+        q.push(j0, Duration::from_millis(10)).unwrap();
+        q.push(j1, Duration::from_millis(10)).unwrap();
+        let err = q.push(j2, Duration::from_millis(10)).unwrap_err();
+        assert!(err.contains("overloaded"), "unhelpful: {err}");
+        // a consumer frees room and a blocked push succeeds
+        let q = Arc::new(q);
+        let q2 = Arc::clone(&q);
+        let popper = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            q2.pop_batch(1, Duration::ZERO, Duration::from_secs(1)).unwrap().len()
+        });
+        let (j3, _r3) = job(3);
+        q.push(j3, Duration::from_secs(2)).unwrap();
+        assert_eq!(popper.join().unwrap(), 1);
+    }
+
+    #[test]
+    fn batching_window_collects_late_arrivals() {
+        let q = Arc::new(BatchQueue::new(16));
+        let (j0, _r0) = job(0);
+        q.push(j0, Duration::from_secs(1)).unwrap();
+        let q2 = Arc::clone(&q);
+        let pusher = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            let (j1, r1) = job(1);
+            q2.push(j1, Duration::from_secs(1)).unwrap();
+            // keep the receiver alive until the pop below finishes
+            std::thread::sleep(Duration::from_millis(300));
+            drop(r1);
+        });
+        let batch = q
+            .pop_batch(8, Duration::from_millis(250), Duration::from_secs(1))
+            .unwrap();
+        assert_eq!(batch.len(), 2, "the window must catch the late push");
+        pusher.join().unwrap();
+    }
+
+    #[test]
+    fn close_drains_then_terminates_consumers_and_fails_producers() {
+        let q = BatchQueue::new(4);
+        let (j0, _r0) = job(0);
+        q.push(j0, Duration::from_secs(1)).unwrap();
+        q.close();
+        // queued work still drains
+        let batch = q.pop_batch(4, Duration::ZERO, Duration::from_secs(1)).unwrap();
+        assert_eq!(batch.len(), 1);
+        // then consumers see the end, promptly even with a long idle
+        let t0 = Instant::now();
+        assert!(q.pop_batch(4, Duration::ZERO, Duration::from_secs(60)).is_none());
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        // and producers fail by name
+        let (j1, _r1) = job(1);
+        let err = q.push(j1, Duration::from_secs(1)).unwrap_err();
+        assert!(err.contains("shutting down"), "unhelpful: {err}");
+    }
+}

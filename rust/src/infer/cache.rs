@@ -1,0 +1,234 @@
+//! Serving-side LRU answer cache.
+//!
+//! Real query streams are heavily skewed — the same documents and
+//! top-word requests repeat — so the server keeps a bounded map from
+//! [`CacheKey`] to the finished `Response`.  The cache is a classic
+//! index-linked LRU: a `HashMap` into a slab of entries threaded on an
+//! intrusive doubly-linked recency list, so `get`, `insert`, and eviction
+//! are all O(1) with no per-operation allocation beyond the stored value.
+//!
+//! Hot-swap invalidation is by *construction*, not by flush: every key
+//! embeds the model version it was answered under, so after a
+//! `ReloadModel` the old entries simply stop being addressable and age
+//! out of the LRU tail on their own.  There is no race window where a
+//! flush and an in-flight insert could disagree about which model
+//! answered.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+/// Sentinel link for "no neighbor" in the intrusive recency list.
+const NIL: usize = usize::MAX;
+
+struct Entry<K, V> {
+    key: K,
+    val: V,
+    prev: usize,
+    next: usize,
+}
+
+/// A fixed-capacity LRU map with O(1) get / insert / evict.
+pub struct LruCache<K, V> {
+    map: HashMap<K, usize>,
+    entries: Vec<Entry<K, V>>,
+    free: Vec<usize>,
+    /// most recently used; NIL when empty
+    head: usize,
+    /// least recently used; NIL when empty
+    tail: usize,
+    cap: usize,
+}
+
+impl<K: Clone + Eq + Hash, V: Clone> LruCache<K, V> {
+    /// `cap` must be ≥ 1 — "cache disabled" is expressed by not
+    /// constructing a cache, not by a zero capacity.
+    pub fn new(cap: usize) -> LruCache<K, V> {
+        assert!(cap >= 1, "LruCache capacity must be >= 1");
+        LruCache {
+            map: HashMap::with_capacity(cap),
+            entries: Vec::with_capacity(cap),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            cap,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Look up a key, promoting it to most-recently-used on a hit.
+    /// Returns a clone so the caller holds no borrow into the cache
+    /// (values are shared `Response`s, cloned anyway to answer).
+    pub fn get(&mut self, key: &K) -> Option<V> {
+        let i = *self.map.get(key)?;
+        self.unlink(i);
+        self.push_front(i);
+        Some(self.entries[i].val.clone())
+    }
+
+    /// Insert or refresh a key at most-recently-used, evicting the LRU
+    /// entry when full.
+    pub fn insert(&mut self, key: K, val: V) {
+        if let Some(&i) = self.map.get(&key) {
+            self.entries[i].val = val;
+            self.unlink(i);
+            self.push_front(i);
+            return;
+        }
+        if self.map.len() == self.cap {
+            let lru = self.tail;
+            self.unlink(lru);
+            self.map.remove(&self.entries[lru].key);
+            self.free.push(lru);
+        }
+        let entry = Entry { key: key.clone(), val, prev: NIL, next: NIL };
+        let i = match self.free.pop() {
+            Some(slot) => {
+                self.entries[slot] = entry;
+                slot
+            }
+            None => {
+                self.entries.push(entry);
+                self.entries.len() - 1
+            }
+        };
+        self.map.insert(key, i);
+        self.push_front(i);
+    }
+
+    fn unlink(&mut self, i: usize) {
+        let (prev, next) = (self.entries[i].prev, self.entries[i].next);
+        if prev != NIL {
+            self.entries[prev].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.entries[next].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+    }
+
+    fn push_front(&mut self, i: usize) {
+        self.entries[i].prev = NIL;
+        self.entries[i].next = self.head;
+        if self.head != NIL {
+            self.entries[self.head].prev = i;
+        } else {
+            self.tail = i;
+        }
+        self.head = i;
+    }
+}
+
+/// What one cached serving answer is keyed on.
+///
+/// Theta entries key on the **sorted** token multiset.  LDA is a
+/// bag-of-words model, so every ordering of the same bag is the same
+/// query; fold-in Gibbs does consume RNG draws in token order, so
+/// permutations are different (equally valid) θ̂ samples — the multiset
+/// key pins the first one computed and serves it to all orderings, which
+/// is what makes shuffled replays of a hot document cache hits.  Repeats
+/// of the byte-identical request always get the byte-identical answer.
+/// Every variant embeds `model_version`, which is what makes hot-swap
+/// invalidation free.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum CacheKey {
+    Theta { tokens: Vec<u32>, sweeps: u32, seed: u64, model_version: u64 },
+    TopWords { k: u32, model_version: u64 },
+}
+
+impl CacheKey {
+    /// Build a theta key, sorting the tokens into canonical multiset
+    /// order.
+    pub fn theta(tokens: &[u32], sweeps: u32, seed: u64, model_version: u64) -> CacheKey {
+        let mut tokens = tokens.to_vec();
+        tokens.sort_unstable();
+        CacheKey::Theta { tokens, sweeps, seed, model_version }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_miss_and_lru_eviction_order() {
+        let mut c: LruCache<u32, &str> = LruCache::new(2);
+        assert!(c.is_empty());
+        c.insert(1, "a");
+        c.insert(2, "b");
+        assert_eq!(c.get(&1), Some("a"));
+        // 1 is now most recent; inserting 3 evicts 2
+        c.insert(3, "c");
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&2), None);
+        assert_eq!(c.get(&1), Some("a"));
+        assert_eq!(c.get(&3), Some("c"));
+    }
+
+    #[test]
+    fn reinsert_refreshes_value_and_recency() {
+        let mut c: LruCache<u32, &str> = LruCache::new(2);
+        c.insert(1, "a");
+        c.insert(2, "b");
+        c.insert(1, "a2");
+        // 2 is now the LRU entry
+        c.insert(3, "c");
+        assert_eq!(c.get(&1), Some("a2"));
+        assert_eq!(c.get(&2), None);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn capacity_one_degenerates_gracefully() {
+        let mut c: LruCache<u32, u32> = LruCache::new(1);
+        for i in 0..10 {
+            c.insert(i, i * i);
+            assert_eq!(c.len(), 1);
+            assert_eq!(c.get(&i), Some(i * i));
+        }
+        assert_eq!(c.get(&0), None);
+    }
+
+    #[test]
+    fn evicted_slots_are_reused_not_leaked() {
+        let mut c: LruCache<u32, u32> = LruCache::new(4);
+        for i in 0..1000 {
+            c.insert(i, i);
+        }
+        assert_eq!(c.len(), 4);
+        // slab never grew past capacity: 4 live + at most 1 transient free
+        assert!(c.entries.len() <= 5, "slab leaked to {}", c.entries.len());
+        for i in 996..1000 {
+            assert_eq!(c.get(&i), Some(i));
+        }
+    }
+
+    #[test]
+    fn theta_keys_are_multiset_canonical_and_version_scoped() {
+        let a = CacheKey::theta(&[5, 1, 5, 2], 10, 7, 1);
+        let b = CacheKey::theta(&[1, 2, 5, 5], 10, 7, 1);
+        assert_eq!(a, b);
+        // different multiset, sweeps, seed, or model version: distinct keys
+        assert_ne!(a, CacheKey::theta(&[1, 2, 5], 10, 7, 1));
+        assert_ne!(a, CacheKey::theta(&[5, 1, 5, 2], 11, 7, 1));
+        assert_ne!(a, CacheKey::theta(&[5, 1, 5, 2], 10, 8, 1));
+        assert_ne!(a, CacheKey::theta(&[5, 1, 5, 2], 10, 7, 2));
+        assert_ne!(
+            CacheKey::TopWords { k: 5, model_version: 1 },
+            CacheKey::TopWords { k: 5, model_version: 2 }
+        );
+    }
+}

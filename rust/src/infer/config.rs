@@ -1,0 +1,225 @@
+//! Typed configuration for the serving stack, mirroring the
+//! [`crate::coordinator::TrainConfig`] builder idiom: public fields, a
+//! chaining builder, and a [`ServeConfig::validate`] that names the
+//! offending flag.  `main.rs` parses flag strings into these exactly
+//! once at the edge; everything below the CLI is typed.
+
+use std::time::Duration;
+
+/// Everything `serve_model` needs beyond the listener and the model
+/// slot.  Build with `ServeConfig::default()` plus the chaining setters.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// connection handler threads (each owns a clone of the listener)
+    pub threads: usize,
+    /// inference worker threads draining the batch queue
+    pub workers: usize,
+    /// how long a worker lingers for more jobs after the first of a
+    /// batch; zero (the default) drains opportunistically — whatever is
+    /// queued forms the batch, and an idle queue adds no latency
+    pub batch_window: Duration,
+    /// bounded depth of the handler → worker queue; a full queue is a
+    /// named backpressure error, not an unbounded backlog
+    pub queue_depth: usize,
+    /// LRU answer-cache entries; 0 disables the cache
+    pub cache_capacity: usize,
+    /// per-connection read deadline: a client that connects and goes
+    /// silent is cut off with a named timeout error, not held forever
+    pub read_deadline: Duration,
+    /// how long a handler waits for a worker to answer one job — sized
+    /// for the slowest legal query, it only fires when workers are wedged
+    pub answer_deadline: Duration,
+    /// most documents one worker drains into a single batch
+    pub max_batch: usize,
+    /// serve a single connection on the calling thread, then return
+    pub once: bool,
+    /// suppress per-connection logging
+    pub quiet: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            threads: 4,
+            workers: 2,
+            batch_window: Duration::ZERO,
+            queue_depth: 256,
+            cache_capacity: 1024,
+            read_deadline: Duration::from_secs(300),
+            answer_deadline: Duration::from_secs(600),
+            max_batch: 64,
+            once: false,
+            quiet: false,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    pub fn batch_window(mut self, window: Duration) -> Self {
+        self.batch_window = window;
+        self
+    }
+
+    pub fn queue_depth(mut self, depth: usize) -> Self {
+        self.queue_depth = depth;
+        self
+    }
+
+    pub fn cache_capacity(mut self, entries: usize) -> Self {
+        self.cache_capacity = entries;
+        self
+    }
+
+    pub fn read_deadline(mut self, deadline: Duration) -> Self {
+        self.read_deadline = deadline;
+        self
+    }
+
+    pub fn answer_deadline(mut self, deadline: Duration) -> Self {
+        self.answer_deadline = deadline;
+        self
+    }
+
+    pub fn max_batch(mut self, max: usize) -> Self {
+        self.max_batch = max;
+        self
+    }
+
+    pub fn once(mut self, once: bool) -> Self {
+        self.once = once;
+        self
+    }
+
+    pub fn quiet(mut self, quiet: bool) -> Self {
+        self.quiet = quiet;
+        self
+    }
+
+    /// Check every knob, naming the offending flag in the error.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.threads == 0 {
+            return Err("--threads must be >= 1".into());
+        }
+        if self.workers == 0 {
+            return Err("--workers must be >= 1".into());
+        }
+        if self.queue_depth == 0 {
+            return Err("--queue-depth must be >= 1".into());
+        }
+        if self.max_batch == 0 {
+            return Err("--max-batch must be >= 1".into());
+        }
+        if self.read_deadline.is_zero() {
+            return Err("--read-deadline-secs must be > 0".into());
+        }
+        if self.answer_deadline.is_zero() {
+            return Err("the answer deadline must be > 0".into());
+        }
+        Ok(())
+    }
+}
+
+/// Client-side connection knobs; `Client::connect(addr)` is shorthand
+/// for the defaults.
+#[derive(Clone, Debug)]
+pub struct ClientConfig {
+    pub addr: String,
+    /// deadline for the TCP connect (a black-holed address must be a
+    /// prompt error, not an OS-default multi-minute hang)
+    pub connect_timeout: Duration,
+    /// deadline per answer: sized for the slowest *legal* request (a
+    /// max-token document at the sweep cap), so no within-cap query is
+    /// un-servable through the bundled client
+    pub answer_timeout: Duration,
+}
+
+impl ClientConfig {
+    pub fn new(addr: impl Into<String>) -> ClientConfig {
+        ClientConfig {
+            addr: addr.into(),
+            connect_timeout: Duration::from_secs(30),
+            answer_timeout: Duration::from_secs(600),
+        }
+    }
+
+    pub fn connect_timeout(mut self, deadline: Duration) -> Self {
+        self.connect_timeout = deadline;
+        self
+    }
+
+    pub fn answer_timeout(mut self, deadline: Duration) -> Self {
+        self.answer_timeout = deadline;
+        self
+    }
+
+    /// Open a connection with these knobs.
+    pub fn connect(&self) -> Result<super::server::Client, String> {
+        super::server::Client::connect_with(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chains_and_validates() {
+        let cfg = ServeConfig::default()
+            .threads(8)
+            .workers(3)
+            .batch_window(Duration::from_millis(2))
+            .queue_depth(512)
+            .cache_capacity(0)
+            .read_deadline(Duration::from_secs(10))
+            .answer_deadline(Duration::from_secs(20))
+            .max_batch(32)
+            .once(true)
+            .quiet(true);
+        assert_eq!(cfg.threads, 8);
+        assert_eq!(cfg.workers, 3);
+        assert_eq!(cfg.batch_window, Duration::from_millis(2));
+        assert_eq!(cfg.queue_depth, 512);
+        assert_eq!(cfg.cache_capacity, 0, "0 = cache disabled is legal");
+        assert!(cfg.once && cfg.quiet);
+        cfg.validate().unwrap();
+        assert!(ServeConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn validation_names_the_offending_flag() {
+        for (cfg, needle) in [
+            (ServeConfig::default().threads(0), "--threads"),
+            (ServeConfig::default().workers(0), "--workers"),
+            (ServeConfig::default().queue_depth(0), "--queue-depth"),
+            (ServeConfig::default().max_batch(0), "--max-batch"),
+            (ServeConfig::default().read_deadline(Duration::ZERO), "--read-deadline"),
+            (ServeConfig::default().answer_deadline(Duration::ZERO), "answer deadline"),
+        ] {
+            let err = cfg.validate().unwrap_err();
+            assert!(err.contains(needle), "error {err:?} must name {needle}");
+        }
+    }
+
+    #[test]
+    fn client_config_builds_with_defaults() {
+        let cfg = ClientConfig::new("127.0.0.1:7878")
+            .connect_timeout(Duration::from_secs(1))
+            .answer_timeout(Duration::from_secs(2));
+        assert_eq!(cfg.addr, "127.0.0.1:7878");
+        assert_eq!(cfg.connect_timeout, Duration::from_secs(1));
+        assert_eq!(cfg.answer_timeout, Duration::from_secs(2));
+        let d = ClientConfig::new("x");
+        assert_eq!(d.connect_timeout, Duration::from_secs(30));
+        assert_eq!(d.answer_timeout, Duration::from_secs(600));
+    }
+}

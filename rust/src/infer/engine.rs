@@ -80,6 +80,14 @@ impl Inference {
     }
 }
 
+/// One independent unit of batched inference work: a document and its
+/// own options (each concurrent client picks its own sweeps/seed).
+#[derive(Clone, Debug)]
+pub struct InferJob {
+    pub tokens: Vec<u32>,
+    pub opts: InferOpts,
+}
+
 /// Held-out score of one document (the second half, given the first).
 #[derive(Clone, Copy, Debug)]
 pub struct HeldOutScore {
@@ -207,6 +215,18 @@ impl<'m> Inferencer<'m> {
     /// Infer θ̂ for one unseen document (document index 0's stream).
     pub fn infer_doc(&mut self, tokens: &[u32], opts: &InferOpts) -> Result<Inference, String> {
         self.infer_doc_indexed(tokens, 0, opts)
+    }
+
+    /// Run a whole batch of independent jobs through this one warm
+    /// engine — the cross-connection batching entry point of the serving
+    /// path.  The F+tree base build and all scratch buffers are paid once
+    /// per engine, not once per job, and each job still draws from its
+    /// own `(seed, 0)` stream, so every answer is bit-identical to a solo
+    /// [`Self::infer_doc`] call with the same options (batch composition
+    /// never leaks into results).  Per-job failures are per-slot `Err`s;
+    /// one bad document never poisons its batch-mates.
+    pub fn infer_jobs(&mut self, jobs: &[InferJob]) -> Vec<Result<Inference, String>> {
+        jobs.iter().map(|job| self.infer_doc(&job.tokens, &job.opts)).collect()
     }
 
     /// Document-completion held-out score: fold in the first half of
@@ -383,6 +403,38 @@ mod tests {
         let mut inf = Inferencer::new(&model);
         let single = inf.infer_doc(corpus.doc(0), &opts).unwrap();
         assert_eq!(single.theta, one[0].theta);
+    }
+
+    /// Batched jobs on a shared warm engine must answer exactly like solo
+    /// calls on fresh engines — batch composition never leaks into θ̂, and
+    /// a failing job leaves its batch-mates untouched.
+    #[test]
+    fn infer_jobs_match_solo_calls_and_isolate_failures() {
+        let (corpus, model) = trained();
+        let jobs: Vec<InferJob> = (0..6)
+            .map(|d| InferJob {
+                tokens: corpus.doc(d).to_vec(),
+                opts: InferOpts { sweeps: 3 + d, seed: 100 + d as u64 },
+            })
+            .collect();
+        let mut engine = Inferencer::new(&model);
+        let batched = engine.infer_jobs(&jobs);
+        assert_eq!(batched.len(), jobs.len());
+        for (job, got) in jobs.iter().zip(&batched) {
+            let mut solo = Inferencer::new(&model);
+            let want = solo.infer_doc(&job.tokens, &job.opts).unwrap();
+            assert_eq!(got.as_ref().unwrap().theta, want.theta);
+        }
+        // an OOV job fails alone; its neighbors still answer correctly
+        let mixed = vec![
+            jobs[0].clone(),
+            InferJob { tokens: vec![model.vocab() as u32], opts: jobs[1].opts },
+            jobs[2].clone(),
+        ];
+        let res = engine.infer_jobs(&mixed);
+        assert!(res[0].is_ok() && res[2].is_ok());
+        assert!(res[1].as_ref().unwrap_err().contains("vocabulary"));
+        assert_eq!(res[0].as_ref().unwrap().theta, batched[0].as_ref().unwrap().theta);
     }
 
     /// After every document the q tree must be back at the base leaves —

@@ -3,32 +3,44 @@
 //! Training produces a mutable, corpus-bound [`crate::lda::LdaState`];
 //! serving heavy query traffic wants a frozen, self-contained artifact
 //! and an inference path whose per-token cost does not scale linearly in
-//! the topic count.  Three layers, mirroring LightLDA-style
-//! train/serve separation:
+//! the topic count.  The layers, mirroring LightLDA-style train/serve
+//! separation:
 //!
 //! * [`model`] — the immutable [`TopicModel`] (sparse topic–word counts,
 //!   topic totals, hyperparameters, optional vocabulary strings) with its
-//!   versioned `FNTM0001` binary format and a total, bounds-checked
-//!   decoder.  `fnomad-lda export-model` freezes a training checkpoint
-//!   into one.
+//!   versioned `FNTM0001` binary format, a total, bounds-checked decoder,
+//!   and a content fingerprint for serving identity.  `fnomad-lda
+//!   export-model` freezes a training checkpoint into one.
 //! * [`engine`] — fold-in Gibbs inference for unseen documents with φ̂
 //!   frozen: a per-thread F+tree over the q term of
 //!   `(n_td + α)·φ̂_t(w)` gives Θ(|T̂_w| + log T) per token (no O(T)
 //!   scan), per-document RNG streams give bit-identical results across
 //!   runs and thread counts, and `lda::perplexity` delegates its fold-in
-//!   here.
-//! * [`server`] + [`wire`] — a length-prefixed TCP query protocol
-//!   (`fnomad-lda serve-model` / `fnomad-lda infer --remote`): the model
-//!   loads once and N handler threads answer `InferDoc` / `TopWords` /
-//!   `ModelInfo` queries, tokenizing raw-text requests with the training
-//!   text pipeline.
+//!   here.  [`engine::InferJob`] batches independent queries through one
+//!   warm engine.
+//! * [`server`] + [`wire`] — a length-prefixed TCP query protocol v2
+//!   (`fnomad-lda serve-model` / `fnomad-lda infer --remote`): handler
+//!   threads decode and answer cheap requests; inference fans through the
+//!   shared [`batch`] queue into worker threads; [`cache`] holds an LRU
+//!   of finished answers keyed on the token multiset; the served model
+//!   sits in a [`server::ModelSlot`] so `ReloadModel` hot-swaps artifacts
+//!   with zero dropped in-flight queries; [`stats`] counts QPS, latency
+//!   percentiles, and cache hit rate for the `Stats` request.  Everything
+//!   is configured through the typed [`ServeConfig`] / [`ClientConfig`]
+//!   builders in [`config`].
 
+pub mod batch;
+pub mod cache;
+pub mod config;
 pub mod engine;
 pub mod model;
 pub mod server;
+pub mod stats;
 pub mod wire;
 
-pub use engine::{infer_batch, HeldOutScore, InferOpts, Inference, Inferencer};
+pub use config::{ClientConfig, ServeConfig};
+pub use engine::{infer_batch, HeldOutScore, InferJob, InferOpts, Inference, Inferencer};
 pub use model::TopicModel;
-pub use server::{query_one, serve_model, Client, ModelHost, ServeModelOpts};
+pub use server::{model_id_for, query_one, serve_model, Client, ModelHost, ModelSlot};
+pub use stats::{ServerStats, StatsReport};
 pub use wire::{Request, Response};

@@ -1,46 +1,72 @@
 //! The model query server (`serve-model`) and its client
 //! (`infer --remote`): length-prefixed [`super::wire`] frames over TCP,
-//! answered by a shared, immutable [`ModelHost`].
+//! answered by a shared batching core.
 //!
 //! # Topology
 //!
-//! The model is loaded **once** and shared read-only across N handler
-//! threads; each accepted connection is served by one thread with its own
-//! per-thread [`Inferencer`] (the F+tree and scratch buffers are reused
-//! across that connection's requests).  A connection carries any number
-//! of request/response pairs until the client closes it.
+//! ```text
+//! N handler threads ──decode──▶ BatchQueue ──▶ M worker threads
+//!   (per-connection IO,          (bounded,       (one warm Inferencer
+//!    caps, cache, admin)          MPMC)           per model lease)
+//! ```
+//!
+//! Handler threads own connections: they decode requests, answer the
+//! cheap ones inline (`ModelInfo`, `TopWords`, `Stats`, `ReloadModel`,
+//! cache hits), and enqueue inference work as [`Job`]s.  Worker threads
+//! drain *everything queued at once* and run the whole batch through one
+//! warm engine — the F+tree base build and scratch buffers are amortized
+//! across concurrent connections, not rebuilt per request.
+//!
+//! # Hot swap
+//!
+//! The served model lives in a [`ModelSlot`]: an atomically replaceable
+//! `Arc<VersionedModel>`.  A `ReloadModel` admin request loads and
+//! validates the new artifact *before* swapping, so a bad file is a named
+//! error and the old model keeps serving.  Workers lease the current
+//! `Arc` for a batch run and label every answer with the lease's version;
+//! in-flight queries finish on whichever model they started on and no
+//! response ever mixes versions.  The answer cache embeds the model
+//! version in every key, so stale entries become unaddressable the
+//! instant the swap lands.
 //!
 //! # Failure discipline
 //!
 //! A malformed request *body* (bad magic, version skew, unknown tag,
 //! truncation) gets a named [`Response::Err`] and the session continues —
 //! the length-prefix framing is still intact.  A broken *frame* layer
-//! (oversized length, mid-frame truncation, reset, idle timeout) gets a
+//! (oversized length, mid-frame truncation, reset, read deadline) gets a
 //! best-effort `Err` response and the connection is dropped, because the
 //! stream can no longer be resynchronized.  A client that connects and
-//! goes silent is cut off by a per-connection idle read deadline rather
-//! than pinning a handler thread; oversized sweep/token requests are
-//! named errors, never silent clamps.  The server never panics on client
-//! input: both decoders are total.
+//! goes silent is cut off by the configurable per-connection read
+//! deadline ([`ServeConfig::read_deadline`]) with a named timeout error;
+//! a full queue is a named "server overloaded" error, never an unbounded
+//! backlog.  The server never panics on client input: both decoders are
+//! total.
 
 use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::Arc;
-use std::time::Duration;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::corpus::text::{porter_stem, tokenize};
 use crate::util::codec::{read_len_prefixed, read_len_prefixed_eof, write_len_prefixed};
 
-use super::engine::{InferOpts, Inferencer};
+use super::batch::{BatchQueue, Job};
+use super::cache::{CacheKey, LruCache};
+use super::config::{ClientConfig, ServeConfig};
+use super::engine::{InferJob, InferOpts, Inferencer};
 use super::model::TopicModel;
+use super::stats::ServerStats;
 use super::wire::{
     decode_request, decode_response, encode_request, encode_response, Request, Response,
     TopWord, MAX_QUERY_FRAME,
 };
 
 /// Cap on the fold-in sweeps one query may request (a hostile
-/// `sweeps = u32::MAX` must not pin a handler thread).  Exceeding it is a
+/// `sweeps = u32::MAX` must not pin a worker thread).  Exceeding it is a
 /// named error, never a silent clamp.
 pub const MAX_QUERY_SWEEPS: u32 = 1_000;
 
@@ -57,17 +83,9 @@ pub const MAX_QUERY_TOP_WORDS: u32 = 1_000;
 /// maximum topic count, where a legal per-topic `k` alone would not.
 pub const MAX_TOP_WORDS_ENTRIES: u64 = 1 << 19;
 
-/// How long the client waits for a connection.
-const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
-
-/// How long the client waits for an answer: sized for the slowest
-/// *legal* request (a MAX_QUERY_TOKENS document at MAX_QUERY_SWEEPS), so
-/// no within-cap query is un-servable through the bundled client.
-const ANSWER_TIMEOUT: Duration = Duration::from_secs(600);
-
-/// Server-side idle deadline per connection: a client that connects and
-/// goes silent may not pin a handler thread forever.
-const IDLE_TIMEOUT: Duration = Duration::from_secs(300);
+/// How often an *idle* worker re-checks the model slot for a hot swap
+/// (a busy worker re-checks after every batch).
+const VERSION_POLL: Duration = Duration::from_millis(500);
 
 /// A loaded model plus the word → id index raw-text queries resolve
 /// against.  Immutable after construction — safe to share via `Arc`.
@@ -118,71 +136,70 @@ impl ModelHost {
         Ok(ids)
     }
 
-    /// Answer one request with a caller-owned per-thread engine.  Pure
-    /// compute — no IO, no panics on any input.
-    pub fn answer_with(&self, inf: &mut Inferencer<'_>, req: Request) -> Response {
-        match req {
-            Request::ModelInfo => Response::ModelInfo {
-                topics: self.model.num_topics() as u32,
-                vocab: self.model.vocab() as u64,
-                alpha: self.model.hyper().alpha,
-                beta: self.model.hyper().beta,
-                total_tokens: self.model.total_tokens(),
-                has_vocab: !self.word_ids.is_empty(),
-            },
-            Request::TopWords { k } => {
-                if k > MAX_QUERY_TOP_WORDS {
-                    return Response::Err(format!(
-                        "top-words k {k} exceeds the {MAX_QUERY_TOP_WORDS}-word cap"
-                    ));
-                }
-                let entries = k as u64 * self.model.num_topics() as u64;
-                if entries > MAX_TOP_WORDS_ENTRIES {
-                    return Response::Err(format!(
-                        "top-words k {k} x T {} exceeds the {MAX_TOP_WORDS_ENTRIES}-entry \
-                         answer budget",
-                        self.model.num_topics()
-                    ));
-                }
-                let k = (k as usize).min(self.model.vocab());
-                let topics = self
-                    .model
-                    .top_words(k)
-                    .into_iter()
-                    .map(|row| {
-                        row.into_iter()
-                            .map(|(word, count)| TopWord {
-                                word,
-                                count,
-                                text: self
-                                    .model
-                                    .vocab_words()
-                                    .get(word as usize)
-                                    .cloned()
-                                    .unwrap_or_default(),
-                            })
-                            .collect()
-                    })
-                    .collect();
-                Response::TopWords { topics }
-            }
-            Request::InferTokens { tokens, sweeps, seed } => {
-                self.infer(inf, &tokens, sweeps, seed)
-            }
-            Request::InferText { text, sweeps, seed } => match self.tokenize_text(&text) {
-                Ok(tokens) => self.infer(inf, &tokens, sweeps, seed),
-                Err(e) => Response::Err(e),
-            },
+    /// The `ModelInfo` answer, stamped with the caller's serving identity
+    /// (`version` 0 marks a local, unserved answer).
+    pub fn model_info(&self, model_version: u64, model_id: &str) -> Response {
+        Response::ModelInfo {
+            topics: self.model.num_topics() as u32,
+            vocab: self.model.vocab() as u64,
+            alpha: self.model.hyper().alpha,
+            beta: self.model.hyper().beta,
+            total_tokens: self.model.total_tokens(),
+            has_vocab: !self.word_ids.is_empty(),
+            model_version,
+            model_id: model_id.to_string(),
         }
     }
 
-    /// Convenience single-shot answer (builds a throwaway engine).
-    pub fn answer(&self, req: Request) -> Response {
-        let mut inf = Inferencer::new(&self.model);
-        self.answer_with(&mut inf, req)
+    /// The `TopWords` answer, with both per-topic and total-entry caps
+    /// enforced by name.
+    pub fn top_words_response(&self, k: u32) -> Response {
+        if k > MAX_QUERY_TOP_WORDS {
+            return Response::Err(format!(
+                "top-words k {k} exceeds the {MAX_QUERY_TOP_WORDS}-word cap"
+            ));
+        }
+        let entries = k as u64 * self.model.num_topics() as u64;
+        if entries > MAX_TOP_WORDS_ENTRIES {
+            return Response::Err(format!(
+                "top-words k {k} x T {} exceeds the {MAX_TOP_WORDS_ENTRIES}-entry \
+                 answer budget",
+                self.model.num_topics()
+            ));
+        }
+        let k = (k as usize).min(self.model.vocab());
+        let topics = self
+            .model
+            .top_words(k)
+            .into_iter()
+            .map(|row| {
+                row.into_iter()
+                    .map(|(word, count)| TopWord {
+                        word,
+                        count,
+                        text: self
+                            .model
+                            .vocab_words()
+                            .get(word as usize)
+                            .cloned()
+                            .unwrap_or_default(),
+                    })
+                    .collect()
+            })
+            .collect();
+        Response::TopWords { topics }
     }
 
-    fn infer(&self, inf: &mut Inferencer<'_>, tokens: &[u32], sweeps: u32, seed: u64) -> Response {
+    /// One fold-in inference with the caps enforced by name, labeled with
+    /// the model version that computed it.
+    pub fn infer_response(
+        &self,
+        inf: &mut Inferencer<'_>,
+        tokens: &[u32],
+        sweeps: u32,
+        seed: u64,
+        model_version: u64,
+    ) -> Response {
         if tokens.len() > MAX_QUERY_TOKENS {
             return Response::Err(format!(
                 "query document of {} tokens exceeds the {MAX_QUERY_TOKENS}-token cap",
@@ -196,25 +213,294 @@ impl ModelHost {
         }
         let opts = InferOpts { sweeps: sweeps as usize, seed };
         match inf.infer_doc(tokens, &opts) {
-            Ok(res) => Response::Theta { theta: res.theta, used_tokens: tokens.len() as u32 },
+            Ok(res) => Response::Theta {
+                theta: res.theta,
+                used_tokens: tokens.len() as u32,
+                model_version,
+            },
             Err(e) => Response::Err(e),
+        }
+    }
+
+    /// Answer one request with a caller-owned per-thread engine — the
+    /// *local* (unserved) dispatch used by `infer` without `--remote`.
+    /// Answers carry model version 0; the admin requests (`Stats`,
+    /// `ReloadModel`) are server concepts and error by name here.
+    pub fn answer_with(&self, inf: &mut Inferencer<'_>, req: Request) -> Response {
+        match req {
+            Request::ModelInfo => {
+                self.model_info(0, &format!("local@{:016x}", self.model.fingerprint()))
+            }
+            Request::TopWords { k } => self.top_words_response(k),
+            Request::InferTokens { tokens, sweeps, seed } => {
+                self.infer_response(inf, &tokens, sweeps, seed, 0)
+            }
+            Request::InferText { text, sweeps, seed } => match self.tokenize_text(&text) {
+                Ok(tokens) => self.infer_response(inf, &tokens, sweeps, seed, 0),
+                Err(e) => Response::Err(e),
+            },
+            Request::Stats => Response::Err(
+                "stats are serving counters; query a running serve-model process".into(),
+            ),
+            Request::ReloadModel { .. } => Response::Err(
+                "reload is an admin request to a running serve-model process".into(),
+            ),
+        }
+    }
+
+    /// Convenience single-shot answer (builds a throwaway engine).
+    pub fn answer(&self, req: Request) -> Response {
+        let mut inf = Inferencer::new(&self.model);
+        self.answer_with(&mut inf, req)
+    }
+}
+
+/// Human-readable serving identity for an artifact: the file stem plus
+/// the model's content fingerprint, `stem@0123456789abcdef`.
+pub fn model_id_for(path: &Path, model: &TopicModel) -> String {
+    let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("model");
+    format!("{stem}@{:016x}", model.fingerprint())
+}
+
+/// One immutable generation of the served model.
+pub struct VersionedModel {
+    pub host: ModelHost,
+    /// 1 for the initially loaded model, bumped by every swap
+    pub version: u64,
+    /// `stem@fingerprint` identity of the artifact
+    pub id: String,
+}
+
+/// The atomically swappable model holder.
+///
+/// `load` hands out a cheap `Arc` lease: readers keep whatever generation
+/// they leased for as long as they hold it (in-flight queries finish on
+/// the model they started on), while `swap` makes every *subsequent*
+/// lease see the new generation.  The separate atomic `version` lets hot
+/// paths ask "did anything change?" without touching the mutex.
+pub struct ModelSlot {
+    current: Mutex<Arc<VersionedModel>>,
+    version_hint: AtomicU64,
+}
+
+impl ModelSlot {
+    /// Wrap the initially loaded model as version 1.
+    pub fn new(host: ModelHost, id: String) -> ModelSlot {
+        ModelSlot {
+            current: Mutex::new(Arc::new(VersionedModel { host, version: 1, id })),
+            version_hint: AtomicU64::new(1),
+        }
+    }
+
+    /// Lease the current generation.
+    pub fn load(&self) -> Arc<VersionedModel> {
+        Arc::clone(&self.current.lock().unwrap())
+    }
+
+    /// The current generation number, lock-free.
+    pub fn version(&self) -> u64 {
+        self.version_hint.load(Ordering::Acquire)
+    }
+
+    /// Publish a new generation; returns its version number.  Existing
+    /// leases are untouched — the old `Arc` frees when its last in-flight
+    /// reader drops it.
+    pub fn swap(&self, host: ModelHost, id: String) -> u64 {
+        let mut cur = self.current.lock().unwrap();
+        let version = cur.version + 1;
+        *cur = Arc::new(VersionedModel { host, version, id });
+        self.version_hint.store(version, Ordering::Release);
+        version
+    }
+}
+
+/// Everything the handler and worker threads share.
+struct ServeCore {
+    slot: Arc<ModelSlot>,
+    cfg: ServeConfig,
+    stats: ServerStats,
+    queue: BatchQueue,
+    /// `None` when `cache_capacity` is 0
+    cache: Option<Mutex<LruCache<CacheKey, Response>>>,
+}
+
+impl ServeCore {
+    fn new(slot: Arc<ModelSlot>, cfg: ServeConfig) -> ServeCore {
+        let cache = (cfg.cache_capacity > 0)
+            .then(|| Mutex::new(LruCache::new(cfg.cache_capacity)));
+        let queue = BatchQueue::new(cfg.queue_depth);
+        ServeCore { slot, cfg, stats: ServerStats::new(), queue, cache }
+    }
+
+    /// Cache lookup; records the hit/miss (only when the cache exists).
+    fn cache_get(&self, key: &CacheKey) -> Option<Response> {
+        let cache = self.cache.as_ref()?;
+        let hit = cache.lock().unwrap().get(key);
+        self.stats.record_cache(hit.is_some());
+        hit
+    }
+
+    fn cache_put(&self, key: CacheKey, resp: &Response) {
+        if let Some(cache) = self.cache.as_ref() {
+            cache.lock().unwrap().insert(key, resp.clone());
+        }
+    }
+
+    /// Dispatch one decoded request.
+    fn answer_request(&self, req: Request) -> Response {
+        match req {
+            Request::ModelInfo => {
+                let vm = self.slot.load();
+                vm.host.model_info(vm.version, &vm.id)
+            }
+            Request::TopWords { k } => {
+                let vm = self.slot.load();
+                let key = CacheKey::TopWords { k, model_version: vm.version };
+                if let Some(hit) = self.cache_get(&key) {
+                    return hit;
+                }
+                let resp = vm.host.top_words_response(k);
+                if !matches!(resp, Response::Err(_)) {
+                    self.cache_put(key, &resp);
+                }
+                resp
+            }
+            Request::InferTokens { tokens, sweeps, seed } => {
+                self.infer_via_queue(tokens, sweeps, seed)
+            }
+            Request::InferText { text, sweeps, seed } => {
+                // tokenized against the generation current at decode time;
+                // a swap racing this request resolves ids on the old vocab
+                // and folds in on the new, exactly like any in-flight query
+                match self.slot.load().host.tokenize_text(&text) {
+                    Ok(tokens) => self.infer_via_queue(tokens, sweeps, seed),
+                    Err(e) => Response::Err(e),
+                }
+            }
+            Request::Stats => Response::Stats(
+                self.stats.report(self.queue.len() as u64, self.slot.version()),
+            ),
+            Request::ReloadModel { path } => self.reload_model(&path),
+        }
+    }
+
+    /// The inference path: caps → cache → queue → rendezvous.
+    fn infer_via_queue(&self, tokens: Vec<u32>, sweeps: u32, seed: u64) -> Response {
+        if tokens.len() > MAX_QUERY_TOKENS {
+            return Response::Err(format!(
+                "query document of {} tokens exceeds the {MAX_QUERY_TOKENS}-token cap",
+                tokens.len()
+            ));
+        }
+        if sweeps > MAX_QUERY_SWEEPS {
+            return Response::Err(format!(
+                "{sweeps} sweeps exceeds the {MAX_QUERY_SWEEPS}-sweep cap per query"
+            ));
+        }
+        let key = CacheKey::theta(&tokens, sweeps, seed, self.slot.version());
+        if let Some(hit) = self.cache_get(&key) {
+            return hit;
+        }
+        let (reply, rx) = mpsc::sync_channel(1);
+        if let Err(e) =
+            self.queue.push(Job { tokens, sweeps, seed, reply }, self.cfg.answer_deadline)
+        {
+            return Response::Err(e);
+        }
+        let resp = match rx.recv_timeout(self.cfg.answer_deadline) {
+            Ok(resp) => resp,
+            Err(_) => {
+                return Response::Err(format!(
+                    "inference workers gave no answer within {:?}",
+                    self.cfg.answer_deadline
+                ))
+            }
+        };
+        // cache under the version that *actually* answered (a swap may
+        // have landed between the lookup above and the worker's run)
+        if let Response::Theta { model_version, .. } = &resp {
+            if let CacheKey::Theta { tokens, sweeps, seed, .. } = key {
+                self.cache_put(
+                    CacheKey::Theta { tokens, sweeps, seed, model_version: *model_version },
+                    &resp,
+                );
+            }
+        }
+        resp
+    }
+
+    /// Load + validate the new artifact, then swap.  Failures leave the
+    /// old model serving, by name.
+    fn reload_model(&self, path: &str) -> Response {
+        let path = Path::new(path);
+        match TopicModel::load(path) {
+            Ok(model) => {
+                let id = model_id_for(path, &model);
+                let topics = model.num_topics() as u32;
+                let vocab = model.vocab() as u64;
+                let model_version = self.slot.swap(ModelHost::new(model), id.clone());
+                self.stats.record_swap();
+                Response::Reloaded { model_version, model_id: id, topics, vocab }
+            }
+            Err(e) => Response::Err(format!("reload failed, serving unchanged: {e}")),
         }
     }
 }
 
-/// `serve-model` options.
-pub struct ServeModelOpts {
-    /// handler threads (each owns a clone of the listener)
-    pub threads: usize,
-    /// serve a single connection on the calling thread, then return
-    pub once: bool,
-    /// suppress per-connection logging
-    pub quiet: bool,
-}
-
-impl Default for ServeModelOpts {
-    fn default() -> Self {
-        ServeModelOpts { threads: 4, once: false, quiet: false }
+/// One worker: lease the current model, drain batches through a warm
+/// engine, re-lease when the slot version moves.  After a swap a worker
+/// finishes at most the batch it already drained on the old lease (its
+/// answers are labeled with that lease's version), then rebuilds.
+fn worker_loop(core: &ServeCore) {
+    loop {
+        let vm = core.slot.load();
+        let mut inf = Inferencer::new(vm.host.model());
+        loop {
+            let batch = match core.queue.pop_batch(
+                core.cfg.max_batch,
+                core.cfg.batch_window,
+                VERSION_POLL,
+            ) {
+                None => return,
+                Some(batch) => batch,
+            };
+            if batch.is_empty() {
+                // idle poll tick: rebuild only if a swap landed
+                if core.slot.version() != vm.version {
+                    break;
+                }
+                continue;
+            }
+            core.stats.record_batch(batch.len() as u64);
+            let mut replies = Vec::with_capacity(batch.len());
+            let jobs: Vec<InferJob> = batch
+                .into_iter()
+                .map(|job| {
+                    replies.push((job.reply, job.tokens.len() as u32));
+                    InferJob {
+                        tokens: job.tokens,
+                        opts: InferOpts { sweeps: job.sweeps as usize, seed: job.seed },
+                    }
+                })
+                .collect();
+            let results = inf.infer_jobs(&jobs);
+            for ((reply, used_tokens), res) in replies.into_iter().zip(results) {
+                let resp = match res {
+                    Ok(r) => Response::Theta {
+                        theta: r.theta,
+                        used_tokens,
+                        model_version: vm.version,
+                    },
+                    Err(e) => Response::Err(e),
+                };
+                // a handler that gave up waiting dropped its receiver;
+                // the answer is simply discarded
+                let _ = reply.try_send(resp);
+            }
+            if core.slot.version() != vm.version {
+                break;
+            }
+        }
     }
 }
 
@@ -222,42 +508,60 @@ impl Default for ServeModelOpts {
 /// (a persistently broken listener, not load-induced churn).
 const MAX_ACCEPT_FAILURES: u32 = 100;
 
-/// Serve query traffic on `listener`.  With `once`, exactly one
-/// connection is handled on the calling thread and its session error (if
-/// any) becomes this call's error — the CLI/CI exit-code mode.  Otherwise
-/// `threads` handler threads accept and serve connections until the
-/// process exits; session errors are logged, never fatal, and transient
-/// `accept` failures (ECONNABORTED, fd exhaustion under load) are backed
-/// off and retried rather than draining handler capacity.  Only a
-/// persistently failing listener ends the call — as an `Err`, so
-/// supervisors see a non-zero exit.
+/// Serve query traffic on `listener` from the model in `slot`.
+///
+/// With `cfg.once`, exactly one connection is handled on the calling
+/// thread and its session error (if any) becomes this call's error — the
+/// CLI/CI exit-code mode.  Otherwise `cfg.threads` handler threads accept
+/// and serve connections until the process exits; session errors are
+/// logged, never fatal, and transient `accept` failures (ECONNABORTED, fd
+/// exhaustion under load) are backed off and retried rather than draining
+/// handler capacity.  Only a persistently failing listener ends the call —
+/// as an `Err`, so supervisors see a non-zero exit.  In both modes
+/// `cfg.workers` inference workers drain the shared batch queue and are
+/// joined before returning.
 pub fn serve_model(
     listener: TcpListener,
-    host: Arc<ModelHost>,
-    opts: &ServeModelOpts,
+    slot: Arc<ModelSlot>,
+    cfg: &ServeConfig,
 ) -> Result<(), String> {
-    if opts.once {
+    cfg.validate()?;
+    let core = Arc::new(ServeCore::new(slot, cfg.clone()));
+    let mut workers = Vec::new();
+    for _ in 0..cfg.workers {
+        let core = Arc::clone(&core);
+        workers.push(std::thread::spawn(move || worker_loop(&core)));
+    }
+    let result = serve_accept(listener, &core);
+    core.queue.close();
+    for w in workers {
+        let _ = w.join();
+    }
+    result
+}
+
+fn serve_accept(listener: TcpListener, core: &Arc<ServeCore>) -> Result<(), String> {
+    if core.cfg.once {
         let (stream, peer) = listener.accept().map_err(|e| format!("accept failed: {e}"))?;
-        if !opts.quiet {
+        if !core.cfg.quiet {
             eprintln!("[serve-model] client connected from {peer}");
         }
-        return handle_conn(stream, &host);
+        return handle_conn(stream, core);
     }
     let mut handles = Vec::new();
-    for _ in 0..opts.threads.max(1) {
+    for _ in 0..core.cfg.threads {
         let listener = listener.try_clone().map_err(|e| format!("listener clone failed: {e}"))?;
-        let host = Arc::clone(&host);
-        let quiet = opts.quiet;
+        let core = Arc::clone(core);
         handles.push(std::thread::spawn(move || -> Result<(), String> {
             let mut failures = 0u32;
             loop {
                 match listener.accept() {
                     Ok((stream, peer)) => {
                         failures = 0;
-                        if !quiet {
+                        if !core.cfg.quiet {
                             eprintln!("[serve-model] client connected from {peer}");
                         }
-                        if let Err(e) = handle_conn(stream, &host) {
+                        if let Err(e) = handle_conn(stream, &core) {
                             eprintln!("[serve-model] session error: {e}");
                         }
                     }
@@ -287,16 +591,16 @@ pub fn serve_model(
     }
 }
 
-/// Serve one connection until the client closes it.  Exposed so tests
-/// can host a session on their own listener.
-pub fn handle_conn(stream: TcpStream, host: &ModelHost) -> Result<(), String> {
+/// Serve one connection until the client closes it.
+fn handle_conn(stream: TcpStream, core: &ServeCore) -> Result<(), String> {
     stream.set_nodelay(true).map_err(|e| e.to_string())?;
-    // idle deadline: a silent client must not pin this handler thread
-    stream.set_read_timeout(Some(IDLE_TIMEOUT)).map_err(|e| e.to_string())?;
+    // read deadline: a silent client must not pin this handler thread
+    stream
+        .set_read_timeout(Some(core.cfg.read_deadline))
+        .map_err(|e| e.to_string())?;
     let mut reader =
         BufReader::new(stream.try_clone().map_err(|e| format!("socket clone failed: {e}"))?);
     let mut writer = BufWriter::new(stream);
-    let mut inf = Inferencer::new(host.model());
     loop {
         let body = match read_len_prefixed_eof(&mut reader, MAX_QUERY_FRAME) {
             // orderly close between requests: the normal end of session
@@ -304,19 +608,28 @@ pub fn handle_conn(stream: TcpStream, host: &ModelHost) -> Result<(), String> {
             Ok(Some(body)) => body,
             Err(e) => {
                 // frame layer broken (oversized length, mid-frame
-                // truncation, reset, idle timeout): the stream cannot be
+                // truncation, reset, read deadline): the stream cannot be
                 // resynced — name the fault and drop the connection
                 let _ = send_response(&mut writer, &Response::Err(e.clone()));
                 return Err(e);
             }
         };
-        let resp = match decode_request(&body) {
-            Ok(req) => host.answer_with(&mut inf, req),
+        let t0 = Instant::now();
+        let (resp, is_infer) = match decode_request(&body) {
+            Ok(req) => {
+                let is_infer = matches!(
+                    req,
+                    Request::InferTokens { .. } | Request::InferText { .. }
+                );
+                (core.answer_request(req), is_infer)
+            }
             // body-level malformation: framing is intact, so report the
             // named error and keep the session alive
-            Err(e) => Response::Err(format!("bad request: {e}")),
+            Err(e) => (Response::Err(format!("bad request: {e}")), false),
         };
+        let is_err = matches!(resp, Response::Err(_));
         send_response(&mut writer, &resp)?;
+        core.stats.record_request(t0.elapsed(), is_infer, is_err);
     }
 }
 
@@ -327,26 +640,32 @@ fn send_response<W: Write>(w: &mut W, resp: &Response) -> Result<(), String> {
 // ----------------------------------------------------------------- client
 
 /// One client connection to a `serve-model` host; reusable for any number
-/// of queries.
+/// of queries.  Build with [`Client::connect`] for the defaults or
+/// [`ClientConfig::connect`] for tuned timeouts.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
 }
 
 impl Client {
-    /// Connect with a deadline (a black-holed address must be a prompt
-    /// error, not an OS-default multi-minute hang).  The answer deadline
-    /// is separate and much larger — a maximal legal query takes minutes.
+    /// Connect with the default [`ClientConfig`] knobs.
     pub fn connect(addr: &str) -> Result<Client, String> {
+        Client::connect_with(&ClientConfig::new(addr))
+    }
+
+    /// Connect with explicit knobs (see [`ClientConfig`] for what each
+    /// deadline protects against).
+    pub fn connect_with(cfg: &ClientConfig) -> Result<Client, String> {
+        let addr = cfg.addr.as_str();
         let sock = addr
             .to_socket_addrs()
             .map_err(|e| format!("resolve {addr}: {e}"))?
             .next()
             .ok_or_else(|| format!("resolve {addr}: no addresses"))?;
-        let stream = TcpStream::connect_timeout(&sock, CONNECT_TIMEOUT)
+        let stream = TcpStream::connect_timeout(&sock, cfg.connect_timeout)
             .map_err(|e| format!("connect {addr}: {e}"))?;
         stream.set_nodelay(true).map_err(|e| e.to_string())?;
-        stream.set_read_timeout(Some(ANSWER_TIMEOUT)).map_err(|e| e.to_string())?;
+        stream.set_read_timeout(Some(cfg.answer_timeout)).map_err(|e| e.to_string())?;
         let reader =
             BufReader::new(stream.try_clone().map_err(|e| format!("socket clone failed: {e}"))?);
         Ok(Client { reader, writer: BufWriter::new(stream) })
@@ -406,11 +725,21 @@ mod tests {
         let host = ModelHost::new(text_model());
         let t = host.model().num_topics();
         match host.answer(Request::ModelInfo) {
-            Response::ModelInfo { topics, vocab, has_vocab, total_tokens, .. } => {
+            Response::ModelInfo {
+                topics,
+                vocab,
+                has_vocab,
+                total_tokens,
+                model_version,
+                model_id,
+                ..
+            } => {
                 assert_eq!(topics as usize, t);
                 assert_eq!(vocab as usize, host.model().vocab());
                 assert!(has_vocab);
                 assert!(total_tokens > 0);
+                assert_eq!(model_version, 0, "local answers carry version 0");
+                assert!(model_id.starts_with("local@"), "odd local id: {model_id}");
             }
             other => panic!("wrong answer: {other:?}"),
         }
@@ -431,13 +760,27 @@ mod tests {
             sweeps: 10,
             seed: 1,
         }) {
-            Response::Theta { theta, used_tokens } => {
+            Response::Theta { theta, used_tokens, model_version } => {
                 assert_eq!(theta.len(), t);
                 assert!(used_tokens > 0, "every query word was dropped");
+                assert_eq!(model_version, 0);
                 let sum: f64 = theta.iter().sum();
                 assert!((sum - 1.0).abs() < 1e-9);
             }
             other => panic!("wrong answer: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn admin_requests_are_named_errors_locally() {
+        let host = ModelHost::new(text_model());
+        match host.answer(Request::Stats) {
+            Response::Err(e) => assert!(e.contains("serve-model"), "unhelpful: {e}"),
+            other => panic!("expected Err, got {other:?}"),
+        }
+        match host.answer(Request::ReloadModel { path: "/tmp/x.fnmodel".into() }) {
+            Response::Err(e) => assert!(e.contains("admin"), "unhelpful: {e}"),
+            other => panic!("expected Err, got {other:?}"),
         }
     }
 
@@ -499,5 +842,63 @@ mod tests {
             Response::Theta { .. } => {}
             other => panic!("expected Theta at the cap, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn model_slot_versions_and_leases() {
+        let slot = ModelSlot::new(ModelHost::new(text_model()), "a@1".into());
+        assert_eq!(slot.version(), 1);
+        let lease = slot.load();
+        assert_eq!(lease.version, 1);
+        assert_eq!(lease.id, "a@1");
+        let v2 = slot.swap(ModelHost::new(text_model()), "b@2".into());
+        assert_eq!(v2, 2);
+        assert_eq!(slot.version(), 2);
+        // the old lease is untouched; a fresh one sees the new generation
+        assert_eq!(lease.version, 1);
+        assert_eq!(slot.load().version, 2);
+        assert_eq!(slot.load().id, "b@2");
+    }
+
+    /// The batching core end to end, without TCP: handler-side dispatch
+    /// into the queue, a real worker loop answering, cache hits on
+    /// repeats, stats accumulating.
+    #[test]
+    fn batching_core_answers_and_caches() {
+        let slot = Arc::new(ModelSlot::new(ModelHost::new(text_model()), "m@0".into()));
+        let core = Arc::new(ServeCore::new(
+            Arc::clone(&slot),
+            ServeConfig::default().workers(1).cache_capacity(64),
+        ));
+        let worker = {
+            let core = Arc::clone(&core);
+            std::thread::spawn(move || worker_loop(&core))
+        };
+        let req = Request::InferTokens { tokens: vec![0, 1, 2, 1], sweeps: 8, seed: 3 };
+        let a = core.answer_request(req.clone());
+        let b = core.answer_request(req);
+        match (&a, &b) {
+            (
+                Response::Theta { theta: ta, model_version: va, .. },
+                Response::Theta { theta: tb, model_version: vb, .. },
+            ) => {
+                assert_eq!(ta, tb, "cache hit must replay the same answer");
+                assert_eq!((*va, *vb), (1, 1));
+            }
+            other => panic!("expected two Thetas, got {other:?}"),
+        }
+        // a permutation of the same bag is the same cache entry
+        let c = core.answer_request(Request::InferTokens {
+            tokens: vec![1, 1, 2, 0],
+            sweeps: 8,
+            seed: 3,
+        });
+        assert_eq!(c, a, "multiset key must make permutations hit");
+        let r = core.stats.report(core.queue.len() as u64, slot.version());
+        assert_eq!(r.cache_hits, 2);
+        assert_eq!(r.cache_misses, 1);
+        assert!(r.batches >= 1 && r.batched_docs >= 1);
+        core.queue.close();
+        worker.join().unwrap();
     }
 }

@@ -1,0 +1,226 @@
+//! Serving instrumentation: lock-free counters plus a log₂ latency
+//! histogram, snapshotted into a [`StatsReport`] for the `Stats` wire
+//! request and the `BENCH_infer.json` recorder.
+//!
+//! Every handler thread records into the same [`ServerStats`] through
+//! relaxed atomics — one increment per counter, one increment per
+//! latency bucket ([`crate::util::bench::latency_bucket`]) — so
+//! instrumentation never serializes the request path.  Percentiles are
+//! read back as bucket geometric midpoints
+//! ([`crate::util::bench::bucket_percentile_us`]): ≤ √2× value
+//! resolution, O(1) recording, bounded memory.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::util::bench::{bucket_percentile_us, latency_bucket, LATENCY_BUCKETS};
+
+/// Shared, lock-free serving counters.  One instance per server, shared
+/// across handler and worker threads via `Arc`.
+pub struct ServerStats {
+    start: Instant,
+    total_requests: AtomicU64,
+    infer_requests: AtomicU64,
+    errors: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    batches: AtomicU64,
+    batched_docs: AtomicU64,
+    max_batch: AtomicU64,
+    model_swaps: AtomicU64,
+    /// per-request wall time, log₂-bucketed nanoseconds
+    lat_ns: [AtomicU64; LATENCY_BUCKETS],
+}
+
+impl ServerStats {
+    pub fn new() -> ServerStats {
+        ServerStats {
+            start: Instant::now(),
+            total_requests: AtomicU64::new(0),
+            infer_requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_docs: AtomicU64::new(0),
+            max_batch: AtomicU64::new(0),
+            model_swaps: AtomicU64::new(0),
+            lat_ns: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Record one finished request: its wall time, whether it was an
+    /// inference (vs info/top-words/admin), and whether it answered with
+    /// an `Err` response.
+    pub fn record_request(&self, wall: Duration, is_infer: bool, is_err: bool) {
+        self.total_requests.fetch_add(1, Ordering::Relaxed);
+        if is_infer {
+            self.infer_requests.fetch_add(1, Ordering::Relaxed);
+        }
+        if is_err {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        let ns = wall.as_nanos().min(u64::MAX as u128) as u64;
+        self.lat_ns[latency_bucket(ns)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one cache lookup outcome.
+    pub fn record_cache(&self, hit: bool) {
+        if hit {
+            self.cache_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.cache_misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record one drained worker batch of `docs` documents.
+    pub fn record_batch(&self, docs: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_docs.fetch_add(docs, Ordering::Relaxed);
+        self.max_batch.fetch_max(docs, Ordering::Relaxed);
+    }
+
+    /// Record one completed model hot-swap.
+    pub fn record_swap(&self) {
+        self.model_swaps.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot everything into a wire-encodable report.  `queue_depth`
+    /// and `model_version` are sampled by the caller (they live on the
+    /// queue / model slot, not here).
+    pub fn report(&self, queue_depth: u64, model_version: u64) -> StatsReport {
+        let uptime_secs = self.start.elapsed().as_secs_f64().max(1e-9);
+        let total_requests = self.total_requests.load(Ordering::Relaxed);
+        let cache_hits = self.cache_hits.load(Ordering::Relaxed);
+        let cache_misses = self.cache_misses.load(Ordering::Relaxed);
+        let lookups = cache_hits + cache_misses;
+        let counts: Vec<u64> =
+            self.lat_ns.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        // NaN.max(0.0) is 0.0: an empty histogram reports zeroed
+        // percentiles rather than poisoning the wire roundtrip / JSON
+        let pct = |p: f64| bucket_percentile_us(&counts, p).max(0.0);
+        StatsReport {
+            uptime_secs,
+            total_requests,
+            infer_requests: self.infer_requests.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            qps: total_requests as f64 / uptime_secs,
+            cache_hits,
+            cache_misses,
+            cache_hit_rate: if lookups == 0 {
+                0.0
+            } else {
+                cache_hits as f64 / lookups as f64
+            },
+            p50_us: pct(50.0),
+            p95_us: pct(95.0),
+            p99_us: pct(99.0),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_docs: self.batched_docs.load(Ordering::Relaxed),
+            max_batch: self.max_batch.load(Ordering::Relaxed),
+            queue_depth,
+            model_version,
+            model_swaps: self.model_swaps.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for ServerStats {
+    fn default() -> Self {
+        ServerStats::new()
+    }
+}
+
+/// One snapshot of the serving counters, as carried by the `Stats` wire
+/// response and rendered by `infer --stats` / `bench`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StatsReport {
+    pub uptime_secs: f64,
+    pub total_requests: u64,
+    pub infer_requests: u64,
+    pub errors: u64,
+    pub qps: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_hit_rate: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub batches: u64,
+    pub batched_docs: u64,
+    pub max_batch: u64,
+    pub queue_depth: u64,
+    pub model_version: u64,
+    pub model_swaps: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_report() {
+        let s = ServerStats::new();
+        s.record_request(Duration::from_micros(100), true, false);
+        s.record_request(Duration::from_micros(200), true, false);
+        s.record_request(Duration::from_millis(5), false, true);
+        s.record_cache(true);
+        s.record_cache(true);
+        s.record_cache(false);
+        s.record_batch(2);
+        s.record_batch(7);
+        s.record_swap();
+        let r = s.report(3, 2);
+        assert_eq!(r.total_requests, 3);
+        assert_eq!(r.infer_requests, 2);
+        assert_eq!(r.errors, 1);
+        assert_eq!(r.cache_hits, 2);
+        assert_eq!(r.cache_misses, 1);
+        assert!((r.cache_hit_rate - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(r.batches, 2);
+        assert_eq!(r.batched_docs, 9);
+        assert_eq!(r.max_batch, 7);
+        assert_eq!(r.queue_depth, 3);
+        assert_eq!(r.model_version, 2);
+        assert_eq!(r.model_swaps, 1);
+        assert!(r.qps > 0.0);
+        assert!(r.uptime_secs > 0.0);
+        // bucketed percentiles: ordered, positive, within √2 of the truth
+        assert!(r.p50_us > 0.0);
+        assert!(r.p50_us <= r.p95_us && r.p95_us <= r.p99_us);
+        assert!(r.p50_us > 100.0 / 1.5 && r.p50_us < 200.0 * 1.5, "p50 = {}", r.p50_us);
+        assert!(r.p99_us > 5_000.0 / 1.5, "p99 = {}", r.p99_us);
+    }
+
+    #[test]
+    fn empty_stats_report_zeroed_not_nan() {
+        let r = ServerStats::new().report(0, 1);
+        assert_eq!(r.total_requests, 0);
+        assert_eq!(r.cache_hit_rate, 0.0);
+        assert_eq!(r.p50_us, 0.0);
+        assert_eq!(r.p99_us, 0.0);
+        assert!(r.qps == 0.0);
+    }
+
+    #[test]
+    fn stats_are_safe_to_record_concurrently() {
+        let s = std::sync::Arc::new(ServerStats::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let s = std::sync::Arc::clone(&s);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    s.record_request(Duration::from_nanos(i), i % 2 == 0, false);
+                    s.record_cache(i % 3 == 0);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let r = s.report(0, 1);
+        assert_eq!(r.total_requests, 4000);
+        assert_eq!(r.infer_requests, 2000);
+        assert_eq!(r.cache_hits + r.cache_misses, 4000);
+    }
+}

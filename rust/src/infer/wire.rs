@@ -13,14 +13,29 @@
 //! version-skewed client is a named error instead of a confusing decode
 //! failure; responses are only ever parsed by a client that already
 //! passed that check.
+//!
+//! # Version negotiation
+//!
+//! The server rejects any request whose version field differs from
+//! [`QUERY_VERSION`] with a named `unsupported query protocol version`
+//! error *frame* — and that rejection is decodable by down-level
+//! clients, because the `Err` response layout (tag 4, length-prefixed
+//! UTF-8) is frozen across versions (pinned by test below).  v2 added
+//! the `Stats` and `ReloadModel` admin requests, `model_version` /
+//! `model_id` identity in `ModelInfo`, and a `model_version` label on
+//! every `Theta` answer (which model a hot-swapping server used).
 
 use crate::util::codec::{put_bytes, put_f64, put_u32, put_u64, put_u8, Cur};
+
+use super::stats::StatsReport;
 
 /// Magic at the head of every request body ("FNQY").
 pub const QUERY_MAGIC: u32 = 0x464E_5159;
 
 /// Query protocol version; bump on ANY layout or semantics change.
-pub const QUERY_VERSION: u32 = 1;
+/// v1: ModelInfo/TopWords/InferTokens/InferText.
+/// v2: + Stats, ReloadModel, model identity fields.
+pub const QUERY_VERSION: u32 = 2;
 
 /// Upper bound on one query frame body (64 MiB) — far above any real
 /// query or answer, far below an attacker-controlled length field.
@@ -30,11 +45,18 @@ const REQ_MODEL_INFO: u8 = 1;
 const REQ_TOP_WORDS: u8 = 2;
 const REQ_INFER_TOKENS: u8 = 3;
 const REQ_INFER_TEXT: u8 = 4;
+const REQ_STATS: u8 = 5;
+const REQ_RELOAD_MODEL: u8 = 6;
 
+// RESP_ERR's tag and layout are frozen forever: it is the one frame a
+// version-skewed client must still be able to decode (the negotiation
+// rejection travels in it).
 const RESP_MODEL_INFO: u8 = 1;
 const RESP_TOP_WORDS: u8 = 2;
 const RESP_THETA: u8 = 3;
 const RESP_ERR: u8 = 4;
+const RESP_STATS: u8 = 5;
+const RESP_RELOADED: u8 = 6;
 
 /// One client → server query.
 #[derive(Clone, Debug, PartialEq)]
@@ -48,6 +70,12 @@ pub enum Request {
     /// fold-in inference over raw text, tokenized server-side against the
     /// model vocabulary (needs an artifact exported with vocab strings)
     InferText { text: String, sweeps: u32, seed: u64 },
+    /// serving counters: QPS, latency percentiles, cache hit rate, …
+    Stats,
+    /// admin: atomically hot-swap the served model for the artifact at
+    /// `path` (server-local path); in-flight queries finish on the old
+    /// model, new ones see the new version
+    ReloadModel { path: String },
 }
 
 /// One `(word, count)` entry of a topic's top-word list; `text` is empty
@@ -69,6 +97,11 @@ pub enum Response {
         beta: f64,
         total_tokens: u64,
         has_vocab: bool,
+        /// hot-swap counter: 1 for the initially loaded model, bumped by
+        /// every `ReloadModel`; 0 marks a local (unserved) answer
+        model_version: u64,
+        /// human-readable identity, `stem@fingerprint`
+        model_id: String,
     },
     TopWords {
         topics: Vec<Vec<TopWord>>,
@@ -78,6 +111,17 @@ pub enum Response {
         theta: Vec<f64>,
         /// tokens actually used (raw-text queries drop OOV terms)
         used_tokens: u32,
+        /// which model version produced this answer (0 = local)
+        model_version: u64,
+    },
+    /// snapshot of the serving counters
+    Stats(StatsReport),
+    /// acknowledgment of a completed hot-swap
+    Reloaded {
+        model_version: u64,
+        model_id: String,
+        topics: u32,
+        vocab: u64,
     },
     Err(String),
 }
@@ -110,15 +154,71 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
             put_u64(&mut out, *seed);
             put_bytes(&mut out, text.as_bytes());
         }
+        Request::Stats => put_u8(&mut out, REQ_STATS),
+        Request::ReloadModel { path } => {
+            put_u8(&mut out, REQ_RELOAD_MODEL);
+            put_bytes(&mut out, path.as_bytes());
+        }
     }
     out
+}
+
+fn put_stats(out: &mut Vec<u8>, s: &StatsReport) {
+    put_f64(out, s.uptime_secs);
+    put_u64(out, s.total_requests);
+    put_u64(out, s.infer_requests);
+    put_u64(out, s.errors);
+    put_f64(out, s.qps);
+    put_u64(out, s.cache_hits);
+    put_u64(out, s.cache_misses);
+    put_f64(out, s.cache_hit_rate);
+    put_f64(out, s.p50_us);
+    put_f64(out, s.p95_us);
+    put_f64(out, s.p99_us);
+    put_u64(out, s.batches);
+    put_u64(out, s.batched_docs);
+    put_u64(out, s.max_batch);
+    put_u64(out, s.queue_depth);
+    put_u64(out, s.model_version);
+    put_u64(out, s.model_swaps);
+}
+
+fn get_stats(cur: &mut Cur<'_>) -> Result<StatsReport, String> {
+    Ok(StatsReport {
+        uptime_secs: cur.f64()?,
+        total_requests: cur.u64()?,
+        infer_requests: cur.u64()?,
+        errors: cur.u64()?,
+        qps: cur.f64()?,
+        cache_hits: cur.u64()?,
+        cache_misses: cur.u64()?,
+        cache_hit_rate: cur.f64()?,
+        p50_us: cur.f64()?,
+        p95_us: cur.f64()?,
+        p99_us: cur.f64()?,
+        batches: cur.u64()?,
+        batched_docs: cur.u64()?,
+        max_batch: cur.u64()?,
+        queue_depth: cur.u64()?,
+        model_version: cur.u64()?,
+        model_swaps: cur.u64()?,
+    })
 }
 
 /// Serialize a response to its tagged body.
 pub fn encode_response(resp: &Response) -> Vec<u8> {
     let mut out = Vec::new();
     match resp {
-        Response::ModelInfo { topics, vocab, alpha, beta, total_tokens, has_vocab } => {
+        Response::ModelInfo {
+            topics,
+            vocab,
+            alpha,
+            beta,
+            total_tokens,
+            has_vocab,
+            model_version,
+            model_id,
+        } => {
             put_u8(&mut out, RESP_MODEL_INFO);
             put_u32(&mut out, *topics);
             put_u64(&mut out, *vocab);
@@ -126,6 +226,8 @@ pub fn encode_response(resp: &Response) -> Vec<u8> {
             put_f64(&mut out, *beta);
             put_u64(&mut out, *total_tokens);
             put_u8(&mut out, *has_vocab as u8);
+            put_u64(&mut out, *model_version);
+            put_bytes(&mut out, model_id.as_bytes());
         }
         Response::TopWords { topics } => {
             put_u8(&mut out, RESP_TOP_WORDS);
@@ -139,13 +241,25 @@ pub fn encode_response(resp: &Response) -> Vec<u8> {
                 }
             }
         }
-        Response::Theta { theta, used_tokens } => {
+        Response::Theta { theta, used_tokens, model_version } => {
             put_u8(&mut out, RESP_THETA);
             put_u32(&mut out, *used_tokens);
             put_u32(&mut out, theta.len() as u32);
             for &x in theta {
                 put_f64(&mut out, x);
             }
+            put_u64(&mut out, *model_version);
+        }
+        Response::Stats(report) => {
+            put_u8(&mut out, RESP_STATS);
+            put_stats(&mut out, report);
+        }
+        Response::Reloaded { model_version, model_id, topics, vocab } => {
+            put_u8(&mut out, RESP_RELOADED);
+            put_u64(&mut out, *model_version);
+            put_bytes(&mut out, model_id.as_bytes());
+            put_u32(&mut out, *topics);
+            put_u64(&mut out, *vocab);
         }
         Response::Err(msg) => {
             put_u8(&mut out, RESP_ERR);
@@ -168,8 +282,8 @@ pub fn decode_request(buf: &[u8]) -> Result<Request, String> {
     let version = cur.u32()?;
     if version != QUERY_VERSION {
         return Err(format!(
-            "query protocol version mismatch: peer speaks v{version}, this binary \
-             speaks v{QUERY_VERSION} — rebuild both sides from the same commit"
+            "unsupported query protocol version v{version}: this server speaks \
+             v{QUERY_VERSION} — upgrade the client (or server) so both sides match"
         ));
     }
     let req = match cur.u8()? {
@@ -188,6 +302,8 @@ pub fn decode_request(buf: &[u8]) -> Result<Request, String> {
             let text = cur.string()?;
             Request::InferText { text, sweeps, seed }
         }
+        REQ_STATS => Request::Stats,
+        REQ_RELOAD_MODEL => Request::ReloadModel { path: cur.string()? },
         tag => return Err(format!("unknown request tag {tag}")),
     };
     cur.finish()?;
@@ -205,6 +321,8 @@ pub fn decode_response(buf: &[u8]) -> Result<Response, String> {
             beta: cur.f64()?,
             total_tokens: cur.u64()?,
             has_vocab: cur.u8()? != 0,
+            model_version: cur.u64()?,
+            model_id: cur.string()?,
         },
         RESP_TOP_WORDS => {
             // rows are variable-width; pre-check the 4-byte length floor
@@ -227,8 +345,15 @@ pub fn decode_response(buf: &[u8]) -> Result<Response, String> {
             let used_tokens = cur.u32()?;
             let n = cur.len(8)?;
             let theta = (0..n).map(|_| cur.f64()).collect::<Result<_, _>>()?;
-            Response::Theta { theta, used_tokens }
+            Response::Theta { theta, used_tokens, model_version: cur.u64()? }
         }
+        RESP_STATS => Response::Stats(get_stats(&mut cur)?),
+        RESP_RELOADED => Response::Reloaded {
+            model_version: cur.u64()?,
+            model_id: cur.string()?,
+            topics: cur.u32()?,
+            vocab: cur.u64()?,
+        },
         RESP_ERR => Response::Err(cur.string()?),
         tag => return Err(format!("unknown response tag {tag}")),
     };
@@ -259,6 +384,9 @@ mod tests {
             Request::InferTokens { tokens: vec![0, 7, 299, u32::MAX], sweeps: 50, seed: 9 },
             Request::InferText { text: String::new(), sweeps: 1, seed: 0 },
             Request::InferText { text: "naïve quick fox — €".into(), sweeps: 3, seed: 4 },
+            Request::Stats,
+            Request::ReloadModel { path: String::new() },
+            Request::ReloadModel { path: "/models/next — β.fnmodel".into() },
         ] {
             assert_eq!(req_roundtrip(&req), req);
         }
@@ -276,11 +404,42 @@ mod tests {
                 beta: 0.01,
                 total_tokens: u64::MAX / 7,
                 has_vocab: true,
+                model_version: 3,
+                model_id: "news@deadbeefcafef00d".into(),
             },
             Response::TopWords { topics: vec![] },
             Response::TopWords { topics: vec![vec![top, anon], vec![]] },
-            Response::Theta { theta: vec![], used_tokens: 0 },
-            Response::Theta { theta: vec![0.25, 0.75, f64::MIN_POSITIVE], used_tokens: 31 },
+            Response::Theta { theta: vec![], used_tokens: 0, model_version: 0 },
+            Response::Theta {
+                theta: vec![0.25, 0.75, f64::MIN_POSITIVE],
+                used_tokens: 31,
+                model_version: u64::MAX,
+            },
+            Response::Stats(StatsReport {
+                uptime_secs: 12.5,
+                total_requests: 9000,
+                infer_requests: 8000,
+                errors: 3,
+                qps: 720.0,
+                cache_hits: 4000,
+                cache_misses: 4000,
+                cache_hit_rate: 0.5,
+                p50_us: 180.2,
+                p95_us: 950.7,
+                p99_us: 2048.0,
+                batches: 1200,
+                batched_docs: 8000,
+                max_batch: 64,
+                queue_depth: 7,
+                model_version: 2,
+                model_swaps: 1,
+            }),
+            Response::Reloaded {
+                model_version: 2,
+                model_id: "next@0123456789abcdef".into(),
+                topics: 64,
+                vocab: 12000,
+            },
             Response::Err("model on fire".into()),
         ] {
             assert_eq!(resp_roundtrip(&resp), resp);
@@ -302,7 +461,11 @@ mod tests {
             }
             let t = 1 + rng.below(256);
             let theta: Vec<f64> = (0..t).map(|_| rng.next_f64()).collect();
-            let resp = Response::Theta { theta, used_tokens: n as u32 };
+            let resp = Response::Theta {
+                theta,
+                used_tokens: n as u32,
+                model_version: rng.next_u64(),
+            };
             if resp_roundtrip(&resp) != resp {
                 return Err("response changed across the wire".into());
             }
@@ -319,8 +482,33 @@ mod tests {
         let mut bad_version = good.clone();
         bad_version[4..8].copy_from_slice(&(QUERY_VERSION + 1).to_le_bytes());
         let err = decode_request(&bad_version).unwrap_err();
-        assert!(err.contains("version mismatch"), "unhelpful skew error: {err}");
+        assert!(err.contains("unsupported query protocol version"), "unhelpful: {err}");
         decode_request(&good).unwrap();
+    }
+
+    #[test]
+    fn v1_requests_are_rejected_by_version_number() {
+        // a hand-built v1 ModelInfo frame, as an un-upgraded client sends it
+        let mut v1 = Vec::new();
+        put_u32(&mut v1, QUERY_MAGIC);
+        put_u32(&mut v1, 1);
+        put_u8(&mut v1, 1); // REQ_MODEL_INFO
+        let err = decode_request(&v1).unwrap_err();
+        assert!(err.contains("unsupported"), "unhelpful: {err}");
+        assert!(err.contains("v1"), "must name the client's version: {err}");
+        assert!(err.contains("v2"), "must name the server's version: {err}");
+    }
+
+    /// The `Err` response layout is the one frame every client version
+    /// must decode (version-negotiation rejections travel in it), so its
+    /// bytes are pinned: tag 4, then u32-LE length, then raw UTF-8.
+    #[test]
+    fn err_response_layout_is_frozen() {
+        let enc = encode_response(&Response::Err("nope".into()));
+        assert_eq!(enc[0], 4, "Err tag must stay 4 forever");
+        assert_eq!(&enc[1..5], &4u32.to_le_bytes(), "length prefix must stay u32-LE");
+        assert_eq!(&enc[5..], b"nope");
+        assert_eq!(enc.len(), 9);
     }
 
     #[test]

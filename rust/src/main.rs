@@ -18,14 +18,14 @@
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use fnomad_lda::coordinator::{train, TrainConfig};
 use fnomad_lda::corpus::presets::{preset, PAPER_TABLE3, PRESET_NAMES};
 use fnomad_lda::corpus::CorpusStats;
 use fnomad_lda::infer::{
-    infer_batch, query_one, serve_model, InferOpts, Inferencer, ModelHost, Request, Response,
-    ServeModelOpts, TopicModel,
+    infer_batch, model_id_for, query_one, serve_model, Client, InferOpts, Inferencer, ModelHost,
+    ModelSlot, Request, Response, ServeConfig, TopicModel,
 };
 use fnomad_lda::lda::state::{Hyper, LdaState};
 use fnomad_lda::lda::{self, topics as topics_mod};
@@ -176,7 +176,28 @@ const SERVE_MODEL_SPEC: CommandSpec = CommandSpec {
             value: "ADDR",
             help: "bind address (default 127.0.0.1:7878; port 0 picks a free port)",
         },
-        FlagSpec { flag: "threads", value: "N", help: "handler threads (default 4)" },
+        FlagSpec { flag: "threads", value: "N", help: "connection handler threads (default 4)" },
+        FlagSpec { flag: "workers", value: "N", help: "inference worker threads (default 2)" },
+        FlagSpec {
+            flag: "batch-window-us",
+            value: "US",
+            help: "linger for more jobs per batch (default 0 = opportunistic drain)",
+        },
+        FlagSpec {
+            flag: "queue-depth",
+            value: "N",
+            help: "bounded inference queue; full = named overload error (default 256)",
+        },
+        FlagSpec {
+            flag: "cache",
+            value: "N",
+            help: "LRU answer-cache entries, 0 disables (default 1024)",
+        },
+        FlagSpec {
+            flag: "read-deadline-secs",
+            value: "S",
+            help: "cut off silent connections after S seconds (default 300)",
+        },
         FlagSpec { flag: "once", value: "", help: "serve one client connection, then exit" },
         FlagSpec { flag: "quiet", value: "", help: "suppress per-connection logging" },
     ],
@@ -195,6 +216,12 @@ const INFER_SPEC: CommandSpec = CommandSpec {
         FlagSpec { flag: "top", value: "K", help: "topics on the theta_top line (default 10)" },
         FlagSpec { flag: "info", value: "", help: "print model shape + hyperparameters instead" },
         FlagSpec { flag: "top-words", value: "K", help: "print top-K words per topic instead" },
+        FlagSpec { flag: "stats", value: "", help: "print the server's serving counters instead" },
+        FlagSpec {
+            flag: "reload",
+            value: "PATH",
+            help: "admin: hot-swap the server onto the artifact at PATH (server-local)",
+        },
     ],
 };
 
@@ -377,16 +404,24 @@ fn cmd_serve_model(args: &Args) -> Result<(), String> {
     let model_path =
         args.str_opt("model").ok_or_else(|| "--model PATH is required".to_string())?;
     let addr = args.str_or("listen", "127.0.0.1:7878");
-    let opts = ServeModelOpts {
-        threads: args.parse_or("threads", 4)?,
-        once: args.flag("once"),
-        quiet: args.flag("quiet"),
-    };
+    // the CLI → ServeConfig parse edge: flag strings become typed knobs
+    // exactly once, mirroring train_config
+    let cfg = ServeConfig::default()
+        .threads(args.parse_or("threads", 4)?)
+        .workers(args.parse_or("workers", 2)?)
+        .batch_window(Duration::from_micros(args.parse_or("batch-window-us", 0u64)?))
+        .queue_depth(args.parse_or("queue-depth", 256)?)
+        .cache_capacity(args.parse_or("cache", 1024)?)
+        .read_deadline(Duration::from_secs(args.parse_or("read-deadline-secs", 300u64)?))
+        .once(args.flag("once"))
+        .quiet(args.flag("quiet"));
     args.reject_unknown()?;
+    cfg.validate()?;
     let model = TopicModel::load(Path::new(&model_path))?;
-    if !opts.quiet {
+    let id = model_id_for(Path::new(&model_path), &model);
+    if !cfg.quiet {
         eprintln!(
-            "[serve-model] loaded {model_path}: T={} vocab={} tokens={}",
+            "[serve-model] loaded {id}: T={} vocab={} tokens={}",
             model.num_topics(),
             model.vocab(),
             model.total_tokens(),
@@ -397,7 +432,7 @@ fn cmd_serve_model(args: &Args) -> Result<(), String> {
     // machine-readable line launch scripts / tests parse for the port
     println!("listening on {local}");
     std::io::stdout().flush().map_err(|e| e.to_string())?;
-    serve_model(listener, Arc::new(ModelHost::new(model)), &opts)
+    serve_model(listener, Arc::new(ModelSlot::new(ModelHost::new(model), id)), &cfg)
 }
 
 fn cmd_infer(args: &Args) -> Result<(), String> {
@@ -410,10 +445,16 @@ fn cmd_infer(args: &Args) -> Result<(), String> {
     let top: usize = args.parse_or("top", 10)?;
     let info = args.flag("info");
     let top_words: u32 = args.parse_or("top-words", 0)?;
+    let stats = args.flag("stats");
+    let reload = args.str_opt("reload");
     args.reject_unknown()?;
 
     let req = if info {
         Request::ModelInfo
+    } else if stats {
+        Request::Stats
+    } else if let Some(path) = reload {
+        Request::ReloadModel { path }
     } else if top_words > 0 {
         Request::TopWords { k: top_words }
     } else if let Some(text) = text {
@@ -427,7 +468,10 @@ fn cmd_infer(args: &Args) -> Result<(), String> {
             .collect::<Result<Vec<_>, _>>()?;
         Request::InferTokens { tokens, sweeps, seed }
     } else {
-        return Err("one of --text, --tokens, --info, or --top-words is required".into());
+        return Err(
+            "one of --text, --tokens, --info, --top-words, --stats, or --reload is required"
+                .into(),
+        );
     };
 
     let resp = match (remote, model_path) {
@@ -442,10 +486,16 @@ fn cmd_infer(args: &Args) -> Result<(), String> {
 /// contract CI and scripts rely on (`topic:mass` pairs, mass descending).
 fn render_infer_response(resp: Response, top: usize) -> Result<(), String> {
     match resp {
-        Response::Theta { theta, used_tokens } => {
+        Response::Theta { theta, used_tokens, model_version } => {
             let mut order: Vec<usize> = (0..theta.len()).collect();
             order.sort_unstable_by(|&a, &b| theta[b].total_cmp(&theta[a]).then(a.cmp(&b)));
-            println!("used_tokens = {used_tokens}   T = {}", theta.len());
+            // the version goes on this line, never on theta_top: remote
+            // (v >= 1) and local (v = 0) answers for the same query must
+            // produce byte-identical theta_top lines
+            println!(
+                "used_tokens = {used_tokens}   T = {}   model_version = {model_version}",
+                theta.len()
+            );
             let mut line = String::from("theta_top:");
             for &t in order.iter().take(top.max(1)) {
                 line.push_str(&format!(" {t}:{:.4}", theta[t]));
@@ -453,11 +503,51 @@ fn render_infer_response(resp: Response, top: usize) -> Result<(), String> {
             println!("{line}");
             Ok(())
         }
-        Response::ModelInfo { topics, vocab, alpha, beta, total_tokens, has_vocab } => {
+        Response::ModelInfo {
+            topics,
+            vocab,
+            alpha,
+            beta,
+            total_tokens,
+            has_vocab,
+            model_version,
+            model_id,
+        } => {
             println!(
                 "model: T={topics} vocab={vocab} alpha={alpha:.6} beta={beta:.6} \
-                 tokens={total_tokens} vocab_strings={has_vocab}"
+                 tokens={total_tokens} vocab_strings={has_vocab} version={model_version} \
+                 id={model_id}"
             );
+            Ok(())
+        }
+        Response::Stats(s) => {
+            println!(
+                "serve_stats: qps={:.2} total={} infer={} errors={} cache_hit_rate={:.4} \
+                 p50_us={:.1} p95_us={:.1} p99_us={:.1}",
+                s.qps,
+                s.total_requests,
+                s.infer_requests,
+                s.errors,
+                s.cache_hit_rate,
+                s.p50_us,
+                s.p95_us,
+                s.p99_us,
+            );
+            println!(
+                "serve_state: uptime_s={:.1} queue_depth={} batches={} batched_docs={} \
+                 max_batch={} model_version={} swaps={}",
+                s.uptime_secs,
+                s.queue_depth,
+                s.batches,
+                s.batched_docs,
+                s.max_batch,
+                s.model_version,
+                s.model_swaps,
+            );
+            Ok(())
+        }
+        Response::Reloaded { model_version, model_id, topics, vocab } => {
+            println!("reloaded: version={model_version} id={model_id} T={topics} vocab={vocab}");
             Ok(())
         }
         Response::TopWords { topics } => {
@@ -526,8 +616,47 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     lat_us.sort_by(|a, b| a.total_cmp(b));
     let p50 = percentile(&lat_us, 50.0);
     let p95 = percentile(&lat_us, 95.0);
+    let p99 = percentile(&lat_us, 99.0);
     let infer_tps =
         if batch_secs > 0.0 { corpus.num_tokens() as f64 / batch_secs } else { 0.0 };
+
+    // serving path: a loopback server with the full batching core, hit
+    // with two passes over the same documents (pass two exercises the
+    // answer cache), then its own Stats counters read back over the wire
+    let listener =
+        std::net::TcpListener::bind("127.0.0.1:0").map_err(|e| format!("bench bind: {e}"))?;
+    let addr = listener.local_addr().map_err(|e| e.to_string())?.to_string();
+    let serve_cfg = ServeConfig::default()
+        .threads(threads.max(1))
+        .workers(threads.max(1))
+        .quiet(true);
+    let slot = Arc::new(ModelSlot::new(
+        ModelHost::new(model.clone()),
+        format!("bench@{:016x}", model.fingerprint()),
+    ));
+    std::thread::spawn(move || {
+        let _ = serve_model(listener, slot, &serve_cfg);
+    });
+    let mut client = Client::connect(&addr)?;
+    let serve_docs = corpus.num_docs().min(200);
+    for _pass in 0..2 {
+        for d in 0..serve_docs {
+            let req = Request::InferTokens {
+                tokens: corpus.doc(d).to_vec(),
+                sweeps: sweeps as u32,
+                seed: 0,
+            };
+            if let Response::Err(e) = client.query(&req)? {
+                return Err(format!("bench serving query failed: {e}"));
+            }
+        }
+    }
+    let stats = match client.query(&Request::Stats)? {
+        Response::Stats(s) => s,
+        other => return Err(format!("bench expected Stats, got {other:?}")),
+    };
+    drop(client);
+
     let infer_path = out_dir.join("BENCH_infer.json");
     write_json(
         &infer_path,
@@ -542,12 +671,24 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
             ("tokens_per_sec", JsonVal::Num(infer_tps)),
             ("p50_us", JsonVal::Num(p50)),
             ("p95_us", JsonVal::Num(p95)),
+            ("p99_us", JsonVal::Num(p99)),
+            ("serve_docs", JsonVal::Int(2 * serve_docs as u64)),
+            ("serve_qps", JsonVal::Num(stats.qps)),
+            ("serve_p50_us", JsonVal::Num(stats.p50_us)),
+            ("serve_p95_us", JsonVal::Num(stats.p95_us)),
+            ("serve_p99_us", JsonVal::Num(stats.p99_us)),
+            ("cache_hit_rate", JsonVal::Num(stats.cache_hit_rate)),
         ],
     )?;
     println!(
         "train: {:.0} tokens/s   infer: {:.0} tokens/s   p50 {p50:.1} µs/doc   \
          p95 {p95:.1} µs/doc",
         res.tokens_per_sec, infer_tps,
+    );
+    println!(
+        "serve: {:.0} qps   p50 {:.1} µs   p95 {:.1} µs   p99 {:.1} µs   \
+         cache hit rate {:.2}",
+        stats.qps, stats.p50_us, stats.p95_us, stats.p99_us, stats.cache_hit_rate,
     );
     println!("wrote {} and {}", train_path.display(), infer_path.display());
     Ok(())

@@ -150,6 +150,43 @@ pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     sorted[rank.saturating_sub(1).min(sorted.len() - 1)]
 }
 
+/// Bucket count of the log₂ latency histograms ([`latency_bucket`]):
+/// bucket b covers `[2^b, 2^(b+1))` nanoseconds, so 64 buckets span
+/// everything a `u64` nanosecond count can hold.
+pub const LATENCY_BUCKETS: usize = 64;
+
+/// Histogram bucket for one latency measurement in nanoseconds:
+/// `⌊log₂ ns⌋`, with 0 ns folded into bucket 0.  Constant-time, so a
+/// server can record it behind a single relaxed atomic increment.
+#[inline]
+pub fn latency_bucket(ns: u64) -> usize {
+    (63 - (ns | 1).leading_zeros()) as usize
+}
+
+/// Nearest-rank percentile over log₂ histogram bucket counts, reported
+/// as the geometric midpoint `2^b·√2` of the winning bucket, in
+/// **microseconds** (`p ∈ [0, 100]`).  NaN when the histogram is empty.
+///
+/// The bucketed estimate trades ≤ √2× value resolution for O(1) lock-free
+/// recording — the right trade for always-on serving percentiles, where
+/// the alternative is an unbounded sample vector behind a lock.
+pub fn bucket_percentile_us(counts: &[u64], p: f64) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return f64::NAN;
+    }
+    debug_assert!((0.0..=100.0).contains(&p));
+    let rank = (((p / 100.0) * total as f64).ceil() as u64).clamp(1, total);
+    let mut seen = 0u64;
+    for (b, &c) in counts.iter().enumerate() {
+        seen += c;
+        if seen >= rank {
+            return 2f64.powi(b as i32) * std::f64::consts::SQRT_2 / 1e3;
+        }
+    }
+    f64::NAN
+}
+
 /// One value of a machine-readable bench record.
 #[derive(Clone, Debug)]
 pub enum JsonVal {
@@ -271,6 +308,32 @@ mod tests {
         assert!(percentile(&[], 50.0).is_nan());
         // nearest-rank on a short list: p95 of 3 samples is the max
         assert_eq!(percentile(&[1.0, 2.0, 3.0], 95.0), 3.0);
+    }
+
+    #[test]
+    fn latency_buckets_follow_log2_boundaries() {
+        assert_eq!(latency_bucket(0), 0);
+        assert_eq!(latency_bucket(1), 0);
+        assert_eq!(latency_bucket(2), 1);
+        assert_eq!(latency_bucket(3), 1);
+        assert_eq!(latency_bucket(1023), 9);
+        assert_eq!(latency_bucket(1024), 10);
+        assert_eq!(latency_bucket(u64::MAX), LATENCY_BUCKETS - 1);
+    }
+
+    #[test]
+    fn bucket_percentiles_pick_the_right_bucket() {
+        let mut counts = vec![0u64; LATENCY_BUCKETS];
+        // 90 measurements around 1 µs (bucket 9), 10 around 1 ms (bucket 19)
+        counts[9] = 90;
+        counts[19] = 10;
+        let p50 = bucket_percentile_us(&counts, 50.0);
+        let p99 = bucket_percentile_us(&counts, 99.0);
+        // geometric midpoints: 2^9·√2 ns ≈ 0.72 µs, 2^19·√2 ns ≈ 741 µs
+        assert!((p50 - 0.724).abs() < 0.01, "p50 = {p50}");
+        assert!((p99 - 741.5).abs() < 1.0, "p99 = {p99}");
+        assert!(bucket_percentile_us(&counts, 0.0) <= p50);
+        assert!(bucket_percentile_us(&[0; LATENCY_BUCKETS], 50.0).is_nan());
     }
 
     #[test]

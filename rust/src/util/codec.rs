@@ -136,6 +136,23 @@ impl<'a> Cur<'a> {
 
 // --------------------------------------------------------------- framing
 
+/// True for the error kinds a socket read deadline produces (platforms
+/// disagree: Unix reports `WouldBlock`, Windows `TimedOut`).
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// Name a read failure, distinguishing a deadline expiry from every other
+/// fault — callers (and their tests) must be able to tell "the peer went
+/// silent past the configured deadline" apart from EOF or a reset.
+fn read_err(ctx: &str, e: std::io::Error) -> String {
+    if is_timeout(&e) {
+        format!("read deadline exceeded ({ctx}): {e}")
+    } else {
+        format!("{ctx}: {e}")
+    }
+}
+
 /// Write one `u32 LE length | body` frame and flush it.  Errors (instead
 /// of truncating the `u32` prefix) on bodies above `cap` — oversized
 /// payloads must fail loudly, not desync the stream.
@@ -153,7 +170,7 @@ pub fn write_len_prefixed<W: Write>(w: &mut W, body: &[u8], cap: usize) -> Resul
 /// and a length above `cap` (checked *before* the body allocation).
 pub fn read_len_prefixed<R: Read>(r: &mut R, cap: usize) -> Result<Vec<u8>, String> {
     let mut len4 = [0u8; 4];
-    r.read_exact(&mut len4).map_err(|e| format!("frame read failed: {e}"))?;
+    r.read_exact(&mut len4).map_err(|e| read_err("frame read failed", e))?;
     read_frame_body(r, len4, cap)
 }
 
@@ -175,7 +192,7 @@ pub fn read_len_prefixed_eof<R: Read>(
             }
             Ok(n) => got += n,
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
-            Err(e) => return Err(format!("frame read failed: {e}")),
+            Err(e) => return Err(read_err("frame read failed", e)),
         }
     }
     read_frame_body(r, len4, cap).map(Some)
@@ -187,7 +204,7 @@ fn read_frame_body<R: Read>(r: &mut R, len4: [u8; 4], cap: usize) -> Result<Vec<
         return Err(format!("frame length {len} exceeds the {cap}-byte cap"));
     }
     let mut body = vec![0u8; len];
-    r.read_exact(&mut body).map_err(|e| format!("frame body read failed: {e}"))?;
+    r.read_exact(&mut body).map_err(|e| read_err("frame body read failed", e))?;
     Ok(body)
 }
 
@@ -281,5 +298,24 @@ mod tests {
         let mut big = Vec::new();
         big.extend_from_slice(&u32::MAX.to_le_bytes());
         assert!(read_len_prefixed_eof(&mut &big[..], 64).unwrap_err().contains("cap"));
+    }
+
+    /// A socket whose read deadline fires surfaces as `WouldBlock` /
+    /// `TimedOut` — both readers must name it as a deadline expiry, never
+    /// as a generic read failure (tests and supervisors key on the name).
+    #[test]
+    fn deadline_expiry_is_a_named_error_distinct_from_eof() {
+        struct TimesOut;
+        impl Read for TimesOut {
+            fn read(&mut self, _: &mut [u8]) -> std::io::Result<usize> {
+                Err(std::io::Error::new(std::io::ErrorKind::WouldBlock, "timed out"))
+            }
+        }
+        let err = read_len_prefixed_eof(&mut TimesOut, 64).unwrap_err();
+        assert!(err.contains("read deadline exceeded"), "unhelpful: {err}");
+        let err = read_len_prefixed(&mut TimesOut, 64).unwrap_err();
+        assert!(err.contains("read deadline exceeded"), "unhelpful: {err}");
+        // a clean EOF is still Ok(None), not a deadline error
+        assert_eq!(read_len_prefixed_eof(&mut &[][..], 64).unwrap(), None);
     }
 }

@@ -1,28 +1,34 @@
 //! Model serving over loopback TCP: the `export-model` → `serve-model` →
 //! `infer --remote` pipeline must round-trip over real sockets (both
 //! in-process and through the actual CLI binaries), malformed frames must
-//! be named errors rather than hangs or panics, and a fixed seed must
-//! return identical θ̂ across runs — the artifact determinism promise.
+//! be named errors rather than hangs or panics, a fixed seed must return
+//! identical θ̂ across runs — the artifact determinism promise — and the
+//! batching/caching/hot-swap core must hold up under concurrent load:
+//! 16 hammering clients drop nothing, and a mid-traffic `ReloadModel`
+//! never produces a failed or version-mixed response.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::process::{Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread;
+use std::time::Duration;
 
 use fnomad_lda::corpus::preset;
-use fnomad_lda::infer::wire::MAX_QUERY_FRAME;
+use fnomad_lda::infer::wire::{MAX_QUERY_FRAME, QUERY_MAGIC};
 use fnomad_lda::infer::{
-    serve_model, Client, ModelHost, Request, Response, ServeModelOpts, TopicModel,
+    query_one, serve_model, Client, ModelHost, ModelSlot, Request, Response, ServeConfig,
+    StatsReport, TopicModel,
 };
 use fnomad_lda::lda::state::{Hyper, LdaState};
 use fnomad_lda::lda::{FLdaWord, Sweep};
 use fnomad_lda::util::codec::write_len_prefixed;
 use fnomad_lda::util::rng::Pcg32;
 
-fn trained_model() -> TopicModel {
+fn trained_model_seeded(seed: u64) -> TopicModel {
     let corpus = preset("tiny").unwrap();
-    let mut rng = Pcg32::seeded(77);
+    let mut rng = Pcg32::seeded(seed);
     let mut state = LdaState::init_random(&corpus, Hyper::paper_default(8), &mut rng);
     let mut sweeper = FLdaWord::new(&state, &corpus);
     for _ in 0..8 {
@@ -31,18 +37,45 @@ fn trained_model() -> TopicModel {
     TopicModel::from_state(&state, Vec::new())
 }
 
+fn trained_model() -> TopicModel {
+    trained_model_seeded(77)
+}
+
 /// Bind a loopback `serve-model` on a free port, serving one connection
-/// on a background thread.
-fn spawn_loopback_server(
+/// on a background thread with the given config.
+fn spawn_server_once(
     model: TopicModel,
+    cfg: ServeConfig,
 ) -> (String, thread::JoinHandle<Result<(), String>>) {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
-    let host = Arc::new(ModelHost::new(model));
-    let handle = thread::spawn(move || {
-        serve_model(listener, host, &ServeModelOpts { threads: 1, once: true, quiet: true })
-    });
+    let slot = Arc::new(ModelSlot::new(ModelHost::new(model), "test@once".into()));
+    let handle =
+        thread::spawn(move || serve_model(listener, slot, &cfg.once(true).quiet(true)));
     (addr, handle)
+}
+
+fn spawn_loopback_server(
+    model: TopicModel,
+) -> (String, thread::JoinHandle<Result<(), String>>) {
+    spawn_server_once(model, ServeConfig::default().threads(1).workers(1))
+}
+
+/// A long-lived multi-connection server; its threads are leaked (they die
+/// with the test process), which is exactly how the real daemon runs.
+fn spawn_multi_server(model: TopicModel, cfg: ServeConfig) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let slot = Arc::new(ModelSlot::new(ModelHost::new(model), "test@multi".into()));
+    thread::spawn(move || serve_model(listener, slot, &cfg.quiet(true)));
+    addr
+}
+
+fn stats_of(addr: &str) -> StatsReport {
+    match query_one(addr, &Request::Stats).unwrap() {
+        Response::Stats(s) => s,
+        other => panic!("expected Stats, got {other:?}"),
+    }
 }
 
 /// The acceptance scenario, in-process: one connection carries a
@@ -56,20 +89,22 @@ fn query_round_trip_over_real_tcp() {
     let mut client = Client::connect(&addr).unwrap();
 
     match client.query(&Request::ModelInfo).unwrap() {
-        Response::ModelInfo { topics, vocab, total_tokens, has_vocab, .. } => {
+        Response::ModelInfo { topics, vocab, total_tokens, has_vocab, model_version, .. } => {
             assert_eq!(topics as usize, t);
             assert_eq!(vocab, 300);
             assert!(total_tokens > 0);
             assert!(!has_vocab);
+            assert_eq!(model_version, 1, "the initially loaded model is version 1");
         }
         other => panic!("wrong ModelInfo answer: {other:?}"),
     }
 
     let req = Request::InferTokens { tokens: vec![0, 1, 2, 3, 4, 5, 6, 7], sweeps: 10, seed: 3 };
     let theta_a = match client.query(&req).unwrap() {
-        Response::Theta { theta, used_tokens } => {
+        Response::Theta { theta, used_tokens, model_version } => {
             assert_eq!(used_tokens, 8);
             assert_eq!(theta.len(), t);
+            assert_eq!(model_version, 1);
             let sum: f64 = theta.iter().sum();
             assert!((sum - 1.0).abs() < 1e-9, "theta sums to {sum}");
             theta
@@ -138,6 +173,37 @@ fn malformed_body_is_a_named_error_and_session_survives() {
     server.join().unwrap().unwrap();
 }
 
+/// An un-upgraded v1 client must get a *decodable* rejection naming both
+/// protocol versions — the frozen `Err` frame layout is what makes the
+/// negotiation legible across the skew.
+#[test]
+fn v1_client_gets_a_named_unsupported_version_error() {
+    let (addr, server) = spawn_loopback_server(trained_model());
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+
+    // a hand-built v1 ModelInfo frame, exactly as the old client sent it
+    let mut body = Vec::new();
+    body.extend_from_slice(&QUERY_MAGIC.to_le_bytes());
+    body.extend_from_slice(&1u32.to_le_bytes());
+    body.push(1); // REQ_MODEL_INFO
+    write_len_prefixed(&mut writer, &body, MAX_QUERY_FRAME).unwrap();
+    let resp = fnomad_lda::util::codec::read_len_prefixed(&mut reader, MAX_QUERY_FRAME).unwrap();
+    match fnomad_lda::infer::wire::decode_response(&resp).unwrap() {
+        Response::Err(e) => {
+            assert!(e.contains("unsupported"), "unhelpful rejection: {e}");
+            assert!(e.contains("v1") && e.contains("v2"), "must name both versions: {e}");
+        }
+        other => panic!("expected Err response, got {other:?}"),
+    }
+
+    // body-level rejection: the session survives and the server exits clean
+    drop(writer);
+    drop(reader);
+    server.join().unwrap().unwrap();
+}
+
 /// A broken *frame* layer (absurd length prefix) is fatal for the
 /// session: the server names the fault and drops the connection instead
 /// of trying to resync a desynchronized stream.
@@ -160,6 +226,192 @@ fn oversized_length_prefix_drops_the_session_with_a_named_error() {
     // a --once session error is the server's error (exit-code parity)
     let err = server.join().unwrap().unwrap_err();
     assert!(err.contains("cap"), "server error must name the fault: {err}");
+}
+
+/// A client that connects and goes silent is cut off by the configured
+/// read deadline with a *named* timeout error — distinguishable from the
+/// orderly EOF of a client that simply closed.
+#[test]
+fn silent_client_is_cut_off_with_a_named_deadline_error() {
+    let (addr, server) = spawn_server_once(
+        trained_model(),
+        ServeConfig::default()
+            .threads(1)
+            .workers(1)
+            .read_deadline(Duration::from_millis(200)),
+    );
+    let _held_open = TcpStream::connect(&addr).unwrap();
+    let err = server.join().unwrap().unwrap_err();
+    assert!(err.contains("read deadline exceeded"), "unhelpful timeout error: {err}");
+
+    // an orderly immediate close is the normal end of session, not an error
+    let (addr, server) = spawn_loopback_server(trained_model());
+    drop(TcpStream::connect(&addr).unwrap());
+    server.join().unwrap().unwrap();
+}
+
+/// 16 concurrent clients hammer the server with mixed traffic: nothing
+/// drops, nothing errors, the answer cache earns hits on the shared hot
+/// document, and the Stats counters are sane and monotone.
+#[test]
+fn sixteen_concurrent_clients_hammer_without_drops() {
+    const CLIENTS: u64 = 16;
+    const REQUESTS: u64 = 24;
+    let addr = spawn_multi_server(
+        trained_model(),
+        ServeConfig::default().threads(8).workers(3),
+    );
+    let mut handles = Vec::new();
+    for c in 0..CLIENTS {
+        let addr = addr.clone();
+        handles.push(thread::spawn(move || -> Result<(), String> {
+            let mut client = Client::connect(&addr)?;
+            for j in 0..REQUESTS {
+                let resp = match j % 4 {
+                    // the shared hot document: identical across all clients
+                    0 => client.query(&Request::InferTokens {
+                        tokens: vec![0, 1, 2, 3, 4, 5],
+                        sweeps: 4,
+                        seed: 9,
+                    })?,
+                    // unique work so the batch queue sees real traffic
+                    1 => client.query(&Request::InferTokens {
+                        tokens: vec![(c % 7) as u32, (j % 11) as u32, 42],
+                        sweeps: 3,
+                        seed: c * 31 + j,
+                    })?,
+                    2 => client.query(&Request::TopWords { k: 5 })?,
+                    _ => client.query(&Request::Stats)?,
+                };
+                match (j % 4, resp) {
+                    (0 | 1, Response::Theta { theta, .. }) => {
+                        if theta.is_empty() {
+                            return Err(format!("client {c} req {j}: empty theta"));
+                        }
+                    }
+                    (2, Response::TopWords { .. }) | (3, Response::Stats(_)) => {}
+                    (_, other) => {
+                        return Err(format!("client {c} req {j}: wrong answer {other:?}"))
+                    }
+                }
+            }
+            Ok(())
+        }));
+    }
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    let s1 = stats_of(&addr);
+    assert!(
+        s1.total_requests >= CLIENTS * REQUESTS,
+        "dropped requests: {} < {}",
+        s1.total_requests,
+        CLIENTS * REQUESTS
+    );
+    assert_eq!(s1.errors, 0, "hammer produced server-side errors");
+    assert!(s1.qps > 0.0);
+    assert!(s1.cache_hits > 0, "the shared hot document never hit the cache");
+    assert!(s1.infer_requests >= CLIENTS * REQUESTS / 2);
+    assert!(s1.p50_us > 0.0);
+    assert!(s1.p50_us <= s1.p95_us && s1.p95_us <= s1.p99_us);
+    assert!(s1.batches > 0 && s1.batched_docs > 0);
+    // the request counter is monotone: asking again counts the ask
+    let s2 = stats_of(&addr);
+    assert!(s2.total_requests > s1.total_requests);
+}
+
+/// Atomic hot-swap under load: 8 clients hammer inference while the
+/// model is reloaded mid-traffic.  Zero requests fail, every θ̂ is
+/// labeled with exactly one of the two versions, fresh traffic converges
+/// to the new version, and Stats records the swap.
+#[test]
+fn hot_swap_under_load_never_mixes_or_drops() {
+    let model_a = trained_model();
+    let model_b = trained_model_seeded(123);
+    assert_ne!(model_a.fingerprint(), model_b.fingerprint());
+    let dir = std::env::temp_dir().join("fnomad_serving_tests");
+    let next_path = dir.join("hotswap_next.fnmodel");
+    model_b.save(&next_path).unwrap();
+
+    let addr = spawn_multi_server(model_a, ServeConfig::default().threads(8).workers(2));
+    match query_one(&addr, &Request::ModelInfo).unwrap() {
+        Response::ModelInfo { model_version, .. } => assert_eq!(model_version, 1),
+        other => panic!("wrong pre-swap info: {other:?}"),
+    }
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut handles = Vec::new();
+    for c in 0..8u64 {
+        let addr = addr.clone();
+        let stop = Arc::clone(&stop);
+        handles.push(thread::spawn(move || -> Result<Vec<u64>, String> {
+            let mut client = Client::connect(&addr)?;
+            let mut versions = Vec::new();
+            let mut j = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                j += 1;
+                let req = Request::InferTokens {
+                    tokens: vec![(c % 13) as u32, (j % 17) as u32 + 13, 7],
+                    sweeps: 2,
+                    seed: c * 100_000 + j,
+                };
+                match client.query(&req)? {
+                    Response::Theta { model_version, .. } => versions.push(model_version),
+                    other => return Err(format!("hammer client {c} got {other:?}")),
+                }
+            }
+            Ok(versions)
+        }));
+    }
+
+    thread::sleep(Duration::from_millis(100));
+    let reload = Request::ReloadModel { path: next_path.to_str().unwrap().into() };
+    match query_one(&addr, &reload).unwrap() {
+        Response::Reloaded { model_version, model_id, topics, .. } => {
+            assert_eq!(model_version, 2);
+            assert!(model_id.starts_with("hotswap_next@"), "odd id: {model_id}");
+            assert_eq!(topics, 8);
+        }
+        other => panic!("reload failed: {other:?}"),
+    }
+    thread::sleep(Duration::from_millis(150));
+    stop.store(true, Ordering::Relaxed);
+
+    let mut versions = Vec::new();
+    for h in handles {
+        versions.extend(h.join().unwrap().unwrap());
+    }
+    assert!(!versions.is_empty(), "the hammer never got an answer");
+    assert!(
+        versions.iter().all(|&v| v == 1 || v == 2),
+        "a response carried an unknown model version: {versions:?}"
+    );
+
+    // convergence: workers re-lease after at most one stale batch plus an
+    // idle poll tick, so fresh traffic soon answers from version 2
+    let mut converged = false;
+    for probe in 0..100u64 {
+        let req = Request::InferTokens {
+            tokens: vec![2, 4, 6],
+            sweeps: 2,
+            seed: 999_000 + probe,
+        };
+        match query_one(&addr, &req).unwrap() {
+            Response::Theta { model_version: 2, .. } => {
+                converged = true;
+                break;
+            }
+            Response::Theta { .. } => thread::sleep(Duration::from_millis(50)),
+            other => panic!("post-swap probe got {other:?}"),
+        }
+    }
+    assert!(converged, "traffic never converged to the swapped-in model");
+
+    let s = stats_of(&addr);
+    assert_eq!(s.model_swaps, 1);
+    assert_eq!(s.model_version, 2);
+    assert_eq!(s.errors, 0, "the swap produced failed responses");
+    let _ = std::fs::remove_file(&next_path);
 }
 
 /// `.fnmodel` artifact determinism at the file level: export → load gives
@@ -258,7 +510,8 @@ fn two_process_serving_pipeline_via_cli() {
     let b = run(local.as_slice());
     assert_eq!(a, b, "fixed-seed CLI inference diverged across runs");
     // and the remote answer matches the local one: same artifact, same
-    // seed, same engine on both sides of the socket
+    // seed, same engine on both sides of the socket (the version label
+    // lives off the theta_top line for exactly this comparison)
     assert_eq!(
         a.lines().find(|l| l.starts_with("theta_top:")),
         Some(theta_line),
@@ -268,6 +521,7 @@ fn two_process_serving_pipeline_via_cli() {
     // model info renders from the artifact
     let info = run(&["infer", "--model", fnmodel.to_str().unwrap(), "--info"]);
     assert!(info.contains("T=8"), "bad info line: {info}");
+    assert!(info.contains("version=0"), "local info must carry version 0: {info}");
 
     let _ = std::fs::remove_file(&ckpt);
     let _ = std::fs::remove_file(&fnmodel);
