@@ -20,6 +20,8 @@ use std::fmt;
 use std::path::PathBuf;
 use std::str::FromStr;
 
+use crate::resilience::FaultPlan;
+
 /// Which training runtime executes the epochs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum RuntimeKind {
@@ -232,6 +234,17 @@ pub struct TrainConfig {
     pub resume: bool,
     /// Minka fixed-point steps applied to the final state (0 = off)
     pub hyper_opt_steps: usize,
+    /// directory for the async checkpoint service (retained snapshots +
+    /// MANIFEST); with the nomad runtime this also enables supervised
+    /// ring recovery
+    pub checkpoint_dir: Option<PathBuf>,
+    /// snapshots retained under `checkpoint_dir` (keep-last-K)
+    pub keep: usize,
+    /// ring rebuilds the supervisor may attempt before giving up with the
+    /// original failure (0 = fail on the first ring loss)
+    pub max_restarts: usize,
+    /// scripted fault injection (tests only; never set from the CLI)
+    pub fault: FaultPlan,
 }
 
 impl Default for TrainConfig {
@@ -256,6 +269,10 @@ impl Default for TrainConfig {
             save_every: 0,
             resume: false,
             hyper_opt_steps: 0,
+            checkpoint_dir: None,
+            keep: 3,
+            max_restarts: 0,
+            fault: FaultPlan::default(),
         }
     }
 }
@@ -356,6 +373,26 @@ impl TrainConfig {
         self
     }
 
+    pub fn checkpoint_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.checkpoint_dir = Some(dir.into());
+        self
+    }
+
+    pub fn keep(mut self, k: usize) -> Self {
+        self.keep = k;
+        self
+    }
+
+    pub fn max_restarts(mut self, n: usize) -> Self {
+        self.max_restarts = n;
+        self
+    }
+
+    pub fn fault(mut self, plan: FaultPlan) -> Self {
+        self.fault = plan;
+        self
+    }
+
     /// Validate cross-field constraints the type system cannot express.
     /// Called once by the driver, so CLI and library users both get a
     /// proper error (never a worker-runtime assertion) for e.g.
@@ -371,6 +408,29 @@ impl TrainConfig {
             return Err(format!(
                 "--workers must be at least 1 to run '{}' (only a nomad ring with \
                  --remote workers can run with 0 local threads)",
+                self.runtime
+            ));
+        }
+        if self.max_restarts > 0 && self.checkpoint_dir.is_none() {
+            return Err(
+                "--max-restarts requires --checkpoint-dir DIR (recovery restarts from \
+                 retained snapshots)"
+                    .into(),
+            );
+        }
+        if self.max_restarts > 0 && self.runtime != RuntimeKind::Nomad {
+            return Err(format!(
+                "--max-restarts requires --runtime nomad (got '{}'); only the ring \
+                 supports supervised recovery",
+                self.runtime
+            ));
+        }
+        if self.checkpoint_dir.is_some() && self.keep == 0 {
+            return Err("--keep must be at least 1 (retention would delete every snapshot)".into());
+        }
+        if !self.fault.is_empty() && self.runtime != RuntimeKind::Nomad {
+            return Err(format!(
+                "fault injection requires the nomad runtime (got '{}')",
                 self.runtime
             ));
         }
@@ -464,6 +524,35 @@ mod tests {
             .validate()
             .unwrap();
         TrainConfig::preset("tiny").validate().unwrap();
+    }
+
+    #[test]
+    fn validate_pins_resilience_flag_combinations() {
+        let err = TrainConfig::preset("tiny")
+            .runtime(RuntimeKind::Nomad)
+            .max_restarts(1)
+            .validate()
+            .unwrap_err();
+        assert!(err.contains("--checkpoint-dir"), "error must name the flag: {err}");
+        let err = TrainConfig::preset("tiny")
+            .checkpoint_dir("ckpts")
+            .max_restarts(1)
+            .validate()
+            .unwrap_err();
+        assert!(err.contains("nomad"), "error must name the runtime: {err}");
+        let err = TrainConfig::preset("tiny")
+            .runtime(RuntimeKind::Nomad)
+            .checkpoint_dir("ckpts")
+            .keep(0)
+            .validate()
+            .unwrap_err();
+        assert!(err.contains("--keep"), "error must name the flag: {err}");
+        TrainConfig::preset("tiny")
+            .runtime(RuntimeKind::Nomad)
+            .checkpoint_dir("ckpts")
+            .max_restarts(2)
+            .validate()
+            .unwrap();
     }
 
     #[test]

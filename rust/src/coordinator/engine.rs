@@ -12,6 +12,12 @@
 //! ([`make_engine`]), which is how `--resume` works uniformly: the driver
 //! loads a checkpoint (or random-inits) once and every runtime starts from
 //! those assignments.
+//!
+//! The nomad engine has a second construction path the driver chooses
+//! when `checkpoint_dir` is set: [`crate::resilience::Supervisor`] wraps
+//! the same ring behind this trait but drives the fallible
+//! `try_run_epoch` / `try_gather_state` twins, restarting from the latest
+//! valid snapshot instead of panicking when the ring fails.
 
 use crate::adlda::{AdLda, AdLdaConfig};
 use crate::corpus::Corpus;

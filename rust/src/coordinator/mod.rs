@@ -7,7 +7,11 @@
 //! [`TrainEngine`]; **one** generic driver loop ([`train_with`]) runs
 //! epochs, evaluates at the configured cadence, and fans events out to
 //! [`TrainObserver`]s (progress logging, CSV output, checkpointing,
-//! hyperparameter estimation — all observers, no special cases).
+//! hyperparameter estimation — all observers, no special cases).  With
+//! `checkpoint_dir` set the driver also stands up the
+//! [`crate::resilience`] layer: an async snapshot service fed at the eval
+//! cadence, and — for the nomad runtime — the supervised-recovery engine
+//! that restarts the ring from the latest valid snapshot on worker loss.
 
 pub mod config;
 pub mod engine;
@@ -20,8 +24,11 @@ pub use observer::{
     TrainObserver,
 };
 
+use std::sync::Arc;
+
 use crate::corpus::{preset, Corpus};
 use crate::lda::{self, checkpoint, Hyper, LdaState};
+use crate::resilience::{AsyncCheckpointer, CheckpointWriter, SnapshotStore, Supervisor};
 use crate::runtime::{artifacts_available, default_artifact_dir, LlEvaluator};
 use crate::util::metrics::Series;
 
@@ -126,11 +133,30 @@ pub fn train_with(
         );
     }
 
-    let mut engine = make_engine(&corpus, init, cfg)?;
+    // the async checkpoint service: a store + background writer thread,
+    // fed from the observer below; with the nomad runtime it also powers
+    // supervised recovery (the Supervisor engine)
+    let ckpt_service = match &cfg.checkpoint_dir {
+        Some(dir) => {
+            let store = Arc::new(SnapshotStore::open(dir, cfg.keep)?);
+            let writer = CheckpointWriter::spawn(Arc::clone(&store), cfg.quiet);
+            Some((store, writer))
+        }
+        None => None,
+    };
+    let mut engine: Box<dyn TrainEngine + '_> = match &ckpt_service {
+        Some((store, writer)) if cfg.runtime == RuntimeKind::Nomad => Box::new(
+            Supervisor::new(&corpus, &init, cfg, Arc::clone(store), writer.sink())?,
+        ),
+        _ => make_engine(&corpus, init, cfg)?,
+    };
     let mut recorder = LlRecorder::new(&label);
     let mut stock: Vec<Box<dyn TrainObserver>> = Vec::new();
     if !cfg.quiet {
         stock.push(Box::new(ProgressLogger::new(&label)));
+    }
+    if let Some((_, writer)) = &ckpt_service {
+        stock.push(Box::new(AsyncCheckpointer::new(writer.sink(), cfg.save_every, cfg.quiet)));
     }
     if let Some(path) = &cfg.out {
         stock.push(Box::new(CsvWriter::new(path, cfg.quiet)));
@@ -198,6 +224,11 @@ pub fn train_with(
     }
     for o in extra.iter_mut() {
         o.on_finish(&mut result)?;
+    }
+    // drain and join the checkpoint writer so the final snapshot is on
+    // disk before the run reports success
+    if let Some((_, writer)) = ckpt_service {
+        writer.finish();
     }
     Ok(result)
 }

@@ -147,7 +147,10 @@ impl Checkpointer {
     }
 
     fn save(&self, state: &LdaState, what: &str) -> Result<(), String> {
-        lda::checkpoint::save(state, &self.path)?;
+        // atomic write + hard-linked `<path>.prev` retention: a crash
+        // mid-save (or a later corruption of the live file) still leaves
+        // a loadable generation for init_or_load to fall back to
+        lda::checkpoint::save_with_retention(state, &self.path)?;
         if !self.quiet {
             eprintln!("[ckpt] saved {} ({what})", self.path.display());
         }

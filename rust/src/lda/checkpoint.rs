@@ -11,10 +11,11 @@
 //! Counts are *rederived* on load and cross-checked, so a corrupt file
 //! cannot produce an inconsistent state.
 
-use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::io::{BufReader, Read, Write};
+use std::path::{Path, PathBuf};
 
 use crate::corpus::Corpus;
+use crate::util::fsio::AtomicFile;
 use crate::util::rng::Pcg32;
 
 use super::state::{Hyper, LdaState, SparseCounts};
@@ -25,15 +26,19 @@ const MAGIC: &[u8; 8] = b"FNLDA001";
 ///
 /// The byte format is exactly FNLDA001 (see the module docs); with the
 /// flat CSR `z` each document row goes out as one bulk `write_all`
-/// through the `BufWriter` instead of one 2-byte write per token —
-/// roughly an order of magnitude on the billion-token target, with no
-/// transient copy of the assignment array.
+/// instead of one 2-byte write per token — roughly an order of magnitude
+/// on the billion-token target, with no transient copy of the assignment
+/// array.  The write is atomic ([`AtomicFile`]): a crash mid-save leaves
+/// the previous complete file at `path`, never a torn prefix.
 pub fn save(state: &LdaState, path: &Path) -> Result<(), String> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
-    }
-    let f = std::fs::File::create(path).map_err(|e| e.to_string())?;
-    let mut w = BufWriter::new(f);
+    save_fingerprinted(state, path).map(|_| ())
+}
+
+/// [`save`] that also returns the FNV-1a fingerprint of the written
+/// bytes — the resilience manifest records it so recovery can detect a
+/// checkpoint corrupted *after* the atomic rename.
+pub fn save_fingerprinted(state: &LdaState, path: &Path) -> Result<u64, String> {
+    let mut w = AtomicFile::create(path)?;
     let io = |e: std::io::Error| e.to_string();
     w.write_all(MAGIC).map_err(io)?;
     w.write_all(&(state.hyper.t as u32).to_le_bytes()).map_err(io)?;
@@ -46,7 +51,35 @@ pub fn save(state: &LdaState, path: &Path) -> Result<(), String> {
         w.write_all(&(row.len() as u32).to_le_bytes()).map_err(io)?;
         write_z_row(&mut w, row).map_err(io)?;
     }
-    w.flush().map_err(io)
+    w.commit()
+}
+
+/// Sibling path holding the previously retained generation of a
+/// single-file checkpoint (`<path>.prev`).
+pub fn prev_path(path: &Path) -> PathBuf {
+    let mut name = path.as_os_str().to_os_string();
+    name.push(".prev");
+    PathBuf::from(name)
+}
+
+/// Atomic save that first retains the existing file as `<path>.prev`
+/// (a hard link, so retention is O(1) regardless of checkpoint size).
+/// This is the `Checkpointer` observer's save path: even if this whole
+/// *generation* turns out bad — disk corruption after the rename —
+/// [`init_or_load`] can still fall back to the previous one.
+pub fn save_with_retention(state: &LdaState, path: &Path) -> Result<(), String> {
+    if path.exists() {
+        let prev = prev_path(path);
+        let _ = std::fs::remove_file(&prev);
+        if let Err(e) = std::fs::hard_link(path, &prev) {
+            eprintln!(
+                "[checkpoint] warning: could not retain {} as {}: {e}",
+                path.display(),
+                prev.display()
+            );
+        }
+    }
+    save(state, path)
 }
 
 /// Write a z row as little-endian u16 bytes.
@@ -176,6 +209,50 @@ pub fn verify_roundtrip(state: &LdaState, corpus: &Corpus, path: &Path) -> Resul
     Ok(std::fs::metadata(path).map_err(|e| e.to_string())?.len())
 }
 
+/// How a checkpoint refused to load: a deliberate shape [`Mismatch`]
+/// (wrong `--topics` — actionable, must stay a hard error) versus file
+/// [`Corruption`] (torn bytes, bad magic — recoverable by falling back
+/// to an older generation).
+///
+/// [`Mismatch`]: LoadFailure::Mismatch
+/// [`Corruption`]: LoadFailure::Corruption
+enum LoadFailure {
+    Mismatch(String),
+    Corruption(String),
+}
+
+/// Header-check + load + consistency, classifying the failure mode.
+fn try_load_validated(
+    p: &Path,
+    corpus: &Corpus,
+    hyper: Hyper,
+    quiet: bool,
+) -> Result<LdaState, LoadFailure> {
+    // header-only validation first: a multi-GB body should not be read
+    // and count-rebuilt just to discover a T mismatch
+    let ckpt = peek_hyper(p).map_err(LoadFailure::Corruption)?;
+    if ckpt.t != hyper.t {
+        return Err(LoadFailure::Mismatch(format!(
+            "checkpoint {} has T={} but T={} was requested; pass --topics {} \
+             to resume it (or point --checkpoint elsewhere)",
+            p.display(),
+            ckpt.t,
+            hyper.t,
+            ckpt.t
+        )));
+    }
+    if !quiet
+        && ((ckpt.alpha - hyper.alpha).abs() > 1e-12 || (ckpt.beta - hyper.beta).abs() > 1e-12)
+    {
+        eprintln!(
+            "[checkpoint] warning: resuming with checkpoint hyperparameters \
+             alpha={:.6} beta={:.6} (requested alpha={:.6} beta={:.6})",
+            ckpt.alpha, ckpt.beta, hyper.alpha, hyper.beta
+        );
+    }
+    load(p, corpus).map_err(LoadFailure::Corruption)
+}
+
 /// Deterministic fresh state helper mirroring init_random (exposed here so
 /// the CLI resume path shares one entry point).
 ///
@@ -186,6 +263,12 @@ pub fn verify_roundtrip(state: &LdaState, corpus: &Corpus, path: &Path) -> Resul
 /// mismatch warns (suppressed by `quiet`, like every other emitter) and
 /// proceeds with the checkpoint values (they are smoothers, legitimately
 /// retuned by `--hyper-opt`).
+///
+/// A truncated or corrupt file is *not* fatal: the loader falls back to
+/// the `<path>.prev` generation retained by [`save_with_retention`] (and
+/// to a fresh random init if that is unusable too), warning either way —
+/// a crashed run should resume from the best surviving state, not refuse
+/// to start.
 pub fn init_or_load(
     path: Option<&Path>,
     corpus: &Corpus,
@@ -193,37 +276,48 @@ pub fn init_or_load(
     seed: u64,
     quiet: bool,
 ) -> Result<LdaState, String> {
+    let random = |seed: u64| {
+        let mut rng = Pcg32::seeded(seed);
+        LdaState::init_random(corpus, hyper, &mut rng)
+    };
     match path {
-        Some(p) if p.exists() => {
-            // header-only validation first: a multi-GB body should not be
-            // read and count-rebuilt just to discover a T mismatch
-            let ckpt = peek_hyper(p)?;
-            if ckpt.t != hyper.t {
-                return Err(format!(
-                    "checkpoint {} has T={} but T={} was requested; pass --topics {} \
-                     to resume it (or point --checkpoint elsewhere)",
-                    p.display(),
-                    ckpt.t,
-                    hyper.t,
-                    ckpt.t
-                ));
-            }
-            if !quiet
-                && ((ckpt.alpha - hyper.alpha).abs() > 1e-12
-                    || (ckpt.beta - hyper.beta).abs() > 1e-12)
-            {
+        Some(p) if p.exists() => match try_load_validated(p, corpus, hyper, quiet) {
+            Ok(state) => Ok(state),
+            Err(LoadFailure::Mismatch(e)) => Err(e),
+            Err(LoadFailure::Corruption(why)) => {
                 eprintln!(
-                    "[checkpoint] warning: resuming with checkpoint hyperparameters \
-                     alpha={:.6} beta={:.6} (requested alpha={:.6} beta={:.6})",
-                    ckpt.alpha, ckpt.beta, hyper.alpha, hyper.beta
+                    "[checkpoint] warning: {} is truncated or corrupt ({why}); \
+                     trying the previous retained generation",
+                    p.display()
                 );
+                let prev = prev_path(p);
+                if prev.exists() {
+                    match try_load_validated(&prev, corpus, hyper, quiet) {
+                        Ok(state) => {
+                            eprintln!("[checkpoint] recovered from {}", prev.display());
+                            Ok(state)
+                        }
+                        Err(LoadFailure::Mismatch(e)) => Err(e),
+                        Err(LoadFailure::Corruption(why)) => {
+                            eprintln!(
+                                "[checkpoint] warning: {} is also unusable ({why}); \
+                                 starting from a fresh random init",
+                                prev.display()
+                            );
+                            Ok(random(seed))
+                        }
+                    }
+                } else {
+                    eprintln!(
+                        "[checkpoint] warning: no {} fallback; starting from a fresh \
+                         random init",
+                        prev.display()
+                    );
+                    Ok(random(seed))
+                }
             }
-            load(p, corpus)
-        }
-        _ => {
-            let mut rng = Pcg32::seeded(seed);
-            Ok(LdaState::init_random(corpus, hyper, &mut rng))
-        }
+        },
+        _ => Ok(random(seed)),
     }
 }
 
@@ -338,5 +432,46 @@ mod tests {
         let state =
             init_or_load(None, &corpus, Hyper::paper_default(8), 1, true).unwrap();
         state.check_consistency(&corpus).unwrap();
+    }
+
+    #[test]
+    fn save_with_retention_keeps_previous_generation() {
+        let corpus = preset("tiny").unwrap();
+        let mut rng = Pcg32::seeded(21);
+        let first = LdaState::init_random(&corpus, Hyper::paper_default(8), &mut rng);
+        let second = LdaState::init_random(&corpus, Hyper::paper_default(8), &mut rng);
+        let path = tmp("retain.ckpt");
+        let _ = std::fs::remove_file(prev_path(&path));
+        save_with_retention(&first, &path).unwrap();
+        save_with_retention(&second, &path).unwrap();
+        assert_eq!(load(&path, &corpus).unwrap().z, second.z);
+        assert_eq!(load(&prev_path(&path), &corpus).unwrap().z, first.z);
+        let _ = std::fs::remove_file(prev_path(&path));
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn init_or_load_recovers_from_truncated_file_via_prev() {
+        let corpus = preset("tiny").unwrap();
+        let mut rng = Pcg32::seeded(22);
+        let first = LdaState::init_random(&corpus, Hyper::paper_default(8), &mut rng);
+        let second = LdaState::init_random(&corpus, Hyper::paper_default(8), &mut rng);
+        let path = tmp("torn.ckpt");
+        let _ = std::fs::remove_file(prev_path(&path));
+        save_with_retention(&first, &path).unwrap();
+        save_with_retention(&second, &path).unwrap();
+        // simulate a torn write that escaped the atomic rename
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        let state =
+            init_or_load(Some(&path), &corpus, Hyper::paper_default(8), 1, true).unwrap();
+        assert_eq!(state.z, first.z, "must recover the previous generation");
+        // with no .prev either, a corrupt file degrades to a fresh init
+        std::fs::write(&path, b"FNLDA001 and then garbage").unwrap();
+        let _ = std::fs::remove_file(prev_path(&path));
+        let fresh =
+            init_or_load(Some(&path), &corpus, Hyper::paper_default(8), 1, true).unwrap();
+        fresh.check_consistency(&corpus).unwrap();
+        let _ = std::fs::remove_file(path);
     }
 }

@@ -31,6 +31,12 @@
 //!   (Θ(|T̂_w| + log T) per token, deterministic across thread counts),
 //!   and a TCP query server (`serve-model` / `infer --remote`) answering
 //!   θ̂ / top-words / model-info queries from N handler threads.
+//! * **Resilient training** ([`resilience`]): an async checkpoint service
+//!   (background writer thread, fingerprinting manifest, keep-last-K
+//!   retention) plus a supervisor that restarts the Nomad ring from the
+//!   latest valid snapshot when a worker dies mid-epoch — `kill -9` a
+//!   `serve-worker` and the run still completes (`train --checkpoint-dir
+//!   DIR --max-restarts N`).
 //! * **Evaluator backends** ([`runtime`]): the model-quality evaluator is
 //!   a blocked `Σ lgamma` reduction with two interchangeable backends —
 //!   with `--features pjrt`, a JAX + Pallas program AOT-lowered to HLO
@@ -77,6 +83,7 @@ pub mod infer;
 pub mod lda;
 pub mod nomad;
 pub mod ps;
+pub mod resilience;
 pub mod runtime;
 pub mod sampler;
 pub mod simnet;

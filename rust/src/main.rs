@@ -88,6 +88,21 @@ const TRAIN_SPEC: CommandSpec = CommandSpec {
         },
         FlagSpec { flag: "resume", value: "", help: "start from --checkpoint if it exists" },
         FlagSpec {
+            flag: "checkpoint-dir",
+            value: "DIR",
+            help: "async checkpoint service: retained snapshots + MANIFEST in DIR",
+        },
+        FlagSpec {
+            flag: "keep",
+            value: "K",
+            help: "snapshots retained under --checkpoint-dir (default 3)",
+        },
+        FlagSpec {
+            flag: "max-restarts",
+            value: "N",
+            help: "nomad only: ring rebuilds from the latest snapshot before giving up",
+        },
+        FlagSpec {
             flag: "hyper-opt",
             value: "N",
             help: "N Minka fixed-point steps on the final state (0 = off)",
@@ -335,6 +350,11 @@ fn train_config(args: &Args) -> Result<TrainConfig, String> {
         save_every: args.parse_or("save-every", d.save_every)?,
         resume: args.flag("resume"),
         hyper_opt_steps: args.parse_or("hyper-opt", d.hyper_opt_steps)?,
+        checkpoint_dir: args.str_opt("checkpoint-dir").map(PathBuf::from),
+        keep: args.parse_or("keep", d.keep)?,
+        max_restarts: args.parse_or("max-restarts", d.max_restarts)?,
+        // fault injection is a library/test surface, never a CLI flag
+        fault: d.fault,
     };
     args.reject_unknown()?;
     Ok(cfg)
@@ -365,7 +385,16 @@ fn cmd_serve_worker(args: &Args) -> Result<(), String> {
     use std::io::Write as _;
 
     let addr = args.str_or("listen", "127.0.0.1:7777");
-    let opts = ServeOpts { once: args.flag("once"), quiet: args.flag("quiet") };
+    // --fail-after-epochs is deliberately absent from the help spec: it
+    // exists so the resilience tests and CI chaos smoke can kill a real
+    // worker process mid-epoch on a deterministic schedule
+    let fail_after_epochs = match args.str_opt("fail-after-epochs") {
+        None => None,
+        Some(v) => Some(
+            v.parse::<u32>().map_err(|_| format!("--fail-after-epochs: cannot parse '{v}'"))?,
+        ),
+    };
+    let opts = ServeOpts { once: args.flag("once"), quiet: args.flag("quiet"), fail_after_epochs };
     args.reject_unknown()?;
     let listener = std::net::TcpListener::bind(&addr).map_err(|e| format!("bind {addr}: {e}"))?;
     let local = listener.local_addr().map_err(|e| e.to_string())?;

@@ -36,6 +36,7 @@ use std::time::Duration;
 
 use crate::corpus::Corpus;
 use crate::lda::state::Hyper;
+use crate::resilience::FaultTransport;
 use crate::util::codec::{read_len_prefixed, write_len_prefixed};
 use crate::util::rng::Pcg32;
 
@@ -103,47 +104,70 @@ impl Transport for TcpTransport {
 // ----------------------------------------------------------- serve side
 
 /// `serve-worker` options.
+#[derive(Default)]
 pub struct ServeOpts {
     /// serve a single coordinator session, then return
     pub once: bool,
     /// suppress per-connection logging
     pub quiet: bool,
+    /// fault injection (`--fail-after-epochs N`): kill the process on the
+    /// first word token after N completed epochs — a deterministic
+    /// `kill -9` for the recovery tests
+    pub fail_after_epochs: Option<u32>,
 }
 
 /// Host ring workers on `listener`: accept a coordinator connection,
 /// run the [`Init`] handshake, then loop the worker until `Stop` or
-/// disconnect.  Without `once`, session errors are logged and the next
-/// coordinator is awaited — a crashed training run never wedges the
-/// worker host; with `once`, a failed session is this call's (and the
-/// CLI's) error, so exit codes reflect worker-side failures.
+/// disconnect.
+///
+/// Without `once`, each session runs on its own thread and the host
+/// returns to accepting *immediately* — a wedged or crashed training run
+/// never blocks the next coordinator, and when a session ends (its ring
+/// partner dropped, cleanly or not) the named `rebind` line records that
+/// the slot is accepting again.  With `once`, the single session runs
+/// inline and a failed session is this call's (and the CLI's) error, so
+/// exit codes reflect worker-side failures.
 pub fn serve(listener: TcpListener, opts: &ServeOpts) -> Result<(), String> {
     loop {
         let (stream, peer) = listener.accept().map_err(|e| format!("accept failed: {e}"))?;
         if !opts.quiet {
             eprintln!("[serve-worker] coordinator connected from {peer}");
         }
-        match host_session(stream) {
-            Ok(slot) => {
-                if !opts.quiet {
-                    eprintln!("[serve-worker] session done (ring slot {slot})");
-                }
-            }
-            Err(e) => {
-                eprintln!("[serve-worker] session error: {e}");
-                if opts.once {
-                    return Err(e);
-                }
-            }
-        }
         if opts.once {
-            return Ok(());
+            return match host_session(stream, opts.fail_after_epochs) {
+                Ok(slot) => {
+                    if !opts.quiet {
+                        eprintln!("[serve-worker] session done (ring slot {slot})");
+                    }
+                    Ok(())
+                }
+                Err(e) => {
+                    eprintln!("[serve-worker] session error: {e}");
+                    Err(e)
+                }
+            };
         }
+        let quiet = opts.quiet;
+        let fail_after = opts.fail_after_epochs;
+        std::thread::spawn(move || {
+            match host_session(stream, fail_after) {
+                Ok(slot) => {
+                    if !quiet {
+                        eprintln!("[serve-worker] session done (ring slot {slot})");
+                    }
+                }
+                Err(e) => eprintln!("[serve-worker] session error: {e}"),
+            }
+            if !quiet {
+                eprintln!("[serve-worker] rebind: ring partner gone, accepting a new coordinator");
+            }
+        });
     }
 }
 
 /// One coordinator session: handshake, build the worker, run the ring
 /// loop.  Returns the slot id served.
-fn host_session(stream: TcpStream) -> Result<usize, String> {
+fn host_session(stream: TcpStream, fail_after_epochs: Option<u32>) -> Result<usize, String> {
     stream.set_nodelay(true).map_err(|e| e.to_string())?;
     // Init must arrive within the handshake deadline: a peer that
     // connects and goes silent may not park this single-session host
@@ -169,7 +193,11 @@ fn host_session(stream: TcpStream) -> Result<usize, String> {
     match build_worker(*init) {
         Ok(state) => {
             write_frame(&mut writer, &Frame::InitOk)?;
-            run_worker(state, TcpTransport::new(reader, writer))?;
+            let link = TcpTransport::new(reader, writer);
+            match fail_after_epochs {
+                Some(n) => run_worker(state, FaultTransport::new(link, n))?,
+                None => run_worker(state, link)?,
+            }
             Ok(slot)
         }
         Err(e) => {

@@ -394,6 +394,19 @@ impl NomadRuntime {
         let _ = self.senders[slot].send(msg);
     }
 
+    /// Test hook: kill ring slot `slot` mid-run — a remote slot's socket
+    /// is force-closed (a dropped TCP peer), a local slot's inbox is
+    /// poisoned with an arity-mismatched `SetS` so its thread panics.
+    /// Deterministic stand-in for `kill -9`; used by the resilience
+    /// fault plans.
+    #[doc(hidden)]
+    pub fn kill_slot(&self, slot: usize) {
+        match &self.slots[slot] {
+            Slot::Remote(remote) => remote.force_close(),
+            Slot::Local(_) => self.inject_raw(slot, Msg::SetS(Vec::new())),
+        }
+    }
+
     /// Send one ring input, converting a closed inbox into the story of
     /// how that slot died.
     fn send_ring(&mut self, slot: usize, msg: Msg) -> Result<(), String> {

@@ -11,7 +11,10 @@
 //!   by `fnomad-lda serve-worker` (cross-process mode).  Its "forward"
 //!   goes back over the coordinator connection tagged
 //!   [`super::wire::Frame::Forward`]; the coordinator relays it to the
-//!   successor, so remote workers never need to know the ring topology.
+//!   successor, so remote workers never need to know the ring topology;
+//! * [`crate::resilience::FaultTransport`] — a wrapper over either that
+//!   kills the process after N epochs (`serve-worker --fail-after-epochs`),
+//!   the deterministic `kill -9` behind the recovery tests.
 //!
 //! Every verb is fallible: a closed channel or dropped socket returns
 //! `Err` and [`run_worker`] exits, which is what lets the coordinator's

@@ -1,0 +1,93 @@
+//! Deterministic fault injection, so recovery is a tested code path
+//! instead of a hope.
+//!
+//! Two injection surfaces:
+//!
+//! * the [`Supervisor`](super::Supervisor) consults a [`FaultPlan`] right
+//!   before running each epoch — in-process tests script "worker _w_
+//!   panics at epoch _e_" or "slot _w_'s socket drops at epoch _e_"
+//!   without touching timing;
+//! * `serve-worker --fail-after-epochs N` wraps the remote worker's
+//!   transport in [`FaultTransport`], which kills the whole process
+//!   mid-epoch — from the coordinator's side this is indistinguishable
+//!   from `kill -9`, which is the point.
+
+use crate::nomad::token::{Msg, Reply};
+use crate::nomad::transport::Transport;
+
+/// Scripted faults for one training run.  Each is one-shot: the
+/// supervisor clears a fault once it has fired, so the respawned ring is
+/// healthy and the run can complete.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// poison ring slot `.0`'s inbox while running epoch `.1` (1-based),
+    /// panicking that worker mid-epoch
+    pub panic_worker: Option<(usize, usize)>,
+    /// force-close ring slot `.0`'s connection while running epoch `.1`
+    /// (meaningful for remote slots; a local slot is poisoned instead)
+    pub drop_peer: Option<(usize, usize)>,
+    /// truncate the newest retained checkpoint before the first recovery
+    /// reload, forcing the fallback-to-an-older-snapshot path
+    pub corrupt_latest_checkpoint: bool,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.panic_worker.is_none() && self.drop_peer.is_none() && !self.corrupt_latest_checkpoint
+    }
+}
+
+/// Transport wrapper behind `serve-worker --fail-after-epochs N`: counts
+/// epoch boundaries (each [`Msg::SetS`] broadcast ends one), and once `N`
+/// have passed, the next word token kills the process.
+///
+/// It exits rather than panics: a panic would still unwind through
+/// [`run_worker`](crate::nomad::transport::run_worker) and close sockets
+/// in an orderly way, but a real `kill -9` does neither — `exit(9)` is
+/// the honest simulation, leaving the coordinator to discover the loss
+/// through its relay faults and health polling.
+pub struct FaultTransport<T> {
+    inner: T,
+    epochs_left: u32,
+}
+
+impl<T> FaultTransport<T> {
+    pub fn new(inner: T, fail_after_epochs: u32) -> FaultTransport<T> {
+        FaultTransport { inner, epochs_left: fail_after_epochs }
+    }
+}
+
+impl<T: Transport> Transport for FaultTransport<T> {
+    fn recv(&mut self) -> Result<Msg, String> {
+        let msg = self.inner.recv()?;
+        match &msg {
+            Msg::SetS(_) if self.epochs_left > 0 => self.epochs_left -= 1,
+            Msg::Word(_) if self.epochs_left == 0 => {
+                eprintln!("[serve-worker] injected fault: dying mid-epoch (--fail-after-epochs)");
+                std::process::exit(9);
+            }
+            _ => {}
+        }
+        Ok(msg)
+    }
+
+    fn send_next(&mut self, msg: Msg) -> Result<(), String> {
+        self.inner.send_next(msg)
+    }
+
+    fn reply(&mut self, reply: Reply) -> Result<(), String> {
+        self.inner.reply(reply)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_empty() {
+        assert!(FaultPlan::default().is_empty());
+        assert!(!FaultPlan { corrupt_latest_checkpoint: true, ..Default::default() }.is_empty());
+        assert!(!FaultPlan { panic_worker: Some((0, 1)), ..Default::default() }.is_empty());
+    }
+}

@@ -1,0 +1,41 @@
+//! Resilient training: the layer between the coordinator's epoch loop and
+//! the Nomad ring that makes worker loss survivable.
+//!
+//! The paper's framework assumes workers live for the whole run; at the
+//! "millions of documents, billions of tokens" scale it targets, worker
+//! loss is the norm.  Since PR 4 a dropped TCP peer or panicked worker
+//! thread surfaces as a *named error* — this subsystem is what turns that
+//! error back into a running job.  Two halves:
+//!
+//! * **Async checkpoint service** — [`SnapshotStore`] owns an on-disk
+//!   checkpoint directory (FNLDA001 files + a fingerprinting MANIFEST,
+//!   keep-last-K retention); [`CheckpointWriter`] drains [`LdaState`]
+//!   snapshots from a bounded channel on a background thread so the epoch
+//!   loop never blocks on disk; [`AsyncCheckpointer`] is the
+//!   [`TrainObserver`] that feeds it at the eval cadence.
+//! * **Supervised recovery** — [`Supervisor`] wraps the ring's fallible
+//!   `try_run_epoch`/`try_gather_state` twins behind the [`TrainEngine`]
+//!   surface: on a ring failure it tears the ring down, reloads the
+//!   latest *valid* checkpoint, re-spawns the ring over the surviving
+//!   transports (repartitioning doc ranges over the remaining slots), and
+//!   resumes — bounded retries with exponential backoff before giving up
+//!   with the original named error.
+//!
+//! [`FaultPlan`] and [`FaultTransport`] make all of this deterministically
+//! testable: scripted worker panics, dropped TCP peers, corrupted
+//! checkpoints, and a real `serve-worker --fail-after-epochs N` process
+//! death.
+//!
+//! [`LdaState`]: crate::lda::LdaState
+//! [`TrainObserver`]: crate::coordinator::TrainObserver
+//! [`TrainEngine`]: crate::coordinator::TrainEngine
+
+pub mod fault;
+pub mod snapshot;
+pub mod supervisor;
+pub mod writer;
+
+pub use fault::{FaultPlan, FaultTransport};
+pub use snapshot::{ManifestEntry, SnapshotStore};
+pub use supervisor::Supervisor;
+pub use writer::{AsyncCheckpointer, CheckpointWriter, SnapshotSink};

@@ -1,0 +1,240 @@
+//! The on-disk side of the checkpoint service: a directory of FNLDA001
+//! snapshots plus a MANIFEST that records `(epoch, file, fingerprint)`
+//! for each retained one.
+//!
+//! Layout of a checkpoint directory:
+//!
+//! ```text
+//! ckpts/
+//!   MANIFEST            epoch <TAB> fnv1a-fingerprint <TAB> file, one per line
+//!   ckpt-000000.fnlda   FNLDA001 snapshot of epoch 0 (the init baseline)
+//!   ckpt-000003.fnlda   ...
+//! ```
+//!
+//! Both the snapshot files and the MANIFEST are written atomically
+//! (tmp + fsync + rename, see [`crate::util::fsio`]), and the recovery
+//! read path re-fingerprints a file before trusting it — so a torn or
+//! corrupted checkpoint is *skipped with a named warning*, never loaded.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::corpus::Corpus;
+use crate::lda::checkpoint;
+use crate::lda::LdaState;
+use crate::util::fsio::{fnv1a_of_file, AtomicFile};
+
+const MANIFEST: &str = "MANIFEST";
+
+/// One retained checkpoint, as the MANIFEST records it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub epoch: usize,
+    /// snapshot file name, relative to the store directory
+    pub file: String,
+    /// FNV-1a fingerprint of the file bytes as committed
+    pub fingerprint: u64,
+}
+
+/// Keep-last-K checkpoint store over one directory.
+///
+/// All mutation goes through [`save`](SnapshotStore::save), which the
+/// background [`CheckpointWriter`](super::CheckpointWriter) thread calls;
+/// the `Mutex` makes the occasional synchronous save (the epoch-0
+/// baseline) safe against it.
+pub struct SnapshotStore {
+    dir: PathBuf,
+    keep: usize,
+    /// manifest entries, sorted by epoch ascending
+    entries: Mutex<Vec<ManifestEntry>>,
+    /// test hook: artificial latency added to every save, used to prove
+    /// the epoch loop is decoupled from disk speed
+    write_delay: Option<Duration>,
+}
+
+impl SnapshotStore {
+    /// Open (or create) a checkpoint directory, reading back any existing
+    /// MANIFEST so a restarted coordinator resumes the retention chain.
+    pub fn open(dir: &Path, keep: usize) -> Result<SnapshotStore, String> {
+        if keep == 0 {
+            return Err("checkpoint retention (--keep) must be at least 1".into());
+        }
+        std::fs::create_dir_all(dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
+        let entries = read_manifest(&dir.join(MANIFEST))?;
+        Ok(SnapshotStore {
+            dir: dir.to_path_buf(),
+            keep,
+            entries: Mutex::new(entries),
+            write_delay: None,
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Test hook: make every save sleep first (see the non-blocking-offer
+    /// test in `tests/resilience.rs`).
+    #[doc(hidden)]
+    pub fn set_write_delay(&mut self, delay: Duration) {
+        self.write_delay = Some(delay);
+    }
+
+    /// Persist `state` as the epoch-`epoch` snapshot: atomic file write,
+    /// manifest update, then retention pruning.  Re-saving an epoch
+    /// overwrites it (recovery can legitimately re-reach the same epoch).
+    pub fn save(&self, epoch: usize, state: &LdaState) -> Result<(), String> {
+        if let Some(d) = self.write_delay {
+            std::thread::sleep(d);
+        }
+        let file = format!("ckpt-{epoch:06}.fnlda");
+        let fingerprint = checkpoint::save_fingerprinted(state, &self.dir.join(&file))?;
+        let mut entries = self.entries.lock().unwrap();
+        entries.retain(|e| e.epoch != epoch);
+        entries.push(ManifestEntry { epoch, file, fingerprint });
+        entries.sort_by_key(|e| e.epoch);
+        while entries.len() > self.keep {
+            let old = entries.remove(0);
+            let _ = std::fs::remove_file(self.dir.join(&old.file));
+        }
+        write_manifest(&self.dir.join(MANIFEST), &entries)
+    }
+
+    /// Retained checkpoints, oldest → newest.
+    pub fn entries(&self) -> Vec<ManifestEntry> {
+        self.entries.lock().unwrap().clone()
+    }
+
+    /// The recovery read path: load the newest checkpoint that passes
+    /// both the fingerprint re-check and the full FNLDA001 count-rebuild
+    /// consistency load, skipping unusable entries with a named warning.
+    /// Errors only when *no* retained checkpoint is usable.
+    pub fn load_latest_valid(&self, corpus: &Corpus) -> Result<(usize, LdaState), String> {
+        for e in self.entries().iter().rev() {
+            let path = self.dir.join(&e.file);
+            match verify_and_load(&path, e.fingerprint, corpus) {
+                Ok(state) => return Ok((e.epoch, state)),
+                Err(why) => eprintln!(
+                    "[resilience] checkpoint {} unusable ({why}); trying an older one",
+                    path.display()
+                ),
+            }
+        }
+        Err(format!("no valid checkpoint under {}", self.dir.display()))
+    }
+
+    /// Fault injection: truncate the newest retained snapshot file,
+    /// simulating corruption that happened after the atomic rename (bad
+    /// disk, cosmic ray, hostile test).
+    #[doc(hidden)]
+    pub fn corrupt_latest(&self) -> Result<(), String> {
+        let entries = self.entries();
+        let Some(e) = entries.last() else {
+            return Err("no checkpoint to corrupt".into());
+        };
+        let path = self.dir.join(&e.file);
+        let len = std::fs::metadata(&path).map_err(|e| e.to_string())?.len();
+        let f = std::fs::OpenOptions::new().write(true).open(&path).map_err(|e| e.to_string())?;
+        f.set_len(len / 2).map_err(|e| e.to_string())
+    }
+}
+
+fn verify_and_load(path: &Path, want: u64, corpus: &Corpus) -> Result<LdaState, String> {
+    let got = fnv1a_of_file(path)?;
+    if got != want {
+        return Err(format!(
+            "fingerprint mismatch: manifest says {want:016x}, file is {got:016x} — torn write?"
+        ));
+    }
+    checkpoint::load(path, corpus)
+}
+
+/// Parse the MANIFEST; a missing file is an empty store, and malformed
+/// lines are skipped with a warning (the recovery path must not die on
+/// what it is recovering *from*).
+fn read_manifest(path: &Path) -> Result<Vec<ManifestEntry>, String> {
+    if !path.exists() {
+        return Ok(Vec::new());
+    }
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let mut entries = Vec::new();
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut cols = line.splitn(3, '\t');
+        let parsed = (|| {
+            let epoch = cols.next()?.parse::<usize>().ok()?;
+            let fingerprint = u64::from_str_radix(cols.next()?, 16).ok()?;
+            let file = cols.next()?.to_string();
+            Some(ManifestEntry { epoch, file, fingerprint })
+        })();
+        match parsed {
+            Some(e) => entries.push(e),
+            None => eprintln!("[resilience] warning: skipping malformed MANIFEST line: {line:?}"),
+        }
+    }
+    entries.sort_by_key(|e| e.epoch);
+    Ok(entries)
+}
+
+fn write_manifest(path: &Path, entries: &[ManifestEntry]) -> Result<(), String> {
+    use std::io::Write;
+    let mut w = AtomicFile::create(path)?;
+    for e in entries {
+        writeln!(w, "{}\t{:016x}\t{}", e.epoch, e.fingerprint, e.file).map_err(|e| e.to_string())?;
+    }
+    w.commit().map(|_| ())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::preset;
+    use crate::lda::Hyper;
+    use crate::util::rng::Pcg32;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("fnomad_snapshot_tests").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn save_load_roundtrip_and_manifest_survives_reopen() {
+        let dir = tmpdir("roundtrip");
+        let corpus = preset("tiny").unwrap();
+        let mut rng = Pcg32::seeded(3);
+        let state = LdaState::init_random(&corpus, Hyper::paper_default(8), &mut rng);
+        let store = SnapshotStore::open(&dir, 3).unwrap();
+        store.save(7, &state).unwrap();
+        // a fresh handle reads the manifest back from disk
+        let reopened = SnapshotStore::open(&dir, 3).unwrap();
+        let (epoch, loaded) = reopened.load_latest_valid(&corpus).unwrap();
+        assert_eq!(epoch, 7);
+        assert_eq!(loaded.z, state.z);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn retention_prunes_files_and_manifest_together() {
+        let dir = tmpdir("retention");
+        let corpus = preset("tiny").unwrap();
+        let mut rng = Pcg32::seeded(4);
+        let state = LdaState::init_random(&corpus, Hyper::paper_default(8), &mut rng);
+        let store = SnapshotStore::open(&dir, 2).unwrap();
+        for epoch in 1..=5 {
+            store.save(epoch, &state).unwrap();
+        }
+        let epochs: Vec<usize> = store.entries().iter().map(|e| e.epoch).collect();
+        assert_eq!(epochs, vec![4, 5]);
+        let snapshots = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".fnlda"))
+            .count();
+        assert_eq!(snapshots, 2, "pruned snapshot files must be deleted");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,292 @@
+//! Supervised ring recovery: the [`Supervisor`] engine that keeps a
+//! distributed training run alive through worker loss.
+//!
+//! The supervisor sits between the coordinator's driver loop and the
+//! Nomad ring, presenting the infallible [`TrainEngine`] surface while
+//! driving the ring's fallible `try_run_epoch` / `try_gather_state`
+//! twins underneath.  When one of them reports a ring failure it:
+//!
+//! 1. tears down whatever is left of the broken ring;
+//! 2. flushes the async checkpoint writer so queued snapshots land;
+//! 3. reloads the latest *valid* snapshot from the [`SnapshotStore`]
+//!    (fingerprint-verified — a torn checkpoint is skipped, not loaded);
+//! 4. probes the configured remote workers and keeps only the reachable
+//!    survivors — `try_from_state` then recomputes the token-balanced
+//!    [`Partition`](crate::corpus::Partition) over the remaining slots
+//!    and re-ships each its corpus slice via the `Init` machinery;
+//! 5. re-runs the lost epochs up to where the driver believes it is.
+//!
+//! Restarts are bounded (`max_restarts`) with exponential backoff; once
+//! the budget is spent the supervisor gives up with the original named
+//! ring error.  Because the init state is persisted synchronously as the
+//! epoch-0 baseline, recovery always has *something* valid to reload.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::{Clock, EpochReport, TrainConfig, TrainEngine};
+use crate::corpus::Corpus;
+use crate::lda::LdaState;
+use crate::nomad::token::Msg;
+use crate::nomad::{NomadConfig, NomadRuntime};
+
+use super::fault::FaultPlan;
+use super::snapshot::SnapshotStore;
+use super::writer::SnapshotSink;
+
+/// First-restart backoff; doubles per consecutive restart.
+const BACKOFF_BASE: Duration = Duration::from_millis(50);
+
+/// Backoff ceiling — recovery should retry within human patience.
+const BACKOFF_CAP: Duration = Duration::from_secs(2);
+
+/// Connect timeout when probing which remote workers survived.
+const PROBE_TIMEOUT: Duration = Duration::from_millis(500);
+
+/// A [`TrainEngine`] wrapping the Nomad ring with checkpoint-based
+/// restart.  Built by the driver when `--checkpoint-dir` is set on a
+/// nomad run; `--max-restarts` bounds how many ring failures it absorbs.
+pub struct Supervisor<'c> {
+    corpus: &'c Corpus,
+    workers: usize,
+    remote: Vec<String>,
+    seed: u64,
+    max_restarts: usize,
+    store: Arc<SnapshotStore>,
+    sink: SnapshotSink,
+    fault: FaultPlan,
+    /// the ring; `None` only transiently inside recovery
+    inner: Option<NomadRuntime>,
+    /// absolute epochs whose results the driver has consumed
+    done: usize,
+    /// absolute epoch of the inner ring's current state (trails `done`
+    /// while re-running lost epochs after a restart)
+    inner_epoch: usize,
+    restarts: usize,
+}
+
+impl<'c> Supervisor<'c> {
+    /// Spawn the supervised ring.  The init state is persisted
+    /// synchronously as the epoch-0 baseline first: the ring may die
+    /// before the async writer lands any snapshot, and recovery must
+    /// never find an empty store.
+    pub fn new(
+        corpus: &'c Corpus,
+        init: &LdaState,
+        cfg: &TrainConfig,
+        store: Arc<SnapshotStore>,
+        sink: SnapshotSink,
+    ) -> Result<Supervisor<'c>, String> {
+        store.save(0, init)?;
+        let rt_cfg = NomadConfig {
+            workers: cfg.workers,
+            seed: cfg.seed,
+            remote: cfg.remote.clone(),
+        };
+        let inner = NomadRuntime::try_from_state(corpus, init, rt_cfg)?;
+        Ok(Supervisor {
+            corpus,
+            workers: cfg.workers,
+            remote: cfg.remote.clone(),
+            seed: cfg.seed,
+            max_restarts: cfg.max_restarts,
+            store,
+            sink,
+            fault: cfg.fault.clone(),
+            inner: Some(inner),
+            done: 0,
+            inner_epoch: 0,
+            restarts: 0,
+        })
+    }
+
+    /// Restarts performed so far (telemetry / tests).
+    pub fn restarts(&self) -> usize {
+        self.restarts
+    }
+
+    /// Fire any scripted fault due at the epoch about to run, consuming
+    /// it so the respawned ring is healthy.
+    fn inject_faults(&mut self, epoch: usize) {
+        let ring = self.inner.as_ref().expect("ring present");
+        if let Some((slot, at)) = self.fault.panic_worker {
+            if at == epoch {
+                self.fault.panic_worker = None;
+                // arity-mismatched SetS: the worker's copy_from_slice panics
+                ring.inject_raw(slot, Msg::SetS(Vec::new()));
+            }
+        }
+        if let Some((slot, at)) = self.fault.drop_peer {
+            if at == epoch {
+                self.fault.drop_peer = None;
+                ring.kill_slot(slot);
+            }
+        }
+    }
+
+    /// Run epochs until the inner ring has reached absolute epoch
+    /// `target`, recovering across failures; the report accumulates
+    /// every epoch actually executed (including re-runs) so throughput
+    /// numbers stay honest.
+    fn advance_to(&mut self, target: usize) -> Result<EpochReport, String> {
+        let mut acc = EpochReport::default();
+        while self.inner_epoch < target {
+            self.inject_faults(self.inner_epoch + 1);
+            match self.inner.as_mut().expect("ring present").try_run_epoch() {
+                Ok(report) => {
+                    self.inner_epoch += 1;
+                    acc.processed += report.processed;
+                    acc.secs += report.secs;
+                    acc.msgs += report.msgs;
+                }
+                Err(why) => self.recover(&why)?,
+            }
+        }
+        Ok(acc)
+    }
+
+    /// The restart loop: teardown, flush, reload, re-spawn.  `Err` only
+    /// when the restart budget is exhausted (carrying the original ring
+    /// failure) or no usable checkpoint / worker remains.
+    fn recover(&mut self, why: &str) -> Result<(), String> {
+        if let Some(mut broken) = self.inner.take() {
+            broken.shutdown();
+        }
+        // land queued snapshots before choosing a reload point
+        self.sink.flush();
+        if self.fault.corrupt_latest_checkpoint {
+            self.fault.corrupt_latest_checkpoint = false;
+            let _ = self.store.corrupt_latest();
+        }
+        loop {
+            if self.restarts >= self.max_restarts {
+                return Err(format!(
+                    "giving up after {}/{} restarts: {why}",
+                    self.restarts, self.max_restarts
+                ));
+            }
+            self.restarts += 1;
+            let backoff = backoff_for(self.restarts);
+            // recovery narration prints regardless of --quiet: a run that
+            // silently lost and re-ran epochs would be a debugging trap
+            eprintln!(
+                "[resilience] ring failure: {why}; restart {}/{} after {backoff:?}",
+                self.restarts, self.max_restarts
+            );
+            std::thread::sleep(backoff);
+            match self.respawn() {
+                Ok(epoch) => {
+                    let slots = self.inner.as_ref().expect("ring rebuilt").ring_size();
+                    eprintln!("recovered: restarted from epoch {epoch} ({slots} ring slots)");
+                    self.inner_epoch = epoch;
+                    return Ok(());
+                }
+                Err(e) => eprintln!("[resilience] restart failed: {e}"),
+            }
+        }
+    }
+
+    /// One respawn attempt: latest valid checkpoint × surviving workers.
+    fn respawn(&mut self) -> Result<usize, String> {
+        let (epoch, state) = self.store.load_latest_valid(self.corpus)?;
+        let surviving: Vec<String> =
+            self.remote.iter().filter(|addr| probe(addr)).cloned().collect();
+        for lost in self.remote.iter().filter(|a| !surviving.contains(a)) {
+            eprintln!("[resilience] dropping unreachable worker {lost}");
+        }
+        if self.workers == 0 && surviving.is_empty() {
+            return Err("no local threads and no reachable remote workers".into());
+        }
+        let rt_cfg = NomadConfig {
+            workers: self.workers,
+            seed: self.seed,
+            remote: surviving.clone(),
+        };
+        // try_from_state repartitions the CSR doc ranges over the new slot
+        // count and ships each remote its rebased corpus slice
+        self.inner = Some(NomadRuntime::try_from_state(self.corpus, &state, rt_cfg)?);
+        self.remote = surviving;
+        Ok(epoch)
+    }
+}
+
+impl TrainEngine for Supervisor<'_> {
+    fn run_epoch(&mut self) -> EpochReport {
+        let target = self.done + 1;
+        let report = self
+            .advance_to(target)
+            .unwrap_or_else(|e| panic!("nomad ring failure: {e}"));
+        self.done = target;
+        report
+    }
+
+    fn state_snapshot(&mut self, corpus: &Corpus) -> LdaState {
+        loop {
+            match self.inner.as_mut().expect("ring present").try_gather_state(corpus) {
+                Ok(state) => return state,
+                Err(why) => {
+                    let caught_up = self
+                        .recover(&why)
+                        .and_then(|()| self.advance_to(self.done).map(|_| ()));
+                    if let Err(e) = caught_up {
+                        panic!("nomad ring failure: {e}");
+                    }
+                }
+            }
+        }
+    }
+
+    fn clock(&self) -> Clock {
+        Clock::Wall
+    }
+
+    fn shutdown(&mut self) {
+        if let Some(ring) = self.inner.as_mut() {
+            ring.shutdown();
+        }
+    }
+}
+
+fn backoff_for(attempt: usize) -> Duration {
+    let factor = 1u32 << (attempt.saturating_sub(1)).min(16) as u32;
+    (BACKOFF_BASE * factor).min(BACKOFF_CAP)
+}
+
+/// Does `addr` still accept TCP connections?  The probe connection is
+/// dropped immediately; `serve-worker` logs it as a failed handshake and
+/// rebinds, which is harmless.
+fn probe(addr: &str) -> bool {
+    use std::net::ToSocketAddrs;
+    let Ok(mut resolved) = addr.to_socket_addrs() else {
+        return false;
+    };
+    let Some(sock) = resolved.next() else {
+        return false;
+    };
+    std::net::TcpStream::connect_timeout(&sock, PROBE_TIMEOUT).is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        assert_eq!(backoff_for(1), Duration::from_millis(50));
+        assert_eq!(backoff_for(2), Duration::from_millis(100));
+        assert_eq!(backoff_for(3), Duration::from_millis(200));
+        assert_eq!(backoff_for(100), BACKOFF_CAP);
+    }
+
+    #[test]
+    fn probe_rejects_dead_and_bogus_addresses() {
+        assert!(!probe("definitely-not-a-host:1"));
+        // a bound-then-dropped port is very unlikely to be re-bound between
+        // the drop and the probe
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        assert!(probe(&addr));
+        drop(listener);
+        assert!(!probe(&addr));
+    }
+}

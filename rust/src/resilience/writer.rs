@@ -1,0 +1,160 @@
+//! The async half of the checkpoint service: a background writer thread
+//! fed over a bounded channel, so checkpointing never stalls the epoch
+//! loop.
+//!
+//! The contract the supervisor and tests rely on:
+//!
+//! * [`SnapshotSink::offer`] **never blocks** — if the writer is still
+//!   busy with an earlier snapshot, the new one is skipped (a fresher one
+//!   comes at the next cadence point);
+//! * [`SnapshotSink::flush`] blocks until every snapshot queued so far is
+//!   durably on disk — the recovery path calls it before choosing which
+//!   checkpoint to reload;
+//! * [`CheckpointWriter::finish`] drains the queue and joins the thread,
+//!   so a clean training exit always persists its final snapshot.
+
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::coordinator::{EvalPoint, TrainObserver};
+use crate::lda::LdaState;
+
+use super::snapshot::SnapshotStore;
+
+/// A queued snapshot can sit behind one in-flight write without being
+/// dropped; beyond that, freshness wins over completeness.
+const QUEUE_DEPTH: usize = 2;
+
+enum Job {
+    Save { epoch: usize, state: Box<LdaState> },
+    /// reply once every job queued before this one has been processed
+    Flush(Sender<()>),
+    Stop,
+}
+
+/// Cloneable, non-blocking handle feeding the writer thread.
+#[derive(Clone)]
+pub struct SnapshotSink {
+    tx: SyncSender<Job>,
+}
+
+impl SnapshotSink {
+    /// Queue a snapshot without blocking.  Returns whether it was
+    /// accepted; `false` means the bounded queue was full (writer busy)
+    /// and the snapshot was dropped.
+    pub fn offer(&self, epoch: usize, state: LdaState) -> bool {
+        !matches!(
+            self.tx.try_send(Job::Save { epoch, state: Box::new(state) }),
+            Err(TrySendError::Full(_) | TrySendError::Disconnected(_))
+        )
+    }
+
+    /// Block until everything queued so far is on disk.
+    pub fn flush(&self) {
+        let (done_tx, done_rx) = std::sync::mpsc::channel();
+        if self.tx.send(Job::Flush(done_tx)).is_ok() {
+            let _ = done_rx.recv();
+        }
+    }
+}
+
+/// Owner of the background writer thread.
+pub struct CheckpointWriter {
+    sink: SnapshotSink,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl CheckpointWriter {
+    /// Spawn the writer over `store`.
+    pub fn spawn(store: Arc<SnapshotStore>, quiet: bool) -> CheckpointWriter {
+        let (tx, rx) = sync_channel::<Job>(QUEUE_DEPTH);
+        let handle = std::thread::Builder::new()
+            .name("ckpt-writer".into())
+            .spawn(move || writer_loop(&store, &rx, quiet))
+            .expect("spawn checkpoint writer thread");
+        CheckpointWriter { sink: SnapshotSink { tx }, handle: Some(handle) }
+    }
+
+    pub fn sink(&self) -> SnapshotSink {
+        self.sink.clone()
+    }
+
+    /// Drain the queue, stop the thread, and join it.
+    pub fn finish(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        if let Some(handle) = self.handle.take() {
+            let _ = self.sink.tx.send(Job::Stop);
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for CheckpointWriter {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn writer_loop(store: &SnapshotStore, rx: &Receiver<Job>, quiet: bool) {
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Save { epoch, state } => match store.save(epoch, &state) {
+                Ok(()) => {
+                    if !quiet {
+                        eprintln!(
+                            "[resilience] checkpointed epoch {epoch} under {}",
+                            store.dir().display()
+                        );
+                    }
+                }
+                // a failed background save must not kill training; the
+                // cost is only an older recovery baseline
+                Err(e) => {
+                    eprintln!("[resilience] warning: checkpoint of epoch {epoch} failed: {e}");
+                }
+            },
+            Job::Flush(done) => {
+                let _ = done.send(());
+            }
+            Job::Stop => return,
+        }
+    }
+}
+
+/// [`TrainObserver`] that feeds evaluation-point states to the writer.
+///
+/// With `save_every == 0` every eval point is snapshotted (recovery
+/// granularity = eval cadence); otherwise a snapshot is queued every
+/// `save_every` epochs, matching the single-file `Checkpointer` policy.
+pub struct AsyncCheckpointer {
+    sink: SnapshotSink,
+    save_every: usize,
+    last_queued: Option<usize>,
+    quiet: bool,
+}
+
+impl AsyncCheckpointer {
+    pub fn new(sink: SnapshotSink, save_every: usize, quiet: bool) -> AsyncCheckpointer {
+        AsyncCheckpointer { sink, save_every, last_queued: None, quiet }
+    }
+}
+
+impl TrainObserver for AsyncCheckpointer {
+    fn on_eval(&mut self, point: &EvalPoint<'_>) -> Result<(), String> {
+        let due = self.save_every == 0
+            || point.epoch >= self.last_queued.unwrap_or(0) + self.save_every;
+        if !due {
+            return Ok(());
+        }
+        if self.sink.offer(point.epoch, point.state.clone()) {
+            self.last_queued = Some(point.epoch);
+        } else if !self.quiet {
+            eprintln!("[resilience] writer busy; skipped snapshot of epoch {}", point.epoch);
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,202 @@
+//! Crash-safe file IO: write-to-temp + fsync + rename, with a streaming
+//! FNV-1a fingerprint of everything written.
+//!
+//! Every durable artifact in the repo (FNLDA001 checkpoints, the
+//! resilience MANIFEST) goes through [`AtomicFile`]: readers of the
+//! destination path see either the old complete file or the new complete
+//! file, never a torn prefix, because the only mutation of the
+//! destination is a same-directory `rename(2)`.  The fingerprint returned
+//! by [`AtomicFile::commit`] is what the resilience manifest records to
+//! detect corruption that happens *after* the atomic write (disk faults,
+//! deliberate fault injection).
+
+use std::fs::File;
+use std::io::{self, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// 64-bit FNV-1a streaming hasher (the same scheme `infer::model` uses
+/// for artifact fingerprints).
+pub struct Fnv1a(u64);
+
+impl Fnv1a {
+    pub fn new() -> Fnv1a {
+        Fnv1a(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv1a {
+    fn default() -> Fnv1a {
+        Fnv1a::new()
+    }
+}
+
+/// FNV-1a fingerprint of a file's current bytes (the verification side of
+/// [`AtomicFile::commit`]'s return value).
+pub fn fnv1a_of_file(path: &Path) -> Result<u64, String> {
+    let mut f = File::open(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let mut hash = Fnv1a::new();
+    let mut buf = [0u8; 64 * 1024];
+    loop {
+        let n = f.read(&mut buf).map_err(|e| format!("{}: {e}", path.display()))?;
+        if n == 0 {
+            return Ok(hash.finish());
+        }
+        hash.update(&buf[..n]);
+    }
+}
+
+/// Discriminator for temp names: two writers racing on the same
+/// destination (e.g. the async checkpoint writer and a synchronous
+/// epoch-0 baseline save) must not share a temp file.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A buffered writer whose content only reaches `dest` on [`commit`]:
+/// bytes land in a `<dest>.tmp-<pid>-<seq>` sibling, `commit` flushes,
+/// fsyncs, and renames it over `dest`, and dropping without committing
+/// removes the temp file.  All written bytes stream through an FNV-1a
+/// hash; `commit` returns the fingerprint.
+///
+/// [`commit`]: AtomicFile::commit
+pub struct AtomicFile {
+    dest: PathBuf,
+    tmp: PathBuf,
+    file: Option<BufWriter<File>>,
+    hash: Fnv1a,
+    committed: bool,
+}
+
+impl AtomicFile {
+    /// Open a temp sibling of `dest` for writing, creating parent
+    /// directories as needed.
+    pub fn create(dest: &Path) -> Result<AtomicFile, String> {
+        if let Some(dir) = dest.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
+            }
+        }
+        let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+        let mut tmp_name = dest.as_os_str().to_os_string();
+        tmp_name.push(format!(".tmp-{}-{seq}", std::process::id()));
+        let tmp = PathBuf::from(tmp_name);
+        let file = File::create(&tmp).map_err(|e| format!("{}: {e}", tmp.display()))?;
+        Ok(AtomicFile {
+            dest: dest.to_path_buf(),
+            tmp,
+            file: Some(BufWriter::new(file)),
+            hash: Fnv1a::new(),
+            committed: false,
+        })
+    }
+
+    /// Flush, fsync, and rename onto the destination.  Returns the
+    /// FNV-1a fingerprint of the committed bytes.
+    pub fn commit(mut self) -> Result<u64, String> {
+        let err = |e: io::Error| format!("{}: {e}", self.tmp.display());
+        let mut w = self.file.take().expect("commit called once");
+        w.flush().map_err(err)?;
+        let f = w.into_inner().map_err(|e| err(e.into_error()))?;
+        // durability order matters: the data must be on disk before the
+        // rename makes it reachable, or a crash could leave a complete-
+        // looking name pointing at unwritten blocks
+        f.sync_all().map_err(err)?;
+        drop(f);
+        std::fs::rename(&self.tmp, &self.dest)
+            .map_err(|e| format!("rename {} -> {}: {e}", self.tmp.display(), self.dest.display()))?;
+        // best-effort directory fsync: the rename itself is already
+        // atomic for live readers; this only narrows the power-loss window
+        if let Some(dir) = self.dest.parent() {
+            if !dir.as_os_str().is_empty() {
+                if let Ok(d) = File::open(dir) {
+                    let _ = d.sync_all();
+                }
+            }
+        }
+        self.committed = true;
+        Ok(self.hash.finish())
+    }
+}
+
+impl Write for AtomicFile {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let n = self.file.as_mut().expect("write before commit").write(buf)?;
+        self.hash.update(&buf[..n]);
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.file.as_mut().expect("flush before commit").flush()
+    }
+}
+
+impl Drop for AtomicFile {
+    fn drop(&mut self) {
+        if !self.committed {
+            drop(self.file.take());
+            let _ = std::fs::remove_file(&self.tmp);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("fnomad_fsio_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn commit_replaces_dest_and_fingerprints() {
+        let dest = tmp("commit.bin");
+        std::fs::write(&dest, b"old contents").unwrap();
+        let mut w = AtomicFile::create(&dest).unwrap();
+        w.write_all(b"new contents").unwrap();
+        let fp = w.commit().unwrap();
+        assert_eq!(std::fs::read(&dest).unwrap(), b"new contents");
+        assert_eq!(fp, fnv1a_of_file(&dest).unwrap());
+        let _ = std::fs::remove_file(&dest);
+    }
+
+    #[test]
+    fn drop_without_commit_leaves_dest_untouched() {
+        let dest = tmp("abort.bin");
+        std::fs::write(&dest, b"survives").unwrap();
+        {
+            let mut w = AtomicFile::create(&dest).unwrap();
+            w.write_all(b"half-written garbage").unwrap();
+            // dropped uncommitted: simulates a failure mid-write
+        }
+        assert_eq!(std::fs::read(&dest).unwrap(), b"survives");
+        // and no temp litter remains next to it
+        let dir = dest.parent().unwrap();
+        let litter: Vec<_> = std::fs::read_dir(dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().starts_with("abort.bin.tmp-"))
+            .collect();
+        assert!(litter.is_empty(), "uncommitted temp files left behind");
+        let _ = std::fs::remove_file(&dest);
+    }
+
+    #[test]
+    fn fnv1a_matches_known_vector() {
+        // standard FNV-1a test vector: "a" -> 0xaf63dc4c8601ec8c
+        let mut h = Fnv1a::new();
+        h.update(b"a");
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+    }
+}

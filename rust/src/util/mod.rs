@@ -8,10 +8,12 @@
 //! * [`codec`] — little-endian writers, the bounds-checked total-decoder
 //!   reader, and length-prefixed frame IO shared by every wire format.
 //! * [`metrics`] — timers + CSV series writers for the experiment curves.
+//! * [`fsio`] — crash-safe atomic file writes with FNV-1a fingerprints.
 
 pub mod bench;
 pub mod cli;
 pub mod codec;
+pub mod fsio;
 pub mod math;
 pub mod metrics;
 pub mod quickcheck;

@@ -20,7 +20,9 @@ use fnomad_lda::nomad::{NomadConfig, NomadRuntime};
 fn spawn_loopback_worker() -> (String, thread::JoinHandle<Result<(), String>>) {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
-    let handle = thread::spawn(move || serve(listener, &ServeOpts { once: true, quiet: true }));
+    let handle = thread::spawn(move || {
+        serve(listener, &ServeOpts { once: true, quiet: true, ..Default::default() })
+    });
     (addr, handle)
 }
 
