@@ -139,6 +139,11 @@ pub fn train_with(
     let ckpt_service = match &cfg.checkpoint_dir {
         Some(dir) => {
             let store = Arc::new(SnapshotStore::open(dir, cfg.keep)?);
+            // this run owns the directory now: checkpoints left by a
+            // previous run must not survive into its retention chain
+            // (recovery reloading another run's state would silently skip
+            // every epoch that run had already passed)
+            store.begin_run()?;
             let writer = CheckpointWriter::spawn(Arc::clone(&store), cfg.quiet);
             Some((store, writer))
         }

@@ -134,24 +134,28 @@ pub fn serve(listener: TcpListener, opts: &ServeOpts) -> Result<(), String> {
             eprintln!("[serve-worker] coordinator connected from {peer}");
         }
         if opts.once {
-            return match host_session(stream, opts.fail_after_epochs) {
-                Ok(slot) => {
+            match host_session(stream, opts.fail_after_epochs) {
+                // a liveness probe is not the single session --once serves
+                Ok(None) => continue,
+                Ok(Some(slot)) => {
                     if !opts.quiet {
                         eprintln!("[serve-worker] session done (ring slot {slot})");
                     }
-                    Ok(())
+                    return Ok(());
                 }
                 Err(e) => {
                     eprintln!("[serve-worker] session error: {e}");
-                    Err(e)
+                    return Err(e);
                 }
-            };
+            }
         }
         let quiet = opts.quiet;
         let fail_after = opts.fail_after_epochs;
         std::thread::spawn(move || {
             match host_session(stream, fail_after) {
-                Ok(slot) => {
+                // probes answer and hang up; no session ran, nothing to log
+                Ok(None) => return,
+                Ok(Some(slot)) => {
                     if !quiet {
                         eprintln!("[serve-worker] session done (ring slot {slot})");
                     }
@@ -166,8 +170,13 @@ pub fn serve(listener: TcpListener, opts: &ServeOpts) -> Result<(), String> {
 }
 
 /// One coordinator session: handshake, build the worker, run the ring
-/// loop.  Returns the slot id served.
-fn host_session(stream: TcpStream, fail_after_epochs: Option<u32>) -> Result<usize, String> {
+/// loop.  Returns the slot id served, or `None` when the connection was
+/// only a liveness probe ([`Frame::Ping`], answered before the
+/// handshake — no worker is built and no session state is consumed).
+fn host_session(
+    stream: TcpStream,
+    fail_after_epochs: Option<u32>,
+) -> Result<Option<usize>, String> {
     stream.set_nodelay(true).map_err(|e| e.to_string())?;
     // Init must arrive within the handshake deadline: a peer that
     // connects and goes silent may not park this single-session host
@@ -177,6 +186,10 @@ fn host_session(stream: TcpStream, fail_after_epochs: Option<u32>) -> Result<usi
     let mut writer = BufWriter::new(stream);
     let init = match read_frame(&mut reader) {
         Ok(Frame::Init(init)) => init,
+        Ok(Frame::Ping) => {
+            write_frame(&mut writer, &Frame::Pong)?;
+            return Ok(None);
+        }
         Ok(other) => {
             let e = format!("handshake must start with Init, got {other:?}");
             let _ = write_frame(&mut writer, &Frame::Err(e.clone()));
@@ -198,7 +211,7 @@ fn host_session(stream: TcpStream, fail_after_epochs: Option<u32>) -> Result<usi
                 Some(n) => run_worker(state, FaultTransport::new(link, n))?,
                 None => run_worker(state, link)?,
             }
-            Ok(slot)
+            Ok(Some(slot))
         }
         Err(e) => {
             let e = format!("invalid Init for ring slot {slot}: {e}");
@@ -444,6 +457,28 @@ mod tests {
         buf.extend_from_slice(&[0; 16]);
         let err = read_frame(&mut &buf[..]).unwrap_err();
         assert!(err.contains("cap"), "unhelpful error: {err}");
+    }
+
+    /// A `Ping` must be answered before the `Init` handshake and must not
+    /// consume a `--once` host's single session — the supervisor's
+    /// recovery probe depends on both.
+    #[test]
+    fn ping_is_answered_without_consuming_a_session() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let _ = serve(listener, &ServeOpts { once: true, quiet: true, ..Default::default() });
+        });
+        // two probes in a row: if the first consumed the --once session,
+        // the second connect/read would fail
+        for _ in 0..2 {
+            let stream = TcpStream::connect(addr).unwrap();
+            stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            let mut reader = BufReader::new(clone_stream(&stream).unwrap());
+            let mut writer = BufWriter::new(stream);
+            write_frame(&mut writer, &Frame::Ping).unwrap();
+            assert_eq!(read_frame(&mut reader).unwrap(), Frame::Pong);
+        }
     }
 
     #[test]

@@ -38,6 +38,12 @@ pub enum Frame {
     Reply(Reply),
     /// either direction: the session is broken; human-readable reason
     Err(String),
+    /// coordinator → worker: liveness probe (recovery asks "are you
+    /// still there?" without opening a session)
+    Ping,
+    /// worker → coordinator: answer to [`Frame::Ping`], sent before the
+    /// handshake so probing is cheap and never spawns a worker
+    Pong,
 }
 
 /// Everything a remote worker needs to become ring slot `worker_id`: its
@@ -75,7 +81,7 @@ const INIT_MAGIC: u32 = 0x464E_4D44;
 /// agree on (e.g. [`super::runtime::S_CIRCULATIONS`]), so coordinator /
 /// `serve-worker` binary skew is a named error, not a confusing decode
 /// failure or a silent divergence.
-pub const WIRE_VERSION: u32 = 1;
+pub const WIRE_VERSION: u32 = 2;
 
 const TAG_INIT: u8 = 1;
 const TAG_INIT_OK: u8 = 2;
@@ -83,6 +89,8 @@ const TAG_RING: u8 = 3;
 const TAG_FORWARD: u8 = 4;
 const TAG_REPLY: u8 = 5;
 const TAG_ERR: u8 = 6;
+const TAG_PING: u8 = 7;
+const TAG_PONG: u8 = 8;
 
 const MSG_WORD: u8 = 1;
 const MSG_GLOBAL: u8 = 2;
@@ -223,6 +231,8 @@ pub fn encode_frame(frame: &Frame) -> Vec<u8> {
             out.push(TAG_ERR);
             put_bytes(&mut out, msg.as_bytes());
         }
+        Frame::Ping => out.push(TAG_PING),
+        Frame::Pong => out.push(TAG_PONG),
     }
     out
 }
@@ -348,6 +358,8 @@ pub fn decode_frame(buf: &[u8]) -> Result<Frame, String> {
         TAG_FORWARD => Frame::Forward(get_msg(&mut cur)?),
         TAG_REPLY => Frame::Reply(get_reply(&mut cur)?),
         TAG_ERR => Frame::Err(cur.string()?),
+        TAG_PING => Frame::Ping,
+        TAG_PONG => Frame::Pong,
         tag => return Err(format!("unknown frame tag {tag}")),
     };
     cur.finish()?;
@@ -438,6 +450,8 @@ mod tests {
     fn every_plain_variant_roundtrips() {
         for frame in [
             Frame::InitOk,
+            Frame::Ping,
+            Frame::Pong,
             Frame::Ring(Msg::SyncS),
             Frame::Ring(Msg::ReportDocs),
             Frame::Ring(Msg::Stop),

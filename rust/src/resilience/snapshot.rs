@@ -55,7 +55,9 @@ pub struct SnapshotStore {
 
 impl SnapshotStore {
     /// Open (or create) a checkpoint directory, reading back any existing
-    /// MANIFEST so a restarted coordinator resumes the retention chain.
+    /// MANIFEST.  Entries read back this way belong to whichever run wrote
+    /// them — a *new* training run over the same directory must call
+    /// [`begin_run`](SnapshotStore::begin_run) before its first save.
     pub fn open(dir: &Path, keep: usize) -> Result<SnapshotStore, String> {
         if keep == 0 {
             return Err("checkpoint retention (--keep) must be at least 1".into());
@@ -74,6 +76,29 @@ impl SnapshotStore {
         &self.dir
     }
 
+    /// Mark the start of a fresh training run: every entry inherited from
+    /// a previous run's MANIFEST is discarded — snapshot files deleted,
+    /// manifest rewritten empty.  Without this, reusing a checkpoint
+    /// directory would (a) prune the new run's epoch-0 baseline against
+    /// the old run's higher epochs and (b) let recovery reload a stale
+    /// snapshot from a different run/seed and silently skip the epochs it
+    /// believes already ran.  A no-op on an empty store.
+    pub fn begin_run(&self) -> Result<(), String> {
+        let mut entries = self.entries.lock().unwrap();
+        if entries.is_empty() {
+            return Ok(());
+        }
+        eprintln!(
+            "[resilience] discarding {} checkpoint(s) left under {} by a previous run",
+            entries.len(),
+            self.dir.display()
+        );
+        for e in entries.drain(..) {
+            let _ = std::fs::remove_file(self.dir.join(&e.file));
+        }
+        write_manifest(&self.dir.join(MANIFEST), &entries)
+    }
+
     /// Test hook: make every save sleep first (see the non-blocking-offer
     /// test in `tests/resilience.rs`).
     #[doc(hidden)]
@@ -85,12 +110,15 @@ impl SnapshotStore {
     /// manifest update, then retention pruning.  Re-saving an epoch
     /// overwrites it (recovery can legitimately re-reach the same epoch).
     pub fn save(&self, epoch: usize, state: &LdaState) -> Result<(), String> {
+        let file = format!("ckpt-{epoch:06}.fnlda");
+        // the lock covers the file write *and* the manifest update: two
+        // concurrent saves of the same epoch must not be able to commit
+        // one writer's file under the other writer's fingerprint
+        let mut entries = self.entries.lock().unwrap();
         if let Some(d) = self.write_delay {
             std::thread::sleep(d);
         }
-        let file = format!("ckpt-{epoch:06}.fnlda");
         let fingerprint = checkpoint::save_fingerprinted(state, &self.dir.join(&file))?;
-        let mut entries = self.entries.lock().unwrap();
         entries.retain(|e| e.epoch != epoch);
         entries.push(ManifestEntry { epoch, file, fingerprint });
         entries.sort_by_key(|e| e.epoch);
@@ -106,13 +134,32 @@ impl SnapshotStore {
         self.entries.lock().unwrap().clone()
     }
 
-    /// The recovery read path: load the newest checkpoint that passes
-    /// both the fingerprint re-check and the full FNLDA001 count-rebuild
-    /// consistency load, skipping unusable entries with a named warning.
-    /// Errors only when *no* retained checkpoint is usable.
-    pub fn load_latest_valid(&self, corpus: &Corpus) -> Result<(usize, LdaState), String> {
+    /// The recovery read path: load the newest checkpoint at or below
+    /// `max_epoch` that passes both the fingerprint re-check and the full
+    /// FNLDA001 count-rebuild consistency load, skipping unusable entries
+    /// with a named warning.  Errors only when *no* retained checkpoint is
+    /// usable.
+    ///
+    /// `max_epoch` is the caller's notion of "now" (pass `usize::MAX` for
+    /// no bound): a snapshot from beyond it cannot belong to the current
+    /// run — loading one would make training skip the epochs in between —
+    /// so such entries are rejected, not trusted.
+    pub fn load_latest_valid(
+        &self,
+        corpus: &Corpus,
+        max_epoch: usize,
+    ) -> Result<(usize, LdaState), String> {
         for e in self.entries().iter().rev() {
             let path = self.dir.join(&e.file);
+            if e.epoch > max_epoch {
+                eprintln!(
+                    "[resilience] checkpoint {} is from epoch {} > current epoch {max_epoch} \
+                     (stale entry from another run?); skipping it",
+                    path.display(),
+                    e.epoch
+                );
+                continue;
+            }
             match verify_and_load(&path, e.fingerprint, corpus) {
                 Ok(state) => return Ok((e.epoch, state)),
                 Err(why) => eprintln!(
@@ -121,7 +168,10 @@ impl SnapshotStore {
                 ),
             }
         }
-        Err(format!("no valid checkpoint under {}", self.dir.display()))
+        Err(format!(
+            "no valid checkpoint at or below epoch {max_epoch} under {}",
+            self.dir.display()
+        ))
     }
 
     /// Fault injection: truncate the newest retained snapshot file,
@@ -211,9 +261,59 @@ mod tests {
         store.save(7, &state).unwrap();
         // a fresh handle reads the manifest back from disk
         let reopened = SnapshotStore::open(&dir, 3).unwrap();
-        let (epoch, loaded) = reopened.load_latest_valid(&corpus).unwrap();
+        let (epoch, loaded) = reopened.load_latest_valid(&corpus, usize::MAX).unwrap();
         assert_eq!(epoch, 7);
         assert_eq!(loaded.z, state.z);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn begin_run_discards_entries_left_by_a_previous_run() {
+        let dir = tmpdir("begin-run");
+        let corpus = preset("tiny").unwrap();
+        let mut rng = Pcg32::seeded(6);
+        let state = LdaState::init_random(&corpus, Hyper::paper_default(8), &mut rng);
+        let store = SnapshotStore::open(&dir, 2).unwrap();
+        store.save(4, &state).unwrap();
+        store.save(5, &state).unwrap();
+
+        // a new run over the same directory starts from a clean slate
+        let reopened = SnapshotStore::open(&dir, 2).unwrap();
+        reopened.begin_run().unwrap();
+        assert!(reopened.entries().is_empty(), "stale entries must be discarded");
+        assert!(reopened.load_latest_valid(&corpus, usize::MAX).is_err());
+        let leftovers = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".fnlda"))
+            .count();
+        assert_eq!(leftovers, 0, "stale snapshot files must be deleted");
+
+        // the new run's epoch-0 baseline is now the whole retention chain
+        // (it used to be pruned immediately against the old run's epochs)
+        reopened.save(0, &state).unwrap();
+        let epochs: Vec<usize> = reopened.entries().iter().map(|e| e.epoch).collect();
+        assert_eq!(epochs, vec![0]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_latest_valid_rejects_epochs_beyond_the_bound() {
+        let dir = tmpdir("epoch-bound");
+        let corpus = preset("tiny").unwrap();
+        let hyper = Hyper::paper_default(8);
+        let s1 = LdaState::init_random(&corpus, hyper, &mut Pcg32::seeded(1));
+        let s5 = LdaState::init_random(&corpus, hyper, &mut Pcg32::seeded(2));
+        let store = SnapshotStore::open(&dir, 3).unwrap();
+        store.save(1, &s1).unwrap();
+        store.save(5, &s5).unwrap();
+        // unbounded: the newest wins
+        assert_eq!(store.load_latest_valid(&corpus, usize::MAX).unwrap().0, 5);
+        // bounded below the newest: a too-new snapshot must not be trusted
+        let (epoch, loaded) = store.load_latest_valid(&corpus, 3).unwrap();
+        assert_eq!(epoch, 1);
+        assert_eq!(loaded.z, s1.z);
+        assert!(store.load_latest_valid(&corpus, 0).is_err());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

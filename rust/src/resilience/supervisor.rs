@@ -18,8 +18,11 @@
 //!
 //! Restarts are bounded (`max_restarts`) with exponential backoff; once
 //! the budget is spent the supervisor gives up with the original named
-//! ring error.  Because the init state is persisted synchronously as the
-//! epoch-0 baseline, recovery always has *something* valid to reload.
+//! ring error.  Construction first discards whatever a previous run left
+//! in the checkpoint store and then persists the init state synchronously
+//! as the epoch-0 baseline, so recovery always has *something* valid to
+//! reload — and only ever from *this* run (reloads are additionally
+//! bounded by the epoch the driver has consumed).
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -66,10 +69,12 @@ pub struct Supervisor<'c> {
 }
 
 impl<'c> Supervisor<'c> {
-    /// Spawn the supervised ring.  The init state is persisted
-    /// synchronously as the epoch-0 baseline first: the ring may die
-    /// before the async writer lands any snapshot, and recovery must
-    /// never find an empty store.
+    /// Spawn the supervised ring.  Any checkpoints a previous run left in
+    /// the store are discarded first ([`SnapshotStore::begin_run`]) —
+    /// recovery must never reload another run's state — and then the init
+    /// state is persisted synchronously as the epoch-0 baseline: the ring
+    /// may die before the async writer lands any snapshot, and recovery
+    /// must never find an empty store.
     pub fn new(
         corpus: &'c Corpus,
         init: &LdaState,
@@ -77,6 +82,7 @@ impl<'c> Supervisor<'c> {
         store: Arc<SnapshotStore>,
         sink: SnapshotSink,
     ) -> Result<Supervisor<'c>, String> {
+        store.begin_run()?;
         store.save(0, init)?;
         let rt_cfg = NomadConfig {
             workers: cfg.workers,
@@ -152,8 +158,14 @@ impl<'c> Supervisor<'c> {
         if let Some(mut broken) = self.inner.take() {
             broken.shutdown();
         }
-        // land queued snapshots before choosing a reload point
-        self.sink.flush();
+        // land queued snapshots before choosing a reload point; a dead
+        // writer cannot flush, so say what recovery is about to lose
+        if !self.sink.flush() {
+            eprintln!(
+                "[resilience] warning: checkpoint writer thread is gone; snapshots queued \
+                 since it exited were lost — recovering from what reached disk"
+            );
+        }
         if self.fault.corrupt_latest_checkpoint {
             self.fault.corrupt_latest_checkpoint = false;
             let _ = self.store.corrupt_latest();
@@ -187,8 +199,11 @@ impl<'c> Supervisor<'c> {
     }
 
     /// One respawn attempt: latest valid checkpoint × surviving workers.
+    /// The reload is bounded by `done`: every checkpoint this run wrote
+    /// came from a consumed eval point, so anything newer is a stale
+    /// entry from another run and must not be resumed from.
     fn respawn(&mut self) -> Result<usize, String> {
-        let (epoch, state) = self.store.load_latest_valid(self.corpus)?;
+        let (epoch, state) = self.store.load_latest_valid(self.corpus, self.done)?;
         let surviving: Vec<String> =
             self.remote.iter().filter(|addr| probe(addr)).cloned().collect();
         for lost in self.remote.iter().filter(|a| !surviving.contains(a)) {
@@ -252,18 +267,40 @@ fn backoff_for(attempt: usize) -> Duration {
     (BACKOFF_BASE * factor).min(BACKOFF_CAP)
 }
 
-/// Does `addr` still accept TCP connections?  The probe connection is
-/// dropped immediately; `serve-worker` logs it as a failed handshake and
-/// rebinds, which is harmless.
+/// Is a live `serve-worker` still at `addr`?  The probe connects, sends a
+/// [`Ping`](crate::nomad::wire::Frame::Ping) frame, and requires a
+/// [`Pong`](crate::nomad::wire::Frame::Pong) back within the deadline —
+/// the worker answers it *before* the `Init` handshake, so a probe never
+/// spawns a session thread on the worker host (and a random process
+/// squatting on the port does not pass for one).
 fn probe(addr: &str) -> bool {
+    use std::io::{BufReader, BufWriter};
     use std::net::ToSocketAddrs;
+
+    use crate::nomad::net::{read_frame, write_frame};
+    use crate::nomad::wire::Frame;
+
     let Ok(mut resolved) = addr.to_socket_addrs() else {
         return false;
     };
     let Some(sock) = resolved.next() else {
         return false;
     };
-    std::net::TcpStream::connect_timeout(&sock, PROBE_TIMEOUT).is_ok()
+    let Ok(stream) = std::net::TcpStream::connect_timeout(&sock, PROBE_TIMEOUT) else {
+        return false;
+    };
+    if stream.set_read_timeout(Some(PROBE_TIMEOUT)).is_err()
+        || stream.set_write_timeout(Some(PROBE_TIMEOUT)).is_err()
+    {
+        return false;
+    }
+    let Ok(clone) = stream.try_clone() else {
+        return false;
+    };
+    let mut reader = BufReader::new(clone);
+    let mut writer = BufWriter::new(stream);
+    write_frame(&mut writer, &Frame::Ping).is_ok()
+        && matches!(read_frame(&mut reader), Ok(Frame::Pong))
 }
 
 #[cfg(test)]
@@ -279,14 +316,35 @@ mod tests {
     }
 
     #[test]
-    fn probe_rejects_dead_and_bogus_addresses() {
-        assert!(!probe("definitely-not-a-host:1"));
-        // a bound-then-dropped port is very unlikely to be re-bound between
-        // the drop and the probe
+    fn probe_requires_a_pong_answering_worker() {
+        use std::net::ToSocketAddrs;
+
+        use crate::nomad::net::{read_frame, write_frame};
+        use crate::nomad::wire::Frame;
+
+        // NXDOMAIN-hijacking resolvers can resolve anything, so only
+        // assert the bogus-hostname case when resolution actually fails
+        // (.invalid is reserved by RFC 2606 and should never resolve)
+        let bogus = "definitely-not-a-host.invalid:1";
+        if bogus.to_socket_addrs().is_err() {
+            assert!(!probe(bogus));
+        }
+
         let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
-        assert!(probe(&addr));
-        drop(listener);
+        let responder = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+            let mut writer = std::io::BufWriter::new(stream);
+            match read_frame(&mut reader) {
+                Ok(Frame::Ping) => write_frame(&mut writer, &Frame::Pong).unwrap(),
+                other => panic!("probe must open with Ping, sent {other:?}"),
+            }
+        });
+        assert!(probe(&addr), "a Pong-answering worker must probe alive");
+        responder.join().unwrap();
+        // listener gone: connection refused — and even if another process
+        // re-bound the ephemeral port meanwhile, it would not speak Pong
         assert!(!probe(&addr));
     }
 }

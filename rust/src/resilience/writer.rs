@@ -9,7 +9,9 @@
 //!   comes at the next cadence point);
 //! * [`SnapshotSink::flush`] blocks until every snapshot queued so far is
 //!   durably on disk — the recovery path calls it before choosing which
-//!   checkpoint to reload;
+//!   checkpoint to reload — and reports a writer thread that is no longer
+//!   there to flush, so recovery knows queued snapshots were lost instead
+//!   of silently picking a stale reload point;
 //! * [`CheckpointWriter::finish`] drains the queue and joins the thread,
 //!   so a clean training exit always persists its final snapshot.
 
@@ -50,12 +52,14 @@ impl SnapshotSink {
         )
     }
 
-    /// Block until everything queued so far is on disk.
-    pub fn flush(&self) {
+    /// Block until everything queued so far is on disk.  Returns `false`
+    /// when the writer thread is gone (already stopped, or dead) — the
+    /// queued snapshots it would have flushed are lost, and callers
+    /// choosing a recovery reload point must not assume they landed.
+    #[must_use]
+    pub fn flush(&self) -> bool {
         let (done_tx, done_rx) = std::sync::mpsc::channel();
-        if self.tx.send(Job::Flush(done_tx)).is_ok() {
-            let _ = done_rx.recv();
-        }
+        self.tx.send(Job::Flush(done_tx)).is_ok() && done_rx.recv().is_ok()
     }
 }
 

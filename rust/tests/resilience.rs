@@ -76,17 +76,20 @@ fn snapshot_offer_never_blocks_on_disk() {
         "offer blocked on the (slow) disk: {:?}",
         t0.elapsed()
     );
-    sink.flush();
+    assert!(sink.flush(), "a live writer must acknowledge the flush");
     assert!(
         t0.elapsed() >= delay,
         "flush returned before the write finished: {:?}",
         t0.elapsed()
     );
     writer.finish();
+    // the writer thread is gone: flush must say so, not silently no-op
+    // (recovery reads this to know queued snapshots were lost)
+    assert!(!sink.flush(), "flush must report a dead writer");
 
     // what landed is the snapshot we offered
     let reopened = SnapshotStore::open(&dir, 2).unwrap();
-    let (epoch, loaded) = reopened.load_latest_valid(&corpus).unwrap();
+    let (epoch, loaded) = reopened.load_latest_valid(&corpus, usize::MAX).unwrap();
     assert_eq!(epoch, 1);
     assert_eq!(loaded.z, state.z);
     let _ = std::fs::remove_dir_all(&dir);
@@ -107,7 +110,7 @@ fn corrupt_latest_checkpoint_falls_back_to_previous() {
     store.save(1, &s1).unwrap();
     store.save(2, &s2).unwrap();
     store.corrupt_latest().unwrap();
-    let (epoch, loaded) = store.load_latest_valid(&corpus).unwrap();
+    let (epoch, loaded) = store.load_latest_valid(&corpus, usize::MAX).unwrap();
     assert_eq!(epoch, 1, "the torn epoch-2 snapshot must be skipped");
     assert_eq!(loaded.z, s1.z);
     let _ = std::fs::remove_dir_all(&dir);
@@ -129,6 +132,51 @@ fn recovery_survives_a_torn_latest_checkpoint() {
     assert_eq!(res.final_state.total_tokens() as usize, corpus.num_tokens());
     assert_eq!(res.ll_vs_iter.points.len(), 5);
     let _ = std::fs::remove_dir_all(cfg.checkpoint_dir.unwrap());
+}
+
+/// Regression: reusing a `--checkpoint-dir` from a previous run must not
+/// resurrect that run's snapshots.  Before `begin_run` + the epoch-bounded
+/// reload, run 2's recovery reloaded run 1's highest-epoch snapshot (a
+/// different topic count here, to make the leak observable), decided the
+/// lost epochs had "already run", and silently completed with the other
+/// run's model.
+#[test]
+fn reused_checkpoint_dir_cannot_resurrect_a_previous_run() {
+    let dir = tmpdir("reused-dir");
+    let corpus = preset("tiny").unwrap();
+    let base = |topics: usize, iters: usize| {
+        TrainConfig::preset("tiny")
+            .runtime(RuntimeKind::Nomad)
+            .workers(2)
+            .topics(topics)
+            .iters(iters)
+            .eval(EvalPolicy::Rust)
+            .quiet(true)
+            .checkpoint_dir(dir.clone())
+            .keep(2)
+            .max_restarts(2)
+    };
+    // run 1 fills the store with T=4 snapshots up to epoch 3
+    train(&base(4, 3)).unwrap();
+    assert!(
+        !SnapshotStore::open(&dir, 2).unwrap().entries().is_empty(),
+        "run 1 must leave retained snapshots for the reuse scenario"
+    );
+
+    // run 2 reuses the directory with T=8 and a worker panic at epoch 2
+    let cfg = base(8, 5).fault(FaultPlan { panic_worker: Some((1, 2)), ..Default::default() });
+    let res = train(&cfg).unwrap();
+    assert_eq!(res.final_state.hyper.t, 8, "recovery resurrected the previous run's model");
+    res.final_state.check_consistency(&corpus).unwrap();
+    assert_eq!(res.final_state.total_tokens() as usize, corpus.num_tokens());
+    assert_eq!(res.ll_vs_iter.points.len(), 6, "every requested epoch must actually run");
+
+    // and the store now holds only run-2 snapshots
+    let store = SnapshotStore::open(&dir, 2).unwrap();
+    assert!(store.entries().iter().all(|e| e.epoch <= 5));
+    let (_, newest) = store.load_latest_valid(&corpus, usize::MAX).unwrap();
+    assert_eq!(newest.hyper.t, 8);
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// A remote TCP slot is force-closed mid-run; the supervisor probes the
