@@ -125,7 +125,7 @@ fn main() {
             (0..20).map(|l| (l * n / 20, (l + 1) * n / 20)).collect();
         let naive_loads: Vec<usize> = naive
             .iter()
-            .map(|&(s, e)| big.doc_offsets[e] - big.doc_offsets[s])
+            .map(|&(s, e)| big.offsets()[e] - big.offsets()[s])
             .collect();
         let mean = naive_loads.iter().sum::<usize>() as f64 / naive_loads.len() as f64;
         let max = *naive_loads.iter().max().unwrap() as f64;

@@ -16,7 +16,7 @@ fn main() -> Result<(), String> {
     println!(
         "corpus: {} docs, {} vocab, {} tokens",
         corpus.num_docs(),
-        corpus.vocab,
+        corpus.vocab(),
         corpus.num_tokens()
     );
 
@@ -37,7 +37,7 @@ fn main() -> Result<(), String> {
     }
 
     // 4. inspect: top words per topic (ids only — synthetic corpus)
-    print!("{}", topics::render_topics(&state, &corpus.vocab_words, 6));
+    print!("{}", topics::render_topics(&state, corpus.vocab_words(), 6));
 
     // 5. invariants held throughout
     state.check_consistency(&corpus)?;

@@ -20,7 +20,7 @@ fn main() -> Result<(), String> {
     println!(
         "nytimes-sim: {} docs, {} vocab, {} tokens, T={topics}\n",
         corpus.num_docs(),
-        corpus.vocab,
+        corpus.vocab(),
         corpus.num_tokens()
     );
 

@@ -55,7 +55,7 @@ impl AdLda {
     pub fn from_state(corpus: &Corpus, state: LdaState, cfg: AdLdaConfig) -> Self {
         // offsets equality (not just doc count): under the flat layout a
         // doc-length mismatch would misindex z silently
-        assert_eq!(state.doc_offsets, corpus.doc_offsets, "init state / corpus mismatch");
+        assert_eq!(state.doc_offsets.as_slice(), corpus.offsets(), "init state / corpus mismatch");
         let hyper = state.hyper;
         // worker streams derive from a different stream id than the init
         // draws (0xAD1DA in `new`), so sampling never replays them
@@ -101,16 +101,17 @@ impl AdLda {
                 .collect();
             self.tree.refill(&base);
 
-            for doc in start..end {
+            let mut sweep = corpus.docs_in(start..end);
+            while let Some((doc, toks)) = sweep.next_doc() {
                 let support: Vec<u16> = self.state.ntd[doc].iter().map(|(t, _)| t).collect();
                 for &t in &support {
                     let q = (self.state.ntd[doc].get(t) as f64 + h.alpha)
                         / (nt_local[t as usize].max(0) as f64 + bb);
                     self.tree.set(t as usize, q);
                 }
-                let row = corpus.doc_offsets[doc];
-                for pos in 0..corpus.doc_len(doc) {
-                    let word = corpus.tokens[row + pos] as usize;
+                let row = self.state.doc_offsets[doc];
+                for (pos, &wtok) in toks.iter().enumerate() {
+                    let word = wtok as usize;
                     let old = self.state.z[row + pos];
                     self.state.ntd[doc].dec(old);
                     if nwt_local[word].get(old) > 0 {

@@ -201,8 +201,15 @@ impl FromStr for EvalPolicy {
 /// parse layer.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
-    /// corpus preset name (see [`crate::corpus::presets`])
+    /// corpus preset name (see [`crate::corpus::presets`]); ignored when
+    /// [`TrainConfig::corpus`] points at an `.fncorpus` file
     pub preset: String,
+    /// train out-of-core from this FNCP0001 file instead of a preset
+    pub corpus: Option<PathBuf>,
+    /// load the `.fncorpus` file fully into RAM instead of streaming it
+    pub corpus_ram: bool,
+    /// sliding read-window size in tokens for the streaming backend
+    pub corpus_window: usize,
     pub topics: usize,
     /// serial sweep variant (only [`RuntimeKind::Serial`] reads this)
     pub sampler: SamplerKind,
@@ -251,6 +258,9 @@ impl Default for TrainConfig {
     fn default() -> Self {
         TrainConfig {
             preset: "tiny".into(),
+            corpus: None,
+            corpus_ram: false,
+            corpus_window: crate::corpus::DEFAULT_WINDOW_TOKENS,
             topics: 128,
             sampler: SamplerKind::FLdaWord,
             runtime: RuntimeKind::Serial,
@@ -285,6 +295,21 @@ impl TrainConfig {
 
     pub fn topics(mut self, t: usize) -> Self {
         self.topics = t;
+        self
+    }
+
+    pub fn corpus(mut self, path: impl Into<PathBuf>) -> Self {
+        self.corpus = Some(path.into());
+        self
+    }
+
+    pub fn corpus_ram(mut self, in_ram: bool) -> Self {
+        self.corpus_ram = in_ram;
+        self
+    }
+
+    pub fn corpus_window(mut self, tokens: usize) -> Self {
+        self.corpus_window = tokens;
         self
     }
 
@@ -434,19 +459,38 @@ impl TrainConfig {
                 self.runtime
             ));
         }
+        if self.corpus_ram && self.corpus.is_none() {
+            return Err("--in-ram requires --corpus FILE.fncorpus".into());
+        }
+        if self.corpus.is_some() && self.corpus_window == 0 {
+            return Err("--corpus-window must be at least 1 token".into());
+        }
         Ok(())
+    }
+
+    /// Corpus component of the label: the `.fncorpus` file stem for
+    /// `--corpus` runs, the preset name otherwise.
+    fn corpus_tag(&self) -> String {
+        match &self.corpus {
+            Some(p) => p
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| self.preset.clone()),
+            None => self.preset.clone(),
+        }
     }
 
     /// Figure/progress label, e.g. `flda-word-tiny`, `nomad-p4-enron-sim`,
     /// or `nomad-p1+r2-tiny` for a mixed local/remote ring.
     pub fn label(&self) -> String {
+        let tag = self.corpus_tag();
         match self.runtime {
-            RuntimeKind::Serial => format!("{}-{}", self.sampler, self.preset),
+            RuntimeKind::Serial => format!("{}-{}", self.sampler, tag),
             RuntimeKind::NomadSim | RuntimeKind::PsSim if self.machines > 1 => format!(
                 "{}-{}x20-{}{}",
                 self.runtime,
                 self.machines,
-                self.preset,
+                tag,
                 if self.disk { "-disk" } else { "" }
             ),
             rt => format!(
@@ -457,7 +501,7 @@ impl TrainConfig {
                 } else {
                     format!("+r{}", self.remote.len())
                 },
-                self.preset,
+                tag,
                 if self.disk { "-disk" } else { "" }
             ),
         }

@@ -97,6 +97,22 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult, String> {
     train_with(cfg, &mut [])
 }
 
+/// Resolve the training corpus: an `.fncorpus` file when `cfg.corpus` is
+/// set (streamed through a bounded read window unless `--in-ram` asks for
+/// a full load), the named preset otherwise.
+fn resolve_corpus(cfg: &TrainConfig) -> Result<Corpus, String> {
+    match &cfg.corpus {
+        Some(path) => {
+            if cfg.corpus_ram {
+                Corpus::load_fncorpus_ram(path)
+            } else {
+                Corpus::open_fncorpus(path, cfg.corpus_window)
+            }
+        }
+        None => preset(&cfg.preset),
+    }
+}
+
 /// The single driver loop behind every runtime.
 ///
 /// Builds the engine from a checkpoint-or-random initial state, runs
@@ -111,7 +127,7 @@ pub fn train_with(
     if (cfg.resume || cfg.save_every > 0) && cfg.checkpoint.is_none() {
         return Err("--resume/--save-every require --checkpoint PATH".into());
     }
-    let corpus = preset(&cfg.preset)?;
+    let corpus = resolve_corpus(cfg)?;
     let hyper = Hyper::paper_default(cfg.topics);
     let resume_from = if cfg.resume { cfg.checkpoint.as_deref() } else { None };
     let resumed = resume_from.is_some_and(|p| p.exists());
@@ -122,13 +138,14 @@ pub fn train_with(
     let label = cfg.label();
     if !cfg.quiet {
         eprintln!(
-            "[train] {} docs={} vocab={} tokens={} T={} eval={}{}",
+            "[train] {} docs={} vocab={} tokens={} T={} eval={}{}{}",
             label,
             corpus.num_docs(),
-            corpus.vocab,
+            corpus.vocab(),
             corpus.num_tokens(),
             init.hyper.t,
             eval.name(),
+            if corpus.is_on_disk() { " corpus=streamed" } else { "" },
             if resumed { " (resumed from checkpoint)" } else { "" }
         );
     }

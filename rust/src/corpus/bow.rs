@@ -11,80 +11,179 @@
 //! plus `vocab.*.txt` with one word per line.  Real UCI dumps drop into the
 //! presets unchanged; the synthetic generators also serialize to this
 //! format so every experiment input is inspectable on disk.
+//!
+//! The reader streams: lines are grouped by docID (UCI dumps are sorted),
+//! so each document is flushed straight into the CSR under construction
+//! the moment the docID advances — peak ingest memory is one document,
+//! not a `vec![Vec::new(); D]` per-doc intermediate.  Documents left
+//! empty by preprocessing are skipped and counted with a warning, never
+//! inserted (the corpus enforces no-empty-docs at insertion time).
 
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-use super::Corpus;
+use super::{disk::FncorpusSummary, Corpus, FncorpusWriter};
 
-/// Parse a docword stream.  `vocab_words` may be empty.
+/// Streaming docword parser: reads the three headers up front, then
+/// [`for_each_doc`] hands each completed document to a sink.
+///
+/// [`for_each_doc`]: DocwordParser::for_each_doc
+pub struct DocwordParser<R: Read> {
+    lines: std::io::Lines<BufReader<R>>,
+    /// D header: documents the file claims to hold (empty ones included)
+    pub num_docs: usize,
+    /// W header: vocabulary size
+    pub vocab: usize,
+    /// NNZ header: number of (doc, word) entry lines
+    pub nnz: usize,
+}
+
+/// What a full parse saw.
+pub struct DocwordStats {
+    /// documents actually emitted (non-empty)
+    pub docs: usize,
+    /// documents the D header promised but that held no tokens
+    pub skipped_empty: usize,
+}
+
+impl<R: Read> DocwordParser<R> {
+    pub fn new(r: R) -> Result<Self, String> {
+        let mut lines = BufReader::new(r).lines();
+        let mut header = |what: &str| -> Result<usize, String> {
+            lines
+                .next()
+                .ok_or(format!("missing {what} header"))?
+                .map_err(|e| e.to_string())?
+                .trim()
+                .parse::<usize>()
+                .map_err(|e| format!("bad {what} header: {e}"))
+        };
+        let num_docs = header("D")?;
+        let vocab = header("W")?;
+        let nnz = header("NNZ")?;
+        Ok(DocwordParser { lines, num_docs, vocab, nnz })
+    }
+
+    /// Stream every document to `sink` in docID order.  Requires the
+    /// entry lines to be grouped by docID (as UCI dumps are); a docID
+    /// regression is a named error.
+    pub fn for_each_doc(
+        self,
+        mut sink: impl FnMut(&[u32]) -> Result<(), String>,
+    ) -> Result<DocwordStats, String> {
+        let (d, w, nnz) = (self.num_docs, self.vocab, self.nnz);
+        let mut cur_doc = 0usize; // docIDs are 1-based; 0 = nothing seen
+        let mut cur: Vec<u32> = Vec::new();
+        let mut seen = 0usize;
+        let mut docs = 0usize;
+        for line in self.lines {
+            let line = line.map_err(|e| e.to_string())?;
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.split_ascii_whitespace();
+            let (di, wi, ci) = (
+                it.next().ok_or("missing docID")?,
+                it.next().ok_or("missing wordID")?,
+                it.next().ok_or("missing count")?,
+            );
+            let di: usize = di.parse().map_err(|e| format!("docID: {e}"))?;
+            let wi: usize = wi.parse().map_err(|e| format!("wordID: {e}"))?;
+            let ci: usize = ci.parse().map_err(|e| format!("count: {e}"))?;
+            if di == 0 || di > d {
+                return Err(format!("docID {di} out of range 1..={d}"));
+            }
+            if wi == 0 || wi > w {
+                return Err(format!("wordID {wi} out of range 1..={w}"));
+            }
+            if di < cur_doc {
+                return Err(format!(
+                    "docword lines must be grouped by docID (doc {di} after doc {cur_doc}); \
+                     sort the file by its first column"
+                ));
+            }
+            if di > cur_doc {
+                if !cur.is_empty() {
+                    sink(&cur)?;
+                    docs += 1;
+                    cur.clear();
+                }
+                cur_doc = di;
+            }
+            for _ in 0..ci {
+                cur.push((wi - 1) as u32);
+            }
+            seen += 1;
+        }
+        if !cur.is_empty() {
+            sink(&cur)?;
+            docs += 1;
+        }
+        if seen != nnz {
+            return Err(format!("NNZ header says {nnz}, saw {seen} entries"));
+        }
+        Ok(DocwordStats { docs, skipped_empty: d - docs })
+    }
+}
+
+/// Parse a docword stream into an in-RAM corpus.  `vocab_words` may be
+/// empty.
 pub fn read_docword<R: Read>(r: R, vocab_words: Vec<String>, name: &str) -> Result<Corpus, String> {
-    let mut lines = BufReader::new(r).lines();
-    let mut header = |what: &str| -> Result<usize, String> {
-        lines
-            .next()
-            .ok_or(format!("missing {what} header"))?
-            .map_err(|e| e.to_string())?
-            .trim()
-            .parse::<usize>()
-            .map_err(|e| format!("bad {what} header: {e}"))
-    };
-    let d = header("D")?;
-    let w = header("W")?;
-    let nnz = header("NNZ")?;
-
-    let mut docs: Vec<Vec<u32>> = vec![Vec::new(); d];
-    let mut seen = 0usize;
-    for line in lines {
-        let line = line.map_err(|e| e.to_string())?;
-        let line = line.trim();
-        if line.is_empty() {
-            continue;
-        }
-        let mut it = line.split_ascii_whitespace();
-        let (di, wi, ci) = (
-            it.next().ok_or("missing docID")?,
-            it.next().ok_or("missing wordID")?,
-            it.next().ok_or("missing count")?,
+    let parser = DocwordParser::new(r)?;
+    let mut corpus = Corpus::with_meta(parser.vocab, vocab_words, name.to_string());
+    let stats = parser.for_each_doc(|doc| {
+        corpus.push_doc(doc);
+        Ok(())
+    })?;
+    if stats.skipped_empty > 0 {
+        // the paper drops e.g. Amazon reviews left empty by stemming
+        eprintln!(
+            "[docword] warning: skipped {} empty documents in {name}",
+            stats.skipped_empty
         );
-        let di: usize = di.parse().map_err(|e| format!("docID: {e}"))?;
-        let wi: usize = wi.parse().map_err(|e| format!("wordID: {e}"))?;
-        let ci: usize = ci.parse().map_err(|e| format!("count: {e}"))?;
-        if di == 0 || di > d {
-            return Err(format!("docID {di} out of range 1..={d}"));
-        }
-        if wi == 0 || wi > w {
-            return Err(format!("wordID {wi} out of range 1..={w}"));
-        }
-        for _ in 0..ci {
-            docs[di - 1].push((wi - 1) as u32);
-        }
-        seen += 1;
     }
-    if seen != nnz {
-        return Err(format!("NNZ header says {nnz}, saw {seen} entries"));
-    }
-    // UCI dumps may contain empty docs after preprocessing; drop them, as
-    // the paper does for Amazon reviews left empty by stemming.
-    docs.retain(|doc| !doc.is_empty());
-    let corpus = Corpus::from_docs(docs, w, vocab_words, name.to_string());
     corpus.validate()?;
     Ok(corpus)
+}
+
+fn read_vocab_words(p: &Path) -> Result<Vec<String>, String> {
+    BufReader::new(std::fs::File::open(p).map_err(|e| format!("{}: {e}", p.display()))?)
+        .lines()
+        .collect::<Result<Vec<_>, _>>()
+        .map_err(|e| e.to_string())
 }
 
 /// Load `docword` (+ optional `vocab`) files from disk.
 pub fn load(docword: &Path, vocab: Option<&Path>, name: &str) -> Result<Corpus, String> {
     let vocab_words = match vocab {
         None => Vec::new(),
-        Some(p) => BufReader::new(
-            std::fs::File::open(p).map_err(|e| format!("{}: {e}", p.display()))?,
-        )
-        .lines()
-        .collect::<Result<Vec<_>, _>>()
-        .map_err(|e| e.to_string())?,
+        Some(p) => read_vocab_words(p)?,
     };
     let f = std::fs::File::open(docword).map_err(|e| format!("{}: {e}", docword.display()))?;
     read_docword(f, vocab_words, name)
+}
+
+/// Convert docword (+ optional vocab) files straight into an `FNCP0001`
+/// corpus with bounded memory: one document at a time flows from the
+/// text file into the streaming writer.  Returns the write summary and
+/// the number of empty documents skipped.
+pub fn stream_to_fncorpus(
+    docword: &Path,
+    vocab: Option<&Path>,
+    name: &str,
+    dest: &Path,
+) -> Result<(FncorpusSummary, usize), String> {
+    let vocab_words = match vocab {
+        None => Vec::new(),
+        Some(p) => read_vocab_words(p)?,
+    };
+    let f = std::fs::File::open(docword).map_err(|e| format!("{}: {e}", docword.display()))?;
+    let parser = DocwordParser::new(f)?;
+    let mut w = FncorpusWriter::create(dest, parser.vocab, vocab_words, name)?;
+    let stats = parser.for_each_doc(|doc| w.push_doc(doc))?;
+    let summary = w.finish()?;
+    Ok((summary, stats.skipped_empty))
 }
 
 /// Serialize to the docword format (dense per-doc word counts).
@@ -95,14 +194,14 @@ pub fn write_docword<W: Write>(corpus: &Corpus, w: W) -> std::io::Result<()> {
     let mut nnz = 0usize;
     for d in corpus.docs() {
         let mut counts = std::collections::BTreeMap::new();
-        for &wid in d {
+        for &wid in d.iter() {
             *counts.entry(wid).or_insert(0u32) += 1;
         }
         nnz += counts.len();
         per_doc.push(counts.into_iter().collect());
     }
     writeln!(out, "{}", corpus.num_docs())?;
-    writeln!(out, "{}", corpus.vocab)?;
+    writeln!(out, "{}", corpus.vocab())?;
     writeln!(out, "{nnz}")?;
     for (i, counts) in per_doc.iter().enumerate() {
         for &(wid, c) in counts {
@@ -115,13 +214,13 @@ pub fn write_docword<W: Write>(corpus: &Corpus, w: W) -> std::io::Result<()> {
 /// Save corpus (+vocab if present) under `dir/docword.<name>.txt`.
 pub fn save(corpus: &Corpus, dir: &Path) -> std::io::Result<()> {
     std::fs::create_dir_all(dir)?;
-    let f = std::fs::File::create(dir.join(format!("docword.{}.txt", corpus.name)))?;
+    let f = std::fs::File::create(dir.join(format!("docword.{}.txt", corpus.name())))?;
     write_docword(corpus, f)?;
-    if !corpus.vocab_words.is_empty() {
+    if !corpus.vocab_words().is_empty() {
         let mut vf = BufWriter::new(std::fs::File::create(
-            dir.join(format!("vocab.{}.txt", corpus.name)),
+            dir.join(format!("vocab.{}.txt", corpus.name())),
         )?);
-        for w in &corpus.vocab_words {
+        for w in corpus.vocab_words() {
             writeln!(vf, "{w}")?;
         }
     }
@@ -141,7 +240,7 @@ mod tests {
         let back = read_docword(&buf[..], vec![], "tiny").unwrap();
         assert_eq!(back.num_docs(), c.num_docs());
         assert_eq!(back.num_tokens(), c.num_tokens());
-        assert_eq!(back.vocab, c.vocab);
+        assert_eq!(back.vocab(), c.vocab());
         // token multisets per doc match (order within doc may differ)
         for (a, b) in c.docs().zip(back.docs()) {
             let mut a = a.to_vec();
@@ -176,6 +275,13 @@ mod tests {
     }
 
     #[test]
+    fn rejects_docid_regression() {
+        let text = "2\n2\n3\n2 1 1\n1 1 1\n2 2 1\n";
+        let err = read_docword(text.as_bytes(), vec![], "t").unwrap_err();
+        assert!(err.contains("grouped by docID"), "unnamed error: {err}");
+    }
+
+    #[test]
     fn drops_empty_docs() {
         let text = "3\n2\n2\n1 1 1\n3 2 1\n";
         let c = read_docword(text.as_bytes(), vec![], "t").unwrap();
@@ -194,7 +300,24 @@ mod tests {
             "tiny",
         )
         .unwrap();
-        assert_eq!(back.vocab_words, c.vocab_words);
+        assert_eq!(back.vocab_words(), c.vocab_words());
+        assert_eq!(back.num_tokens(), c.num_tokens());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn streams_docword_to_fncorpus() {
+        let dir = std::env::temp_dir().join("fnomad_bow_stream_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let c = tiny();
+        save(&c, &dir).unwrap();
+        let dest = dir.join("tiny.fncorpus");
+        let (summary, skipped) =
+            stream_to_fncorpus(&dir.join("docword.tiny.txt"), None, "tiny", &dest).unwrap();
+        assert_eq!(skipped, 0);
+        assert_eq!(summary.num_docs, c.num_docs());
+        assert_eq!(summary.num_tokens, c.num_tokens());
+        let back = Corpus::load_fncorpus_ram(&dest).unwrap();
         assert_eq!(back.num_tokens(), c.num_tokens());
         let _ = std::fs::remove_dir_all(dir);
     }

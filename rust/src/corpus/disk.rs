@@ -1,0 +1,886 @@
+//! `FNCP0001`: the versioned on-disk CSR corpus format, plus the
+//! windowed `pread` reader that lets training stream token payloads
+//! without materializing them.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! offset 0   magic          8 bytes   "FNCP0001"
+//! offset 8   num_docs       u64
+//! offset 16  num_tokens     u64
+//! offset 24  vocab          u64
+//! offset 32  name_len       u32       followed by name_len UTF-8 bytes
+//! ...        flags          u32       bit 0: vocab-strings section present
+//! ...        offset table   (num_docs + 1) x u64   CSR doc boundaries
+//! ...        token payload  num_tokens x u32
+//! ...        vocab strings  vocab x (u32 len + UTF-8 bytes)   iff flags bit 0
+//! last 8     fingerprint    u64       FNV-1a of every preceding byte
+//! ```
+//!
+//! Files are written atomically through [`AtomicFile`] (temp sibling +
+//! fsync + rename), so a crashed `prepare-corpus` never leaves a torn
+//! `.fncorpus` behind.  The trailer fingerprint is computed over the
+//! header, offset table, payload, and vocab section; [`load_ram`]
+//! verifies it before trusting the bytes.  The streaming [`open`] path
+//! validates everything *structural* (magic, section lengths against the
+//! file length, offset-table monotonicity — which also proves no empty
+//! documents) but deliberately does not hash the payload, because
+//! hashing would read the whole file and defeat out-of-core startup;
+//! token ids are instead bounds-checked against the vocab as each read
+//! window is decoded.
+//!
+//! The offset table and vocab strings stay RAM-resident (they are
+//! `O(num_docs)` / `O(vocab)`, small next to the payload); only token
+//! bytes stream.  [`resident_corpus_bytes`] / [`peak_resident_corpus_bytes`]
+//! account the token bytes currently buffered from disk-backed corpora,
+//! which is what the out-of-core test caps.
+
+use std::fs::File;
+use std::io::{BufWriter, Read, Write};
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::util::fsio::{AtomicFile, Fnv1a};
+
+/// Magic + version prefix of every `.fncorpus` file.
+pub const FNCORPUS_MAGIC: &[u8; 8] = b"FNCP0001";
+
+/// Fixed-size header prefix: magic + num_docs + num_tokens + vocab + name_len.
+const FIXED_HEADER: u64 = 8 + 8 + 8 + 8 + 4;
+
+/// IO chunk for payload copies and streamed hashing.
+const IO_CHUNK: usize = 64 * 1024;
+
+// ---------------------------------------------------------------------------
+// resident-bytes accounting
+// ---------------------------------------------------------------------------
+
+static RESIDENT: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+fn add_resident(n: usize) {
+    let now = RESIDENT.fetch_add(n, Ordering::SeqCst) + n;
+    PEAK.fetch_max(now, Ordering::SeqCst);
+}
+
+fn sub_resident(n: usize) {
+    RESIDENT.fetch_sub(n, Ordering::SeqCst);
+}
+
+/// Record a short-lived buffer (e.g. a single [`Corpus::doc`] read) in the
+/// peak without tracking its drop.
+///
+/// [`Corpus::doc`]: super::Corpus::doc
+pub(crate) fn note_transient(bytes: usize) {
+    PEAK.fetch_max(RESIDENT.load(Ordering::SeqCst) + bytes, Ordering::SeqCst);
+}
+
+/// Token bytes currently buffered in RAM from disk-backed corpora.
+pub fn resident_corpus_bytes() -> usize {
+    RESIDENT.load(Ordering::SeqCst)
+}
+
+/// High-water mark of [`resident_corpus_bytes`] since the last reset.
+pub fn peak_resident_corpus_bytes() -> usize {
+    PEAK.load(Ordering::SeqCst)
+}
+
+/// Reset the peak to the current residency (for before/after measurements).
+pub fn reset_peak_resident_corpus_bytes() {
+    PEAK.store(RESIDENT.load(Ordering::SeqCst), Ordering::SeqCst);
+}
+
+/// A token buffer whose capacity is charged against the resident-bytes
+/// accounting for as long as it lives.  The sliding read window of a
+/// disk-backed sweep is one of these.
+#[derive(Debug, Default)]
+pub(crate) struct TrackedBuf {
+    data: Vec<u32>,
+    accounted: usize,
+}
+
+impl TrackedBuf {
+    pub(crate) fn new() -> TrackedBuf {
+        TrackedBuf { data: Vec::new(), accounted: 0 }
+    }
+
+    /// Replace the contents with `count` tokens starting at flat token
+    /// index `tok_start`.
+    pub(crate) fn fill(&mut self, csr: &DiskCsr, tok_start: usize, count: usize) {
+        self.data.clear();
+        self.data.reserve(count);
+        csr.try_read_tokens_into(tok_start, count, &mut self.data)
+            .unwrap_or_else(|e| panic!("{e}"));
+        let cap = self.data.capacity() * std::mem::size_of::<u32>();
+        if cap > self.accounted {
+            add_resident(cap - self.accounted);
+        } else if cap < self.accounted {
+            sub_resident(self.accounted - cap);
+        }
+        self.accounted = cap;
+    }
+
+    pub(crate) fn as_slice(&self) -> &[u32] {
+        &self.data
+    }
+}
+
+impl Drop for TrackedBuf {
+    fn drop(&mut self) {
+        sub_resident(self.accounted);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// writer
+// ---------------------------------------------------------------------------
+
+/// What a completed write looked like, for logs and manifests.
+#[derive(Debug, Clone, Copy)]
+pub struct FncorpusSummary {
+    pub num_docs: usize,
+    pub num_tokens: usize,
+    /// Total file size in bytes, trailer included.
+    pub bytes: u64,
+    /// FNV-1a fingerprint stored in the trailer.
+    pub fingerprint: u64,
+}
+
+/// Discriminator for payload temp names (mirrors `fsio`'s temp scheme).
+static PAYLOAD_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Streaming `FNCP0001` writer: documents go to a temp payload file one
+/// at a time (bounded memory — only the offset table accumulates in
+/// RAM), and [`finish`] assembles the final file atomically.
+///
+/// Empty documents and out-of-vocab token ids are rejected at
+/// [`push_doc`] time, so a committed file can never violate the corpus
+/// invariants.
+///
+/// [`push_doc`]: FncorpusWriter::push_doc
+/// [`finish`]: FncorpusWriter::finish
+pub struct FncorpusWriter {
+    dest: PathBuf,
+    tmp: PathBuf,
+    payload: Option<BufWriter<File>>,
+    offsets: Vec<u64>,
+    vocab: usize,
+    vocab_words: Vec<String>,
+    name: String,
+}
+
+impl FncorpusWriter {
+    /// Open a writer targeting `dest`.  `vocab_words` is either empty
+    /// (no vocab-strings section) or exactly `vocab` entries.
+    pub fn create(
+        dest: &Path,
+        vocab: usize,
+        vocab_words: Vec<String>,
+        name: &str,
+    ) -> Result<FncorpusWriter, String> {
+        if !vocab_words.is_empty() && vocab_words.len() != vocab {
+            return Err(format!(
+                "FNCP0001: vocab-strings section has {} entries but vocab is {vocab}",
+                vocab_words.len()
+            ));
+        }
+        if let Some(dir) = dest.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
+            }
+        }
+        let seq = PAYLOAD_SEQ.fetch_add(1, Ordering::Relaxed);
+        let mut tmp_name = dest.as_os_str().to_os_string();
+        tmp_name.push(format!(".payload-{}-{seq}", std::process::id()));
+        let tmp = PathBuf::from(tmp_name);
+        let file = File::create(&tmp).map_err(|e| format!("{}: {e}", tmp.display()))?;
+        Ok(FncorpusWriter {
+            dest: dest.to_path_buf(),
+            tmp,
+            payload: Some(BufWriter::new(file)),
+            offsets: vec![0],
+            vocab,
+            vocab_words,
+            name: name.to_string(),
+        })
+    }
+
+    pub fn num_docs(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn num_tokens(&self) -> usize {
+        *self.offsets.last().unwrap() as usize
+    }
+
+    /// Append one document.  Returns a named error (and writes nothing)
+    /// for an empty document or a token id outside the vocab.
+    pub fn push_doc(&mut self, tokens: &[u32]) -> Result<(), String> {
+        let doc = self.num_docs();
+        if tokens.is_empty() {
+            return Err(format!(
+                "FNCP0001: refusing to write empty document {doc} to {}",
+                self.dest.display()
+            ));
+        }
+        if let Some(&w) = tokens.iter().find(|&&w| w as usize >= self.vocab) {
+            return Err(format!(
+                "FNCP0001: document {doc} has token id {w} >= vocab {} in {}",
+                self.vocab,
+                self.dest.display()
+            ));
+        }
+        let payload = self.payload.as_mut().expect("push_doc after finish");
+        let mut buf = [0u8; 4 * 1024];
+        for chunk in tokens.chunks(buf.len() / 4) {
+            let mut n = 0;
+            for &w in chunk {
+                buf[n..n + 4].copy_from_slice(&w.to_le_bytes());
+                n += 4;
+            }
+            payload
+                .write_all(&buf[..n])
+                .map_err(|e| format!("{}: {e}", self.tmp.display()))?;
+        }
+        let end = self.offsets.last().unwrap() + tokens.len() as u64;
+        self.offsets.push(end);
+        Ok(())
+    }
+
+    /// Assemble header + offsets + payload + vocab strings + trailer and
+    /// atomically commit the destination file.
+    pub fn finish(mut self) -> Result<FncorpusSummary, String> {
+        let mut payload = self.payload.take().expect("finish called once");
+        payload.flush().map_err(|e| format!("{}: {e}", self.tmp.display()))?;
+        drop(payload);
+
+        let num_docs = self.offsets.len() as u64 - 1;
+        let num_tokens = *self.offsets.last().unwrap();
+
+        let mut af = AtomicFile::create(&self.dest)?;
+        // The trailer is the hash of everything before it, so it cannot
+        // come from AtomicFile's own fingerprint (which would include the
+        // trailer bytes themselves): mirror every section through a
+        // second hasher and write its digest last.
+        let mut mirror = Fnv1a::new();
+        let dest = self.dest.clone();
+        let emit = |af: &mut AtomicFile, mirror: &mut Fnv1a, bytes: &[u8]| -> Result<(), String> {
+            af.write_all(bytes).map_err(|e| format!("{}: {e}", dest.display()))?;
+            mirror.update(bytes);
+            Ok(())
+        };
+
+        let mut header = Vec::with_capacity(FIXED_HEADER as usize + self.name.len() + 4);
+        header.extend_from_slice(FNCORPUS_MAGIC);
+        header.extend_from_slice(&num_docs.to_le_bytes());
+        header.extend_from_slice(&num_tokens.to_le_bytes());
+        header.extend_from_slice(&(self.vocab as u64).to_le_bytes());
+        header.extend_from_slice(&(self.name.len() as u32).to_le_bytes());
+        header.extend_from_slice(self.name.as_bytes());
+        let flags: u32 = if self.vocab_words.is_empty() { 0 } else { 1 };
+        header.extend_from_slice(&flags.to_le_bytes());
+        emit(&mut af, &mut mirror, &header)?;
+        let mut total = header.len() as u64;
+
+        let mut buf = Vec::with_capacity(IO_CHUNK);
+        for &o in &self.offsets {
+            buf.extend_from_slice(&o.to_le_bytes());
+            if buf.len() >= IO_CHUNK {
+                emit(&mut af, &mut mirror, &buf)?;
+                total += buf.len() as u64;
+                buf.clear();
+            }
+        }
+        emit(&mut af, &mut mirror, &buf)?;
+        total += buf.len() as u64;
+
+        let mut src = File::open(&self.tmp).map_err(|e| format!("{}: {e}", self.tmp.display()))?;
+        let mut chunk = [0u8; IO_CHUNK];
+        let mut copied = 0u64;
+        loop {
+            let n = src.read(&mut chunk).map_err(|e| format!("{}: {e}", self.tmp.display()))?;
+            if n == 0 {
+                break;
+            }
+            emit(&mut af, &mut mirror, &chunk[..n])?;
+            copied += n as u64;
+        }
+        if copied != num_tokens * 4 {
+            return Err(format!(
+                "FNCP0001: payload temp holds {copied} bytes but the offset table expects {}",
+                num_tokens * 4
+            ));
+        }
+        total += copied;
+
+        buf.clear();
+        for w in &self.vocab_words {
+            buf.extend_from_slice(&(w.len() as u32).to_le_bytes());
+            buf.extend_from_slice(w.as_bytes());
+            if buf.len() >= IO_CHUNK {
+                emit(&mut af, &mut mirror, &buf)?;
+                total += buf.len() as u64;
+                buf.clear();
+            }
+        }
+        emit(&mut af, &mut mirror, &buf)?;
+        total += buf.len() as u64;
+
+        let fingerprint = mirror.finish();
+        af.write_all(&fingerprint.to_le_bytes())
+            .map_err(|e| format!("{}: {e}", self.dest.display()))?;
+        total += 8;
+        af.commit()?;
+
+        Ok(FncorpusSummary {
+            num_docs: num_docs as usize,
+            num_tokens: num_tokens as usize,
+            bytes: total,
+            fingerprint,
+        })
+    }
+}
+
+impl Drop for FncorpusWriter {
+    fn drop(&mut self) {
+        drop(self.payload.take());
+        let _ = std::fs::remove_file(&self.tmp);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// reader
+// ---------------------------------------------------------------------------
+
+/// Handle on the token payload of an open `.fncorpus` file.  Reads go
+/// through positioned `pread` ([`FileExt::read_at`]) on a shared `File`,
+/// so clones and concurrent sweeps never contend on a seek cursor.
+#[derive(Debug, Clone)]
+pub struct DiskCsr {
+    file: Arc<File>,
+    path: Arc<PathBuf>,
+    payload_base: u64,
+    num_tokens: usize,
+    vocab: usize,
+    window_tokens: usize,
+}
+
+impl DiskCsr {
+    pub(crate) fn window_tokens(&self) -> usize {
+        self.window_tokens
+    }
+
+    pub(crate) fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Decode `count` tokens starting at flat index `tok_start`,
+    /// appending to `out`.  Token ids are bounds-checked against the
+    /// vocab as they are decoded.
+    pub(crate) fn try_read_tokens_into(
+        &self,
+        tok_start: usize,
+        count: usize,
+        out: &mut Vec<u32>,
+    ) -> Result<(), String> {
+        assert!(
+            tok_start + count <= self.num_tokens,
+            "token range {}..{} out of bounds for {} tokens",
+            tok_start,
+            tok_start + count,
+            self.num_tokens
+        );
+        out.reserve(count);
+        let mut raw = [0u8; IO_CHUNK];
+        let mut off = self.payload_base + tok_start as u64 * 4;
+        let mut remaining = count * 4;
+        let mut tok_idx = tok_start;
+        while remaining > 0 {
+            let n = remaining.min(raw.len());
+            self.file.read_exact_at(&mut raw[..n], off).map_err(|e| {
+                format!("FNCP0001: read failed at byte {off} of {}: {e}", self.path.display())
+            })?;
+            for quad in raw[..n].chunks_exact(4) {
+                let w = u32::from_le_bytes([quad[0], quad[1], quad[2], quad[3]]);
+                if w as usize >= self.vocab {
+                    return Err(format!(
+                        "FNCP0001: token id {w} >= vocab {} at token {tok_idx} in {}",
+                        self.vocab,
+                        self.path.display()
+                    ));
+                }
+                out.push(w);
+                tok_idx += 1;
+            }
+            off += n as u64;
+            remaining -= n;
+        }
+        Ok(())
+    }
+}
+
+/// Everything [`open`] learns about a file: the payload handle plus the
+/// RAM-resident metadata sections.
+pub(crate) struct Opened {
+    pub csr: DiskCsr,
+    pub doc_offsets: Vec<usize>,
+    pub vocab: usize,
+    pub vocab_words: Vec<String>,
+    pub name: String,
+}
+
+fn read_exact(file: &File, off: u64, len: usize, path: &Path) -> Result<Vec<u8>, String> {
+    let mut buf = vec![0u8; len];
+    file.read_exact_at(&mut buf, off)
+        .map_err(|e| format!("FNCP0001: read failed at byte {off} of {}: {e}", path.display()))?;
+    Ok(buf)
+}
+
+fn get_u64(b: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes(b[at..at + 8].try_into().unwrap())
+}
+
+fn get_u32(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes(b[at..at + 4].try_into().unwrap())
+}
+
+/// Open a `.fncorpus` for windowed streaming access.  Validates the
+/// header, section lengths, and offset-table invariants; does *not*
+/// read or hash the token payload (see the module docs).
+pub(crate) fn open(path: &Path, window_tokens: usize) -> Result<Opened, String> {
+    let file = File::open(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let flen = file
+        .metadata()
+        .map_err(|e| format!("{}: {e}", path.display()))?
+        .len();
+    if flen < FIXED_HEADER {
+        return Err(format!(
+            "FNCP0001: {} is truncated ({flen} bytes, header alone needs {FIXED_HEADER})",
+            path.display()
+        ));
+    }
+    let head = read_exact(&file, 0, FIXED_HEADER as usize, path)?;
+    if &head[..8] != FNCORPUS_MAGIC {
+        return Err(format!(
+            "FNCP0001: bad magic in {} (not an .fncorpus file)",
+            path.display()
+        ));
+    }
+    let num_docs = get_u64(&head, 8);
+    let num_tokens = get_u64(&head, 16);
+    let vocab = get_u64(&head, 24);
+    let name_len = get_u32(&head, 32) as u64;
+    if name_len > 4096 {
+        return Err(format!(
+            "FNCP0001: unreasonable corpus-name length {name_len} in {}",
+            path.display()
+        ));
+    }
+
+    let offsets_bytes = num_docs
+        .checked_add(1)
+        .and_then(|n| n.checked_mul(8))
+        .ok_or_else(|| format!("FNCP0001: absurd num_docs {num_docs} in {}", path.display()))?;
+    let payload_bytes = num_tokens
+        .checked_mul(4)
+        .ok_or_else(|| format!("FNCP0001: absurd num_tokens {num_tokens} in {}", path.display()))?;
+    let header_end = FIXED_HEADER + name_len + 4;
+    let payload_base = header_end + offsets_bytes;
+    let vocab_base = payload_base + payload_bytes;
+    // trailer must fit even before we know the vocab section's size
+    if vocab_base.checked_add(8).is_none() || vocab_base + 8 > flen {
+        return Err(format!(
+            "FNCP0001: {} is truncated ({flen} bytes, layout needs at least {})",
+            path.display(),
+            vocab_base.saturating_add(8)
+        ));
+    }
+
+    let tail = read_exact(&file, header_end - name_len - 4, (name_len + 4) as usize, path)?;
+    let name = String::from_utf8(tail[..name_len as usize].to_vec())
+        .map_err(|_| format!("FNCP0001: corpus name is not UTF-8 in {}", path.display()))?;
+    let flags = get_u32(&tail, name_len as usize);
+    if flags & !1 != 0 {
+        return Err(format!("FNCP0001: unknown flags {flags:#x} in {}", path.display()));
+    }
+
+    let raw_offsets = read_exact(&file, header_end, offsets_bytes as usize, path)?;
+    let mut doc_offsets = Vec::with_capacity(num_docs as usize + 1);
+    for quad in raw_offsets.chunks_exact(8) {
+        doc_offsets.push(u64::from_le_bytes(quad.try_into().unwrap()) as usize);
+    }
+    if doc_offsets[0] != 0 {
+        return Err(format!(
+            "FNCP0001: offset table must start at 0 (got {}) in {}",
+            doc_offsets[0],
+            path.display()
+        ));
+    }
+    for i in 1..doc_offsets.len() {
+        if doc_offsets[i] <= doc_offsets[i - 1] {
+            return Err(format!(
+                "FNCP0001: document {} is empty or the offset table is unordered in {}",
+                i - 1,
+                path.display()
+            ));
+        }
+    }
+    if *doc_offsets.last().unwrap() as u64 != num_tokens {
+        return Err(format!(
+            "FNCP0001: offset table ends at {} but the header says {num_tokens} tokens in {}",
+            doc_offsets.last().unwrap(),
+            path.display()
+        ));
+    }
+
+    let vocab_words = if flags & 1 == 1 {
+        let region_len = (flen - 8 - vocab_base) as usize;
+        let region = read_exact(&file, vocab_base, region_len, path)?;
+        let mut words = Vec::with_capacity(vocab as usize);
+        let mut at = 0usize;
+        for _ in 0..vocab {
+            if at + 4 > region.len() {
+                return Err(format!(
+                    "FNCP0001: vocab-strings section is truncated in {}",
+                    path.display()
+                ));
+            }
+            let wlen = get_u32(&region, at) as usize;
+            at += 4;
+            if at + wlen > region.len() {
+                return Err(format!(
+                    "FNCP0001: vocab-strings section is truncated in {}",
+                    path.display()
+                ));
+            }
+            let word = String::from_utf8(region[at..at + wlen].to_vec()).map_err(|_| {
+                format!("FNCP0001: vocab word {} is not UTF-8 in {}", words.len(), path.display())
+            })?;
+            at += wlen;
+            words.push(word);
+        }
+        if at != region.len() {
+            return Err(format!(
+                "FNCP0001: {} trailing bytes after the vocab-strings section in {}",
+                region.len() - at,
+                path.display()
+            ));
+        }
+        words
+    } else {
+        if flen != vocab_base + 8 {
+            return Err(format!(
+                "FNCP0001: file length mismatch in {}: {flen} bytes but the layout ends at {}",
+                path.display(),
+                vocab_base + 8
+            ));
+        }
+        Vec::new()
+    };
+
+    Ok(Opened {
+        csr: DiskCsr {
+            file: Arc::new(file),
+            path: Arc::new(path.to_path_buf()),
+            payload_base,
+            num_tokens: num_tokens as usize,
+            vocab: vocab as usize,
+            window_tokens: window_tokens.max(1),
+        },
+        doc_offsets,
+        vocab: vocab as usize,
+        vocab_words,
+        name,
+    })
+}
+
+/// Fully-decoded corpus parts, for the explicit load-to-RAM path.
+pub(crate) struct RamLoaded {
+    pub tokens: Vec<u32>,
+    pub doc_offsets: Vec<usize>,
+    pub vocab: usize,
+    pub vocab_words: Vec<String>,
+    pub name: String,
+}
+
+/// Load a `.fncorpus` entirely into RAM, verifying the trailer
+/// fingerprint over the whole file first.
+pub(crate) fn load_ram(path: &Path) -> Result<RamLoaded, String> {
+    let opened = open(path, 1)?;
+    let flen = opened
+        .csr
+        .file
+        .metadata()
+        .map_err(|e| format!("{}: {e}", path.display()))?
+        .len();
+    let stored = {
+        let t = read_exact(&opened.csr.file, flen - 8, 8, path)?;
+        get_u64(&t, 0)
+    };
+    let mut hash = Fnv1a::new();
+    let mut chunk = [0u8; IO_CHUNK];
+    let mut off = 0u64;
+    while off < flen - 8 {
+        let n = ((flen - 8 - off) as usize).min(chunk.len());
+        opened.csr.file.read_exact_at(&mut chunk[..n], off).map_err(|e| {
+            format!("FNCP0001: read failed at byte {off} of {}: {e}", path.display())
+        })?;
+        hash.update(&chunk[..n]);
+        off += n as u64;
+    }
+    let computed = hash.finish();
+    if computed != stored {
+        return Err(format!(
+            "FNCP0001: fingerprint mismatch in {} (stored {stored:#018x}, computed {computed:#018x}) — file is corrupt",
+            path.display()
+        ));
+    }
+    let mut tokens = Vec::with_capacity(opened.csr.num_tokens);
+    opened
+        .csr
+        .try_read_tokens_into(0, opened.csr.num_tokens, &mut tokens)?;
+    Ok(RamLoaded {
+        tokens,
+        doc_offsets: opened.doc_offsets,
+        vocab: opened.vocab,
+        vocab_words: opened.vocab_words,
+        name: opened.name,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("fnomad_fncp_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn write_tiny(path: &Path, vocab_words: Vec<String>) -> FncorpusSummary {
+        let mut w = FncorpusWriter::create(path, 4, vocab_words, "tiny").unwrap();
+        w.push_doc(&[0, 1, 1, 2]).unwrap();
+        w.push_doc(&[2, 2, 3]).unwrap();
+        w.push_doc(&[0, 3]).unwrap();
+        w.finish().unwrap()
+    }
+
+    /// Pin the exact byte layout: a reference file is assembled by hand
+    /// (the same convention as the FNLDA001 golden-bytes test) and must
+    /// match the writer's output bit for bit.
+    #[test]
+    fn golden_bytes_layout_pin() {
+        let path = tmp("golden.fncorpus");
+        write_tiny(&path, Vec::new());
+        let got = std::fs::read(&path).unwrap();
+
+        let mut want: Vec<u8> = Vec::new();
+        want.extend_from_slice(b"FNCP0001");
+        want.extend_from_slice(&3u64.to_le_bytes()); // num_docs
+        want.extend_from_slice(&9u64.to_le_bytes()); // num_tokens
+        want.extend_from_slice(&4u64.to_le_bytes()); // vocab
+        want.extend_from_slice(&4u32.to_le_bytes()); // name_len
+        want.extend_from_slice(b"tiny");
+        want.extend_from_slice(&0u32.to_le_bytes()); // flags: no vocab strings
+        for o in [0u64, 4, 7, 9] {
+            want.extend_from_slice(&o.to_le_bytes());
+        }
+        for t in [0u32, 1, 1, 2, 2, 2, 3, 0, 3] {
+            want.extend_from_slice(&t.to_le_bytes());
+        }
+        let mut h = Fnv1a::new();
+        h.update(&want);
+        want.extend_from_slice(&h.finish().to_le_bytes());
+
+        assert_eq!(got, want, "FNCP0001 byte layout drifted");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn roundtrip_with_vocab_strings() {
+        let path = tmp("roundtrip.fncorpus");
+        let words: Vec<String> = ["alpha", "beta", "gamma", "delta"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let summary = write_tiny(&path, words.clone());
+        assert_eq!(summary.num_docs, 3);
+        assert_eq!(summary.num_tokens, 9);
+        assert_eq!(summary.bytes, std::fs::metadata(&path).unwrap().len());
+
+        let opened = open(&path, 1 << 20).unwrap();
+        assert_eq!(opened.doc_offsets, vec![0, 4, 7, 9]);
+        assert_eq!(opened.vocab, 4);
+        assert_eq!(opened.vocab_words, words);
+        assert_eq!(opened.name, "tiny");
+        let mut toks = Vec::new();
+        opened.csr.try_read_tokens_into(0, 9, &mut toks).unwrap();
+        assert_eq!(toks, vec![0, 1, 1, 2, 2, 2, 3, 0, 3]);
+        // partial window read
+        toks.clear();
+        opened.csr.try_read_tokens_into(4, 3, &mut toks).unwrap();
+        assert_eq!(toks, vec![2, 2, 3]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn roundtrip_empty_vocab_section_via_ram_load() {
+        let path = tmp("novocab.fncorpus");
+        write_tiny(&path, Vec::new());
+        let loaded = load_ram(&path).unwrap();
+        assert_eq!(loaded.tokens, vec![0, 1, 1, 2, 2, 2, 3, 0, 3]);
+        assert_eq!(loaded.doc_offsets, vec![0, 4, 7, 9]);
+        assert_eq!(loaded.vocab, 4);
+        assert!(loaded.vocab_words.is_empty());
+        assert_eq!(loaded.name, "tiny");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn roundtrip_single_doc() {
+        let path = tmp("onedoc.fncorpus");
+        let mut w = FncorpusWriter::create(&path, 2, Vec::new(), "one").unwrap();
+        w.push_doc(&[1]).unwrap();
+        let summary = w.finish().unwrap();
+        assert_eq!(summary.num_docs, 1);
+        assert_eq!(summary.num_tokens, 1);
+        let loaded = load_ram(&path).unwrap();
+        assert_eq!(loaded.tokens, vec![1]);
+        assert_eq!(loaded.doc_offsets, vec![0, 1]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn writer_rejects_empty_doc() {
+        let path = tmp("wempty.fncorpus");
+        let mut w = FncorpusWriter::create(&path, 4, Vec::new(), "x").unwrap();
+        let err = w.push_doc(&[]).unwrap_err();
+        assert!(err.contains("empty document"), "unnamed error: {err}");
+    }
+
+    #[test]
+    fn writer_rejects_out_of_vocab_token() {
+        let path = tmp("wrange.fncorpus");
+        let mut w = FncorpusWriter::create(&path, 4, Vec::new(), "x").unwrap();
+        let err = w.push_doc(&[0, 4]).unwrap_err();
+        assert!(err.contains(">= vocab"), "unnamed error: {err}");
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmp("badmagic.fncorpus");
+        write_tiny(&path, Vec::new());
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] = b'X';
+        std::fs::write(&path, &bytes).unwrap();
+        let err = open(&path, 1).unwrap_err();
+        assert!(err.contains("bad magic"), "unnamed error: {err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let path = tmp("trunc.fncorpus");
+        write_tiny(&path, Vec::new());
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 12]).unwrap();
+        let err = open(&path, 1).unwrap_err();
+        assert!(
+            err.contains("truncated") || err.contains("length mismatch"),
+            "unnamed error: {err}"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let path = tmp("garbage.fncorpus");
+        write_tiny(&path, Vec::new());
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(b"junk");
+        std::fs::write(&path, &bytes).unwrap();
+        let err = open(&path, 1).unwrap_err();
+        assert!(err.contains("length mismatch"), "unnamed error: {err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_empty_doc_in_offset_table() {
+        let path = tmp("emptydoc.fncorpus");
+        write_tiny(&path, Vec::new());
+        let mut bytes = std::fs::read(&path).unwrap();
+        // offset table starts after the 44-byte header ("tiny" name);
+        // overwrite entry 1 (value 4) with 0 to fake an empty doc 0
+        let table = 44;
+        bytes[table + 8..table + 16].copy_from_slice(&0u64.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = open(&path, 1).unwrap_err();
+        assert!(err.contains("empty or the offset table"), "unnamed error: {err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_nonzero_first_offset() {
+        let path = tmp("offstart.fncorpus");
+        write_tiny(&path, Vec::new());
+        let mut bytes = std::fs::read(&path).unwrap();
+        let table = 44;
+        bytes[table..table + 8].copy_from_slice(&1u64.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = open(&path, 1).unwrap_err();
+        assert!(err.contains("must start at 0"), "unnamed error: {err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_ram_rejects_fingerprint_mismatch() {
+        let path = tmp("corrupt.fncorpus");
+        write_tiny(&path, Vec::new());
+        let mut bytes = std::fs::read(&path).unwrap();
+        // flip one payload byte: structure stays valid, hash does not
+        let payload = 44 + 4 * 8;
+        bytes[payload] ^= 1;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(open(&path, 1).is_ok(), "streaming open does not hash the payload");
+        let err = load_ram(&path).unwrap_err();
+        assert!(err.contains("fingerprint mismatch"), "unnamed error: {err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn streaming_read_names_out_of_vocab_tokens() {
+        let path = tmp("badtok.fncorpus");
+        write_tiny(&path, Vec::new());
+        let mut bytes = std::fs::read(&path).unwrap();
+        let payload = 44 + 4 * 8;
+        bytes[payload..payload + 4].copy_from_slice(&99u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let opened = open(&path, 1).unwrap();
+        let mut out = Vec::new();
+        let err = opened.csr.try_read_tokens_into(0, 9, &mut out).unwrap_err();
+        assert!(err.contains(">= vocab"), "unnamed error: {err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn tracked_buf_accounts_resident_bytes() {
+        let path = tmp("tracked.fncorpus");
+        write_tiny(&path, Vec::new());
+        let opened = open(&path, 4).unwrap();
+        let before = resident_corpus_bytes();
+        {
+            let mut buf = TrackedBuf::new();
+            buf.fill(&opened.csr, 0, 4);
+            assert_eq!(buf.as_slice(), &[0, 1, 1, 2]);
+            assert!(
+                resident_corpus_bytes() >= before + 16,
+                "window bytes not accounted"
+            );
+        }
+        assert_eq!(resident_corpus_bytes(), before, "drop did not release accounting");
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,65 +1,122 @@
-//! Corpus substrate: document storage, UCI bag-of-words IO, text
-//! preprocessing (tokenizer + stop words + Porter stemmer), synthetic
-//! corpus generation, dataset presets and worker partitioning.
+//! Corpus substrate: backend-abstracted document storage, UCI
+//! bag-of-words IO, text preprocessing (tokenizer + stop words + Porter
+//! stemmer), synthetic corpus generation, dataset presets and worker
+//! partitioning.
+//!
+//! # Storage backends
+//!
+//! [`Corpus`] is an encapsulated handle over one of two stores:
+//!
+//! * **Ram** — the token payload is one contiguous `Vec<u32>`.  This is
+//!   what presets, loaders and tests build, and every accessor compiles
+//!   down to the same slice arithmetic as the old public-field layout.
+//! * **DiskCsr** — the payload stays in an `FNCP0001` file (see
+//!   [`disk`]) and is streamed through a bounded sliding read window of
+//!   positioned `pread` calls, so training never materializes the full
+//!   token array.  Only the `O(num_docs)` offset table and the vocab
+//!   strings live in RAM.
+//!
+//! Both backends expose the same access API, and fixed-seed training is
+//! bit-identical across them:
+//!
+//! * [`Corpus::doc`] — one document ([`DocRef`]: borrowed slice for Ram,
+//!   a small owned read for Disk);
+//! * [`Corpus::docs`] — iterate all documents (convenience; does one
+//!   read per document on Disk);
+//! * [`Corpus::docs_in`] — the sweep workhorse: a lending iterator over
+//!   a document range that refills a read window of at most
+//!   `window_tokens` tokens at a time (`while let Some((doc, toks)) =
+//!   sweep.next_doc()`);
+//! * [`Corpus::doc_range_into`] / [`Corpus::read_range`] — bulk-copy a
+//!   doc range, the spawn path by which nomad/ps runtimes hand each
+//!   worker a rebased [`CorpusSlice`] without the coordinator ever
+//!   holding the whole payload.
 //!
 //! # Memory layout (CSR)
 //!
-//! The canonical in-memory form is a token-expanded **flat CSR** layout:
-//! one contiguous `tokens` array holding the word id of every occurrence,
+//! The canonical form is a token-expanded **flat CSR** layout: one
+//! contiguous `tokens` payload holding the word id of every occurrence,
 //! documents back to back, plus a `doc_offsets` prefix-sum array so that
-//! document `i` is the slice `tokens[doc_offsets[i]..doc_offsets[i + 1]]`.
+//! document `i` is the payload range `doc_offsets[i]..doc_offsets[i+1]`.
 //! The latent-variable array `z` ([`crate::lda::LdaState`]) is a flat
 //! `Vec<u16>` sharing the *same* offsets, so `(doc, pos)` maps to the one
 //! flat index `doc_offsets[doc] + pos` on both sides.
 //!
-//! Invariants (checked by [`Corpus::validate`]):
+//! Invariants (enforced at insertion by [`Corpus::push_doc`] and the
+//! `FNCP0001` writer, and re-checkable via [`Corpus::validate`]):
 //!
 //! * `doc_offsets.len() == num_docs() + 1`, `doc_offsets[0] == 0`,
-//!   `doc_offsets` is strictly increasing (no empty documents), and
-//!   `*doc_offsets.last() == tokens.len()`;
-//! * every entry of `tokens` is `< vocab`.
+//!   `doc_offsets` is strictly increasing (**no empty documents**), and
+//!   `*doc_offsets.last() == num_tokens()`;
+//! * every token id is `< vocab`.
 //!
 //! Why flat: at the paper's scale (millions of documents, billions of
 //! tokens) a `Vec<Vec<u32>>` costs one heap allocation plus 24 bytes of
 //! `Vec` header per document and pointer-chases on every sweep; the CSR
-//! form is two allocations total, iterates at memcpy speed, and lets
-//! workers copy their document range with a single `extend_from_slice`.
+//! form iterates at memcpy speed, lets workers copy their document range
+//! with a single bulk read, and is exactly the shape the on-disk format
+//! stores, which is why the Disk backend can stream it.
 //!
 //! Word-major access for word-by-word sampling (F+LDA(word), Nomad
 //! subtasks `t_j`) goes through [`WordIndex`], which is CSR over the same
-//! `tokens` payload sorted by word id.
+//! occurrences sorted by word id.  The index itself is `O(num_tokens)`
+//! RAM, so word-major sampling is inherently an in-RAM affair; use the
+//! doc-major samplers for out-of-core corpora.
 
 pub mod bow;
+pub mod disk;
 pub mod partition;
 pub mod presets;
 pub mod stats;
 pub mod synthetic;
 pub mod text;
 
+pub use disk::{
+    peak_resident_corpus_bytes, reset_peak_resident_corpus_bytes, resident_corpus_bytes,
+    FncorpusSummary, FncorpusWriter,
+};
 pub use partition::Partition;
 pub use presets::preset;
 pub use stats::CorpusStats;
 
-/// A token-expanded bag-of-words corpus in flat CSR form (see the module
-/// docs for the layout and its invariants).
+use std::ops::{Deref, Range};
+use std::path::Path;
+
+/// Default sliding read-window size for disk-backed sweeps, in tokens
+/// (1 Mi tokens = 4 MiB resident).
+pub const DEFAULT_WINDOW_TOKENS: usize = 1 << 20;
+
+/// Where the token payload lives (see the module docs).
+#[derive(Clone, Debug)]
+enum Store {
+    Ram(Vec<u32>),
+    Disk(disk::DiskCsr),
+}
+
+/// A token-expanded bag-of-words corpus in flat CSR form over a Ram or
+/// Disk payload store (see the module docs for layout and invariants).
+///
+/// Fields are private by design: everything outside `corpus/` goes
+/// through the backend-neutral accessors, which is what lets the Disk
+/// backend exist at all.
 #[derive(Clone, Debug)]
 pub struct Corpus {
-    /// vocabulary id of every occurrence, documents back to back
-    pub tokens: Vec<u32>,
-    /// `doc_offsets[i]..doc_offsets[i+1]` is document i's slice
-    pub doc_offsets: Vec<usize>,
+    store: Store,
+    /// `doc_offsets[i]..doc_offsets[i+1]` is document i's payload range.
+    /// Always RAM-resident for both backends.
+    doc_offsets: Vec<usize>,
     /// vocabulary size J (ids are `0..vocab`)
-    pub vocab: usize,
+    vocab: usize,
     /// optional vocabulary strings (empty when synthetic/anonymous)
-    pub vocab_words: Vec<String>,
+    vocab_words: Vec<String>,
     /// dataset label for logging
-    pub name: String,
+    name: String,
 }
 
 impl Default for Corpus {
     fn default() -> Self {
         Corpus {
-            tokens: Vec::new(),
+            store: Store::Ram(Vec::new()),
             doc_offsets: vec![0],
             vocab: 0,
             vocab_words: Vec::new(),
@@ -69,10 +126,16 @@ impl Default for Corpus {
 }
 
 impl Corpus {
-    /// Empty corpus with metadata only (documents appended via
+    /// Empty in-RAM corpus with metadata only (documents appended via
     /// [`Self::push_doc`]).
     pub fn with_meta(vocab: usize, vocab_words: Vec<String>, name: String) -> Self {
-        Corpus { tokens: Vec::new(), doc_offsets: vec![0], vocab, vocab_words, name }
+        Corpus {
+            store: Store::Ram(Vec::new()),
+            doc_offsets: vec![0],
+            vocab,
+            vocab_words,
+            name,
+        }
     }
 
     /// Flatten nested per-document token lists into the CSR layout.
@@ -83,7 +146,7 @@ impl Corpus {
         name: String,
     ) -> Self {
         let mut c = Corpus::with_meta(vocab, vocab_words, name);
-        c.tokens.reserve(docs.iter().map(|d| d.len()).sum());
+        c.reserve_tokens(docs.iter().map(|d| d.len()).sum());
         c.doc_offsets.reserve(docs.len());
         for d in &docs {
             c.push_doc(d);
@@ -91,10 +154,51 @@ impl Corpus {
         c
     }
 
+    /// Build an in-RAM corpus directly from CSR parts, validating the
+    /// invariants.
+    pub fn from_csr_parts(
+        tokens: Vec<u32>,
+        doc_offsets: Vec<usize>,
+        vocab: usize,
+        vocab_words: Vec<String>,
+        name: String,
+    ) -> Result<Self, String> {
+        if doc_offsets.is_empty() {
+            return Err("doc_offsets must hold at least the leading 0".into());
+        }
+        let c = Corpus { store: Store::Ram(tokens), doc_offsets, vocab, vocab_words, name };
+        c.validate()?;
+        Ok(c)
+    }
+
     /// Append one document (its word ids, in occurrence order).
+    ///
+    /// # Panics
+    ///
+    /// On an empty document — the no-empty-docs invariant is enforced at
+    /// insertion time, not just in the after-the-fact [`Self::validate`]
+    /// — and on a disk-backed corpus, which is read-only (build new
+    /// files through [`FncorpusWriter`]).
     pub fn push_doc(&mut self, toks: &[u32]) {
-        self.tokens.extend_from_slice(toks);
-        self.doc_offsets.push(self.tokens.len());
+        assert!(
+            !toks.is_empty(),
+            "corpus invariant: empty document rejected at insertion (doc {})",
+            self.num_docs()
+        );
+        match &mut self.store {
+            Store::Ram(tokens) => {
+                tokens.extend_from_slice(toks);
+                self.doc_offsets.push(tokens.len());
+            }
+            Store::Disk(_) => panic!("cannot append documents to a disk-backed corpus"),
+        }
+    }
+
+    /// Capacity hint for the Ram payload (no-op for Disk).
+    pub fn reserve_tokens(&mut self, additional: usize) {
+        if let Store::Ram(tokens) = &mut self.store {
+            tokens.reserve(additional);
+        }
     }
 
     /// Number of documents I.
@@ -103,16 +207,59 @@ impl Corpus {
         self.doc_offsets.len() - 1
     }
 
-    /// Total token count Σ_i n_i (O(1) under CSR).
+    /// Total token count Σ_i n_i (O(1) under CSR for both backends).
     #[inline]
     pub fn num_tokens(&self) -> usize {
-        self.tokens.len()
+        *self.doc_offsets.last().unwrap()
     }
 
-    /// Document i as a token slice.
+    /// Vocabulary size J (ids are `0..vocab`).
     #[inline]
-    pub fn doc(&self, i: usize) -> &[u32] {
-        &self.tokens[self.doc_offsets[i]..self.doc_offsets[i + 1]]
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Vocabulary strings (empty when synthetic/anonymous).
+    #[inline]
+    pub fn vocab_words(&self) -> &[String] {
+        &self.vocab_words
+    }
+
+    /// Dataset label for logging.
+    #[inline]
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The CSR doc-offset table (always RAM-resident; `offsets()[i]` is
+    /// the flat token index where document i starts — the shared base
+    /// for the `z` array).
+    #[inline]
+    pub fn offsets(&self) -> &[usize] {
+        &self.doc_offsets
+    }
+
+    /// Whether the token payload streams from an `.fncorpus` file.
+    pub fn is_on_disk(&self) -> bool {
+        matches!(self.store, Store::Disk(_))
+    }
+
+    /// Document i's tokens: a borrowed slice for Ram, a small owned read
+    /// for Disk.
+    #[inline]
+    pub fn doc(&self, i: usize) -> DocRef<'_> {
+        let lo = self.doc_offsets[i];
+        let hi = self.doc_offsets[i + 1];
+        match &self.store {
+            Store::Ram(tokens) => DocRef::Borrowed(&tokens[lo..hi]),
+            Store::Disk(csr) => {
+                let mut v = Vec::with_capacity(hi - lo);
+                csr.try_read_tokens_into(lo, hi - lo, &mut v)
+                    .unwrap_or_else(|e| panic!("{e}"));
+                disk::note_transient(v.capacity() * 4);
+                DocRef::Owned(v)
+            }
+        }
     }
 
     /// Length of document i (O(1)).
@@ -121,34 +268,122 @@ impl Corpus {
         self.doc_offsets[i + 1] - self.doc_offsets[i]
     }
 
-    /// Iterate documents in order as token slices.
+    /// Iterate documents in order.  Convenience for metadata-scale scans;
+    /// on the Disk backend each document is its own read, so hot sweeps
+    /// should use [`Self::docs_in`] instead.
     #[inline]
-    pub fn docs(&self) -> impl Iterator<Item = &[u32]> + '_ {
-        self.doc_offsets.windows(2).map(move |w| &self.tokens[w[0]..w[1]])
+    pub fn docs(&self) -> Docs<'_> {
+        Docs { corpus: self, next: 0 }
+    }
+
+    /// Sweep a document range through a bounded read window: the lending
+    /// iterator yields `(doc_index, tokens)` pairs whose slices stay
+    /// valid until the next call.
+    ///
+    /// Ram: zero-copy subslices, no buffering.  Disk: at most
+    /// `window_tokens` tokens (as set by [`Self::open_fncorpus`]) are
+    /// resident at once, except for single documents longer than the
+    /// window, which are read whole.
+    pub fn docs_in(&self, range: Range<usize>) -> DocSweep<'_> {
+        assert!(
+            range.start <= range.end && range.end <= self.num_docs(),
+            "docs_in({}..{}) out of bounds for {} docs",
+            range.start,
+            range.end,
+            self.num_docs()
+        );
+        DocSweep {
+            corpus: self,
+            next: range.start,
+            end: range.end,
+            window: disk::TrackedBuf::new(),
+            window_base: 0,
+            window_len: 0,
+        }
+    }
+
+    /// Replace `out` with the concatenated tokens of documents
+    /// `range.start..range.end` (one bulk read on Disk).
+    pub fn doc_range_into(&self, range: Range<usize>, out: &mut Vec<u32>) {
+        assert!(
+            range.start <= range.end && range.end <= self.num_docs(),
+            "doc_range_into({}..{}) out of bounds for {} docs",
+            range.start,
+            range.end,
+            self.num_docs()
+        );
+        out.clear();
+        let lo = self.doc_offsets[range.start];
+        let hi = self.doc_offsets[range.end];
+        match &self.store {
+            Store::Ram(tokens) => out.extend_from_slice(&tokens[lo..hi]),
+            Store::Disk(csr) => {
+                csr.try_read_tokens_into(lo, hi - lo, out)
+                    .unwrap_or_else(|e| panic!("{e}"));
+                disk::note_transient(out.capacity() * 4);
+            }
+        }
+    }
+
+    /// Materialize documents `start..end` as a rebased [`CorpusSlice`] —
+    /// the worker-spawn payload.  A coordinator streaming from Disk can
+    /// feed remote workers shards of a corpus it never fully loads.
+    pub fn read_range(&self, start: usize, end: usize) -> CorpusSlice {
+        let base = self.doc_offsets[start];
+        let offsets: Vec<usize> =
+            self.doc_offsets[start..=end].iter().map(|&o| o - base).collect();
+        let mut tokens = Vec::new();
+        self.doc_range_into(start..end, &mut tokens);
+        CorpusSlice { start_doc: start, offsets, tokens, vocab: self.vocab }
+    }
+
+    /// Materialize the whole token payload (tests and diagnostics; on
+    /// Disk this reads the entire file).
+    pub fn tokens_vec(&self) -> Vec<u32> {
+        let mut v = Vec::new();
+        self.doc_range_into(0..self.num_docs(), &mut v);
+        v
     }
 
     /// Validate structural invariants (CSR shape, every id < vocab, no
-    /// empty docs).
+    /// empty docs).  On Disk this streams the payload through the
+    /// bounds-checked decoder window by window.
     pub fn validate(&self) -> Result<(), String> {
         if self.doc_offsets.first() != Some(&0) {
             return Err("doc_offsets must start at 0".into());
-        }
-        if *self.doc_offsets.last().unwrap() != self.tokens.len() {
-            return Err(format!(
-                "doc_offsets ends at {}, tokens.len() is {}",
-                self.doc_offsets.last().unwrap(),
-                self.tokens.len()
-            ));
         }
         for (i, w) in self.doc_offsets.windows(2).enumerate() {
             if w[1] <= w[0] {
                 return Err(format!("document {i} is empty"));
             }
         }
-        for (at, &w) in self.tokens.iter().enumerate() {
-            if w as usize >= self.vocab {
-                let i = self.doc_of_token(at);
-                return Err(format!("doc {i}: word id {w} >= vocab {}", self.vocab));
+        match &self.store {
+            Store::Ram(tokens) => {
+                if *self.doc_offsets.last().unwrap() != tokens.len() {
+                    return Err(format!(
+                        "doc_offsets ends at {}, tokens.len() is {}",
+                        self.doc_offsets.last().unwrap(),
+                        tokens.len()
+                    ));
+                }
+                for (at, &w) in tokens.iter().enumerate() {
+                    if w as usize >= self.vocab {
+                        let i = self.doc_of_token(at);
+                        return Err(format!("doc {i}: word id {w} >= vocab {}", self.vocab));
+                    }
+                }
+            }
+            Store::Disk(csr) => {
+                let total = self.num_tokens();
+                let window = csr.window_tokens();
+                let mut buf = Vec::new();
+                let mut at = 0usize;
+                while at < total {
+                    let n = (total - at).min(window);
+                    buf.clear();
+                    csr.try_read_tokens_into(at, n, &mut buf)?;
+                    at += n;
+                }
             }
         }
         if !self.vocab_words.is_empty() && self.vocab_words.len() != self.vocab {
@@ -166,9 +401,263 @@ impl Corpus {
         self.doc_offsets.partition_point(|&o| o <= at) - 1
     }
 
-    /// Build the word-major occurrence index.
+    /// Build the word-major occurrence index (`O(num_tokens)` RAM even
+    /// for disk-backed corpora — see the module docs).
     pub fn word_index(&self) -> WordIndex {
         WordIndex::build(self)
+    }
+
+    /// Write this corpus as an `FNCP0001` file (atomic, fingerprinted).
+    pub fn write_fncorpus(&self, path: &Path) -> Result<FncorpusSummary, String> {
+        let mut w =
+            FncorpusWriter::create(path, self.vocab, self.vocab_words.clone(), &self.name)?;
+        let mut sweep = self.docs_in(0..self.num_docs());
+        while let Some((_, d)) = sweep.next_doc() {
+            w.push_doc(d)?;
+        }
+        w.finish()
+    }
+
+    /// Open an `.fncorpus` file for out-of-core streaming access with
+    /// the given read-window size (in tokens; see
+    /// [`DEFAULT_WINDOW_TOKENS`]).
+    pub fn open_fncorpus(path: &Path, window_tokens: usize) -> Result<Corpus, String> {
+        let o = disk::open(path, window_tokens)?;
+        Ok(Corpus {
+            store: Store::Disk(o.csr),
+            doc_offsets: o.doc_offsets,
+            vocab: o.vocab,
+            vocab_words: o.vocab_words,
+            name: o.name,
+        })
+    }
+
+    /// Load an `.fncorpus` file fully into RAM, verifying its trailer
+    /// fingerprint first.
+    pub fn load_fncorpus_ram(path: &Path) -> Result<Corpus, String> {
+        let l = disk::load_ram(path)?;
+        Ok(Corpus {
+            store: Store::Ram(l.tokens),
+            doc_offsets: l.doc_offsets,
+            vocab: l.vocab,
+            vocab_words: l.vocab_words,
+            name: l.name,
+        })
+    }
+
+    /// Path of the backing `.fncorpus` file, if disk-backed.
+    pub fn disk_path(&self) -> Option<&Path> {
+        match &self.store {
+            Store::Ram(_) => None,
+            Store::Disk(csr) => Some(csr.path()),
+        }
+    }
+}
+
+/// One document's tokens: borrowed straight out of the Ram payload, or
+/// owned when they were read from Disk.  Derefs to `&[u32]`.
+#[derive(Clone)]
+pub enum DocRef<'a> {
+    Borrowed(&'a [u32]),
+    Owned(Vec<u32>),
+}
+
+impl Deref for DocRef<'_> {
+    type Target = [u32];
+
+    #[inline]
+    fn deref(&self) -> &[u32] {
+        match self {
+            DocRef::Borrowed(s) => s,
+            DocRef::Owned(v) => v,
+        }
+    }
+}
+
+impl std::fmt::Debug for DocRef<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        std::fmt::Debug::fmt(&**self, f)
+    }
+}
+
+impl PartialEq for DocRef<'_> {
+    fn eq(&self, other: &Self) -> bool {
+        **self == **other
+    }
+}
+
+impl Eq for DocRef<'_> {}
+
+impl PartialEq<[u32]> for DocRef<'_> {
+    fn eq(&self, other: &[u32]) -> bool {
+        **self == *other
+    }
+}
+
+impl PartialEq<&[u32]> for DocRef<'_> {
+    fn eq(&self, other: &&[u32]) -> bool {
+        **self == **other
+    }
+}
+
+impl PartialEq<Vec<u32>> for DocRef<'_> {
+    fn eq(&self, other: &Vec<u32>) -> bool {
+        **self == other[..]
+    }
+}
+
+impl<const N: usize> PartialEq<[u32; N]> for DocRef<'_> {
+    fn eq(&self, other: &[u32; N]) -> bool {
+        **self == other[..]
+    }
+}
+
+impl<const N: usize> PartialEq<&[u32; N]> for DocRef<'_> {
+    fn eq(&self, other: &&[u32; N]) -> bool {
+        **self == other[..]
+    }
+}
+
+/// In-order document iterator (see [`Corpus::docs`]).
+pub struct Docs<'a> {
+    corpus: &'a Corpus,
+    next: usize,
+}
+
+impl<'a> Iterator for Docs<'a> {
+    type Item = DocRef<'a>;
+
+    fn next(&mut self) -> Option<DocRef<'a>> {
+        if self.next >= self.corpus.num_docs() {
+            return None;
+        }
+        let d = self.corpus.doc(self.next);
+        self.next += 1;
+        Some(d)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let n = self.corpus.num_docs() - self.next;
+        (n, Some(n))
+    }
+}
+
+impl ExactSizeIterator for Docs<'_> {}
+
+/// Lending sweep over a document range (see [`Corpus::docs_in`]): call
+/// [`next_doc`] in a `while let` loop.  Not a `std::iter::Iterator`
+/// because the yielded slice borrows the internal read window.
+///
+/// [`next_doc`]: DocSweep::next_doc
+pub struct DocSweep<'a> {
+    corpus: &'a Corpus,
+    next: usize,
+    end: usize,
+    window: disk::TrackedBuf,
+    /// flat token index of `window[0]`
+    window_base: usize,
+    window_len: usize,
+}
+
+impl DocSweep<'_> {
+    /// The next `(doc_index, tokens)` pair, or `None` past the range
+    /// end.  The slice is valid until the next call.
+    #[inline]
+    pub fn next_doc(&mut self) -> Option<(usize, &[u32])> {
+        if self.next >= self.end {
+            return None;
+        }
+        let i = self.next;
+        self.next += 1;
+        // hoist the `&'a Corpus` so the store borrow is disjoint from
+        // the `&mut self.window` the Disk arm needs
+        let corpus = self.corpus;
+        let lo = corpus.doc_offsets[i];
+        let hi = corpus.doc_offsets[i + 1];
+        match &corpus.store {
+            Store::Ram(tokens) => Some((i, &tokens[lo..hi])),
+            Store::Disk(csr) => {
+                if lo < self.window_base || hi > self.window_base + self.window_len {
+                    // slide the window: start at this doc, extend to the
+                    // window budget (or this doc's end if it is longer),
+                    // clipped to the sweep's final token
+                    let span_end = corpus.doc_offsets[self.end];
+                    let want = (lo + csr.window_tokens().max(hi - lo)).min(span_end);
+                    self.window.fill(csr, lo, want - lo);
+                    self.window_base = lo;
+                    self.window_len = want - lo;
+                }
+                Some((i, &self.window.as_slice()[lo - self.window_base..hi - self.window_base]))
+            }
+        }
+    }
+}
+
+/// A rebased, materialized shard of a corpus: documents
+/// `start_doc..start_doc + num_docs()` with `offsets[0] == 0`.  This is
+/// what worker constructors consume and what the wire-level `Init`
+/// message carries — the worker side never sees a [`Corpus`].
+#[derive(Clone, Debug)]
+pub struct CorpusSlice {
+    /// global index of the first document in the slice
+    pub start_doc: usize,
+    /// rebased CSR offsets: `offsets[i]..offsets[i+1]` indexes `tokens`
+    pub offsets: Vec<usize>,
+    /// the shard's token payload
+    pub tokens: Vec<u32>,
+    /// vocabulary size of the parent corpus
+    pub vocab: usize,
+}
+
+impl CorpusSlice {
+    /// Validate and assemble a slice from raw parts (the deserialization
+    /// path for wire `Init` payloads).
+    pub fn from_parts(
+        start_doc: usize,
+        offsets: Vec<usize>,
+        tokens: Vec<u32>,
+        vocab: usize,
+    ) -> Result<CorpusSlice, String> {
+        if offsets.is_empty() {
+            return Err("doc_offsets must hold at least the leading 0".into());
+        }
+        if offsets[0] != 0 {
+            return Err(format!("doc_offsets must start at 0 (got {})", offsets[0]));
+        }
+        for (i, w) in offsets.windows(2).enumerate() {
+            if w[1] <= w[0] {
+                return Err(format!("document {} is empty or offsets are unordered", start_doc + i));
+            }
+        }
+        if *offsets.last().unwrap() != tokens.len() {
+            return Err(format!(
+                "doc_offsets ends at {}, tokens.len() is {}",
+                offsets.last().unwrap(),
+                tokens.len()
+            ));
+        }
+        if let Some(&w) = tokens.iter().find(|&&w| w as usize >= vocab) {
+            return Err(format!("word id {w} >= vocab {vocab}"));
+        }
+        Ok(CorpusSlice { start_doc, offsets, tokens, vocab })
+    }
+
+    /// Number of documents in the slice.
+    #[inline]
+    pub fn num_docs(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Token count of the slice.
+    #[inline]
+    pub fn num_tokens(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Local document `i` (0-based within the slice) as a token slice.
+    #[inline]
+    pub fn doc(&self, i: usize) -> &[u32] {
+        &self.tokens[self.offsets[i]..self.offsets[i + 1]]
     }
 }
 
@@ -187,9 +676,12 @@ pub struct WordIndex {
 
 impl WordIndex {
     pub fn build(corpus: &Corpus) -> Self {
-        let mut counts = vec![0usize; corpus.vocab + 1];
-        for &w in &corpus.tokens {
-            counts[w as usize + 1] += 1;
+        let mut counts = vec![0usize; corpus.vocab() + 1];
+        let mut sweep = corpus.docs_in(0..corpus.num_docs());
+        while let Some((_, d)) = sweep.next_doc() {
+            for &w in d {
+                counts[w as usize + 1] += 1;
+            }
         }
         for j in 1..counts.len() {
             counts[j] += counts[j - 1];
@@ -199,7 +691,8 @@ impl WordIndex {
         let mut doc_of = vec![0u32; total];
         let mut pos_of = vec![0u32; total];
         let mut cursor = offsets.clone();
-        for (i, d) in corpus.docs().enumerate() {
+        let mut sweep = corpus.docs_in(0..corpus.num_docs());
+        while let Some((i, d)) = sweep.next_doc() {
             for (p, &w) in d.iter().enumerate() {
                 let at = cursor[w as usize];
                 doc_of[at] = i as u32;
@@ -242,6 +735,12 @@ pub(crate) mod tests {
         )
     }
 
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("fnomad_corpus_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
     #[test]
     fn counts() {
         let c = tiny();
@@ -253,13 +752,13 @@ pub(crate) mod tests {
     #[test]
     fn csr_layout_shape() {
         let c = tiny();
-        assert_eq!(c.doc_offsets, vec![0, 4, 7, 9]);
-        assert_eq!(c.tokens, vec![0, 1, 1, 2, 2, 2, 3, 0, 3]);
+        assert_eq!(c.offsets(), &[0, 4, 7, 9]);
+        assert_eq!(c.tokens_vec(), vec![0, 1, 1, 2, 2, 2, 3, 0, 3]);
         assert_eq!(c.doc(0), &[0, 1, 1, 2]);
         assert_eq!(c.doc(1), &[2, 2, 3]);
         assert_eq!(c.doc(2), &[0, 3]);
         assert_eq!(c.doc_len(1), 3);
-        let collected: Vec<&[u32]> = c.docs().collect();
+        let collected: Vec<DocRef<'_>> = c.docs().collect();
         assert_eq!(collected.len(), 3);
         assert_eq!(collected[2], &[0, 3]);
     }
@@ -272,10 +771,10 @@ pub(crate) mod tests {
     }
 
     #[test]
-    fn validate_catches_empty_doc() {
+    #[should_panic(expected = "empty document rejected at insertion")]
+    fn push_doc_rejects_empty_doc() {
         let mut c = tiny();
         c.push_doc(&[]);
-        assert!(c.validate().is_err());
     }
 
     #[test]
@@ -302,5 +801,80 @@ pub(crate) mod tests {
         assert_eq!(seen, c.num_tokens());
         assert_eq!(idx.count(1), 2);
         assert_eq!(idx.count(2), 3);
+    }
+
+    #[test]
+    fn sweep_matches_docs_for_ram() {
+        let c = tiny();
+        let mut sweep = c.docs_in(0..c.num_docs());
+        let mut seen = Vec::new();
+        while let Some((i, d)) = sweep.next_doc() {
+            seen.push((i, d.to_vec()));
+        }
+        assert_eq!(seen.len(), 3);
+        assert_eq!(seen[0], (0, vec![0, 1, 1, 2]));
+        assert_eq!(seen[2], (2, vec![0, 3]));
+    }
+
+    #[test]
+    fn read_range_rebases_offsets() {
+        let c = tiny();
+        let s = c.read_range(1, 3);
+        assert_eq!(s.start_doc, 1);
+        assert_eq!(s.offsets, vec![0, 3, 5]);
+        assert_eq!(s.tokens, vec![2, 2, 3, 0, 3]);
+        assert_eq!(s.vocab, 4);
+        assert_eq!(s.num_docs(), 2);
+        assert_eq!(s.doc(1), &[0, 3]);
+    }
+
+    #[test]
+    fn slice_from_parts_validates() {
+        assert!(CorpusSlice::from_parts(0, vec![0, 2, 3], vec![0, 1, 2], 4).is_ok());
+        let err = CorpusSlice::from_parts(0, vec![], vec![], 4).unwrap_err();
+        assert!(err.contains("leading 0"), "{err}");
+        let err = CorpusSlice::from_parts(0, vec![1, 2], vec![0, 1], 4).unwrap_err();
+        assert!(err.contains("start at 0"), "{err}");
+        let err = CorpusSlice::from_parts(5, vec![0, 1, 1], vec![0], 4).unwrap_err();
+        assert!(err.contains("document 6 is empty"), "{err}");
+        let err = CorpusSlice::from_parts(0, vec![0, 2], vec![0, 1, 2], 4).unwrap_err();
+        assert!(err.contains("tokens.len()"), "{err}");
+        let err = CorpusSlice::from_parts(0, vec![0, 2], vec![0, 9], 4).unwrap_err();
+        assert!(err.contains(">= vocab"), "{err}");
+    }
+
+    #[test]
+    fn disk_backend_matches_ram_accessors() {
+        let path = tmp("accessors.fncorpus");
+        let ram = tiny();
+        ram.write_fncorpus(&path).unwrap();
+        // window of 4 tokens forces the sweep to slide mid-corpus
+        let dsk = Corpus::open_fncorpus(&path, 4).unwrap();
+        assert!(dsk.is_on_disk());
+        assert_eq!(dsk.disk_path(), Some(path.as_path()));
+        assert_eq!(dsk.num_docs(), ram.num_docs());
+        assert_eq!(dsk.num_tokens(), ram.num_tokens());
+        assert_eq!(dsk.vocab(), ram.vocab());
+        assert_eq!(dsk.name(), ram.name());
+        assert_eq!(dsk.offsets(), ram.offsets());
+        assert_eq!(dsk.tokens_vec(), ram.tokens_vec());
+        for i in 0..ram.num_docs() {
+            assert_eq!(dsk.doc(i), ram.doc(i));
+        }
+        let mut sweep = dsk.docs_in(0..dsk.num_docs());
+        let mut flat = Vec::new();
+        while let Some((_, d)) = sweep.next_doc() {
+            flat.extend_from_slice(d);
+        }
+        assert_eq!(flat, ram.tokens_vec());
+        let s_ram = ram.read_range(1, 3);
+        let s_dsk = dsk.read_range(1, 3);
+        assert_eq!(s_ram.offsets, s_dsk.offsets);
+        assert_eq!(s_ram.tokens, s_dsk.tokens);
+        dsk.validate().unwrap();
+        let back = Corpus::load_fncorpus_ram(&path).unwrap();
+        assert!(!back.is_on_disk());
+        assert_eq!(back.tokens_vec(), ram.tokens_vec());
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -23,8 +23,10 @@ impl Partition {
         let mut start = 0usize;
         let mut acc = 0usize;
         let mut consumed = 0usize;
-        for (i, d) in corpus.docs().enumerate() {
-            acc += d.len();
+        // doc lengths come from the RAM-resident offset table, so
+        // partitioning a disk-backed corpus touches no payload bytes
+        for i in 0..corpus.num_docs() {
+            acc += corpus.doc_len(i);
             // close the range when we pass the proportional boundary,
             // keeping enough docs for the remaining workers
             let boundary = (ranges.len() + 1) as f64 * target;
@@ -75,7 +77,7 @@ impl Partition {
     pub fn loads(&self, corpus: &Corpus) -> Vec<usize> {
         self.ranges
             .iter()
-            .map(|&(s, e)| corpus.doc_offsets[e] - corpus.doc_offsets[s])
+            .map(|&(s, e)| corpus.offsets()[e] - corpus.offsets()[s])
             .collect()
     }
 

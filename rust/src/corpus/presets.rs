@@ -20,9 +20,9 @@ pub const PAPER_TABLE3: &[(&str, u64, u64, u64)] = &[
     ("UMBC", 40_599_164, 2_881_476, 1_483_145_192),
 ];
 
-/// Names of the five simulated presets.
+/// Names of the simulated presets.
 pub const PRESET_NAMES: &[&str] =
-    &["enron-sim", "nytimes-sim", "pubmed-sim", "amazon-sim", "umbc-sim", "tiny"];
+    &["enron-sim", "nytimes-sim", "pubmed-sim", "amazon-sim", "umbc-sim", "tiny", "bigzipf"];
 
 /// Resolve a preset name to a generation spec.
 ///
@@ -89,6 +89,21 @@ pub fn spec(name: &str) -> Option<SyntheticSpec> {
             avg_doc_len: 30.0,
             true_topics: 8,
             seed: 7,
+            ..Default::default()
+        },
+        // Billion-token-class Zipfian workload for the out-of-core path:
+        // ~1.02e9 tokens at full size, meant to be *streamed* to disk via
+        // `prepare-corpus --preset bigzipf` (the `--docs N` override cuts
+        // it down for smoke runs), then trained with `train --corpus`.
+        // Materializing it through `train --preset` would need the whole
+        // payload in RAM — that being unreasonable is the point.
+        "bigzipf" => SyntheticSpec {
+            name: name.into(),
+            num_docs: 12_000_000,
+            vocab: 300_000,
+            avg_doc_len: 85.0,
+            true_topics: 64,
+            seed: 106,
             ..Default::default()
         },
         _ => return None,

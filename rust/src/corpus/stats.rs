@@ -22,11 +22,12 @@ pub struct CorpusStats {
 
 impl CorpusStats {
     pub fn compute(c: &Corpus) -> Self {
-        let mut word_seen = vec![false; c.vocab];
+        let mut word_seen = vec![false; c.vocab()];
         let mut distinct_total = 0usize;
         let mut max_doc_len = 0usize;
         let mut scratch: Vec<u32> = Vec::new();
-        for d in c.docs() {
+        let mut sweep = c.docs_in(0..c.num_docs());
+        while let Some((_, d)) = sweep.next_doc() {
             max_doc_len = max_doc_len.max(d.len());
             scratch.clear();
             scratch.extend_from_slice(d);
@@ -41,9 +42,9 @@ impl CorpusStats {
         let num_tokens = c.num_tokens();
         let num_docs = c.num_docs();
         CorpusStats {
-            name: c.name.clone(),
+            name: c.name().to_string(),
             num_docs,
-            vocab: c.vocab,
+            vocab: c.vocab(),
             vocab_used,
             num_tokens,
             avg_doc_len: num_tokens as f64 / num_docs.max(1) as f64,

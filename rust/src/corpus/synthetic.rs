@@ -48,13 +48,24 @@ impl Default for SyntheticSpec {
     }
 }
 
-/// Draw a corpus from the LDA generative process.
+/// Draw a corpus from the LDA generative process, streaming each
+/// document to `sink` as it is generated.
+///
+/// This is the bounded-memory path behind [`generate`]: nothing but the
+/// per-topic CDF tables (`true_topics x vocab` f64s) and one document
+/// live in RAM, so a billion-token preset can flow straight into an
+/// `FNCP0001` writer.  The RNG consumption is identical to [`generate`],
+/// so a streamed corpus is bit-identical to the in-RAM one for the same
+/// spec.
 ///
 /// Topics are sampled as sparse multinomials via a cumulative-search table
 /// per topic; documents mix `true_topics` topics with Dirichlet(alpha)
 /// weights.  Empty documents are re-drawn (the paper discards them; at
 /// Poisson means ≥ 20 re-draws are vanishingly rare).
-pub fn generate(spec: &SyntheticSpec) -> Corpus {
+pub fn generate_with(
+    spec: &SyntheticSpec,
+    mut sink: impl FnMut(&[u32]) -> Result<(), String>,
+) -> Result<(), String> {
     let mut rng = Pcg32::new(spec.seed, 0xC0FFEE);
     let k = spec.true_topics;
     let j = spec.vocab;
@@ -82,10 +93,9 @@ pub fn generate(spec: &SyntheticSpec) -> Corpus {
 
     let mut theta = vec![0.0f64; k];
     let alpha_vec = vec![spec.alpha; k];
-    let mut corpus = Corpus::with_meta(j, Vec::new(), spec.name.clone());
-    corpus.tokens.reserve((spec.num_docs as f64 * spec.avg_doc_len) as usize);
+    let mut emitted = 0usize;
     let mut doc = Vec::new();
-    while corpus.num_docs() < spec.num_docs {
+    while emitted < spec.num_docs {
         rng.dirichlet(&alpha_vec, &mut theta);
         let len = rng.poisson(spec.avg_doc_len) as usize;
         if len == 0 {
@@ -107,9 +117,23 @@ pub fn generate(spec: &SyntheticSpec) -> Corpus {
             let w = cdf.partition_point(|&c| c <= uw).min(j - 1);
             doc.push(w as u32);
         }
-        corpus.push_doc(&doc);
+        sink(&doc)?;
+        emitted += 1;
     }
 
+    Ok(())
+}
+
+/// Draw a corpus from the LDA generative process into RAM (see
+/// [`generate_with`] for the streaming variant and the process itself).
+pub fn generate(spec: &SyntheticSpec) -> Corpus {
+    let mut corpus = Corpus::with_meta(spec.vocab, Vec::new(), spec.name.clone());
+    corpus.reserve_tokens((spec.num_docs as f64 * spec.avg_doc_len) as usize);
+    generate_with(spec, |d| {
+        corpus.push_doc(d);
+        Ok(())
+    })
+    .expect("in-RAM sink cannot fail");
     corpus
 }
 
@@ -133,7 +157,7 @@ mod tests {
     fn respects_spec_shape() {
         let c = generate(&small_spec());
         assert_eq!(c.num_docs(), 200);
-        assert_eq!(c.vocab, 500);
+        assert_eq!(c.vocab(), 500);
         c.validate().unwrap();
         let avg = c.num_tokens() as f64 / c.num_docs() as f64;
         assert!((40.0..60.0).contains(&avg), "avg len {avg}");
@@ -143,20 +167,35 @@ mod tests {
     fn deterministic_given_seed() {
         let a = generate(&small_spec());
         let b = generate(&small_spec());
-        assert_eq!(a.tokens, b.tokens);
-        assert_eq!(a.doc_offsets, b.doc_offsets);
+        assert_eq!(a.tokens_vec(), b.tokens_vec());
+        assert_eq!(a.offsets(), b.offsets());
         let mut spec = small_spec();
         spec.seed = 43;
         let c = generate(&spec);
-        assert_ne!(a.tokens, c.tokens);
+        assert_ne!(a.tokens_vec(), c.tokens_vec());
+    }
+
+    #[test]
+    fn streamed_generation_matches_in_ram() {
+        let a = generate(&small_spec());
+        let mut flat = Vec::new();
+        let mut lens = Vec::new();
+        generate_with(&small_spec(), |d| {
+            flat.extend_from_slice(d);
+            lens.push(d.len());
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(flat, a.tokens_vec());
+        assert_eq!(lens.len(), a.num_docs());
     }
 
     #[test]
     fn word_frequencies_are_skewed() {
         // Zipf base measure => head words much more frequent than tail
         let c = generate(&small_spec());
-        let mut freq = vec![0usize; c.vocab];
-        for &w in &c.tokens {
+        let mut freq = vec![0usize; c.vocab()];
+        for &w in &c.tokens_vec() {
             freq[w as usize] += 1;
         }
         freq.sort_unstable_by(|a, b| b.cmp(a));

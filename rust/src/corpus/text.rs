@@ -6,8 +6,10 @@
 //! reviews").
 
 use std::collections::HashMap;
+use std::io::{BufRead, BufReader};
+use std::path::Path;
 
-use super::Corpus;
+use super::{disk::FncorpusSummary, Corpus, FncorpusWriter};
 
 /// Lowercasing alphabetic tokenizer: maximal runs of ASCII letters.
 pub fn tokenize(text: &str) -> Vec<String> {
@@ -289,6 +291,56 @@ impl Default for PipelineOpts {
     }
 }
 
+/// One document's tokens after normalization (tokenize, stop-word
+/// filter, stemming, short-token drop) — the shared front half of the
+/// in-RAM and streaming builders.
+fn normalize(text: &str, opts: &PipelineOpts) -> Vec<String> {
+    let mut toks = Vec::new();
+    for tok in tokenize(text) {
+        if opts.remove_stop_words && is_stop_word(&tok) {
+            continue;
+        }
+        let tok = if opts.stem { porter_stem(&tok) } else { tok };
+        if tok.len() < 2 {
+            continue;
+        }
+        toks.push(tok);
+    }
+    toks
+}
+
+/// Update term/document frequency maps with one normalized document.
+fn count_terms(
+    toks: &[String],
+    total_count: &mut HashMap<String, usize>,
+    doc_count: &mut HashMap<String, usize>,
+) {
+    let mut uniq: Vec<&String> = toks.iter().collect();
+    uniq.sort_unstable();
+    uniq.dedup();
+    for w in uniq {
+        *doc_count.entry(w.clone()).or_insert(0) += 1;
+    }
+    for w in toks {
+        *total_count.entry(w.clone()).or_insert(0) += 1;
+    }
+}
+
+/// The vocabulary surviving the frequency thresholds, sorted.
+fn surviving_vocab(
+    total_count: &HashMap<String, usize>,
+    doc_count: &HashMap<String, usize>,
+    opts: &PipelineOpts,
+) -> Vec<String> {
+    let mut vocab_words: Vec<String> = total_count
+        .iter()
+        .filter(|(w, &c)| c >= opts.min_count && doc_count[*w] >= opts.min_docs)
+        .map(|(w, _)| w.clone())
+        .collect();
+    vocab_words.sort_unstable();
+    vocab_words
+}
+
 /// Build a [`Corpus`] from raw document texts.  Documents left empty after
 /// preprocessing are discarded (as the paper does).
 pub fn build_corpus(texts: &[String], opts: &PipelineOpts, name: &str) -> Corpus {
@@ -297,35 +349,12 @@ pub fn build_corpus(texts: &[String], opts: &PipelineOpts, name: &str) -> Corpus
     let mut total_count: HashMap<String, usize> = HashMap::new();
     let mut doc_count: HashMap<String, usize> = HashMap::new();
     for text in texts {
-        let mut toks = Vec::new();
-        for tok in tokenize(text) {
-            if opts.remove_stop_words && is_stop_word(&tok) {
-                continue;
-            }
-            let tok = if opts.stem { porter_stem(&tok) } else { tok };
-            if tok.len() < 2 {
-                continue;
-            }
-            toks.push(tok);
-        }
-        let mut uniq: Vec<&String> = toks.iter().collect();
-        uniq.sort_unstable();
-        uniq.dedup();
-        for w in uniq {
-            *doc_count.entry(w.clone()).or_insert(0) += 1;
-        }
-        for w in &toks {
-            *total_count.entry(w.clone()).or_insert(0) += 1;
-        }
+        let toks = normalize(text, opts);
+        count_terms(&toks, &mut total_count, &mut doc_count);
         processed.push(toks);
     }
-    // pass 2: build vocab over surviving words
-    let mut vocab_words: Vec<String> = total_count
-        .iter()
-        .filter(|(w, &c)| c >= opts.min_count && doc_count[*w] >= opts.min_docs)
-        .map(|(w, _)| w.clone())
-        .collect();
-    vocab_words.sort_unstable();
+    // pass 2: build vocab over surviving words, then map docs to ids
+    let vocab_words = surviving_vocab(&total_count, &doc_count, opts);
     let index: HashMap<&String, u32> =
         vocab_words.iter().enumerate().map(|(i, w)| (w, i as u32)).collect();
     let mut corpus =
@@ -338,6 +367,54 @@ pub fn build_corpus(texts: &[String], opts: &PipelineOpts, name: &str) -> Corpus
     }
     corpus.vocab_words = vocab_words;
     corpus
+}
+
+/// Stream a newline-delimited text file (one document per line) into an
+/// `FNCP0001` corpus with bounded memory: pass 1 scans the file to count
+/// term/document frequencies (`O(vocab)` RAM), pass 2 re-normalizes each
+/// line and appends its ids straight to the streaming writer — no
+/// in-RAM token array at any point.  Returns the write summary and the
+/// number of documents dropped for being empty after preprocessing.
+pub fn stream_lines_to_fncorpus(
+    input: &Path,
+    opts: &PipelineOpts,
+    name: &str,
+    dest: &Path,
+) -> Result<(FncorpusSummary, usize), String> {
+    let open = || -> Result<BufReader<std::fs::File>, String> {
+        std::fs::File::open(input)
+            .map(BufReader::new)
+            .map_err(|e| format!("{}: {e}", input.display()))
+    };
+    let mut total_count: HashMap<String, usize> = HashMap::new();
+    let mut doc_count: HashMap<String, usize> = HashMap::new();
+    for line in open()?.lines() {
+        let line = line.map_err(|e| format!("{}: {e}", input.display()))?;
+        let toks = normalize(&line, opts);
+        count_terms(&toks, &mut total_count, &mut doc_count);
+    }
+    let vocab_words = surviving_vocab(&total_count, &doc_count, opts);
+    let index: HashMap<String, u32> = vocab_words
+        .iter()
+        .enumerate()
+        .map(|(i, w)| (w.clone(), i as u32))
+        .collect();
+    let mut writer = FncorpusWriter::create(dest, index.len(), vocab_words, name)?;
+    let mut skipped = 0usize;
+    for line in open()?.lines() {
+        let line = line.map_err(|e| format!("{}: {e}", input.display()))?;
+        let ids: Vec<u32> = normalize(&line, opts)
+            .iter()
+            .filter_map(|w| index.get(w).copied())
+            .collect();
+        if ids.is_empty() {
+            skipped += 1;
+        } else {
+            writer.push_doc(&ids)?;
+        }
+    }
+    let summary = writer.finish()?;
+    Ok((summary, skipped))
 }
 
 #[cfg(test)]
@@ -475,5 +552,40 @@ mod tests {
         let opts = PipelineOpts { min_count: 3, min_docs: 1, ..Default::default() };
         let c = build_corpus(&texts, &opts, "drop");
         assert_eq!(c.num_docs(), 1);
+    }
+
+    #[test]
+    fn streamed_pipeline_matches_in_ram_builder() {
+        let texts = vec![
+            "The quick brown foxes are running and jumping over the lazy dogs".to_string(),
+            "Foxes run. Dogs jump. Foxes and dogs are animals.".to_string(),
+            "Running dogs chase jumping foxes in the park".to_string(),
+            "dogs dogs dogs foxes foxes running".to_string(),
+            "only rare words here".to_string(),
+            "a fox and a dog run in the park".to_string(),
+        ];
+        let opts = PipelineOpts { min_count: 2, min_docs: 2, ..Default::default() };
+        let in_ram = build_corpus(&texts, &opts, "pipe");
+
+        let dir = std::env::temp_dir().join("fnomad_text_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let input = dir.join(format!("lines-{}.txt", std::process::id()));
+        let dest = dir.join(format!("lines-{}.fncorpus", std::process::id()));
+        std::fs::write(&input, texts.join("\n")).unwrap();
+
+        let (summary, skipped) =
+            stream_lines_to_fncorpus(&input, &opts, "pipe", &dest).unwrap();
+        assert_eq!(summary.num_docs, in_ram.num_docs());
+        assert_eq!(summary.num_tokens, in_ram.num_tokens());
+        // "only rare words here" normalizes to terms below the thresholds
+        assert_eq!(skipped, texts.len() - in_ram.num_docs());
+
+        let streamed = Corpus::load_fncorpus_ram(&dest).unwrap();
+        assert_eq!(streamed.tokens_vec(), in_ram.tokens_vec());
+        assert_eq!(streamed.offsets(), in_ram.offsets());
+        assert_eq!(streamed.vocab(), in_ram.vocab());
+        assert_eq!(streamed.vocab_words(), in_ram.vocab_words());
+        let _ = std::fs::remove_file(&input);
+        let _ = std::fs::remove_file(&dest);
     }
 }

@@ -271,10 +271,10 @@ pub fn infer_batch(
     if threads == 0 {
         return Err("infer_batch needs at least one thread".into());
     }
-    if corpus.vocab > model.vocab() {
+    if corpus.vocab() > model.vocab() {
         return Err(format!(
             "corpus vocabulary {} exceeds the model's {}",
-            corpus.vocab,
+            corpus.vocab(),
             model.vocab()
         ));
     }
@@ -291,7 +291,7 @@ pub fn infer_batch(
                 let mut inf = Inferencer::new(model);
                 for (j, slot) in slots.iter_mut().enumerate() {
                     let doc = c * chunk + j;
-                    *slot = Some(inf.infer_doc_indexed(corpus.doc(doc), doc as u64, opts)?);
+                    *slot = Some(inf.infer_doc_indexed(&corpus.doc(doc), doc as u64, opts)?);
                 }
                 Ok(())
             }));
@@ -329,7 +329,7 @@ mod tests {
     fn theta_is_a_distribution() {
         let (corpus, model) = trained();
         let mut inf = Inferencer::new(&model);
-        let res = inf.infer_doc(corpus.doc(0), &InferOpts::default()).unwrap();
+        let res = inf.infer_doc(&corpus.doc(0), &InferOpts::default()).unwrap();
         assert_eq!(res.theta.len(), model.num_topics());
         let sum: f64 = res.theta.iter().sum();
         assert!((sum - 1.0).abs() < 1e-9, "theta sums to {sum}");
@@ -351,7 +351,7 @@ mod tests {
             assert!((th - 1.0 / model.num_topics() as f64).abs() < 1e-12);
         }
         let res = inf
-            .infer_doc(corpus.doc(1), &InferOpts { sweeps: 0, seed: 5 })
+            .infer_doc(&corpus.doc(1), &InferOpts { sweeps: 0, seed: 5 })
             .unwrap();
         assert_eq!(res.counts.total() as usize, corpus.doc(1).len());
     }
@@ -378,9 +378,9 @@ mod tests {
         let mut a = Inferencer::new(&model);
         let mut b = Inferencer::new(&model);
         // warm engine `a` on other docs first: scratch reuse must not leak
-        let _ = a.infer_doc(corpus.doc(5), &opts).unwrap();
-        let ra = a.infer_doc(corpus.doc(0), &opts).unwrap();
-        let rb = b.infer_doc(corpus.doc(0), &opts).unwrap();
+        let _ = a.infer_doc(&corpus.doc(5), &opts).unwrap();
+        let ra = a.infer_doc(&corpus.doc(0), &opts).unwrap();
+        let rb = b.infer_doc(&corpus.doc(0), &opts).unwrap();
         assert_eq!(ra.theta, rb.theta);
         assert_eq!(ra.counts, rb.counts);
     }
@@ -401,7 +401,7 @@ mod tests {
         }
         // and doc 0 of the batch matches the single-doc entry point
         let mut inf = Inferencer::new(&model);
-        let single = inf.infer_doc(corpus.doc(0), &opts).unwrap();
+        let single = inf.infer_doc(&corpus.doc(0), &opts).unwrap();
         assert_eq!(single.theta, one[0].theta);
     }
 
@@ -445,7 +445,7 @@ mod tests {
         let (corpus, model) = trained();
         let mut inf = Inferencer::new(&model);
         for d in 0..10 {
-            let _ = inf.infer_doc(corpus.doc(d), &InferOpts::default()).unwrap();
+            let _ = inf.infer_doc(&corpus.doc(d), &InferOpts::default()).unwrap();
             for t in 0..model.num_topics() {
                 let got = inf.tree.leaf(t);
                 let want = inf.base[t];
@@ -512,7 +512,7 @@ mod tests {
     fn score_doc_is_finite_and_negative() {
         let (corpus, model) = trained();
         let mut inf = Inferencer::new(&model);
-        let score = inf.score_doc(corpus.doc(2), &InferOpts::default()).unwrap();
+        let score = inf.score_doc(&corpus.doc(2), &InferOpts::default()).unwrap();
         assert_eq!(score.held_tokens, corpus.doc(2).len() - corpus.doc(2).len() / 2);
         assert!(score.log_likelihood.is_finite());
         assert!(score.log_likelihood < 0.0);
@@ -531,8 +531,12 @@ mod tests {
         assert!(infer_batch(&model, &corpus, &InferOpts::default(), 0)
             .unwrap_err()
             .contains("thread"));
-        let mut wide = corpus.clone();
-        wide.vocab = model.vocab() + 1;
+        // same documents under a declared vocab one wider than the model's
+        let mut wide =
+            Corpus::with_meta(model.vocab() + 1, Vec::new(), "wide".to_string());
+        for doc in corpus.docs() {
+            wide.push_doc(&doc);
+        }
         assert!(infer_batch(&model, &wide, &InferOpts::default(), 2)
             .unwrap_err()
             .contains("vocabulary"));

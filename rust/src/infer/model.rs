@@ -341,7 +341,7 @@ mod tests {
         let mut rng = Pcg32::seeded(41);
         let state = LdaState::init_random(&corpus, Hyper::paper_default(8), &mut rng);
         let words = if vocab_words {
-            (0..corpus.vocab).map(|w| format!("word{w}")).collect()
+            (0..corpus.vocab()).map(|w| format!("word{w}")).collect()
         } else {
             Vec::new()
         };

@@ -717,7 +717,7 @@ mod tests {
         for _ in 0..15 {
             sweeper.sweep(&mut state, &corpus, &mut rng);
         }
-        TopicModel::from_state(&state, corpus.vocab_words.clone())
+        TopicModel::from_state(&state, corpus.vocab_words().to_vec())
     }
 
     #[test]

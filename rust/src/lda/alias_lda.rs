@@ -139,10 +139,11 @@ impl Sweep for AliasLda {
         // refresh the global snapshot once per sweep (n_t drifts slowly)
         self.snapshot(state);
 
-        for doc in 0..corpus.num_docs() {
-            let base = corpus.doc_offsets[doc];
-            for pos in 0..corpus.doc_len(doc) {
-                let word = corpus.tokens[base + pos] as usize;
+        let mut docs = corpus.docs_in(0..corpus.num_docs());
+        while let Some((doc, toks)) = docs.next_doc() {
+            let base = state.doc_offsets[doc];
+            for (pos, &wtok) in toks.iter().enumerate() {
+                let word = wtok as usize;
                 let old = state.z[base + pos];
                 remove_token(state, doc, word, old);
 

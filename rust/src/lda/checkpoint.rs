@@ -146,8 +146,8 @@ pub fn load(path: &Path, corpus: &Corpus) -> Result<LdaState, String> {
     let Header { hyper, vocab, num_docs: d } = read_header(&mut r)?;
     let t = hyper.t;
 
-    if vocab != corpus.vocab {
-        return Err(format!("checkpoint vocab {vocab} != corpus vocab {}", corpus.vocab));
+    if vocab != corpus.vocab() {
+        return Err(format!("checkpoint vocab {vocab} != corpus vocab {}", corpus.vocab()));
     }
     if d != corpus.num_docs() {
         return Err(format!("checkpoint has {d} docs, corpus {}", corpus.num_docs()));
@@ -190,7 +190,7 @@ pub fn load(path: &Path, corpus: &Corpus) -> Result<LdaState, String> {
         hyper,
         vocab,
         z,
-        doc_offsets: corpus.doc_offsets.clone(),
+        doc_offsets: corpus.offsets().to_vec(),
         ntd,
         nwt,
         nt,
@@ -357,10 +357,15 @@ mod tests {
         let state = LdaState::init_random(&corpus, Hyper::paper_default(8), &mut rng);
         let path = tmp("wrong.ckpt");
         save(&state, &path).unwrap();
-        // drop the last document from the CSR layout
-        let mut other = corpus.clone();
-        other.doc_offsets.pop();
-        other.tokens.truncate(*other.doc_offsets.last().unwrap());
+        // rebuild the corpus without its last document
+        let mut other = crate::corpus::Corpus::with_meta(
+            corpus.vocab(),
+            corpus.vocab_words().to_vec(),
+            corpus.name().to_string(),
+        );
+        for doc in corpus.docs().take(corpus.num_docs() - 1) {
+            other.push_doc(&doc);
+        }
         assert!(load(&path, &other).is_err());
         let _ = std::fs::remove_file(path);
     }

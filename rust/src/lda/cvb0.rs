@@ -47,7 +47,7 @@ impl Cvb0 {
         }
         let mut gamma = Vec::with_capacity(corpus.num_docs());
         let mut e_ntd = Vec::with_capacity(corpus.num_docs());
-        let mut e_nwt = vec![0.0; corpus.vocab * t];
+        let mut e_nwt = vec![0.0; corpus.vocab() * t];
         let mut e_nt = vec![0.0; t];
         for (d, doc) in corpus.docs().enumerate() {
             let mut g = vec![0.0f32; doc.len() * t];
@@ -71,7 +71,7 @@ impl Cvb0 {
             gamma.push(g);
             e_ntd.push(nd);
         }
-        Ok(Cvb0 { hyper, vocab: corpus.vocab, gamma, e_ntd, e_nwt, e_nt })
+        Ok(Cvb0 { hyper, vocab: corpus.vocab(), gamma, e_ntd, e_nwt, e_nt })
     }
 
     /// One full CVB0 sweep (doc-by-doc, token-by-token).

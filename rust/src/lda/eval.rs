@@ -145,12 +145,12 @@ mod tests {
 
         let mut concentrated = random.clone();
         // rebuild with doc-major single-topic assignment
-        let mut nwt = vec![super::super::SparseCounts::default(); corpus.vocab];
+        let mut nwt = vec![super::super::SparseCounts::default(); corpus.vocab()];
         let mut nt = vec![0u32; hyper.t];
         for (i, doc) in corpus.docs().enumerate() {
             let topic = (i % hyper.t) as u16;
             let mut counts = super::super::SparseCounts::default();
-            let base = corpus.doc_offsets[i];
+            let base = corpus.offsets()[i];
             for (pos, &w) in doc.iter().enumerate() {
                 concentrated.z[base + pos] = topic;
                 counts.inc(topic);

@@ -60,7 +60,8 @@ impl Sweep for FLdaDoc {
     fn sweep(&mut self, state: &mut LdaState, corpus: &Corpus, rng: &mut Pcg32) {
         let beta = state.hyper.beta;
         self.rebuild_base(state);
-        for doc in 0..corpus.num_docs() {
+        let mut docs = corpus.docs_in(0..corpus.num_docs());
+        while let Some((doc, toks)) = docs.next_doc() {
             // enter document: raise leaves on T_d to (n_td + α)/(n_t + β̄)
             // (two-pass over the sparse support; borrow discipline)
             let support: Vec<u16> = state.ntd[doc].iter().map(|(t, _)| t).collect();
@@ -68,9 +69,9 @@ impl Sweep for FLdaDoc {
                 self.tree.set(t as usize, Self::q_value(state, doc, t));
             }
 
-            let base = corpus.doc_offsets[doc];
-            for pos in 0..corpus.doc_len(doc) {
-                let word = corpus.tokens[base + pos] as usize;
+            let base = state.doc_offsets[doc];
+            for (pos, &wtok) in toks.iter().enumerate() {
+                let word = wtok as usize;
                 let old = state.z[base + pos];
                 remove_token(state, doc, word, old);
                 // n_td[old] and n_t[old] both changed → refresh that leaf

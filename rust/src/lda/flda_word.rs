@@ -155,7 +155,7 @@ impl Sweep for FLdaWord {
         // out instead of copying every occurrence slice (perf: saves a
         // full corpus copy per sweep)
         let index = std::mem::take(&mut self.index);
-        for word in 0..corpus.vocab {
+        for word in 0..corpus.vocab() {
             let (docs, poss) = index.occurrences(word);
             if docs.is_empty() {
                 continue;

@@ -38,9 +38,9 @@ pub fn split_corpus(corpus: &Corpus, test_fraction: f64, seed: u64) -> (Corpus, 
     let mut test = corpus_meta(corpus, "test");
     for (i, doc) in corpus.docs().enumerate() {
         if doc.len() >= MIN_TEST_DOC_LEN && doc_hash01(seed, i as u64) < test_fraction {
-            test.push_doc(doc);
+            test.push_doc(&doc);
         } else {
-            train.push_doc(doc);
+            train.push_doc(&doc);
         }
     }
     (train, test)
@@ -59,7 +59,7 @@ fn doc_hash01(seed: u64, doc: u64) -> f64 {
 }
 
 fn corpus_meta(c: &Corpus, suffix: &str) -> Corpus {
-    Corpus::with_meta(c.vocab, c.vocab_words.clone(), format!("{}-{suffix}", c.name))
+    Corpus::with_meta(c.vocab(), c.vocab_words().to_vec(), format!("{}-{suffix}", c.name()))
 }
 
 /// Document-completion perplexity of `state` (trained on the train split)
@@ -85,7 +85,7 @@ pub fn perplexity(
     let mut held_tokens = 0usize;
     for doc in test.docs() {
         let score = inf
-            .score_doc_with(doc, fold_in_sweeps, rng)
+            .score_doc_with(&doc, fold_in_sweeps, rng)
             .expect("test split tokens are inside the training vocabulary");
         log_sum += score.log_likelihood;
         held_tokens += score.held_tokens;
@@ -213,8 +213,8 @@ mod tests {
              (rel {rel:.4})"
         );
         // both still beat the uniform baseline by a wide margin
-        assert!(new < uniform_perplexity(corpus.vocab));
-        assert!(old < uniform_perplexity(corpus.vocab));
+        assert!(new < uniform_perplexity(corpus.vocab()));
+        assert!(old < uniform_perplexity(corpus.vocab()));
     }
 
     #[test]
@@ -228,8 +228,8 @@ mod tests {
         test.validate().unwrap();
         // deterministic
         let (train2, _) = split_corpus(&corpus, 0.3, 1);
-        assert_eq!(train.tokens, train2.tokens);
-        assert_eq!(train.doc_offsets, train2.doc_offsets);
+        assert_eq!(train.tokens_vec(), train2.tokens_vec());
+        assert_eq!(train.offsets(), train2.offsets());
     }
 
     #[test]
@@ -277,18 +277,21 @@ mod tests {
         let corpus = preset("tiny").unwrap();
         let (_, test_full) = split_corpus(&corpus, 0.4, 3);
         let mut prefix = crate::corpus::Corpus::with_meta(
-            corpus.vocab,
+            corpus.vocab(),
             vec![],
             "prefix".into(),
         );
         for doc in corpus.docs().take(corpus.num_docs() / 2) {
-            prefix.push_doc(doc);
+            prefix.push_doc(&doc);
         }
         let (_, test_prefix) = split_corpus(&prefix, 0.4, 3);
         // every prefix test doc appears in the full test split too
-        let full_docs: Vec<&[u32]> = test_full.docs().collect();
+        let full_docs: Vec<Vec<u32>> = test_full.docs().map(|d| d.to_vec()).collect();
         for d in test_prefix.docs() {
-            assert!(full_docs.contains(&d), "prefix split disagrees with full split");
+            assert!(
+                full_docs.iter().any(|f| f[..] == *d),
+                "prefix split disagrees with full split"
+            );
         }
     }
 
@@ -306,9 +309,9 @@ mod tests {
         let ppl = perplexity(&state, &test, 10, &mut rng);
         assert!(ppl.is_finite() && ppl > 1.0);
         assert!(
-            ppl < uniform_perplexity(corpus.vocab),
+            ppl < uniform_perplexity(corpus.vocab()),
             "trained ppl {ppl} not better than uniform {}",
-            corpus.vocab
+            corpus.vocab()
         );
     }
 

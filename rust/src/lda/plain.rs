@@ -35,14 +35,15 @@ impl Sweep for PlainLda {
         let alpha = state.hyper.alpha;
         let beta = state.hyper.beta;
         let bb = state.hyper.betabar(state.vocab);
-        for doc in 0..corpus.num_docs() {
+        let mut docs = corpus.docs_in(0..corpus.num_docs());
+        while let Some((doc, toks)) = docs.next_doc() {
             // scatter the doc's sparse counts into dense scratch
             for (topic, c) in state.ntd[doc].iter() {
                 self.doc_counts[topic as usize] = c;
             }
-            let base = corpus.doc_offsets[doc];
-            for pos in 0..corpus.doc_len(doc) {
-                let word = corpus.tokens[base + pos] as usize;
+            let base = state.doc_offsets[doc];
+            for (pos, &wtok) in toks.iter().enumerate() {
+                let word = wtok as usize;
                 let old = state.z[base + pos];
                 remove_token(state, doc, word, old);
                 self.doc_counts[old as usize] -= 1;

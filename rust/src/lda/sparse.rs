@@ -88,7 +88,8 @@ impl Sweep for SparseLda {
         }
         self.rebuild_s(state);
 
-        for doc in 0..corpus.num_docs() {
+        let mut docs = corpus.docs_in(0..corpus.num_docs());
+        while let Some((doc, toks)) = docs.next_doc() {
             // enter doc: raise coeff on T_d, compute r mass
             let support: Vec<u16> = state.ntd[doc].iter().map(|(t, _)| t).collect();
             for &t in &support {
@@ -96,9 +97,9 @@ impl Sweep for SparseLda {
             }
             self.rebuild_r(state, doc);
 
-            let base = corpus.doc_offsets[doc];
-            for pos in 0..corpus.doc_len(doc) {
-                let word = corpus.tokens[base + pos] as usize;
+            let base = state.doc_offsets[doc];
+            for (pos, &wtok) in toks.iter().enumerate() {
+                let word = wtok as usize;
                 let old = state.z[base + pos];
                 let (old_nt, old_ntd) = (state.nt[old as usize], state.ntd[doc].get(old));
                 remove_token(state, doc, word, old);

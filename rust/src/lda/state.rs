@@ -3,15 +3,16 @@
 //!
 //! `z` is stored **flat** in the corpus's CSR layout (see
 //! [`crate::corpus`]): one `Vec<u16>` with document i's assignments at
-//! `doc_offsets[i]..doc_offsets[i + 1]`, mirroring `Corpus::tokens`
-//! one-to-one.  Both the doc-topic and word-topic matrices are stored
+//! `doc_offsets[i]..doc_offsets[i + 1]`, mirroring the corpus token
+//! payload one-to-one (the state keeps its own copy of the offset table;
+//! `z` stays RAM-resident even when the corpus payload lives on disk).  Both the doc-topic and word-topic matrices are stored
 //! *sparse* (sorted `(topic, count)` pairs) — at T in the thousands they
 //! are overwhelmingly sparse (|T_d| is bounded by document length, |T_w|
 //! by the word's corpus frequency), and every sampler in this crate
 //! iterates nonzero support.  Samplers that need dense rows scatter into
 //! reusable scratch buffers.
 
-use crate::corpus::Corpus;
+use crate::corpus::{Corpus, CorpusSlice};
 use crate::util::codec::{put_u16, put_u32, Cur};
 use crate::util::rng::Pcg32;
 
@@ -186,21 +187,14 @@ pub fn checked_totals(s: &[i64]) -> Vec<u32> {
         .collect()
 }
 
-/// Rebase the corpus CSR offsets of docs [start, end) to a worker-local
-/// zero base and rebuild the per-doc topic counts from the flat `z` rows —
-/// the shared spawn-time setup of every partitioned worker.
-pub fn local_rows(
-    corpus: &Corpus,
-    start: usize,
-    end: usize,
-    z: &[u16],
-    t: usize,
-) -> (Vec<usize>, Vec<SparseCounts>) {
-    let base = corpus.doc_offsets[start];
-    let offsets: Vec<usize> =
-        corpus.doc_offsets[start..=end].iter().map(|&o| o - base).collect();
+/// Rebuild the per-doc topic counts of a worker's [`CorpusSlice`] from
+/// its flat `z` rows — the shared spawn-time setup of every partitioned
+/// worker.  Returns the slice's (already zero-based) offset table and
+/// the `n_td` rows.
+pub fn local_rows(slice: &CorpusSlice, z: &[u16], t: usize) -> (Vec<usize>, Vec<SparseCounts>) {
+    let offsets = slice.offsets.clone();
     assert_eq!(z.len(), *offsets.last().unwrap(), "z / doc range mismatch");
-    let mut ntd = Vec::with_capacity(end - start);
+    let mut ntd = Vec::with_capacity(slice.num_docs());
     for w in offsets.windows(2) {
         let zs = &z[w[0]..w[1]];
         let mut counts = SparseCounts::with_capacity(zs.len().min(t));
@@ -229,7 +223,7 @@ pub fn assemble_state<'a>(
     let mut z = vec![0u16; corpus.num_tokens()];
     let mut ntd = vec![SparseCounts::default(); corpus.num_docs()];
     for (start_doc, worker_ntd, worker_z) in parts {
-        let lo = corpus.doc_offsets[start_doc];
+        let lo = corpus.offsets()[start_doc];
         z[lo..lo + worker_z.len()].copy_from_slice(worker_z);
         for (off, counts) in worker_ntd.iter().enumerate() {
             ntd[start_doc + off] = counts.clone();
@@ -237,9 +231,9 @@ pub fn assemble_state<'a>(
     }
     LdaState {
         hyper,
-        vocab: corpus.vocab,
+        vocab: corpus.vocab(),
         z,
-        doc_offsets: corpus.doc_offsets.clone(),
+        doc_offsets: corpus.offsets().to_vec(),
         ntd,
         nwt,
         nt,
@@ -252,7 +246,7 @@ pub struct LdaState {
     pub hyper: Hyper,
     pub vocab: usize,
     /// flat CSR assignments: doc i's topics at
-    /// `doc_offsets[i]..doc_offsets[i+1]`, mirroring `Corpus::tokens`
+    /// `doc_offsets[i]..doc_offsets[i+1]`, mirroring the corpus tokens
     pub z: Vec<u16>,
     /// CSR row offsets, copied from the corpus at construction
     pub doc_offsets: Vec<usize>,
@@ -271,9 +265,10 @@ impl LdaState {
         assert!(hyper.t >= 2 && hyper.t <= u16::MAX as usize + 1);
         let mut z = Vec::with_capacity(corpus.num_tokens());
         let mut ntd = Vec::with_capacity(corpus.num_docs());
-        let mut nwt = vec![SparseCounts::default(); corpus.vocab];
+        let mut nwt = vec![SparseCounts::default(); corpus.vocab()];
         let mut nt = vec![0u32; hyper.t];
-        for doc in corpus.docs() {
+        let mut sweep = corpus.docs_in(0..corpus.num_docs());
+        while let Some((_, doc)) = sweep.next_doc() {
             let mut counts = SparseCounts::with_capacity(doc.len().min(hyper.t));
             for &w in doc {
                 let topic = rng.below(hyper.t) as u16;
@@ -286,9 +281,9 @@ impl LdaState {
         }
         LdaState {
             hyper,
-            vocab: corpus.vocab,
+            vocab: corpus.vocab(),
             z,
-            doc_offsets: corpus.doc_offsets.clone(),
+            doc_offsets: corpus.offsets().to_vec(),
             ntd,
             nwt,
             nt,
@@ -332,7 +327,7 @@ impl LdaState {
     /// oracle used by tests and by the runtime's paranoid mode.
     pub fn check_consistency(&self, corpus: &Corpus) -> Result<(), String> {
         let mut ntd = vec![SparseCounts::default(); corpus.num_docs()];
-        let mut nwt = vec![SparseCounts::default(); corpus.vocab];
+        let mut nwt = vec![SparseCounts::default(); corpus.vocab()];
         let mut nt = vec![0u32; self.hyper.t];
         if self.num_docs() != corpus.num_docs() {
             return Err(format!(
@@ -341,7 +336,7 @@ impl LdaState {
                 corpus.num_docs()
             ));
         }
-        if self.doc_offsets != corpus.doc_offsets {
+        if self.doc_offsets.as_slice() != corpus.offsets() {
             return Err("state doc_offsets diverge from corpus doc_offsets".into());
         }
         if self.z.len() != corpus.num_tokens() {
@@ -351,7 +346,8 @@ impl LdaState {
                 corpus.num_tokens()
             ));
         }
-        for (i, doc) in corpus.docs().enumerate() {
+        let mut sweep = corpus.docs_in(0..corpus.num_docs());
+        while let Some((i, doc)) = sweep.next_doc() {
             let zs = self.z_doc(i);
             for (&w, &topic) in doc.iter().zip(zs) {
                 if topic as usize >= self.hyper.t {
@@ -471,7 +467,7 @@ mod tests {
         state.check_consistency(&corpus).unwrap();
         assert_eq!(state.total_tokens() as usize, corpus.num_tokens());
         assert_eq!(state.z.len(), corpus.num_tokens());
-        assert_eq!(state.doc_offsets, corpus.doc_offsets);
+        assert_eq!(state.doc_offsets.as_slice(), corpus.offsets());
     }
 
     #[test]

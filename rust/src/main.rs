@@ -2,6 +2,7 @@
 //!
 //! Subcommands (each supports `--help` for its full flag list):
 //!   train           train a topic model (any runtime/sampler)
+//!   prepare-corpus  stream a text/bag-of-words/preset source into an .fncorpus file
 //!   data-stats      print Table-3-style statistics for presets / UCI files
 //!   calibrate       measure the per-token cost model for the simulator
 //!   topics          train briefly and print the top words per topic
@@ -22,7 +23,7 @@ use std::time::{Duration, Instant};
 
 use fnomad_lda::coordinator::{train, TrainConfig};
 use fnomad_lda::corpus::presets::{preset, PAPER_TABLE3, PRESET_NAMES};
-use fnomad_lda::corpus::CorpusStats;
+use fnomad_lda::corpus::{bow, presets, synthetic, text, CorpusStats, FncorpusWriter};
 use fnomad_lda::infer::{
     infer_batch, model_id_for, query_one, serve_model, Client, InferOpts, Inferencer, ModelHost,
     ModelSlot, Request, Response, ServeConfig, TopicModel,
@@ -46,6 +47,21 @@ const TRAIN_SPEC: CommandSpec = CommandSpec {
             flag: "preset",
             value: "NAME",
             help: "corpus: tiny|enron-sim|nytimes-sim|pubmed-sim|amazon-sim|umbc-sim",
+        },
+        FlagSpec {
+            flag: "corpus",
+            value: "PATH",
+            help: "train from an .fncorpus file (see prepare-corpus) instead of a preset",
+        },
+        FlagSpec {
+            flag: "in-ram",
+            value: "",
+            help: "load --corpus fully into RAM instead of streaming it",
+        },
+        FlagSpec {
+            flag: "corpus-window",
+            value: "TOKENS",
+            help: "sliding read-window for streamed corpora (default 1048576 tokens)",
         },
         FlagSpec {
             flag: "topics",
@@ -108,6 +124,40 @@ const TRAIN_SPEC: CommandSpec = CommandSpec {
             help: "N Minka fixed-point steps on the final state (0 = off)",
         },
         FlagSpec { flag: "quiet", value: "", help: "suppress progress logging" },
+    ],
+};
+
+const PREPARE_CORPUS_SPEC: CommandSpec = CommandSpec {
+    name: "prepare-corpus",
+    about: "stream a text/bag-of-words/preset source into an .fncorpus file",
+    flags: &[
+        FlagSpec {
+            flag: "text",
+            value: "PATH",
+            help: "newline-delimited raw text: tokenize/stem/prune, one doc per line",
+        },
+        FlagSpec {
+            flag: "bow",
+            value: "PATH",
+            help: "UCI docword.txt bag-of-words file (sorted by docID)",
+        },
+        FlagSpec {
+            flag: "vocab",
+            value: "PATH",
+            help: "UCI vocab.txt word list embedded alongside --bow",
+        },
+        FlagSpec {
+            flag: "preset",
+            value: "NAME",
+            help: "stream a synthetic preset (e.g. bigzipf) without materializing it",
+        },
+        FlagSpec {
+            flag: "docs",
+            value: "N",
+            help: "override the preset's document count (smoke-scale runs)",
+        },
+        FlagSpec { flag: "name", value: "NAME", help: "corpus name recorded in the header" },
+        FlagSpec { flag: "out", value: "PATH", help: "output .fncorpus path (required)" },
     ],
 };
 
@@ -255,6 +305,7 @@ const BENCH_SPEC: CommandSpec = CommandSpec {
 
 const SPECS: &[&CommandSpec] = &[
     &TRAIN_SPEC,
+    &PREPARE_CORPUS_SPEC,
     &DATA_STATS_SPEC,
     &CALIBRATE_SPEC,
     &TOPICS_SPEC,
@@ -289,6 +340,7 @@ fn main() {
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
     let code = match sub.as_str() {
         "train" => with_help(&args, &TRAIN_SPEC, cmd_train),
+        "prepare-corpus" => with_help(&args, &PREPARE_CORPUS_SPEC, cmd_prepare_corpus),
         "data-stats" => with_help(&args, &DATA_STATS_SPEC, cmd_data_stats),
         "calibrate" => with_help(&args, &CALIBRATE_SPEC, cmd_calibrate),
         "topics" => with_help(&args, &TOPICS_SPEC, cmd_topics),
@@ -332,6 +384,9 @@ fn train_config(args: &Args) -> Result<TrainConfig, String> {
     let d = TrainConfig::default();
     let cfg = TrainConfig {
         preset: args.str_or("preset", &d.preset),
+        corpus: args.str_opt("corpus").map(PathBuf::from),
+        corpus_ram: args.flag("in-ram"),
+        corpus_window: args.parse_or("corpus-window", d.corpus_window)?,
         topics: args.parse_or("topics", d.topics)?,
         sampler: args.str_or("sampler", &d.sampler.to_string()).parse()?,
         runtime: args.str_or("runtime", &d.runtime.to_string()).parse()?,
@@ -381,6 +436,83 @@ fn parse_remote(args: &Args) -> Result<Vec<String>, String> {
     }
 }
 
+/// `prepare-corpus`: stream one of three sources into a versioned
+/// `FNCP0001` file without ever holding the token payload in RAM.
+fn cmd_prepare_corpus(args: &Args) -> Result<(), String> {
+    let out = args.str_opt("out").ok_or_else(|| "--out PATH is required".to_string())?;
+    let text_in = args.str_opt("text");
+    let bow_in = args.str_opt("bow");
+    let preset_in = args.str_opt("preset");
+    let vocab_in = args.str_opt("vocab");
+    let name_override = args.str_opt("name");
+    let docs_override = match args.str_opt("docs") {
+        None => None,
+        Some(v) => {
+            Some(v.parse::<usize>().map_err(|_| format!("--docs: cannot parse '{v}'"))?)
+        }
+    };
+    args.reject_unknown()?;
+    let sources =
+        [&text_in, &bow_in, &preset_in].iter().filter(|s| s.is_some()).count();
+    if sources != 1 {
+        return Err("exactly one of --text, --bow, --preset selects the source".into());
+    }
+    if vocab_in.is_some() && bow_in.is_none() {
+        return Err("--vocab only applies with --bow".into());
+    }
+    if docs_override.is_some() && preset_in.is_none() {
+        return Err("--docs only applies with --preset".into());
+    }
+    let out_path = PathBuf::from(&out);
+    let stem = |p: &Path| {
+        p.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_else(|| "corpus".into())
+    };
+
+    let started = Instant::now();
+    let (summary, skipped, name) = if let Some(path) = text_in {
+        let p = PathBuf::from(&path);
+        let name = name_override.unwrap_or_else(|| stem(&p));
+        let (s, skipped) = text::stream_lines_to_fncorpus(
+            &p,
+            &text::PipelineOpts::default(),
+            &name,
+            &out_path,
+        )?;
+        (s, skipped, name)
+    } else if let Some(path) = bow_in {
+        let p = PathBuf::from(&path);
+        let name = name_override.unwrap_or_else(|| stem(&p));
+        let vocab = vocab_in.map(PathBuf::from);
+        let (s, skipped) = bow::stream_to_fncorpus(&p, vocab.as_deref(), &name, &out_path)?;
+        (s, skipped, name)
+    } else {
+        let pname = preset_in.expect("source checked above");
+        let mut spec = presets::spec(&pname).ok_or_else(|| {
+            format!("unknown preset '{pname}' (known: {})", PRESET_NAMES.join(", "))
+        })?;
+        if let Some(n) = docs_override {
+            spec.num_docs = n;
+        }
+        if let Some(n) = name_override {
+            spec.name = n;
+        }
+        let mut writer = FncorpusWriter::create(&out_path, spec.vocab, Vec::new(), &spec.name)?;
+        synthetic::generate_with(&spec, |d| writer.push_doc(d))?;
+        let s = writer.finish()?;
+        (s, 0usize, spec.name)
+    };
+    println!(
+        "wrote {out} (name={name}, docs={}, tokens={}, {} bytes, fingerprint {:016x}, \
+         {skipped} empty docs skipped, {:.1}s)",
+        summary.num_docs,
+        summary.num_tokens,
+        summary.bytes,
+        summary.fingerprint,
+        started.elapsed().as_secs_f64(),
+    );
+    Ok(())
+}
+
 fn cmd_serve_worker(args: &Args) -> Result<(), String> {
     use std::io::Write as _;
 
@@ -414,7 +546,7 @@ fn cmd_export_model(args: &Args) -> Result<(), String> {
     args.reject_unknown()?;
     let corpus = preset(&preset_name)?;
     let state = lda::checkpoint::load(Path::new(&ckpt), &corpus)?;
-    let words = if no_vocab { Vec::new() } else { corpus.vocab_words.clone() };
+    let words = if no_vocab { Vec::new() } else { corpus.vocab_words().to_vec() };
     let model = TopicModel::from_state(&state, words);
     let bytes = model.save(Path::new(&out))?;
     println!(
@@ -639,7 +771,7 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     let mut lat_us: Vec<f64> = Vec::with_capacity(corpus.num_docs());
     for d in 0..corpus.num_docs() {
         let s = Instant::now();
-        inf.infer_doc_indexed(corpus.doc(d), d as u64, &opts)?;
+        inf.infer_doc_indexed(&corpus.doc(d), d as u64, &opts)?;
         lat_us.push(s.elapsed().as_nanos() as f64 / 1e3);
     }
     lat_us.sort_by(|a, b| a.total_cmp(b));
@@ -786,7 +918,7 @@ fn cmd_topics(args: &Args) -> Result<(), String> {
     args.reject_unknown()?;
     let corpus = preset(&cfg.preset)?;
     let res = train(&cfg)?;
-    print!("{}", topics_mod::render_topics(&res.final_state, &corpus.vocab_words, top));
+    print!("{}", topics_mod::render_topics(&res.final_state, corpus.vocab_words(), top));
     Ok(())
 }
 

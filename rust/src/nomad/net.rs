@@ -34,7 +34,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::corpus::Corpus;
+use crate::corpus::CorpusSlice;
 use crate::lda::state::Hyper;
 use crate::resilience::FaultTransport;
 use crate::util::codec::{read_len_prefixed, write_len_prefixed};
@@ -243,17 +243,12 @@ fn build_worker(init: Init) -> Result<WorkerState, String> {
     if init.s.len() != t {
         return Err(format!("totals length {} != T {t}", init.s.len()));
     }
-    let sub = Corpus {
-        doc_offsets: init.doc_offsets.iter().map(|&o| o as usize).collect(),
-        tokens: init.tokens,
-        vocab: init.vocab as usize,
-        vocab_words: Vec::new(),
-        name: format!("remote-slot-{}", init.worker_id),
-    };
-    if sub.doc_offsets.is_empty() {
-        return Err("doc_offsets must hold at least the leading 0".into());
-    }
-    sub.validate()?;
+    let sub = CorpusSlice::from_parts(
+        init.start_doc as usize,
+        init.doc_offsets.iter().map(|&o| o as usize).collect(),
+        init.tokens,
+        init.vocab as usize,
+    )?;
     if init.z.len() != sub.num_tokens() {
         return Err(format!(
             "z has {} assignments, corpus slice {} tokens",
@@ -265,20 +260,15 @@ fn build_worker(init: Init) -> Result<WorkerState, String> {
         return Err(format!("assignment topic {bad} >= T {t}"));
     }
     let hyper = Hyper { t, alpha: init.alpha, beta: init.beta };
-    let mut state = WorkerState::new(
+    Ok(WorkerState::new(
         init.worker_id as usize,
         init.num_workers as usize,
         &sub,
         hyper,
-        0,
-        sub.num_docs(),
         init.z,
         init.s,
         Pcg32::from_parts(init.rng_state, init.rng_inc),
-    );
-    // local doc 0 is global doc `start_doc`; Reply::Docs reports global ids
-    state.start_doc = init.start_doc as usize;
-    Ok(state)
+    ))
 }
 
 // ----------------------------------------------------- coordinator side

@@ -145,7 +145,7 @@ impl NomadRuntime {
         // offsets equality (not just doc count): under the flat layout a
         // doc-length mismatch would misindex z silently instead of
         // panicking like the old per-doc rows did
-        if init.doc_offsets != corpus.doc_offsets {
+        if init.doc_offsets.as_slice() != corpus.offsets() {
             return Err("init state / corpus mismatch".into());
         }
         let hyper = init.hyper;
@@ -181,19 +181,11 @@ impl NomadRuntime {
             let next = senders[(l + 1) % total].clone();
             let reply = reply_tx.clone();
             if l < cfg.workers {
-                // one bulk copy of the worker's contiguous CSR rows
+                // one bulk copy of the worker's contiguous CSR rows (the
+                // slice read pulls the docs off disk when out-of-core)
                 let z_slice: Vec<u16> = init.z_range(start, end).to_vec();
-                let state = WorkerState::new(
-                    l,
-                    total,
-                    corpus,
-                    hyper,
-                    start,
-                    end,
-                    z_slice,
-                    s.clone(),
-                    rng,
-                );
+                let slice = corpus.read_range(start, end);
+                let state = WorkerState::new(l, total, &slice, hyper, z_slice, s.clone(), rng);
                 let link = ChannelTransport { rx, next, reply };
                 // a transport Err is the ring breaking elsewhere; the
                 // clean exit is cascade and health checks attribute blame
@@ -364,7 +356,7 @@ impl NomadRuntime {
             }
         }
         // word-side from the home tokens, totals from the exact fold
-        let mut nwt = vec![SparseCounts::default(); corpus.vocab];
+        let mut nwt = vec![SparseCounts::default(); corpus.vocab()];
         for tok in &self.home {
             nwt[tok.word as usize] = tok.counts.clone();
         }
@@ -554,9 +546,7 @@ fn remote_init(
     rng: &Pcg32,
 ) -> wire::Init {
     let (start, end) = partition.ranges[l];
-    let base = corpus.doc_offsets[start];
-    let hi = corpus.doc_offsets[end];
-    let offsets = &corpus.doc_offsets[start..=end];
+    let slice = corpus.read_range(start, end);
     let (rng_state, rng_inc) = rng.to_parts();
     wire::Init {
         worker_id: l as u32,
@@ -565,9 +555,9 @@ fn remote_init(
         t: init.hyper.t as u32,
         alpha: init.hyper.alpha,
         beta: init.hyper.beta,
-        vocab: corpus.vocab as u64,
-        doc_offsets: offsets.iter().map(|&o| (o - base) as u64).collect(),
-        tokens: corpus.tokens[base..hi].to_vec(),
+        vocab: slice.vocab as u64,
+        doc_offsets: slice.offsets.iter().map(|&o| o as u64).collect(),
+        tokens: slice.tokens,
         z: init.z_range(start, end).to_vec(),
         s: s.to_vec(),
         rng_state,
@@ -588,9 +578,9 @@ mod tests {
             seed: 3,
             ..Default::default()
         });
-        assert_eq!(rt.home.len(), corpus.vocab);
+        assert_eq!(rt.home.len(), corpus.vocab());
         let stats = rt.run_epoch();
-        assert_eq!(rt.home.len(), corpus.vocab);
+        assert_eq!(rt.home.len(), corpus.vocab());
         // each occurrence lives in exactly one worker's partition → every
         // token is resampled exactly once per epoch
         assert_eq!(stats.processed as usize, corpus.num_tokens());

@@ -131,17 +131,8 @@ mod tests {
         let mut rng = Pcg32::seeded(3);
         let init = LdaState::init_random(&corpus, hyper, &mut rng);
         let s: Vec<i64> = init.nt.iter().map(|&v| v as i64).collect();
-        let state = WorkerState::new(
-            0,
-            1,
-            &corpus,
-            hyper,
-            0,
-            corpus.num_docs(),
-            init.z.clone(),
-            s,
-            Pcg32::seeded(4),
-        );
+        let slice = corpus.read_range(0, corpus.num_docs());
+        let state = WorkerState::new(0, 1, &slice, hyper, init.z.clone(), s, Pcg32::seeded(4));
         let (tx, rx) = channel();
         let (reply_tx, replies) = channel();
         let link = ChannelTransport { rx, next: tx.clone(), reply: reply_tx };
@@ -152,7 +143,7 @@ mod tests {
         }
         tx.send(Msg::SyncS).unwrap();
         let mut mass = 0u64;
-        for _ in 0..corpus.vocab {
+        for _ in 0..corpus.vocab() {
             match replies.recv().unwrap() {
                 Reply::WordDone(tok) => {
                     assert_eq!(tok.hops, 1);
@@ -182,14 +173,13 @@ mod tests {
         let corpus = preset("tiny").unwrap();
         let hyper = Hyper::paper_default(8);
         // worker owns doc 0 with everything assigned topic 0
+        let slice = corpus.read_range(0, 1);
         let state = WorkerState::new(
             0,
             // pretend a 2-slot ring so a fresh token gets forwarded
             2,
-            &corpus,
+            &slice,
             hyper,
-            0,
-            1,
             vec![0u16; corpus.doc_len(0)],
             vec![corpus.doc_len(0) as i64; 8],
             Pcg32::seeded(9),

@@ -16,7 +16,7 @@
 //! per word token (`rust/tests/alloc_free.rs` asserts this with a
 //! counting allocator).
 
-use crate::corpus::Corpus;
+use crate::corpus::CorpusSlice;
 use crate::lda::state::{local_rows, Hyper, SparseCounts};
 use crate::sampler::bsearch::SparseCumSum;
 use crate::sampler::ftree::FTree;
@@ -34,13 +34,10 @@ pub struct LocalWordIndex {
 }
 
 impl LocalWordIndex {
-    /// Build over the worker's doc range [start, end).
-    pub fn build(corpus: &Corpus, start: usize, end: usize) -> Self {
-        let vocab = corpus.vocab;
-        let lo = corpus.doc_offsets[start];
-        let hi = corpus.doc_offsets[end];
-        let mut counts = vec![0usize; vocab + 1];
-        for &w in &corpus.tokens[lo..hi] {
+    /// Build over a worker's corpus slice.
+    pub fn build(slice: &CorpusSlice) -> Self {
+        let mut counts = vec![0usize; slice.vocab + 1];
+        for &w in &slice.tokens {
             counts[w as usize + 1] += 1;
         }
         for j in 1..counts.len() {
@@ -51,9 +48,8 @@ impl LocalWordIndex {
         let mut doc_of = vec![0u32; total];
         let mut pos_of = vec![0u32; total];
         let mut cursor = offsets.clone();
-        for local in 0..end - start {
-            let doc = corpus.doc(start + local);
-            for (p, &w) in doc.iter().enumerate() {
+        for local in 0..slice.num_docs() {
+            for (p, &w) in slice.doc(local).iter().enumerate() {
                 let at = cursor[w as usize];
                 doc_of[at] = local as u32;
                 pos_of[at] = p as u32;
@@ -103,29 +99,26 @@ pub struct WorkerState {
 }
 
 impl WorkerState {
-    /// Initialize from a corpus slice with the given initial assignments
-    /// (the flat z rows for docs [start, end), in CSR order) and the
+    /// Initialize from a worker's corpus slice with the given initial
+    /// assignments (the flat z rows for its docs, in CSR order) and the
     /// *global* initial topic totals.
-    #[allow(clippy::too_many_arguments)]
     pub fn new(
         id: usize,
         num_workers: usize,
-        corpus: &Corpus,
+        slice: &CorpusSlice,
         hyper: Hyper,
-        start: usize,
-        end: usize,
         z: Vec<u16>,
         s_init: Vec<i64>,
         rng: Pcg32,
     ) -> Self {
-        let (z_offsets, ntd) = local_rows(corpus, start, end, &z, hyper.t);
+        let (z_offsets, ntd) = local_rows(slice, &z, hyper.t);
         let t = hyper.t;
         let mut w = WorkerState {
             id,
             num_workers,
             hyper,
-            vocab: corpus.vocab,
-            start_doc: start,
+            vocab: slice.vocab,
+            start_doc: slice.start_doc,
             z,
             z_offsets,
             ntd,
@@ -133,7 +126,7 @@ impl WorkerState {
             s_snap: s_init,
             tree: FTree::with_capacity(&vec![0.0; t], t),
             r: SparseCumSum::with_capacity(64),
-            index: LocalWordIndex::build(corpus, start, end),
+            index: LocalWordIndex::build(slice),
             rng,
             processed: 0,
         };
@@ -267,32 +260,24 @@ impl WorkerState {
 mod tests {
     use super::*;
     use crate::corpus::presets::preset;
+    use crate::corpus::Corpus;
 
     fn setup() -> (Corpus, WorkerState, Vec<WordToken>) {
         let corpus = preset("tiny").unwrap();
         let hyper = Hyper::paper_default(8);
         let mut rng = Pcg32::seeded(1);
         // single worker owning everything
+        let slice = corpus.read_range(0, corpus.num_docs());
         let mut z = Vec::with_capacity(corpus.num_tokens());
-        let mut nwt = vec![SparseCounts::default(); corpus.vocab];
+        let mut nwt = vec![SparseCounts::default(); corpus.vocab()];
         let mut s = vec![0i64; hyper.t];
-        for &w in &corpus.tokens {
+        for &w in &slice.tokens {
             let topic = rng.below(hyper.t) as u16;
             nwt[w as usize].inc(topic);
             s[topic as usize] += 1;
             z.push(topic);
         }
-        let worker = WorkerState::new(
-            0,
-            1,
-            &corpus,
-            hyper,
-            0,
-            corpus.num_docs(),
-            z,
-            s,
-            Pcg32::seeded(2),
-        );
+        let worker = WorkerState::new(0, 1, &slice, hyper, z, s, Pcg32::seeded(2));
         let tokens: Vec<WordToken> = nwt
             .into_iter()
             .enumerate()
@@ -325,7 +310,7 @@ mod tests {
     #[test]
     fn local_offsets_mirror_corpus_rows() {
         let (corpus, w, _tokens) = setup();
-        assert_eq!(w.z_offsets, corpus.doc_offsets);
+        assert_eq!(w.z_offsets.as_slice(), corpus.offsets());
         assert_eq!(w.z.len(), corpus.num_tokens());
         // ntd rows rebuilt from z rows agree
         for d in 0..corpus.num_docs() {

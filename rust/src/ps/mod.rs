@@ -71,7 +71,7 @@ impl PsRuntime {
     pub fn from_state(corpus: &Corpus, init: &LdaState, cfg: PsConfig) -> Self {
         assert!(cfg.workers >= 1);
         // offsets equality (not just doc count) — see NomadRuntime::from_state
-        assert_eq!(init.doc_offsets, corpus.doc_offsets, "init state / corpus mismatch");
+        assert_eq!(init.doc_offsets.as_slice(), corpus.offsets(), "init state / corpus mismatch");
         let hyper = init.hyper;
         let partition = Partition::by_tokens(corpus, cfg.workers);
         // worker streams derive from a different stream id than the init
@@ -90,10 +90,8 @@ impl PsRuntime {
             let (start, end) = partition.ranges[l];
             let state = PsWorkerState::new(
                 l,
-                corpus,
+                corpus.read_range(start, end),
                 hyper,
-                start,
-                end,
                 init.z_range(start, end).to_vec(),
                 cfg.batch_docs,
                 seed_rng.split(l as u64 + 1),

@@ -10,7 +10,7 @@
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
-use crate::corpus::Corpus;
+use crate::corpus::CorpusSlice;
 use crate::lda::state::{local_rows, Hyper, SparseCounts};
 use crate::sampler::bsearch::SparseCumSum;
 use crate::sampler::ftree::FTree;
@@ -82,26 +82,22 @@ pub struct PsWorkerState {
 }
 
 impl PsWorkerState {
-    #[allow(clippy::too_many_arguments)]
     pub fn new(
         id: usize,
-        corpus: &Corpus,
+        slice: CorpusSlice,
         hyper: Hyper,
-        start: usize,
-        end: usize,
         z: Vec<u16>,
         batch_docs: usize,
         rng: Pcg32,
     ) -> Self {
-        let (offsets, ntd) = local_rows(corpus, start, end, &z, hyper.t);
-        let base = corpus.doc_offsets[start];
+        let (offsets, ntd) = local_rows(&slice, &z, hyper.t);
         let t = hyper.t;
         PsWorkerState {
             id,
             hyper,
-            vocab: corpus.vocab,
-            start_doc: start,
-            tokens: corpus.tokens[base..corpus.doc_offsets[end]].to_vec(),
+            vocab: slice.vocab,
+            start_doc: slice.start_doc,
+            tokens: slice.tokens,
             offsets,
             z,
             ntd,

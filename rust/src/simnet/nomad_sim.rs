@@ -82,7 +82,7 @@ impl NomadSim {
         let p = cfg.cluster.total_workers();
         assert!(p >= 1);
         // offsets equality (not just doc count) — see NomadRuntime::from_state
-        assert_eq!(init.doc_offsets, corpus.doc_offsets, "init state / corpus mismatch");
+        assert_eq!(init.doc_offsets.as_slice(), corpus.offsets(), "init state / corpus mismatch");
         let hyper = init.hyper;
         let partition = Partition::by_tokens(corpus, p);
         // worker streams derive from a different stream id than the init
@@ -101,13 +101,12 @@ impl NomadSim {
         let mut workers = Vec::with_capacity(p);
         for l in 0..p {
             let (start, end) = partition.ranges[l];
+            let slice = corpus.read_range(start, end);
             workers.push(WorkerState::new(
                 l,
                 p,
-                corpus,
+                &slice,
                 hyper,
-                start,
-                end,
                 init.z_range(start, end).to_vec(),
                 s.clone(),
                 seed_rng.split(l as u64 + 1),
@@ -281,7 +280,7 @@ impl NomadSim {
             .workers
             .iter()
             .map(|w| (w.start_doc, w.ntd.as_slice(), w.z.as_slice()));
-        let mut nwt = vec![SparseCounts::default(); corpus.vocab];
+        let mut nwt = vec![SparseCounts::default(); corpus.vocab()];
         for tok in &self.home {
             nwt[tok.word as usize] = tok.counts.clone();
         }

@@ -87,7 +87,7 @@ impl PsSim {
     pub fn from_state(corpus: &Corpus, init: &LdaState, cfg: PsSimConfig) -> Self {
         let p = cfg.cluster.total_workers();
         // offsets equality (not just doc count) — see NomadRuntime::from_state
-        assert_eq!(init.doc_offsets, corpus.doc_offsets, "init state / corpus mismatch");
+        assert_eq!(init.doc_offsets.as_slice(), corpus.offsets(), "init state / corpus mismatch");
         let hyper = init.hyper;
         let partition = Partition::by_tokens(corpus, p);
         // worker streams derive from a different stream id than the init
@@ -102,10 +102,8 @@ impl PsSim {
             let (start, end) = partition.ranges[l];
             workers.push(PsWorkerState::new(
                 l,
-                corpus,
+                corpus.read_range(start, end),
                 hyper,
-                start,
-                end,
                 init.z_range(start, end).to_vec(),
                 cfg.batch_docs,
                 seed_rng.split(l as u64 + 1),

@@ -68,27 +68,18 @@ fn process_word_token_is_allocation_free_at_steady_state() {
 
     // single worker owning the whole corpus; flat CSR z + word tokens
     let mut rng = Pcg32::seeded(1);
+    let slice = corpus.read_range(0, corpus.num_docs());
     let mut z: Vec<u16> = Vec::with_capacity(corpus.num_tokens());
     let mut nwt: Vec<SparseCounts> =
-        (0..corpus.vocab).map(|_| SparseCounts::with_capacity(hyper.t)).collect();
+        (0..corpus.vocab()).map(|_| SparseCounts::with_capacity(hyper.t)).collect();
     let mut s = vec![0i64; hyper.t];
-    for &w in &corpus.tokens {
+    for &w in &slice.tokens {
         let topic = rng.below(hyper.t) as u16;
         nwt[w as usize].inc(topic);
         s[topic as usize] += 1;
         z.push(topic);
     }
-    let mut worker = WorkerState::new(
-        0,
-        1,
-        &corpus,
-        hyper,
-        0,
-        corpus.num_docs(),
-        z,
-        s,
-        Pcg32::seeded(2),
-    );
+    let mut worker = WorkerState::new(0, 1, &slice, hyper, z, s, Pcg32::seeded(2));
     let mut tokens: Vec<WordToken> = nwt
         .into_iter()
         .enumerate()

@@ -1,0 +1,139 @@
+//! Out-of-core training end to end: the same `.fncorpus` file trained
+//! through both corpus backends must produce bit-identical models, and the
+//! streaming backend must hold only its bounded read window resident.
+//!
+//! The backends share one code path for everything *above* the corpus
+//! (`docs_in` sweeps, `read_range` worker slices), so bit-identity is the
+//! sharpest possible check that the Disk backend returns exactly the bytes
+//! the Ram backend holds — any drift in window arithmetic or decode order
+//! would flip an RNG draw and diverge the trajectory immediately.
+
+use std::path::PathBuf;
+
+use fnomad_lda::coordinator::{train, EvalPolicy, RuntimeKind, SamplerKind, TrainConfig};
+use fnomad_lda::corpus::synthetic::{generate_with, SyntheticSpec};
+use fnomad_lda::corpus::{
+    peak_resident_corpus_bytes, preset, reset_peak_resident_corpus_bytes, Corpus, FncorpusWriter,
+};
+use fnomad_lda::lda::{self, Hyper, LdaState, Sweep};
+use fnomad_lda::util::rng::Pcg32;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("fnomad_out_of_core_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+#[test]
+fn ram_and_disk_training_are_bit_identical() {
+    let corpus = preset("tiny").unwrap();
+    let path = tmp("tiny_bitident.fncorpus");
+    corpus.write_fncorpus(&path).unwrap();
+
+    let ckpt_ram = tmp("bitident_ram.ckpt");
+    let ckpt_disk = tmp("bitident_disk.ckpt");
+    let _ = std::fs::remove_file(&ckpt_ram);
+    let _ = std::fs::remove_file(&ckpt_disk);
+
+    let base = |ckpt: &PathBuf| {
+        TrainConfig::preset("unused-when-corpus-is-set")
+            .corpus(&path)
+            .topics(8)
+            .runtime(RuntimeKind::Serial)
+            .sampler(SamplerKind::Sparse)
+            .iters(3)
+            .seed(17)
+            .eval(EvalPolicy::Rust)
+            .quiet(true)
+            .checkpoint(ckpt.clone())
+    };
+    let ram = train(&base(&ckpt_ram).corpus_ram(true)).unwrap();
+    // a 512-token window forces many window refills per sweep on the
+    // ~3.6k-token corpus — the arithmetic gets exercised, not bypassed
+    let disk = train(&base(&ckpt_disk).corpus_window(512)).unwrap();
+
+    assert_eq!(ram.ll_vs_iter.points.len(), disk.ll_vs_iter.points.len());
+    for (a, b) in ram.ll_vs_iter.points.iter().zip(&disk.ll_vs_iter.points) {
+        assert_eq!(a.0, b.0);
+        assert_eq!(
+            a.1.to_bits(),
+            b.1.to_bits(),
+            "LL trajectory diverged between backends at iter {}: {} vs {}",
+            a.0,
+            a.1,
+            b.1
+        );
+    }
+    let a = std::fs::read(&ckpt_ram).unwrap();
+    let b = std::fs::read(&ckpt_disk).unwrap();
+    assert_eq!(a, b, "final checkpoint bytes differ between Ram and DiskCsr");
+}
+
+#[test]
+fn nomad_workers_slice_a_streamed_corpus() {
+    let corpus = preset("tiny").unwrap();
+    let path = tmp("tiny_nomad.fncorpus");
+    corpus.write_fncorpus(&path).unwrap();
+
+    let cfg = TrainConfig::preset("unused-when-corpus-is-set")
+        .corpus(&path)
+        .corpus_window(256)
+        .topics(8)
+        .runtime(RuntimeKind::Nomad)
+        .workers(3)
+        .iters(2)
+        .seed(5)
+        .eval(EvalPolicy::Rust)
+        .quiet(true);
+    let res = train(&cfg).unwrap();
+    // the gathered state must be consistent against the equivalent
+    // in-RAM corpus: same documents, same offsets
+    res.final_state.check_consistency(&corpus).unwrap();
+    let lls: Vec<f64> = res.ll_vs_iter.points.iter().map(|&(_, y)| y).collect();
+    assert!(lls.last().unwrap() > lls.first().unwrap(), "no improvement: {lls:?}");
+}
+
+#[test]
+fn streamed_sweep_stays_under_the_read_window_cap() {
+    // ~360k tokens => ~1.4 MiB of token payload on disk
+    let spec = SyntheticSpec {
+        name: "window-cap".into(),
+        num_docs: 6_000,
+        vocab: 2_000,
+        avg_doc_len: 60.0,
+        true_topics: 8,
+        seed: 33,
+        ..Default::default()
+    };
+    let path = tmp("window_cap.fncorpus");
+    let mut w = FncorpusWriter::create(&path, spec.vocab, Vec::new(), &spec.name).unwrap();
+    generate_with(&spec, |d| w.push_doc(d)).unwrap();
+    let summary = w.finish().unwrap();
+    let payload_bytes = summary.num_tokens * 4;
+
+    // cap the window far below the file: 8k tokens = 32 KiB resident
+    const WINDOW_TOKENS: usize = 8_192;
+    const CAP_BYTES: usize = 256 * 1024;
+    assert!(
+        payload_bytes > 4 * CAP_BYTES,
+        "corpus too small to prove anything: payload {payload_bytes} bytes"
+    );
+
+    let corpus = Corpus::open_fncorpus(&path, WINDOW_TOKENS).unwrap();
+    reset_peak_resident_corpus_bytes();
+
+    let hyper = Hyper::paper_default(8);
+    let mut rng = Pcg32::seeded(3);
+    let mut state = LdaState::init_random(&corpus, hyper, &mut rng);
+    let mut sampler = lda::by_name("sparse", &state, &corpus).unwrap();
+    sampler.sweep(&mut state, &corpus, &mut rng);
+    state.check_consistency(&corpus).unwrap();
+
+    let peak = peak_resident_corpus_bytes();
+    assert!(peak > 0, "the streamed sweep never charged the resident meter");
+    assert!(
+        peak <= CAP_BYTES,
+        "peak resident corpus bytes {peak} exceeded the {CAP_BYTES}-byte cap \
+         (window is {WINDOW_TOKENS} tokens)"
+    );
+}

@@ -103,7 +103,7 @@ mod pjrt_tests {
         let mut ntw = vec![0f32; PROB_BATCH * t];
         let mut sites = Vec::new();
         'outer: for (doc, tokens) in corpus.docs().enumerate() {
-            for &w in tokens {
+            for &w in tokens.iter() {
                 let b = sites.len();
                 for k in 0..t {
                     ntd[b * t + k] = state.ntd[doc].get(k as u16) as f32;
