@@ -39,8 +39,14 @@ use std::fs::File;
 use std::io::{BufWriter, Read, Write};
 use std::os::unix::fs::FileExt;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
+
+// `static_atomic`, not the swappable shim atomics: these counters live in
+// `static` items (process-global accounting), and loom's atomics are not
+// const-constructible.  The residency gauges are therefore std under
+// every cfg and outside the loom models' scope — by design; their
+// protocol is a plain monotone gauge with no cross-variable invariant.
+use crate::util::sync::static_atomic::{AtomicU64, AtomicUsize, Ordering};
 
 use crate::util::fsio::{AtomicFile, Fnv1a};
 
@@ -57,6 +63,14 @@ const IO_CHUNK: usize = 64 * 1024;
 // resident-bytes accounting
 // ---------------------------------------------------------------------------
 
+// Ordering audit: SeqCst throughout, deliberately.  PEAK is derived from
+// RESIDENT (a read of one feeds a write of the other), so this is a
+// *two-variable* protocol — the one shape where `Relaxed` genuinely loses
+// updates across threads and even Acquire/Release offers no single total
+// order to reason about.  The peak is test-asserted (the out_of_core
+// residency cap), so "approximately right" is not acceptable; these
+// counters are touched once per read-window slide, where a SeqCst fence
+// costs nothing measurable next to the pread it accounts for.
 static RESIDENT: AtomicUsize = AtomicUsize::new(0);
 static PEAK: AtomicUsize = AtomicUsize::new(0);
 
@@ -191,6 +205,8 @@ impl FncorpusWriter {
                 std::fs::create_dir_all(dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
             }
         }
+        // relaxed: only uniqueness matters, which atomicity alone gives —
+        // no other memory is published under this counter
         let seq = PAYLOAD_SEQ.fetch_add(1, Ordering::Relaxed);
         let mut tmp_name = dest.as_os_str().to_os_string();
         tmp_name.push(format!(".payload-{}-{seq}", std::process::id()));

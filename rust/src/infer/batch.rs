@@ -2,55 +2,56 @@
 //! inference workers.
 //!
 //! Handler threads decode inference requests and [`BatchQueue::push`] a
-//! [`Job`] each; worker threads [`BatchQueue::pop_batch`] *everything
-//! queued at once* (up to a cap, optionally lingering for a batching
-//! window) and run the whole batch through one warm engine — the F+tree
-//! base build and scratch buffers are paid per batch, not per query.
+//! job each; worker threads [`BatchQueue::pop_batch`] *everything queued
+//! at once* (up to a cap, optionally lingering for a batching window) and
+//! run the whole batch through one warm engine — the F+tree base build
+//! and scratch buffers are paid per batch, not per query.
 //! `std::sync::mpsc` is single-consumer, so the queue is a hand-rolled
 //! bounded MPMC: a `Mutex<VecDeque>` with two condvars (`not_empty` for
-//! workers, `not_full` for backpressure on handlers).
+//! workers, `not_full` for backpressure on handlers), built on the
+//! [`crate::util::sync`] shim so `rust/tests/loom_models.rs` can
+//! model-check the push/pop/backpressure/close-drain protocol
+//! exhaustively.
 //!
 //! Backpressure is explicit: when the queue is full past a deadline the
 //! push fails with a named "server overloaded" error that travels back to
 //! the client as a `Response::Err` — bounded memory under overload, never
-//! an unbounded backlog.
+//! an unbounded backlog.  The failure discipline extends to panics: a
+//! worker that dies poisons nothing visible — producers and consumers get
+//! the named close reason (see [`BatchQueue::close_named`]) instead of a
+//! cascading `unwrap()` panic.
 
 use std::collections::VecDeque;
-use std::sync::mpsc::SyncSender;
-use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use super::wire::Response;
+use crate::util::sync::{lock_checked, wait_timeout, Condvar, Mutex};
 
-/// One queued inference request: the resolved token ids plus the reply
-/// channel of the handler thread that owns the connection.
-pub struct Job {
-    pub tokens: Vec<u32>,
-    pub sweeps: u32,
-    pub seed: u64,
-    /// rendezvous back to the handler; a handler that gave up waiting has
-    /// dropped the receiver, and the worker's send simply no-ops
-    pub reply: SyncSender<Response>,
-}
+/// Close reason when a mutex is found poisoned: some thread panicked
+/// *inside* a queue critical section, so the state may be mid-mutation
+/// and the only safe answer is a named shutdown.
+const POISONED: &str = "inference queue poisoned: a worker thread panicked; server shutting down";
 
-struct QueueState {
-    jobs: VecDeque<Job>,
-    closed: bool,
+struct QueueState<T> {
+    jobs: VecDeque<T>,
+    /// `Some(reason)` once closed; the reason travels to producers as
+    /// their push error.  The first close wins — a later, more generic
+    /// close must not mask a "worker panicked" diagnosis.
+    closed: Option<String>,
 }
 
 /// Bounded multi-producer multi-consumer job queue.
-pub struct BatchQueue {
-    state: Mutex<QueueState>,
+pub struct BatchQueue<T> {
+    state: Mutex<QueueState<T>>,
     not_empty: Condvar,
     not_full: Condvar,
     cap: usize,
 }
 
-impl BatchQueue {
-    pub fn new(cap: usize) -> BatchQueue {
+impl<T> BatchQueue<T> {
+    pub fn new(cap: usize) -> BatchQueue<T> {
         assert!(cap >= 1, "queue depth must be >= 1");
         BatchQueue {
-            state: Mutex::new(QueueState { jobs: VecDeque::new(), closed: false }),
+            state: Mutex::new(QueueState { jobs: VecDeque::new(), closed: None }),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
             cap,
@@ -58,8 +59,12 @@ impl BatchQueue {
     }
 
     /// Jobs currently queued (racy by nature; for stats reporting).
+    /// A poisoned queue reports 0 — it no longer accepts or serves work.
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().jobs.len()
+        match lock_checked(&self.state) {
+            Ok(st) => st.jobs.len(),
+            Err(_) => 0,
+        }
     }
 
     pub fn is_empty(&self) -> bool {
@@ -68,8 +73,9 @@ impl BatchQueue {
 
     /// Enqueue one job, blocking up to `deadline` for room.  Errors by
     /// name when the queue stays full past the deadline (overload
-    /// backpressure) or the server is shutting down.
-    pub fn push(&self, job: Job, deadline: Duration) -> Result<(), String> {
+    /// backpressure), the server is shutting down, or a worker panicked
+    /// inside the queue.
+    pub fn push(&self, job: T, deadline: Duration) -> Result<(), String> {
         let overloaded = || {
             format!(
                 "server overloaded: inference queue held {} jobs for {deadline:?}",
@@ -77,16 +83,16 @@ impl BatchQueue {
             )
         };
         let t0 = Instant::now();
-        let mut st = self.state.lock().unwrap();
-        while st.jobs.len() >= self.cap && !st.closed {
+        let mut st = lock_checked(&self.state).map_err(|_| POISONED.to_string())?;
+        while st.jobs.len() >= self.cap && st.closed.is_none() {
             let left = match deadline.checked_sub(t0.elapsed()) {
                 Some(left) if !left.is_zero() => left,
                 _ => return Err(overloaded()),
             };
-            st = self.not_full.wait_timeout(st, left).unwrap().0;
+            st = wait_timeout(&self.not_full, st, left).map_err(|_| POISONED.to_string())?;
         }
-        if st.closed {
-            return Err("server shutting down: inference queue closed".into());
+        if let Some(reason) = &st.closed {
+            return Err(reason.clone());
         }
         st.jobs.push_back(job);
         drop(st);
@@ -101,20 +107,21 @@ impl BatchQueue {
     /// * `Some(jobs)` — a non-empty batch to run;
     /// * `Some(vec![])` — the idle timeout fired with nothing queued
     ///   (workers use this to re-check the model slot version);
-    /// * `None` — the queue is closed *and* drained: the worker exits.
-    pub fn pop_batch(&self, max: usize, window: Duration, idle: Duration) -> Option<Vec<Job>> {
+    /// * `None` — the queue is closed *and* drained, or poisoned: the
+    ///   worker exits.
+    pub fn pop_batch(&self, max: usize, window: Duration, idle: Duration) -> Option<Vec<T>> {
         let max = max.max(1);
         let t0 = Instant::now();
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_checked(&self.state).ok()?;
         while st.jobs.is_empty() {
-            if st.closed {
+            if st.closed.is_some() {
                 return None;
             }
             let left = match idle.checked_sub(t0.elapsed()) {
                 Some(left) if !left.is_zero() => left,
                 _ => return Some(Vec::new()),
             };
-            st = self.not_empty.wait_timeout(st, left).unwrap().0;
+            st = wait_timeout(&self.not_empty, st, left).ok()?;
         }
         let mut batch = Vec::with_capacity(st.jobs.len().min(max));
         let w0 = Instant::now();
@@ -125,14 +132,20 @@ impl BatchQueue {
                     None => break,
                 }
             }
-            if batch.len() >= max || st.closed {
+            if batch.len() >= max || st.closed.is_some() {
                 break;
             }
             let left = match window.checked_sub(w0.elapsed()) {
                 Some(left) if !left.is_zero() => left,
                 _ => break,
             };
-            st = self.not_empty.wait_timeout(st, left).unwrap().0;
+            st = match wait_timeout(&self.not_empty, st, left) {
+                Ok(st) => st,
+                // poisoned mid-linger: hand back what was already drained
+                // (each job's reply is still owed an answer), the *next*
+                // pop observes the poison and exits
+                Err(_) => return Some(batch),
+            };
         }
         drop(st);
         // up to `max` slots just freed — wake every blocked producer
@@ -143,34 +156,38 @@ impl BatchQueue {
     /// Close the queue: producers fail fast, consumers drain what is
     /// left and then get `None`.
     pub fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        self.close_named("server shutting down: inference queue closed");
+    }
+
+    /// Close with an explicit reason — e.g. "inference worker panicked" —
+    /// that every subsequent and currently-blocked producer receives as
+    /// its error.  The first reason sticks.
+    pub fn close_named(&self, reason: &str) {
+        if let Ok(mut st) = lock_checked(&self.state) {
+            if st.closed.is_none() {
+                st.closed = Some(reason.to_string());
+            }
+        }
         self.not_empty.notify_all();
         self.not_full.notify_all();
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
-    use std::sync::mpsc::sync_channel;
     use std::sync::Arc;
-
-    fn job(seed: u64) -> (Job, std::sync::mpsc::Receiver<Response>) {
-        let (reply, rx) = sync_channel(1);
-        (Job { tokens: vec![1, 2, 3], sweeps: 5, seed, reply }, rx)
-    }
 
     #[test]
     fn push_then_pop_batches_everything_queued() {
         let q = BatchQueue::new(16);
-        for i in 0..5 {
-            let (j, _rx) = job(i);
-            q.push(j, Duration::from_secs(1)).unwrap();
+        for i in 0..5u64 {
+            q.push(i, Duration::from_secs(1)).unwrap();
         }
         assert_eq!(q.len(), 5);
         let batch = q.pop_batch(3, Duration::ZERO, Duration::from_secs(1)).unwrap();
         assert_eq!(batch.len(), 3, "batch respects the max");
-        assert_eq!(batch[0].seed, 0, "FIFO order");
+        assert_eq!(batch[0], 0, "FIFO order");
         let batch = q.pop_batch(16, Duration::ZERO, Duration::from_secs(1)).unwrap();
         assert_eq!(batch.len(), 2);
         assert!(q.is_empty());
@@ -178,7 +195,7 @@ mod tests {
 
     #[test]
     fn idle_timeout_returns_an_empty_batch_not_a_hang() {
-        let q = BatchQueue::new(4);
+        let q = BatchQueue::<u64>::new(4);
         let t0 = Instant::now();
         let batch = q.pop_batch(8, Duration::ZERO, Duration::from_millis(30)).unwrap();
         assert!(batch.is_empty());
@@ -188,12 +205,9 @@ mod tests {
     #[test]
     fn full_queue_backpressure_is_a_named_error() {
         let q = BatchQueue::new(2);
-        let (j0, _r0) = job(0);
-        let (j1, _r1) = job(1);
-        let (j2, _r2) = job(2);
-        q.push(j0, Duration::from_millis(10)).unwrap();
-        q.push(j1, Duration::from_millis(10)).unwrap();
-        let err = q.push(j2, Duration::from_millis(10)).unwrap_err();
+        q.push(0u64, Duration::from_millis(10)).unwrap();
+        q.push(1u64, Duration::from_millis(10)).unwrap();
+        let err = q.push(2u64, Duration::from_millis(10)).unwrap_err();
         assert!(err.contains("overloaded"), "unhelpful: {err}");
         // a consumer frees room and a blocked push succeeds
         let q = Arc::new(q);
@@ -202,24 +216,18 @@ mod tests {
             std::thread::sleep(Duration::from_millis(20));
             q2.pop_batch(1, Duration::ZERO, Duration::from_secs(1)).unwrap().len()
         });
-        let (j3, _r3) = job(3);
-        q.push(j3, Duration::from_secs(2)).unwrap();
+        q.push(3u64, Duration::from_secs(2)).unwrap();
         assert_eq!(popper.join().unwrap(), 1);
     }
 
     #[test]
     fn batching_window_collects_late_arrivals() {
         let q = Arc::new(BatchQueue::new(16));
-        let (j0, _r0) = job(0);
-        q.push(j0, Duration::from_secs(1)).unwrap();
+        q.push(0u64, Duration::from_secs(1)).unwrap();
         let q2 = Arc::clone(&q);
         let pusher = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(30));
-            let (j1, r1) = job(1);
-            q2.push(j1, Duration::from_secs(1)).unwrap();
-            // keep the receiver alive until the pop below finishes
-            std::thread::sleep(Duration::from_millis(300));
-            drop(r1);
+            q2.push(1u64, Duration::from_secs(1)).unwrap();
         });
         let batch = q
             .pop_batch(8, Duration::from_millis(250), Duration::from_secs(1))
@@ -231,8 +239,7 @@ mod tests {
     #[test]
     fn close_drains_then_terminates_consumers_and_fails_producers() {
         let q = BatchQueue::new(4);
-        let (j0, _r0) = job(0);
-        q.push(j0, Duration::from_secs(1)).unwrap();
+        q.push(0u64, Duration::from_secs(1)).unwrap();
         q.close();
         // queued work still drains
         let batch = q.pop_batch(4, Duration::ZERO, Duration::from_secs(1)).unwrap();
@@ -242,8 +249,82 @@ mod tests {
         assert!(q.pop_batch(4, Duration::ZERO, Duration::from_secs(60)).is_none());
         assert!(t0.elapsed() < Duration::from_secs(5));
         // and producers fail by name
-        let (j1, _r1) = job(1);
-        let err = q.push(j1, Duration::from_secs(1)).unwrap_err();
+        let err = q.push(1u64, Duration::from_secs(1)).unwrap_err();
         assert!(err.contains("shutting down"), "unhelpful: {err}");
+    }
+
+    #[test]
+    #[should_panic(expected = "queue depth must be >= 1")]
+    fn zero_capacity_queues_are_rejected_at_construction() {
+        let _ = BatchQueue::<u64>::new(0);
+    }
+
+    /// Mirror of the loom close-wakes-blocked-producer model: a producer
+    /// parked on backpressure must be woken by `close` and fail with the
+    /// close reason — promptly, not after its full deadline.
+    #[test]
+    fn close_while_full_wakes_the_blocked_producer_with_the_reason() {
+        let q = Arc::new(BatchQueue::new(1));
+        q.push(0u64, Duration::from_secs(1)).unwrap();
+        let q2 = Arc::clone(&q);
+        let closer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            q2.close_named("inference worker panicked; server shutting down");
+        });
+        let t0 = Instant::now();
+        let err = q.push(1u64, Duration::from_secs(30)).unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(10), "close must wake the producer");
+        assert!(err.contains("worker panicked"), "unhelpful: {err}");
+        closer.join().unwrap();
+        // the job queued before the close still drains, then the end
+        assert_eq!(q.pop_batch(4, Duration::ZERO, Duration::ZERO).unwrap(), vec![0]);
+        assert!(q.pop_batch(4, Duration::ZERO, Duration::from_secs(1)).is_none());
+    }
+
+    /// Mirror of the loom transfer model: pops racing a close never lose
+    /// an accepted job and never duplicate one.
+    #[test]
+    fn pop_batch_racing_close_drains_accepted_jobs_exactly_once() {
+        for _ in 0..50 {
+            let q = Arc::new(BatchQueue::new(64));
+            let q2 = Arc::clone(&q);
+            let consumer = std::thread::spawn(move || {
+                let mut got = Vec::new();
+                loop {
+                    match q2.pop_batch(8, Duration::ZERO, Duration::from_secs(5)) {
+                        Some(batch) => got.extend(batch),
+                        None => return got,
+                    }
+                }
+            });
+            let mut accepted = Vec::new();
+            for i in 0..20u64 {
+                if q.push(i, Duration::ZERO).is_ok() {
+                    accepted.push(i);
+                }
+            }
+            q.close();
+            let got = consumer.join().unwrap();
+            assert_eq!(got, accepted, "accepted jobs must drain exactly once, in order");
+        }
+    }
+
+    /// A thread that panics while holding the queue mutex must not turn
+    /// every other thread's `unwrap()` into a panic: producers get the
+    /// named poison error, consumers exit.
+    #[test]
+    fn poisoned_queue_is_a_named_error_not_a_panic_cascade() {
+        let q = Arc::new(BatchQueue::new(4));
+        q.push(0u64, Duration::from_secs(1)).unwrap();
+        let q2 = Arc::clone(&q);
+        let _ = std::thread::spawn(move || {
+            let _guard = q2.state.lock().unwrap();
+            panic!("deliberate poison");
+        })
+        .join();
+        let err = q.push(1u64, Duration::from_secs(1)).unwrap_err();
+        assert!(err.contains("panicked"), "unhelpful: {err}");
+        assert!(q.pop_batch(4, Duration::ZERO, Duration::ZERO).is_none());
+        assert_eq!(q.len(), 0, "a poisoned queue serves nothing");
     }
 }

@@ -47,14 +47,18 @@ use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+// mpsc stays std under every cfg: it is the single-consumer rendezvous
+// back to one handler thread, not one of the model-checked protocols
+// (the loom suite covers BatchQueue/VersionedSlot; see util/sync docs)
+use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use crate::corpus::text::{porter_stem, tokenize};
 use crate::util::codec::{read_len_prefixed, read_len_prefixed_eof, write_len_prefixed};
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{lock_checked, lock_recover, Arc, Mutex};
 
-use super::batch::{BatchQueue, Job};
+use super::batch::BatchQueue;
 use super::cache::{CacheKey, LruCache};
 use super::config::{ClientConfig, ServeConfig};
 use super::engine::{InferJob, InferOpts, Inferencer};
@@ -86,6 +90,22 @@ pub const MAX_TOP_WORDS_ENTRIES: u64 = 1 << 19;
 /// How often an *idle* worker re-checks the model slot for a hot swap
 /// (a busy worker re-checks after every batch).
 const VERSION_POLL: Duration = Duration::from_millis(500);
+
+/// The close reason a dying worker leaves on the queue: every blocked and
+/// subsequent push fails with this instead of a timeout or a poisoned
+/// `unwrap()` cascade.
+const WORKER_PANICKED: &str = "inference worker panicked; server shutting down";
+
+/// One queued inference request: the resolved token ids plus the reply
+/// channel of the handler thread that owns the connection.
+pub struct Job {
+    pub tokens: Vec<u32>,
+    pub sweeps: u32,
+    pub seed: u64,
+    /// rendezvous back to the handler; a handler that gave up waiting has
+    /// dropped the receiver, and the worker's send simply no-ops
+    pub reply: mpsc::SyncSender<Response>,
+}
 
 /// A loaded model plus the word → id index raw-text queries resolve
 /// against.  Immutable after construction — safe to share via `Arc`.
@@ -262,53 +282,78 @@ pub fn model_id_for(path: &Path, model: &TopicModel) -> String {
     format!("{stem}@{:016x}", model.fingerprint())
 }
 
-/// One immutable generation of the served model.
-pub struct VersionedModel {
-    pub host: ModelHost,
-    /// 1 for the initially loaded model, bumped by every swap
+/// One immutable generation of a swappable value (for serving: the
+/// loaded model).
+pub struct Versioned<T> {
+    pub value: T,
+    /// 1 for the initially loaded generation, bumped by every swap
     pub version: u64,
     /// `stem@fingerprint` identity of the artifact
     pub id: String,
 }
 
-/// The atomically swappable model holder.
+/// One immutable generation of the served model.
+pub type VersionedModel = Versioned<ModelHost>;
+
+/// The atomically swappable holder — generic so the lease/re-lease
+/// protocol is model-checked in `rust/tests/loom_models.rs` with a cheap
+/// payload, served as [`ModelSlot`] in production.
 ///
 /// `load` hands out a cheap `Arc` lease: readers keep whatever generation
 /// they leased for as long as they hold it (in-flight queries finish on
 /// the model they started on), while `swap` makes every *subsequent*
 /// lease see the new generation.  The separate atomic `version` lets hot
 /// paths ask "did anything change?" without touching the mutex.
-pub struct ModelSlot {
-    current: Mutex<Arc<VersionedModel>>,
+///
+/// The hint discipline: `swap` stores the hint *inside* the critical
+/// section, after publishing the new `Arc`, so (a) hint values are
+/// serialized by the lock and strictly monotone, and (b) a reader that
+/// observes hint `v` and then takes the lock is guaranteed a lease with
+/// `version >= v` — the hint never runs ahead of what `load` returns.
+pub struct VersionedSlot<T> {
+    current: Mutex<Arc<Versioned<T>>>,
     version_hint: AtomicU64,
 }
 
-impl ModelSlot {
-    /// Wrap the initially loaded model as version 1.
-    pub fn new(host: ModelHost, id: String) -> ModelSlot {
-        ModelSlot {
-            current: Mutex::new(Arc::new(VersionedModel { host, version: 1, id })),
+/// The atomically swappable model holder (see [`VersionedSlot`]).
+pub type ModelSlot = VersionedSlot<ModelHost>;
+
+impl<T> VersionedSlot<T> {
+    /// Wrap the initially loaded value as version 1.
+    pub fn new(value: T, id: String) -> VersionedSlot<T> {
+        VersionedSlot {
+            current: Mutex::new(Arc::new(Versioned { value, version: 1, id })),
             version_hint: AtomicU64::new(1),
         }
     }
 
     /// Lease the current generation.
-    pub fn load(&self) -> Arc<VersionedModel> {
-        Arc::clone(&self.current.lock().unwrap())
+    ///
+    /// Poison-tolerant by construction: both critical sections (here and
+    /// in [`VersionedSlot::swap`]) are single indivisible assignments, so
+    /// the guarded `Arc` is always a complete generation even if a thread
+    /// panicked while holding the lock.
+    pub fn load(&self) -> Arc<Versioned<T>> {
+        Arc::clone(&lock_recover(&self.current))
     }
 
     /// The current generation number, lock-free.
     pub fn version(&self) -> u64 {
+        // Acquire pairs with the Release store in `swap`: a reader that
+        // sees version v also sees every write that preceded publishing
+        // generation v, even on a path that never takes the lock
         self.version_hint.load(Ordering::Acquire)
     }
 
     /// Publish a new generation; returns its version number.  Existing
     /// leases are untouched — the old `Arc` frees when its last in-flight
     /// reader drops it.
-    pub fn swap(&self, host: ModelHost, id: String) -> u64 {
-        let mut cur = self.current.lock().unwrap();
+    pub fn swap(&self, value: T, id: String) -> u64 {
+        let mut cur = lock_recover(&self.current);
         let version = cur.version + 1;
-        *cur = Arc::new(VersionedModel { host, version, id });
+        *cur = Arc::new(Versioned { value, version, id });
+        // Release (paired with the Acquire in `version`), stored while
+        // the lock is held — see the hint discipline in the type docs
         self.version_hint.store(version, Ordering::Release);
         version
     }
@@ -319,7 +364,7 @@ struct ServeCore {
     slot: Arc<ModelSlot>,
     cfg: ServeConfig,
     stats: ServerStats,
-    queue: BatchQueue,
+    queue: BatchQueue<Job>,
     /// `None` when `cache_capacity` is 0
     cache: Option<Mutex<LruCache<CacheKey, Response>>>,
 }
@@ -333,16 +378,20 @@ impl ServeCore {
     }
 
     /// Cache lookup; records the hit/miss (only when the cache exists).
+    /// A poisoned cache (a panic inside a lookup/insert) silently stops
+    /// caching — inference still answers, just uncached.
     fn cache_get(&self, key: &CacheKey) -> Option<Response> {
         let cache = self.cache.as_ref()?;
-        let hit = cache.lock().unwrap().get(key);
+        let mut cache = lock_checked(cache).ok()?;
+        let hit = cache.get(key);
+        drop(cache);
         self.stats.record_cache(hit.is_some());
         hit
     }
 
     fn cache_put(&self, key: CacheKey, resp: &Response) {
-        if let Some(cache) = self.cache.as_ref() {
-            cache.lock().unwrap().insert(key, resp.clone());
+        if let Some(Ok(mut cache)) = self.cache.as_ref().map(lock_checked) {
+            cache.insert(key, resp.clone());
         }
     }
 
@@ -351,7 +400,7 @@ impl ServeCore {
         match req {
             Request::ModelInfo => {
                 let vm = self.slot.load();
-                vm.host.model_info(vm.version, &vm.id)
+                vm.value.model_info(vm.version, &vm.id)
             }
             Request::TopWords { k } => {
                 let vm = self.slot.load();
@@ -359,7 +408,7 @@ impl ServeCore {
                 if let Some(hit) = self.cache_get(&key) {
                     return hit;
                 }
-                let resp = vm.host.top_words_response(k);
+                let resp = vm.value.top_words_response(k);
                 if !matches!(resp, Response::Err(_)) {
                     self.cache_put(key, &resp);
                 }
@@ -372,7 +421,7 @@ impl ServeCore {
                 // tokenized against the generation current at decode time;
                 // a swap racing this request resolves ids on the old vocab
                 // and folds in on the new, exactly like any in-flight query
-                match self.slot.load().host.tokenize_text(&text) {
+                match self.slot.load().value.tokenize_text(&text) {
                     Ok(tokens) => self.infer_via_queue(tokens, sweeps, seed),
                     Err(e) => Response::Err(e),
                 }
@@ -447,14 +496,29 @@ impl ServeCore {
     }
 }
 
+/// Armed for the lifetime of a worker: if the worker panics (a bug — the
+/// decoders are total, so client input cannot get here), the queue is
+/// closed by name so handlers get "worker panicked" errors instead of a
+/// rendezvous that times out or a poisoned-mutex `unwrap()` cascade.
+struct WorkerPanicGuard<'a>(&'a ServeCore);
+
+impl Drop for WorkerPanicGuard<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.queue.close_named(WORKER_PANICKED);
+        }
+    }
+}
+
 /// One worker: lease the current model, drain batches through a warm
 /// engine, re-lease when the slot version moves.  After a swap a worker
 /// finishes at most the batch it already drained on the old lease (its
 /// answers are labeled with that lease's version), then rebuilds.
 fn worker_loop(core: &ServeCore) {
+    let _guard = WorkerPanicGuard(core);
     loop {
         let vm = core.slot.load();
-        let mut inf = Inferencer::new(vm.host.model());
+        let mut inf = Inferencer::new(vm.value.model());
         loop {
             let batch = match core.queue.pop_batch(
                 core.cfg.max_batch,
@@ -898,6 +962,92 @@ mod tests {
         assert_eq!(r.cache_hits, 2);
         assert_eq!(r.cache_misses, 1);
         assert!(r.batches >= 1 && r.batched_docs >= 1);
+        core.queue.close();
+        worker.join().unwrap();
+    }
+
+    /// Regression for the lock-poisoning fragility: a worker that panics
+    /// must convert into named "worker panicked" errors on the handler
+    /// path — not a poisoned-mutex `unwrap()` cascade, not a silent
+    /// rendezvous timeout.
+    #[test]
+    fn panicking_worker_yields_named_errors_not_a_panic_cascade() {
+        let slot = Arc::new(ModelSlot::new(ModelHost::new(text_model()), "m@0".into()));
+        let core = Arc::new(ServeCore::new(
+            Arc::clone(&slot),
+            ServeConfig::default().workers(1),
+        ));
+        let worker = {
+            let core = Arc::clone(&core);
+            std::thread::spawn(move || {
+                let _guard = WorkerPanicGuard(&core);
+                panic!("deliberate worker bug");
+            })
+        };
+        assert!(worker.join().is_err(), "the worker must have panicked");
+        // every subsequent inference is refused by name, promptly
+        let t0 = Instant::now();
+        let resp = core.answer_request(Request::InferTokens {
+            tokens: vec![0, 1],
+            sweeps: 2,
+            seed: 0,
+        });
+        match resp {
+            Response::Err(e) => assert!(e.contains("worker panicked"), "unhelpful: {e}"),
+            other => panic!("expected a named error, got {other:?}"),
+        }
+        assert!(
+            t0.elapsed() < core.cfg.answer_deadline,
+            "the refusal must be fail-fast, not an answer-deadline timeout"
+        );
+        // cheap requests that bypass the queue still answer
+        match core.answer_request(Request::ModelInfo) {
+            Response::ModelInfo { model_version, .. } => assert_eq!(model_version, 1),
+            other => panic!("expected ModelInfo, got {other:?}"),
+        }
+    }
+
+    /// The slot's critical sections are single assignments, so a panic
+    /// while the lock is held must not take down lease/swap.
+    #[test]
+    fn poisoned_slot_still_leases_and_swaps() {
+        let slot = Arc::new(ModelSlot::new(ModelHost::new(text_model()), "a@1".into()));
+        let s2 = Arc::clone(&slot);
+        let _ = std::thread::spawn(move || {
+            let _guard = s2.current.lock().unwrap();
+            panic!("deliberate poison");
+        })
+        .join();
+        assert_eq!(slot.load().version, 1, "the lease survives the poison");
+        assert_eq!(slot.swap(ModelHost::new(text_model()), "b@2".into()), 2);
+        assert_eq!(slot.load().version, 2);
+        assert_eq!(slot.version(), 2);
+    }
+
+    /// A poisoned answer cache degrades to a cache-less server: queries
+    /// still answer, nothing panics.
+    #[test]
+    fn poisoned_cache_degrades_to_uncached_answers() {
+        let slot = Arc::new(ModelSlot::new(ModelHost::new(text_model()), "m@0".into()));
+        let core = Arc::new(ServeCore::new(
+            Arc::clone(&slot),
+            ServeConfig::default().workers(1).cache_capacity(64),
+        ));
+        let c2 = Arc::clone(&core);
+        let _ = std::thread::spawn(move || {
+            let _guard = c2.cache.as_ref().unwrap().lock().unwrap();
+            panic!("deliberate poison");
+        })
+        .join();
+        let worker = {
+            let core = Arc::clone(&core);
+            std::thread::spawn(move || worker_loop(&core))
+        };
+        let req = Request::InferTokens { tokens: vec![0, 1, 2], sweeps: 4, seed: 9 };
+        match core.answer_request(req) {
+            Response::Theta { model_version, .. } => assert_eq!(model_version, 1),
+            other => panic!("expected Theta despite the poisoned cache, got {other:?}"),
+        }
         core.queue.close();
         worker.join().unwrap();
     }

@@ -10,8 +10,16 @@
 //! ([`crate::util::bench::bucket_percentile_us`]): ≤ √2× value
 //! resolution, O(1) recording, bounded memory.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+// Counter protocol, and why every access is `Relaxed`: each counter is an
+// independent monotone tally — no reader derives a cross-counter
+// invariant that synchronization would have to protect (a report may see
+// a request that its latency histogram does not, and vice versa; totals
+// are exact once the recording threads are quiescent, e.g. after join).
+// Relaxed atomics give per-counter exactness without ordering cost on the
+// request path.
 use std::time::{Duration, Instant};
+
+use crate::util::sync::atomic::{AtomicU64, Ordering};
 
 use crate::util::bench::{bucket_percentile_us, latency_bucket, LATENCY_BUCKETS};
 
@@ -53,35 +61,61 @@ impl ServerStats {
     /// inference (vs info/top-words/admin), and whether it answered with
     /// an `Err` response.
     pub fn record_request(&self, wall: Duration, is_infer: bool, is_err: bool) {
+        // relaxed: independent monotone tallies, see the module protocol note
         self.total_requests.fetch_add(1, Ordering::Relaxed);
         if is_infer {
+            // relaxed: independent monotone tally
             self.infer_requests.fetch_add(1, Ordering::Relaxed);
         }
         if is_err {
+            // relaxed: independent monotone tally
             self.errors.fetch_add(1, Ordering::Relaxed);
         }
         let ns = wall.as_nanos().min(u64::MAX as u128) as u64;
+        // relaxed: each bucket is its own tally; percentile readback
+        // tolerates torn cross-bucket snapshots
         self.lat_ns[latency_bucket(ns)].fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one cache lookup outcome.
     pub fn record_cache(&self, hit: bool) {
         if hit {
+            // relaxed: independent monotone tally
             self.cache_hits.fetch_add(1, Ordering::Relaxed);
         } else {
+            // relaxed: independent monotone tally
             self.cache_misses.fetch_add(1, Ordering::Relaxed);
         }
     }
 
     /// Record one drained worker batch of `docs` documents.
     pub fn record_batch(&self, docs: u64) {
+        // relaxed: independent monotone tallies
         self.batches.fetch_add(1, Ordering::Relaxed);
+        // relaxed: independent monotone tally
         self.batched_docs.fetch_add(docs, Ordering::Relaxed);
-        self.max_batch.fetch_max(docs, Ordering::Relaxed);
+        // Running max as a CAS loop rather than `fetch_max`: loom's
+        // atomics do not model `fetch_max`, and the loop is equivalent —
+        // retry while our value still exceeds the observed max.
+        // relaxed: a monotone high-water mark; no other memory hangs off it
+        let mut seen = self.max_batch.load(Ordering::Relaxed);
+        while docs > seen {
+            // relaxed: same monotone high-water mark
+            match self.max_batch.compare_exchange_weak(
+                seen,
+                docs,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(now) => seen = now,
+            }
+        }
     }
 
     /// Record one completed model hot-swap.
     pub fn record_swap(&self) {
+        // relaxed: independent monotone tally
         self.model_swaps.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -90,6 +124,8 @@ impl ServerStats {
     /// queue / model slot, not here).
     pub fn report(&self, queue_depth: u64, model_version: u64) -> StatsReport {
         let uptime_secs = self.start.elapsed().as_secs_f64().max(1e-9);
+        // relaxed: snapshot loads of independent tallies; the report is
+        // allowed to be a torn cross-counter snapshot (module note)
         let total_requests = self.total_requests.load(Ordering::Relaxed);
         let cache_hits = self.cache_hits.load(Ordering::Relaxed);
         let cache_misses = self.cache_misses.load(Ordering::Relaxed);
@@ -102,6 +138,7 @@ impl ServerStats {
         StatsReport {
             uptime_secs,
             total_requests,
+            // relaxed: snapshot loads, as above
             infer_requests: self.infer_requests.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             qps: total_requests as f64 / uptime_secs,
@@ -115,11 +152,13 @@ impl ServerStats {
             p50_us: pct(50.0),
             p95_us: pct(95.0),
             p99_us: pct(99.0),
+            // relaxed: snapshot loads, as above
             batches: self.batches.load(Ordering::Relaxed),
             batched_docs: self.batched_docs.load(Ordering::Relaxed),
             max_batch: self.max_batch.load(Ordering::Relaxed),
             queue_depth,
             model_version,
+            // relaxed: snapshot load, as above
             model_swaps: self.model_swaps.load(Ordering::Relaxed),
         }
     }

@@ -10,8 +10,10 @@
 //! * **Async checkpoint service** — [`SnapshotStore`] owns an on-disk
 //!   checkpoint directory (FNLDA001 files + a fingerprinting MANIFEST,
 //!   keep-last-K retention); [`CheckpointWriter`] drains [`LdaState`]
-//!   snapshots from a bounded channel on a background thread so the epoch
-//!   loop never blocks on disk; [`AsyncCheckpointer`] is the
+//!   snapshots from a bounded offer queue (hand-rolled on the
+//!   [`crate::util::sync`] shim; its offer/flush/finish contract is
+//!   model-checked in `rust/tests/loom_models.rs`) on a background thread
+//!   so the epoch loop never blocks on disk; [`AsyncCheckpointer`] is the
 //!   [`TrainObserver`] that feeds it at the eval cadence.
 //! * **Supervised recovery** — [`Supervisor`] wraps the ring's fallible
 //!   `try_run_epoch`/`try_gather_state` twins behind the [`TrainEngine`]

@@ -1,5 +1,5 @@
 //! The async half of the checkpoint service: a background writer thread
-//! fed over a bounded channel, so checkpointing never stalls the epoch
+//! fed over a bounded queue, so checkpointing never stalls the epoch
 //! loop.
 //!
 //! The contract the supervisor and tests rely on:
@@ -14,13 +14,19 @@
 //!   of silently picking a stale reload point;
 //! * [`CheckpointWriter::finish`] drains the queue and joins the thread,
 //!   so a clean training exit always persists its final snapshot.
+//!
+//! The transport is the hand-rolled [`OfferQueue`] rather than
+//! `std::sync::mpsc`, for one reason: the offer/flush/finish contract
+//! above is load-bearing for recovery correctness, and building it on the
+//! [`crate::util::sync`] shim lets `rust/tests/loom_models.rs`
+//! model-check it exhaustively (mpsc is opaque to loom).
 
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::collections::VecDeque;
 use std::thread::JoinHandle;
 
 use crate::coordinator::{EvalPoint, TrainObserver};
 use crate::lda::LdaState;
+use crate::util::sync::{lock_checked, wait_timeout, Arc, Condvar, Mutex};
 
 use super::snapshot::SnapshotStore;
 
@@ -28,28 +34,156 @@ use super::snapshot::SnapshotStore;
 /// dropped; beyond that, freshness wins over completeness.
 const QUEUE_DEPTH: usize = 2;
 
-enum Job {
-    Save { epoch: usize, state: Box<LdaState> },
-    /// reply once every job queued before this one has been processed
-    Flush(Sender<()>),
-    Stop,
+/// How long a flusher sleeps per wait round.  Purely defensive: progress
+/// is signaled by notifies; the timeout only bounds the damage of a
+/// (hypothetical) missed wakeup.
+const FLUSH_POLL: std::time::Duration = std::time::Duration::from_millis(100);
+
+struct OfferState<T> {
+    /// `(seq, item)` — seq is 1-based acceptance order
+    queue: VecDeque<(u64, T)>,
+    /// number of offers accepted so far == seq of the latest accepted
+    accepted: u64,
+    /// seq of the last item the consumer finished processing
+    processed: u64,
+    closed: bool,
+    consumer_alive: bool,
 }
+
+/// A bounded single-consumer queue with *drop-on-full* producers and a
+/// *flush barrier*: the checkpoint service's transport, generic so the
+/// loom suite can model it with a cheap payload.
+///
+/// Protocol:
+///
+/// * [`OfferQueue::offer`] never blocks: full, closed, or consumer-gone
+///   means the item is dropped and `false` comes back;
+/// * the consumer loops [`OfferQueue::pop`] → work →
+///   [`OfferQueue::complete`], and calls [`OfferQueue::consumer_exited`]
+///   on the way out (panic included — callers arm a guard);
+/// * [`OfferQueue::flush`] blocks until everything accepted *before the
+///   call* has been completed, and returns `false` the moment the
+///   consumer is found dead instead — unprocessed offers will never
+///   complete, and the caller must not assume they landed;
+/// * [`OfferQueue::close`] lets the consumer drain what is queued, then
+///   its next `pop` returns `None`.
+pub struct OfferQueue<T> {
+    state: Mutex<OfferState<T>>,
+    /// wakes the consumer: something queued, or closed
+    not_empty: Condvar,
+    /// wakes flushers: progress, or consumer exit
+    progressed: Condvar,
+    cap: usize,
+}
+
+impl<T> OfferQueue<T> {
+    pub fn new(cap: usize) -> OfferQueue<T> {
+        assert!(cap >= 1, "queue depth must be >= 1");
+        OfferQueue {
+            state: Mutex::new(OfferState {
+                queue: VecDeque::new(),
+                accepted: 0,
+                processed: 0,
+                closed: false,
+                consumer_alive: true,
+            }),
+            not_empty: Condvar::new(),
+            progressed: Condvar::new(),
+            cap,
+        }
+    }
+
+    /// Try to enqueue; never blocks.  `false` means dropped (queue full,
+    /// closed, consumer gone, or — defensively — lock poisoned).
+    pub fn offer(&self, item: T) -> bool {
+        let Ok(mut st) = lock_checked(&self.state) else { return false };
+        if st.closed || !st.consumer_alive || st.queue.len() >= self.cap {
+            return false;
+        }
+        st.accepted += 1;
+        let seq = st.accepted;
+        st.queue.push_back((seq, item));
+        drop(st);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Consumer side: block for the next item; `None` once the queue is
+    /// closed and drained (or the lock is poisoned).
+    pub fn pop(&self) -> Option<(u64, T)> {
+        let mut st = lock_checked(&self.state).ok()?;
+        loop {
+            if let Some(front) = st.queue.pop_front() {
+                return Some(front);
+            }
+            if st.closed {
+                return None;
+            }
+            st = wait_timeout(&self.not_empty, st, FLUSH_POLL).ok()?;
+        }
+    }
+
+    /// Consumer side: mark `seq` fully processed, waking flushers.
+    pub fn complete(&self, seq: u64) {
+        if let Ok(mut st) = lock_checked(&self.state) {
+            st.processed = st.processed.max(seq);
+        }
+        self.progressed.notify_all();
+    }
+
+    /// Consumer side: the consumer is gone; pending flushes fail fast.
+    pub fn consumer_exited(&self) {
+        if let Ok(mut st) = lock_checked(&self.state) {
+            st.consumer_alive = false;
+        }
+        self.progressed.notify_all();
+    }
+
+    /// Block until everything accepted before this call is processed.
+    /// `false` the moment the consumer is found dead (its unprocessed
+    /// backlog will never complete) or the lock is poisoned.
+    #[must_use]
+    pub fn flush(&self) -> bool {
+        let Ok(mut st) = lock_checked(&self.state) else { return false };
+        let target = st.accepted;
+        loop {
+            if !st.consumer_alive {
+                return false;
+            }
+            if st.processed >= target {
+                return true;
+            }
+            let Ok(guard) = wait_timeout(&self.progressed, st, FLUSH_POLL) else {
+                return false;
+            };
+            st = guard;
+        }
+    }
+
+    /// Stop accepting offers; the consumer drains the backlog, then its
+    /// next [`OfferQueue::pop`] returns `None`.
+    pub fn close(&self) {
+        if let Ok(mut st) = lock_checked(&self.state) {
+            st.closed = true;
+        }
+        self.not_empty.notify_all();
+    }
+}
+
+type SaveJob = (usize, Box<LdaState>);
 
 /// Cloneable, non-blocking handle feeding the writer thread.
 #[derive(Clone)]
 pub struct SnapshotSink {
-    tx: SyncSender<Job>,
+    queue: Arc<OfferQueue<SaveJob>>,
 }
 
 impl SnapshotSink {
     /// Queue a snapshot without blocking.  Returns whether it was
     /// accepted; `false` means the bounded queue was full (writer busy)
-    /// and the snapshot was dropped.
+    /// or the writer is gone, and the snapshot was dropped.
     pub fn offer(&self, epoch: usize, state: LdaState) -> bool {
-        !matches!(
-            self.tx.try_send(Job::Save { epoch, state: Box::new(state) }),
-            Err(TrySendError::Full(_) | TrySendError::Disconnected(_))
-        )
+        self.queue.offer((epoch, Box::new(state)))
     }
 
     /// Block until everything queued so far is on disk.  Returns `false`
@@ -58,30 +192,30 @@ impl SnapshotSink {
     /// choosing a recovery reload point must not assume they landed.
     #[must_use]
     pub fn flush(&self) -> bool {
-        let (done_tx, done_rx) = std::sync::mpsc::channel();
-        self.tx.send(Job::Flush(done_tx)).is_ok() && done_rx.recv().is_ok()
+        self.queue.flush()
     }
 }
 
 /// Owner of the background writer thread.
 pub struct CheckpointWriter {
-    sink: SnapshotSink,
+    queue: Arc<OfferQueue<SaveJob>>,
     handle: Option<JoinHandle<()>>,
 }
 
 impl CheckpointWriter {
     /// Spawn the writer over `store`.
     pub fn spawn(store: Arc<SnapshotStore>, quiet: bool) -> CheckpointWriter {
-        let (tx, rx) = sync_channel::<Job>(QUEUE_DEPTH);
+        let queue = Arc::new(OfferQueue::new(QUEUE_DEPTH));
+        let q = Arc::clone(&queue);
         let handle = std::thread::Builder::new()
             .name("ckpt-writer".into())
-            .spawn(move || writer_loop(&store, &rx, quiet))
+            .spawn(move || writer_loop(&store, &q, quiet))
             .expect("spawn checkpoint writer thread");
-        CheckpointWriter { sink: SnapshotSink { tx }, handle: Some(handle) }
+        CheckpointWriter { queue, handle: Some(handle) }
     }
 
     pub fn sink(&self) -> SnapshotSink {
-        self.sink.clone()
+        SnapshotSink { queue: Arc::clone(&self.queue) }
     }
 
     /// Drain the queue, stop the thread, and join it.
@@ -91,7 +225,7 @@ impl CheckpointWriter {
 
     fn stop_and_join(&mut self) {
         if let Some(handle) = self.handle.take() {
-            let _ = self.sink.tx.send(Job::Stop);
+            self.queue.close();
             let _ = handle.join();
         }
     }
@@ -103,29 +237,35 @@ impl Drop for CheckpointWriter {
     }
 }
 
-fn writer_loop(store: &SnapshotStore, rx: &Receiver<Job>, quiet: bool) {
-    while let Ok(job) = rx.recv() {
-        match job {
-            Job::Save { epoch, state } => match store.save(epoch, &state) {
-                Ok(()) => {
-                    if !quiet {
-                        eprintln!(
-                            "[resilience] checkpointed epoch {epoch} under {}",
-                            store.dir().display()
-                        );
-                    }
-                }
-                // a failed background save must not kill training; the
-                // cost is only an older recovery baseline
-                Err(e) => {
-                    eprintln!("[resilience] warning: checkpoint of epoch {epoch} failed: {e}");
-                }
-            },
-            Job::Flush(done) => {
-                let _ = done.send(());
-            }
-            Job::Stop => return,
+fn writer_loop(store: &SnapshotStore, queue: &OfferQueue<SaveJob>, quiet: bool) {
+    // exit marker armed against panics too: a dying writer must fail
+    // pending flushes by name ("writer gone"), not strand them
+    struct ExitGuard<'a>(&'a OfferQueue<SaveJob>);
+    impl Drop for ExitGuard<'_> {
+        fn drop(&mut self) {
+            self.0.consumer_exited();
         }
+    }
+    let _exit = ExitGuard(queue);
+    while let Some((seq, (epoch, state))) = queue.pop() {
+        match store.save(epoch, &state) {
+            Ok(()) => {
+                if !quiet {
+                    eprintln!(
+                        "[resilience] checkpointed epoch {epoch} under {}",
+                        store.dir().display()
+                    );
+                }
+            }
+            // a failed background save must not kill training; the
+            // cost is only an older recovery baseline
+            Err(e) => {
+                eprintln!("[resilience] warning: checkpoint of epoch {epoch} failed: {e}");
+            }
+        }
+        // processed even when the save failed: flush waits for the
+        // backlog to be *handled*, not for every save to succeed
+        queue.complete(seq);
     }
 }
 

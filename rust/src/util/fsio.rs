@@ -86,6 +86,8 @@ impl AtomicFile {
                 std::fs::create_dir_all(dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
             }
         }
+        // relaxed: only uniqueness matters, which atomicity alone gives —
+        // no other memory is published under this counter
         let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
         let mut tmp_name = dest.as_os_str().to_os_string();
         tmp_name.push(format!(".tmp-{}-{seq}", std::process::id()));

@@ -9,6 +9,9 @@
 //!   reader, and length-prefixed frame IO shared by every wire format.
 //! * [`metrics`] — timers + CSV series writers for the experiment curves.
 //! * [`fsio`] — crash-safe atomic file writes with FNV-1a fingerprints.
+//! * [`sync`] — the `std`-or-loom concurrency shim every hand-rolled
+//!   lock/atomic construction is built on, plus the poisoning policy
+//!   helpers (see its module docs for how the loom models run).
 
 pub mod bench;
 pub mod cli;
@@ -18,3 +21,4 @@ pub mod math;
 pub mod metrics;
 pub mod quickcheck;
 pub mod rng;
+pub mod sync;

@@ -19,6 +19,10 @@ pub fn check<F>(name: &str, cases: u64, mut prop: F)
 where
     F: FnMut(&mut Pcg32) -> Result<(), String>,
 {
+    // Miri executes ~1000x slower than native; a handful of seeds still
+    // exercises the UB-sensitive paths (the CI Miri job runs the pure
+    // wire/codec/cache properties), while native runs keep full coverage.
+    let cases = if cfg!(miri) { cases.min(4) } else { cases };
     for seed in 0..cases {
         let mut rng = Pcg32::new(0xF00D + seed, seed);
         if let Err(msg) = prop(&mut rng) {

@@ -1,0 +1,201 @@
+//! The concurrency shim: every hand-rolled lock/atomic construction in
+//! this crate reaches `Mutex`/`Condvar`/atomics through here, so the same
+//! source compiles against `std::sync` normally and against
+//! [loom](https://docs.rs/loom)'s model-checked replacements under
+//! `--cfg loom`.
+//!
+//! # Why a shim
+//!
+//! The crate contains several bespoke concurrent protocols — the bounded
+//! MPMC [`BatchQueue`], the [`VersionedSlot`] hot-swap version hint, the
+//! snapshot [`OfferQueue`] — whose correctness claims ("offer never
+//! blocks", "every answer is labeled with an actually-leased version")
+//! are exactly the kind that survive hammer tests and die in production.
+//! `rust/tests/loom_models.rs` model-checks those protocols exhaustively;
+//! for loom to intercept every lock acquisition and atomic access, the
+//! production types must be built from loom's primitives when the model
+//! runs.  The shim keeps that a pure build-time switch: zero cost and
+//! zero `cfg` noise at the use sites.
+//!
+//! # Running the models locally
+//!
+//! The committed manifest is dependency-free (the default build is
+//! hermetic/offline), so `loom` is appended by the CI job — or by hand:
+//!
+//! ```sh
+//! printf '\n%s\n%s\n' "[target.'cfg(loom)'.dependencies]" 'loom = "0.7"' >> Cargo.toml
+//! RUSTFLAGS="--cfg loom" LOOM_MAX_PREEMPTIONS=3 \
+//!     cargo test --release --test loom_models
+//! ```
+//!
+//! # What is (and is not) swapped
+//!
+//! * [`Mutex`], [`Condvar`], [`MutexGuard`], the [`atomic`] module, and
+//!   [`thread`] are loom's under `cfg(loom)`.
+//! * [`Arc`] stays `std::sync::Arc` under both configurations: it is a
+//!   reference counter, not an ordering protocol — nothing here relies on
+//!   `Arc` for synchronization beyond what its (library-guaranteed)
+//!   clone/drop contract provides — and keeping it `std` keeps public
+//!   signatures (`serve_model(_, Arc<ModelSlot>, _)`) identical across
+//!   configurations, so unmigrated callers interoperate.
+//! * [`static_atomic`] is *always* `std`: loom atomics are created per
+//!   model execution and cannot live in `static` items.  Process-global
+//!   counters (the disk-corpus residency gauges) use these and are out of
+//!   loom's scope by design.
+//! * Condvar waits go through [`wait_timeout`], which under loom degrades
+//!   to an untimed `wait` (loom does not model the passage of time).
+//!   Loom models must therefore be written so every wait is eventually
+//!   satisfied by a notify, never by a timeout.
+//!
+//! # Poisoning policy
+//!
+//! Loom's `Mutex` never poisons, and the serving stack must not answer a
+//! panic with a cascade of `unwrap()` panics (see the named-error
+//! discipline in [`crate::infer::server`]).  The two lock helpers make the
+//! policy explicit at each site:
+//!
+//! * [`lock_checked`] surfaces a poisoned lock as [`Poisoned`] so the
+//!   caller converts it into a named "worker panicked" error;
+//! * [`lock_recover`] takes the data anyway — only correct for structures
+//!   whose invariants hold across a panic (single-assignment swaps,
+//!   monotone counters), which the call site must justify.
+//!
+//! [`BatchQueue`]: crate::infer::batch::BatchQueue
+//! [`VersionedSlot`]: crate::infer::server::VersionedSlot
+//! [`OfferQueue`]: crate::resilience::writer::OfferQueue
+
+use std::time::Duration;
+
+#[cfg(not(loom))]
+pub use std::sync::atomic;
+#[cfg(not(loom))]
+pub use std::sync::{Condvar, Mutex, MutexGuard};
+#[cfg(not(loom))]
+pub use std::thread;
+
+#[cfg(loom)]
+pub use loom::sync::atomic;
+#[cfg(loom)]
+pub use loom::sync::{Condvar, Mutex, MutexGuard};
+#[cfg(loom)]
+pub use loom::thread;
+
+// deliberately std under both cfgs — see the module docs
+pub use std::sync::Arc;
+
+/// Atomics for `static` items: always `std`, because loom's atomics are
+/// not const-constructible (they register with the active model
+/// execution).  Use only for process-global counters whose protocol is a
+/// plain monotone gauge, and justify the orderings at the site.
+pub mod static_atomic {
+    pub use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+}
+
+/// A mutex was poisoned: some thread panicked while holding it.  Returned
+/// by [`lock_checked`] / [`wait_timeout`] so callers can answer with a
+/// named error instead of propagating the panic to every thread that
+/// touches the lock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Poisoned;
+
+/// Acquire `m`, reporting poisoning as [`Poisoned`] instead of panicking.
+#[cfg(not(loom))]
+pub fn lock_checked<'a, T>(m: &'a Mutex<T>) -> Result<MutexGuard<'a, T>, Poisoned> {
+    m.lock().map_err(|_| Poisoned)
+}
+
+/// Acquire `m`, reporting poisoning as [`Poisoned`] instead of panicking.
+/// (Loom mutexes never poison.)
+#[cfg(loom)]
+pub fn lock_checked<'a, T>(m: &'a Mutex<T>) -> Result<MutexGuard<'a, T>, Poisoned> {
+    Ok(m.lock().unwrap())
+}
+
+/// Acquire `m`, recovering the data from a poisoned lock.  Only for
+/// structures whose invariants hold across a panic — the caller must be
+/// able to argue that every critical section is a single indivisible
+/// assignment or a monotone update.
+#[cfg(not(loom))]
+pub fn lock_recover<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Acquire `m`, recovering the data from a poisoned lock.  (Loom mutexes
+/// never poison.)
+#[cfg(loom)]
+pub fn lock_recover<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {
+    m.lock().unwrap()
+}
+
+/// Wait on `cv` for at most `dur`, reporting poisoning as [`Poisoned`].
+///
+/// Callers own their deadline arithmetic (they re-check elapsed wall time
+/// against the deadline on every wakeup), so the *timed-out* flag is not
+/// returned: a spurious early wakeup and a timeout look the same, and
+/// both are handled by the caller's loop condition.
+#[cfg(not(loom))]
+pub fn wait_timeout<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> Result<MutexGuard<'a, T>, Poisoned> {
+    match cv.wait_timeout(guard, dur) {
+        Ok((guard, _)) => Ok(guard),
+        Err(_) => Err(Poisoned),
+    }
+}
+
+/// Wait on `cv`, reporting poisoning as [`Poisoned`].  Loom does not
+/// model the passage of time, so the duration is ignored and the wait
+/// only ends on a notify — loom models must guarantee one arrives.
+#[cfg(loom)]
+pub fn wait_timeout<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    _dur: Duration,
+) -> Result<MutexGuard<'a, T>, Poisoned> {
+    Ok(cv.wait(guard).unwrap())
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn lock_checked_reports_poison_and_lock_recover_takes_the_data() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock().unwrap();
+            panic!("deliberate poison");
+        })
+        .join();
+        assert_eq!(lock_checked(&m).err(), Some(Poisoned));
+        assert_eq!(*lock_recover(&m), 7, "the data survives the panic");
+    }
+
+    #[test]
+    fn wait_timeout_returns_after_the_deadline() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let guard = m.lock().unwrap();
+        let t0 = Instant::now();
+        let _guard = wait_timeout(&cv, guard, Duration::from_millis(20)).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+    }
+
+    #[test]
+    fn wait_timeout_reports_poison() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let pair2 = Arc::clone(&pair);
+        let _ = std::thread::spawn(move || {
+            let _guard = pair2.0.lock().unwrap();
+            panic!("deliberate poison");
+        })
+        .join();
+        let guard = lock_recover(&pair.0);
+        let r = wait_timeout(&pair.1, guard, Duration::from_millis(1));
+        assert_eq!(r.err(), Some(Poisoned));
+    }
+}

@@ -1,0 +1,227 @@
+//! Exhaustive model checks of the crate's hand-rolled concurrency
+//! protocols, driven by [loom](https://docs.rs/loom).
+//!
+//! This target compiles to an empty test binary unless built with
+//! `--cfg loom` *and* the loom dependency appended to the manifest (the
+//! committed manifest stays dependency-free so the default build is
+//! hermetic).  The CI `loom` job — and the one-liner in the
+//! `util::sync` module docs — does both:
+//!
+//! ```sh
+//! printf '\n%s\n%s\n' "[target.'cfg(loom)'.dependencies]" 'loom = "0.7"' >> Cargo.toml
+//! RUSTFLAGS="--cfg loom" LOOM_MAX_PREEMPTIONS=3 \
+//!     cargo test --release --test loom_models
+//! ```
+//!
+//! Under `--cfg loom` the production types themselves are rebuilt on
+//! loom's `Mutex`/`Condvar`/atomics via the `util::sync` shim, so what
+//! runs here is the real `BatchQueue`/`VersionedSlot`/`OfferQueue` code,
+//! not a model of it.  Loom explores every interleaving (bounded by
+//! `LOOM_MAX_PREEMPTIONS`), checking the asserts plus deadlock- and
+//! leak-freedom on each execution.
+//!
+//! Model-writing rules imposed by the shim (see `util::sync` docs):
+//! timeouts are not modeled — every condvar wait must be satisfied by an
+//! eventual notify, so every model guarantees a fulfilling event (a pop,
+//! a close, a complete) on some thread.
+
+#![cfg(loom)]
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fnomad_lda::infer::batch::BatchQueue;
+use fnomad_lda::infer::server::VersionedSlot;
+use fnomad_lda::resilience::writer::OfferQueue;
+
+/// Effectively infinite: deadlines never fire inside a model (loom waits
+/// are untimed), so every exit is protocol-driven.
+const FOREVER: Duration = Duration::from_secs(3600);
+
+// ------------------------------------------------------------ BatchQueue
+
+/// Producer/consumer transfer: two producers, one consumer, capacity 2.
+/// Every pushed job is popped exactly once; per-producer FIFO holds
+/// trivially (one job each); nothing deadlocks.
+#[test]
+fn batch_queue_transfers_every_job_exactly_once() {
+    loom::model(|| {
+        let q = Arc::new(BatchQueue::new(2));
+        let p1 = {
+            let q = Arc::clone(&q);
+            loom::thread::spawn(move || q.push(1u64, FOREVER).unwrap())
+        };
+        let p2 = {
+            let q = Arc::clone(&q);
+            loom::thread::spawn(move || q.push(2u64, FOREVER).unwrap())
+        };
+        let mut got = Vec::new();
+        while got.len() < 2 {
+            match q.pop_batch(2, Duration::ZERO, FOREVER) {
+                Some(batch) => got.extend(batch),
+                None => break,
+            }
+        }
+        p1.join().unwrap();
+        p2.join().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2], "every accepted job pops exactly once");
+    });
+}
+
+/// Backpressure + close-drain: capacity 1, a producer that may park on
+/// the full queue, a closer racing it, a draining consumer.  The blocked
+/// producer must always be woken (by a freed slot or by the close); an
+/// accepted job is drained exactly once; a rejected job never appears.
+#[test]
+fn batch_queue_close_wakes_blocked_producers_and_drains_accepted_work() {
+    loom::model(|| {
+        let q = Arc::new(BatchQueue::new(1));
+        q.push(1u64, FOREVER).unwrap();
+        let producer = {
+            let q = Arc::clone(&q);
+            loom::thread::spawn(move || q.push(2u64, FOREVER))
+        };
+        let closer = {
+            let q = Arc::clone(&q);
+            loom::thread::spawn(move || q.close())
+        };
+        let mut got = Vec::new();
+        while let Some(batch) = q.pop_batch(1, Duration::ZERO, FOREVER) {
+            got.extend(batch);
+        }
+        let pushed = producer.join().unwrap();
+        closer.join().unwrap();
+        match pushed {
+            Ok(()) => assert_eq!(got, vec![1, 2], "an accepted push must drain"),
+            Err(e) => {
+                assert!(e.contains("shutting down"), "unhelpful close error: {e}");
+                assert_eq!(got, vec![1], "a rejected push must never be drained");
+            }
+        }
+    });
+}
+
+// --------------------------------------------------------- VersionedSlot
+
+/// The version-hint discipline under two concurrent swappers: the hint is
+/// monotone, and a reader that observes hint `v` gets a lease with
+/// `version >= v` — the hint never runs ahead of the published value.
+#[test]
+fn versioned_slot_hint_never_leads_the_published_generation() {
+    loom::model(|| {
+        let slot = Arc::new(VersionedSlot::new(10u32, "g1".into()));
+        let s1 = {
+            let slot = Arc::clone(&slot);
+            loom::thread::spawn(move || slot.swap(20, "g2".into()))
+        };
+        let s2 = {
+            let slot = Arc::clone(&slot);
+            loom::thread::spawn(move || slot.swap(30, "g3".into()))
+        };
+        let h1 = slot.version();
+        let lease = slot.load();
+        assert!(
+            lease.version >= h1,
+            "hint {h1} ran ahead of the leased generation {}",
+            lease.version
+        );
+        let h2 = slot.version();
+        assert!(h2 >= h1, "the hint must be monotone ({h1} then {h2})");
+        s1.join().unwrap();
+        s2.join().unwrap();
+        assert_eq!(slot.version(), 3);
+        assert_eq!(slot.load().version, 3, "the last swap wins the slot");
+    });
+}
+
+/// The worker lease/re-lease protocol against a concurrent swap: a batch
+/// is only ever labeled with the version of an actually-held lease, and
+/// once the hint reports a newer generation, re-leasing observes it —
+/// which bounds staleness to the single batch drained on the old lease.
+#[test]
+fn versioned_slot_relabel_after_swap_is_at_most_one_generation_late() {
+    loom::model(|| {
+        let slot = Arc::new(VersionedSlot::new(0u32, "m1".into()));
+        let swapper = {
+            let slot = Arc::clone(&slot);
+            loom::thread::spawn(move || slot.swap(1, "m2".into()))
+        };
+        // worker: lease, label one batch, poll the hint, maybe re-lease
+        let lease = slot.load();
+        let label = lease.version;
+        assert!(label == 1 || label == 2, "labels come from real leases");
+        if slot.version() != lease.version {
+            let release = slot.load();
+            assert!(
+                release.version > lease.version,
+                "a hint change must surface a newer generation"
+            );
+            assert_eq!(release.value, 1, "the new generation carries the new value");
+        }
+        swapper.join().unwrap();
+    });
+}
+
+// ------------------------------------------------------------ OfferQueue
+
+/// The snapshot-sink contract: offer (accepted when the consumer lives
+/// and the queue has room) → flush blocks until the consumer processed
+/// it → after the consumer exits, flush reports the dead consumer.
+#[test]
+fn offer_queue_flush_tracks_processing_and_reports_a_dead_consumer() {
+    loom::model(|| {
+        let q = Arc::new(OfferQueue::new(2));
+        let consumer = {
+            let q = Arc::clone(&q);
+            loom::thread::spawn(move || {
+                while let Some((seq, _item)) = q.pop() {
+                    q.complete(seq);
+                }
+                q.consumer_exited();
+            })
+        };
+        assert!(q.offer(7u32), "room + live consumer must accept");
+        assert!(q.flush(), "a live consumer must flush accepted work");
+        q.close();
+        consumer.join().unwrap();
+        assert!(!q.flush(), "flush must report an exited consumer");
+    });
+}
+
+/// Offer never blocks and never loses accepted work: with capacity 1 and
+/// a slow consumer, later offers may be dropped — but whatever was
+/// accepted drains in order, exactly once, and drops never appear.
+#[test]
+fn offer_queue_drops_on_full_but_never_loses_accepted_items() {
+    loom::model(|| {
+        let q = Arc::new(OfferQueue::new(1));
+        let consumer = {
+            let q = Arc::clone(&q);
+            loom::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some((seq, item)) = q.pop() {
+                    got.push(item);
+                    q.complete(seq);
+                }
+                q.consumer_exited();
+                got
+            })
+        };
+        let a1 = q.offer(1u32);
+        let a2 = q.offer(2u32);
+        let a3 = q.offer(3u32);
+        q.close();
+        let got = consumer.join().unwrap();
+        let accepted: Vec<u32> = [(1u32, a1), (2, a2), (3, a3)]
+            .iter()
+            .filter(|(_, a)| *a)
+            .map(|(v, _)| *v)
+            .collect();
+        assert_eq!(
+            got, accepted,
+            "accepted snapshots drain in order exactly once; drops never appear"
+        );
+        assert!(a1, "an empty queue with a live consumer must accept");
+    });
+}

@@ -1,0 +1,478 @@
+//! `cargo xtask lint-invariants`: a line-level static pass over
+//! `rust/src` enforcing the repo's determinism and concurrency-hygiene
+//! invariants — the ones the compiler cannot see and code review keeps
+//! re-litigating.
+//!
+//! Rules (each violation names its rule):
+//!
+//! * **Determinism scope** (`rust/src/sampler/`, `rust/src/lda/`,
+//!   `rust/src/nomad/worker.rs`, `rust/src/ps/worker.rs` — the code whose
+//!   output must be bit-identical across runs, thread counts, and
+//!   machines):
+//!   - `no-hash-collections`: no `HashMap`/`HashSet` — their iteration
+//!     order is randomized per process, a classic nondeterminism leak.
+//!     Sorted `Vec`s and `BTreeMap` are the house idiom.
+//!   - `no-wall-clock`: no `Instant::now`/`SystemTime::now` — timing must
+//!     never influence sampling decisions (it belongs in `util::bench` /
+//!     `util::metrics`, outside this scope).
+//!   - `no-ambient-rng`: no `thread_rng`/`rand::` — all randomness flows
+//!     from explicitly seeded `util::rng` streams.
+//!   - `no-float-trunc-cast`: no `f32/f64 -> integer` `as` casts in the
+//!     recognizable spellings (`.floor() as`, `x_f64 as usize`, ...) —
+//!     `as` rounds toward zero and silently saturates; truncation points
+//!     must be deliberate and named (see `lint-allow.txt` for the one
+//!     audited case the lexical pass cannot see).
+//! * **Shim scope** (the modules migrated onto `util::sync` so the loom
+//!   suite models the real code):
+//!   - `no-raw-std-sync`: no `std::sync::` primitives except
+//!     `std::sync::Arc` (the shim deliberately re-exports std's) and
+//!     `std::sync::mpsc` (single-consumer rendezvous channels, outside
+//!     the modeled protocols).  Everything else must come through
+//!     `crate::util::sync`, or loom silently stops seeing it.
+//! * **Everywhere** (`rust/src/**`):
+//!   - `relaxed-needs-justification`: every `Ordering::Relaxed` must be
+//!     covered by a `// relaxed:` comment — on the same line or earlier
+//!     in the same blank-line-delimited block — saying why no ordering is
+//!     needed.  Relaxed is the one memory ordering whose misuse does not
+//!     fail loudly; the comment is the reviewable proof obligation.
+//!
+//! Pattern matching is lexical, over comment-stripped lines — cheap,
+//! zero-dependency, and deliberately dumb: anything it cannot prove
+//! harmless it flags, and `xtask/lint-allow.txt` (`rule path-suffix
+//! line-substring`, `#` comments) is the audited escape hatch.  Unused
+//! allowlist entries are themselves errors, so the file can only shrink
+//! stale.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Directories / files whose code must be bit-deterministic.
+const DETERMINISM_SCOPE: &[&str] = &[
+    "rust/src/sampler/",
+    "rust/src/lda/",
+    "rust/src/nomad/worker.rs",
+    "rust/src/ps/worker.rs",
+];
+
+/// Files migrated onto the `util::sync` shim: raw `std::sync` here would
+/// silently escape the loom models.
+const SHIM_SCOPE: &[&str] = &[
+    "rust/src/infer/batch.rs",
+    "rust/src/infer/server.rs",
+    "rust/src/infer/stats.rs",
+    "rust/src/resilience/writer.rs",
+    "rust/src/corpus/disk.rs",
+];
+
+/// `(rule, patterns)` applied to comment-stripped lines in the
+/// determinism scope.
+const DETERMINISM_RULES: &[(&str, &[&str])] = &[
+    ("no-hash-collections", &["HashMap", "HashSet"]),
+    ("no-wall-clock", &["Instant::now", "SystemTime::now"]),
+    ("no-ambient-rng", &["thread_rng", "rand::"]),
+    (
+        "no-float-trunc-cast",
+        &[
+            "f32 as u",
+            "f32 as i",
+            "f64 as u",
+            "f64 as i",
+            ".floor() as",
+            ".ceil() as",
+            ".round() as",
+            ".fract() as",
+            "next_f64() as",
+            "next_f32() as",
+        ],
+    ),
+];
+
+#[derive(Debug, PartialEq, Eq)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub file: String,
+    pub line_no: usize,
+    pub line: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file,
+            self.line_no,
+            self.rule,
+            self.line.trim()
+        )
+    }
+}
+
+pub struct Report {
+    pub violations: Vec<Violation>,
+    pub files_scanned: usize,
+    pub allowlisted: usize,
+}
+
+/// Lint the tree under `root` (the repo root: `rust/src` below it is
+/// scanned, `xtask/lint-allow.txt` below it is honored).
+pub fn check_tree(root: &Path) -> Result<Report, String> {
+    let src = root.join("rust/src");
+    let mut files = Vec::new();
+    collect_rs_files(&src, &mut files)
+        .map_err(|e| format!("walking {}: {e}", src.display()))?;
+    files.sort();
+
+    let mut raw = Vec::new();
+    for path in &files {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        let rel = path
+            .strip_prefix(root)
+            .map_err(|_| format!("{} escapes the repo root", path.display()))?
+            .to_string_lossy()
+            .replace('\\', "/");
+        scan_file(&rel, &text, &mut raw);
+    }
+
+    let allow = load_allowlist(&root.join("xtask/lint-allow.txt"))?;
+    let mut used = vec![false; allow.len()];
+    let mut violations = Vec::new();
+    let mut allowlisted = 0;
+    for v in raw {
+        let hit = allow.iter().position(|a| a.matches(&v));
+        match hit {
+            Some(i) => {
+                used[i] = true;
+                allowlisted += 1;
+            }
+            None => violations.push(v),
+        }
+    }
+    for (i, entry) in allow.iter().enumerate() {
+        if !used[i] {
+            return Err(format!(
+                "unused allowlist entry (line {}): '{} {} {}' — the code it \
+                 excused is gone; delete the entry",
+                entry.source_line, entry.rule, entry.path_suffix, entry.substring
+            ));
+        }
+    }
+    Ok(Report { violations, files_scanned: files.len(), allowlisted })
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if entry.file_type()?.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn scan_file(rel: &str, text: &str, out: &mut Vec<Violation>) {
+    let in_determinism = DETERMINISM_SCOPE.iter().any(|p| rel.starts_with(p));
+    let in_shim = SHIM_SCOPE.contains(&rel);
+    let lines: Vec<&str> = text.lines().collect();
+    let mut in_block_comment = false;
+    for (i, raw_line) in lines.iter().enumerate() {
+        let code = strip_comments(raw_line, &mut in_block_comment);
+        let mut push = |rule: &'static str| {
+            out.push(Violation {
+                rule,
+                file: rel.to_string(),
+                line_no: i + 1,
+                line: (*raw_line).to_string(),
+            });
+        };
+        if in_determinism {
+            for (rule, patterns) in DETERMINISM_RULES {
+                if patterns.iter().any(|p| code.contains(p)) {
+                    push(rule);
+                }
+            }
+        }
+        if in_shim && raw_std_sync(&code) {
+            push("no-raw-std-sync");
+        }
+        // checked on the *raw* line: the justification is a comment, and
+        // `Ordering::Relaxed` inside a comment is not an atomic access
+        if code.contains("Ordering::Relaxed") && !relaxed_justified(&lines, i) {
+            push("relaxed-needs-justification");
+        }
+    }
+}
+
+/// `std::sync::` minus the two sanctioned escapes (`Arc` is std under
+/// both cfgs by shim design; `mpsc` is single-consumer plumbing outside
+/// the modeled protocols).
+fn raw_std_sync(code: &str) -> bool {
+    code.replace("std::sync::Arc", "")
+        .replace("std::sync::mpsc", "")
+        .contains("std::sync::")
+}
+
+/// A `// relaxed:` marker on the line itself, or on any earlier line of
+/// the same blank-line-delimited block, justifies the access: one comment
+/// may cover a whole block of same-protocol accesses (the snapshot loads
+/// in `infer::stats::ServerStats::report` are the canonical case).
+fn relaxed_justified(lines: &[&str], i: usize) -> bool {
+    let mut j = i;
+    loop {
+        let line = lines[j];
+        if line.trim().is_empty() {
+            return false;
+        }
+        if line.contains("// relaxed:") {
+            return true;
+        }
+        if j == 0 {
+            return false;
+        }
+        j -= 1;
+    }
+}
+
+/// Drop `//` line comments and `/* ... */` block comments (tracking block
+/// state across lines).  String literals are *not* parsed: a `//` inside
+/// a string truncates the scanned line, which can only under-report —
+/// and none of the linted patterns hide in strings today.
+fn strip_comments(line: &str, in_block: &mut bool) -> String {
+    let mut out = String::new();
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        if *in_block {
+            if c == '*' && chars.peek() == Some(&'/') {
+                chars.next();
+                *in_block = false;
+            }
+        } else if c == '/' && chars.peek() == Some(&'/') {
+            break;
+        } else if c == '/' && chars.peek() == Some(&'*') {
+            chars.next();
+            *in_block = true;
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------- allowlist
+
+struct AllowEntry {
+    rule: String,
+    path_suffix: String,
+    substring: String,
+    source_line: usize,
+}
+
+impl AllowEntry {
+    fn matches(&self, v: &Violation) -> bool {
+        v.rule == self.rule
+            && v.file.ends_with(&self.path_suffix)
+            && v.line.contains(&self.substring)
+    }
+}
+
+/// Format: `rule path-suffix line-substring...` per line (the substring
+/// keeps any internal spaces); `#` comments and blank lines are skipped.
+/// A missing file means an empty allowlist.
+fn load_allowlist(path: &Path) -> Result<Vec<AllowEntry>, String> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(format!("reading {}: {e}", path.display())),
+    };
+    let mut entries = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.splitn(3, char::is_whitespace);
+        let (rule, suffix, substring) = (parts.next(), parts.next(), parts.next());
+        match (rule, suffix, substring) {
+            (Some(r), Some(p), Some(s)) => entries.push(AllowEntry {
+                rule: r.to_string(),
+                path_suffix: p.to_string(),
+                substring: s.trim().to_string(),
+                source_line: i + 1,
+            }),
+            _ => {
+                return Err(format!(
+                    "{}:{}: malformed allowlist entry (want: rule path-suffix \
+                     line-substring): '{line}'",
+                    path.display(),
+                    i + 1
+                ))
+            }
+        }
+    }
+    Ok(entries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    /// A scratch repo-shaped tree under the OS temp dir.
+    struct Tree {
+        root: PathBuf,
+    }
+
+    impl Tree {
+        fn new(name: &str) -> Tree {
+            let root = std::env::temp_dir()
+                .join(format!("xtask_lint_tests_{}", std::process::id()))
+                .join(name);
+            let _ = std::fs::remove_dir_all(&root);
+            std::fs::create_dir_all(&root).unwrap();
+            Tree { root }
+        }
+
+        fn write(&self, rel: &str, content: &str) {
+            let path = self.root.join(rel);
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(path, content).unwrap();
+        }
+    }
+
+    impl Drop for Tree {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_dir_all(&self.root);
+        }
+    }
+
+    fn rules_of(report: &Report) -> Vec<&'static str> {
+        report.violations.iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn seeded_determinism_violations_fail_the_lint() {
+        let t = Tree::new("seeded");
+        t.write(
+            "rust/src/sampler/bad.rs",
+            "use std::collections::HashMap;\n\
+             fn f() {\n\
+                 let t0 = std::time::Instant::now();\n\
+                 let x = 0.5f64;\n\
+                 let k = x.floor() as usize;\n\
+             }\n",
+        );
+        let report = check_tree(&t.root).unwrap();
+        let rules = rules_of(&report);
+        assert!(rules.contains(&"no-hash-collections"), "got {rules:?}");
+        assert!(rules.contains(&"no-wall-clock"), "got {rules:?}");
+        assert!(rules.contains(&"no-float-trunc-cast"), "got {rules:?}");
+    }
+
+    #[test]
+    fn commented_out_code_does_not_trip_the_determinism_rules() {
+        let t = Tree::new("comments");
+        t.write(
+            "rust/src/lda/ok.rs",
+            "// a HashMap would be nondeterministic here, so we don't\n\
+             /* Instant::now() is likewise banned */\n\
+             fn f() {}\n",
+        );
+        let report = check_tree(&t.root).unwrap();
+        assert!(report.violations.is_empty(), "{:?}", report.violations);
+    }
+
+    #[test]
+    fn raw_std_sync_in_shim_scope_fails_but_arc_and_mpsc_pass() {
+        let t = Tree::new("shim");
+        t.write(
+            "rust/src/infer/batch.rs",
+            "use std::sync::Arc;\n\
+             use std::sync::mpsc;\n\
+             use std::sync::Mutex;\n",
+        );
+        let report = check_tree(&t.root).unwrap();
+        assert_eq!(rules_of(&report), vec!["no-raw-std-sync"]);
+        assert_eq!(report.violations[0].line_no, 3);
+    }
+
+    #[test]
+    fn relaxed_needs_a_justifying_comment_in_its_block() {
+        let t = Tree::new("relaxed");
+        t.write(
+            "rust/src/util/counters.rs",
+            "fn ok(c: &AtomicU64) {\n\
+                 // relaxed: independent tally, nothing ordered under it\n\
+                 c.fetch_add(1, Ordering::Relaxed);\n\
+                 c.load(Ordering::Relaxed);\n\
+             }\n\
+             \n\
+             fn bad(c: &AtomicU64) {\n\
+                 c.fetch_add(1, Ordering::Relaxed);\n\
+             }\n",
+        );
+        let report = check_tree(&t.root).unwrap();
+        assert_eq!(rules_of(&report), vec!["relaxed-needs-justification"]);
+        assert_eq!(report.violations[0].line_no, 8, "{:?}", report.violations);
+    }
+
+    #[test]
+    fn allowlist_suppresses_matches_and_rejects_unused_entries() {
+        let t = Tree::new("allow");
+        t.write(
+            "rust/src/sampler/bad.rs",
+            "fn f() { let t0 = std::time::Instant::now(); }\n",
+        );
+        t.write(
+            "xtask/lint-allow.txt",
+            "# one live entry\n\
+             no-wall-clock sampler/bad.rs Instant::now\n",
+        );
+        let report = check_tree(&t.root).unwrap();
+        assert!(report.violations.is_empty(), "{:?}", report.violations);
+        assert_eq!(report.allowlisted, 1);
+
+        t.write(
+            "xtask/lint-allow.txt",
+            "no-wall-clock sampler/bad.rs Instant::now\n\
+             no-wall-clock sampler/gone.rs Instant::now\n",
+        );
+        let err = check_tree(&t.root).unwrap_err();
+        assert!(err.contains("unused allowlist entry"), "unhelpful: {err}");
+    }
+
+    #[test]
+    fn block_comment_state_carries_across_lines() {
+        let mut in_block = false;
+        assert_eq!(strip_comments("code /* open", &mut in_block), "code ");
+        assert!(in_block);
+        assert_eq!(strip_comments("still hidden", &mut in_block), "");
+        assert_eq!(strip_comments("end */ visible", &mut in_block), " visible");
+        assert!(!in_block);
+    }
+
+    /// The live gate: the repo's own tree must stay clean (everything
+    /// intentional is either compliant or explicitly allowlisted).
+    #[test]
+    fn the_real_tree_passes_the_lint() {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .unwrap()
+            .to_path_buf();
+        let report = check_tree(&root).unwrap();
+        assert!(
+            report.violations.is_empty(),
+            "the tree regressed:\n{}",
+            report
+                .violations
+                .iter()
+                .map(|v| v.to_string())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+        assert!(report.files_scanned > 50, "suspiciously few files scanned");
+    }
+}

@@ -1,0 +1,55 @@
+//! Repo tooling, invoked as `cargo xtask <command>` (the `xtask` alias
+//! lives in `.cargo/config.toml`).
+//!
+//! One command so far: `lint-invariants`, the determinism/concurrency
+//! static pass over `rust/src` — see [`lint`] for the rules and
+//! `xtask/lint-allow.txt` for the escape hatch.
+
+mod lint;
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn repo_root() -> PathBuf {
+    // xtask/ sits directly under the repo root
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask has a parent directory")
+        .to_path_buf()
+}
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    match args.next().as_deref() {
+        Some("lint-invariants") => match lint::check_tree(&repo_root()) {
+            Ok(report) => {
+                if report.violations.is_empty() {
+                    eprintln!(
+                        "lint-invariants: OK ({} files, {} allowlisted)",
+                        report.files_scanned, report.allowlisted
+                    );
+                    ExitCode::SUCCESS
+                } else {
+                    for v in &report.violations {
+                        eprintln!("{v}");
+                    }
+                    eprintln!(
+                        "lint-invariants: {} violation(s) — fix, or add a justified entry \
+                         to xtask/lint-allow.txt",
+                        report.violations.len()
+                    );
+                    ExitCode::FAILURE
+                }
+            }
+            Err(e) => {
+                eprintln!("lint-invariants: {e}");
+                ExitCode::FAILURE
+            }
+        },
+        other => {
+            let got = other.unwrap_or("<none>");
+            eprintln!("unknown xtask command '{got}'; available: lint-invariants");
+            ExitCode::FAILURE
+        }
+    }
+}
