@@ -252,6 +252,12 @@ pub struct TrainConfig {
     pub max_restarts: usize,
     /// scripted fault injection (tests only; never set from the CLI)
     pub fault: FaultPlan,
+    /// periodic telemetry export: one JSON object per epoch appended to
+    /// this file (`train --metrics FILE.jsonl`)
+    pub metrics: Option<PathBuf>,
+    /// Chrome-trace-event span recording, written once at the end of the
+    /// run (`train --trace FILE.json`; open in <https://ui.perfetto.dev>)
+    pub trace: Option<PathBuf>,
 }
 
 impl Default for TrainConfig {
@@ -283,6 +289,8 @@ impl Default for TrainConfig {
             keep: 3,
             max_restarts: 0,
             fault: FaultPlan::default(),
+            metrics: None,
+            trace: None,
         }
     }
 }
@@ -415,6 +423,16 @@ impl TrainConfig {
 
     pub fn fault(mut self, plan: FaultPlan) -> Self {
         self.fault = plan;
+        self
+    }
+
+    pub fn metrics(mut self, path: impl Into<PathBuf>) -> Self {
+        self.metrics = Some(path.into());
+        self
+    }
+
+    pub fn trace(mut self, path: impl Into<PathBuf>) -> Self {
+        self.trace = Some(path.into());
         self
     }
 

@@ -44,7 +44,7 @@ pub enum Clock {
 
 /// Per-epoch statistics, uniform across every runtime (the union of the
 /// four structs it replaced).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct EpochReport {
     /// tokens resampled this epoch
     pub processed: u64,
@@ -57,6 +57,55 @@ pub struct EpochReport {
     /// coordination messages: token transfers (nomad) or server ops
     /// (parameter server); zero for the uncoordinated runtimes
     pub msgs: u64,
+    /// where the epoch's wall time went on the ring — `Some` only for the
+    /// nomad runtime, whose coordinator/transport boundary is the one
+    /// place the breakdown can be measured without putting clocks in
+    /// sampler scope
+    pub ring: Option<RingTelemetry>,
+}
+
+/// One ring slot's share of an epoch: how long its worker spent sampling
+/// versus parked in `recv()` waiting for the ring to hand it a token.
+///
+/// Times are measured by the worker around its own transport boundary
+/// (never inside the sampler) and ride back to the coordinator in the
+/// epoch-end `SyncS` fold.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SlotTelemetry {
+    /// ring slot index
+    pub slot: usize,
+    /// seconds spent processing word/global tokens this epoch
+    pub sample_secs: f64,
+    /// seconds spent blocked on the ring link this epoch
+    pub wait_secs: f64,
+    /// tokens this worker has processed (cumulative over the run)
+    pub processed: u64,
+}
+
+/// Epoch wall-time breakdown for the nomad ring, assembled by the
+/// coordinator from its own phase clocks plus the per-slot reports.
+///
+/// The paper's throughput argument is exactly this decomposition: the
+/// async ring wins iff `sample_secs` dominates `wait_secs` on every slot
+/// and the synchronous tail (`fold`/`set`) stays negligible.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RingTelemetry {
+    /// seconds injecting this epoch's word/global tokens into the ring
+    pub inject_secs: f64,
+    /// seconds from last injection until every token came home
+    pub circulate_secs: f64,
+    /// seconds folding the `SyncS` replies into the global topic counts
+    pub fold_secs: f64,
+    /// seconds broadcasting the refreshed counts (`SetS`)
+    pub set_secs: f64,
+    /// per-hop latency estimate, p50 (µs): token round-trip / hops
+    pub hop_p50_us: f64,
+    /// per-hop latency estimate, p95 (µs)
+    pub hop_p95_us: f64,
+    /// per-hop latency estimate, max (µs)
+    pub hop_max_us: f64,
+    /// one entry per ring slot, in slot order
+    pub slots: Vec<SlotTelemetry>,
 }
 
 /// A training runtime the generic driver loop can drive.
@@ -140,6 +189,7 @@ impl TrainEngine for AdLdaEngine<'_> {
             // every token is sampled against the iteration-start snapshot
             stale_reads: processed,
             msgs: 0,
+            ring: None,
         }
     }
 

@@ -136,9 +136,21 @@ pub fn train_with(
     let init = checkpoint::init_or_load(resume_from, &corpus, hyper, cfg.seed, cfg.quiet)?;
     let mut eval = Evaluator::resolve(cfg.eval, init.hyper.t)?;
     let label = cfg.label();
+    if cfg.trace.is_some() {
+        // enable before the first epoch so span t=0 precedes every span
+        crate::obs::trace::enable();
+    }
     if !cfg.quiet {
-        eprintln!(
-            "[train] {} docs={} vocab={} tokens={} T={} eval={}{}{}",
+        crate::log_event!(
+            Info,
+            "train",
+            {
+                docs = corpus.num_docs(),
+                vocab = corpus.vocab(),
+                tokens = corpus.num_tokens(),
+                t = init.hyper.t
+            },
+            "{} docs={} vocab={} tokens={} T={} eval={}{}{}",
             label,
             corpus.num_docs(),
             corpus.vocab(),
@@ -191,6 +203,9 @@ pub fn train_with(
     if let Some(path) = &cfg.checkpoint {
         stock.push(Box::new(Checkpointer::new(path, cfg.save_every, cfg.quiet)));
     }
+    if let Some(path) = &cfg.metrics {
+        stock.push(Box::new(crate::obs::export::MetricsWriter::create(path)?));
+    }
 
     let eval_every = cfg.eval_every.max(1);
     let mut wall_secs = 0.0f64;
@@ -205,8 +220,32 @@ pub fn train_with(
         &mut stock,
         extra,
     )?;
+    let reg = crate::obs::registry::global();
+    let epochs_total = reg.counter("train.epochs_total");
+    let tokens_total = reg.counter("train.tokens_total");
     for it in 1..=cfg.iters {
+        let t_epoch = crate::obs::trace::start();
         let report = engine.run_epoch();
+        if let Some(t0) = t_epoch {
+            crate::obs::trace::complete("epoch", &format!("epoch {it}"), t_epoch);
+            if let Some(ring) = &report.ring {
+                // slot lanes: sampling starts once injection is done; each
+                // slot's per-epoch sample time renders as one span
+                let base_us = crate::obs::trace::us_since_epoch(t0)
+                    + (ring.inject_secs * 1e6) as u64;
+                for s in &ring.slots {
+                    crate::obs::trace::span_at(
+                        "slot",
+                        &format!("slot {} sample", s.slot),
+                        base_us,
+                        (s.sample_secs * 1e6) as u64,
+                        s.slot as u64 + 1,
+                    );
+                }
+            }
+        }
+        epochs_total.inc();
+        tokens_total.add(report.processed);
         wall_secs += report.secs;
         processed += report.processed;
         for o in stock.iter_mut() {
@@ -251,6 +290,10 @@ pub fn train_with(
     // disk before the run reports success
     if let Some((_, writer)) = ckpt_service {
         writer.finish();
+    }
+    // after the writer join, so checkpoint spans from this run are in
+    if let Some(path) = &cfg.trace {
+        crate::obs::trace::write(path)?;
     }
     Ok(result)
 }

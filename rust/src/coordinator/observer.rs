@@ -96,9 +96,15 @@ impl ProgressLogger {
 
 impl TrainObserver for ProgressLogger {
     fn on_eval(&mut self, point: &EvalPoint<'_>) -> Result<(), String> {
-        eprintln!(
+        crate::log_event!(
+            Info,
+            "train",
+            { iter = point.epoch, ll = format!("{:.4e}", point.ll) },
             "[{}] iter {:4}  t={:9.3}s  LL={:.4e}",
-            self.label, point.epoch, point.secs, point.ll
+            self.label,
+            point.epoch,
+            point.secs,
+            point.ll
         );
         Ok(())
     }
@@ -122,7 +128,7 @@ impl TrainObserver for CsvWriter {
         write_csv(&self.path, &[result.ll_vs_iter.clone(), result.ll_vs_time.clone()])
             .map_err(|e| e.to_string())?;
         if !self.quiet {
-            eprintln!("[train] wrote {}", self.path.display());
+            crate::log_event!(Info, "train", "wrote {}", self.path.display());
         }
         Ok(())
     }
@@ -152,7 +158,7 @@ impl Checkpointer {
         // a loadable generation for init_or_load to fall back to
         lda::checkpoint::save_with_retention(state, &self.path)?;
         if !self.quiet {
-            eprintln!("[ckpt] saved {} ({what})", self.path.display());
+            crate::log_event!(Info, "ckpt", "saved {} ({what})", self.path.display());
         }
         Ok(())
     }
@@ -200,7 +206,12 @@ impl TrainObserver for HyperOptimizer {
         let (alpha, beta) = lda::hyper_opt::optimize(&mut result.final_state, self.steps);
         self.estimate = Some((alpha, beta));
         if !self.quiet {
-            eprintln!("[hyper-opt] {} steps: alpha={alpha:.4} beta={beta:.4}", self.steps);
+            crate::log_event!(
+                Info,
+                "hyper-opt",
+                "{} steps: alpha={alpha:.4} beta={beta:.4}",
+                self.steps
+            );
         }
         Ok(())
     }

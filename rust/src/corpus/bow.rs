@@ -138,8 +138,11 @@ pub fn read_docword<R: Read>(r: R, vocab_words: Vec<String>, name: &str) -> Resu
     })?;
     if stats.skipped_empty > 0 {
         // the paper drops e.g. Amazon reviews left empty by stemming
-        eprintln!(
-            "[docword] warning: skipped {} empty documents in {name}",
+        crate::log_event!(
+            Warn,
+            "docword",
+            { skipped = stats.skipped_empty },
+            "warning: skipped {} empty documents in {name}",
             stats.skipped_empty
         );
     }

@@ -426,9 +426,21 @@ impl ServeCore {
                     Err(e) => Response::Err(e),
                 }
             }
-            Request::Stats => Response::Stats(
-                self.stats.report(self.queue.len() as u64, self.slot.version()),
-            ),
+            Request::Stats => {
+                let depth = self.queue.len() as u64;
+                let report = self.stats.report(
+                    depth,
+                    self.cfg.queue_depth as u64,
+                    self.cfg.max_batch as u64,
+                    self.slot.version(),
+                );
+                let reg = crate::obs::registry::global();
+                reg.gauge("serve.queue_depth").set(depth);
+                reg.gauge("serve.queue_cap").set(self.cfg.queue_depth as u64);
+                reg.gauge("serve.batch_fill_permille")
+                    .set((report.batch_fill * 1000.0) as u64);
+                Response::Stats(report)
+            }
             Request::ReloadModel { path } => self.reload_model(&path),
         }
     }
@@ -608,7 +620,7 @@ fn serve_accept(listener: TcpListener, core: &Arc<ServeCore>) -> Result<(), Stri
     if core.cfg.once {
         let (stream, peer) = listener.accept().map_err(|e| format!("accept failed: {e}"))?;
         if !core.cfg.quiet {
-            eprintln!("[serve-model] client connected from {peer}");
+            crate::log_event!(Info, "serve-model", "client connected from {peer}");
         }
         return handle_conn(stream, core);
     }
@@ -623,15 +635,20 @@ fn serve_accept(listener: TcpListener, core: &Arc<ServeCore>) -> Result<(), Stri
                     Ok((stream, peer)) => {
                         failures = 0;
                         if !core.cfg.quiet {
-                            eprintln!("[serve-model] client connected from {peer}");
+                            crate::log_event!(Info, "serve-model", "client connected from {peer}");
                         }
                         if let Err(e) = handle_conn(stream, &core) {
-                            eprintln!("[serve-model] session error: {e}");
+                            crate::log_event!(Warn, "serve-model", "session error: {e}");
                         }
                     }
                     Err(e) => {
                         failures += 1;
-                        eprintln!("[serve-model] accept failed ({failures}): {e}");
+                        crate::log_event!(
+                            Warn,
+                            "serve-model",
+                            { failures = failures },
+                            "accept failed ({failures}): {e}"
+                        );
                         if failures >= MAX_ACCEPT_FAILURES {
                             return Err(format!("accept failing persistently: {e}"));
                         }
@@ -958,10 +975,17 @@ mod tests {
             seed: 3,
         });
         assert_eq!(c, a, "multiset key must make permutations hit");
-        let r = core.stats.report(core.queue.len() as u64, slot.version());
+        let r = core.stats.report(
+            core.queue.len() as u64,
+            core.cfg.queue_depth as u64,
+            core.cfg.max_batch as u64,
+            slot.version(),
+        );
         assert_eq!(r.cache_hits, 2);
         assert_eq!(r.cache_misses, 1);
         assert!(r.batches >= 1 && r.batched_docs >= 1);
+        assert_eq!(r.queue_cap, core.cfg.queue_depth as u64);
+        assert!(r.batch_fill > 0.0 && r.batch_fill <= 1.0, "batch_fill = {}", r.batch_fill);
         core.queue.close();
         worker.join().unwrap();
     }

@@ -119,10 +119,16 @@ impl ServerStats {
         self.model_swaps.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Snapshot everything into a wire-encodable report.  `queue_depth`
-    /// and `model_version` are sampled by the caller (they live on the
-    /// queue / model slot, not here).
-    pub fn report(&self, queue_depth: u64, model_version: u64) -> StatsReport {
+    /// Snapshot everything into a wire-encodable report.  `queue_depth`,
+    /// `queue_cap`, `batch_cap` and `model_version` are sampled by the
+    /// caller (they live on the queue / config / model slot, not here).
+    pub fn report(
+        &self,
+        queue_depth: u64,
+        queue_cap: u64,
+        batch_cap: u64,
+        model_version: u64,
+    ) -> StatsReport {
         let uptime_secs = self.start.elapsed().as_secs_f64().max(1e-9);
         // relaxed: snapshot loads of independent tallies; the report is
         // allowed to be a torn cross-counter snapshot (module note)
@@ -135,6 +141,9 @@ impl ServerStats {
         // NaN.max(0.0) is 0.0: an empty histogram reports zeroed
         // percentiles rather than poisoning the wire roundtrip / JSON
         let pct = |p: f64| bucket_percentile_us(&counts, p).max(0.0);
+        // relaxed: snapshot loads, as above
+        let batches = self.batches.load(Ordering::Relaxed);
+        let batched_docs = self.batched_docs.load(Ordering::Relaxed);
         StatsReport {
             uptime_secs,
             total_requests,
@@ -152,11 +161,17 @@ impl ServerStats {
             p50_us: pct(50.0),
             p95_us: pct(95.0),
             p99_us: pct(99.0),
-            // relaxed: snapshot loads, as above
-            batches: self.batches.load(Ordering::Relaxed),
-            batched_docs: self.batched_docs.load(Ordering::Relaxed),
+            batches,
+            batched_docs,
+            // relaxed: snapshot load, as above
             max_batch: self.max_batch.load(Ordering::Relaxed),
             queue_depth,
+            queue_cap,
+            batch_fill: if batches == 0 || batch_cap == 0 {
+                0.0
+            } else {
+                batched_docs as f64 / (batches * batch_cap) as f64
+            },
             model_version,
             // relaxed: snapshot load, as above
             model_swaps: self.model_swaps.load(Ordering::Relaxed),
@@ -189,6 +204,15 @@ pub struct StatsReport {
     pub batched_docs: u64,
     pub max_batch: u64,
     pub queue_depth: u64,
+    /// configured queue capacity (`--queue-depth`); with `queue_depth`
+    /// this makes live occupancy a ratio, not a bare number.
+    /// Wire note: added after v2 shipped as a trailing additive field —
+    /// decoders default it to 0 when an older peer's reply omits it.
+    pub queue_cap: u64,
+    /// mean drained-batch fill fraction of the configured `--max-batch`
+    /// cap (0.0 with no batches).  Additive trailing field, like
+    /// `queue_cap`.
+    pub batch_fill: f64,
     pub model_version: u64,
     pub model_swaps: u64,
 }
@@ -209,7 +233,7 @@ mod tests {
         s.record_batch(2);
         s.record_batch(7);
         s.record_swap();
-        let r = s.report(3, 2);
+        let r = s.report(3, 16, 8, 2);
         assert_eq!(r.total_requests, 3);
         assert_eq!(r.infer_requests, 2);
         assert_eq!(r.errors, 1);
@@ -220,6 +244,9 @@ mod tests {
         assert_eq!(r.batched_docs, 9);
         assert_eq!(r.max_batch, 7);
         assert_eq!(r.queue_depth, 3);
+        assert_eq!(r.queue_cap, 16);
+        // 9 docs over 2 batches against a cap of 8 → 9/16
+        assert!((r.batch_fill - 9.0 / 16.0).abs() < 1e-12, "batch_fill = {}", r.batch_fill);
         assert_eq!(r.model_version, 2);
         assert_eq!(r.model_swaps, 1);
         assert!(r.qps > 0.0);
@@ -233,9 +260,10 @@ mod tests {
 
     #[test]
     fn empty_stats_report_zeroed_not_nan() {
-        let r = ServerStats::new().report(0, 1);
+        let r = ServerStats::new().report(0, 16, 8, 1);
         assert_eq!(r.total_requests, 0);
         assert_eq!(r.cache_hit_rate, 0.0);
+        assert_eq!(r.batch_fill, 0.0);
         assert_eq!(r.p50_us, 0.0);
         assert_eq!(r.p99_us, 0.0);
         assert!(r.qps == 0.0);
@@ -257,7 +285,7 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
-        let r = s.report(0, 1);
+        let r = s.report(0, 16, 8, 1);
         assert_eq!(r.total_requests, 4000);
         assert_eq!(r.infer_requests, 2000);
         assert_eq!(r.cache_hits + r.cache_misses, 4000);

@@ -181,10 +181,16 @@ fn put_stats(out: &mut Vec<u8>, s: &StatsReport) {
     put_u64(out, s.queue_depth);
     put_u64(out, s.model_version);
     put_u64(out, s.model_swaps);
+    // additive tail (shipped after v2): down-level decoders stop before
+    // these bytes never existed for them, up-level decoders default the
+    // fields to 0 when an old peer's reply ends here.  New fields go
+    // after these, in order, same rule.
+    put_u64(out, s.queue_cap);
+    put_f64(out, s.batch_fill);
 }
 
 fn get_stats(cur: &mut Cur<'_>) -> Result<StatsReport, String> {
-    Ok(StatsReport {
+    let mut report = StatsReport {
         uptime_secs: cur.f64()?,
         total_requests: cur.u64()?,
         infer_requests: cur.u64()?,
@@ -202,7 +208,15 @@ fn get_stats(cur: &mut Cur<'_>) -> Result<StatsReport, String> {
         queue_depth: cur.u64()?,
         model_version: cur.u64()?,
         model_swaps: cur.u64()?,
-    })
+        queue_cap: 0,
+        batch_fill: 0.0,
+    };
+    // the additive tail: absent in replies from servers that predate it
+    if cur.remaining() > 0 {
+        report.queue_cap = cur.u64()?;
+        report.batch_fill = cur.f64()?;
+    }
+    Ok(report)
 }
 
 /// Serialize a response to its tagged body.
@@ -431,6 +445,8 @@ mod tests {
                 batched_docs: 8000,
                 max_batch: 64,
                 queue_depth: 7,
+                queue_cap: 128,
+                batch_fill: 0.104,
                 model_version: 2,
                 model_swaps: 1,
             }),
@@ -497,6 +513,48 @@ mod tests {
         assert!(err.contains("unsupported"), "unhelpful: {err}");
         assert!(err.contains("v1"), "must name the client's version: {err}");
         assert!(err.contains("v2"), "must name the server's version: {err}");
+    }
+
+    /// A Stats reply without the additive tail (`queue_cap`/`batch_fill`)
+    /// — as a server that predates those fields sends it — must still
+    /// decode, with the missing fields defaulted to zero.
+    #[test]
+    fn stats_reply_without_the_additive_tail_still_decodes() {
+        let full = StatsReport {
+            uptime_secs: 1.0,
+            total_requests: 10,
+            infer_requests: 8,
+            errors: 0,
+            qps: 10.0,
+            cache_hits: 1,
+            cache_misses: 2,
+            cache_hit_rate: 1.0 / 3.0,
+            p50_us: 100.0,
+            p95_us: 200.0,
+            p99_us: 300.0,
+            batches: 4,
+            batched_docs: 8,
+            max_batch: 3,
+            queue_depth: 2,
+            queue_cap: 16,
+            batch_fill: 0.25,
+            model_version: 1,
+            model_swaps: 0,
+        };
+        let mut enc = encode_response(&Response::Stats(full.clone()));
+        enc.truncate(enc.len() - 16); // drop queue_cap (u64) + batch_fill (f64)
+        match decode_response(&enc).expect("tail-less reply must decode") {
+            Response::Stats(got) => {
+                assert_eq!(got.queue_cap, 0, "absent field defaults to 0");
+                assert_eq!(got.batch_fill, 0.0, "absent field defaults to 0");
+                assert_eq!(
+                    got,
+                    StatsReport { queue_cap: 0, batch_fill: 0.0, ..full },
+                    "every pre-tail field must survive"
+                );
+            }
+            other => panic!("expected Stats, got {other:?}"),
+        }
     }
 
     /// The `Err` response layout is the one frame every client version

@@ -72,8 +72,10 @@ pub fn save_with_retention(state: &LdaState, path: &Path) -> Result<(), String> 
         let prev = prev_path(path);
         let _ = std::fs::remove_file(&prev);
         if let Err(e) = std::fs::hard_link(path, &prev) {
-            eprintln!(
-                "[checkpoint] warning: could not retain {} as {}: {e}",
+            crate::log_event!(
+                Warn,
+                "checkpoint",
+                "warning: could not retain {} as {}: {e}",
                 path.display(),
                 prev.display()
             );
@@ -244,10 +246,15 @@ fn try_load_validated(
     if !quiet
         && ((ckpt.alpha - hyper.alpha).abs() > 1e-12 || (ckpt.beta - hyper.beta).abs() > 1e-12)
     {
-        eprintln!(
-            "[checkpoint] warning: resuming with checkpoint hyperparameters \
+        crate::log_event!(
+            Warn,
+            "checkpoint",
+            "warning: resuming with checkpoint hyperparameters \
              alpha={:.6} beta={:.6} (requested alpha={:.6} beta={:.6})",
-            ckpt.alpha, ckpt.beta, hyper.alpha, hyper.beta
+            ckpt.alpha,
+            ckpt.beta,
+            hyper.alpha,
+            hyper.beta
         );
     }
     load(p, corpus).map_err(LoadFailure::Corruption)
@@ -285,8 +292,10 @@ pub fn init_or_load(
             Ok(state) => Ok(state),
             Err(LoadFailure::Mismatch(e)) => Err(e),
             Err(LoadFailure::Corruption(why)) => {
-                eprintln!(
-                    "[checkpoint] warning: {} is truncated or corrupt ({why}); \
+                crate::log_event!(
+                    Warn,
+                    "checkpoint",
+                    "warning: {} is truncated or corrupt ({why}); \
                      trying the previous retained generation",
                     p.display()
                 );
@@ -294,13 +303,20 @@ pub fn init_or_load(
                 if prev.exists() {
                     match try_load_validated(&prev, corpus, hyper, quiet) {
                         Ok(state) => {
-                            eprintln!("[checkpoint] recovered from {}", prev.display());
+                            crate::log_event!(
+                                Info,
+                                "checkpoint",
+                                "recovered from {}",
+                                prev.display()
+                            );
                             Ok(state)
                         }
                         Err(LoadFailure::Mismatch(e)) => Err(e),
                         Err(LoadFailure::Corruption(why)) => {
-                            eprintln!(
-                                "[checkpoint] warning: {} is also unusable ({why}); \
+                            crate::log_event!(
+                                Warn,
+                                "checkpoint",
+                                "warning: {} is also unusable ({why}); \
                                  starting from a fresh random init",
                                 prev.display()
                             );
@@ -308,8 +324,10 @@ pub fn init_or_load(
                         }
                     }
                 } else {
-                    eprintln!(
-                        "[checkpoint] warning: no {} fallback; starting from a fresh \
+                    crate::log_event!(
+                        Warn,
+                        "checkpoint",
+                        "warning: no {} fallback; starting from a fresh \
                          random init",
                         prev.display()
                     );

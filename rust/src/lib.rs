@@ -37,6 +37,14 @@
 //!   latest valid snapshot when a worker dies mid-epoch — `kill -9` a
 //!   `serve-worker` and the run still completes (`train --checkpoint-dir
 //!   DIR --max-restarts N`).
+//! * **Observability** ([`obs`]): a process-global metrics registry
+//!   (counters/gauges/log₂ histograms behind relaxed atomics), structured
+//!   leveled events (`log_event!` → stable `ts level target key=value`
+//!   lines or `--log-json` JSONL, filtered by `--log-level`/`FNOMAD_LOG`),
+//!   per-epoch ring telemetry (sample-vs-wait per slot, hop latencies,
+//!   fold/set phase times) on [`coordinator::EpochReport`], and exporters:
+//!   `train --metrics FILE.jsonl` + `--trace FILE.json` (Perfetto-loadable
+//!   Chrome trace events for epochs, slots, checkpoints, and recovery).
 //! * **Evaluator backends** ([`runtime`]): the model-quality evaluator is
 //!   a blocked `Σ lgamma` reduction with two interchangeable backends —
 //!   with `--features pjrt`, a JAX + Pallas program AOT-lowered to HLO
@@ -82,6 +90,7 @@ pub mod corpus;
 pub mod infer;
 pub mod lda;
 pub mod nomad;
+pub mod obs;
 pub mod ps;
 pub mod resilience;
 pub mod runtime;

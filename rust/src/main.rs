@@ -123,6 +123,22 @@ const TRAIN_SPEC: CommandSpec = CommandSpec {
             value: "N",
             help: "N Minka fixed-point steps on the final state (0 = off)",
         },
+        FlagSpec {
+            flag: "metrics",
+            value: "FILE",
+            help: "append one JSON metrics object per epoch to FILE (JSONL)",
+        },
+        FlagSpec {
+            flag: "trace",
+            value: "FILE",
+            help: "write a Chrome-trace-event JSON timeline to FILE (load in Perfetto)",
+        },
+        FlagSpec {
+            flag: "log-level",
+            value: "LEVEL",
+            help: "event filter: error|warn|info|debug (default info)",
+        },
+        FlagSpec { flag: "log-json", value: "", help: "emit events as JSONL instead of text" },
         FlagSpec { flag: "quiet", value: "", help: "suppress progress logging" },
     ],
 };
@@ -205,6 +221,12 @@ const SERVE_WORKER_SPEC: CommandSpec = CommandSpec {
         },
         FlagSpec { flag: "once", value: "", help: "serve one coordinator session, then exit" },
         FlagSpec { flag: "quiet", value: "", help: "suppress per-connection logging" },
+        FlagSpec {
+            flag: "log-level",
+            value: "LEVEL",
+            help: "event filter: error|warn|info|debug (default info)",
+        },
+        FlagSpec { flag: "log-json", value: "", help: "emit events as JSONL instead of text" },
     ],
 };
 
@@ -265,6 +287,12 @@ const SERVE_MODEL_SPEC: CommandSpec = CommandSpec {
         },
         FlagSpec { flag: "once", value: "", help: "serve one client connection, then exit" },
         FlagSpec { flag: "quiet", value: "", help: "suppress per-connection logging" },
+        FlagSpec {
+            flag: "log-level",
+            value: "LEVEL",
+            help: "event filter: error|warn|info|debug (default info)",
+        },
+        FlagSpec { flag: "log-json", value: "", help: "emit events as JSONL instead of text" },
     ],
 };
 
@@ -378,6 +406,20 @@ fn with_help(
     }
 }
 
+/// Apply the shared `--log-level LEVEL` / `--log-json` event flags.
+/// Process-global: every subcommand that emits structured events calls
+/// this before its `reject_unknown`.
+fn apply_log_flags(args: &Args) -> Result<(), String> {
+    use fnomad_lda::obs::event;
+    if let Some(v) = args.str_opt("log-level") {
+        event::set_level(v.parse::<event::Level>()?);
+    }
+    if args.flag("log-json") {
+        event::set_json(true);
+    }
+    Ok(())
+}
+
 /// The thin CLI → [`TrainConfig`] parse layer: every enum-valued flag goes
 /// through `FromStr` exactly once, right here.
 fn train_config(args: &Args) -> Result<TrainConfig, String> {
@@ -410,7 +452,10 @@ fn train_config(args: &Args) -> Result<TrainConfig, String> {
         max_restarts: args.parse_or("max-restarts", d.max_restarts)?,
         // fault injection is a library/test surface, never a CLI flag
         fault: d.fault,
+        metrics: args.str_opt("metrics").map(PathBuf::from),
+        trace: args.str_opt("trace").map(PathBuf::from),
     };
+    apply_log_flags(args)?;
     args.reject_unknown()?;
     Ok(cfg)
 }
@@ -527,6 +572,7 @@ fn cmd_serve_worker(args: &Args) -> Result<(), String> {
         ),
     };
     let opts = ServeOpts { once: args.flag("once"), quiet: args.flag("quiet"), fail_after_epochs };
+    apply_log_flags(args)?;
     args.reject_unknown()?;
     let listener = std::net::TcpListener::bind(&addr).map_err(|e| format!("bind {addr}: {e}"))?;
     let local = listener.local_addr().map_err(|e| e.to_string())?;
@@ -576,6 +622,7 @@ fn cmd_serve_model(args: &Args) -> Result<(), String> {
         .read_deadline(Duration::from_secs(args.parse_or("read-deadline-secs", 300u64)?))
         .once(args.flag("once"))
         .quiet(args.flag("quiet"));
+    apply_log_flags(args)?;
     args.reject_unknown()?;
     cfg.validate()?;
     let model = TopicModel::load(Path::new(&model_path))?;
@@ -695,13 +742,15 @@ fn render_infer_response(resp: Response, top: usize) -> Result<(), String> {
                 s.p99_us,
             );
             println!(
-                "serve_state: uptime_s={:.1} queue_depth={} batches={} batched_docs={} \
-                 max_batch={} model_version={} swaps={}",
+                "serve_state: uptime_s={:.1} queue_depth={} queue_cap={} batches={} \
+                 batched_docs={} max_batch={} batch_fill={:.4} model_version={} swaps={}",
                 s.uptime_secs,
                 s.queue_depth,
+                s.queue_cap,
                 s.batches,
                 s.batched_docs,
                 s.max_batch,
+                s.batch_fill,
                 s.model_version,
                 s.model_swaps,
             );

@@ -131,7 +131,7 @@ pub fn serve(listener: TcpListener, opts: &ServeOpts) -> Result<(), String> {
     loop {
         let (stream, peer) = listener.accept().map_err(|e| format!("accept failed: {e}"))?;
         if !opts.quiet {
-            eprintln!("[serve-worker] coordinator connected from {peer}");
+            crate::log_event!(Info, "serve-worker", "coordinator connected from {peer}");
         }
         if opts.once {
             match host_session(stream, opts.fail_after_epochs) {
@@ -139,12 +139,17 @@ pub fn serve(listener: TcpListener, opts: &ServeOpts) -> Result<(), String> {
                 Ok(None) => continue,
                 Ok(Some(slot)) => {
                     if !opts.quiet {
-                        eprintln!("[serve-worker] session done (ring slot {slot})");
+                        crate::log_event!(
+                            Info,
+                            "serve-worker",
+                            { slot = slot },
+                            "session done (ring slot {slot})"
+                        );
                     }
                     return Ok(());
                 }
                 Err(e) => {
-                    eprintln!("[serve-worker] session error: {e}");
+                    crate::log_event!(Error, "serve-worker", "session error: {e}");
                     return Err(e);
                 }
             }
@@ -157,13 +162,24 @@ pub fn serve(listener: TcpListener, opts: &ServeOpts) -> Result<(), String> {
                 Ok(None) => return,
                 Ok(Some(slot)) => {
                     if !quiet {
-                        eprintln!("[serve-worker] session done (ring slot {slot})");
+                        crate::log_event!(
+                            Info,
+                            "serve-worker",
+                            { slot = slot },
+                            "session done (ring slot {slot})"
+                        );
                     }
                 }
-                Err(e) => eprintln!("[serve-worker] session error: {e}"),
+                Err(e) => crate::log_event!(Error, "serve-worker", "session error: {e}"),
             }
             if !quiet {
-                eprintln!("[serve-worker] rebind: ring partner gone, accepting a new coordinator");
+                // "rebind" is a greppable contract (tests + docs) — keep
+                // the word in the message verbatim
+                crate::log_event!(
+                    Info,
+                    "serve-worker",
+                    "rebind: ring partner gone, accepting a new coordinator"
+                );
             }
         });
     }

@@ -40,8 +40,10 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::engine::{RingTelemetry, SlotTelemetry};
 use crate::coordinator::EpochReport;
 use crate::corpus::{Corpus, Partition};
+use crate::util::metrics::{bucket_percentile_us, LATENCY_BUCKETS};
 use crate::lda::state::{assemble_state, checked_totals, Hyper, LdaState, SparseCounts};
 use crate::util::rng::Pcg32;
 
@@ -272,6 +274,7 @@ impl NomadRuntime {
             self.send_ring(i % p, Msg::Word(tok))?;
         }
         self.send_ring(0, Msg::Global(GlobalToken::new(self.s.clone())))?;
+        let t_injected = Instant::now();
 
         // collect everything home (every vocab word has a token, including
         // zero-occurrence ones)
@@ -279,9 +282,17 @@ impl NomadRuntime {
         let mut got_words = 0usize;
         let mut global: Option<GlobalToken> = None;
         let mut home = Vec::with_capacity(expected_words);
+        // per-hop latency estimate: a token's injection→home transit over
+        // its p hops, log₂-bucketed at the coordinator boundary (these
+        // clocks never touch sampler scope)
+        let mut hop_buckets = [0u64; LATENCY_BUCKETS];
+        let mut hop_max_ns = 0u64;
         while got_words < expected_words || global.is_none() {
             match self.recv_reply()? {
                 Reply::WordDone(tok) => {
+                    let hop_ns = t_injected.elapsed().as_nanos() as u64 / p as u64;
+                    hop_buckets[crate::util::metrics::latency_bucket(hop_ns)] += 1;
+                    hop_max_ns = hop_max_ns.max(hop_ns);
                     home.push(tok);
                     got_words += 1;
                 }
@@ -291,6 +302,7 @@ impl NomadRuntime {
         }
         home.sort_by_key(|t| t.word);
         self.home = home;
+        let t_circulated = Instant::now();
 
         // exact fold: s = token.s + Σ_l (s_l − s̄_l)
         let mut s = global.unwrap().s;
@@ -298,17 +310,25 @@ impl NomadRuntime {
             self.send_ring(l, Msg::SyncS)?;
         }
         let mut processed = 0u64;
+        let mut slot_stats: Vec<SlotTelemetry> = Vec::with_capacity(p);
         for _ in 0..p {
             match self.recv_reply()? {
-                Reply::SDelta { delta, tokens_processed, .. } => {
+                Reply::SDelta { worker, delta, tokens_processed, sample_ns, wait_ns } => {
                     for (acc, d) in s.iter_mut().zip(delta) {
                         *acc += d;
                     }
                     processed += tokens_processed;
+                    slot_stats.push(SlotTelemetry {
+                        slot: worker,
+                        sample_secs: sample_ns as f64 / 1e9,
+                        wait_secs: wait_ns as f64 / 1e9,
+                        processed: tokens_processed,
+                    });
                 }
                 other => return Err(format!("expected SDelta, got {other:?}")),
             }
         }
+        let t_folded = Instant::now();
         for l in 0..p {
             self.send_ring(l, Msg::SetS(s.clone()))?;
         }
@@ -317,6 +337,17 @@ impl NomadRuntime {
         let delta_processed = processed - self.prev_processed;
         self.prev_processed = processed;
         self.total_processed = processed;
+        slot_stats.sort_by_key(|s| s.slot);
+        let ring = RingTelemetry {
+            inject_secs: (t_injected - t0).as_secs_f64(),
+            circulate_secs: (t_circulated - t_injected).as_secs_f64(),
+            fold_secs: (t_folded - t_circulated).as_secs_f64(),
+            set_secs: t_folded.elapsed().as_secs_f64(),
+            hop_p50_us: bucket_percentile_us(&hop_buckets, 50.0).max(0.0),
+            hop_p95_us: bucket_percentile_us(&hop_buckets, 95.0).max(0.0),
+            hop_max_us: hop_max_ns as f64 / 1e3,
+            slots: slot_stats,
+        };
         Ok(EpochReport {
             processed: delta_processed,
             secs: t0.elapsed().as_secs_f64(),
@@ -324,6 +355,7 @@ impl NomadRuntime {
             stale_reads: 0,
             // ring transfers: every word token hops p times, τ_s circulates
             msgs: (self.num_words * p) as u64 + (p as u32 * S_CIRCULATIONS) as u64,
+            ring: Some(ring),
         })
     }
 
@@ -584,6 +616,18 @@ mod tests {
         // each occurrence lives in exactly one worker's partition → every
         // token is resampled exactly once per epoch
         assert_eq!(stats.processed as usize, corpus.num_tokens());
+        // the ring breakdown is always collected: one entry per slot in
+        // slot order, with the per-worker processed counts covering the
+        // corpus and phase times summing to at most the epoch
+        let ring = stats.ring.expect("nomad epochs carry ring telemetry");
+        assert_eq!(ring.slots.len(), 2);
+        assert_eq!(ring.slots[0].slot, 0);
+        assert_eq!(ring.slots[1].slot, 1);
+        let slot_processed: u64 = ring.slots.iter().map(|s| s.processed).sum();
+        assert_eq!(slot_processed as usize, corpus.num_tokens());
+        let phases = ring.inject_secs + ring.circulate_secs + ring.fold_secs;
+        assert!(phases <= stats.secs + 1e-6, "phases {phases} vs epoch {}", stats.secs);
+        assert!(ring.hop_p50_us >= 0.0 && ring.hop_p95_us >= ring.hop_p50_us);
         rt.shutdown();
     }
 

@@ -56,8 +56,18 @@ pub enum Reply {
     WordDone(WordToken),
     /// the global token absorbed at epoch end
     GlobalDone(GlobalToken),
-    /// SyncS answer: accumulated local effort since the last snapshot
-    SDelta { worker: usize, delta: Vec<i64>, tokens_processed: u64 },
+    /// SyncS answer: accumulated local effort since the last snapshot.
+    /// `sample_ns`/`wait_ns` split the epoch's wall time at the worker's
+    /// transport boundary — nanoseconds spent processing tokens vs parked
+    /// in `recv()` — measured by [`super::transport::run_worker`] (never
+    /// inside the sampler) and reset at each `SyncS`.
+    SDelta {
+        worker: usize,
+        delta: Vec<i64>,
+        tokens_processed: u64,
+        sample_ns: u64,
+        wait_ns: u64,
+    },
     /// ReportDocs answer: sparse doc-topic rows plus the flat CSR
     /// assignment payload for the worker's contiguous doc range
     Docs { worker: usize, start_doc: usize, ntd: Vec<SparseCounts>, z: Vec<u16> },

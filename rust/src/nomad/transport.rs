@@ -66,12 +66,27 @@ impl Transport for ChannelTransport {
 /// Returns `Ok(())` on a clean [`Msg::Stop`], `Err` when the transport
 /// breaks mid-session — callers decide whether that is a fault (the
 /// coordinator's health check) or routine teardown.
+///
+/// This loop is also where the per-slot telemetry clocks live: time
+/// parked in `recv()` accumulates as wait, time spent processing word/
+/// global tokens accumulates as sample, and both ride back to the
+/// coordinator in the epoch-end [`Reply::SDelta`].  The clocks wrap the
+/// transport verbs — sampler scope stays wall-clock-free (`xtask
+/// lint-invariants`), and timing never changes what gets computed, so
+/// fixed-seed runs stay bit-identical.
 pub fn run_worker<T: Transport>(mut state: WorkerState, mut link: T) -> Result<(), String> {
     let p = state.num_workers as u32;
+    let mut sample_ns = 0u64;
+    let mut wait_ns = 0u64;
     loop {
-        match link.recv()? {
+        let t_wait = std::time::Instant::now();
+        let msg = link.recv()?;
+        wait_ns += t_wait.elapsed().as_nanos() as u64;
+        match msg {
             Msg::Word(mut tok) => {
+                let t0 = std::time::Instant::now();
                 state.process_word_token(&mut tok);
+                sample_ns += t0.elapsed().as_nanos() as u64;
                 tok.hops += 1;
                 if tok.hops >= p {
                     link.reply(Reply::WordDone(tok))?;
@@ -80,7 +95,9 @@ pub fn run_worker<T: Transport>(mut state: WorkerState, mut link: T) -> Result<(
                 }
             }
             Msg::Global(mut tok) => {
+                let t0 = std::time::Instant::now();
                 state.process_global_token(&mut tok);
+                sample_ns += t0.elapsed().as_nanos() as u64;
                 tok.hops += 1;
                 if tok.hops >= p * super::runtime::S_CIRCULATIONS {
                     link.reply(Reply::GlobalDone(tok))?;
@@ -94,6 +111,8 @@ pub fn run_worker<T: Transport>(mut state: WorkerState, mut link: T) -> Result<(
                     worker: state.id,
                     delta,
                     tokens_processed: state.processed,
+                    sample_ns: std::mem::take(&mut sample_ns),
+                    wait_ns: std::mem::take(&mut wait_ns),
                 })?;
             }
             Msg::SetS(s) => state.set_s(&s),
@@ -154,10 +173,11 @@ mod tests {
         }
         assert_eq!(mass as usize, corpus.num_tokens());
         match replies.recv().unwrap() {
-            Reply::SDelta { worker, delta, tokens_processed } => {
+            Reply::SDelta { worker, delta, tokens_processed, sample_ns, .. } => {
                 assert_eq!(worker, 0);
                 assert_eq!(delta.iter().sum::<i64>(), 0, "mass-conserving fold");
                 assert_eq!(tokens_processed as usize, corpus.num_tokens());
+                assert!(sample_ns > 0, "token processing was timed");
             }
             other => panic!("expected SDelta, got {other:?}"),
         }

@@ -80,8 +80,9 @@ const INIT_MAGIC: u32 = 0x464E_4D44;
 /// ANY change to frame layouts or protocol semantics the two sides must
 /// agree on (e.g. [`super::runtime::S_CIRCULATIONS`]), so coordinator /
 /// `serve-worker` binary skew is a named error, not a confusing decode
-/// failure or a silent divergence.
-pub const WIRE_VERSION: u32 = 2;
+/// failure or a silent divergence.  v3: `SDelta` carries the per-slot
+/// `sample_ns`/`wait_ns` telemetry split.
+pub const WIRE_VERSION: u32 = 3;
 
 const TAG_INIT: u8 = 1;
 const TAG_INIT_OK: u8 = 2;
@@ -156,11 +157,13 @@ fn put_reply(out: &mut Vec<u8>, reply: &Reply) {
             out.push(REPLY_GLOBAL_DONE);
             put_global_token(out, tok);
         }
-        Reply::SDelta { worker, delta, tokens_processed } => {
+        Reply::SDelta { worker, delta, tokens_processed, sample_ns, wait_ns } => {
             out.push(REPLY_S_DELTA);
             put_u32(out, *worker as u32);
             put_i64s(out, delta);
             put_u64(out, *tokens_processed);
+            put_u64(out, *sample_ns);
+            put_u64(out, *wait_ns);
         }
         Reply::Docs { worker, start_doc, ntd, z } => {
             out.push(REPLY_DOCS);
@@ -284,6 +287,8 @@ fn get_reply(cur: &mut Cur) -> Result<Reply, String> {
             worker: cur.u32()? as usize,
             delta: get_i64s(cur)?,
             tokens_processed: cur.u64()?,
+            sample_ns: cur.u64()?,
+            wait_ns: cur.u64()?,
         },
         REPLY_DOCS => {
             let worker = cur.u32()? as usize;
@@ -469,6 +474,8 @@ mod tests {
             worker: 3,
             delta: vec![5, -5, 0, 123456789],
             tokens_processed: u64::MAX / 3,
+            sample_ns: 987_654_321,
+            wait_ns: u64::MAX / 7,
         });
         assert_eq!(roundtrip(&sdelta), sdelta);
         let docs = Frame::Reply(Reply::Docs {

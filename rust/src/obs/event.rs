@@ -1,0 +1,219 @@
+//! Structured leveled events: the library's one way to narrate itself.
+//!
+//! Every library-scope diagnostic goes through [`log_event!`], which
+//! emits exactly one line per event on stderr:
+//!
+//! ```text
+//! ts=12.345 level=warn target=resilience msg="ring failure: ..." restart=1 max=2
+//! ```
+//!
+//! or, in JSON mode (`--log-json` / `FNOMAD_LOG_JSON=1`), one JSON
+//! object per line with the same keys — machine-greppable either way.
+//! `ts` is seconds since the first event-system touch in this process.
+//!
+//! Levels are `error < warn < info < debug`; the filter defaults to
+//! `info` and is set by `--log-level` on the CLI or the `FNOMAD_LOG`
+//! environment variable (CLI wins).  The level check is a single relaxed
+//! atomic load, so disabled events cost one compare.
+//!
+//! Legacy text contracts (the `recovered: restarted from epoch E` line
+//! grepped by CI and the resilience tests, the `rebind` narration, …)
+//! survive conversion because the original text is carried verbatim in
+//! `msg="..."` and consumers match on substrings.
+//!
+//! The `no-raw-print` rule in `xtask lint-invariants` bans
+//! `eprintln!`/`println!` in library scope; this module holds the one
+//! exempt `eprintln!` that actually writes the line.
+
+use std::str::FromStr;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::util::bench::json_string;
+use crate::util::sync::static_atomic::{AtomicUsize, Ordering};
+
+/// Event severity, most severe first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+impl FromStr for Level {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Ok(Level::Error),
+            "warn" | "warning" => Ok(Level::Warn),
+            "info" => Ok(Level::Info),
+            "debug" => Ok(Level::Debug),
+            other => Err(format!(
+                "unknown log level {other:?} (expected error|warn|info|debug)"
+            )),
+        }
+    }
+}
+
+// Both statics are plain process-global switches read on every event —
+// exactly the `static_atomic` (always-std, loom-exempt) use case.
+// Encodings: LEVEL holds a `Level as usize`; JSON holds 0/1.
+static LEVEL: AtomicUsize = AtomicUsize::new(Level::Info as usize);
+static JSON: AtomicUsize = AtomicUsize::new(0);
+static ENV_INIT: OnceLock<()> = OnceLock::new();
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Read `FNOMAD_LOG` / `FNOMAD_LOG_JSON` once.  Called lazily from
+/// [`enabled`], so processes that never parse a CLI (tests, library
+/// embedders) still honor the environment.
+fn init_from_env() {
+    ENV_INIT.get_or_init(|| {
+        if let Ok(v) = std::env::var("FNOMAD_LOG") {
+            if let Ok(l) = v.parse::<Level>() {
+                // relaxed: independent mode switch; no ordering with event data.
+                LEVEL.store(l as usize, Ordering::Relaxed);
+            }
+        }
+        if std::env::var("FNOMAD_LOG_JSON").as_deref() == Ok("1") {
+            // relaxed: independent mode switch.
+            JSON.store(1, Ordering::Relaxed);
+        }
+    });
+}
+
+/// Set the level filter (CLI `--log-level`; overrides `FNOMAD_LOG`).
+pub fn set_level(l: Level) {
+    init_from_env();
+    // relaxed: independent mode switch; the worst a racing reader sees is
+    // one event filtered by the previous level.
+    LEVEL.store(l as usize, Ordering::Relaxed);
+}
+
+/// Switch to JSONL output (CLI `--log-json`).
+pub fn set_json(on: bool) {
+    init_from_env();
+    // relaxed: independent mode switch.
+    JSON.store(on as usize, Ordering::Relaxed);
+}
+
+/// Would an event at `l` be emitted?  The macro's early-out; one relaxed
+/// load when the event is filtered.
+pub fn enabled(l: Level) -> bool {
+    init_from_env();
+    // relaxed: independent mode switch read; see `set_level`.
+    (l as usize) <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one event line.  Call through [`log_event!`], which does the
+/// level check and field formatting.
+pub fn emit(level: Level, target: &str, msg: &str, fields: &[(&str, String)]) {
+    let ts = epoch().elapsed().as_secs_f64();
+    // relaxed: independent mode switch read; see `set_json`.
+    let line = if JSON.load(Ordering::Relaxed) == 1 {
+        let mut out = format!(
+            "{{\"ts\":{ts:.3},\"level\":{},\"target\":{},\"msg\":{}",
+            json_string(level.name()),
+            json_string(target),
+            json_string(msg)
+        );
+        for (k, v) in fields {
+            out.push(',');
+            out.push_str(&json_string(k));
+            out.push(':');
+            out.push_str(&json_string(v));
+        }
+        out.push('}');
+        out
+    } else {
+        let mut out = format!(
+            "ts={ts:.3} level={} target={target} msg={}",
+            level.name(),
+            json_string(msg)
+        );
+        for (k, v) in fields {
+            // values are quoted only when they need it, keeping k=v greppable
+            if v.chars().all(|c| c.is_ascii_graphic() && c != '"') && !v.is_empty() {
+                out.push_str(&format!(" {k}={v}"));
+            } else {
+                out.push_str(&format!(" {k}={}", json_string(v)));
+            }
+        }
+        out
+    };
+    eprintln!("{line}");
+}
+
+/// Emit a structured event: `log_event!(Warn, "resilience", {restart = 1,
+/// max = 2}, "ring failure: {why}")`.  The field block is optional.
+/// Formatting (of the message *and* the fields) only happens when the
+/// level passes the filter.
+#[macro_export]
+macro_rules! log_event {
+    ($lvl:ident, $target:expr, { $($k:ident = $v:expr),* $(,)? }, $($fmt:tt)+) => {
+        if $crate::obs::event::enabled($crate::obs::event::Level::$lvl) {
+            $crate::obs::event::emit(
+                $crate::obs::event::Level::$lvl,
+                $target,
+                &format!($($fmt)+),
+                &[ $( (stringify!($k), format!("{}", $v)) ),* ],
+            );
+        }
+    };
+    ($lvl:ident, $target:expr, $($fmt:tt)+) => {
+        $crate::log_event!($lvl, $target, {}, $($fmt)+)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_parse_and_order() {
+        assert_eq!("warn".parse::<Level>().unwrap(), Level::Warn);
+        assert_eq!("WARNING".parse::<Level>().unwrap(), Level::Warn);
+        assert!("verbose".parse::<Level>().is_err());
+        assert!(Level::Error < Level::Warn && Level::Warn < Level::Info);
+    }
+
+    #[test]
+    fn level_filter_gates_enabled() {
+        // Note: LEVEL is process-global; tests in this module run in one
+        // process, so restore the default before returning.
+        set_level(Level::Error);
+        assert!(enabled(Level::Error));
+        assert!(!enabled(Level::Warn));
+        set_level(Level::Debug);
+        assert!(enabled(Level::Debug));
+        set_level(Level::Info);
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Debug));
+    }
+
+    #[test]
+    fn emit_does_not_panic_with_odd_fields() {
+        emit(
+            Level::Info,
+            "test",
+            "msg with \"quotes\" and\nnewline",
+            &[("k", "value with space".to_string()), ("n", "42".to_string())],
+        );
+    }
+}

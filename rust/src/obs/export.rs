@@ -1,0 +1,183 @@
+//! `train --metrics FILE.jsonl`: the per-epoch metrics exporter.
+//!
+//! [`MetricsWriter`] is a [`TrainObserver`] that appends one JSON object
+//! per epoch: the [`EpochReport`] scalars, the [`RingTelemetry`]
+//! breakdown when the engine provides one, the latest evaluation LL, and
+//! a snapshot of the metrics registry.  One line per epoch, every line a
+//! complete JSON object — the format `rust/tests/observability.rs` and
+//! the CI smoke validate.
+//!
+//! Required keys on every line (the schema contract): `epoch`, `secs`,
+//! `processed`, `processed_total`.  `epoch` and `processed_total` are
+//! monotone non-decreasing across lines.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::PathBuf;
+
+use crate::coordinator::engine::EpochReport;
+use crate::coordinator::observer::{EvalPoint, TrainObserver};
+use crate::obs::registry::Registry;
+use crate::util::bench::json_string;
+
+/// Appends one JSONL metrics line per epoch; see the module docs.
+pub struct MetricsWriter {
+    file: std::fs::File,
+    path: PathBuf,
+    epochs: u64,
+    processed_total: u64,
+    last_ll: Option<f64>,
+    registry: &'static Registry,
+}
+
+impl MetricsWriter {
+    /// Create/truncate `path` (parent directories included).  Snapshots
+    /// come from the process-global registry.
+    pub fn create(path: impl Into<PathBuf>) -> Result<Self, String> {
+        Self::create_with(path, crate::obs::registry::global())
+    }
+
+    /// As [`Self::create`] with an explicit registry (tests).
+    pub fn create_with(
+        path: impl Into<PathBuf>,
+        registry: &'static Registry,
+    ) -> Result<Self, String> {
+        let path = path.into();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+            }
+        }
+        let file = std::fs::File::create(&path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        Ok(MetricsWriter {
+            file,
+            path,
+            epochs: 0,
+            processed_total: 0,
+            last_ll: None,
+            registry,
+        })
+    }
+}
+
+fn push_num(out: &mut String, key: &str, v: f64) {
+    out.push(',');
+    out.push_str(&json_string(key));
+    out.push(':');
+    if v.is_finite() {
+        let _ = write!(out, "{v}");
+    } else {
+        out.push_str("null");
+    }
+}
+
+fn push_int(out: &mut String, key: &str, v: u64) {
+    out.push(',');
+    out.push_str(&json_string(key));
+    out.push(':');
+    let _ = write!(out, "{v}");
+}
+
+impl TrainObserver for MetricsWriter {
+    fn on_epoch(&mut self, epoch: usize, report: &EpochReport) -> Result<(), String> {
+        self.epochs += 1;
+        self.processed_total += report.processed;
+        let mut line = format!("{{\"epoch\":{epoch}");
+        push_num(&mut line, "secs", report.secs);
+        push_int(&mut line, "processed", report.processed);
+        push_int(&mut line, "processed_total", self.processed_total);
+        push_int(&mut line, "msgs", report.msgs);
+        push_int(&mut line, "stale_reads", report.stale_reads);
+        if let Some(ll) = self.last_ll {
+            push_num(&mut line, "ll", ll);
+        }
+        if let Some(ring) = &report.ring {
+            push_num(&mut line, "ring.inject_secs", ring.inject_secs);
+            push_num(&mut line, "ring.circulate_secs", ring.circulate_secs);
+            push_num(&mut line, "ring.fold_secs", ring.fold_secs);
+            push_num(&mut line, "ring.set_secs", ring.set_secs);
+            push_num(&mut line, "ring.hop_p50_us", ring.hop_p50_us);
+            push_num(&mut line, "ring.hop_p95_us", ring.hop_p95_us);
+            push_num(&mut line, "ring.hop_max_us", ring.hop_max_us);
+            for s in &ring.slots {
+                push_num(&mut line, &format!("slot.{}.sample_secs", s.slot), s.sample_secs);
+                push_num(&mut line, &format!("slot.{}.wait_secs", s.slot), s.wait_secs);
+                push_int(&mut line, &format!("slot.{}.processed", s.slot), s.processed);
+            }
+        }
+        for (name, value) in self.registry.snapshot() {
+            push_num(&mut line, &name, value);
+        }
+        line.push_str("}\n");
+        self.file
+            .write_all(line.as_bytes())
+            .map_err(|e| format!("{}: {e}", self.path.display()))
+    }
+
+    fn on_eval(&mut self, point: &EvalPoint<'_>) -> Result<(), String> {
+        self.last_ll = Some(point.ll);
+        Ok(())
+    }
+
+    fn on_finish(
+        &mut self,
+        _result: &mut crate::coordinator::TrainResult,
+    ) -> Result<(), String> {
+        self.file
+            .flush()
+            .map_err(|e| format!("{}: {e}", self.path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::{RingTelemetry, SlotTelemetry};
+
+    #[test]
+    fn lines_carry_the_required_schema() {
+        let dir = std::env::temp_dir().join("fnomad_export_test");
+        let path = dir.join("m.jsonl");
+        // a leaked local registry keeps this test independent of global tallies
+        let reg: &'static Registry = Box::leak(Box::new(Registry::new()));
+        reg.counter("t.count").add(3);
+        let mut w = MetricsWriter::create_with(&path, reg).unwrap();
+        let mut rep = EpochReport {
+            processed: 10,
+            secs: 0.5,
+            stale_reads: 0,
+            msgs: 7,
+            ring: None,
+        };
+        w.on_epoch(1, &rep).unwrap();
+        rep.ring = Some(RingTelemetry {
+            inject_secs: 0.01,
+            slots: vec![SlotTelemetry {
+                slot: 0,
+                sample_secs: 0.4,
+                wait_secs: 0.05,
+                processed: 10,
+            }],
+            ..Default::default()
+        });
+        w.on_epoch(2, &rep).unwrap();
+        drop(w); // File writes are unbuffered; on_finish only flushes
+        let body = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in &lines {
+            assert!(line.starts_with("{\"epoch\":"));
+            assert!(line.ends_with('}'));
+            for key in ["\"secs\":", "\"processed\":", "\"processed_total\":"] {
+                assert!(line.contains(key), "{line} missing {key}");
+            }
+            assert!(line.contains("\"t.count\":3"));
+        }
+        assert!(lines[0].contains("\"processed_total\":10"));
+        assert!(lines[1].contains("\"processed_total\":20"));
+        assert!(lines[1].contains("\"ring.inject_secs\":0.01"));
+        assert!(lines[1].contains("\"slot.0.sample_secs\":0.4"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,40 @@
+//! Observability: the telemetry substrate for training and serving.
+//!
+//! The paper's central claim is a *throughput* claim — F+Nomad wins
+//! because asynchronous ring circulation keeps every core sampling — so
+//! the reproduction needs to show *where epoch time goes*, not just how
+//! much of it there was.  This module is the substrate every perf PR
+//! reports through:
+//!
+//! * [`registry`] — a process-global metrics registry: named counters,
+//!   gauges, and log₂-bucket histograms behind lock-free atomics, with a
+//!   deterministic (sorted) snapshot.
+//! * [`event`] — structured leveled events: one stable
+//!   `ts=… level=… target=… msg="…" k=v` line per event (or one JSON
+//!   object in `--log-json` mode), filtered by `--log-level` /
+//!   `FNOMAD_LOG`.  Replaces the library's ad-hoc `eprintln!` narration;
+//!   the `no-raw-print` rule in `xtask lint-invariants` keeps it that way.
+//! * [`trace`] — an in-process Chrome-trace-event recorder: complete
+//!   `"X"` spans for epochs, per-slot ring work, checkpoint writes, and
+//!   the supervisor's failure→reload→respawn recovery timeline, written
+//!   as a Perfetto-loadable JSON file by `train --trace FILE.json`.
+//! * [`export`] — the `--metrics FILE.jsonl` exporter: a
+//!   [`TrainObserver`](crate::coordinator::observer::TrainObserver) that
+//!   appends one JSON line per epoch (epoch scalars + `RingTelemetry`
+//!   breakdown + a registry snapshot).
+//!
+//! # Cost discipline
+//!
+//! Everything here is opt-in and near-zero when off: trace recording is a
+//! single relaxed load before any work happens, events early-out on a
+//! relaxed level check, and the per-epoch ring telemetry is collected
+//! from clocks already read at the engine/transport boundary — never
+//! inside the samplers, so the `xtask lint-invariants` wall-clock ban in
+//! sampler scope holds and fixed-seed LL trajectories are bit-identical
+//! with and without `--metrics`/`--trace` (asserted by
+//! `rust/tests/observability.rs`).
+
+pub mod event;
+pub mod export;
+pub mod registry;
+pub mod trace;

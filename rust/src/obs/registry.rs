@@ -1,0 +1,258 @@
+//! Process-global metrics registry: named counters, gauges, and
+//! log₂-bucket histograms.
+//!
+//! Instruments register by name (`registry::global().counter("train.x")`)
+//! and get back a cheap cloneable handle; recording is a single relaxed
+//! atomic op.  [`Registry::snapshot`] renders the whole registry as a
+//! sorted `(name, value)` report — sorted so two snapshots of the same
+//! state are byte-identical, which the JSONL metrics exporter and the
+//! tests rely on.
+//!
+//! # Atomics and orderings
+//!
+//! Handles use `util::sync::static_atomic` (always `std`, never loom):
+//! registry cells are process-global tallies that outlive any loom model
+//! execution, exactly the class `static_atomic` exists for.  Every load
+//! and store is `Relaxed` and justified at the site: each cell is an
+//! independent monotone counter or last-write-wins gauge — no cell's
+//! value is used to establish ordering with any other memory, and a
+//! snapshot that observes a torn *cross-cell* state (counter A bumped,
+//! counter B not yet) is an acceptable report of a moment that almost
+//! existed.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::metrics::{Log2Histogram, LATENCY_BUCKETS};
+use crate::util::sync::static_atomic::{AtomicU64, Ordering};
+use crate::util::sync::lock_recover;
+
+/// Monotone counter handle.  Clone freely; all clones share the cell.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        // relaxed: independent monotone tally; nothing orders against it.
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        // relaxed: single-cell read of a monotone tally.
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge handle (u64; scale fractions yourself, e.g.
+/// permille, to stay integral).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        // relaxed: last-write-wins level; readers only want *a* recent value.
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        // relaxed: single-cell read of a last-write-wins level.
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Lock-free log₂-bucket histogram handle (nanosecond values; same
+/// bucket layout as [`crate::util::metrics::latency_bucket`]).
+#[derive(Clone)]
+pub struct Histo(Arc<HistoCell>);
+
+pub struct HistoCell {
+    buckets: [AtomicU64; LATENCY_BUCKETS],
+}
+
+impl Histo {
+    pub fn record_ns(&self, ns: u64) {
+        let b = crate::util::metrics::latency_bucket(ns);
+        // relaxed: per-bucket monotone tally; a snapshot may see bucket
+        // counts from slightly different instants, which only perturbs a
+        // percentile estimate that is already ≤ √2× approximate.
+        self.0.buckets[b].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Copy the bucket counts into the shared single-threaded histogram
+    /// type, through which all percentile math is done.
+    pub fn snapshot(&self) -> Log2Histogram {
+        let mut h = Log2Histogram::default();
+        for (b, cell) in self.0.buckets.iter().enumerate() {
+            // relaxed: see `record_ns` — torn cross-bucket reads are fine.
+            let c = cell.load(Ordering::Relaxed);
+            h.counts[b] = c;
+            h.total += c;
+        }
+        h
+    }
+}
+
+enum Cell {
+    Counter(Arc<AtomicU64>),
+    Gauge(Arc<AtomicU64>),
+    Histo(Arc<HistoCell>),
+}
+
+/// The registry: a name → cell map.  Registration takes a lock (rare,
+/// startup-time); recording through the returned handles never does.
+///
+/// Prefer [`global`] in production code.  Tests construct their own
+/// `Registry::new()` so parallel tests never share tallies.
+pub struct Registry {
+    cells: Mutex<BTreeMap<String, Cell>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry { cells: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Get-or-create the named counter.  Panics if `name` is already
+    /// registered as a different kind — a naming bug worth failing loudly
+    /// on.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut cells = lock_recover(&self.cells);
+        let cell = cells
+            .entry(name.to_string())
+            .or_insert_with(|| Cell::Counter(Arc::new(AtomicU64::new(0))));
+        match cell {
+            Cell::Counter(a) => Counter(Arc::clone(a)),
+            _ => panic!("metric {name:?} already registered with a different kind"),
+        }
+    }
+
+    /// Get-or-create the named gauge.  Panics on kind mismatch.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut cells = lock_recover(&self.cells);
+        let cell = cells
+            .entry(name.to_string())
+            .or_insert_with(|| Cell::Gauge(Arc::new(AtomicU64::new(0))));
+        match cell {
+            Cell::Gauge(a) => Gauge(Arc::clone(a)),
+            _ => panic!("metric {name:?} already registered with a different kind"),
+        }
+    }
+
+    /// Get-or-create the named histogram.  Panics on kind mismatch.
+    pub fn histogram(&self, name: &str) -> Histo {
+        let mut cells = lock_recover(&self.cells);
+        let cell = cells.entry(name.to_string()).or_insert_with(|| {
+            Cell::Histo(Arc::new(HistoCell {
+                buckets: [const { AtomicU64::new(0) }; LATENCY_BUCKETS],
+            }))
+        });
+        match cell {
+            Cell::Histo(h) => Histo(Arc::clone(h)),
+            _ => panic!("metric {name:?} already registered with a different kind"),
+        }
+    }
+
+    /// Render every cell as `(name, value)`, sorted by name (the
+    /// `BTreeMap` order).  Histograms flatten to `name.count`,
+    /// `name.p50_us`, `name.p99_us`, `name.max_bucket_us` — still sorted,
+    /// because the suffixes sort within the name's range.
+    pub fn snapshot(&self) -> Vec<(String, f64)> {
+        let cells = lock_recover(&self.cells);
+        let mut out = Vec::with_capacity(cells.len());
+        for (name, cell) in cells.iter() {
+            match cell {
+                Cell::Counter(a) | Cell::Gauge(a) => {
+                    // relaxed: single-cell read; see the handle docs.
+                    out.push((name.clone(), a.load(Ordering::Relaxed) as f64));
+                }
+                Cell::Histo(h) => {
+                    let snap = Histo(Arc::clone(h)).snapshot();
+                    out.push((format!("{name}.count"), snap.total as f64));
+                    out.push((format!("{name}.p50_us"), snap.percentile_us(50.0)));
+                    out.push((format!("{name}.p99_us"), snap.percentile_us(99.0)));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// The process-global registry.  Library instruments record here; the
+/// exporters ([`crate::obs::export`], the serve-model `Stats` reply)
+/// read it.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_register_and_report() {
+        let r = Registry::new();
+        let c = r.counter("a.count");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = r.gauge("b.level");
+        g.set(42);
+        g.set(7);
+        assert_eq!(g.get(), 7);
+        // handles to the same name share the cell
+        r.counter("a.count").add(5);
+        assert_eq!(c.get(), 10);
+        let snap = r.snapshot();
+        assert_eq!(
+            snap,
+            vec![("a.count".to_string(), 10.0), ("b.level".to_string(), 7.0)]
+        );
+    }
+
+    #[test]
+    fn histogram_flattens_into_sorted_snapshot() {
+        let r = Registry::new();
+        let h = r.histogram("lat");
+        for _ in 0..99 {
+            h.record_ns(1 << 9);
+        }
+        h.record_ns(1 << 20);
+        r.counter("zz").inc();
+        let snap = r.snapshot();
+        let names: Vec<&str> = snap.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["lat.count", "lat.p50_us", "lat.p99_us", "zz"]);
+        assert_eq!(snap[0].1, 100.0);
+        assert!(snap[1].1 > 0.0);
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted, "snapshot is sorted by name");
+    }
+
+    #[test]
+    #[should_panic(expected = "different kind")]
+    fn kind_mismatch_panics() {
+        let r = Registry::new();
+        let _ = r.counter("x");
+        let _ = r.gauge("x");
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero_percentiles() {
+        let r = Registry::new();
+        let _ = r.histogram("lat");
+        let snap = r.snapshot();
+        assert_eq!(snap[1], ("lat.p50_us".to_string(), 0.0));
+        assert_eq!(snap[2], ("lat.p99_us".to_string(), 0.0));
+    }
+}

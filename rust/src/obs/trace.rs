@@ -1,0 +1,171 @@
+//! Chrome-trace-event recorder: Perfetto-loadable span timelines.
+//!
+//! `train --trace FILE.json` turns recording on; spans are buffered
+//! in-process and written once at the end of the run as a
+//! `{"traceEvents":[...]}` JSON file of complete `"X"` events
+//! (<https://ui.perfetto.dev> opens it directly).  Recorded spans:
+//!
+//! | cat          | name                  | tid      |
+//! |--------------|-----------------------|----------|
+//! | `epoch`      | `epoch N`             | 0        |
+//! | `slot`       | `slot S sample`       | S + 1    |
+//! | `checkpoint` | `checkpoint epoch N`  | 100      |
+//! | `recovery`   | `ring failure` / `reload checkpoint` / `respawn ring` | 0 |
+//!
+//! When recording is off (the default), every entry point is one relaxed
+//! atomic load and no clock is read — [`start`] returns `None` and
+//! [`complete`] drops it on the floor.  Timestamps are microseconds
+//! since the first trace-system touch in this process, which is what the
+//! trace-event format expects (`ts`/`dur` in µs).
+
+use std::path::Path;
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::bench::json_string;
+use crate::util::sync::lock_recover;
+use crate::util::sync::static_atomic::{AtomicUsize, Ordering};
+
+// Process-global on/off switch; 0 = off.  `static_atomic` (always std):
+// a process-global mode flag, out of loom's scope by design.
+static ENABLED: AtomicUsize = AtomicUsize::new(0);
+
+/// Trace lane of the background checkpoint writer (see the module table).
+pub const TID_CHECKPOINT: u64 = 100;
+
+#[derive(Clone, Debug)]
+struct TraceEvent {
+    name: String,
+    cat: &'static str,
+    ts_us: u64,
+    dur_us: u64,
+    tid: u64,
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn buffer() -> &'static Mutex<Vec<TraceEvent>> {
+    static BUF: OnceLock<Mutex<Vec<TraceEvent>>> = OnceLock::new();
+    BUF.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Turn span recording on (idempotent; there is deliberately no `off` —
+/// a run either traces or it doesn't).
+pub fn enable() {
+    epoch(); // pin t=0 at enable time, before any span starts
+    // relaxed: independent mode switch; a racing recorder that misses the
+    // flip records nothing, same as if it ran a moment earlier.
+    ENABLED.store(1, Ordering::Relaxed);
+}
+
+pub fn enabled() -> bool {
+    // relaxed: independent mode switch read; see `enable`.
+    ENABLED.load(Ordering::Relaxed) == 1
+}
+
+/// Begin a span: the clock is only read when recording is on.
+pub fn start() -> Option<Instant> {
+    if enabled() {
+        Some(Instant::now())
+    } else {
+        None
+    }
+}
+
+/// Finish a span begun with [`start`] on the coordinator timeline
+/// (tid 0).  No-op when `t0` is `None`.
+pub fn complete(cat: &'static str, name: &str, t0: Option<Instant>) {
+    complete_tid(cat, name, t0, 0);
+}
+
+/// [`complete`] on an explicit thread lane.
+pub fn complete_tid(cat: &'static str, name: &str, t0: Option<Instant>, tid: u64) {
+    let Some(t0) = t0 else { return };
+    let dur_us = t0.elapsed().as_micros() as u64;
+    let ts_us = t0.duration_since(epoch()).as_micros() as u64;
+    push(TraceEvent { name: name.to_string(), cat, ts_us, dur_us, tid });
+}
+
+/// Record a span from externally measured times — used for per-slot ring
+/// work, whose durations arrive in the `SyncS` fold rather than from a
+/// local clock pair.  `ts_us` is microseconds on this process's trace
+/// timeline (e.g. a span start captured with [`start`] and converted via
+/// [`us_since_epoch`]).
+pub fn span_at(cat: &'static str, name: &str, ts_us: u64, dur_us: u64, tid: u64) {
+    if !enabled() {
+        return;
+    }
+    push(TraceEvent { name: name.to_string(), cat, ts_us, dur_us, tid });
+}
+
+/// Microseconds of `t` on the trace timeline (0 for instants that race
+/// the timeline's pinning).
+pub fn us_since_epoch(t: Instant) -> u64 {
+    t.checked_duration_since(epoch()).map(|d| d.as_micros() as u64).unwrap_or(0)
+}
+
+fn push(ev: TraceEvent) {
+    lock_recover(buffer()).push(ev);
+}
+
+/// Drain the buffer and write the Perfetto-loadable JSON file.  Call
+/// once, at the end of the run.
+pub fn write(path: &Path) -> Result<(), String> {
+    let events = std::mem::take(&mut *lock_recover(buffer()));
+    let mut out = String::from("{\"traceEvents\":[");
+    for (i, ev) in events.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"name\":{},\"cat\":{},\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":1,\"tid\":{}}}",
+            json_string(&ev.name),
+            json_string(ev.cat),
+            ev.ts_us,
+            ev.dur_us,
+            ev.tid
+        ));
+    }
+    out.push_str("]}\n");
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        }
+    }
+    std::fs::write(path, out).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // One test, not two: ENABLED and the buffer are process-global, and
+    // the disabled-state assertions must run before anything enables.
+    #[test]
+    fn spans_round_trip_through_the_file() {
+        assert_eq!(start(), None, "recording defaults to off");
+        complete("epoch", "nothing", None); // must not record
+        span_at("slot", "nothing", 0, 1, 1); // must not record when off
+        enable();
+        let t0 = start();
+        assert!(t0.is_some());
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        complete("epoch", "epoch 0", t0);
+        span_at("slot", "slot 1 sample", 10, 20, 2);
+        let path = std::env::temp_dir().join("fnomad_trace_test").join("t.json");
+        write(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.starts_with("{\"traceEvents\":["));
+        assert!(body.contains("\"ph\":\"X\""));
+        assert!(body.contains("\"name\":\"epoch 0\""));
+        assert!(body.contains("\"tid\":2"));
+        // buffer drained: a second write is empty
+        write(&path).unwrap();
+        let body2 = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(body2, "{\"traceEvents\":[]}\n");
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+}

@@ -133,6 +133,7 @@ impl PsRuntime {
             // already made stale — the contrast with nomad's exact rows
             stale_reads: pulls,
             msgs: server_ops,
+            ring: None,
         }
     }
 

@@ -63,7 +63,11 @@ impl<T: Transport> Transport for FaultTransport<T> {
         match &msg {
             Msg::SetS(_) if self.epochs_left > 0 => self.epochs_left -= 1,
             Msg::Word(_) if self.epochs_left == 0 => {
-                eprintln!("[serve-worker] injected fault: dying mid-epoch (--fail-after-epochs)");
+                crate::log_event!(
+                    Warn,
+                    "serve-worker",
+                    "injected fault: dying mid-epoch (--fail-after-epochs)"
+                );
                 std::process::exit(9);
             }
             _ => {}

@@ -88,8 +88,11 @@ impl SnapshotStore {
         if entries.is_empty() {
             return Ok(());
         }
-        eprintln!(
-            "[resilience] discarding {} checkpoint(s) left under {} by a previous run",
+        crate::log_event!(
+            Info,
+            "resilience",
+            { count = entries.len() },
+            "discarding {} checkpoint(s) left under {} by a previous run",
             entries.len(),
             self.dir.display()
         );
@@ -152,8 +155,11 @@ impl SnapshotStore {
         for e in self.entries().iter().rev() {
             let path = self.dir.join(&e.file);
             if e.epoch > max_epoch {
-                eprintln!(
-                    "[resilience] checkpoint {} is from epoch {} > current epoch {max_epoch} \
+                crate::log_event!(
+                    Warn,
+                    "resilience",
+                    { epoch = e.epoch, max_epoch = max_epoch },
+                    "checkpoint {} is from epoch {} > current epoch {max_epoch} \
                      (stale entry from another run?); skipping it",
                     path.display(),
                     e.epoch
@@ -162,8 +168,10 @@ impl SnapshotStore {
             }
             match verify_and_load(&path, e.fingerprint, corpus) {
                 Ok(state) => return Ok((e.epoch, state)),
-                Err(why) => eprintln!(
-                    "[resilience] checkpoint {} unusable ({why}); trying an older one",
+                Err(why) => crate::log_event!(
+                    Warn,
+                    "resilience",
+                    "checkpoint {} unusable ({why}); trying an older one",
                     path.display()
                 ),
             }
@@ -222,7 +230,11 @@ fn read_manifest(path: &Path) -> Result<Vec<ManifestEntry>, String> {
         })();
         match parsed {
             Some(e) => entries.push(e),
-            None => eprintln!("[resilience] warning: skipping malformed MANIFEST line: {line:?}"),
+            None => crate::log_event!(
+                Warn,
+                "resilience",
+                "warning: skipping malformed MANIFEST line: {line:?}"
+            ),
         }
     }
     entries.sort_by_key(|e| e.epoch);

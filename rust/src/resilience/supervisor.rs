@@ -144,6 +144,10 @@ impl<'c> Supervisor<'c> {
                     acc.processed += report.processed;
                     acc.secs += report.secs;
                     acc.msgs += report.msgs;
+                    acc.stale_reads += report.stale_reads;
+                    // the breakdown of the last epoch actually executed —
+                    // re-runs overwrite, which is the state the driver sees
+                    acc.ring = report.ring;
                 }
                 Err(why) => self.recover(&why)?,
             }
@@ -155,21 +159,28 @@ impl<'c> Supervisor<'c> {
     /// when the restart budget is exhausted (carrying the original ring
     /// failure) or no usable checkpoint / worker remains.
     fn recover(&mut self, why: &str) -> Result<(), String> {
+        // the recovery timeline is traced end to end: failure handling,
+        // then (inside respawn) the checkpoint reload and ring respawn
+        let t_fail = crate::obs::trace::start();
         if let Some(mut broken) = self.inner.take() {
             broken.shutdown();
         }
         // land queued snapshots before choosing a reload point; a dead
         // writer cannot flush, so say what recovery is about to lose
         if !self.sink.flush() {
-            eprintln!(
-                "[resilience] warning: checkpoint writer thread is gone; snapshots queued \
-                 since it exited were lost — recovering from what reached disk"
+            crate::log_event!(
+                Warn,
+                "resilience",
+                "checkpoint writer thread is gone; snapshots queued since it exited \
+                 were lost — recovering from what reached disk"
             );
         }
         if self.fault.corrupt_latest_checkpoint {
             self.fault.corrupt_latest_checkpoint = false;
             let _ = self.store.corrupt_latest();
         }
+        crate::obs::trace::complete("recovery", "ring failure", t_fail);
+        crate::obs::registry::global().counter("train.ring_failures").inc();
         loop {
             if self.restarts >= self.max_restarts {
                 return Err(format!(
@@ -179,21 +190,34 @@ impl<'c> Supervisor<'c> {
             }
             self.restarts += 1;
             let backoff = backoff_for(self.restarts);
-            // recovery narration prints regardless of --quiet: a run that
-            // silently lost and re-ran epochs would be a debugging trap
-            eprintln!(
-                "[resilience] ring failure: {why}; restart {}/{} after {backoff:?}",
-                self.restarts, self.max_restarts
+            // recovery narration is Warn — visible regardless of --quiet
+            // (which only silences the Info-level progress chatter): a run
+            // that silently lost and re-ran epochs would be a debugging trap
+            crate::log_event!(
+                Warn,
+                "resilience",
+                { restart = self.restarts, max = self.max_restarts },
+                "ring failure: {why}; restart {}/{} after {backoff:?}",
+                self.restarts,
+                self.max_restarts
             );
             std::thread::sleep(backoff);
             match self.respawn() {
                 Ok(epoch) => {
                     let slots = self.inner.as_ref().expect("ring rebuilt").ring_size();
-                    eprintln!("recovered: restarted from epoch {epoch} ({slots} ring slots)");
+                    crate::obs::registry::global().counter("train.restarts").inc();
+                    crate::log_event!(
+                        Warn,
+                        "resilience",
+                        { epoch = epoch, slots = slots },
+                        "recovered: restarted from epoch {epoch} ({slots} ring slots)"
+                    );
                     self.inner_epoch = epoch;
                     return Ok(());
                 }
-                Err(e) => eprintln!("[resilience] restart failed: {e}"),
+                Err(e) => {
+                    crate::log_event!(Warn, "resilience", "restart failed: {e}");
+                }
             }
         }
     }
@@ -203,11 +227,14 @@ impl<'c> Supervisor<'c> {
     /// came from a consumed eval point, so anything newer is a stale
     /// entry from another run and must not be resumed from.
     fn respawn(&mut self) -> Result<usize, String> {
+        let t_reload = crate::obs::trace::start();
         let (epoch, state) = self.store.load_latest_valid(self.corpus, self.done)?;
+        crate::obs::trace::complete("recovery", "reload checkpoint", t_reload);
+        let t_respawn = crate::obs::trace::start();
         let surviving: Vec<String> =
             self.remote.iter().filter(|addr| probe(addr)).cloned().collect();
         for lost in self.remote.iter().filter(|a| !surviving.contains(a)) {
-            eprintln!("[resilience] dropping unreachable worker {lost}");
+            crate::log_event!(Warn, "resilience", "dropping unreachable worker {lost}");
         }
         if self.workers == 0 && surviving.is_empty() {
             return Err("no local threads and no reachable remote workers".into());
@@ -220,6 +247,7 @@ impl<'c> Supervisor<'c> {
         // try_from_state repartitions the CSR doc ranges over the new slot
         // count and ships each remote its rebased corpus slice
         self.inner = Some(NomadRuntime::try_from_state(self.corpus, &state, rt_cfg)?);
+        crate::obs::trace::complete("recovery", "respawn ring", t_respawn);
         self.remote = surviving;
         Ok(epoch)
     }

@@ -168,6 +168,18 @@ impl<T> OfferQueue<T> {
         }
         self.not_empty.notify_all();
     }
+
+    /// Current queue occupancy (items accepted but not yet popped).
+    /// Advisory only — the answer can be stale by the time the caller
+    /// acts on it; telemetry gauges are its only consumer.
+    pub fn len(&self) -> usize {
+        lock_checked(&self.state).map(|st| st.queue.len()).unwrap_or(0)
+    }
+
+    /// `len() == 0`, with the same advisory-only caveat.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
 }
 
 type SaveJob = (usize, Box<LdaState>);
@@ -183,7 +195,13 @@ impl SnapshotSink {
     /// accepted; `false` means the bounded queue was full (writer busy)
     /// or the writer is gone, and the snapshot was dropped.
     pub fn offer(&self, epoch: usize, state: LdaState) -> bool {
-        self.queue.offer((epoch, Box::new(state)))
+        let accepted = self.queue.offer((epoch, Box::new(state)));
+        let reg = crate::obs::registry::global();
+        reg.gauge("ckpt.queue_depth").set(self.queue.len() as u64);
+        if !accepted {
+            reg.counter("ckpt.skipped").inc();
+        }
+        accepted
     }
 
     /// Block until everything queued so far is on disk.  Returns `false`
@@ -248,11 +266,23 @@ fn writer_loop(store: &SnapshotStore, queue: &OfferQueue<SaveJob>, quiet: bool) 
     }
     let _exit = ExitGuard(queue);
     while let Some((seq, (epoch, state))) = queue.pop() {
-        match store.save(epoch, &state) {
+        let t_save = crate::obs::trace::start();
+        let saved = store.save(epoch, &state);
+        crate::obs::trace::complete_tid(
+            "checkpoint",
+            &format!("checkpoint epoch {epoch}"),
+            t_save,
+            crate::obs::trace::TID_CHECKPOINT,
+        );
+        match saved {
             Ok(()) => {
+                crate::obs::registry::global().counter("ckpt.saved").inc();
                 if !quiet {
-                    eprintln!(
-                        "[resilience] checkpointed epoch {epoch} under {}",
+                    crate::log_event!(
+                        Info,
+                        "resilience",
+                        { epoch = epoch },
+                        "checkpointed epoch {epoch} under {}",
                         store.dir().display()
                     );
                 }
@@ -260,7 +290,12 @@ fn writer_loop(store: &SnapshotStore, queue: &OfferQueue<SaveJob>, quiet: bool) 
             // a failed background save must not kill training; the
             // cost is only an older recovery baseline
             Err(e) => {
-                eprintln!("[resilience] warning: checkpoint of epoch {epoch} failed: {e}");
+                crate::log_event!(
+                    Warn,
+                    "resilience",
+                    { epoch = epoch },
+                    "warning: checkpoint of epoch {epoch} failed: {e}"
+                );
             }
         }
         // processed even when the save failed: flush waits for the
@@ -297,7 +332,13 @@ impl TrainObserver for AsyncCheckpointer {
         if self.sink.offer(point.epoch, point.state.clone()) {
             self.last_queued = Some(point.epoch);
         } else if !self.quiet {
-            eprintln!("[resilience] writer busy; skipped snapshot of epoch {}", point.epoch);
+            crate::log_event!(
+                Info,
+                "resilience",
+                { epoch = point.epoch },
+                "writer busy; skipped snapshot of epoch {}",
+                point.epoch
+            );
         }
         Ok(())
     }

@@ -246,6 +246,7 @@ impl NomadSim {
             secs: (self.now - epoch_start) as f64 / 1e9,
             stale_reads: 0,
             msgs,
+            ring: None,
         }
     }
 

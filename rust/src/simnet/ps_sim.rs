@@ -315,6 +315,7 @@ impl PsSim {
             // pushes have already moved on from
             stale_reads: pulls,
             msgs: self.wait_ops,
+            ring: None,
         }
     }
 

@@ -150,42 +150,11 @@ pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     sorted[rank.saturating_sub(1).min(sorted.len() - 1)]
 }
 
-/// Bucket count of the log₂ latency histograms ([`latency_bucket`]):
-/// bucket b covers `[2^b, 2^(b+1))` nanoseconds, so 64 buckets span
-/// everything a `u64` nanosecond count can hold.
-pub const LATENCY_BUCKETS: usize = 64;
-
-/// Histogram bucket for one latency measurement in nanoseconds:
-/// `⌊log₂ ns⌋`, with 0 ns folded into bucket 0.  Constant-time, so a
-/// server can record it behind a single relaxed atomic increment.
-#[inline]
-pub fn latency_bucket(ns: u64) -> usize {
-    (63 - (ns | 1).leading_zeros()) as usize
-}
-
-/// Nearest-rank percentile over log₂ histogram bucket counts, reported
-/// as the geometric midpoint `2^b·√2` of the winning bucket, in
-/// **microseconds** (`p ∈ [0, 100]`).  NaN when the histogram is empty.
-///
-/// The bucketed estimate trades ≤ √2× value resolution for O(1) lock-free
-/// recording — the right trade for always-on serving percentiles, where
-/// the alternative is an unbounded sample vector behind a lock.
-pub fn bucket_percentile_us(counts: &[u64], p: f64) -> f64 {
-    let total: u64 = counts.iter().sum();
-    if total == 0 {
-        return f64::NAN;
-    }
-    debug_assert!((0.0..=100.0).contains(&p));
-    let rank = (((p / 100.0) * total as f64).ceil() as u64).clamp(1, total);
-    let mut seen = 0u64;
-    for (b, &c) in counts.iter().enumerate() {
-        seen += c;
-        if seen >= rank {
-            return 2f64.powi(b as i32) * std::f64::consts::SQRT_2 / 1e3;
-        }
-    }
-    f64::NAN
-}
+// The log₂ latency-bucket scheme lives with the other histogram code in
+// `util::metrics` (one bucketing implementation for benches, serving
+// stats, and the observability registry); re-exported here for the
+// bench-side callers that historically imported it from this module.
+pub use crate::util::metrics::{bucket_percentile_us, latency_bucket, LATENCY_BUCKETS};
 
 /// One value of a machine-readable bench record.
 #[derive(Clone, Debug)]
@@ -222,7 +191,9 @@ pub fn json_object(fields: &[(&str, JsonVal)]) -> String {
     out
 }
 
-fn json_string(s: &str) -> String {
+/// RFC 8259 string escaping — shared with the structured-event emitter
+/// (`obs::event`), which needs the same escapes for its JSONL mode.
+pub fn json_string(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     out.push('"');
     for c in s.chars() {

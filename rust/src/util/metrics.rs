@@ -1,9 +1,15 @@
-//! Experiment metrics: convergence-series recording and CSV output.
+//! Experiment metrics: convergence-series recording, CSV output, and the
+//! single histogram implementation shared by benches and the server.
 //!
 //! Every figure in the paper is a set of (x, y) series (LL vs iteration,
 //! LL vs seconds, speedup vs cores).  [`Series`] collects points with
 //! labels; [`write_csv`] emits the long-format file the plotting harness /
 //! EXPERIMENTS.md tables are produced from.
+//!
+//! The log₂ latency-bucket helpers ([`LATENCY_BUCKETS`], [`latency_bucket`],
+//! [`bucket_percentile_us`]) live here so the ad-hoc [`Histogram`], the
+//! serving stats counters, and the observability registry all share one
+//! bucketing scheme; `util::bench` re-exports them for its callers.
 
 use std::fmt::Write as _;
 use std::io::Write as _;
@@ -113,8 +119,12 @@ impl Histogram {
         }
     }
 
-    /// Approximate quantile by bucket upper bound.
+    /// Approximate quantile by bucket upper bound.  0.0 on an empty
+    /// histogram (rather than leaking the `f64::MIN` max-tracker init).
     pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
         let target = (q * self.total as f64).ceil() as u64;
         let mut acc = 0;
         for (i, &c) in self.counts.iter().enumerate() {
@@ -124,6 +134,88 @@ impl Histogram {
             }
         }
         self.max
+    }
+}
+
+/// Bucket count of the log₂ latency histograms ([`latency_bucket`]):
+/// bucket b covers `[2^b, 2^(b+1))` nanoseconds, so 64 buckets span
+/// everything a `u64` nanosecond count can hold.
+pub const LATENCY_BUCKETS: usize = 64;
+
+/// Histogram bucket for one latency measurement in nanoseconds:
+/// `⌊log₂ ns⌋`, with 0 ns folded into bucket 0.  Constant-time, so a
+/// server can record it behind a single relaxed atomic increment.
+#[inline]
+pub fn latency_bucket(ns: u64) -> usize {
+    (63 - (ns | 1).leading_zeros()) as usize
+}
+
+/// Nearest-rank percentile over log₂ histogram bucket counts, reported
+/// as the geometric midpoint `2^b·√2` of the winning bucket, in
+/// **microseconds** (`p ∈ [0, 100]`).  NaN when the histogram is empty.
+///
+/// The bucketed estimate trades ≤ √2× value resolution for O(1) lock-free
+/// recording — the right trade for always-on serving percentiles, where
+/// the alternative is an unbounded sample vector behind a lock.
+pub fn bucket_percentile_us(counts: &[u64], p: f64) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return f64::NAN;
+    }
+    debug_assert!((0.0..=100.0).contains(&p));
+    let rank = (((p / 100.0) * total as f64).ceil() as u64).clamp(1, total);
+    let mut seen = 0u64;
+    for (b, &c) in counts.iter().enumerate() {
+        seen += c;
+        if seen >= rank {
+            return 2f64.powi(b as i32) * std::f64::consts::SQRT_2 / 1e3;
+        }
+    }
+    f64::NAN
+}
+
+/// The one log₂ nanosecond histogram: [`latency_bucket`] indexing,
+/// [`bucket_percentile_us`] quantiles.  The lock-free variants (the
+/// serving stats array, the observability registry) keep the same
+/// `[u64; LATENCY_BUCKETS]` layout and snapshot into / report through
+/// these same functions, so every latency percentile in the system is
+/// computed by one implementation.
+#[derive(Clone, Debug)]
+pub struct Log2Histogram {
+    pub counts: [u64; LATENCY_BUCKETS],
+    pub total: u64,
+    pub sum_ns: u64,
+    pub max_ns: u64,
+}
+
+impl Default for Log2Histogram {
+    fn default() -> Self {
+        Log2Histogram { counts: [0; LATENCY_BUCKETS], total: 0, sum_ns: 0, max_ns: 0 }
+    }
+}
+
+impl Log2Histogram {
+    pub fn record_ns(&mut self, ns: u64) {
+        self.counts[latency_bucket(ns)] += 1;
+        self.total += 1;
+        self.sum_ns = self.sum_ns.saturating_add(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    /// Percentile in microseconds; 0.0 (not NaN, not `f64::MIN`) when empty.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        bucket_percentile_us(&self.counts, p)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.total as f64 / 1e3
+        }
     }
 }
 
@@ -172,5 +264,34 @@ mod tests {
         assert!((300.0..800.0).contains(&p50), "p50 {p50}");
         assert!(h.quantile(1.0) >= 999.0);
         assert!((h.mean() - 500.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn empty_histogram_quantile_is_zero() {
+        let h = Histogram::log_spaced(1.0, 1000.0, 16);
+        assert_eq!(h.total, 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.quantile(1.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn log2_histogram_matches_bucket_functions() {
+        let mut h = Log2Histogram::default();
+        for _ in 0..90 {
+            h.record_ns(1 << 9); // bucket 9, ≈ 0.72 µs midpoint
+        }
+        for _ in 0..10 {
+            h.record_ns(1 << 19); // bucket 19, ≈ 741 µs midpoint
+        }
+        assert_eq!(h.total, 100);
+        assert_eq!(h.counts[9], 90);
+        assert_eq!(h.counts[19], 10);
+        assert_eq!(h.percentile_us(50.0), bucket_percentile_us(&h.counts, 50.0));
+        assert!((h.percentile_us(99.0) - 741.5).abs() < 1.0);
+        assert_eq!(h.max_ns, 1 << 19);
+        // empty: 0.0, not NaN and not f64::MIN
+        assert_eq!(Log2Histogram::default().percentile_us(50.0), 0.0);
+        assert_eq!(Log2Histogram::default().mean_us(), 0.0);
     }
 }

@@ -29,6 +29,12 @@
 //!     `std::sync::mpsc` (single-consumer rendezvous channels, outside
 //!     the modeled protocols).  Everything else must come through
 //!     `crate::util::sync`, or loom silently stops seeing it.
+//! * **Library scope** (`rust/src/**` minus `main.rs` and
+//!   `obs/event.rs`, with `#[cfg(test)]` modules exempt):
+//!   - `no-raw-print`: no `println!`/`print!`/`eprintln!`/`eprint!` —
+//!     library narration goes through `log_event!` (leveled, filterable,
+//!     machine-readable), stdout contracts live in `main.rs`, and the
+//!     one deliberate stdout renderer (`util::bench`) is allowlisted.
 //! * **Everywhere** (`rust/src/**`):
 //!   - `relaxed-needs-justification`: every `Ordering::Relaxed` must be
 //!     covered by a `// relaxed:` comment — on the same line or earlier
@@ -177,10 +183,20 @@ fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
 fn scan_file(rel: &str, text: &str, out: &mut Vec<Violation>) {
     let in_determinism = DETERMINISM_SCOPE.iter().any(|p| rel.starts_with(p));
     let in_shim = SHIM_SCOPE.contains(&rel);
+    // `main.rs` owns the stdout contracts (banner lines, report
+    // rendering); `obs/event.rs` is the one sanctioned emitter.
+    let print_exempt = rel == "rust/src/main.rs" || rel == "rust/src/obs/event.rs";
+    // Once a file enters its test module, raw printing is test-debug
+    // output, not library narration.  Lexical, like everything here:
+    // the house style keeps `#[cfg(test)]` last in the file.
+    let mut seen_cfg_test = false;
     let lines: Vec<&str> = text.lines().collect();
     let mut in_block_comment = false;
     for (i, raw_line) in lines.iter().enumerate() {
         let code = strip_comments(raw_line, &mut in_block_comment);
+        if code.contains("#[cfg(test)]") {
+            seen_cfg_test = true;
+        }
         let mut push = |rule: &'static str| {
             out.push(Violation {
                 rule,
@@ -198,6 +214,14 @@ fn scan_file(rel: &str, text: &str, out: &mut Vec<Violation>) {
         }
         if in_shim && raw_std_sync(&code) {
             push("no-raw-std-sync");
+        }
+        // "println!" is a substring of "eprintln!" and "print!(" of
+        // "eprint!(": two patterns cover all four macros
+        if !print_exempt
+            && !seen_cfg_test
+            && (code.contains("println!") || code.contains("print!("))
+        {
+            push("no-raw-print");
         }
         // checked on the *raw* line: the justification is a comment, and
         // `Ordering::Relaxed` inside a comment is not an atomic access
@@ -417,6 +441,30 @@ mod tests {
         let report = check_tree(&t.root).unwrap();
         assert_eq!(rules_of(&report), vec!["relaxed-needs-justification"]);
         assert_eq!(report.violations[0].line_no, 8, "{:?}", report.violations);
+    }
+
+    #[test]
+    fn raw_prints_fail_in_library_scope_but_not_main_tests_or_emitter() {
+        let t = Tree::new("prints");
+        t.write(
+            "rust/src/nomad/noisy.rs",
+            "fn f() { eprintln!(\"chatty\"); }\n\
+             fn g() { print!(\"chattier\"); }\n\
+             // println! in a comment is fine\n\
+             #[cfg(test)]\n\
+             mod tests {\n\
+                 fn t() { println!(\"test debug output\"); }\n\
+             }\n",
+        );
+        t.write("rust/src/main.rs", "fn main() { println!(\"banner\"); }\n");
+        t.write(
+            "rust/src/obs/event.rs",
+            "pub fn emit(line: &str) { eprintln!(\"{line}\"); }\n",
+        );
+        let report = check_tree(&t.root).unwrap();
+        assert_eq!(rules_of(&report), vec!["no-raw-print", "no-raw-print"]);
+        assert_eq!(report.violations[0].line_no, 1);
+        assert_eq!(report.violations[1].line_no, 2);
     }
 
     #[test]
